@@ -1,0 +1,75 @@
+//! Data-analyzer example: generate a corpus, run the map-reduce difficulty
+//! analyzer on two metrics, persist the memory-mapped index files, and
+//! inspect what the curriculum will see.
+//!
+//! ```bash
+//! cargo run --release --example analyze_corpus
+//! ```
+
+use dsde::analysis::analyzer::AnalyzerConfig;
+use dsde::analysis::metrics;
+use dsde::data::corpus::{Corpus, CorpusConfig};
+use dsde::data::dataset::{BertDataset, GptDataset};
+use dsde::data::index::DifficultyIndex;
+use dsde::data::tokenizer::Tokenizer;
+
+fn main() -> dsde::Result<()> {
+    let corpus = Corpus::generate(CorpusConfig { n_docs: 5000, ..Default::default() });
+    let tok = Tokenizer::from_corpus(&corpus);
+    println!(
+        "corpus: {} docs, {} words, vocab {} (+{} specials)",
+        corpus.docs.len(),
+        corpus.total_words,
+        corpus.config.vocab_words,
+        6
+    );
+
+    let gpt = GptDataset::build(&corpus, &tok, 64);
+    let bert = BertDataset::build(&corpus, &tok, 64);
+    println!("gpt: {} packed samples; bert: {} pair samples", gpt.n_samples(), bert.n_samples());
+
+    std::fs::create_dir_all("runs")?;
+    for workers in [1, 4] {
+        let cfg = AnalyzerConfig { n_workers: workers, shard_size: 2048 };
+        let (idx, rep) = metrics::gpt_voc(&gpt, &tok, &cfg);
+        println!(
+            "voc analysis with {workers} workers: {:.0} samples/s (map {:.3}s, reduce {:.3}s)",
+            rep.samples_per_sec(),
+            rep.map_secs,
+            rep.reduce_secs
+        );
+        if workers == 4 {
+            idx.save(std::path::Path::new("runs/gpt_voc.idx"))?;
+        }
+    }
+    let (seqreo, _) = metrics::bert_eff_len(&bert, &AnalyzerConfig::default());
+    seqreo.save(std::path::Path::new("runs/bert_seqreo.idx"))?;
+
+    // reopen the persisted indexes zero-copy and inspect the extremes
+    let voc = DifficultyIndex::open(std::path::Path::new("runs/gpt_voc.idx"))?;
+    println!("\nreopened runs/gpt_voc.idx: {} entries, metric '{}'", voc.len(), voc.metric());
+    let order = voc.order();
+    let easiest = order[0] as usize;
+    let hardest = order[order.len() - 1] as usize;
+    println!(
+        "easiest sample #{easiest}: voc={:.1}; hardest #{hardest}: voc={:.1}",
+        voc.values()[easiest],
+        voc.values()[hardest]
+    );
+    println!(
+        "curriculum view: 1% pool = {} samples, 50% = {}, value@p50 = {:.1}",
+        voc.prefix_for_value(voc.value_at_percentile(0.01)),
+        voc.prefix_for_value(voc.value_at_percentile(0.5)),
+        voc.value_at_percentile(0.5)
+    );
+    println!(
+        "\nseqreo index: shortest eff len {}, longest {}",
+        voc_len(&seqreo, 0),
+        voc_len(&seqreo, seqreo.len() - 1)
+    );
+    Ok(())
+}
+
+fn voc_len(idx: &DifficultyIndex, rank: usize) -> f32 {
+    idx.values()[idx.order()[rank] as usize]
+}

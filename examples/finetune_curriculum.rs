@@ -1,0 +1,64 @@
+//! Finetuning-scenario example (the paper's GPT-2-on-PTB use case, §4.3):
+//! a small held-out corpus, the seqres (reshape) curriculum metric that
+//! wins in the small-batch regime, and a short random-LTD schedule.
+//!
+//! Demonstrates the hyperparameter-robustness claim: every tested
+//! (d_s, T_c) combination is expected to match or beat the baseline.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example finetune_curriculum
+//! ```
+
+use dsde::config::schema::*;
+use dsde::train::TrainEnv;
+
+fn main() -> dsde::Result<()> {
+    let steps = 50;
+    println!("finetune scenario: small corpus, {steps} steps");
+    let env = TrainEnv::new(250, 99)?;
+    let max_seq = env.rt.registry.family("gpt")?.max_seq;
+
+    let baseline = env.run(RunConfig::baseline("gpt", steps, 3e-3))?;
+    println!("baseline ppl: {:.3}", baseline.perplexity());
+
+    println!("\nCL_seqres sweep (d_s × T_c):");
+    let mut beat = 0;
+    let mut total = 0;
+    for d_s in [max_seq / 8, max_seq / 4] {
+        for t_frac in [0.3, 0.7] {
+            let mut cfg = RunConfig::baseline("gpt", steps, 3e-3);
+            cfg.label = format!("seqres d_s={d_s} T_c={:.0}%", t_frac * 100.0);
+            cfg.curriculum.push(ClConfig::new(
+                Metric::SeqRes,
+                Bound::Value(d_s as f64),
+                Bound::Value(max_seq as f64),
+                ((steps as f64 * t_frac) as u64).max(1),
+            ));
+            let r = env.run(cfg)?;
+            total += 1;
+            let better = r.perplexity() <= baseline.perplexity();
+            beat += better as usize;
+            println!(
+                "  {:<24} ppl {:.3} ({})",
+                r.label,
+                r.perplexity(),
+                if better { "beats baseline" } else { "worse" }
+            );
+        }
+    }
+    println!("\n{beat}/{total} combinations beat the baseline (paper Tab. 5: 16/16 for seqres)");
+
+    // composed: short CL + short LTD (T_c < T_r per §A.3)
+    let mut comp = RunConfig::baseline("gpt", steps, 3e-3);
+    comp.label = "seqres+random-LTD".into();
+    comp.curriculum.push(ClConfig::new(
+        Metric::SeqRes,
+        Bound::Value((max_seq / 8) as f64),
+        Bound::Value(max_seq as f64),
+        (steps / 10).max(1),
+    ));
+    comp.routing = Routing::RandomLtd(LtdConfig::mslg(max_seq / 4, (steps * 3 / 10).max(1)));
+    let r = env.run(comp)?;
+    println!("composed ppl: {:.3} (saving {:.1}%)", r.perplexity(), r.saving_ratio * 100.0);
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! End-to-end validation driver (DESIGN.md / EXPERIMENTS.md §E2E): pretrain
+//! tiny-GPT on the synthetic corpus under four configurations —
+//!
+//!   baseline@100%, composed@100%, baseline@50%, composed@50%
+//!
+//! — logging the validation-loss curve of each (Fig. 5 shape), the
+//! consumed-token accounting, and the paper-anchored simulated cost
+//! columns. Writes `runs/pretrain_gpt_curves.csv` + a summary table.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example pretrain_gpt [STEPS]
+//! ```
+
+use dsde::bench::Table;
+use dsde::exp::cases::table3_gpt;
+use dsde::exp::{relative_quality, run_cases};
+use dsde::sim::CostModel;
+use dsde::train::TrainEnv;
+
+fn main() -> dsde::Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    println!("== pretrain_gpt: end-to-end driver ({steps} full-budget steps) ==");
+    let env = TrainEnv::new(1500, 7)?;
+    let fam = env.rt.registry.family("gpt")?.clone();
+    println!(
+        "model: {} layers, d={}, heads={}, vocab={}, seq={}, batch={} ({} params tensors)",
+        fam.n_layers, fam.d_model, fam.n_heads, fam.vocab, fam.max_seq, fam.batch, fam.n_params
+    );
+    println!(
+        "data: {} train samples ({} tokens), difficulty-indexed by the map-reduce analyzer",
+        env.gpt_train.n_samples(),
+        env.gpt_train.stream.len()
+    );
+
+    let grid = table3_gpt(steps, fam.max_seq, 1234);
+    let mut cases = vec![
+        grid[0].clone(),  // baseline 100%
+        grid[7].clone(),  // composed 100%
+        grid[11].clone(), // baseline 50%
+        grid[14].clone(), // composed 50%
+    ];
+    for c in cases.iter_mut() {
+        c.eval_every = (steps / 12).max(1);
+    }
+    let results = run_cases(&env, cases)?;
+    let base = &results[0];
+    let cost = CostModel::new(base.compute_tokens, base.wall_secs);
+
+    // curves CSV
+    let mut curves = Table::new(&["case", "step", "compute_tokens", "eval_loss"]);
+    for r in &results {
+        for p in &r.curve {
+            curves.row(vec![
+                r.label.clone(),
+                p.step.to_string(),
+                format!("{:.0}", p.compute_tokens),
+                format!("{:.4}", p.eval_loss),
+            ]);
+        }
+    }
+    let path = curves.save_csv("pretrain_gpt_curves")?;
+    println!("\nloss curves -> {}", path.display());
+
+    let mut summary = Table::new(&[
+        "case",
+        "steps",
+        "compute tokens",
+        "wall s",
+        "step ms",
+        "sim V100-h",
+        "sim $",
+        "final loss",
+        "quality",
+    ]);
+    for r in &results {
+        let rep = cost.report(r.compute_tokens, r.wall_secs);
+        summary.row(vec![
+            r.label.clone(),
+            r.steps.to_string(),
+            format!("{:.0} ({})", r.compute_tokens, cost.saving_label(r.compute_tokens)),
+            format!("{:.1}", r.wall_secs),
+            format!("{:.1}", r.step_secs * 1e3),
+            format!("{:.1}", rep.sim_v100_hours),
+            format!("{:.0}", rep.sim_cost_usd),
+            format!("{:.4}", r.final_eval_loss),
+            format!("{:.1}%", relative_quality(base.final_eval_loss, r.final_eval_loss)),
+        ]);
+    }
+    println!();
+    summary.print();
+    summary.save_csv("pretrain_gpt_summary")?;
+
+    println!("\npaper-shape verdicts:");
+    let v = |ok: bool| if ok { "PASS" } else { "FAIL" };
+    println!(
+        "  [{}] composed@100% beats baseline@100% ({:.4} vs {:.4})",
+        v(results[1].final_eval_loss < results[0].final_eval_loss),
+        results[1].final_eval_loss,
+        results[0].final_eval_loss
+    );
+    println!(
+        "  [{}] baseline@50% degrades ({:.4})",
+        v(results[2].final_eval_loss > results[0].final_eval_loss),
+        results[2].final_eval_loss
+    );
+    println!(
+        "  [{}] composed@50% ≈ baseline@100% ({:.4}, within 2%)",
+        v(results[3].final_eval_loss < results[0].final_eval_loss * 1.02),
+        results[3].final_eval_loss
+    );
+    Ok(())
+}

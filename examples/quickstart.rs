@@ -1,0 +1,43 @@
+//! Quickstart: train tiny-GPT twice — plain baseline vs the paper's
+//! composed data-efficiency preset (CL_seqtru_voc + random-LTD) — and
+//! compare quality and consumed tokens.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use dsde::config::presets;
+use dsde::config::schema::RunConfig;
+use dsde::exp::relative_quality;
+use dsde::train::TrainEnv;
+
+fn main() -> dsde::Result<()> {
+    let steps = 80;
+    println!("building environment (synthetic corpus + difficulty indexes + PJRT)...");
+    let env = TrainEnv::new(600, 42)?;
+
+    println!("training baseline ({steps} steps)...");
+    let baseline = env.run(RunConfig::baseline("gpt", steps, 3e-3))?;
+
+    println!("training composed CL+random-LTD preset ({steps} steps)...");
+    let composed = env.run(presets::gpt_pretrain(steps, 3e-3, 64))?;
+
+    println!("\n{:<28} {:>12} {:>14} {:>10} {:>9}", "case", "data tokens", "compute tokens", "eval loss", "quality");
+    for r in [&baseline, &composed] {
+        println!(
+            "{:<28} {:>12} {:>14.0} {:>10.4} {:>8.1}%",
+            r.case,
+            r.data_tokens,
+            r.compute_tokens,
+            r.final_eval_loss,
+            relative_quality(baseline.final_eval_loss, r.final_eval_loss)
+        );
+    }
+    println!(
+        "\ncomposed run consumed {:.0}% of the baseline's compute tokens \
+         (CL sequence warmup × random-LTD token dropping)",
+        composed.compute_tokens / baseline.compute_tokens * 100.0
+    );
+    println!("executable dispatch (bucket routing): {:?}", composed.dispatch);
+    Ok(())
+}

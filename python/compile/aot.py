@@ -1,0 +1,209 @@
+"""AOT lowering: every (family, kind, seq, mode, keep) variant -> HLO text.
+
+Python runs ONCE at build time (`make artifacts`); the Rust coordinator then
+loads `artifacts/*.hlo.txt` through `HloModuleProto::from_text_file` and
+never touches Python again.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--force] [--only PREFIX]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import (FAMILIES, LTD_SEQS, SEQ_BUCKETS, Variant,
+                      batch_input_specs, keep_buckets, param_specs,
+                      variant_grid, vit_keep_buckets)
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "u32": jnp.uint32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _state_specs(cfg):
+    """(name, dtype, shape) for the full [params, m, v] state tuple."""
+    ps = param_specs(cfg)
+    out = []
+    for prefix in ("p", "m", "v"):
+        for name, shape in ps:
+            out.append((f"{prefix}.{name}", "f32", tuple(shape)))
+    return out
+
+
+def variant_input_specs(cfg, variant):
+    """Ordered (name, dtype, shape) of every executable input."""
+    if variant.kind == "init":
+        return [("seed", "u32", ())]
+    batch = list(batch_input_specs(cfg, variant))
+    if variant.kind == "eval":
+        params = [(f"p.{n}", "f32", tuple(s)) for n, s in param_specs(cfg)]
+        return params + batch
+    state = _state_specs(cfg)
+    return state + [("t", "f32", ()), ("lr", "f32", ())] + batch
+
+
+def variant_output_specs(cfg, variant):
+    if variant.kind == "init":
+        return _state_specs(cfg)
+    if variant.kind == "eval":
+        out = [("loss_sum", "f32", ()), ("tok", "f32", ())]
+        if cfg.family == "vit":
+            out.append(("correct", "f32", ()))
+        return out
+    return _state_specs(cfg) + [("loss", "f32", ()), ("loss_sum", "f32", ()),
+                                ("tok", "f32", ())]
+
+
+def build_fn(cfg, variant):
+    if variant.kind == "init":
+        return M.make_init(cfg)
+    if variant.kind == "eval":
+        return M.make_eval_step(cfg, variant)
+    return M.make_train_step(cfg, variant)
+
+
+def lower_variant(cfg, variant):
+    fn = build_fn(cfg, variant)
+    specs = [
+        jax.ShapeDtypeStruct(shape, DTYPES[dt])
+        for _, dt, shape in variant_input_specs(cfg, variant)
+    ]
+    lowered = jax.jit(fn).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def manifest_entry(cfg, variant):
+    def spec_json(specs):
+        return [
+            {"name": n, "dtype": dt, "shape": list(shape)}
+            for n, dt, shape in specs
+        ]
+
+    return {
+        "name": variant.name,
+        "file": variant.name + ".hlo.txt",
+        "family": variant.family,
+        "kind": variant.kind,
+        "seq": variant.seq,
+        "mode": variant.mode,
+        "keep": variant.keep,
+        "inputs": spec_json(variant_input_specs(cfg, variant)),
+        "outputs": spec_json(variant_output_specs(cfg, variant)),
+    }
+
+
+def family_json(cfg):
+    kb = vit_keep_buckets if cfg.family == "vit" else keep_buckets
+    return {
+        "family": cfg.family,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "max_seq": cfg.max_seq,
+        "batch": cfg.batch,
+        "n_experts": cfg.n_experts,
+        "n_classes": cfg.n_classes,
+        "patch_dim": cfg.patch_dim,
+        "n_middle_layers": cfg.n_layers - 2,
+        "seq_buckets": SEQ_BUCKETS[cfg.family],
+        "ltd_seqs": LTD_SEQS[cfg.family],
+        "keep_buckets": {str(s): kb(s) for s in SEQ_BUCKETS[cfg.family]},
+        "n_params": len(param_specs(cfg)),
+        "param_specs": [
+            {"name": n, "shape": list(s)} for n, s in param_specs(cfg)
+        ],
+    }
+
+
+def _source_digest() -> str:
+    """Hash of the compile-path sources; artifacts rebuilt when it changes."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        if "__pycache__" in root:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "..", "artifacts"))
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the artifact file already exists")
+    ap.add_argument("--only", default=None,
+                    help="only lower variants whose name starts with PREFIX")
+    args = ap.parse_args(argv)
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    digest = _source_digest()
+    stamp_path = os.path.join(out_dir, ".source_digest")
+    old_digest = None
+    if os.path.exists(stamp_path):
+        with open(stamp_path) as f:
+            old_digest = f.read().strip()
+    force = args.force or (old_digest != digest)
+
+    grid = variant_grid()
+    manifest = {
+        "version": 1,
+        "source_digest": digest,
+        "families": {f: family_json(c) for f, c in FAMILIES.items()},
+        "artifacts": [],
+    }
+    t_all = time.time()
+    n_lowered = 0
+    for variant in grid:
+        cfg = FAMILIES[variant.family]
+        manifest["artifacts"].append(manifest_entry(cfg, variant))
+        if args.only and not variant.name.startswith(args.only):
+            continue
+        path = os.path.join(out_dir, variant.name + ".hlo.txt")
+        if not force and os.path.exists(path):
+            continue
+        t0 = time.time()
+        text = lower_variant(cfg, variant)
+        with open(path, "w") as f:
+            f.write(text)
+        n_lowered += 1
+        print(f"  lowered {variant.name:<32} {len(text)//1024:>6} KiB "
+              f"in {time.time() - t0:5.1f}s", flush=True)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(stamp_path, "w") as f:
+        f.write(digest)
+    print(f"aot: {n_lowered}/{len(grid)} variants lowered "
+          f"({time.time() - t_all:.1f}s total) -> {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,206 @@
+"""Model-family configurations and the AOT variant grid.
+
+Shared between aot.py (lowering), model.py (step builders) and the pytest
+suite, and mirrored in artifacts/manifest.json for the Rust coordinator.
+
+Families (DESIGN.md §Substitutions — tiny stand-ins with the paper's family
+*shape*):
+
+* ``gpt``  — decoder LM              (paper: GPT-3 1.3B pretraining, Tab. 3)
+* ``bert`` — encoder MLM w/ padding  (paper: BERT-large pretraining, Tab. 4)
+* ``vit``  — encoder classifier      (paper: ViT finetuning, Tab. 13)
+* ``moe``  — decoder LM w/ expert FFN on every other layer
+                                      (paper: GPT-3 MoE 6.7B, Tab. 3 c16-17)
+
+Variant grid: XLA needs static shapes, but curriculum learning shrinks the
+sequence (seqtru/seqres) and random-LTD shrinks the *kept* length in middle
+layers. We compile one executable per (family, kind, seq-bucket, routing
+mode, keep-bucket); the Rust coordinator routes each step to the right one.
+"""
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyConfig:
+    family: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    batch: int
+    # MoE
+    n_experts: int = 0
+    moe_aux_coef: float = 0.01
+    # ViT
+    n_classes: int = 0
+    patch_dim: int = 0
+    # Adam
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-8
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def causal(self) -> bool:
+        return self.family in ("gpt", "moe")
+
+    @property
+    def has_pad_mask(self) -> bool:
+        return self.family == "bert"
+
+
+GPT = FamilyConfig("gpt", vocab=512, d_model=64, n_layers=4, n_heads=4,
+                   d_ff=256, max_seq=64, batch=8)
+BERT = FamilyConfig("bert", vocab=512, d_model=64, n_layers=4, n_heads=4,
+                    d_ff=256, max_seq=64, batch=8)
+# 16 patches of 4x4x3 synthetic "images" + 1 CLS token -> seq 17.
+VIT = FamilyConfig("vit", vocab=0, d_model=64, n_layers=4, n_heads=4,
+                   d_ff=256, max_seq=17, batch=8, n_classes=10, patch_dim=48)
+MOE = FamilyConfig("moe", vocab=512, d_model=64, n_layers=4, n_heads=4,
+                   d_ff=256, max_seq=64, batch=8, n_experts=4)
+
+FAMILIES = {"gpt": GPT, "bert": BERT, "vit": VIT, "moe": MOE}
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One AOT-compiled executable."""
+    family: str
+    kind: str            # train | eval | init
+    seq: int = 0         # sequence bucket (0 for init)
+    mode: str = "plain"  # plain | ltd | bypass (train only)
+    keep: int = 0        # kept middle-layer length (0 = no dropping)
+
+    @property
+    def name(self) -> str:
+        if self.kind == "init":
+            return f"{self.family}_init"
+        if self.kind == "eval":
+            return f"{self.family}_eval_s{self.seq}"
+        k = "full" if self.mode == "plain" else f"{self.mode}{self.keep}"
+        return f"{self.family}_train_s{self.seq}_{k}"
+
+
+def keep_buckets(seq: int) -> List[int]:
+    """Kept-length buckets for a sequence bucket: 1/4, 1/2, 3/4 of seq."""
+    return [seq // 4, seq // 2, (3 * seq) // 4]
+
+
+def vit_keep_buckets(seq: int) -> List[int]:
+    # 17 tokens: keep ~1/3, ~1/2, ~3/4 (CLS always kept by the coordinator).
+    return [5, 9, 13]
+
+
+# Sequence buckets per family. GPT's curriculum can start as low as S/8
+# (paper: d_s=80 of 2048); BERT's starts at S/4 (paper: d_s=128 of 512).
+SEQ_BUCKETS = {
+    "gpt": [8, 16, 32, 64],
+    "bert": [16, 32, 64],
+    "vit": [17],
+    "moe": [16, 32, 64],
+}
+
+# (family, seq) pairs that get LTD variants. Sequences of 8 are too short
+# to drop from; TokenBypass (the SOTA baseline, Tab. 11/14/15) is only
+# evaluated on GPT at full sequence, matching the paper's study setup.
+LTD_SEQS = {
+    "gpt": [16, 32, 64],
+    "bert": [32, 64],
+    "vit": [17],
+    "moe": [64],
+}
+BYPASS_SEQS = {"gpt": [64], "bert": [], "vit": [], "moe": []}
+
+
+def variant_grid() -> List[Variant]:
+    out: List[Variant] = []
+    for fam, cfg in FAMILIES.items():
+        out.append(Variant(fam, "init"))
+        out.append(Variant(fam, "eval", cfg.max_seq))
+        kb = vit_keep_buckets if fam == "vit" else keep_buckets
+        for s in SEQ_BUCKETS[fam]:
+            out.append(Variant(fam, "train", s, "plain"))
+        for s in LTD_SEQS[fam]:
+            for k in kb(s):
+                out.append(Variant(fam, "train", s, "ltd", k))
+        for s in BYPASS_SEQS[fam]:
+            for k in kb(s):
+                out.append(Variant(fam, "train", s, "bypass", k))
+    return out
+
+
+def param_specs(cfg: FamilyConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the canonical state flattening order.
+
+    The Rust coordinator relies on this exact order (via manifest.json) to
+    thread the [params..., m..., v...] state tuple through train steps.
+    """
+    d, f, s = cfg.d_model, cfg.d_ff, cfg.max_seq
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    if cfg.family == "vit":
+        specs.append(("patch_proj", (cfg.patch_dim, d)))
+        specs.append(("patch_bias", (d,)))
+        specs.append(("cls_emb", (d,)))
+        specs.append(("pos_emb", (s, d)))
+    else:
+        specs.append(("tok_emb", (cfg.vocab, d)))
+        specs.append(("pos_emb", (s, d)))
+    for i in range(cfg.n_layers):
+        moe_layer = cfg.family == "moe" and i % 2 == 1
+        specs.append((f"l{i}.ln1_g", (d,)))
+        specs.append((f"l{i}.ln1_b", (d,)))
+        specs.append((f"l{i}.wq", (d, d)))
+        specs.append((f"l{i}.wk", (d, d)))
+        specs.append((f"l{i}.wv", (d, d)))
+        specs.append((f"l{i}.wo", (d, d)))
+        specs.append((f"l{i}.ln2_g", (d,)))
+        specs.append((f"l{i}.ln2_b", (d,)))
+        if moe_layer:
+            e = cfg.n_experts
+            specs.append((f"l{i}.gate_w", (d, e)))
+            specs.append((f"l{i}.w1", (e, d, f)))
+            specs.append((f"l{i}.b1", (e, f)))
+            specs.append((f"l{i}.w2", (e, f, d)))
+            specs.append((f"l{i}.b2", (e, d)))
+        else:
+            specs.append((f"l{i}.w1", (d, f)))
+            specs.append((f"l{i}.b1", (f,)))
+            specs.append((f"l{i}.w2", (f, d)))
+            specs.append((f"l{i}.b2", (d,)))
+    specs.append(("lnf_g", (d,)))
+    specs.append(("lnf_b", (d,)))
+    if cfg.family == "vit":
+        specs.append(("head_w", (d, cfg.n_classes)))
+        specs.append(("head_b", (cfg.n_classes,)))
+    # LM families tie the output head to tok_emb.
+    return specs
+
+
+def batch_input_specs(cfg: FamilyConfig, variant: Variant):
+    """Ordered (name, dtype, shape) list of per-step data inputs."""
+    b, s = cfg.batch, variant.seq
+    specs = []
+    if cfg.family == "vit":
+        specs.append(("patches", "f32", (b, s - 1, cfg.patch_dim)))
+        specs.append(("labels", "i32", (b,)))
+    else:
+        specs.append(("tokens", "i32", (b, s)))
+        specs.append(("targets", "i32", (b, s)))
+        specs.append(("loss_mask", "f32", (b, s)))
+        if cfg.has_pad_mask:
+            specs.append(("pad_mask", "f32", (b, s)))
+    if variant.kind == "train":
+        if variant.mode == "ltd":
+            n_mid = cfg.n_layers - 2
+            specs.append(("keep_idx", "i32", (n_mid, variant.keep)))
+        elif variant.mode == "bypass":
+            specs.append(("keep_idx", "i32", (variant.keep,)))
+    return specs

@@ -1,0 +1,172 @@
+"""L1 Pallas attention kernel (forward + backward) with a custom VJP.
+
+This is the compute hot spot of every transformer family in the repo. It is
+written TPU-style and lowered with ``interpret=True`` so the emitted HLO runs
+on the CPU PJRT client (real-TPU lowering produces a Mosaic custom-call the
+CPU plugin cannot execute — see DESIGN.md §Hardware-Adaptation).
+
+TPU mapping of the paper's GPU-era compute:
+
+* one grid point per (batch, head) — the analogue of a CUDA thread block;
+* each grid point stages a full (S, D) q/k/v tile through VMEM via
+  ``BlockSpec`` (S ≤ 128, D ≤ 64 keeps every operand tile ≤ 32 KiB, well
+  inside a 16 MiB VMEM budget with double buffering);
+* the inner contractions (``q @ k.T``, ``p @ v``) are MXU-shaped
+  ``jnp.dot`` ops in f32 (bf16-ready).
+
+The forward kernel also emits the per-row logsumexp so the backward kernel
+can rematerialize the probability matrix flash-attention-style instead of
+storing the S×S attention map in HBM.
+
+Correctness oracle: :func:`compile.kernels.ref.attention_ref` (pytest +
+hypothesis sweeps in python/tests/test_kernels.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _scores(q, k, causal, pad=None):
+    """Masked scaled scores for one (batch, head) tile: [S_q, S_k]."""
+    d = q.shape[-1]
+    s = jnp.dot(q, k.T) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        sq, sk = q.shape[0], k.shape[0]
+        tri = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(tri, s, NEG_INF)
+    if pad is not None:
+        s = jnp.where(pad[None, :] > 0, s, NEG_INF)
+    return s
+
+
+def _fwd_kernel(causal, has_pad, *refs):
+    if has_pad:
+        q_ref, k_ref, v_ref, pad_ref, o_ref, lse_ref = refs
+        pad = pad_ref[...]
+    else:
+        q_ref, k_ref, v_ref, o_ref, lse_ref = refs
+        pad = None
+    # Accumulate in f32 (MXU-style), cast back to the storage dtype.
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    s = _scores(q, k, causal, pad)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[:, None])
+    l = jnp.sum(p, axis=-1)
+    o_ref[...] = (jnp.dot(p, v) / l[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = (m + jnp.log(l)).astype(lse_ref.dtype)
+
+
+def _bwd_kernel(causal, has_pad, *refs):
+    if has_pad:
+        q_ref, k_ref, v_ref, pad_ref, o_ref, lse_ref, do_ref, dq_ref, dk_ref, dv_ref = refs
+        pad = pad_ref[...]
+    else:
+        q_ref, k_ref, v_ref, o_ref, lse_ref, do_ref, dq_ref, dk_ref, dv_ref = refs
+        pad = None
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    o = o_ref[...].astype(jnp.float32)
+    lse = lse_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    s = _scores(q, k, causal, pad)
+    # Rematerialize P from the saved logsumexp (flash-attention backward).
+    p = jnp.exp(s - lse[:, None])
+    dv_ref[...] = jnp.dot(p.T, do).astype(dv_ref.dtype)
+    dp = jnp.dot(do, v.T)
+    delta = jnp.sum(do * o, axis=-1)
+    ds = p * (dp - delta[:, None]) * scale
+    dq_ref[...] = jnp.dot(ds, k).astype(dq_ref.dtype)
+    dk_ref[...] = jnp.dot(ds.T, q).astype(dk_ref.dtype)
+
+
+def _bh_spec(s, d):
+    """BlockSpec staging one (S, D) tile per (batch, head) grid point."""
+    return pl.BlockSpec((None, None, s, d), lambda b, h: (b, h, 0, 0))
+
+
+def _pad_spec(s):
+    """BlockSpec staging the [S] key-validity row per batch grid point."""
+    return pl.BlockSpec((None, s), lambda b, h: (b, 0))
+
+
+def _lse_spec(s):
+    return pl.BlockSpec((None, None, s), lambda b, h: (b, h, 0))
+
+
+def _attention_fwd_p(q, k, v, pad_mask, causal):
+    b, h, s, d = q.shape
+    has_pad = pad_mask is not None
+    kernel = functools.partial(_fwd_kernel, causal, has_pad)
+    in_specs = [_bh_spec(s, d)] * 3 + ([_pad_spec(s)] if has_pad else [])
+    out_shape = [
+        jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        jax.ShapeDtypeStruct((b, h, s), q.dtype),
+    ]
+    args = (q, k, v) + ((pad_mask,) if has_pad else ())
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=in_specs,
+        out_specs=[_bh_spec(s, d), _lse_spec(s)],
+        out_shape=out_shape,
+        interpret=True,
+    )(*args)
+    return o, lse
+
+
+def _attention_bwd_p(q, k, v, pad_mask, o, lse, do, causal):
+    b, h, s, d = q.shape
+    has_pad = pad_mask is not None
+    kernel = functools.partial(_bwd_kernel, causal, has_pad)
+    in_specs = (
+        [_bh_spec(s, d)] * 3
+        + ([_pad_spec(s)] if has_pad else [])
+        + [_bh_spec(s, d), _lse_spec(s), _bh_spec(s, d)]
+    )
+    out_shape = [jax.ShapeDtypeStruct((b, h, s, d), q.dtype)] * 3
+    args = (q, k, v) + ((pad_mask,) if has_pad else ()) + (o, lse, do)
+    dq, dk, dv = pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=in_specs,
+        out_specs=[_bh_spec(s, d)] * 3,
+        out_shape=out_shape,
+        interpret=True,
+    )(*args)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def attention(q, k, v, pad_mask, causal):
+    """Multi-head attention via the Pallas kernels.
+
+    q, k, v: [B, H, S, D]; pad_mask: [B, S] float or None; causal: static.
+    Differentiable w.r.t. q, k, v (pad_mask gets a zero cotangent).
+    """
+    o, _ = _attention_fwd_p(q, k, v, pad_mask, causal)
+    return o
+
+
+def _attention_vjp_fwd(q, k, v, pad_mask, causal):
+    o, lse = _attention_fwd_p(q, k, v, pad_mask, causal)
+    return o, (q, k, v, pad_mask, o, lse)
+
+
+def _attention_vjp_bwd(causal, res, do):
+    q, k, v, pad_mask, o, lse = res
+    dq, dk, dv = _attention_bwd_p(q, k, v, pad_mask, o, lse, do, causal)
+    dpad = None if pad_mask is None else jnp.zeros_like(pad_mask)
+    return dq, dk, dv, dpad
+
+
+attention.defvjp(_attention_vjp_fwd, _attention_vjp_bwd)

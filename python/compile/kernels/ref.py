@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest (see
+python/tests/test_kernels.py, which also sweeps shapes with hypothesis).
+They are also used by the L2 model tests to cross-check full forward passes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, pad_mask=None, causal=True):
+    """Reference multi-head scaled-dot-product attention.
+
+    q, k, v: [B, H, S, D]
+    pad_mask: optional [B, S] float (1 = valid key, 0 = padding)
+    causal:   apply lower-triangular mask
+    returns:  [B, H, S, D]
+    """
+    d = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        tri = jnp.tril(jnp.ones((q.shape[2], k.shape[2]), dtype=bool))
+        s = jnp.where(tri[None, None], s, NEG_INF)
+    if pad_mask is not None:
+        s = jnp.where(pad_mask[:, None, None, :] > 0, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def softmax_xent_ref(logits, targets):
+    """Reference per-row softmax cross-entropy.
+
+    logits: [N, V], targets: [N] int32
+    returns: per-row loss [N]
+    """
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return lse - picked
+
+
+def softmax_xent_grad_ref(logits, targets, dloss):
+    """Reference gradient of softmax_xent_ref w.r.t. logits."""
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    return (p - onehot) * dloss[:, None]

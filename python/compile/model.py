@@ -1,0 +1,316 @@
+"""L2 — the JAX compute graphs for every model family, with random-LTD and
+TokenBypass routing wired through the middle layers.
+
+All step functions are *flat*: they take/return plain arrays in the order
+recorded in artifacts/manifest.json, because the Rust coordinator threads
+the state tuple positionally. Three step kinds per family:
+
+* ``init(seed)``              -> state  (= params ++ adam_m ++ adam_v)
+* ``train(state, t, lr, batch..., [keep_idx])`` -> state', loss, loss_sum, tok
+* ``eval(params, batch...)``  -> loss_sum, tok
+
+Routing modes (DESIGN.md §random-LTD):
+
+* ``plain``  — every layer sees the full sequence.
+* ``ltd``    — random layerwise token dropping: every *middle* layer
+  independently gathers its own kept subset (indices supplied by the Rust
+  dropper, sorted ascending so causal order is preserved), runs the layer on
+  the short sequence, and scatters the result back order-preservingly. The
+  first and last layers always see the full sequence (§3.2 "Layers without
+  Token Dropping").
+* ``bypass`` — the TokenBypass baseline: one kept subset is gathered before
+  the middle block, all middle layers run on it, and the block output is
+  combined at the end; dropped tokens skip the entire block (sandwich rule).
+
+The attention and loss hot spots call the L1 Pallas kernels.
+"""
+
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .configs import FamilyConfig, Variant, batch_input_specs, param_specs
+from .kernels.attention import attention
+from .kernels.softmax_xent import softmax_xent
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Parameter plumbing
+
+
+def unflatten(cfg: FamilyConfig, flat: List[jax.Array]) -> Params:
+    specs = param_specs(cfg)
+    assert len(flat) == len(specs), (len(flat), len(specs))
+    return {name: arr for (name, _), arr in zip(specs, flat)}
+
+
+def flatten(cfg: FamilyConfig, params: Params) -> List[jax.Array]:
+    return [params[name] for name, _ in param_specs(cfg)]
+
+
+def init_params(cfg: FamilyConfig, seed) -> Params:
+    """Initialize parameters from a u32 seed (0.02-scaled normals)."""
+    key = jax.random.key(seed)
+    out: Params = {}
+    for name, shape in param_specs(cfg):
+        base = name.split(".")[-1]
+        if base.endswith("_g"):  # layernorm gains
+            out[name] = jnp.ones(shape, jnp.float32)
+        elif base.endswith(("_b", "_bias")) or base.startswith("b"):
+            out[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            out[name] = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Transformer core
+
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+
+
+def _attn_sublayer(cfg: FamilyConfig, p: Params, i: int, x, pad_mask):
+    h = layer_norm(x, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+    q = _split_heads(h @ p[f"l{i}.wq"], cfg.n_heads)
+    k = _split_heads(h @ p[f"l{i}.wk"], cfg.n_heads)
+    v = _split_heads(h @ p[f"l{i}.wv"], cfg.n_heads)
+    o = attention(q, k, v, pad_mask, cfg.causal)  # L1 Pallas kernel
+    return x + _merge_heads(o) @ p[f"l{i}.wo"]
+
+
+def _dense_ffn(p: Params, i: int, h):
+    return jax.nn.gelu(h @ p[f"l{i}.w1"] + p[f"l{i}.b1"]) @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+
+
+def _moe_ffn(cfg: FamilyConfig, p: Params, i: int, h):
+    """Top-1 gated expert FFN (dense compute at this scale) + aux loss.
+
+    Experts are evaluated densely and combined with a one-hot top-1 gate
+    scaled by the gate probability, so expert *and* gate parameters receive
+    gradients; the load-balance aux loss follows Shazeer-style
+    n_e * mean(frac_e) * mean(prob_e).
+    """
+    e = cfg.n_experts
+    gate_logits = h @ p[f"l{i}.gate_w"]          # [B, T, E]
+    gate_p = jax.nn.softmax(gate_logits, axis=-1)
+    top = jnp.argmax(gate_p, axis=-1)            # [B, T]
+    onehot = jax.nn.one_hot(top, e, dtype=h.dtype)
+    # [E, B, T, F] -> gelu -> [E, B, T, D]
+    act = jax.nn.gelu(jnp.einsum("btd,edf->ebtf", h, p[f"l{i}.w1"])
+                      + p[f"l{i}.b1"][:, None, None, :])
+    y = jnp.einsum("ebtf,efd->ebtd", act, p[f"l{i}.w2"]) + p[f"l{i}.b2"][:, None, None, :]
+    combine = onehot * gate_p                     # [B, T, E]
+    out = jnp.einsum("ebtd,bte->btd", y, combine)
+    frac = jnp.mean(onehot, axis=(0, 1))          # [E]
+    prob = jnp.mean(gate_p, axis=(0, 1))          # [E]
+    aux = e * jnp.sum(frac * prob)
+    return out, aux
+
+
+def _block(cfg: FamilyConfig, p: Params, i: int, x, pad_mask):
+    """One transformer layer; returns (x, aux_loss)."""
+    x = _attn_sublayer(cfg, p, i, x, pad_mask)
+    h = layer_norm(x, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+    if cfg.family == "moe" and i % 2 == 1:
+        y, aux = _moe_ffn(cfg, p, i, h)
+    else:
+        y, aux = _dense_ffn(p, i, h), 0.0
+    return x + y, aux
+
+
+def _gather_tokens(x, idx):
+    return x[:, idx, :]
+
+
+def _combine_tokens(x_full, x_kept, idx):
+    """Order-preserving combine: write processed kept tokens back in place."""
+    return x_full.at[:, idx, :].set(x_kept)
+
+
+def _backbone(cfg: FamilyConfig, p: Params, x, pad_mask, mode: str,
+              keep_idx: Optional[jax.Array]):
+    """Run all layers with the requested routing mode. Returns (x, aux)."""
+    n = cfg.n_layers
+    aux_total = 0.0
+    if mode == "bypass" and keep_idx is not None:
+        x, aux = _block(cfg, p, 0, x, pad_mask)
+        aux_total += aux
+        xs = _gather_tokens(x, keep_idx)
+        pm = pad_mask[:, keep_idx] if pad_mask is not None else None
+        for i in range(1, n - 1):
+            xs, aux = _block(cfg, p, i, xs, pm)
+            aux_total += aux
+        x = _combine_tokens(x, xs, keep_idx)
+        x, aux = _block(cfg, p, n - 1, x, pad_mask)
+        return x, aux_total + aux
+    for i in range(n):
+        if mode == "ltd" and keep_idx is not None and 0 < i < n - 1:
+            idx = keep_idx[i - 1]
+            xs = _gather_tokens(x, idx)
+            pm = pad_mask[:, idx] if pad_mask is not None else None
+            ys, aux = _block(cfg, p, i, xs, pm)
+            x = _combine_tokens(x, ys, idx)
+        else:
+            x, aux = _block(cfg, p, i, x, pad_mask)
+        aux_total += aux
+    return x, aux_total
+
+
+def lm_forward(cfg: FamilyConfig, p: Params, tokens, pad_mask=None,
+               mode="plain", keep_idx=None):
+    """GPT/BERT/MoE forward to logits [B, S, V] (tied output head)."""
+    s = tokens.shape[1]
+    x = p["tok_emb"][tokens] + p["pos_emb"][:s][None]
+    x, aux = _backbone(cfg, p, x, pad_mask, mode, keep_idx)
+    x = layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["tok_emb"].T, aux
+
+
+def vit_forward(cfg: FamilyConfig, p: Params, patches, mode="plain",
+                keep_idx=None):
+    """ViT-style forward to class logits [B, C]."""
+    b = patches.shape[0]
+    x = patches @ p["patch_proj"] + p["patch_bias"]
+    cls = jnp.broadcast_to(p["cls_emb"], (b, 1, cfg.d_model))
+    x = jnp.concatenate([cls, x], axis=1)
+    x = x + p["pos_emb"][: x.shape[1]][None]
+    x, aux = _backbone(cfg, p, x, None, mode, keep_idx)
+    x = layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x[:, 0] @ p["head_w"] + p["head_b"], aux
+
+
+# ---------------------------------------------------------------------------
+# Losses
+
+
+def lm_loss(cfg: FamilyConfig, p: Params, tokens, targets, loss_mask,
+            pad_mask=None, mode="plain", keep_idx=None):
+    logits, aux = lm_forward(cfg, p, tokens, pad_mask, mode, keep_idx)
+    n = tokens.shape[0] * tokens.shape[1]
+    per_tok = softmax_xent(logits.reshape(n, cfg.vocab),
+                           targets.reshape(n).astype(jnp.int32))  # L1 kernel
+    m = loss_mask.reshape(n)
+    loss_sum = jnp.sum(per_tok * m)
+    cnt = jnp.sum(m)
+    mean = loss_sum / jnp.maximum(cnt, 1.0)
+    if cfg.family == "moe":
+        mean = mean + cfg.moe_aux_coef * aux
+    return mean, (loss_sum, cnt)
+
+
+def vit_loss(cfg: FamilyConfig, p: Params, patches, labels, mode="plain",
+             keep_idx=None):
+    logits, _ = vit_forward(cfg, p, patches, mode, keep_idx)
+    per_row = softmax_xent(logits, labels.astype(jnp.int32))
+    loss_sum = jnp.sum(per_row)
+    cnt = jnp.float32(labels.shape[0])
+    return loss_sum / cnt, (loss_sum, cnt)
+
+
+# ---------------------------------------------------------------------------
+# Adam + step builders
+
+
+def adam_update(cfg: FamilyConfig, p, g, m, v, t, lr):
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+    m2 = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, m, g)
+    v2 = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * jnp.square(g_), v, g)
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+    def upd(p_, m_, v_):
+        mhat = m_ / bc1
+        vhat = v_ / bc2
+        return p_ - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return jax.tree.map(upd, p, m2, v2), m2, v2
+
+
+def _state_len(cfg: FamilyConfig) -> int:
+    return len(param_specs(cfg))
+
+
+def make_init(cfg: FamilyConfig):
+    def init(seed):
+        p = init_params(cfg, seed)
+        flat = flatten(cfg, p)
+        zeros = [jnp.zeros_like(a) for a in flat]
+        return tuple(flat + zeros + [jnp.zeros_like(a) for a in flat])
+    return init
+
+
+def _parse_batch(cfg: FamilyConfig, variant: Variant, args):
+    """Split flat per-step args according to batch_input_specs order."""
+    names = [n for n, _, _ in batch_input_specs(cfg, variant)]
+    return dict(zip(names, args))
+
+
+def make_train_step(cfg: FamilyConfig, variant: Variant):
+    """Flat train step: (state..., t, lr, batch...) -> (state'..., loss, loss_sum, tok)."""
+    np_ = _state_len(cfg)
+
+    def step(*args):
+        flat_p = list(args[:np_])
+        flat_m = list(args[np_: 2 * np_])
+        flat_v = list(args[2 * np_: 3 * np_])
+        t, lr = args[3 * np_], args[3 * np_ + 1]
+        batch = _parse_batch(cfg, variant, args[3 * np_ + 2:])
+        params = unflatten(cfg, flat_p)
+        m = unflatten(cfg, flat_m)
+        v = unflatten(cfg, flat_v)
+        keep_idx = batch.get("keep_idx")
+
+        if cfg.family == "vit":
+            def loss_fn(pp):
+                return vit_loss(cfg, pp, batch["patches"], batch["labels"],
+                                variant.mode, keep_idx)
+        else:
+            def loss_fn(pp):
+                return lm_loss(cfg, pp, batch["tokens"], batch["targets"],
+                               batch["loss_mask"], batch.get("pad_mask"),
+                               variant.mode, keep_idx)
+
+        (mean, (loss_sum, cnt)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params2, m2, v2 = adam_update(cfg, params, grads, m, v, t, lr)
+        out = (flatten(cfg, params2) + flatten(cfg, m2) + flatten(cfg, v2)
+               + [mean, loss_sum, cnt])
+        return tuple(out)
+
+    return step
+
+
+def make_eval_step(cfg: FamilyConfig, variant: Variant):
+    """Flat eval step: (params..., batch...) -> (loss_sum, tok[, n_correct])."""
+    np_ = _state_len(cfg)
+
+    def step(*args):
+        params = unflatten(cfg, list(args[:np_]))
+        batch = _parse_batch(cfg, variant, args[np_:])
+        if cfg.family == "vit":
+            logits, _ = vit_forward(cfg, params, batch["patches"])
+            per_row = softmax_xent(logits, batch["labels"].astype(jnp.int32))
+            correct = jnp.sum((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+            return (jnp.sum(per_row), jnp.float32(batch["labels"].shape[0]), correct)
+        _, (loss_sum, cnt) = lm_loss(cfg, params, batch["tokens"],
+                                     batch["targets"], batch["loss_mask"],
+                                     batch.get("pad_mask"))
+        return (loss_sum, cnt)
+
+    return step

@@ -1,0 +1,101 @@
+"""AOT pipeline tests: variant grid coverage, manifest consistency, and a
+lowering smoke check (HLO text parses and references real shapes)."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot
+from compile.configs import (FAMILIES, Variant, batch_input_specs,
+                             param_specs, variant_grid)
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestVariantGrid:
+    def test_every_family_has_core_kinds(self):
+        grid = variant_grid()
+        for fam in FAMILIES:
+            kinds = {v.kind for v in grid if v.family == fam}
+            assert kinds == {"init", "eval", "train"}, fam
+
+    def test_ltd_variants_keep_less_than_seq(self):
+        for v in variant_grid():
+            if v.mode in ("ltd", "bypass"):
+                assert 0 < v.keep < v.seq, v.name
+
+    def test_input_specs_order_is_stable(self):
+        v = Variant("bert", "train", 64, "ltd", 32)
+        specs = aot.variant_input_specs(FAMILIES["bert"], v)
+        names = [n for n, _, _ in specs]
+        n_p = len(param_specs(FAMILIES["bert"]))
+        assert names[0] == "p.tok_emb"
+        assert names[n_p].startswith("m.")
+        assert names[2 * n_p].startswith("v.")
+        assert names[3 * n_p :] == ["t", "lr", "tokens", "targets", "loss_mask",
+                                    "pad_mask", "keep_idx"]
+
+    def test_output_specs(self):
+        gpt = FAMILIES["gpt"]
+        tr = aot.variant_output_specs(gpt, Variant("gpt", "train", 64))
+        assert [n for n, _, _ in tr[-3:]] == ["loss", "loss_sum", "tok"]
+        ev = aot.variant_output_specs(gpt, Variant("gpt", "eval", 64))
+        assert len(ev) == 2
+        vit_ev = aot.variant_output_specs(FAMILIES["vit"], Variant("vit", "eval", 17))
+        assert [n for n, _, _ in vit_ev] == ["loss_sum", "tok", "correct"]
+
+
+class TestLowering:
+    def test_lower_one_variant_produces_hlo_text(self):
+        cfg = FAMILIES["gpt"]
+        text = aot.lower_variant(cfg, Variant("gpt", "eval", 16))
+        assert text.startswith("HloModule")
+        assert "f32[" in text
+
+    def test_eval_variant_has_batch_shape(self):
+        cfg = FAMILIES["gpt"]
+        text = aot.lower_variant(cfg, Variant("gpt", "eval", 16))
+        assert f"s32[{cfg.batch},16]" in text.replace(" ", "")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built (make artifacts)",
+)
+class TestManifestOnDisk:
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_covers_grid(self):
+        m = self.manifest()
+        names = {a["name"] for a in m["artifacts"]}
+        for v in variant_grid():
+            assert v.name in names
+
+    def test_artifact_files_exist_and_parse_header(self):
+        m = self.manifest()
+        for a in m["artifacts"]:
+            path = os.path.join(ARTIFACTS, a["file"])
+            assert os.path.exists(path), a["name"]
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), a["name"]
+
+    def test_manifest_shapes_match_configs(self):
+        m = self.manifest()
+        by_name = {a["name"]: a for a in m["artifacts"]}
+        for fam, cfg in FAMILIES.items():
+            fj = m["families"][fam]
+            assert fj["n_params"] == len(param_specs(cfg))
+            train = by_name[f"{fam}_train_s{cfg.max_seq}_full"]
+            batch = batch_input_specs(cfg, Variant(fam, "train", cfg.max_seq))
+            got_tail = train["inputs"][-len(batch):]
+            for spec, (n, dt, shape) in zip(got_tail, batch):
+                assert spec["name"] == n
+                assert spec["dtype"] == dt
+                assert tuple(spec["shape"]) == tuple(shape)

@@ -1,0 +1,229 @@
+"""L2 model tests: shapes, routing-mode invariants, optimizer behavior.
+
+Key invariants:
+* LTD with identity keep indices == plain forward (gather/combine is lossless)
+* LTD/bypass with real dropping changes only what it should
+* a few Adam steps reduce the loss for every family
+* train step state layout round-trips (flatten/unflatten order stable)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import (BERT, FAMILIES, GPT, MOE, VIT, Variant,
+                             batch_input_specs, param_specs, variant_grid)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _lm_batch(cfg, seq, seed=0):
+    rs = np.random.RandomState(seed)
+    tokens = jnp.array(rs.randint(4, cfg.vocab, (cfg.batch, seq)), jnp.int32)
+    targets = jnp.array(rs.randint(4, cfg.vocab, (cfg.batch, seq)), jnp.int32)
+    mask = jnp.ones((cfg.batch, seq), jnp.float32)
+    return tokens, targets, mask
+
+
+def _identity_keep(cfg, seq):
+    n_mid = cfg.n_layers - 2
+    return jnp.tile(jnp.arange(seq, dtype=jnp.int32)[None], (n_mid, 1))
+
+
+class TestForward:
+    def test_gpt_logits_shape(self):
+        p = M.init_params(GPT, 0)
+        tokens, _, _ = _lm_batch(GPT, 32)
+        logits, aux = M.lm_forward(GPT, p, tokens)
+        assert logits.shape == (GPT.batch, 32, GPT.vocab)
+        assert aux == 0.0
+
+    def test_gpt_causality(self):
+        """Perturbing the last input token must not change earlier logits."""
+        p = M.init_params(GPT, 0)
+        tokens, _, _ = _lm_batch(GPT, 16)
+        l1, _ = M.lm_forward(GPT, p, tokens)
+        tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % GPT.vocab)
+        l2, _ = M.lm_forward(GPT, p, tokens2)
+        np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-5, atol=1e-5)
+
+    def test_bert_not_causal(self):
+        p = M.init_params(BERT, 0)
+        tokens, _, _ = _lm_batch(BERT, 16)
+        pad = jnp.ones((BERT.batch, 16), jnp.float32)
+        l1, _ = M.lm_forward(BERT, p, tokens, pad)
+        tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % BERT.vocab)
+        l2, _ = M.lm_forward(BERT, p, tokens2, pad)
+        # bidirectional: earlier positions DO change
+        assert not np.allclose(l1[:, 0], l2[:, 0], atol=1e-6)
+
+    def test_bert_padding_isolated(self):
+        """Padded key positions must not influence valid positions."""
+        p = M.init_params(BERT, 0)
+        tokens, _, _ = _lm_batch(BERT, 16)
+        pad = jnp.ones((BERT.batch, 16), jnp.float32).at[:, 12:].set(0.0)
+        l1, _ = M.lm_forward(BERT, p, tokens, pad)
+        tokens2 = tokens.at[:, 14].set((tokens[:, 14] + 7) % BERT.vocab)
+        l2, _ = M.lm_forward(BERT, p, tokens2, pad)
+        np.testing.assert_allclose(l1[:, :12], l2[:, :12], rtol=1e-5, atol=1e-5)
+
+    def test_vit_logits_shape(self):
+        p = M.init_params(VIT, 0)
+        patches = jnp.array(np.random.RandomState(0).randn(
+            VIT.batch, VIT.max_seq - 1, VIT.patch_dim), jnp.float32)
+        logits, _ = M.vit_forward(VIT, p, patches)
+        assert logits.shape == (VIT.batch, VIT.n_classes)
+
+    def test_moe_aux_loss_positive(self):
+        p = M.init_params(MOE, 0)
+        tokens, _, _ = _lm_batch(MOE, 16)
+        _, aux = M.lm_forward(MOE, p, tokens)
+        assert float(aux) >= 1.0 - 1e-4  # n_e * sum(frac*prob) >= 1 by Cauchy-Schwarz
+
+
+class TestRouting:
+    def test_ltd_identity_equals_plain(self):
+        p = M.init_params(GPT, 1)
+        tokens, _, _ = _lm_batch(GPT, 16)
+        keep = _identity_keep(GPT, 16)
+        l_plain, _ = M.lm_forward(GPT, p, tokens)
+        l_ltd, _ = M.lm_forward(GPT, p, tokens, mode="ltd", keep_idx=keep)
+        np.testing.assert_allclose(l_plain, l_ltd, rtol=1e-5, atol=1e-5)
+
+    def test_bypass_identity_equals_plain(self):
+        p = M.init_params(GPT, 1)
+        tokens, _, _ = _lm_batch(GPT, 16)
+        keep = jnp.arange(16, dtype=jnp.int32)
+        l_plain, _ = M.lm_forward(GPT, p, tokens)
+        l_byp, _ = M.lm_forward(GPT, p, tokens, mode="bypass", keep_idx=keep)
+        np.testing.assert_allclose(l_plain, l_byp, rtol=1e-5, atol=1e-5)
+
+    def test_ltd_differs_from_plain_when_dropping(self):
+        p = M.init_params(GPT, 1)
+        tokens, _, _ = _lm_batch(GPT, 16)
+        n_mid = GPT.n_layers - 2
+        keep = jnp.tile(jnp.arange(8, dtype=jnp.int32)[None] * 2, (n_mid, 1))
+        l_plain, _ = M.lm_forward(GPT, p, tokens)
+        l_ltd, _ = M.lm_forward(GPT, p, tokens, mode="ltd", keep_idx=keep)
+        assert not np.allclose(l_plain, l_ltd, atol=1e-6)
+
+    def test_ltd_per_layer_independent_indices(self):
+        """Different middle layers may keep different token sets."""
+        p = M.init_params(GPT, 2)
+        tokens, _, _ = _lm_batch(GPT, 16)
+        k1 = jnp.stack([jnp.arange(8, dtype=jnp.int32),
+                        jnp.arange(8, dtype=jnp.int32) + 8])
+        l1, _ = M.lm_forward(GPT, p, tokens, mode="ltd", keep_idx=k1)
+        assert np.all(np.isfinite(l1))
+
+    def test_ltd_grads_flow_through_dropped_tokens(self):
+        """Dropped tokens skip a layer but still get gradients (residual)."""
+        p = M.init_params(GPT, 3)
+        tokens, targets, mask = _lm_batch(GPT, 16)
+        keep = _identity_keep(GPT, 16)[:, ::2]  # keep every other token
+
+        def loss(pp):
+            mean, _ = M.lm_loss(GPT, pp, tokens, targets, mask,
+                                mode="ltd", keep_idx=keep)
+            return mean
+
+        g = jax.grad(loss)(p)
+        assert float(jnp.sum(jnp.abs(g["tok_emb"]))) > 0
+        for i in range(GPT.n_layers):
+            assert float(jnp.sum(jnp.abs(g[f"l{i}.wq"]))) > 0, f"layer {i} dead"
+
+
+class TestTrainStep:
+    @pytest.mark.parametrize("fam", ["gpt", "bert", "moe"])
+    def test_loss_decreases(self, fam):
+        cfg = FAMILIES[fam]
+        var = Variant(fam, "train", 16, "plain")
+        step = jax.jit(M.make_train_step(cfg, var))
+        state = M.make_init(cfg)(0)
+        tokens, targets, mask = _lm_batch(cfg, 16)
+        # learn a fixed batch: loss must drop substantially
+        extra = (jnp.ones((cfg.batch, 16), jnp.float32),) if cfg.has_pad_mask else ()
+        first = last = None
+        st = list(state)
+        for t in range(1, 16):
+            out = step(*st, jnp.float32(t), jnp.float32(1e-2),
+                       tokens, targets, mask, *extra)
+            st = list(out[:-3])
+            loss = float(out[-3])
+            first = first if first is not None else loss
+            last = loss
+        assert last < first * 0.6, (first, last)
+
+    def test_vit_loss_decreases(self):
+        cfg = VIT
+        var = Variant("vit", "train", cfg.max_seq, "plain")
+        step = jax.jit(M.make_train_step(cfg, var))
+        st = list(M.make_init(cfg)(0))
+        rs = np.random.RandomState(0)
+        patches = jnp.array(rs.randn(cfg.batch, cfg.max_seq - 1, cfg.patch_dim),
+                            jnp.float32)
+        labels = jnp.array(rs.randint(0, cfg.n_classes, (cfg.batch,)), jnp.int32)
+        first = last = None
+        for t in range(1, 16):
+            out = step(*st, jnp.float32(t), jnp.float32(1e-2), patches, labels)
+            st = list(out[:-3])
+            loss = float(out[-3])
+            first = first if first is not None else loss
+            last = loss
+        assert last < first * 0.6
+
+    def test_train_step_ltd_runs(self):
+        cfg = GPT
+        var = Variant("gpt", "train", 16, "ltd", 8)
+        step = jax.jit(M.make_train_step(cfg, var))
+        st = list(M.make_init(cfg)(0))
+        tokens, targets, mask = _lm_batch(cfg, 16)
+        keep = _identity_keep(cfg, 16)[:, :8]
+        out = step(*st, jnp.float32(1), jnp.float32(1e-3),
+                   tokens, targets, mask, keep)
+        assert np.isfinite(float(out[-3]))
+
+    def test_eval_step_matches_loss(self):
+        cfg = GPT
+        ev = jax.jit(M.make_eval_step(cfg, Variant("gpt", "eval", 16)))
+        p = M.init_params(cfg, 0)
+        tokens, targets, mask = _lm_batch(cfg, 16)
+        loss_sum, cnt = ev(*M.flatten(cfg, p), tokens, targets, mask)
+        mean, (ls, c) = M.lm_loss(cfg, p, tokens, targets, mask)
+        np.testing.assert_allclose(float(loss_sum), float(ls), rtol=1e-6)
+        assert float(cnt) == cfg.batch * 16
+
+
+class TestStateLayout:
+    @pytest.mark.parametrize("fam", list(FAMILIES))
+    def test_flatten_roundtrip(self, fam):
+        cfg = FAMILIES[fam]
+        p = M.init_params(cfg, 7)
+        flat = M.flatten(cfg, p)
+        p2 = M.unflatten(cfg, flat)
+        assert set(p) == set(p2)
+        for k in p:
+            np.testing.assert_array_equal(p[k], p2[k])
+
+    @pytest.mark.parametrize("fam", list(FAMILIES))
+    def test_init_state_length(self, fam):
+        cfg = FAMILIES[fam]
+        state = M.make_init(cfg)(0)
+        assert len(state) == 3 * len(param_specs(cfg))
+        for (name, shape), arr in zip(param_specs(cfg), state):
+            assert tuple(arr.shape) == tuple(shape), name
+
+    def test_variant_grid_names_unique(self):
+        names = [v.name for v in variant_grid()]
+        assert len(names) == len(set(names))
+        assert len(names) > 35
+
+    def test_batch_specs_cover_modes(self):
+        v = Variant("gpt", "train", 64, "ltd", 32)
+        names = [n for n, _, _ in batch_input_specs(GPT, v)]
+        assert names == ["tokens", "targets", "loss_mask", "keep_idx"]
+        v2 = Variant("bert", "train", 64, "plain")
+        names2 = [n for n, _, _ in batch_input_specs(BERT, v2)]
+        assert names2 == ["tokens", "targets", "loss_mask", "pad_mask"]

@@ -1,0 +1,113 @@
+//! Fig. 2 reproduction — the cost–quality Pareto frontier.
+//!
+//! Sweeps data budgets from 1% to 100% (paper: 3B..300B tokens) and trains
+//! baseline vs the composed CL_seqtru_voc+random-LTD solution at each
+//! budget. Paper shape: the composed curve dominates at every budget, and
+//! the quality level the baseline reaches at budget X is reached by the
+//! composed run at a substantially smaller budget (the 12.5x headline).
+//!
+//! Also prints the Fig. 1 literature table (model/data scale trend) for
+//! completeness — that figure is a survey plot, not an experiment.
+
+use dsde::bench::{scaled, Table};
+use dsde::exp::cases::fig2_pairs;
+use dsde::exp::{relative_quality, run_cases};
+use dsde::sim::cost::{PAPER_FULL_COST_USD, PAPER_FULL_HOURS};
+use dsde::train::TrainEnv;
+
+/// Fig. 1 data points (from the papers cited in the figure).
+const FIG1: &[(&str, u64, f64, f64)] = &[
+    // (model, year, params B, train tokens B)
+    ("BERT-large", 2018, 0.34, 137.0),
+    ("Megatron-LM", 2019, 8.3, 157.0),
+    ("GPT-3", 2020, 175.0, 300.0),
+    ("BLOOM", 2022, 176.0, 366.0),
+    ("PaLM", 2022, 540.0, 780.0),
+];
+
+fn main() -> dsde::Result<()> {
+    println!("Fig. 1 (literature survey): model and data scale grow together");
+    let mut f1 = Table::new(&["model", "year", "params (B)", "tokens (B)"]);
+    for (m, y, p, t) in FIG1 {
+        f1.row(vec![m.to_string(), y.to_string(), format!("{p}"), format!("{t}")]);
+    }
+    f1.print();
+
+    let full_steps = scaled(100, 24);
+    let n_docs = scaled(800, 300) as usize;
+    let fractions: Vec<f64> = if dsde::bench::quick_mode() {
+        vec![0.25, 1.0]
+    } else {
+        vec![0.01, 0.02, 0.04, 0.08, 0.16, 0.32, 0.5, 1.0]
+    };
+    eprintln!("\n== Fig. 2: Pareto sweep over {} budgets (full={} steps) ==", fractions.len(), full_steps);
+    let env = TrainEnv::new(n_docs, 7)?;
+    let fam = env.rt.registry.family("gpt")?.clone();
+    let pairs = fig2_pairs(full_steps, fam.max_seq, 1234, &fractions);
+
+    let mut rows = Vec::new();
+    for (f, base, comp) in pairs {
+        let rs = run_cases(&env, vec![base, comp])?;
+        rows.push((f, rs[0].clone(), rs[1].clone()));
+    }
+    let full_baseline = &rows.last().unwrap().1;
+    let base_loss = full_baseline.final_eval_loss;
+    let full_wall = full_baseline.wall_secs;
+
+    let mut table = Table::new(&[
+        "data %",
+        "sim cost $ (baseline anchor)",
+        "baseline quality %",
+        "composed quality %",
+    ]);
+    let mut dominated = 0;
+    for (f, b, c) in &rows {
+        let qb = relative_quality(base_loss, b.final_eval_loss);
+        let qc = relative_quality(base_loss, c.final_eval_loss);
+        if qc >= qb - 0.05 {
+            dominated += 1;
+        }
+        table.row(vec![
+            format!("{:.0}%", f * 100.0),
+            format!("{:.0}", PAPER_FULL_COST_USD * (b.wall_secs / full_wall)),
+            format!("{qb:.1}"),
+            format!("{qc:.1}"),
+        ]);
+    }
+    println!("\nFig. 2 (reproduced; quality = inverse-loss % of full-data baseline)");
+    table.print();
+    table.save_csv("fig2_pareto")?;
+
+    // headline: smallest composed budget reaching 95% quality vs baseline's
+    let q95_base = rows
+        .iter()
+        .find(|(_, b, _)| relative_quality(base_loss, b.final_eval_loss) >= 95.0)
+        .map(|(f, _, _)| *f);
+    let q95_comp = rows
+        .iter()
+        .find(|(_, _, c)| relative_quality(base_loss, c.final_eval_loss) >= 95.0)
+        .map(|(f, _, _)| *f);
+    println!("\nheadline: budget to reach 95% quality:");
+    if let (Some(fb), Some(fc)) = (q95_base, q95_comp) {
+        println!(
+            "  baseline {:.0}% of data (sim {:.0}h/${:.0}) vs composed {:.0}% (sim {:.0}h/${:.0}) -> {:.1}x saving",
+            fb * 100.0,
+            PAPER_FULL_HOURS * fb,
+            PAPER_FULL_COST_USD * fb,
+            fc * 100.0,
+            PAPER_FULL_HOURS * fc,
+            PAPER_FULL_COST_USD * fc,
+            fb / fc
+        );
+    } else {
+        println!("  (95% threshold not bracketed at this scale: base={q95_base:?} comp={q95_comp:?})");
+    }
+    println!("\nshape checks:");
+    println!(
+        "  [{}] composed >= baseline quality on {}/{} budgets",
+        if dominated * 2 >= rows.len() { "PASS" } else { "FAIL" },
+        dominated,
+        rows.len()
+    );
+    Ok(())
+}

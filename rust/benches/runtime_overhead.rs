@@ -1,0 +1,175 @@
+//! L3 hot-path microbenchmarks (§Perf): where does a training step's time
+//! go, and is the coordinator ever the bottleneck?
+//!
+//! Measures, per layer of the L3 step loop:
+//!  * PJRT executable compile time (one-time, amortized by the registry cache)
+//!  * batch preparation (loader) cost
+//!  * literal creation + argument assembly cost
+//!  * raw execute cost per variant (full vs LTD vs short-seq buckets)
+//!  * random-LTD keep-index generation cost
+//!  * prefetch pipeline overlap gain
+//!  * state round-trip (tuple decompose) share
+
+use dsde::bench::{scaled, time_it, Table};
+use dsde::curriculum::scheduler::{ClState, SeqTransform};
+use dsde::curriculum::{GptLoader, UniformSampler};
+use dsde::data::corpus::{Corpus, CorpusConfig};
+use dsde::data::dataset::GptDataset;
+use dsde::data::tokenizer::Tokenizer;
+use dsde::ltd::RandomDropper;
+use dsde::runtime::{lit_f32, lit_i32, scalar_f32, scalar_u32, Runtime};
+use dsde::train::Prefetcher;
+use std::sync::Arc;
+
+fn main() -> dsde::Result<()> {
+    let iters = scaled(20, 5) as usize;
+    eprintln!("== runtime overhead breakdown ({iters} iters/measurement) ==");
+    let rt = Runtime::open_default()?;
+    let fam = rt.registry.family("gpt")?.clone();
+
+    // ---- compile times (cold)
+    let mut compile_table = Table::new(&["artifact", "compile s", "hlo KiB"]);
+    for name in ["gpt_train_s64_full", "gpt_train_s64_ltd32", "gpt_train_s8_full", "gpt_eval_s64"] {
+        let step = rt.step(name)?;
+        let size = std::fs::metadata(rt.registry.hlo_path(name)?)?.len() / 1024;
+        compile_table.row(vec![
+            name.to_string(),
+            format!("{:.2}", step.compile_secs),
+            size.to_string(),
+        ]);
+    }
+    println!("\ncold compile cost (cached afterwards):");
+    compile_table.print();
+
+    // ---- data plumbing
+    let corpus = Corpus::generate(CorpusConfig { n_docs: 500, ..Default::default() });
+    let tok = Tokenizer::from_corpus(&corpus);
+    let ds = Arc::new(GptDataset::build(&corpus, &tok, fam.max_seq));
+    let n = ds.n_samples();
+    let mut loader = GptLoader::new(ds.clone(), Box::new(UniformSampler::new(n, 1)), fam.batch);
+    let st = ClState { seq: 64, transform: SeqTransform::None, pool_pct: 1.0 };
+    let batch_prep = time_it(3, iters, || {
+        let b = loader.next_batch(64, &st);
+        std::hint::black_box(b.tokens.len());
+    });
+
+    let b = loader.next_batch(64, &st);
+    let dims = [fam.batch, 64usize];
+    let literal_mk = time_it(3, iters, || {
+        let t = lit_i32(&b.tokens, &dims).unwrap();
+        let g = lit_i32(&b.targets, &dims).unwrap();
+        let m = lit_f32(&b.loss_mask, &dims).unwrap();
+        std::hint::black_box((t.size_bytes(), g.size_bytes(), m.size_bytes()));
+    });
+
+    let mut dropper = RandomDropper::new(5);
+    let drop_gen = time_it(3, iters, || {
+        let idx = dropper.layerwise(fam.n_middle_layers, 64, 32);
+        std::hint::black_box(idx.len());
+    });
+
+    // ---- execute per variant
+    let init = rt.step("gpt_init")?;
+    let state = init.execute(&[scalar_u32(0)])?;
+    let n_state = state.len();
+    let mut exec_table = Table::new(&["variant", "execute ms", "std ms"]);
+    for name in ["gpt_train_s64_full", "gpt_train_s64_ltd32", "gpt_train_s32_full", "gpt_train_s8_full", "gpt_eval_s64"] {
+        let step = rt.step(name)?;
+        let info = &step.info;
+        let seq = info.seq;
+        let is_eval = info.kind == "eval";
+        let tokens: Vec<i32> = (0..fam.batch * seq).map(|i| 6 + (i as i32 % 500)).collect();
+        let mask = vec![1.0f32; fam.batch * seq];
+        let dims = [fam.batch, seq];
+        let mut extra: Vec<xla::Literal> = Vec::new();
+        if !is_eval {
+            extra.push(scalar_f32(1.0));
+            extra.push(scalar_f32(1e-3));
+        }
+        extra.push(lit_i32(&tokens, &dims)?);
+        extra.push(lit_i32(&tokens, &dims)?);
+        extra.push(lit_f32(&mask, &dims)?);
+        if info.mode == dsde::runtime::Mode::Ltd {
+            let idx = dropper.layerwise(fam.n_middle_layers, seq, info.keep).to_vec();
+            extra.push(lit_i32(&idx, &[fam.n_middle_layers, info.keep])?);
+        }
+        let state_slice = if is_eval { &state[..fam.n_params] } else { &state[..] };
+        let stats = time_it(2, iters, || {
+            let args: Vec<&xla::Literal> = state_slice.iter().chain(extra.iter()).collect();
+            let out = step.execute_refs(&args).unwrap();
+            std::hint::black_box(out.len());
+        });
+        exec_table.row(vec![
+            name.to_string(),
+            format!("{:.2}", stats.mean * 1e3),
+            format!("{:.2}", stats.std * 1e3),
+        ]);
+    }
+    println!("\nexecute cost per variant:");
+    exec_table.print();
+
+    // ---- state round-trip share: execute vs output-tuple handling is
+    // already included above; measure the literal sizes instead.
+    let state_bytes: usize = state.iter().map(|l| l.size_bytes()).sum();
+    println!(
+        "\nstate: {} literals, {:.2} MiB total (host round-trip per step)",
+        n_state,
+        state_bytes as f64 / (1024.0 * 1024.0)
+    );
+
+    // ---- prefetch overlap
+    let ds2 = ds.clone();
+    let batch_ms = batch_prep.mean * 1e3;
+    let pf = Prefetcher::new(iters as u64, 4, move |i| {
+        let mut loader =
+            GptLoader::new(ds2.clone(), Box::new(UniformSampler::new(n, i)), 8);
+        loader.next_batch(64, &ClState { seq: 64, transform: SeqTransform::None, pool_pct: 1.0 })
+    });
+    let consume = time_it(0, iters, || {
+        let b = pf.next().unwrap();
+        std::hint::black_box(b.tokens.len());
+    });
+
+    let mut t = Table::new(&["component", "mean ms", "share of 64-seq step"]);
+    let step_ms = {
+        let full = rt.step("gpt_train_s64_full")?;
+        let tokens: Vec<i32> = (0..fam.batch * 64).map(|i| 6 + (i as i32 % 500)).collect();
+        let mask = vec![1.0f32; fam.batch * 64];
+        let extra = vec![
+            scalar_f32(1.0),
+            scalar_f32(1e-3),
+            lit_i32(&tokens, &[fam.batch, 64])?,
+            lit_i32(&tokens, &[fam.batch, 64])?,
+            lit_f32(&mask, &[fam.batch, 64])?,
+        ];
+        time_it(2, iters, || {
+            let args: Vec<&xla::Literal> = state.iter().chain(extra.iter()).collect();
+            std::hint::black_box(full.execute_refs(&args).unwrap().len());
+        })
+        .mean
+            * 1e3
+    };
+    for (name, ms) in [
+        ("batch prep (loader)", batch_ms),
+        ("literal creation", literal_mk.mean * 1e3),
+        ("LTD index generation", drop_gen.mean * 1e3),
+        ("prefetched batch recv", consume.mean * 1e3),
+        ("execute (s64 full)", step_ms),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            format!("{ms:.3}"),
+            format!("{:.1}%", ms / step_ms * 100.0),
+        ]);
+    }
+    println!("\nhot-path breakdown:");
+    t.print();
+    t.save_csv("runtime_overhead")?;
+
+    let coordinator_ms = batch_ms + literal_mk.mean * 1e3 + drop_gen.mean * 1e3;
+    println!(
+        "\nshape check:\n  [{}] coordinator overhead ({coordinator_ms:.2}ms) ≤ 5% of execute ({step_ms:.2}ms)",
+        if coordinator_ms <= step_ms * 0.05 { "PASS" } else { "FAIL" }
+    );
+    Ok(())
+}

@@ -1,0 +1,162 @@
+//! Concrete difficulty metrics (§3.1), as closures over the datasets for
+//! the generic map-reduce analyzer.
+//!
+//! Only the *ordering* metrics need an offline index: `voc` (GPT + BERT)
+//! and `seqreo` (BERT effective length), plus the composed `seqreo_voc`.
+//! `seqtru`/`seqres` are batch-time transforms (truncate / reshape) applied
+//! by the curriculum loader, exactly as in the paper where they change the
+//! sampled batch rather than the sampling order.
+
+use crate::analysis::analyzer::{analyze, AnalyzerConfig, AnalyzerReport};
+use crate::data::dataset::{BertDataset, GptDataset};
+use crate::data::index::DifficultyIndex;
+use crate::data::tokenizer::Tokenizer;
+
+/// `voc` over GPT packed samples: -Σ log p(w) of the sample's tokens.
+/// Lower = more common vocabulary = easier (Platanios et al. 2019).
+pub fn gpt_voc(
+    ds: &GptDataset,
+    tok: &Tokenizer,
+    cfg: &AnalyzerConfig,
+) -> (DifficultyIndex, AnalyzerReport) {
+    let n = ds.n_samples();
+    let s = ds.max_seq;
+    analyze(
+        "voc",
+        n,
+        |i| {
+            ds.tokens(i, s)
+                .iter()
+                .map(|&t| tok.rarity(t))
+                .sum::<f64>() as f32
+        },
+        cfg,
+    )
+}
+
+/// `voc` over BERT pair samples (non-padding tokens only).
+pub fn bert_voc(
+    ds: &BertDataset,
+    tok: &Tokenizer,
+    cfg: &AnalyzerConfig,
+) -> (DifficultyIndex, AnalyzerReport) {
+    let n = ds.n_samples();
+    analyze(
+        "voc",
+        n,
+        |i| {
+            let eff = ds.eff_len[i] as usize;
+            ds.tokens(i)[..eff]
+                .iter()
+                .map(|&t| tok.rarity(t))
+                .sum::<f64>() as f32
+        },
+        cfg,
+    )
+}
+
+/// `seqreo`: BERT effective sequence length.
+pub fn bert_eff_len(ds: &BertDataset, cfg: &AnalyzerConfig) -> (DifficultyIndex, AnalyzerReport) {
+    analyze("seqreo", ds.n_samples(), |i| ds.eff_len[i] as f32, cfg)
+}
+
+/// Composed `seqreo_voc` — the paper treats it as "a single new metric"
+/// (§3.1). We combine the two signals as equal-weight z-scores.
+pub fn bert_seqreo_voc(
+    ds: &BertDataset,
+    tok: &Tokenizer,
+    cfg: &AnalyzerConfig,
+) -> (DifficultyIndex, AnalyzerReport) {
+    let n = ds.n_samples();
+    // Two cheap passes for moments, then the indexed pass.
+    let mut mean_l = 0.0f64;
+    let mut mean_v = 0.0f64;
+    let voc_of = |i: usize| -> f64 {
+        let eff = ds.eff_len[i] as usize;
+        ds.tokens(i)[..eff].iter().map(|&t| tok.rarity(t)).sum()
+    };
+    for i in 0..n {
+        mean_l += ds.eff_len[i] as f64;
+        mean_v += voc_of(i);
+    }
+    mean_l /= n.max(1) as f64;
+    mean_v /= n.max(1) as f64;
+    let mut var_l = 0.0f64;
+    let mut var_v = 0.0f64;
+    for i in 0..n {
+        var_l += (ds.eff_len[i] as f64 - mean_l).powi(2);
+        var_v += (voc_of(i) - mean_v).powi(2);
+    }
+    let sd_l = (var_l / n.max(1) as f64).sqrt().max(1e-9);
+    let sd_v = (var_v / n.max(1) as f64).sqrt().max(1e-9);
+    analyze(
+        "seqreo_voc",
+        n,
+        move |i| {
+            let zl = (ds.eff_len[i] as f64 - mean_l) / sd_l;
+            let zv = (voc_of(i) - mean_v) / sd_v;
+            (zl + zv) as f32
+        },
+        cfg,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, CorpusConfig};
+
+    fn setup() -> (Corpus, Tokenizer) {
+        let c = Corpus::generate(CorpusConfig {
+            n_docs: 300,
+            seed: 21,
+            ..CorpusConfig::default()
+        });
+        let t = Tokenizer::from_corpus(&c);
+        (c, t)
+    }
+
+    #[test]
+    fn gpt_voc_orders_by_rarity() {
+        let (c, t) = setup();
+        let ds = GptDataset::build(&c, &t, 64);
+        let (idx, _) = gpt_voc(&ds, &t, &AnalyzerConfig::default());
+        assert_eq!(idx.len(), ds.n_samples());
+        let o = idx.order();
+        let v = idx.values();
+        assert!(v[o[0] as usize] <= v[*o.last().unwrap() as usize]);
+        // values should have real spread (topic structure)
+        let spread = v[o[o.len() - 1] as usize] - v[o[0] as usize];
+        assert!(spread > 1.0, "voc spread too small: {spread}");
+    }
+
+    #[test]
+    fn bert_eff_len_matches_dataset() {
+        let (c, t) = setup();
+        let ds = BertDataset::build(&c, &t, 64);
+        let (idx, _) = bert_eff_len(&ds, &AnalyzerConfig::default());
+        for (i, &e) in ds.eff_len.iter().enumerate() {
+            assert_eq!(idx.values()[i], e as f32);
+        }
+        let o = idx.order();
+        assert!(ds.eff_len[o[0] as usize] <= ds.eff_len[*o.last().unwrap() as usize]);
+    }
+
+    #[test]
+    fn seqreo_voc_correlates_with_both() {
+        let (c, t) = setup();
+        let ds = BertDataset::build(&c, &t, 64);
+        let (idx, _) = bert_seqreo_voc(&ds, &t, &AnalyzerConfig::default());
+        let o = idx.order();
+        // easiest decile should have shorter-than-average effective length
+        let n = o.len();
+        let easy_mean: f64 = o[..n / 10]
+            .iter()
+            .map(|&i| ds.eff_len[i as usize] as f64)
+            .sum::<f64>()
+            / (n / 10) as f64;
+        let all_mean: f64 =
+            ds.eff_len.iter().map(|&e| e as f64).sum::<f64>() / n as f64;
+        assert!(easy_mean < all_mean, "easy={easy_mean} all={all_mean}");
+    }
+}

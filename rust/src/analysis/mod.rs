@@ -1,0 +1,15 @@
+//! Offline data analysis — the paper's map-reduce data analyzer (§3.1).
+//!
+//! "During the Map stage, user provides a function that computes the
+//! desired difficulty metric [...] the data analyzer will automatically
+//! split the dataset based on number of workers, compute the difficulty
+//! values in a batched fashion [...] During the Reduce stage, the data
+//! analyzer will merge the index files produced by all workers."
+//!
+//! [`analyzer::analyze`] is the generic engine (any `Fn(sample) -> f32`);
+//! [`metrics`] provides the paper's concrete difficulty metrics.
+
+pub mod analyzer;
+pub mod metrics;
+
+pub use analyzer::{analyze, AnalyzerConfig, AnalyzerReport};

@@ -1,0 +1,181 @@
+//! Bench harness: timing statistics and paper-style table rendering.
+//!
+//! criterion is not in the offline vendor set (DESIGN.md §Substitutions);
+//! `rust/benches/*` are `harness = false` binaries built on this module:
+//! warmup + N timed iterations, mean/std/median, and a fixed-width table
+//! printer whose rows mirror the paper's tables. `DSDE_BENCH_QUICK=1`
+//! switches every bench to a reduced-scale smoke configuration.
+
+use std::time::Instant;
+
+/// True when `DSDE_BENCH_QUICK=1` (make bench-quick).
+pub fn quick_mode() -> bool {
+    std::env::var("DSDE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Pick a scale parameter depending on quick mode.
+pub fn scaled(full: u64, quick: u64) -> u64 {
+    if quick_mode() {
+        quick
+    } else {
+        full
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub median: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        if samples.is_empty() {
+            return Stats::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            median: sorted[n / 2],
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Time `f` with `warmup` + `iters` iterations; returns per-iter seconds.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (c, cell) in cells.iter().enumerate() {
+                out.push_str("| ");
+                out.push_str(cell);
+                out.push_str(&" ".repeat(widths[c] - cell.len() + 1));
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out, &self.headers);
+        for w in widths.iter() {
+            out.push('|');
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("|\n");
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// CSV form for runs/ logs.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV under runs/ (created on demand).
+    pub fn save_csv(&self, name: &str) -> crate::Result<std::path::PathBuf> {
+        let dir = std::path::PathBuf::from("runs");
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_renders_aligned_and_csv_escapes() {
+        let mut t = Table::new(&["case", "value"]);
+        t.row(vec!["baseline".into(), "1.0".into()]);
+        t.row(vec!["CL, composed".into(), "2.0".into()]);
+        let r = t.render();
+        assert!(r.contains("| case"));
+        assert_eq!(r.lines().count(), 4);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"CL, composed\""));
+    }
+
+    #[test]
+    fn time_it_measures() {
+        let s = time_it(1, 5, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(s.mean >= 0.001);
+        assert_eq!(s.n, 5);
+    }
+}

@@ -1,0 +1,10 @@
+//! Configuration layer: JSON value type, typed experiment schema, and the
+//! paper's Tab. 2 usage-guideline presets.
+
+pub mod args;
+pub mod json;
+pub mod presets;
+pub mod schema;
+
+pub use json::Json;
+pub use schema::*;

@@ -1,0 +1,139 @@
+//! The paper's Tab. 2 usage guidelines as named presets, rescaled to this
+//! repo's tiny model families (ratios preserved; see DESIGN.md
+//! §Substitutions).
+//!
+//! Paper values → here (sequence 2048/512/1024/197 → 64/64/64/17):
+//!
+//! | Case            | paper                              | here                    |
+//! |-----------------|------------------------------------|-------------------------|
+//! | GPT-3 pretrain  | CL d_s=80/1%, T_c=40%; r_s=128, T_r=70%  | d_s=8/1%, T_c=40%; r_s=16, T_r=70% |
+//! | BERT pretrain   | CL d_s=128/5%, T_c=50%; r_s=128, T_r=100%| d_s=16/5%, T_c=50%; r_s=16, T_r=100% |
+//! | GPT-2 finetune  | CL seqres d_s=32, T_c=70%; r_s=128, T_r=30% | d_s=8, T_c=70%; r_s=16, T_r=30% |
+//! | ViT finetune    | r_s=32/66, T_r=80%                 | r_s=5, T_r=80%          |
+
+use crate::config::schema::*;
+
+/// GPT-3-pretraining-style composed preset (CL_seqtru_voc + random-LTD).
+pub fn gpt_pretrain(total_steps: u64, peak_lr: f64, max_seq: usize) -> RunConfig {
+    let mut c = RunConfig::baseline("gpt", total_steps, peak_lr);
+    c.label = "gpt-pretrain-composed".into();
+    let t_c = (total_steps as f64 * 0.40) as u64;
+    c.curriculum.push(ClConfig::new(
+        Metric::SeqTru,
+        Bound::Value((max_seq / 8) as f64),
+        Bound::Value(max_seq as f64),
+        t_c.max(1),
+    ));
+    c.curriculum.push(ClConfig::new(
+        Metric::Voc,
+        Bound::Percentile(0.01),
+        Bound::Percentile(1.0),
+        t_c.max(1),
+    ));
+    c.routing = Routing::RandomLtd(LtdConfig::mslg(
+        max_seq / 4,
+        (total_steps as f64 * 0.70) as u64,
+    ));
+    c
+}
+
+/// BERT-pretraining-style composed preset.
+pub fn bert_pretrain(total_steps: u64, peak_lr: f64, max_seq: usize) -> RunConfig {
+    let mut c = RunConfig::baseline("bert", total_steps, peak_lr);
+    c.label = "bert-pretrain-composed".into();
+    let t_c = (total_steps as f64 * 0.50) as u64;
+    c.curriculum.push(ClConfig::new(
+        Metric::SeqTru,
+        Bound::Value((max_seq / 4) as f64),
+        Bound::Value(max_seq as f64),
+        t_c.max(1),
+    ));
+    c.curriculum.push(ClConfig::new(
+        Metric::Voc,
+        Bound::Percentile(0.05),
+        Bound::Percentile(1.0),
+        t_c.max(1),
+    ));
+    c.routing = Routing::RandomLtd(LtdConfig::mslg(max_seq / 4, total_steps));
+    c
+}
+
+/// GPT-2-finetuning-style preset (CL seqres + random-LTD, Tab. 5 winners).
+pub fn gpt_finetune(total_steps: u64, peak_lr: f64, max_seq: usize) -> RunConfig {
+    let mut c = RunConfig::baseline("gpt", total_steps, peak_lr);
+    c.label = "gpt-finetune-composed".into();
+    c.curriculum.push(ClConfig::new(
+        Metric::SeqRes,
+        Bound::Value((max_seq / 8) as f64),
+        Bound::Value(max_seq as f64),
+        (total_steps as f64 * 0.10).max(1.0) as u64,
+    ));
+    c.routing = Routing::RandomLtd(LtdConfig::mslg(
+        max_seq / 4,
+        (total_steps as f64 * 0.30) as u64,
+    ));
+    c
+}
+
+/// ViT-finetuning-style preset (random-LTD only, per the paper).
+pub fn vit_finetune(total_steps: u64, peak_lr: f64) -> RunConfig {
+    let mut c = RunConfig::baseline("vit", total_steps, peak_lr);
+    c.label = "vit-finetune-rltd".into();
+    c.routing = Routing::RandomLtd(LtdConfig::mslg(
+        5,
+        (total_steps as f64 * 0.80) as u64,
+    ));
+    c
+}
+
+/// Look up a preset by name (CLI `--preset`).
+pub fn by_name(name: &str, total_steps: u64, peak_lr: f64, max_seq: usize) -> Option<RunConfig> {
+    Some(match name {
+        "gpt-pretrain" => gpt_pretrain(total_steps, peak_lr, max_seq),
+        "bert-pretrain" => bert_pretrain(total_steps, peak_lr, max_seq),
+        "gpt-finetune" => gpt_finetune(total_steps, peak_lr, max_seq),
+        "vit-finetune" => vit_finetune(total_steps, peak_lr),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for p in [
+            gpt_pretrain(100, 1e-3, 64),
+            bert_pretrain(100, 1e-3, 64),
+            gpt_finetune(100, 1e-3, 64),
+            vit_finetune(100, 1e-3),
+        ] {
+            p.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn preset_ratios_match_table2() {
+        let p = gpt_pretrain(1000, 1e-3, 64);
+        assert_eq!(p.curriculum[0].total_steps, 400); // T_c = 40%
+        match &p.routing {
+            Routing::RandomLtd(l) => {
+                assert_eq!(l.total_steps, 700); // T_r = 70%
+                assert_eq!(l.schedule, LtdSchedule::Mslg);
+            }
+            _ => panic!("expected random-LTD"),
+        }
+        let b = bert_pretrain(1000, 1e-3, 64);
+        match &b.routing {
+            Routing::RandomLtd(l) => assert_eq!(l.total_steps, 1000), // T_r = 100%
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("gpt-pretrain", 10, 1e-3, 64).is_some());
+        assert!(by_name("nope", 10, 1e-3, 64).is_none());
+    }
+}

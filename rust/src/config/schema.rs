@@ -1,0 +1,556 @@
+//! Typed experiment configuration.
+//!
+//! Mirrors the knobs the paper exposes (§3.3): each technique has exactly
+//! two user-tuned parameters — the starting difficulty / kept sequence
+//! length (`d_s` / `r_s`) and the technique duration (`T_c` / `T_r`) — plus
+//! the structural choices (difficulty metric, pacing function, routing
+//! mode, LR decay basis) that DESIGN.md's ablation list covers.
+
+use crate::config::json::Json;
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// The paper's 7 difficulty metrics (§3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Metric {
+    /// Truncation-based sequence length (GPT + BERT).
+    SeqTru,
+    /// Reshape-based sequence length (GPT only).
+    SeqRes,
+    /// Reorder-based effective sequence length (BERT only).
+    SeqReo,
+    /// Vocabulary rarity: -sum log p(w) (GPT + BERT).
+    Voc,
+}
+
+impl Metric {
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::SeqTru => "seqtru",
+            Metric::SeqRes => "seqres",
+            Metric::SeqReo => "seqreo",
+            Metric::Voc => "voc",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Metric> {
+        Ok(match s {
+            "seqtru" => Metric::SeqTru,
+            "seqres" => Metric::SeqRes,
+            "seqreo" => Metric::SeqReo,
+            "voc" => Metric::Voc,
+            _ => bail!("unknown difficulty metric '{s}'"),
+        })
+    }
+
+    /// Value-based metrics use absolute difficulty values (sequence
+    /// lengths); the rest are percentile-based (§3.1).
+    pub fn value_based(self) -> bool {
+        matches!(self, Metric::SeqTru | Metric::SeqRes)
+    }
+}
+
+/// Pacing function kinds (§3.1). `Power(0.5)` is the paper's `sqrt`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Pacing {
+    Linear,
+    Sqrt,
+    /// d_t = d_s + (d_e - d_s) * min((t/T)^p, 1)
+    Power(f64),
+    /// Staircase with `n` equal steps.
+    Step(u32),
+}
+
+impl Pacing {
+    pub fn name(&self) -> String {
+        match self {
+            Pacing::Linear => "linear".into(),
+            Pacing::Sqrt => "sqrt".into(),
+            Pacing::Power(p) => format!("pow{p}"),
+            Pacing::Step(n) => format!("step{n}"),
+        }
+    }
+}
+
+/// Start/end difficulty, value- or percentile-based to match the metric.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Bound {
+    Value(f64),
+    /// 0.0 ..= 1.0
+    Percentile(f64),
+}
+
+/// One curriculum-learning schedule (one metric). Composed metrics such as
+/// `seqtru_voc` are expressed as two `ClConfig`s on the same run (§3.1:
+/// "we first reorder the training data based on voc, then apply seqtru as
+/// post-processing").
+#[derive(Clone, Debug)]
+pub struct ClConfig {
+    pub metric: Metric,
+    pub pacing: Pacing,
+    pub d_start: Bound,
+    pub d_end: Bound,
+    /// T_c — steps until the schedule reaches `d_end`.
+    pub total_steps: u64,
+}
+
+impl ClConfig {
+    /// Paper defaults: linear pacing for value-based metrics, sqrt for
+    /// percentile-based ones (§3.1).
+    pub fn new(metric: Metric, d_start: Bound, d_end: Bound, total_steps: u64) -> Self {
+        let pacing = if metric.value_based() { Pacing::Linear } else { Pacing::Sqrt };
+        ClConfig { metric, pacing, d_start, d_end, total_steps }
+    }
+}
+
+/// random-LTD drop schedule (§3.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LtdSchedule {
+    /// Monotonic Sequence Length Growth: kept length grows linearly from
+    /// `r_start` to the full sequence over `total_steps`.
+    Mslg,
+    /// Constant kept length for the whole run (the Tab. 14 ablation).
+    Constant,
+}
+
+#[derive(Clone, Debug)]
+pub struct LtdConfig {
+    /// r_s — kept middle-layer sequence length at step 0.
+    pub r_start: usize,
+    /// T_r — steps until dropping stops (MSLG) / total drop steps (constant).
+    pub total_steps: u64,
+    pub schedule: LtdSchedule,
+    /// Keep the first and last layers at full sequence (§3.2; ablated).
+    pub exempt_first_last: bool,
+}
+
+impl LtdConfig {
+    pub fn mslg(r_start: usize, total_steps: u64) -> Self {
+        LtdConfig { r_start, total_steps, schedule: LtdSchedule::Mslg, exempt_first_last: true }
+    }
+
+    pub fn constant(r_keep: usize, total_steps: u64) -> Self {
+        LtdConfig {
+            r_start: r_keep,
+            total_steps,
+            schedule: LtdSchedule::Constant,
+            exempt_first_last: true,
+        }
+    }
+}
+
+/// TokenBypass baseline configuration (Hou et al. 2022, §A.5): one kept
+/// set bypasses the whole middle block; token selection is importance-
+/// score-based (frequency + cumulative loss) with a special-token
+/// whitelist.
+#[derive(Clone, Debug)]
+pub struct BypassConfig {
+    pub r_start: usize,
+    pub total_steps: u64,
+    /// TokenBypass is constant-schedule in the original; the paper also
+    /// evaluates it with MSLG applied (Tab. 15).
+    pub schedule: LtdSchedule,
+    /// Never drop special tokens (ids below `n_special`).
+    pub n_special: u32,
+}
+
+/// Token-routing technique for a run.
+#[derive(Clone, Debug)]
+pub enum Routing {
+    None,
+    RandomLtd(LtdConfig),
+    TokenBypass(BypassConfig),
+}
+
+impl Routing {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Routing::None => "none",
+            Routing::RandomLtd(_) => "random_ltd",
+            Routing::TokenBypass(_) => "token_bypass",
+        }
+    }
+}
+
+/// LR decay basis — the §3.3 contribution: decay on *consumed tokens*, not
+/// steps, so CL/LTD token reductions don't accelerate the decay.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrBasis {
+    Tokens,
+    Steps,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LrDecay {
+    Linear,
+    Cosine,
+}
+
+#[derive(Clone, Debug)]
+pub struct LrConfig {
+    pub peak: f64,
+    pub min: f64,
+    /// Warmup duration in the basis unit (tokens or steps).
+    pub warmup: f64,
+    /// Decay duration in the basis unit; the paper sets this equal to the
+    /// total training budget (§A.1 point 5).
+    pub decay_total: f64,
+    pub basis: LrBasis,
+    pub decay: LrDecay,
+}
+
+impl LrConfig {
+    pub fn token_linear(peak: f64, warmup_tokens: f64, total_tokens: f64) -> Self {
+        LrConfig {
+            peak,
+            min: peak * 1e-3,
+            warmup: warmup_tokens,
+            decay_total: total_tokens,
+            basis: LrBasis::Tokens,
+            decay: LrDecay::Linear,
+        }
+    }
+}
+
+/// A full training run description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Model family: gpt | bert | vit | moe (must exist in the manifest).
+    pub family: String,
+    pub seed: u64,
+    /// Training budget in *steps* (token budget follows from accounting).
+    pub total_steps: u64,
+    /// Curriculum schedules (empty = uniform baseline sampling).
+    pub curriculum: Vec<ClConfig>,
+    pub routing: Routing,
+    pub lr: LrConfig,
+    /// Evaluate every `eval_every` steps (0 = only at the end).
+    pub eval_every: u64,
+    /// Number of held-out batches per evaluation.
+    pub eval_batches: usize,
+    /// Human-readable case label for tables/logs.
+    pub label: String,
+}
+
+impl RunConfig {
+    pub fn baseline(family: &str, total_steps: u64, peak_lr: f64) -> Self {
+        RunConfig {
+            family: family.to_string(),
+            seed: 1234,
+            total_steps,
+            curriculum: Vec::new(),
+            routing: Routing::None,
+            lr: LrConfig::token_linear(peak_lr, 0.0, 0.0),
+            eval_every: 0,
+            eval_batches: 8,
+            label: "baseline".to_string(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.total_steps == 0 {
+            bail!("total_steps must be > 0");
+        }
+        if self.lr.peak <= 0.0 {
+            bail!("peak lr must be > 0");
+        }
+        for cl in &self.curriculum {
+            if cl.total_steps == 0 {
+                bail!("curriculum total_steps must be > 0");
+            }
+            match (cl.d_start, cl.d_end) {
+                (Bound::Value(a), Bound::Value(b)) if a > b => {
+                    bail!("curriculum d_start > d_end")
+                }
+                (Bound::Percentile(a), Bound::Percentile(b)) => {
+                    if !(0.0..=1.0).contains(&a) || !(0.0..=1.0).contains(&b) || a > b {
+                        bail!("bad percentile bounds")
+                    }
+                }
+                (Bound::Value(_), Bound::Value(_)) => {}
+                _ => bail!("d_start/d_end must be the same Bound kind"),
+            }
+            if cl.metric.value_based() != matches!(cl.d_start, Bound::Value(_)) {
+                bail!(
+                    "metric {} requires {} bounds",
+                    cl.metric.name(),
+                    if cl.metric.value_based() { "value" } else { "percentile" }
+                );
+            }
+        }
+        if let Routing::RandomLtd(l) = &self.routing {
+            if l.r_start == 0 {
+                bail!("ltd r_start must be > 0");
+            }
+        }
+        Ok(())
+    }
+
+    /// Case label like `CL_seqtru_voc+random-LTD` matching the paper's rows.
+    pub fn case_name(&self) -> String {
+        let mut parts = Vec::new();
+        if !self.curriculum.is_empty() {
+            let metrics: Vec<&str> =
+                self.curriculum.iter().map(|c| c.metric.name()).collect();
+            parts.push(format!("CL_{}", metrics.join("_")));
+        }
+        match &self.routing {
+            Routing::RandomLtd(_) => parts.push("random-LTD".to_string()),
+            Routing::TokenBypass(_) => parts.push("TokenBypass".to_string()),
+            Routing::None => {}
+        }
+        if parts.is_empty() {
+            "baseline".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+
+    /// Serialize to JSON for the run log.
+    pub fn to_json(&self) -> Json {
+        let cl: Vec<Json> = self
+            .curriculum
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("metric", c.metric.name().into()),
+                    ("pacing", c.pacing.name().into()),
+                    (
+                        "d_start",
+                        match c.d_start {
+                            Bound::Value(v) => Json::obj(vec![("value", v.into())]),
+                            Bound::Percentile(p) => Json::obj(vec![("pct", p.into())]),
+                        },
+                    ),
+                    (
+                        "d_end",
+                        match c.d_end {
+                            Bound::Value(v) => Json::obj(vec![("value", v.into())]),
+                            Bound::Percentile(p) => Json::obj(vec![("pct", p.into())]),
+                        },
+                    ),
+                    ("total_steps", (c.total_steps as usize).into()),
+                ])
+            })
+            .collect();
+        let routing = match &self.routing {
+            Routing::None => Json::obj(vec![("kind", "none".into())]),
+            Routing::RandomLtd(l) => Json::obj(vec![
+                ("kind", "random_ltd".into()),
+                ("r_start", l.r_start.into()),
+                ("total_steps", (l.total_steps as usize).into()),
+                (
+                    "schedule",
+                    match l.schedule {
+                        LtdSchedule::Mslg => "mslg".into(),
+                        LtdSchedule::Constant => "constant".into(),
+                    },
+                ),
+                ("exempt_first_last", l.exempt_first_last.into()),
+            ]),
+            Routing::TokenBypass(b) => Json::obj(vec![
+                ("kind", "token_bypass".into()),
+                ("r_start", b.r_start.into()),
+                ("total_steps", (b.total_steps as usize).into()),
+                (
+                    "schedule",
+                    match b.schedule {
+                        LtdSchedule::Mslg => "mslg".into(),
+                        LtdSchedule::Constant => "constant".into(),
+                    },
+                ),
+                ("n_special", (b.n_special as usize).into()),
+            ]),
+        };
+        Json::obj(vec![
+            ("family", self.family.as_str().into()),
+            ("label", self.label.as_str().into()),
+            ("case", self.case_name().into()),
+            ("seed", (self.seed as usize).into()),
+            ("total_steps", (self.total_steps as usize).into()),
+            ("curriculum", Json::Arr(cl)),
+            ("routing", routing),
+            (
+                "lr",
+                Json::obj(vec![
+                    ("peak", self.lr.peak.into()),
+                    ("min", self.lr.min.into()),
+                    ("warmup", self.lr.warmup.into()),
+                    ("decay_total", self.lr.decay_total.into()),
+                    (
+                        "basis",
+                        match self.lr.basis {
+                            LrBasis::Tokens => "tokens".into(),
+                            LrBasis::Steps => "steps".into(),
+                        },
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Parse a `RunConfig` from JSON (used by `dsde train --config`).
+pub fn run_config_from_json(v: &Json, default_family: &str) -> Result<RunConfig> {
+    let family = v
+        .get("family")
+        .as_str()
+        .unwrap_or(default_family)
+        .to_string();
+    let total_steps = v
+        .get("total_steps")
+        .as_usize()
+        .ok_or_else(|| anyhow!("total_steps required"))? as u64;
+    let mut cfg = RunConfig::baseline(&family, total_steps, 1e-3);
+    if let Some(seed) = v.get("seed").as_usize() {
+        cfg.seed = seed as u64;
+    }
+    if let Some(label) = v.get("label").as_str() {
+        cfg.label = label.to_string();
+    }
+    if let Some(arr) = v.get("curriculum").as_arr() {
+        for c in arr {
+            let metric = Metric::from_name(
+                c.get("metric").as_str().ok_or_else(|| anyhow!("cl metric required"))?,
+            )?;
+            let bound = |b: &Json| -> Result<Bound> {
+                if let Some(x) = b.get("value").as_f64() {
+                    Ok(Bound::Value(x))
+                } else if let Some(p) = b.get("pct").as_f64() {
+                    Ok(Bound::Percentile(p))
+                } else {
+                    bail!("bound needs 'value' or 'pct'")
+                }
+            };
+            let steps = c
+                .get("total_steps")
+                .as_usize()
+                .ok_or_else(|| anyhow!("cl total_steps required"))? as u64;
+            cfg.curriculum.push(ClConfig::new(
+                metric,
+                bound(c.get("d_start"))?,
+                bound(c.get("d_end"))?,
+                steps,
+            ));
+        }
+    }
+    let routing = v.get("routing");
+    match routing.get("kind").as_str() {
+        None | Some("none") => {}
+        Some("random_ltd") => {
+            let r = routing.get("r_start").as_usize().unwrap_or(16);
+            let ts = routing.get("total_steps").as_usize().unwrap_or(0) as u64;
+            let mut l = LtdConfig::mslg(r, ts);
+            if routing.get("schedule").as_str() == Some("constant") {
+                l.schedule = LtdSchedule::Constant;
+            }
+            if let Some(b) = routing.get("exempt_first_last").as_bool() {
+                l.exempt_first_last = b;
+            }
+            cfg.routing = Routing::RandomLtd(l);
+        }
+        Some("token_bypass") => {
+            let r = routing.get("r_start").as_usize().unwrap_or(16);
+            let ts = routing.get("total_steps").as_usize().unwrap_or(0) as u64;
+            cfg.routing = Routing::TokenBypass(BypassConfig {
+                r_start: r,
+                total_steps: ts,
+                schedule: if routing.get("schedule").as_str() == Some("mslg") {
+                    LtdSchedule::Mslg
+                } else {
+                    LtdSchedule::Constant
+                },
+                n_special: routing.get("n_special").as_usize().unwrap_or(4) as u32,
+            });
+        }
+        Some(k) => bail!("unknown routing kind '{k}'"),
+    }
+    let lr = v.get("lr");
+    if let Some(p) = lr.get("peak").as_f64() {
+        cfg.lr.peak = p;
+        cfg.lr.min = lr.get("min").as_f64().unwrap_or(p * 1e-3);
+        cfg.lr.warmup = lr.get("warmup").as_f64().unwrap_or(0.0);
+        cfg.lr.decay_total = lr.get("decay_total").as_f64().unwrap_or(0.0);
+        if lr.get("basis").as_str() == Some("steps") {
+            cfg.lr.basis = LrBasis::Steps;
+        }
+    }
+    if let Some(e) = v.get("eval_every").as_usize() {
+        cfg.eval_every = e as u64;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn metric_names_roundtrip() {
+        for m in [Metric::SeqTru, Metric::SeqRes, Metric::SeqReo, Metric::Voc] {
+            assert_eq!(Metric::from_name(m.name()).unwrap(), m);
+        }
+        assert!(Metric::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn case_names_match_paper_rows() {
+        let mut c = RunConfig::baseline("gpt", 100, 1e-3);
+        assert_eq!(c.case_name(), "baseline");
+        c.curriculum.push(ClConfig::new(
+            Metric::SeqTru,
+            Bound::Value(8.0),
+            Bound::Value(64.0),
+            40,
+        ));
+        c.curriculum.push(ClConfig::new(
+            Metric::Voc,
+            Bound::Percentile(0.01),
+            Bound::Percentile(1.0),
+            40,
+        ));
+        assert_eq!(c.case_name(), "CL_seqtru_voc");
+        c.routing = Routing::RandomLtd(LtdConfig::mslg(16, 70));
+        assert_eq!(c.case_name(), "CL_seqtru_voc+random-LTD");
+    }
+
+    #[test]
+    fn validate_rejects_bad_bounds() {
+        let mut c = RunConfig::baseline("gpt", 100, 1e-3);
+        c.curriculum.push(ClConfig::new(
+            Metric::Voc,
+            Bound::Percentile(0.9),
+            Bound::Percentile(0.1),
+            40,
+        ));
+        assert!(c.validate().is_err());
+        c.curriculum.clear();
+        c.curriculum.push(ClConfig::new(
+            Metric::SeqTru,
+            Bound::Percentile(0.1),
+            Bound::Percentile(1.0),
+            40,
+        ));
+        assert!(c.validate().is_err(), "seqtru must use value bounds");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_case() {
+        let mut c = RunConfig::baseline("bert", 200, 5e-4);
+        c.curriculum.push(ClConfig::new(
+            Metric::SeqTru,
+            Bound::Value(16.0),
+            Bound::Value(64.0),
+            100,
+        ));
+        c.routing = Routing::RandomLtd(LtdConfig::mslg(16, 200));
+        let j = c.to_json();
+        let c2 = run_config_from_json(&j, "gpt").unwrap();
+        assert_eq!(c2.family, "bert");
+        assert_eq!(c2.case_name(), c.case_name());
+        assert_eq!(c2.total_steps, 200);
+        assert_eq!(c2.curriculum.len(), 1);
+        assert!(matches!(c2.routing, Routing::RandomLtd(_)));
+    }
+}

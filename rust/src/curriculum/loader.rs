@@ -1,0 +1,326 @@
+//! Curriculum batch loaders: turn (sampler, CL state) into model-ready
+//! batches, applying the paper's batch-time length transforms.
+//!
+//! * seqtru  — truncate each sampled sequence to the scheduled length
+//!             (fewer tokens per batch, same number of samples, §3.1);
+//! * seqres  — reshape sampled sequences into more, shorter rows (same
+//!             tokens per batch, MosaicML Composer variant, §3.1);
+//! * seqreo/voc — no transform; the ordering constraint is enforced by the
+//!             `PoolSampler` prefix.
+//!
+//! BERT batches additionally get MLM masking (15%: 80% `[MASK]`, 10%
+//! random, 10% keep) and a padding mask derived from effective lengths.
+
+use crate::curriculum::sampler::Sampler;
+use crate::curriculum::scheduler::{ClState, SeqTransform};
+use crate::data::dataset::{BertDataset, GptDataset, VitDataset};
+use crate::data::tokenizer::{CLS, MASK, N_SPECIAL, SEP};
+use crate::Pcg32;
+use std::sync::Arc;
+
+/// A language-model batch (GPT / BERT / MoE families).
+#[derive(Clone, Debug, Default)]
+pub struct LmBatch {
+    pub rows: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+    /// BERT only.
+    pub pad_mask: Option<Vec<f32>>,
+    /// Data tokens consumed by this batch (CL accounting input).
+    pub data_tokens: u64,
+}
+
+/// A ViT batch.
+#[derive(Clone, Debug, Default)]
+pub struct VitBatch {
+    pub rows: usize,
+    pub patches: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub data_tokens: u64,
+}
+
+/// GPT/MoE loader over the packed stream.
+pub struct GptLoader {
+    ds: Arc<GptDataset>,
+    sampler: Box<dyn Sampler>,
+    batch: usize,
+}
+
+impl GptLoader {
+    pub fn new(ds: Arc<GptDataset>, sampler: Box<dyn Sampler>, batch: usize) -> GptLoader {
+        GptLoader { ds, sampler, batch }
+    }
+
+    /// Assemble the next batch at the (bucketed) sequence length `seq`.
+    /// `state` carries the transform kind and the pool prefix fraction.
+    pub fn next_batch(&mut self, seq: usize, state: &ClState) -> LmBatch {
+        let b = self.batch;
+        let n = self.sampler.n_samples();
+        let prefix = pool_prefix(n, state.pool_pct);
+        let mut out = LmBatch {
+            rows: b,
+            seq,
+            tokens: Vec::with_capacity(b * seq),
+            targets: Vec::with_capacity(b * seq),
+            loss_mask: vec![1.0; b * seq],
+            pad_mask: None,
+            data_tokens: (b * seq) as u64,
+        };
+        match state.transform {
+            SeqTransform::Reshape => {
+                // seqres: fill `b` rows of length `seq` from consecutive
+                // segments; consumes b*seq tokens = b*seq/max_seq samples.
+                let segs = (self.ds.max_seq / seq).max(1);
+                let mut row = 0;
+                'outer: loop {
+                    let id = self.sampler.next(prefix) as usize;
+                    for j in 0..segs {
+                        if row >= b {
+                            break 'outer;
+                        }
+                        // last token of the last segment needs lookahead;
+                        // segment j target slice handles it via stream +1.
+                        extend_i32(&mut out.tokens, self.ds.segment_tokens(id, j, seq));
+                        extend_i32(&mut out.targets, self.ds.segment_targets(id, j, seq));
+                        row += 1;
+                    }
+                }
+            }
+            _ => {
+                // plain or seqtru: prefix of each sample.
+                for _ in 0..b {
+                    let id = self.sampler.next(prefix) as usize;
+                    extend_i32(&mut out.tokens, self.ds.tokens(id, seq));
+                    extend_i32(&mut out.targets, self.ds.targets(id, seq));
+                }
+            }
+        }
+        debug_assert_eq!(out.tokens.len(), b * seq);
+        out
+    }
+}
+
+/// BERT loader with MLM masking.
+pub struct BertLoader {
+    ds: Arc<BertDataset>,
+    sampler: Box<dyn Sampler>,
+    batch: usize,
+    rng: Pcg32,
+    vocab: u32,
+    mask_prob: f32,
+}
+
+impl BertLoader {
+    pub fn new(
+        ds: Arc<BertDataset>,
+        sampler: Box<dyn Sampler>,
+        batch: usize,
+        vocab: u32,
+        seed: u64,
+    ) -> BertLoader {
+        BertLoader {
+            ds,
+            sampler,
+            batch,
+            rng: Pcg32::new(seed, 0xb327),
+            vocab,
+            mask_prob: 0.15,
+        }
+    }
+
+    pub fn next_batch(&mut self, seq: usize, state: &ClState) -> LmBatch {
+        let b = self.batch;
+        let n = self.sampler.n_samples();
+        let prefix = pool_prefix(n, state.pool_pct);
+        let mut out = LmBatch {
+            rows: b,
+            seq,
+            tokens: Vec::with_capacity(b * seq),
+            targets: Vec::with_capacity(b * seq),
+            loss_mask: vec![0.0; b * seq],
+            pad_mask: Some(vec![0.0; b * seq]),
+            data_tokens: (b * seq) as u64,
+        };
+        for r in 0..b {
+            let id = self.sampler.next(prefix) as usize;
+            let sample = self.ds.tokens(id);
+            let eff = (self.ds.eff_len[id] as usize).min(seq);
+            let row0 = r * seq;
+            let pad = out.pad_mask.as_mut().unwrap();
+            let mut n_masked = 0;
+            for (j, &t) in sample[..seq].iter().enumerate() {
+                let mut input = t as i32;
+                let target = t as i32;
+                if j < eff {
+                    pad[row0 + j] = 1.0;
+                    let maskable = t != CLS && t != SEP;
+                    if maskable && self.rng.next_f32() < self.mask_prob {
+                        out.loss_mask[row0 + j] = 1.0;
+                        n_masked += 1;
+                        let roll = self.rng.next_f32();
+                        if roll < 0.8 {
+                            input = MASK as i32;
+                        } else if roll < 0.9 {
+                            input =
+                                (N_SPECIAL + self.rng.gen_range(self.vocab - N_SPECIAL)) as i32;
+                        } // else keep original
+                    }
+                }
+                out.tokens.push(input);
+                out.targets.push(target);
+            }
+            // guarantee at least one prediction target per row
+            if n_masked == 0 && eff > 2 {
+                let j = 1 + self.rng.gen_range(eff as u32 - 2) as usize;
+                out.loss_mask[row0 + j] = 1.0;
+                out.tokens[row0 + j] = MASK as i32;
+            }
+        }
+        out
+    }
+}
+
+/// ViT loader (no curriculum in the paper's ViT experiments; random-LTD
+/// only). Samples are synthesized deterministically from a cursor.
+pub struct VitLoader {
+    ds: Arc<VitDataset>,
+    cursor: u64,
+    batch: usize,
+}
+
+impl VitLoader {
+    pub fn new(ds: Arc<VitDataset>, batch: usize, start: u64) -> VitLoader {
+        VitLoader { ds, cursor: start, batch }
+    }
+
+    pub fn next_batch(&mut self) -> VitBatch {
+        let b = self.batch;
+        let pd = self.ds.n_patches * self.ds.patch_dim;
+        let mut out = VitBatch {
+            rows: b,
+            patches: vec![0.0; b * pd],
+            labels: Vec::with_capacity(b),
+            data_tokens: (b * (self.ds.n_patches + 1)) as u64,
+        };
+        for r in 0..b {
+            let label = self
+                .ds
+                .sample(self.cursor, &mut out.patches[r * pd..(r + 1) * pd]);
+            out.labels.push(label as i32);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+fn pool_prefix(n: usize, pct: f64) -> usize {
+    ((pct * n as f64).ceil() as usize).clamp(1, n.max(1))
+}
+
+fn extend_i32(dst: &mut Vec<i32>, src: &[u32]) {
+    dst.extend(src.iter().map(|&x| x as i32));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curriculum::sampler::UniformSampler;
+    use crate::curriculum::scheduler::{ClState, SeqTransform};
+    use crate::data::corpus::{Corpus, CorpusConfig};
+    use crate::data::tokenizer::{Tokenizer, PAD};
+
+    fn gpt_setup() -> (Arc<GptDataset>, Tokenizer) {
+        let c = Corpus::generate(CorpusConfig { n_docs: 200, seed: 4, ..Default::default() });
+        let t = Tokenizer::from_corpus(&c);
+        (Arc::new(GptDataset::build(&c, &t, 64)), t)
+    }
+
+    fn st(transform: SeqTransform, seq: usize) -> ClState {
+        ClState { seq, transform, pool_pct: 1.0 }
+    }
+
+    #[test]
+    fn gpt_plain_batch_shapes() {
+        let (ds, _) = gpt_setup();
+        let n = ds.n_samples();
+        let mut l = GptLoader::new(ds, Box::new(UniformSampler::new(n, 1)), 8);
+        let b = l.next_batch(64, &st(SeqTransform::None, 64));
+        assert_eq!(b.tokens.len(), 8 * 64);
+        assert_eq!(b.targets.len(), 8 * 64);
+        assert_eq!(b.data_tokens, 512);
+        assert!(b.loss_mask.iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn gpt_truncate_batch() {
+        let (ds, _) = gpt_setup();
+        let n = ds.n_samples();
+        let mut l = GptLoader::new(ds, Box::new(UniformSampler::new(n, 1)), 8);
+        let b = l.next_batch(16, &st(SeqTransform::Truncate, 16));
+        assert_eq!(b.tokens.len(), 8 * 16);
+        assert_eq!(b.data_tokens, 128);
+    }
+
+    #[test]
+    fn gpt_reshape_targets_shifted() {
+        let (ds, _) = gpt_setup();
+        let n = ds.n_samples();
+        let mut l = GptLoader::new(ds.clone(), Box::new(UniformSampler::new(n, 1)), 8);
+        let b = l.next_batch(16, &st(SeqTransform::Reshape, 16));
+        assert_eq!(b.tokens.len(), 8 * 16);
+        // row r targets = row r tokens shifted by one within the stream:
+        // verify target[j] == token[j+1] within each row
+        for r in 0..8 {
+            for j in 0..15 {
+                assert_eq!(b.targets[r * 16 + j], b.tokens[r * 16 + j + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn bert_mlm_masking_invariants() {
+        let c = Corpus::generate(CorpusConfig { n_docs: 200, seed: 4, ..Default::default() });
+        let t = Tokenizer::from_corpus(&c);
+        let ds = Arc::new(BertDataset::build(&c, &t, 64));
+        let n = ds.n_samples();
+        let mut l = BertLoader::new(ds.clone(), Box::new(UniformSampler::new(n, 1)), 8, t.vocab_size, 7);
+        let b = l.next_batch(64, &st(SeqTransform::None, 64));
+        let pad = b.pad_mask.as_ref().unwrap();
+        for r in 0..8 {
+            let row = r * 64;
+            let mut any_loss = false;
+            for j in 0..64 {
+                let lm = b.loss_mask[row + j];
+                any_loss |= lm > 0.0;
+                if lm > 0.0 {
+                    assert!(pad[row + j] > 0.0, "loss on padding");
+                    // target must be the original token, not MASK
+                    assert_ne!(b.targets[row + j], MASK as i32);
+                }
+                if pad[row + j] == 0.0 {
+                    assert_eq!(b.tokens[row + j], PAD as i32);
+                }
+            }
+            assert!(any_loss, "row {r} has no MLM targets");
+        }
+        // overall masking rate near 15% of valid positions
+        let valid: f32 = pad.iter().sum();
+        let masked: f32 = b.loss_mask.iter().sum();
+        let rate = masked / valid;
+        assert!((0.05..0.3).contains(&rate), "mask rate {rate}");
+    }
+
+    #[test]
+    fn vit_batch_shapes() {
+        let ds = Arc::new(VitDataset::new(16, 48, 10, 0.3, 2));
+        let mut l = VitLoader::new(ds, 8, 0);
+        let b1 = l.next_batch();
+        let b2 = l.next_batch();
+        assert_eq!(b1.patches.len(), 8 * 16 * 48);
+        assert_eq!(b1.labels.len(), 8);
+        assert_ne!(b1.patches, b2.patches, "cursor advances");
+        assert!(b1.labels.iter().all(|&l| (0..10).contains(&l)));
+    }
+}

@@ -1,0 +1,12 @@
+//! The general curriculum-learning library (§3.1): pacing functions, the
+//! difficulty scheduler, the difficulty-bounded sampler and the batch
+//! loaders implementing the paper's length transforms.
+
+pub mod loader;
+pub mod pacing;
+pub mod sampler;
+pub mod scheduler;
+
+pub use loader::{BertLoader, GptLoader, LmBatch, VitBatch, VitLoader};
+pub use sampler::{PoolSampler, Sampler, UniformSampler};
+pub use scheduler::{ClScheduler, ClState, SeqTransform};

@@ -1,0 +1,78 @@
+//! Pacing functions (§3.1): map training progress t/T to the current
+//! difficulty threshold d_t in [d_s, d_e].
+//!
+//! The paper uses linear pacing for value-based metrics (seqtru/seqres) and
+//! sqrt for percentile-based ones (seqreo/voc) — sqrt "avoids sampling too
+//! much easy data at the beginning" when the pool is a subset. Users can
+//! plug any exponent via `Pacing::Power` or a staircase via `Pacing::Step`.
+
+use crate::config::schema::Pacing;
+
+/// d_t = d_s + (d_e - d_s) * g(min(t/T, 1)) with g per the pacing kind.
+pub fn pace(pacing: Pacing, d_start: f64, d_end: f64, step: u64, total: u64) -> f64 {
+    let frac = if total == 0 {
+        1.0
+    } else {
+        (step as f64 / total as f64).min(1.0)
+    };
+    let g = match pacing {
+        Pacing::Linear => frac,
+        Pacing::Sqrt => frac.sqrt(),
+        Pacing::Power(p) => frac.powf(p),
+        Pacing::Step(n) => {
+            let n = n.max(1) as f64;
+            // staircase: jump at each 1/n boundary, reach 1.0 at the end
+            (frac * n).ceil() / n
+        }
+    };
+    d_start + (d_end - d_start) * g.clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoints() {
+        for p in [Pacing::Linear, Pacing::Sqrt, Pacing::Power(2.0), Pacing::Step(4)] {
+            assert_eq!(pace(p, 10.0, 100.0, 0, 100), if matches!(p, Pacing::Step(_)) { 10.0 } else { 10.0 });
+            assert_eq!(pace(p, 10.0, 100.0, 100, 100), 100.0);
+            assert_eq!(pace(p, 10.0, 100.0, 500, 100), 100.0, "clamped past T");
+        }
+    }
+
+    #[test]
+    fn sqrt_leads_linear() {
+        // sqrt pacing must be ahead of linear mid-training
+        let lin = pace(Pacing::Linear, 0.0, 1.0, 25, 100);
+        let sq = pace(Pacing::Sqrt, 0.0, 1.0, 25, 100);
+        assert!(sq > lin);
+        assert!((sq - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        for p in [Pacing::Linear, Pacing::Sqrt, Pacing::Power(0.3), Pacing::Step(5)] {
+            let mut prev = f64::MIN;
+            for t in 0..=120 {
+                let d = pace(p, 5.0, 50.0, t, 100);
+                assert!(d >= prev - 1e-12, "{p:?} at {t}");
+                prev = d;
+            }
+        }
+    }
+
+    #[test]
+    fn zero_total_means_end_difficulty() {
+        assert_eq!(pace(Pacing::Linear, 1.0, 9.0, 0, 0), 9.0);
+    }
+
+    #[test]
+    fn step_pacing_is_staircase() {
+        let vals: Vec<f64> = (0..=10).map(|t| pace(Pacing::Step(2), 0.0, 1.0, t, 10)).collect();
+        assert_eq!(vals[1], 0.5);
+        assert_eq!(vals[5], 0.5);
+        assert_eq!(vals[6], 1.0);
+        assert_eq!(vals[10], 1.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! Difficulty-bounded sample pool (§3.1: "the data sampler will sample the
+//! data with desired difficulty from the indexed data pool").
+//!
+//! [`PoolSampler`] draws without replacement (epoch-shuffled) from the
+//! easiest `prefix` samples of a [`DifficultyIndex`] order; the prefix
+//! grows as the curriculum progresses and the pool is lazily rebuilt.
+//! [`UniformSampler`] is the baseline (whole pool, epoch-shuffled).
+
+use crate::data::index::DifficultyIndex;
+use crate::Pcg32;
+use std::sync::Arc;
+
+/// Rebuild threshold: grow the active pool when the requested prefix
+/// exceeds the built one by this factor (avoids reshuffling every step
+/// while the pacing function creeps forward).
+const GROW_FACTOR: f64 = 1.05;
+
+pub trait Sampler: Send {
+    /// Draw one sample id from the easiest `prefix` samples
+    /// (`prefix == usize::MAX` / `>= n` means the whole pool).
+    fn next(&mut self, prefix: usize) -> u32;
+
+    fn n_samples(&self) -> usize;
+}
+
+/// Curriculum sampler over a difficulty index.
+pub struct PoolSampler {
+    index: Arc<DifficultyIndex>,
+    rng: Pcg32,
+    /// Shuffled copy of `order[..built_prefix]`.
+    pool: Vec<u32>,
+    pos: usize,
+    built_prefix: usize,
+}
+
+impl PoolSampler {
+    pub fn new(index: Arc<DifficultyIndex>, seed: u64) -> PoolSampler {
+        PoolSampler {
+            index,
+            rng: Pcg32::new(seed, 0x9a31e7),
+            pool: Vec::new(),
+            pos: 0,
+            built_prefix: 0,
+        }
+    }
+
+    fn rebuild(&mut self, prefix: usize) {
+        self.pool.clear();
+        self.pool.extend_from_slice(&self.index.order()[..prefix]);
+        self.rng.shuffle(&mut self.pool);
+        self.pos = 0;
+        self.built_prefix = prefix;
+    }
+}
+
+impl Sampler for PoolSampler {
+    fn next(&mut self, prefix: usize) -> u32 {
+        let n = self.index.len();
+        assert!(n > 0, "empty index");
+        let prefix = prefix.clamp(1, n);
+        let needs_grow = prefix > self.built_prefix
+            && (self.built_prefix == 0
+                || prefix as f64 / self.built_prefix as f64 >= GROW_FACTOR
+                || prefix == n);
+        let shrank = prefix < self.built_prefix;
+        if needs_grow || shrank || self.pos >= self.pool.len() {
+            self.rebuild(prefix);
+        }
+        let id = self.pool[self.pos];
+        self.pos += 1;
+        id
+    }
+
+    fn n_samples(&self) -> usize {
+        self.index.len()
+    }
+}
+
+/// Baseline uniform sampler (epoch shuffle over all ids).
+pub struct UniformSampler {
+    n: usize,
+    rng: Pcg32,
+    pool: Vec<u32>,
+    pos: usize,
+}
+
+impl UniformSampler {
+    pub fn new(n: usize, seed: u64) -> UniformSampler {
+        UniformSampler { n, rng: Pcg32::new(seed, 0x4a11), pool: Vec::new(), pos: 0 }
+    }
+}
+
+impl Sampler for UniformSampler {
+    fn next(&mut self, _prefix: usize) -> u32 {
+        assert!(self.n > 0);
+        if self.pos >= self.pool.len() {
+            if self.pool.is_empty() {
+                self.pool = (0..self.n as u32).collect();
+            }
+            self.rng.shuffle(&mut self.pool);
+            self.pos = 0;
+        }
+        let id = self.pool[self.pos];
+        self.pos += 1;
+        id
+    }
+
+    fn n_samples(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn index(n: usize) -> Arc<DifficultyIndex> {
+        // difficulty = sample id (so order == identity)
+        Arc::new(DifficultyIndex::from_values(
+            "t",
+            (0..n).map(|i| i as f32).collect(),
+        ))
+    }
+
+    #[test]
+    fn pool_respects_prefix() {
+        let mut s = PoolSampler::new(index(100), 1);
+        for _ in 0..200 {
+            assert!(s.next(10) < 10);
+        }
+    }
+
+    #[test]
+    fn pool_epoch_covers_prefix() {
+        let mut s = PoolSampler::new(index(50), 2);
+        let mut seen = vec![0usize; 50];
+        for _ in 0..20 {
+            seen[s.next(20) as usize] += 1;
+        }
+        // first epoch over prefix 20: every easy sample exactly once
+        assert!(seen[..20].iter().all(|&c| c == 1), "{seen:?}");
+        assert!(seen[20..].iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn pool_grows_with_curriculum() {
+        let mut s = PoolSampler::new(index(100), 3);
+        let _ = s.next(5);
+        let mut max_seen = 0;
+        for _ in 0..300 {
+            max_seen = max_seen.max(s.next(100));
+        }
+        assert!(max_seen > 90, "pool should cover whole range after growth");
+    }
+
+    #[test]
+    fn pool_small_growth_does_not_thrash() {
+        let mut s = PoolSampler::new(index(1000), 4);
+        let _ = s.next(500);
+        let built = s.built_prefix;
+        let _ = s.next(505); // +1% < GROW_FACTOR → no rebuild
+        assert_eq!(s.built_prefix, built);
+        let _ = s.next(600); // +20% → rebuild
+        assert_eq!(s.built_prefix, 600);
+    }
+
+    #[test]
+    fn uniform_epoch_is_permutation() {
+        let mut s = UniformSampler::new(30, 5);
+        let mut seen = vec![false; 30];
+        for _ in 0..30 {
+            let id = s.next(usize::MAX) as usize;
+            assert!(!seen[id]);
+            seen[id] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = PoolSampler::new(index(64), 9);
+        let mut b = PoolSampler::new(index(64), 9);
+        for _ in 0..100 {
+            assert_eq!(a.next(32), b.next(32));
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Curriculum scheduler: resolves the per-step difficulty state from the
+//! configured CL schedules (§3.1).
+//!
+//! A run composes at most one *value-based* schedule (seqtru or seqres —
+//! a batch transform on sequence length) and one *percentile-based*
+//! schedule (voc or seqreo — an ordering constraint on the sample pool),
+//! mirroring the paper's composed metrics (seqtru_voc etc.).
+
+use crate::config::schema::{Bound, ClConfig, Metric};
+use crate::curriculum::pacing::pace;
+
+/// How the loader must transform sampled sequences this step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqTransform {
+    /// No length transform (full sequence).
+    None,
+    /// seqtru: truncate each sample to the target length.
+    Truncate,
+    /// seqres: reshape samples into more, shorter rows.
+    Reshape,
+}
+
+/// Resolved curriculum state for one training step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClState {
+    /// Target sequence length (= family max when no length schedule).
+    pub seq: usize,
+    pub transform: SeqTransform,
+    /// Fraction of the difficulty-ordered pool available (1.0 = all).
+    pub pool_pct: f64,
+}
+
+pub struct ClScheduler {
+    length: Option<ClConfig>,
+    pool: Option<ClConfig>,
+    max_seq: usize,
+}
+
+impl ClScheduler {
+    /// `schedules` may hold 0, 1 or 2 entries; a length-metric and a
+    /// pool-metric may be combined (the paper's composed metrics).
+    pub fn new(schedules: &[ClConfig], max_seq: usize) -> crate::Result<ClScheduler> {
+        let mut length = None;
+        let mut pool = None;
+        for s in schedules {
+            if s.metric.value_based() {
+                if length.is_some() {
+                    anyhow::bail!("at most one value-based (length) CL metric per run");
+                }
+                length = Some(s.clone());
+            } else {
+                if pool.is_some() {
+                    anyhow::bail!("at most one percentile-based (pool) CL metric per run");
+                }
+                pool = Some(s.clone());
+            }
+        }
+        Ok(ClScheduler { length, pool, max_seq })
+    }
+
+    pub fn has_curriculum(&self) -> bool {
+        self.length.is_some() || self.pool.is_some()
+    }
+
+    /// Steps until every schedule reaches its end difficulty.
+    pub fn total_cl_steps(&self) -> u64 {
+        self.length
+            .as_ref()
+            .map(|c| c.total_steps)
+            .max(self.pool.as_ref().map(|c| c.total_steps))
+            .unwrap_or(0)
+    }
+
+    pub fn state_at(&self, step: u64) -> ClState {
+        let (seq, transform) = match &self.length {
+            None => (self.max_seq, SeqTransform::None),
+            Some(c) => {
+                let (ds, de) = match (c.d_start, c.d_end) {
+                    (Bound::Value(a), Bound::Value(b)) => (a, b),
+                    _ => unreachable!("validated: length metrics use value bounds"),
+                };
+                let d = pace(c.pacing, ds, de, step, c.total_steps);
+                let seq = (d.round() as usize).clamp(1, self.max_seq);
+                let tf = if c.metric == Metric::SeqRes {
+                    SeqTransform::Reshape
+                } else {
+                    SeqTransform::Truncate
+                };
+                (seq, tf)
+            }
+        };
+        let pool_pct = match &self.pool {
+            None => 1.0,
+            Some(c) => {
+                let (ds, de) = match (c.d_start, c.d_end) {
+                    (Bound::Percentile(a), Bound::Percentile(b)) => (a, b),
+                    _ => unreachable!("validated: pool metrics use percentile bounds"),
+                };
+                pace(c.pacing, ds, de, step, c.total_steps).clamp(0.0, 1.0)
+            }
+        };
+        ClState { seq, transform, pool_pct }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::{Bound, ClConfig, Metric};
+
+    fn seqtru(ts: u64) -> ClConfig {
+        ClConfig::new(Metric::SeqTru, Bound::Value(8.0), Bound::Value(64.0), ts)
+    }
+
+    fn voc(ts: u64) -> ClConfig {
+        ClConfig::new(Metric::Voc, Bound::Percentile(0.01), Bound::Percentile(1.0), ts)
+    }
+
+    #[test]
+    fn no_curriculum_is_identity() {
+        let s = ClScheduler::new(&[], 64).unwrap();
+        assert!(!s.has_curriculum());
+        let st = s.state_at(0);
+        assert_eq!(st, ClState { seq: 64, transform: SeqTransform::None, pool_pct: 1.0 });
+    }
+
+    #[test]
+    fn composed_schedules_progress() {
+        let s = ClScheduler::new(&[seqtru(100), voc(100)], 64).unwrap();
+        let s0 = s.state_at(0);
+        assert_eq!(s0.seq, 8);
+        assert_eq!(s0.transform, SeqTransform::Truncate);
+        assert!((s0.pool_pct - 0.01).abs() < 1e-9);
+        let s50 = s.state_at(50);
+        assert_eq!(s50.seq, 36); // linear midpoint of 8..64
+        assert!(s50.pool_pct > 0.5, "sqrt pacing ahead of linear");
+        let s200 = s.state_at(200);
+        assert_eq!(s200.seq, 64);
+        assert_eq!(s200.pool_pct, 1.0);
+    }
+
+    #[test]
+    fn seqres_selects_reshape() {
+        let c = ClConfig::new(Metric::SeqRes, Bound::Value(8.0), Bound::Value(64.0), 10);
+        let s = ClScheduler::new(&[c], 64).unwrap();
+        assert_eq!(s.state_at(0).transform, SeqTransform::Reshape);
+    }
+
+    #[test]
+    fn rejects_duplicate_kinds() {
+        assert!(ClScheduler::new(&[seqtru(10), seqtru(10)], 64).is_err());
+        assert!(ClScheduler::new(&[voc(10), voc(10)], 64).is_err());
+        assert!(ClScheduler::new(&[seqtru(10), voc(10)], 64).is_ok());
+    }
+
+    #[test]
+    fn total_cl_steps_is_max() {
+        let s = ClScheduler::new(&[seqtru(40), voc(70)], 64).unwrap();
+        assert_eq!(s.total_cl_steps(), 70);
+    }
+}

@@ -1,0 +1,272 @@
+//! Synthetic corpus generator — the stand-in for the Pile (DESIGN.md
+//! §Substitutions).
+//!
+//! The curriculum-learning machinery only consumes two per-sample signals:
+//! sequence length and unigram-frequency statistics. The generator gives
+//! both real structure:
+//!
+//! * **Zipfian vocabulary** — word frequencies follow a Zipf(s) law, so the
+//!   `voc` difficulty metric (-Σ log p(w)) has a wide, heavy-tailed range;
+//! * **topic mixture** — each document draws from one of `n_topics` skewed
+//!   re-rankings of the vocabulary, so rarity varies *between* documents
+//!   (not just within), which is what curriculum ordering needs;
+//! * **log-normal document lengths**, split into geometric sentences for
+//!   the BERT next-sentence-style pair construction.
+//!
+//! Deterministic from the seed, so every experiment is reproducible.
+
+use crate::Pcg32;
+
+/// A document: sentences of word symbols in `0..vocab_words`.
+#[derive(Clone, Debug)]
+pub struct Doc {
+    pub sentences: Vec<Vec<u32>>,
+    pub topic: u32,
+}
+
+impl Doc {
+    pub fn len(&self) -> usize {
+        self.sentences.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn words(&self) -> impl Iterator<Item = u32> + '_ {
+        self.sentences.iter().flatten().copied()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub n_docs: usize,
+    /// Number of distinct word symbols (excludes the tokenizer's specials).
+    pub vocab_words: u32,
+    pub n_topics: u32,
+    /// Zipf exponent (1.0 ≈ natural language).
+    pub zipf_s: f64,
+    /// Mean document length in words (log-normal).
+    pub mean_len: f64,
+    /// Document length bounds.
+    pub min_len: usize,
+    pub max_len: usize,
+    /// Mean sentence length in words (geometric).
+    pub mean_sentence: f64,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            n_docs: 4000,
+            vocab_words: 506, // 512-token families keep 6 ids for specials
+            n_topics: 8,
+            zipf_s: 1.05,
+            mean_len: 80.0,
+            min_len: 8,
+            max_len: 320,
+            mean_sentence: 12.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Corpus = generated documents + the exact unigram counts of what was
+/// generated (the analyzer's `voc` metric uses real counts, like the
+/// paper's offline pass over the Pile).
+pub struct Corpus {
+    pub config: CorpusConfig,
+    pub docs: Vec<Doc>,
+    /// Unigram counts per word symbol over the whole corpus.
+    pub word_counts: Vec<u64>,
+    pub total_words: u64,
+}
+
+impl Corpus {
+    pub fn generate(config: CorpusConfig) -> Corpus {
+        let mut rng = Pcg32::new(config.seed, 0x0c0_4b5);
+        // One Zipf table per topic with a topic-dependent exponent:
+        // high-exponent topics concentrate on the (globally common) head,
+        // low-exponent topics spread into the (globally rare) tail. This is
+        // what gives documents measurably different `voc` difficulty.
+        let t_max = (config.n_topics.max(2) - 1) as f64;
+        let tables: Vec<ZipfTable> = (0..config.n_topics)
+            .map(|t| {
+                let s = config.zipf_s * (1.35 - 0.85 * t as f64 / t_max);
+                ZipfTable::new(config.vocab_words as usize, s)
+            })
+            .collect();
+        let mut word_counts = vec![0u64; config.vocab_words as usize];
+        let mut docs = Vec::with_capacity(config.n_docs);
+        // Log-normal: ln L ~ N(mu, sigma); pick sigma=0.6, solve mu for mean.
+        let sigma = 0.6f64;
+        let mu = config.mean_len.ln() - sigma * sigma / 2.0;
+        for _ in 0..config.n_docs {
+            let topic = rng.gen_range(config.n_topics);
+            let len = (mu + sigma * rng.next_gaussian()).exp().round() as usize;
+            let len = len.clamp(config.min_len, config.max_len);
+            let mut remaining = len;
+            let mut sentences = Vec::new();
+            while remaining > 0 {
+                let sl = (1.0
+                    + rng.next_f64().ln() / (1.0 - 1.0 / config.mean_sentence).ln())
+                .floor() as usize;
+                let sl = sl.clamp(1, remaining);
+                let mut sent = Vec::with_capacity(sl);
+                for _ in 0..sl {
+                    let rank = tables[topic as usize].sample(&mut rng);
+                    let word = topic_word(rank, topic, config.vocab_words);
+                    word_counts[word as usize] += 1;
+                    sent.push(word);
+                }
+                remaining -= sl;
+                sentences.push(sent);
+            }
+            docs.push(Doc { sentences, topic });
+        }
+        let total_words = word_counts.iter().sum();
+        Corpus { config, docs, word_counts, total_words }
+    }
+
+    /// -log p(word) with add-one smoothing; the analyzer's `voc` metric
+    /// sums this over a sample.
+    pub fn neg_log_prob(&self, word: u32) -> f64 {
+        let c = self.word_counts[word as usize] as f64 + 1.0;
+        let n = self.total_words as f64 + self.word_counts.len() as f64;
+        -(c / n).ln()
+    }
+}
+
+/// Map a Zipf rank to a word symbol with a small topic-dependent rotation,
+/// so topics also differ in *which* head words they favor (not only in how
+/// tail-heavy they are).
+fn topic_word(rank: usize, topic: u32, vocab: u32) -> u32 {
+    ((rank as u64 + 7 * topic as u64) % vocab as u64) as u32
+}
+
+/// Inverse-CDF sampling table for Zipf(s) over `n` ranks.
+pub struct ZipfTable {
+    cdf: Vec<f64>,
+}
+
+impl ZipfTable {
+    pub fn new(n: usize, s: f64) -> ZipfTable {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let norm = acc;
+        for c in cdf.iter_mut() {
+            *c /= norm;
+        }
+        ZipfTable { cdf }
+    }
+
+    /// Sample a rank in [0, n).
+    pub fn sample(&self, rng: &mut Pcg32) -> usize {
+        let u = rng.next_f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Corpus {
+        Corpus::generate(CorpusConfig {
+            n_docs: 300,
+            seed: 42,
+            ..CorpusConfig::default()
+        })
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = small();
+        let b = small();
+        assert_eq!(a.docs.len(), b.docs.len());
+        for (x, y) in a.docs.iter().zip(&b.docs) {
+            assert_eq!(x.sentences, y.sentences);
+        }
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        let c = small();
+        for d in &c.docs {
+            let l = d.len();
+            assert!((c.config.min_len..=c.config.max_len).contains(&l), "{l}");
+            assert!(!d.sentences.iter().any(|s| s.is_empty()));
+        }
+    }
+
+    #[test]
+    fn zipf_head_heavier_than_tail() {
+        let c = Corpus::generate(CorpusConfig {
+            n_docs: 1000,
+            n_topics: 1,
+            seed: 1,
+            ..CorpusConfig::default()
+        });
+        let head: u64 = c.word_counts.iter().take(20).sum();
+        let tail: u64 = c.word_counts.iter().rev().take(20).sum();
+        assert!(head > tail * 5, "head={head} tail={tail}");
+    }
+
+    #[test]
+    fn word_counts_match_docs() {
+        let c = small();
+        let mut counts = vec![0u64; c.config.vocab_words as usize];
+        for d in &c.docs {
+            for w in d.words() {
+                counts[w as usize] += 1;
+            }
+        }
+        assert_eq!(counts, c.word_counts);
+        assert_eq!(counts.iter().sum::<u64>(), c.total_words);
+    }
+
+    #[test]
+    fn topics_have_different_rarity_profiles() {
+        let c = Corpus::generate(CorpusConfig {
+            n_docs: 2000,
+            seed: 7,
+            ..CorpusConfig::default()
+        });
+        // mean doc rarity per topic should differ measurably across topics;
+        // this is the signal the voc curriculum orders by.
+        let mut by_topic: Vec<(f64, usize)> = vec![(0.0, 0); c.config.n_topics as usize];
+        for d in &c.docs {
+            let r: f64 = d.words().map(|w| c.neg_log_prob(w)).sum::<f64>() / d.len() as f64;
+            let e = &mut by_topic[d.topic as usize];
+            e.0 += r;
+            e.1 += 1;
+        }
+        let means: Vec<f64> = by_topic
+            .iter()
+            .filter(|(_, n)| *n > 0)
+            .map(|(s, n)| s / *n as f64)
+            .collect();
+        let min = means.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = means.iter().cloned().fold(0.0, f64::max);
+        assert!(max - min > 0.3, "topic rarity spread too small: {means:?}");
+    }
+
+    #[test]
+    fn zipf_table_sane() {
+        let z = ZipfTable::new(100, 1.0);
+        let mut rng = Pcg32::seeded(5);
+        let mut c0 = 0;
+        for _ in 0..2000 {
+            if z.sample(&mut rng) == 0 {
+                c0 += 1;
+            }
+        }
+        // P(rank 0) = 1/H_100 ≈ 0.192
+        assert!((200..600).contains(&c0), "{c0}");
+    }
+}

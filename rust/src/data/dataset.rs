@@ -1,0 +1,258 @@
+//! Tokenized training datasets, one per model family.
+//!
+//! * [`GptDataset`] — documents packed (with BOS separators) into one token
+//!   stream, sliced into fixed-length samples; the paper's GPT-3 setup
+//!   ("173 million data samples each with sequence length 2048").
+//! * [`BertDataset`] — sentence pairs `[CLS] A [SEP] B [SEP]` padded to the
+//!   family max sequence; each sample carries its *effective length*, the
+//!   signal behind the `seqreo` metric ("BERT input sequences only include
+//!   two natural sentences thus each sequence has a different effective
+//!   sequence length and then padded", §3.1).
+//! * [`VitDataset`] — synthetic clustered patch "images" for the ViT
+//!   finetuning reproduction (Tab. 13).
+
+use crate::data::corpus::Corpus;
+use crate::data::tokenizer::{Tokenizer, BOS, CLS, PAD, SEP};
+use crate::Pcg32;
+
+/// GPT: one packed token stream.
+pub struct GptDataset {
+    pub stream: Vec<u32>,
+    pub max_seq: usize,
+}
+
+impl GptDataset {
+    pub fn build(corpus: &Corpus, tok: &Tokenizer, max_seq: usize) -> GptDataset {
+        let total: usize = corpus.docs.iter().map(|d| d.len() + 1).sum();
+        let mut stream = Vec::with_capacity(total);
+        for doc in &corpus.docs {
+            stream.push(BOS);
+            for w in doc.words() {
+                stream.push(tok.encode_word(w));
+            }
+        }
+        GptDataset { stream, max_seq }
+    }
+
+    /// Number of `(input, shifted-target)` samples of length `max_seq`.
+    pub fn n_samples(&self) -> usize {
+        // +1 because targets need one lookahead token.
+        if self.stream.len() < self.max_seq + 1 {
+            0
+        } else {
+            (self.stream.len() - 1) / self.max_seq
+        }
+    }
+
+    /// Input tokens of sample `i`, truncated to `seq` (seqtru).
+    pub fn tokens(&self, i: usize, seq: usize) -> &[u32] {
+        let start = i * self.max_seq;
+        &self.stream[start..start + seq]
+    }
+
+    /// Next-token targets for sample `i` at length `seq`.
+    pub fn targets(&self, i: usize, seq: usize) -> &[u32] {
+        let start = i * self.max_seq + 1;
+        &self.stream[start..start + seq]
+    }
+
+    /// Sub-segment view used by the seqres (reshape) loader: segment `j` of
+    /// length `seq` within sample `i`.
+    pub fn segment_tokens(&self, i: usize, j: usize, seq: usize) -> &[u32] {
+        let start = i * self.max_seq + j * seq;
+        &self.stream[start..start + seq]
+    }
+
+    pub fn segment_targets(&self, i: usize, j: usize, seq: usize) -> &[u32] {
+        let start = i * self.max_seq + j * seq + 1;
+        &self.stream[start..start + seq]
+    }
+}
+
+/// One BERT sample: `[CLS] A [SEP] B [SEP] PAD...` with effective length.
+pub struct BertDataset {
+    /// Flattened samples, each `max_seq` ids.
+    data: Vec<u32>,
+    /// Effective (non-padding) length per sample.
+    pub eff_len: Vec<u32>,
+    pub max_seq: usize,
+}
+
+impl BertDataset {
+    pub fn build(corpus: &Corpus, tok: &Tokenizer, max_seq: usize) -> BertDataset {
+        let mut data = Vec::new();
+        let mut eff_len = Vec::new();
+        let budget = max_seq - 3; // CLS + 2×SEP
+        for doc in &corpus.docs {
+            // consecutive sentence pairs, one sample per pair
+            let mut i = 0;
+            while i + 1 < doc.sentences.len() {
+                let a = &doc.sentences[i];
+                let b = &doc.sentences[i + 1];
+                i += 2;
+                let la = a.len().min(budget / 2);
+                let lb = b.len().min(budget - la);
+                let mut sample = Vec::with_capacity(max_seq);
+                sample.push(CLS);
+                sample.extend(a[..la].iter().map(|&w| tok.encode_word(w)));
+                sample.push(SEP);
+                sample.extend(b[..lb].iter().map(|&w| tok.encode_word(w)));
+                sample.push(SEP);
+                let eff = sample.len();
+                sample.resize(max_seq, PAD);
+                data.extend_from_slice(&sample);
+                eff_len.push(eff as u32);
+            }
+        }
+        BertDataset { data, eff_len, max_seq }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.eff_len.len()
+    }
+
+    pub fn tokens(&self, i: usize) -> &[u32] {
+        &self.data[i * self.max_seq..(i + 1) * self.max_seq]
+    }
+}
+
+/// ViT: synthetic "images" as flattened patch features. Class c has a
+/// characteristic per-patch mean pattern; samples add Gaussian noise, so
+/// accuracy is learnable but not trivial.
+pub struct VitDataset {
+    pub n_patches: usize,
+    pub patch_dim: usize,
+    pub n_classes: usize,
+    class_means: Vec<f32>, // [n_classes, n_patches, patch_dim]
+    pub noise: f32,
+    seed: u64,
+}
+
+impl VitDataset {
+    pub fn new(n_patches: usize, patch_dim: usize, n_classes: usize, noise: f32, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed, 0x71f);
+        let class_means = (0..n_classes * n_patches * patch_dim)
+            .map(|_| rng.next_gaussian() as f32 * 0.5)
+            .collect();
+        VitDataset { n_patches, patch_dim, n_classes, class_means, noise, seed }
+    }
+
+    /// Deterministically synthesize sample `i`: (patches, label).
+    pub fn sample(&self, i: u64, patches_out: &mut [f32]) -> u32 {
+        assert_eq!(patches_out.len(), self.n_patches * self.patch_dim);
+        let mut rng = Pcg32::new(self.seed ^ (i.wrapping_mul(0x9e3779b97f4a7c15)), 0x5ee);
+        let label = rng.gen_range(self.n_classes as u32);
+        let base = label as usize * self.n_patches * self.patch_dim;
+        for (j, out) in patches_out.iter_mut().enumerate() {
+            *out = self.class_means[base + j] + self.noise * rng.next_gaussian() as f32;
+        }
+        label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, CorpusConfig};
+
+    fn setup() -> (Corpus, Tokenizer) {
+        let c = Corpus::generate(CorpusConfig {
+            n_docs: 200,
+            seed: 9,
+            ..CorpusConfig::default()
+        });
+        let t = Tokenizer::from_corpus(&c);
+        (c, t)
+    }
+
+    #[test]
+    fn gpt_pack_shapes() {
+        let (c, t) = setup();
+        let ds = GptDataset::build(&c, &t, 64);
+        assert!(ds.n_samples() > 100);
+        let s0 = ds.tokens(0, 64);
+        assert_eq!(s0.len(), 64);
+        assert_eq!(s0[0], BOS);
+        // targets are tokens shifted by one
+        assert_eq!(ds.targets(0, 63)[..62], ds.tokens(0, 63)[1..]);
+        // truncated view is a prefix
+        assert_eq!(ds.tokens(3, 16), &ds.tokens(3, 64)[..16]);
+    }
+
+    #[test]
+    fn gpt_segments_tile_sample() {
+        let (c, t) = setup();
+        let ds = GptDataset::build(&c, &t, 64);
+        let full = ds.tokens(2, 64);
+        for j in 0..4 {
+            assert_eq!(ds.segment_tokens(2, j, 16), &full[j * 16..(j + 1) * 16]);
+        }
+    }
+
+    #[test]
+    fn bert_samples_structured() {
+        let (c, t) = setup();
+        let ds = BertDataset::build(&c, &t, 64);
+        assert!(ds.n_samples() > 50);
+        for i in 0..ds.n_samples().min(50) {
+            let s = ds.tokens(i);
+            let eff = ds.eff_len[i] as usize;
+            assert_eq!(s.len(), 64);
+            assert_eq!(s[0], CLS);
+            assert!(eff >= 4 && eff <= 64, "{eff}");
+            assert_eq!(s[eff - 1], SEP);
+            assert!(s[eff..].iter().all(|&x| x == PAD));
+            assert!(s[..eff].iter().all(|&x| x != PAD));
+        }
+    }
+
+    #[test]
+    fn bert_eff_lengths_vary() {
+        let (c, t) = setup();
+        let ds = BertDataset::build(&c, &t, 64);
+        let min = ds.eff_len.iter().min().unwrap();
+        let max = ds.eff_len.iter().max().unwrap();
+        assert!(max - min >= 10, "effective lengths should spread: {min}..{max}");
+    }
+
+    #[test]
+    fn vit_deterministic_and_class_separated() {
+        let ds = VitDataset::new(16, 48, 10, 0.3, 5);
+        let mut a = vec![0.0; 16 * 48];
+        let mut b = vec![0.0; 16 * 48];
+        let la = ds.sample(7, &mut a);
+        let lb = ds.sample(7, &mut b);
+        assert_eq!(la, lb);
+        assert_eq!(a, b);
+        // same class twice should be closer than different classes (on average)
+        let mut pairs_same = 0.0;
+        let mut pairs_diff = 0.0;
+        let mut n_same = 0;
+        let mut n_diff = 0;
+        let mut bufs: Vec<(u32, Vec<f32>)> = Vec::new();
+        for i in 0..40 {
+            let mut p = vec![0.0; 16 * 48];
+            let l = ds.sample(i, &mut p);
+            bufs.push((l, p));
+        }
+        for i in 0..bufs.len() {
+            for j in (i + 1)..bufs.len() {
+                let d: f32 = bufs[i]
+                    .1
+                    .iter()
+                    .zip(&bufs[j].1)
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                if bufs[i].0 == bufs[j].0 {
+                    pairs_same += d as f64;
+                    n_same += 1;
+                } else {
+                    pairs_diff += d as f64;
+                    n_diff += 1;
+                }
+            }
+        }
+        assert!(n_same > 0 && n_diff > 0);
+        assert!(pairs_same / n_same as f64 * 1.5 < pairs_diff / n_diff as f64);
+    }
+}

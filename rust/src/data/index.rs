@@ -1,0 +1,203 @@
+//! Difficulty index files — the on-disk output of the data analyzer.
+//!
+//! The paper's analyzer writes two numpy-memmap indexes: one mapping each
+//! sample to its difficulty value and one mapping each difficulty value to
+//! its samples (§3.1). We store both views in a single memory-mapped file:
+//!
+//! ```text
+//! header:  magic u32 | version u32 | n u64 | metric-name [32 bytes]
+//! values:  f32[n]    — difficulty value per sample id       (view 1)
+//! order:   u32[n]    — sample ids sorted ascending by value (view 2)
+//! ```
+//!
+//! `order` answers "all samples with difficulty ≤ d" as a prefix (binary
+//! search), which is exactly what the percentile- and value-based
+//! curriculum schedulers need.
+
+use crate::data::mmap::Mmap;
+use crate::Result;
+use anyhow::bail;
+use std::path::Path;
+
+const MAGIC: u32 = 0xd5de_1d01;
+const VERSION: u32 = 1;
+const NAME_BYTES: usize = 32;
+const HEADER: usize = 4 + 4 + 8 + NAME_BYTES;
+
+/// An immutable difficulty index backed by a memory-mapped file (or by
+/// heap vectors when built in-memory for tests / small runs).
+pub enum DifficultyIndex {
+    Mapped { map: Mmap, n: usize, metric: String },
+    Owned { values: Vec<f32>, order: Vec<u32>, metric: String },
+}
+
+impl DifficultyIndex {
+    /// Build in memory from per-sample difficulty values.
+    pub fn from_values(metric: &str, values: Vec<f32>) -> DifficultyIndex {
+        let mut order: Vec<u32> = (0..values.len() as u32).collect();
+        order.sort_by(|&a, &b| {
+            values[a as usize]
+                .partial_cmp(&values[b as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        DifficultyIndex::Owned { values, order, metric: metric.to_string() }
+    }
+
+    /// Write to `path` as a mmap index file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let n = self.len();
+        let total = HEADER + 4 * n + 4 * n;
+        let mut map = Mmap::create(path, total)?;
+        map.slice_mut::<u32>(0, 1)[0] = MAGIC;
+        map.slice_mut::<u32>(4, 1)[0] = VERSION;
+        map.slice_mut::<u64>(8, 1)[0] = n as u64;
+        let name = self.metric().as_bytes();
+        let name_dst = map.slice_mut::<u8>(16, NAME_BYTES);
+        name_dst.fill(0);
+        let m = name.len().min(NAME_BYTES);
+        name_dst[..m].copy_from_slice(&name[..m]);
+        map.slice_mut::<f32>(HEADER, n).copy_from_slice(self.values());
+        map.slice_mut::<u32>(HEADER + 4 * n, n).copy_from_slice(self.order());
+        map.flush()?;
+        Ok(())
+    }
+
+    /// Open a saved index file read-only (zero-copy).
+    pub fn open(path: &Path) -> Result<DifficultyIndex> {
+        let map = Mmap::open(path)?;
+        if map.len() < HEADER {
+            bail!("index file too small: {}", path.display());
+        }
+        if map.slice::<u32>(0, 1)[0] != MAGIC {
+            bail!("bad magic in {}", path.display());
+        }
+        if map.slice::<u32>(4, 1)[0] != VERSION {
+            bail!("unsupported index version in {}", path.display());
+        }
+        let n = map.slice::<u64>(8, 1)[0] as usize;
+        if map.len() != HEADER + 8 * n {
+            bail!("index size mismatch in {}", path.display());
+        }
+        let raw = map.slice::<u8>(16, NAME_BYTES);
+        let end = raw.iter().position(|&b| b == 0).unwrap_or(NAME_BYTES);
+        let metric = String::from_utf8_lossy(&raw[..end]).to_string();
+        Ok(DifficultyIndex::Mapped { map, n, metric })
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            DifficultyIndex::Mapped { n, .. } => *n,
+            DifficultyIndex::Owned { values, .. } => values.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn metric(&self) -> &str {
+        match self {
+            DifficultyIndex::Mapped { metric, .. } => metric,
+            DifficultyIndex::Owned { metric, .. } => metric,
+        }
+    }
+
+    /// View 1: difficulty value per sample id.
+    pub fn values(&self) -> &[f32] {
+        match self {
+            DifficultyIndex::Mapped { map, n, .. } => map.slice::<f32>(HEADER, *n),
+            DifficultyIndex::Owned { values, .. } => values,
+        }
+    }
+
+    /// View 2: sample ids sorted ascending by difficulty.
+    pub fn order(&self) -> &[u32] {
+        match self {
+            DifficultyIndex::Mapped { map, n, .. } => map.slice::<u32>(HEADER + 4 * n, *n),
+            DifficultyIndex::Owned { order, .. } => order,
+        }
+    }
+
+    /// Number of samples with difficulty ≤ `threshold` (prefix length into
+    /// `order()`).
+    pub fn prefix_for_value(&self, threshold: f32) -> usize {
+        let order = self.order();
+        let values = self.values();
+        order.partition_point(|&id| values[id as usize] <= threshold)
+    }
+
+    /// Difficulty value at percentile `p` (0..=1) of the sorted order.
+    pub fn value_at_percentile(&self, p: f64) -> f32 {
+        let order = self.order();
+        if order.is_empty() {
+            return 0.0;
+        }
+        let idx = ((p * order.len() as f64).ceil() as usize)
+            .clamp(1, order.len())
+            - 1;
+        self.values()[order[idx] as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dsde_index_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn order_is_sorted_by_value() {
+        let idx = DifficultyIndex::from_values("voc", vec![3.0, 1.0, 2.0, 0.5]);
+        assert_eq!(idx.order(), &[3, 1, 2, 0]);
+        assert_eq!(idx.values()[idx.order()[0] as usize], 0.5);
+    }
+
+    #[test]
+    fn prefix_queries() {
+        let idx = DifficultyIndex::from_values("len", vec![10.0, 20.0, 30.0, 20.0]);
+        assert_eq!(idx.prefix_for_value(9.9), 0);
+        assert_eq!(idx.prefix_for_value(10.0), 1);
+        assert_eq!(idx.prefix_for_value(20.0), 3);
+        assert_eq!(idx.prefix_for_value(99.0), 4);
+    }
+
+    #[test]
+    fn percentile_queries() {
+        let idx = DifficultyIndex::from_values("v", (1..=100).map(|i| i as f32).collect());
+        assert_eq!(idx.value_at_percentile(0.01), 1.0);
+        assert_eq!(idx.value_at_percentile(0.5), 50.0);
+        assert_eq!(idx.value_at_percentile(1.0), 100.0);
+    }
+
+    #[test]
+    fn save_open_roundtrip() {
+        let path = tmp("rt");
+        let idx = DifficultyIndex::from_values("seqreo", vec![5.0, 3.0, 4.0, 1.0, 2.0]);
+        idx.save(&path).unwrap();
+        let opened = DifficultyIndex::open(&path).unwrap();
+        assert_eq!(opened.metric(), "seqreo");
+        assert_eq!(opened.len(), 5);
+        assert_eq!(opened.values(), idx.values());
+        assert_eq!(opened.order(), idx.order());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn open_rejects_corrupt() {
+        let path = tmp("bad");
+        std::fs::write(&path, b"not an index file at all........................").unwrap();
+        assert!(DifficultyIndex::open(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn ties_broken_by_sample_id() {
+        let idx = DifficultyIndex::from_values("t", vec![1.0, 1.0, 1.0]);
+        assert_eq!(idx.order(), &[0, 1, 2]);
+    }
+}

@@ -1,0 +1,208 @@
+//! Memory-mapped file substrate — the numpy-memmap equivalent the paper's
+//! data analyzer writes its difficulty indexes to ("to reduce the memory
+//! overhead when analyzing the huge dataset, we write the index files as
+//! numpy memory-mapped files", §3.1).
+//!
+//! Thin safe wrapper over `libc::mmap`: create a fixed-size writable file
+//! mapping, or open an existing file read-only, and view it as a typed
+//! slice of a `Pod` element type.
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::fs::{File, OpenOptions};
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+/// Element types that are safe to reinterpret from raw mapped bytes.
+///
+/// # Safety
+/// Implementors must be plain-old-data: no padding, no invalid bit
+/// patterns, alignment ≤ 8 (mmap returns page-aligned pointers).
+pub unsafe trait Pod: Copy + 'static {}
+unsafe impl Pod for u8 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for i32 {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+
+/// A memory-mapped file region.
+pub struct Mmap {
+    ptr: *mut libc::c_void,
+    len: usize,
+    writable: bool,
+    // Kept open for the lifetime of the mapping (not strictly required by
+    // POSIX, but it keeps the fd accounted for and msync-able).
+    _file: File,
+}
+
+// The mapping is plain memory; access control is via &self / &mut self.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Create (or truncate) `path` at `len` bytes and map it read-write.
+    pub fn create(path: &Path, len: usize) -> Result<Mmap> {
+        if len == 0 {
+            bail!("cannot map zero-length file {}", path.display());
+        }
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        file.set_len(len as u64)?;
+        Self::map(file, len, true)
+    }
+
+    /// Open an existing file read-only and map all of it.
+    pub fn open(path: &Path) -> Result<Mmap> {
+        let file = File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let len = file.metadata()?.len() as usize;
+        if len == 0 {
+            bail!("cannot map zero-length file {}", path.display());
+        }
+        Self::map(file, len, false)
+    }
+
+    fn map(file: File, len: usize, writable: bool) -> Result<Mmap> {
+        let prot = if writable {
+            libc::PROT_READ | libc::PROT_WRITE
+        } else {
+            libc::PROT_READ
+        };
+        let ptr = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                prot,
+                libc::MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == libc::MAP_FAILED {
+            bail!("mmap failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Mmap { ptr, len, writable, _file: file })
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+
+    pub fn as_bytes_mut(&mut self) -> &mut [u8] {
+        assert!(self.writable, "mapping is read-only");
+        unsafe { std::slice::from_raw_parts_mut(self.ptr as *mut u8, self.len) }
+    }
+
+    /// View a byte range as a typed slice. `offset` must be aligned to
+    /// `align_of::<T>()` and the range must lie within the mapping.
+    pub fn slice<T: Pod>(&self, offset: usize, count: usize) -> &[T] {
+        let bytes = count * std::mem::size_of::<T>();
+        assert!(offset + bytes <= self.len, "slice out of bounds");
+        assert_eq!(offset % std::mem::align_of::<T>(), 0, "misaligned slice");
+        unsafe {
+            std::slice::from_raw_parts(
+                (self.ptr as *const u8).add(offset) as *const T,
+                count,
+            )
+        }
+    }
+
+    pub fn slice_mut<T: Pod>(&mut self, offset: usize, count: usize) -> &mut [T] {
+        assert!(self.writable, "mapping is read-only");
+        let bytes = count * std::mem::size_of::<T>();
+        assert!(offset + bytes <= self.len, "slice out of bounds");
+        assert_eq!(offset % std::mem::align_of::<T>(), 0, "misaligned slice");
+        unsafe {
+            std::slice::from_raw_parts_mut(
+                (self.ptr as *mut u8).add(offset) as *mut T,
+                count,
+            )
+        }
+    }
+
+    /// Flush dirty pages back to the file (msync MS_SYNC).
+    pub fn flush(&self) -> Result<()> {
+        let rc = unsafe { libc::msync(self.ptr, self.len, libc::MS_SYNC) };
+        if rc != 0 {
+            bail!("msync failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.ptr, self.len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dsde_mmap_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn create_write_reopen() {
+        let path = tmp("rw");
+        {
+            let mut m = Mmap::create(&path, 16 * 4).unwrap();
+            let xs = m.slice_mut::<u32>(0, 16);
+            for (i, x) in xs.iter_mut().enumerate() {
+                *x = (i * i) as u32;
+            }
+            m.flush().unwrap();
+        }
+        let m = Mmap::open(&path).unwrap();
+        let xs = m.slice::<u32>(0, 16);
+        assert_eq!(xs[5], 25);
+        assert_eq!(m.len(), 64);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn typed_views_at_offsets() {
+        let path = tmp("offs");
+        let mut m = Mmap::create(&path, 4 + 4 + 8 * 4).unwrap();
+        m.slice_mut::<u32>(0, 1)[0] = 0xfeed;
+        m.slice_mut::<f32>(4, 1)[0] = 2.5;
+        m.slice_mut::<f64>(8, 4).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.slice::<u32>(0, 1)[0], 0xfeed);
+        assert_eq!(m.slice::<f32>(4, 1)[0], 2.5);
+        assert_eq!(m.slice::<f64>(8, 4)[3], 4.0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn oob_slice_panics() {
+        let path = tmp("oob");
+        let m = Mmap::create(&path, 8).unwrap();
+        let _ = m.slice::<u64>(0, 2);
+    }
+
+    #[test]
+    fn zero_len_rejected() {
+        assert!(Mmap::create(&tmp("zero"), 0).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Data substrate: synthetic corpus, tokenizer, per-family datasets, the
+//! memory-mapped file layer and the difficulty index format.
+
+pub mod corpus;
+pub mod dataset;
+pub mod index;
+pub mod mmap;
+pub mod tokenizer;
+
+pub use corpus::{Corpus, CorpusConfig, Doc};
+pub use dataset::{BertDataset, GptDataset, VitDataset};
+pub use index::DifficultyIndex;
+pub use mmap::Mmap;
+pub use tokenizer::Tokenizer;

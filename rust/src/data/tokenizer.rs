@@ -1,0 +1,124 @@
+//! Tokenizer / vocabulary layer.
+//!
+//! Maps corpus word symbols to model token ids, reserving the special ids
+//! every family's data path needs, and owns the unigram frequency table the
+//! `voc` difficulty metric and the TokenBypass importance scores read.
+
+use crate::data::corpus::Corpus;
+
+/// Special token ids (must stay below `Tokenizer::n_special`).
+pub const PAD: u32 = 0;
+pub const UNK: u32 = 1;
+pub const BOS: u32 = 2;
+pub const MASK: u32 = 3;
+pub const CLS: u32 = 4;
+pub const SEP: u32 = 5;
+pub const N_SPECIAL: u32 = 6;
+
+/// Vocabulary with frequency statistics.
+pub struct Tokenizer {
+    /// Model vocabulary size (specials + words).
+    pub vocab_size: u32,
+    /// -log p per *token id* (specials get the corpus maximum so they are
+    /// never treated as "rare and interesting" by voc/TokenBypass).
+    neg_log_prob: Vec<f64>,
+    /// Raw counts per token id.
+    counts: Vec<u64>,
+}
+
+impl Tokenizer {
+    pub fn from_corpus(corpus: &Corpus) -> Tokenizer {
+        let vocab_size = N_SPECIAL + corpus.config.vocab_words;
+        let mut neg_log_prob = vec![0.0f64; vocab_size as usize];
+        let mut counts = vec![0u64; vocab_size as usize];
+        let mut max_nlp: f64 = 0.0;
+        for w in 0..corpus.config.vocab_words {
+            let nlp = corpus.neg_log_prob(w);
+            neg_log_prob[(N_SPECIAL + w) as usize] = nlp;
+            counts[(N_SPECIAL + w) as usize] = corpus.word_counts[w as usize];
+            max_nlp = max_nlp.max(nlp);
+        }
+        for s in 0..N_SPECIAL {
+            neg_log_prob[s as usize] = max_nlp;
+            // specials are ubiquitous; give them the max observed count so
+            // frequency-based importance ranks them low.
+            counts[s as usize] = corpus.total_words;
+        }
+        Tokenizer { vocab_size, neg_log_prob, counts }
+    }
+
+    /// Encode a word symbol.
+    #[inline]
+    pub fn encode_word(&self, word: u32) -> u32 {
+        let id = N_SPECIAL + word;
+        if id < self.vocab_size {
+            id
+        } else {
+            UNK
+        }
+    }
+
+    /// Vocabulary-rarity contribution of one token id (-log p).
+    #[inline]
+    pub fn rarity(&self, token: u32) -> f64 {
+        self.neg_log_prob
+            .get(token as usize)
+            .copied()
+            .unwrap_or(self.neg_log_prob[UNK as usize])
+    }
+
+    /// Corpus frequency count of one token id.
+    #[inline]
+    pub fn count(&self, token: u32) -> u64 {
+        self.counts.get(token as usize).copied().unwrap_or(0)
+    }
+
+    pub fn is_special(&self, token: u32) -> bool {
+        token < N_SPECIAL
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, CorpusConfig};
+
+    fn tok() -> Tokenizer {
+        let corpus = Corpus::generate(CorpusConfig {
+            n_docs: 500,
+            seed: 3,
+            ..CorpusConfig::default()
+        });
+        Tokenizer::from_corpus(&corpus)
+    }
+
+    #[test]
+    fn vocab_covers_specials_and_words() {
+        let t = tok();
+        assert_eq!(t.vocab_size, N_SPECIAL + 506);
+        assert_eq!(t.encode_word(0), N_SPECIAL);
+        assert_eq!(t.encode_word(505), N_SPECIAL + 505);
+        assert_eq!(t.encode_word(506), UNK);
+    }
+
+    #[test]
+    fn rarity_monotone_in_frequency() {
+        let t = tok();
+        // find a very common and a very rare token
+        let mut ids: Vec<u32> = (N_SPECIAL..t.vocab_size).collect();
+        ids.sort_by_key(|&i| std::cmp::Reverse(t.count(i)));
+        let common = ids[0];
+        let rare = *ids.last().unwrap();
+        assert!(t.count(common) > t.count(rare));
+        assert!(t.rarity(common) < t.rarity(rare));
+    }
+
+    #[test]
+    fn specials_not_rare() {
+        let t = tok();
+        assert!(t.is_special(PAD) && t.is_special(SEP));
+        assert!(!t.is_special(N_SPECIAL));
+        // specials carry max count so importance-by-frequency deprioritizes them
+        assert!(t.count(MASK) >= t.count(N_SPECIAL + 1));
+    }
+}

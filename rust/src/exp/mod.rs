@@ -1,0 +1,7 @@
+//! Experiment layer: the paper's case grids ([`cases`]) and the runner
+//! that executes them and renders paper-style tables ([`runner`]).
+
+pub mod cases;
+pub mod runner;
+
+pub use runner::{relative_quality, run_cases, table_headers, table_row};

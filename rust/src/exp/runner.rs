@@ -1,0 +1,83 @@
+//! Experiment runner: execute case grids against a shared [`TrainEnv`],
+//! derive paper-style quality numbers, and log machine-readable results.
+
+use crate::config::schema::RunConfig;
+use crate::sim::CostModel;
+use crate::train::trainer::RunResult;
+use crate::train::TrainEnv;
+use crate::Result;
+
+/// Relative model quality versus a baseline eval loss, as a percentage
+/// (baseline = 100%; lower loss ⇒ higher quality). The paper's quality
+/// columns are task accuracies; here quality is the inverse-loss ratio —
+/// monotone in the same direction and 100-normalized (DESIGN.md
+/// §Substitutions).
+pub fn relative_quality(baseline_loss: f64, loss: f64) -> f64 {
+    100.0 * baseline_loss / loss.max(1e-9)
+}
+
+/// Run every case sequentially, printing progress.
+pub fn run_cases(env: &TrainEnv, cases: Vec<RunConfig>) -> Result<Vec<RunResult>> {
+    let mut out = Vec::with_capacity(cases.len());
+    let n = cases.len();
+    for (i, cfg) in cases.into_iter().enumerate() {
+        let label = cfg.label.clone();
+        eprintln!("[{}/{}] {} ({} steps)...", i + 1, n, label, cfg.total_steps);
+        let t0 = std::time::Instant::now();
+        let r = env.run(cfg)?;
+        eprintln!(
+            "[{}/{}] {}: eval_loss={:.4} ppl={:.2} saving={:.1}% {:.1}s",
+            i + 1,
+            n,
+            label,
+            r.final_eval_loss,
+            r.perplexity(),
+            r.saving_ratio * 100.0,
+            t0.elapsed().as_secs_f64()
+        );
+        out.push(r);
+    }
+    Ok(out)
+}
+
+/// Format one paper-style table row for a run:
+/// label | tokens (Nx) | measured s | sim V100-h | sim $ | loss | ppl | quality%.
+pub fn table_row(r: &RunResult, cost: &CostModel, baseline_loss: f64) -> Vec<String> {
+    let rep = cost.report(r.compute_tokens, r.wall_secs);
+    vec![
+        r.label.clone(),
+        format!("{:.0}K ({})", r.compute_tokens / 1e3, cost.saving_label(r.compute_tokens)),
+        format!("{:.1}", r.wall_secs),
+        format!("{:.1}", rep.sim_v100_hours),
+        format!("{:.0}", rep.sim_cost_usd),
+        format!("{:.4}", r.final_eval_loss),
+        format!("{:.2}", r.perplexity()),
+        format!("{:.1}%", relative_quality(baseline_loss, r.final_eval_loss)),
+    ]
+}
+
+/// Standard headers matching [`table_row`].
+pub fn table_headers() -> Vec<&'static str> {
+    vec![
+        "case",
+        "compute tokens",
+        "wall s",
+        "sim V100-h",
+        "sim $",
+        "eval loss",
+        "ppl",
+        "quality",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quality_is_100_at_baseline() {
+        assert!((relative_quality(3.0, 3.0) - 100.0).abs() < 1e-9);
+        assert!(relative_quality(3.0, 2.7) > 100.0);
+        assert!(relative_quality(3.0, 3.3) < 100.0);
+    }
+}

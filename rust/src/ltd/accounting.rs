@@ -1,0 +1,106 @@
+//! Consumed-token accounting — the §3.3 composition glue.
+//!
+//! Both techniques change how many tokens a step actually consumes: CL
+//! (seqtru) shrinks the batch's data tokens; random-LTD makes middle
+//! layers process fewer tokens. The accountant tracks both so that
+//! (a) the token-based LR schedule decays on *actual* consumption and
+//! (b) runs with different techniques can be compared at equal token
+//! budgets (the paper's "Data (billion tokens)" column).
+//!
+//! Definitions (per step, batch of `rows`×`seq`, `L` layers of which
+//! `n_drop` process only `kept` tokens):
+//!
+//! * **data tokens**   = rows × seq — what the data pipeline consumed;
+//! * **layer tokens**  = rows × (seq × (L − n_drop) + kept × n_drop);
+//! * **compute tokens** = layer tokens / L — data-token-equivalent compute,
+//!   the quantity the paper's LR decay and savings ratios are based on.
+
+#[derive(Clone, Debug, Default)]
+pub struct TokenAccountant {
+    pub steps: u64,
+    pub data_tokens: u64,
+    layer_tokens: u64,
+    n_layers: u64,
+}
+
+impl TokenAccountant {
+    pub fn new(n_layers: usize) -> TokenAccountant {
+        TokenAccountant { n_layers: n_layers as u64, ..Default::default() }
+    }
+
+    /// Record one training step.
+    pub fn record(&mut self, rows: usize, seq: usize, kept: usize, n_drop_layers: usize) {
+        debug_assert!(kept <= seq);
+        debug_assert!(n_drop_layers as u64 <= self.n_layers);
+        let rows = rows as u64;
+        let full_layers = self.n_layers - n_drop_layers as u64;
+        self.steps += 1;
+        self.data_tokens += rows * seq as u64;
+        self.layer_tokens +=
+            rows * (seq as u64 * full_layers + kept as u64 * n_drop_layers as u64);
+    }
+
+    /// Data-token-equivalent compute consumed so far (drives LR decay).
+    pub fn compute_tokens(&self) -> f64 {
+        if self.n_layers == 0 {
+            return 0.0;
+        }
+        self.layer_tokens as f64 / self.n_layers as f64
+    }
+
+    /// Fraction of compute saved relative to processing every data token
+    /// in every layer (the Tab. 14/15 "token saving ratio").
+    pub fn saving_ratio(&self) -> f64 {
+        if self.data_tokens == 0 {
+            return 0.0;
+        }
+        1.0 - self.compute_tokens() / self.data_tokens as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_dropping_means_compute_equals_data() {
+        let mut a = TokenAccountant::new(4);
+        a.record(8, 64, 64, 0);
+        a.record(8, 32, 32, 0);
+        assert_eq!(a.data_tokens, 8 * 64 + 8 * 32);
+        assert_eq!(a.compute_tokens(), a.data_tokens as f64);
+        assert_eq!(a.saving_ratio(), 0.0);
+        assert_eq!(a.steps, 2);
+    }
+
+    #[test]
+    fn ltd_reduces_compute_not_data() {
+        let mut a = TokenAccountant::new(4);
+        // 2 middle layers keep half the tokens:
+        // layer tokens = 8 * (64*2 + 32*2) = 8*192; compute = 8*48
+        a.record(8, 64, 32, 2);
+        assert_eq!(a.data_tokens, 512);
+        assert_eq!(a.compute_tokens(), 8.0 * 48.0);
+        assert!((a.saving_ratio() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn composed_cl_and_ltd() {
+        let mut a = TokenAccountant::new(4);
+        // CL truncated to 32 AND LTD keeps 16 in 2 of 4 layers
+        a.record(8, 32, 16, 2);
+        assert_eq!(a.data_tokens, 256);
+        // layer tokens = 8*(32*2 + 16*2) = 768; compute = 192
+        assert_eq!(a.compute_tokens(), 192.0);
+    }
+
+    #[test]
+    fn saving_accumulates_over_schedule() {
+        let mut a = TokenAccountant::new(4);
+        a.record(8, 64, 16, 2); // heavy dropping early
+        a.record(8, 64, 64, 2); // no dropping late (MSLG finished)
+        // layer tokens: 8*(64*2+16*2)=1280, then 8*64*4=2048; compute=(1280+2048)/4
+        let expected = 1.0 - ((1280.0 + 2048.0) / 4.0) / 1024.0;
+        assert!((a.saving_ratio() - expected).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,137 @@
+//! The random-LTD dropper: per-layer uniform keep-index generation (§3.2).
+//!
+//! "For each transformer layer, we randomly (uniformly) select a small
+//! batch of tokens to proceed with the compute and drop the rest" — each
+//! middle layer draws its own independent keep set; the first and last
+//! layers are exempt (full sequence). Indices are emitted sorted ascending
+//! so causal order is preserved inside the gathered subsequence (the L2
+//! model relies on this).
+
+use crate::Pcg32;
+
+pub struct RandomDropper {
+    rng: Pcg32,
+    /// Reused output buffer: `n_mid * keep` indices, layer-major.
+    buf: Vec<i32>,
+    scratch: Vec<u32>,
+    /// Always keep token 0 (ViT CLS / position token).
+    pub pin_first_token: bool,
+}
+
+impl RandomDropper {
+    pub fn new(seed: u64) -> RandomDropper {
+        RandomDropper {
+            rng: Pcg32::new(seed, 0x17d),
+            buf: Vec::new(),
+            scratch: Vec::new(),
+            pin_first_token: false,
+        }
+    }
+
+    /// Generate keep indices for `n_mid` middle layers, each keeping `keep`
+    /// of `seq` tokens. Returns a layer-major `[n_mid * keep]` i32 buffer
+    /// (the L2 `keep_idx` input). The buffer is reused across calls —
+    /// clone if you need to retain it.
+    pub fn layerwise(&mut self, n_mid: usize, seq: usize, keep: usize) -> &[i32] {
+        assert!(keep <= seq && keep > 0);
+        self.buf.clear();
+        for _ in 0..n_mid {
+            self.one_layer(seq, keep);
+        }
+        &self.buf
+    }
+
+    /// Generate a single keep set (TokenBypass-style random baseline, also
+    /// used for the bypass-mode executables when driven randomly).
+    pub fn single(&mut self, seq: usize, keep: usize) -> &[i32] {
+        assert!(keep <= seq && keep > 0);
+        self.buf.clear();
+        self.one_layer(seq, keep);
+        &self.buf
+    }
+
+    fn one_layer(&mut self, seq: usize, keep: usize) {
+        if self.pin_first_token {
+            self.rng.sample_sorted(seq - 1, keep - 1, &mut self.scratch);
+            self.buf.push(0);
+            let base = self.buf.len();
+            self.buf.extend(self.scratch.iter().map(|&i| (i + 1) as i32));
+            debug_assert!(self.buf[base..].windows(2).all(|w| w[0] < w[1]));
+        } else {
+            self.rng.sample_sorted(seq, keep, &mut self.scratch);
+            self.buf.extend(self.scratch.iter().map(|&i| i as i32));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::property;
+
+    #[test]
+    fn layerwise_shape_and_validity() {
+        let mut d = RandomDropper::new(1);
+        let idx = d.layerwise(2, 64, 16).to_vec();
+        assert_eq!(idx.len(), 32);
+        for l in 0..2 {
+            let layer = &idx[l * 16..(l + 1) * 16];
+            assert!(layer.windows(2).all(|w| w[0] < w[1]), "sorted");
+            assert!(layer.iter().all(|&i| (0..64).contains(&i)));
+        }
+    }
+
+    #[test]
+    fn layers_are_independent() {
+        let mut d = RandomDropper::new(2);
+        let idx = d.layerwise(2, 64, 32).to_vec();
+        let (a, b) = idx.split_at(32);
+        assert_ne!(a, b, "middle layers must draw independent keep sets");
+    }
+
+    #[test]
+    fn pin_first_token() {
+        let mut d = RandomDropper::new(3);
+        d.pin_first_token = true;
+        for _ in 0..20 {
+            let idx = d.layerwise(2, 17, 5).to_vec();
+            assert_eq!(idx[0], 0);
+            assert_eq!(idx[5], 0);
+            for l in 0..2 {
+                let layer = &idx[l * 5..(l + 1) * 5];
+                assert!(layer.windows(2).all(|w| w[0] < w[1]), "{layer:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_keep_is_identity() {
+        let mut d = RandomDropper::new(4);
+        let idx = d.layerwise(1, 8, 8);
+        assert_eq!(idx, (0..8).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn prop_uniform_coverage() {
+        // property: over many draws, every position is kept roughly equally
+        property("dropper uniform coverage", 5, |rng| {
+            let seq = 32;
+            let keep = 8;
+            let mut d = RandomDropper::new(rng.next_u64());
+            let mut counts = vec![0u32; seq];
+            let n = 600;
+            for _ in 0..n {
+                for &i in d.single(seq, keep) {
+                    counts[i as usize] += 1;
+                }
+            }
+            let expect = (n * keep / seq) as f64; // 150
+            for (i, &c) in counts.iter().enumerate() {
+                if (c as f64) < expect * 0.5 || (c as f64) > expect * 1.5 {
+                    return Err(format!("position {i} kept {c} times, expect ~{expect}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,13 @@
+//! Efficient data routing (§3.2): random layerwise token dropping, the
+//! TokenBypass baseline, the MSLG schedule, and the consumed-token
+//! accounting that composes routing with curriculum learning.
+
+pub mod accounting;
+pub mod dropper;
+pub mod schedule;
+pub mod token_bypass;
+
+pub use accounting::TokenAccountant;
+pub use dropper::RandomDropper;
+pub use schedule::{kept_len, mslg_steps_for_saving, token_saving_ratio};
+pub use token_bypass::ImportanceTracker;

@@ -1,0 +1,137 @@
+//! random-LTD kept-length schedules (§3.2).
+//!
+//! MSLG (Monotonic Sequence Length Growth): the kept middle-layer length
+//! grows linearly from `r_start` to the full sequence over `total_steps`,
+//! then dropping stops. The constant schedule (Tab. 14 ablation) keeps a
+//! fixed length for the whole run.
+
+use crate::config::schema::{LtdConfig, LtdSchedule};
+
+/// Kept middle-layer length at `step` for full sequence `seq`.
+/// Returns `seq` (no dropping) once the schedule has finished.
+pub fn kept_len(cfg: &LtdConfig, step: u64, seq: usize) -> usize {
+    let r0 = cfg.r_start.min(seq);
+    match cfg.schedule {
+        LtdSchedule::Constant => {
+            if cfg.total_steps == 0 || step < cfg.total_steps {
+                r0
+            } else {
+                seq
+            }
+        }
+        LtdSchedule::Mslg => {
+            if cfg.total_steps == 0 || step >= cfg.total_steps {
+                return seq;
+            }
+            let frac = step as f64 / cfg.total_steps as f64;
+            let k = r0 as f64 + (seq as f64 - r0 as f64) * frac;
+            (k.round() as usize).clamp(r0, seq)
+        }
+    }
+}
+
+/// Average token-saving ratio of a schedule over a run: 1 - kept/full,
+/// averaged over steps and weighted by the fraction of layers that drop.
+/// This is the quantity Tab. 14/15 sweep ("token saving ratio").
+pub fn token_saving_ratio(
+    cfg: &LtdConfig,
+    total_steps: u64,
+    seq: usize,
+    n_layers: usize,
+    n_drop_layers: usize,
+) -> f64 {
+    if total_steps == 0 || n_layers == 0 {
+        return 0.0;
+    }
+    let mut saved = 0.0;
+    for t in 0..total_steps {
+        let k = kept_len(cfg, t, seq);
+        saved += (seq - k) as f64 / seq as f64;
+    }
+    (saved / total_steps as f64) * (n_drop_layers as f64 / n_layers as f64)
+}
+
+/// Solve for the MSLG `total_steps` that achieves a target token-saving
+/// ratio (used by the Tab. 15 sweep where the paper controls saving ratio
+/// by varying the schedule duration).
+pub fn mslg_steps_for_saving(
+    r_start: usize,
+    seq: usize,
+    n_layers: usize,
+    n_drop_layers: usize,
+    total_steps: u64,
+    target_ratio: f64,
+) -> u64 {
+    // With MSLG over T of Ttot steps, average saving ≈
+    //   (T/Ttot) * 0.5*(1 - r0/s) * (drop_layers/layers)
+    let per_layer = 0.5 * (1.0 - r_start as f64 / seq as f64);
+    let layer_frac = n_drop_layers as f64 / n_layers as f64;
+    let max_ratio = per_layer * layer_frac;
+    if max_ratio <= 0.0 {
+        return 0;
+    }
+    let frac = (target_ratio / max_ratio).clamp(0.0, 1.0);
+    (frac * total_steps as f64).round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::LtdConfig;
+
+    #[test]
+    fn mslg_monotone_and_bounded() {
+        let cfg = LtdConfig::mslg(16, 100);
+        let mut prev = 0;
+        for t in 0..=120 {
+            let k = kept_len(&cfg, t, 64);
+            assert!(k >= 16 && k <= 64);
+            assert!(k >= prev);
+            prev = k;
+        }
+        assert_eq!(kept_len(&cfg, 0, 64), 16);
+        assert_eq!(kept_len(&cfg, 100, 64), 64);
+        assert_eq!(kept_len(&cfg, 50, 64), 40);
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let cfg = LtdConfig::constant(32, 100);
+        assert_eq!(kept_len(&cfg, 0, 64), 32);
+        assert_eq!(kept_len(&cfg, 99, 64), 32);
+        assert_eq!(kept_len(&cfg, 100, 64), 64);
+    }
+
+    #[test]
+    fn kept_len_respects_short_sequences() {
+        // composed with CL: current sequence may be shorter than r_start
+        let cfg = LtdConfig::mslg(32, 100);
+        assert_eq!(kept_len(&cfg, 0, 16), 16);
+    }
+
+    #[test]
+    fn saving_ratio_constant() {
+        // constant keep 32 of 64 on 2 of 4 layers for the whole run:
+        // saving = 0.5 * 0.5 = 0.25
+        let cfg = LtdConfig::constant(32, 100);
+        let r = token_saving_ratio(&cfg, 100, 64, 4, 2);
+        assert!((r - 0.25).abs() < 1e-9, "{r}");
+    }
+
+    #[test]
+    fn saving_ratio_mslg_half_of_constant() {
+        let c = LtdConfig::constant(16, 100);
+        let m = LtdConfig::mslg(16, 100);
+        let rc = token_saving_ratio(&c, 100, 64, 4, 2);
+        let rm = token_saving_ratio(&m, 100, 64, 4, 2);
+        assert!((rm - rc / 2.0).abs() < 0.02, "rc={rc} rm={rm}");
+    }
+
+    #[test]
+    fn steps_for_saving_inverts_ratio() {
+        let t = mslg_steps_for_saving(16, 64, 4, 2, 1000, 0.1);
+        let cfg = LtdConfig::mslg(16, t);
+        let got = token_saving_ratio(&cfg, 1000, 64, 4, 2);
+        assert!((got - 0.1).abs() < 0.02, "target 0.1 got {got}");
+    }
+}

@@ -1,0 +1,170 @@
+//! TokenBypass — the state-of-the-art baseline random-LTD is compared
+//! against (Hou et al. 2022; paper §2, §A.5).
+//!
+//! Mechanics reproduced here:
+//! * **sandwich rule**: one kept set bypasses the whole middle block
+//!   (first/last layers full) — realized by the `bypass`-mode executables;
+//! * **importance-score selection**: dropped tokens are the *unimportant*
+//!   ones, scored from token frequency and an accumulated per-token-id
+//!   loss signal (rare + historically-lossy = important = kept);
+//! * **special-token whitelist**: ids below `n_special` are never dropped;
+//! * optional **MSLG** (the paper grafts its schedule onto TokenBypass for
+//!   the Tab. 15 comparison).
+//!
+//! Position selection works on batch-aggregated id scores: the paper's
+//! per-sample criterion needs per-position gathers inside the model; with
+//! batch-shared keep indices (required by the static-shape executables) we
+//! aggregate importance over the batch column — documented substitution,
+//! same signal at batch granularity.
+
+use crate::data::tokenizer::Tokenizer;
+
+pub struct ImportanceTracker {
+    /// Accumulated loss mass attributed to each token id.
+    cum_loss: Vec<f64>,
+    /// Occurrences seen during training.
+    seen: Vec<u64>,
+    /// Corpus frequency (static prior).
+    corpus_freq: Vec<f64>,
+    n_special: u32,
+}
+
+impl ImportanceTracker {
+    pub fn new(tok: &Tokenizer, n_special: u32) -> ImportanceTracker {
+        let v = tok.vocab_size as usize;
+        let total: f64 = (0..tok.vocab_size).map(|t| tok.count(t) as f64).sum();
+        let corpus_freq = (0..tok.vocab_size)
+            .map(|t| (tok.count(t) as f64 + 1.0) / (total + v as f64))
+            .collect();
+        ImportanceTracker {
+            cum_loss: vec![0.0; v],
+            seen: vec![1; v],
+            corpus_freq,
+            n_special,
+        }
+    }
+
+    /// Attribute a step's mean loss to the token ids it contained
+    /// (the paper accumulates per-token MLM loss; we attribute the batch
+    /// mean to each id present — same accumulation structure).
+    pub fn update(&mut self, tokens: &[i32], step_loss: f64) {
+        for &t in tokens {
+            let t = t as usize;
+            if t < self.cum_loss.len() {
+                self.cum_loss[t] += step_loss;
+                self.seen[t] += 1;
+            }
+        }
+    }
+
+    /// Importance of one token id: rarity prior + running loss average.
+    #[inline]
+    pub fn score(&self, id: u32) -> f64 {
+        let id = id as usize;
+        if (id as u32) < self.n_special {
+            return f64::INFINITY; // whitelist: always kept
+        }
+        let rarity = -self.corpus_freq[id].ln();
+        let loss_avg = self.cum_loss[id] / self.seen[id] as f64;
+        rarity + loss_avg
+    }
+
+    /// Select the `keep` most important positions for a batch of shape
+    /// `[rows, seq]` (layer-shared, sorted ascending). Position importance
+    /// = sum of id scores down the batch column.
+    pub fn select_positions(&self, tokens: &[i32], rows: usize, seq: usize, keep: usize, out: &mut Vec<i32>) {
+        assert_eq!(tokens.len(), rows * seq);
+        assert!(keep <= seq && keep > 0);
+        let mut scored: Vec<(f64, usize)> = (0..seq)
+            .map(|j| {
+                let mut s = 0.0;
+                let mut whitelisted = false;
+                for r in 0..rows {
+                    let id = tokens[r * seq + j] as u32;
+                    if id < self.n_special {
+                        whitelisted = true;
+                    }
+                    let sc = self.score(id);
+                    if sc.is_finite() {
+                        s += sc;
+                    }
+                }
+                (if whitelisted { f64::INFINITY } else { s }, j)
+            })
+            .collect();
+        // descending by importance; stable tie-break on position
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1)));
+        out.clear();
+        out.extend(scored[..keep].iter().map(|&(_, j)| j as i32));
+        out.sort_unstable();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, CorpusConfig};
+    use crate::data::tokenizer::{Tokenizer, CLS, N_SPECIAL};
+
+    fn tracker() -> (ImportanceTracker, Tokenizer) {
+        let c = Corpus::generate(CorpusConfig { n_docs: 300, seed: 6, ..Default::default() });
+        let t = Tokenizer::from_corpus(&c);
+        (ImportanceTracker::new(&t, N_SPECIAL), t)
+    }
+
+    #[test]
+    fn rare_tokens_more_important() {
+        let (tr, tok) = tracker();
+        let mut ids: Vec<u32> = (N_SPECIAL..tok.vocab_size).collect();
+        ids.sort_by_key(|&i| std::cmp::Reverse(tok.count(i)));
+        let common = ids[0];
+        let rare = *ids.last().unwrap();
+        assert!(tr.score(rare) > tr.score(common));
+    }
+
+    #[test]
+    fn loss_accumulation_raises_importance() {
+        let (mut tr, _) = tracker();
+        let id = N_SPECIAL + 10;
+        let before = tr.score(id);
+        tr.update(&[id as i32; 8], 5.0);
+        assert!(tr.score(id) > before);
+    }
+
+    #[test]
+    fn specials_always_kept() {
+        let (tr, _) = tracker();
+        // column 0 = CLS in every row; must survive any selection
+        let rows = 4;
+        let seq = 8;
+        let mut tokens = vec![(N_SPECIAL + 3) as i32; rows * seq];
+        for r in 0..rows {
+            tokens[r * seq] = CLS as i32;
+        }
+        let mut out = Vec::new();
+        tr.select_positions(&tokens, rows, seq, 2, &mut out);
+        assert!(out.contains(&0), "{out:?}");
+        assert!(out.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn selects_most_important_columns() {
+        let (mut tr, tok) = tracker();
+        // make one column's id very lossy
+        let hot = (N_SPECIAL + 50) as i32;
+        tr.update(&vec![hot; 32], 50.0);
+        let rows = 2;
+        let seq = 6;
+        // all columns share a common id except column 3 which carries `hot`
+        let mut ids: Vec<u32> = (N_SPECIAL..tok.vocab_size).collect();
+        ids.sort_by_key(|&i| std::cmp::Reverse(tok.count(i)));
+        let common = ids[0] as i32;
+        let mut tokens = vec![common; rows * seq];
+        for r in 0..rows {
+            tokens[r * seq + 3] = hot;
+        }
+        let mut out = Vec::new();
+        tr.select_positions(&tokens, rows, seq, 1, &mut out);
+        assert_eq!(out, vec![3]);
+    }
+}

@@ -1,0 +1,226 @@
+//! dsde — the DeepSpeed-Data-Efficiency-reproduction CLI (L3 leader
+//! entrypoint).
+//!
+//! ```text
+//! dsde info                         manifest + registry summary
+//! dsde roofline                     L1 kernel VMEM/MXU estimates
+//! dsde analyze [--docs N] [--workers W] [--metric voc|seqreo|seqreo_voc]
+//!                                   run the map-reduce analyzer, save the
+//!                                   mmap index under runs/
+//! dsde train [--preset P] [--family F] [--steps N] [--lr X] [--seed S]
+//!            [--config FILE] [--eval-every K]
+//!                                   run one training; prints the curve
+//! dsde pareto [--steps N]           quick Fig.2-style sweep (3 budgets)
+//! ```
+
+use anyhow::{anyhow, bail};
+use dsde::analysis::analyzer::AnalyzerConfig;
+use dsde::analysis::metrics;
+use dsde::config::args::Args;
+use dsde::config::json::Json;
+use dsde::config::presets;
+use dsde::config::schema::{run_config_from_json, RunConfig};
+use dsde::data::corpus::{Corpus, CorpusConfig};
+use dsde::data::dataset::{BertDataset, GptDataset};
+use dsde::data::tokenizer::Tokenizer;
+use dsde::exp::{relative_quality, run_cases};
+use dsde::sim::{max_seq_tile, AttentionTile};
+use dsde::train::TrainEnv;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const VALUE_KEYS: &[&str] = &[
+    "docs", "workers", "metric", "preset", "family", "steps", "lr", "seed",
+    "config", "eval-every", "out",
+];
+
+fn run(argv: &[String]) -> dsde::Result<()> {
+    let args = Args::parse(argv, VALUE_KEYS)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("info") => info(),
+        Some("roofline") => roofline(),
+        Some("analyze") => analyze(&args),
+        Some("train") => train(&args),
+        Some("pareto") => pareto(&args),
+        Some(cmd) => bail!("unknown command '{cmd}' (try: info, roofline, analyze, train, pareto)"),
+        None => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "dsde — DeepSpeed Data Efficiency reproduction
+commands: info | roofline | analyze | train | pareto   (see README.md)";
+
+fn info() -> dsde::Result<()> {
+    let rt = dsde::runtime::Runtime::open_default()?;
+    println!("artifacts dir: {}", rt.registry.dir.display());
+    println!("families:");
+    for (name, f) in &rt.registry.families {
+        println!(
+            "  {name:<5} d={} L={} H={} ff={} seq={} batch={} params={} (experts={} classes={})",
+            f.d_model, f.n_layers, f.n_heads, f.d_ff, f.max_seq, f.batch, f.n_params,
+            f.n_experts, f.n_classes
+        );
+    }
+    println!("artifacts: {}", rt.registry.artifacts.len());
+    for (name, a) in &rt.registry.artifacts {
+        println!(
+            "  {name:<28} kind={:<5} seq={:<3} keep={:<3} in={} out={}",
+            a.kind,
+            a.seq,
+            a.keep,
+            a.inputs.len(),
+            a.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn roofline() -> dsde::Result<()> {
+    println!("L1 Pallas attention kernel — TPUv4-like roofline estimates");
+    println!("(interpret=True wallclock is not a TPU proxy; see DESIGN.md §Perf)\n");
+    for (s, d) in [(64, 16), (128, 64), (512, 64), (2048, 64)] {
+        for bytes in [4usize, 2] {
+            let est = AttentionTile { seq: s, head_dim: d, bytes_per_elem: bytes }.estimate();
+            println!(
+                "seq={s:<5} head_dim={d:<3} {}: vmem/block={:>8} B fits={} intensity={:>7.1} \
+                 flop/B mxu_bound={:>5.1}%",
+                if bytes == 4 { "f32 " } else { "bf16" },
+                est.vmem_bytes,
+                est.fits_vmem,
+                est.intensity,
+                est.mxu_utilization_bound * 100.0
+            );
+        }
+    }
+    println!(
+        "\nmax causal-attention seq tile within 16MiB VMEM: f32={} bf16={}",
+        max_seq_tile(64, 4),
+        max_seq_tile(64, 2)
+    );
+    Ok(())
+}
+
+fn analyze(args: &Args) -> dsde::Result<()> {
+    let n_docs = args.get_u64("docs", 2000)? as usize;
+    let workers = args.get_u64("workers", 4)? as usize;
+    let metric = args.get_str("metric", "voc");
+    let corpus = Corpus::generate(CorpusConfig { n_docs, ..Default::default() });
+    let tok = Tokenizer::from_corpus(&corpus);
+    let acfg = AnalyzerConfig { n_workers: workers, ..Default::default() };
+    let (index, report) = match metric {
+        "voc" => {
+            let ds = GptDataset::build(&corpus, &tok, 64);
+            metrics::gpt_voc(&ds, &tok, &acfg)
+        }
+        "seqreo" => {
+            let ds = BertDataset::build(&corpus, &tok, 64);
+            metrics::bert_eff_len(&ds, &acfg)
+        }
+        "seqreo_voc" => {
+            let ds = BertDataset::build(&corpus, &tok, 64);
+            metrics::bert_seqreo_voc(&ds, &tok, &acfg)
+        }
+        m => bail!("unknown metric '{m}'"),
+    };
+    println!(
+        "analyzed {} samples with {} workers ({} shards): map {:.3}s reduce {:.3}s \
+         ({:.0} samples/s)",
+        report.n_samples,
+        report.n_workers,
+        report.n_shards,
+        report.map_secs,
+        report.reduce_secs,
+        report.samples_per_sec()
+    );
+    let out = std::path::PathBuf::from(args.get_str("out", "runs/index.bin"));
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    index.save(&out)?;
+    println!(
+        "index ({} entries, metric {}) -> {}",
+        index.len(),
+        index.metric(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn train(args: &Args) -> dsde::Result<()> {
+    let steps = args.get_u64("steps", 100)?;
+    let lr = args.get_f64("lr", 3e-3)?;
+    let family = args.get_str("family", "gpt").to_string();
+    let mut cfg: RunConfig = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)?;
+        run_config_from_json(&Json::parse(&text)?, &family)?
+    } else if let Some(p) = args.get("preset") {
+        presets::by_name(p, steps, lr, 64).ok_or_else(|| {
+            anyhow!("unknown preset '{p}' (gpt-pretrain, bert-pretrain, gpt-finetune, vit-finetune)")
+        })?
+    } else {
+        RunConfig::baseline(&family, steps, lr)
+    };
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.eval_every = args.get_u64("eval-every", steps.div_ceil(5).max(1))?;
+    println!("case: {} on {} for {} steps", cfg.case_name(), cfg.family, cfg.total_steps);
+    let env = TrainEnv::new(args.get_u64("docs", 1000)? as usize, 7)?;
+    let r = env.run(cfg)?;
+    println!("\nstep      tokens        eval_loss   ppl");
+    for p in &r.curve {
+        println!(
+            "{:<9} {:<13.0} {:<11.4} {:.2}",
+            p.step,
+            p.compute_tokens,
+            p.eval_loss,
+            p.eval_loss.exp()
+        );
+    }
+    println!(
+        "\nfinal: eval_loss={:.4} ppl={:.2} data_tokens={} compute_tokens={:.0} \
+         saving={:.1}% wall={:.1}s step={:.1}ms",
+        r.final_eval_loss,
+        r.perplexity(),
+        r.data_tokens,
+        r.compute_tokens,
+        r.saving_ratio * 100.0,
+        r.wall_secs,
+        r.step_secs * 1e3
+    );
+    if let Some(acc) = r.final_accuracy {
+        println!("accuracy: {:.1}%", acc * 100.0);
+    }
+    println!("dispatch: {:?}", r.dispatch);
+    Ok(())
+}
+
+fn pareto(args: &Args) -> dsde::Result<()> {
+    let full = args.get_u64("steps", 120)?;
+    let env = TrainEnv::new(800, 7)?;
+    let fam = env.rt.registry.family("gpt")?.clone();
+    let pairs = dsde::exp::cases::fig2_pairs(full, fam.max_seq, 1234, &[0.25, 0.5, 1.0]);
+    let mut results = Vec::new();
+    for (f, base, comp) in pairs {
+        let rs = run_cases(&env, vec![base, comp])?;
+        results.push((f, rs));
+    }
+    let baseline_full = results.last().unwrap().1[0].final_eval_loss;
+    println!("\nfraction  baseline_q  composed_q");
+    for (f, rs) in &results {
+        println!(
+            "{:<9.2} {:<11.1} {:<10.1}",
+            f,
+            relative_quality(baseline_full, rs[0].final_eval_loss),
+            relative_quality(baseline_full, rs[1].final_eval_loss)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,384 @@
+//! Artifact registry: parses `artifacts/manifest.json` (written by the
+//! Python AOT pass) and routes each training step to the right compiled
+//! variant — the bucketed-dispatch decision at the heart of the L3
+//! coordinator (DESIGN.md §Why a variant grid).
+
+use crate::config::json::Json;
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn from_name(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            _ => bail!("unknown dtype '{s}'"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Routing mode of a compiled variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Plain,
+    Ltd,
+    Bypass,
+}
+
+impl Mode {
+    fn from_name(s: &str) -> Result<Mode> {
+        Ok(match s {
+            "plain" => Mode::Plain,
+            "ltd" => Mode::Ltd,
+            "bypass" => Mode::Bypass,
+            _ => bail!("unknown mode '{s}'"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub family: String,
+    pub kind: String, // train | eval | init
+    pub seq: usize,
+    pub mode: Mode,
+    pub keep: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct FamilyInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+    pub n_experts: usize,
+    pub n_classes: usize,
+    pub patch_dim: usize,
+    pub n_middle_layers: usize,
+    pub seq_buckets: Vec<usize>,
+    pub ltd_seqs: Vec<usize>,
+    pub keep_buckets: BTreeMap<usize, Vec<usize>>,
+    pub n_params: usize,
+}
+
+/// Parsed manifest + routing logic. Executable compilation/caching lives in
+/// [`crate::runtime::Runtime`], which holds the PJRT client.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub families: BTreeMap<String, FamilyInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+/// The result of routing a requested (seq, keep) to compiled buckets.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Route {
+    pub artifact: String,
+    /// Bucketed sequence length actually used.
+    pub seq: usize,
+    /// Kept middle-layer length actually used (== seq when not dropping).
+    pub keep: usize,
+    pub mode: Mode,
+}
+
+impl Registry {
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest_path.display()))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        let mut families = BTreeMap::new();
+        for (name, f) in v.get("families").as_obj().ok_or_else(|| anyhow!("manifest: families"))? {
+            let mut keep_buckets = BTreeMap::new();
+            if let Some(kb) = f.get("keep_buckets").as_obj() {
+                for (s, arr) in kb {
+                    let s: usize = s.parse()?;
+                    let ks = arr
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("keep_buckets"))?
+                        .iter()
+                        .filter_map(|x| x.as_usize())
+                        .collect();
+                    keep_buckets.insert(s, ks);
+                }
+            }
+            let usizes = |key: &str| -> Vec<usize> {
+                f.get(key)
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default()
+            };
+            let u = |key: &str| f.get(key).as_usize().unwrap_or(0);
+            families.insert(
+                name.clone(),
+                FamilyInfo {
+                    name: name.clone(),
+                    vocab: u("vocab"),
+                    d_model: u("d_model"),
+                    n_layers: u("n_layers"),
+                    n_heads: u("n_heads"),
+                    d_ff: u("d_ff"),
+                    max_seq: u("max_seq"),
+                    batch: u("batch"),
+                    n_experts: u("n_experts"),
+                    n_classes: u("n_classes"),
+                    patch_dim: u("patch_dim"),
+                    n_middle_layers: u("n_middle_layers"),
+                    seq_buckets: usizes("seq_buckets"),
+                    ltd_seqs: usizes("ltd_seqs"),
+                    keep_buckets,
+                    n_params: u("n_params"),
+                },
+            );
+        }
+        let mut artifacts = BTreeMap::new();
+        for a in v.get("artifacts").as_arr().ok_or_else(|| anyhow!("manifest: artifacts"))? {
+            let spec_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                a.get(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("artifact {key}"))?
+                    .iter()
+                    .map(|s| {
+                        Ok(TensorSpec {
+                            name: s.get("name").as_str().unwrap_or("").to_string(),
+                            dtype: DType::from_name(s.get("dtype").as_str().unwrap_or("f32"))?,
+                            shape: s
+                                .get("shape")
+                                .as_arr()
+                                .map(|x| x.iter().filter_map(|d| d.as_usize()).collect())
+                                .unwrap_or_default(),
+                        })
+                    })
+                    .collect()
+            };
+            let info = ArtifactInfo {
+                name: a.get("name").as_str().unwrap_or("").to_string(),
+                file: a.get("file").as_str().unwrap_or("").to_string(),
+                family: a.get("family").as_str().unwrap_or("").to_string(),
+                kind: a.get("kind").as_str().unwrap_or("").to_string(),
+                seq: a.get("seq").as_usize().unwrap_or(0),
+                mode: Mode::from_name(a.get("mode").as_str().unwrap_or("plain"))?,
+                keep: a.get("keep").as_usize().unwrap_or(0),
+                inputs: spec_list("inputs")?,
+                outputs: spec_list("outputs")?,
+            };
+            artifacts.insert(info.name.clone(), info);
+        }
+        Ok(Registry { dir: dir.to_path_buf(), families, artifacts })
+    }
+
+    pub fn family(&self, name: &str) -> Result<&FamilyInfo> {
+        self.families
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown family '{name}' (manifest has: {:?})",
+                self.families.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let info = self.artifact(name)?;
+        Ok(self.dir.join(&info.file))
+    }
+
+    /// Smallest compiled sequence bucket ≥ `requested` (conservative: the
+    /// curriculum is never given a *shorter* sequence than it asked for).
+    pub fn seq_bucket(&self, family: &str, requested: usize) -> Result<usize> {
+        let f = self.family(family)?;
+        Ok(*f
+            .seq_buckets
+            .iter()
+            .find(|&&b| b >= requested)
+            .unwrap_or(f.seq_buckets.last().ok_or_else(|| anyhow!("no seq buckets"))?))
+    }
+
+    /// Route a train step: requested sequence length and kept middle-layer
+    /// length → compiled variant. Keep is rounded UP to the nearest bucket
+    /// (drop fewer tokens than asked, never more), falling back to the
+    /// plain variant when no dropping is possible/needed.
+    pub fn route_train(
+        &self,
+        family: &str,
+        requested_seq: usize,
+        requested_keep: usize,
+        mode: Mode,
+    ) -> Result<Route> {
+        let f = self.family(family)?;
+        let seq = self.seq_bucket(family, requested_seq)?;
+        let plain = Route {
+            artifact: format!("{family}_train_s{seq}_full"),
+            seq,
+            keep: seq,
+            mode: Mode::Plain,
+        };
+        if mode == Mode::Plain || requested_keep >= seq {
+            self.artifact(&plain.artifact)?;
+            return Ok(plain);
+        }
+        // dropping requested: find the keep bucket
+        let buckets = match f.keep_buckets.get(&seq) {
+            Some(b) if f.ltd_seqs.contains(&seq) || mode == Mode::Bypass => b.clone(),
+            _ => Vec::new(),
+        };
+        let keep = buckets.iter().copied().find(|&k| k >= requested_keep);
+        let (keep, exists) = match keep {
+            Some(k) => {
+                let name = match mode {
+                    Mode::Ltd => format!("{family}_train_s{seq}_ltd{k}"),
+                    Mode::Bypass => format!("{family}_train_s{seq}_bypass{k}"),
+                    Mode::Plain => unreachable!(),
+                };
+                (k, self.artifacts.contains_key(&name).then_some(name))
+            }
+            None => (seq, None),
+        };
+        match exists {
+            Some(artifact) => Ok(Route { artifact, seq, keep, mode }),
+            None => {
+                self.artifact(&plain.artifact)?;
+                Ok(plain)
+            }
+        }
+    }
+
+    pub fn eval_name(&self, family: &str) -> Result<String> {
+        let f = self.family(family)?;
+        let name = format!("{family}_eval_s{}", f.max_seq);
+        self.artifact(&name)?;
+        Ok(name)
+    }
+
+    pub fn init_name(&self, family: &str) -> Result<String> {
+        let name = format!("{family}_init");
+        self.artifact(&name)?;
+        Ok(name)
+    }
+}
+
+/// Default artifacts directory: `$DSDE_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("DSDE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Registry {
+        Registry::load(&default_artifacts_dir()).expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn manifest_loads_all_families() {
+        let r = registry();
+        for f in ["gpt", "bert", "vit", "moe"] {
+            let fam = r.family(f).unwrap();
+            assert!(fam.n_layers >= 3);
+            assert!(fam.n_params > 10);
+        }
+        assert!(r.artifacts.len() >= 40);
+    }
+
+    #[test]
+    fn seq_bucket_rounds_up() {
+        let r = registry();
+        assert_eq!(r.seq_bucket("gpt", 1).unwrap(), 8);
+        assert_eq!(r.seq_bucket("gpt", 8).unwrap(), 8);
+        assert_eq!(r.seq_bucket("gpt", 9).unwrap(), 16);
+        assert_eq!(r.seq_bucket("gpt", 33).unwrap(), 64);
+        assert_eq!(r.seq_bucket("gpt", 64).unwrap(), 64);
+        assert_eq!(r.seq_bucket("gpt", 999).unwrap(), 64, "clamped to max");
+    }
+
+    #[test]
+    fn route_plain_when_no_drop() {
+        let r = registry();
+        let route = r.route_train("gpt", 64, 64, Mode::Ltd).unwrap();
+        assert_eq!(route.artifact, "gpt_train_s64_full");
+        assert_eq!(route.keep, 64);
+    }
+
+    #[test]
+    fn route_ltd_rounds_keep_up() {
+        let r = registry();
+        let route = r.route_train("gpt", 64, 20, Mode::Ltd).unwrap();
+        assert_eq!(route.artifact, "gpt_train_s64_ltd32");
+        assert_eq!(route.keep, 32);
+        let route = r.route_train("gpt", 64, 5, Mode::Ltd).unwrap();
+        assert_eq!(route.artifact, "gpt_train_s64_ltd16");
+    }
+
+    #[test]
+    fn route_composed_cl_and_ltd() {
+        let r = registry();
+        // CL asks for seq 20 → bucket 32; LTD asks keep 10 → bucket 16
+        let route = r.route_train("gpt", 20, 10, Mode::Ltd).unwrap();
+        assert_eq!(route.artifact, "gpt_train_s32_ltd16");
+        assert_eq!((route.seq, route.keep), (32, 16));
+    }
+
+    #[test]
+    fn route_falls_back_to_plain_when_unavailable() {
+        let r = registry();
+        // seq bucket 8 has no LTD variants for gpt
+        let route = r.route_train("gpt", 8, 2, Mode::Ltd).unwrap();
+        assert_eq!(route.artifact, "gpt_train_s8_full");
+        // moe only has ltd at s=64
+        let route = r.route_train("moe", 32, 8, Mode::Ltd).unwrap();
+        assert_eq!(route.artifact, "moe_train_s32_full");
+    }
+
+    #[test]
+    fn route_bypass() {
+        let r = registry();
+        let route = r.route_train("gpt", 64, 32, Mode::Bypass).unwrap();
+        assert_eq!(route.artifact, "gpt_train_s64_bypass32");
+    }
+
+    #[test]
+    fn io_specs_present() {
+        let r = registry();
+        let a = r.artifact("gpt_train_s64_full").unwrap();
+        assert_eq!(a.inputs.last().unwrap().name, "loss_mask");
+        assert_eq!(a.outputs.last().unwrap().name, "tok");
+        let n_state = 3 * r.family("gpt").unwrap().n_params;
+        assert_eq!(a.inputs.len(), n_state + 2 + 3);
+        assert_eq!(a.outputs.len(), n_state + 3);
+    }
+}

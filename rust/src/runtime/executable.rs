@@ -1,0 +1,145 @@
+//! One loaded+compiled step executable, with typed literal helpers.
+//!
+//! Loading path (see /opt/xla-example/load_hlo): HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → PJRT compile.
+//! Execution takes host `Literal`s and returns the decomposed output tuple
+//! as `Vec<Literal>` — the training state round-trips through the host,
+//! which is measured (runtime_overhead bench) and negligible at this
+//! model scale.
+
+use crate::runtime::artifacts::{ArtifactInfo, DType};
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::Path;
+
+pub struct Step {
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall-clock spent compiling (registry cache statistics).
+    pub compile_secs: f64,
+}
+
+impl Step {
+    pub fn load(client: &xla::PjRtClient, path: &Path, info: ArtifactInfo) -> Result<Step> {
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {}", info.name))?;
+        Ok(Step { info, exe, compile_secs: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Execute with positional literal inputs; returns the decomposed
+    /// output tuple (order per `info.outputs`).
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::Literal> = args.iter().collect();
+        self.execute_refs(&refs)
+    }
+
+    /// Reference-taking variant: lets the caller keep large state literals
+    /// owned elsewhere (no deep clone on the hot path).
+    pub fn execute_refs(&self, args: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.info.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.info.name,
+                self.info.inputs.len(),
+                args.len()
+            );
+        }
+        let out = self.exe.execute::<&xla::Literal>(args)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != self.info.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.info.name,
+                self.info.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+
+/// Build a literal from i32 data with the given dims.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_i32: {} elements for dims {dims:?}", data.len());
+    }
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: {} elements for dims {dims:?}", data.len());
+    }
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_u32(v: u32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read a scalar f32 out of a literal.
+pub fn get_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Validate a literal against a manifest tensor spec (debug guard on the
+/// hot path; cheap — shape metadata only).
+pub fn check_spec(lit: &xla::Literal, spec: &crate::runtime::artifacts::TensorSpec) -> Result<()> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    if dims != spec.shape {
+        bail!("{}: literal dims {dims:?} != spec {:?}", spec.name, spec.shape);
+    }
+    let ty = lit.ty()?;
+    let ok = matches!(
+        (spec.dtype, ty),
+        (DType::F32, xla::ElementType::F32)
+            | (DType::I32, xla::ElementType::S32)
+            | (DType::U32, xla::ElementType::U32)
+    );
+    if !ok {
+        bail!("{}: literal dtype {ty:?} != spec {:?}", spec.name, spec.dtype);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_builders_shape_checked() {
+        assert!(lit_i32(&[1, 2, 3], &[2, 2]).is_err());
+        let l = lit_i32(&[1, 2, 3, 4], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let l = lit_f32(&[0.5; 6], &[2, 3]).unwrap();
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn scalars_roundtrip() {
+        assert_eq!(get_f32(&scalar_f32(2.5)).unwrap(), 2.5);
+        let u = scalar_u32(7);
+        assert_eq!(u.get_first_element::<u32>().unwrap(), 7);
+    }
+}

@@ -1,0 +1,9 @@
+//! Simulation/estimation layer: the calibrated paper-scale cost model and
+//! the L1 kernel roofline estimator (see DESIGN.md §Substitutions — these
+//! produce the explicitly-simulated columns of the reproduced tables).
+
+pub mod cost;
+pub mod roofline;
+
+pub use cost::{CostModel, CostReport};
+pub use roofline::{max_seq_tile, AttentionTile, RooflineEstimate};

@@ -1,0 +1,112 @@
+//! L1 kernel roofline estimator — the structural performance model for the
+//! Pallas attention kernel (DESIGN.md §Perf / §Hardware-Adaptation).
+//!
+//! interpret=True wallclock is CPU-numpy time, not a TPU proxy, so the
+//! kernel is optimized *structurally*: this module computes, per kernel
+//! configuration, the VMEM footprint of one grid point's tiles and the
+//! arithmetic-intensity-based MXU utilization bound on a TPUv4-like core
+//! (16 MiB VMEM, 275 TFLOP/s bf16 MXU, 1.2 TB/s HBM).
+
+/// TPUv4-like core model.
+pub const VMEM_BYTES: usize = 16 * 1024 * 1024;
+pub const MXU_FLOPS: f64 = 275e12;
+pub const HBM_BYTES_PER_S: f64 = 1.2e12;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AttentionTile {
+    pub seq: usize,
+    pub head_dim: usize,
+    pub bytes_per_elem: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct RooflineEstimate {
+    /// VMEM bytes resident for one (batch, head) grid point, double-buffered.
+    pub vmem_bytes: usize,
+    pub fits_vmem: bool,
+    /// FLOPs per grid point (fwd).
+    pub flops: f64,
+    /// HBM bytes moved per grid point (q,k,v in; o,lse out).
+    pub hbm_bytes: f64,
+    /// FLOP/byte arithmetic intensity.
+    pub intensity: f64,
+    /// Fraction of MXU peak achievable at this intensity (roofline).
+    pub mxu_utilization_bound: f64,
+}
+
+impl AttentionTile {
+    /// Forward-kernel estimate: tiles are q,k,v,o [S,D] + scores [S,S] +
+    /// lse [S]; double buffering doubles the streamed tiles.
+    pub fn estimate(&self) -> RooflineEstimate {
+        let (s, d, b) = (self.seq, self.head_dim, self.bytes_per_elem);
+        let sd = s * d * b;
+        let ss = s * s * b;
+        // q,k,v streamed (double-buffered) + scores + o + lse resident.
+        let vmem = 2 * (3 * sd) + ss + sd + s * b;
+        // 2 matmuls (S×D×S each: QK^T and PV) = 2 * 2*S*S*D flops
+        let flops = 4.0 * (s * s * d) as f64;
+        // HBM: read q,k,v; write o + lse (scores stay in VMEM — the point
+        // of the fused kernel).
+        let hbm = (4 * sd + s * b) as f64;
+        let intensity = flops / hbm;
+        let machine_balance = MXU_FLOPS / HBM_BYTES_PER_S;
+        RooflineEstimate {
+            vmem_bytes: vmem,
+            fits_vmem: vmem <= VMEM_BYTES,
+            flops,
+            hbm_bytes: hbm,
+            intensity,
+            mxu_utilization_bound: (intensity / machine_balance).min(1.0),
+        }
+    }
+}
+
+/// Largest sequence tile that keeps the fwd working set inside VMEM for a
+/// given head dim (what BlockSpec tiling should target on real hardware).
+pub fn max_seq_tile(head_dim: usize, bytes_per_elem: usize) -> usize {
+    let mut best = 0;
+    let mut s = 8;
+    while s <= 16384 {
+        let est = AttentionTile { seq: s, head_dim, bytes_per_elem }.estimate();
+        if est.fits_vmem {
+            best = s;
+        } else {
+            break;
+        }
+        s *= 2;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repo_kernel_fits_vmem_easily() {
+        // our shapes: S=64, D=16 heads of d_model 64 (head_dim 16), f32
+        let est = AttentionTile { seq: 64, head_dim: 16, bytes_per_elem: 4 }.estimate();
+        assert!(est.fits_vmem);
+        assert!(est.vmem_bytes < 64 * 1024, "{}", est.vmem_bytes);
+        assert!(est.flops > 0.0 && est.intensity > 0.0);
+    }
+
+    #[test]
+    fn intensity_grows_with_seq() {
+        let small = AttentionTile { seq: 64, head_dim: 64, bytes_per_elem: 2 }.estimate();
+        let big = AttentionTile { seq: 1024, head_dim: 64, bytes_per_elem: 2 }.estimate();
+        assert!(big.intensity > small.intensity);
+        assert!(big.mxu_utilization_bound >= small.mxu_utilization_bound);
+    }
+
+    #[test]
+    fn vmem_bound_is_finite() {
+        let max_bf16 = max_seq_tile(64, 2);
+        let max_f32 = max_seq_tile(64, 4);
+        assert!(max_bf16 >= max_f32, "bf16 fits larger tiles");
+        assert!(max_f32 >= 512, "paper-scale tiles must fit: {max_f32}");
+        // and there IS a bound
+        let too_big = AttentionTile { seq: 32768, head_dim: 64, bytes_per_elem: 4 }.estimate();
+        assert!(!too_big.fits_vmem);
+    }
+}

@@ -1,0 +1,62 @@
+//! In-tree property-testing helper (the offline vendor set has no
+//! proptest; see DESIGN.md §Substitutions).
+//!
+//! [`property`] runs a randomized invariant check over several seeds and
+//! reports the failing seed so the counterexample is reproducible:
+//!
+//! ```no_run
+//! use dsde::testutil::property;
+//! property("sorted stays sorted", 8, |rng| {
+//!     let mut v: Vec<u32> = (0..16).map(|_| rng.next_u32() % 100).collect();
+//!     v.sort();
+//!     if v.windows(2).all(|w| w[0] <= w[1]) { Ok(()) } else { Err("unsorted".into()) }
+//! });
+//! ```
+
+use crate::Pcg32;
+
+/// Run `check` with `iters` independently-seeded PRNGs; panic with the
+/// seed and message on the first failure.
+pub fn property<F>(name: &str, iters: u64, check: F)
+where
+    F: Fn(&mut Pcg32) -> Result<(), String>,
+{
+    // Base seed is overridable for reproducing CI failures.
+    let base = std::env::var("DSDE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x5eed);
+    for i in 0..iters {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9e3779b97f4a7c15));
+        let mut rng = Pcg32::seeded(seed);
+        if let Err(msg) = check(&mut rng) {
+            panic!(
+                "property '{name}' failed at iter {i} (DSDE_PROP_SEED={base}, \
+                 effective seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_invariant_holds() {
+        property("always ok", 16, |rng| {
+            let x = rng.gen_range(10);
+            if x < 10 {
+                Ok(())
+            } else {
+                Err(format!("{x}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn panics_with_seed_on_failure() {
+        property("must fail", 4, |_| Err("boom".into()));
+    }
+}

@@ -1,0 +1,192 @@
+//! TrainEnv: one-stop environment that owns the runtime, the synthetic
+//! corpora (train + held-out), the tokenizer, the per-family datasets and
+//! the offline difficulty indexes — and constructs [`Trainer`]s for any
+//! [`RunConfig`].
+//!
+//! Built once per process/bench; every paper-table case then runs against
+//! identical data and indexes (so case rows differ only in technique).
+
+use crate::analysis::analyzer::AnalyzerConfig;
+use crate::analysis::metrics;
+use crate::config::schema::{Metric, Routing, RunConfig};
+use crate::curriculum::sampler::{PoolSampler, Sampler, UniformSampler};
+use crate::curriculum::scheduler::{ClState, SeqTransform};
+use crate::curriculum::{BertLoader, GptLoader, LmBatch, VitBatch, VitLoader};
+use crate::data::corpus::{Corpus, CorpusConfig};
+use crate::data::dataset::{BertDataset, GptDataset, VitDataset};
+use crate::data::index::DifficultyIndex;
+use crate::data::tokenizer::{Tokenizer, N_SPECIAL};
+use crate::ltd::ImportanceTracker;
+use crate::runtime::Runtime;
+use crate::train::trainer::{EvalSet, LoaderKind, RunResult, Trainer};
+use crate::Result;
+use anyhow::bail;
+use std::sync::Arc;
+
+pub struct TrainEnv {
+    pub rt: Runtime,
+    pub tokenizer: Tokenizer,
+    pub gpt_train: Arc<GptDataset>,
+    pub gpt_eval: Arc<GptDataset>,
+    pub bert_train: Arc<BertDataset>,
+    pub bert_eval: Arc<BertDataset>,
+    pub vit: Arc<VitDataset>,
+    pub gpt_voc: Arc<DifficultyIndex>,
+    pub bert_voc: Arc<DifficultyIndex>,
+    pub bert_seqreo: Arc<DifficultyIndex>,
+    pub bert_seqreo_voc: Arc<DifficultyIndex>,
+    pub eval_batches: usize,
+}
+
+impl TrainEnv {
+    /// Build with `n_docs` training documents (held-out eval corpus is
+    /// n_docs/8 docs on a shifted seed).
+    pub fn new(n_docs: usize, seed: u64) -> Result<TrainEnv> {
+        let rt = Runtime::open_default()?;
+        let train_corpus = Corpus::generate(CorpusConfig {
+            n_docs,
+            seed,
+            ..CorpusConfig::default()
+        });
+        let eval_corpus = Corpus::generate(CorpusConfig {
+            n_docs: (n_docs / 8).max(32),
+            seed: seed ^ 0xe7a1,
+            ..CorpusConfig::default()
+        });
+        let tokenizer = Tokenizer::from_corpus(&train_corpus);
+        let max_seq = rt.registry.family("gpt")?.max_seq;
+        let gpt_train = Arc::new(GptDataset::build(&train_corpus, &tokenizer, max_seq));
+        let gpt_eval = Arc::new(GptDataset::build(&eval_corpus, &tokenizer, max_seq));
+        let bert_train = Arc::new(BertDataset::build(&train_corpus, &tokenizer, max_seq));
+        let bert_eval = Arc::new(BertDataset::build(&eval_corpus, &tokenizer, max_seq));
+        let vfam = rt.registry.family("vit")?.clone();
+        let vit = Arc::new(VitDataset::new(
+            vfam.max_seq - 1,
+            vfam.patch_dim,
+            vfam.n_classes,
+            0.6,
+            seed ^ 0x717,
+        ));
+        // Offline analysis (map-reduce) — the difficulty indexes.
+        let acfg = AnalyzerConfig::default();
+        let (gpt_voc, _) = metrics::gpt_voc(&gpt_train, &tokenizer, &acfg);
+        let (bert_voc, _) = metrics::bert_voc(&bert_train, &tokenizer, &acfg);
+        let (bert_seqreo, _) = metrics::bert_eff_len(&bert_train, &acfg);
+        let (bert_seqreo_voc, _) = metrics::bert_seqreo_voc(&bert_train, &tokenizer, &acfg);
+        Ok(TrainEnv {
+            rt,
+            tokenizer,
+            gpt_train,
+            gpt_eval,
+            bert_train,
+            bert_eval,
+            vit,
+            gpt_voc: Arc::new(gpt_voc),
+            bert_voc: Arc::new(bert_voc),
+            bert_seqreo: Arc::new(bert_seqreo),
+            bert_seqreo_voc: Arc::new(bert_seqreo_voc),
+            eval_batches: 8,
+        })
+    }
+
+    /// The ordering sampler a run's percentile CL metric requires.
+    fn sampler_for(&self, cfg: &RunConfig, n: usize) -> Result<Box<dyn Sampler>> {
+        let pool_metric = cfg
+            .curriculum
+            .iter()
+            .map(|c| c.metric)
+            .find(|m| !m.value_based());
+        let seed = cfg.seed ^ 0x5a3;
+        Ok(match (cfg.family.as_str(), pool_metric) {
+            (_, None) => Box::new(UniformSampler::new(n, seed)),
+            ("gpt" | "moe", Some(Metric::Voc)) => {
+                Box::new(PoolSampler::new(self.gpt_voc.clone(), seed))
+            }
+            ("bert", Some(Metric::Voc)) => {
+                Box::new(PoolSampler::new(self.bert_voc.clone(), seed))
+            }
+            ("bert", Some(Metric::SeqReo)) => {
+                Box::new(PoolSampler::new(self.bert_seqreo.clone(), seed))
+            }
+            (f, Some(m)) => bail!("metric {} unsupported for family {f}", m.name()),
+        })
+    }
+
+    /// Build a trainer for `cfg`.
+    pub fn trainer(&self, cfg: RunConfig) -> Result<Trainer<'_>> {
+        let fam = self.rt.registry.family(&cfg.family)?.clone();
+        let (loader, eval_set) = match cfg.family.as_str() {
+            "gpt" | "moe" => {
+                let n = self.gpt_train.n_samples();
+                let sampler = self.sampler_for(&cfg, n)?;
+                let loader =
+                    LoaderKind::Gpt(GptLoader::new(self.gpt_train.clone(), sampler, fam.batch));
+                (loader, EvalSet::Lm(self.gpt_eval_batches(&fam)))
+            }
+            "bert" => {
+                let n = self.bert_train.n_samples();
+                let sampler = self.sampler_for(&cfg, n)?;
+                let loader = LoaderKind::Bert(BertLoader::new(
+                    self.bert_train.clone(),
+                    sampler,
+                    fam.batch,
+                    self.tokenizer.vocab_size,
+                    cfg.seed ^ 0xb0b,
+                ));
+                (loader, EvalSet::Lm(self.bert_eval_batches(&fam, cfg.seed)))
+            }
+            "vit" => {
+                let loader = LoaderKind::Vit(VitLoader::new(self.vit.clone(), fam.batch, 0));
+                (loader, EvalSet::Vit(self.vit_eval_batches(&fam)))
+            }
+            f => bail!("unknown family '{f}'"),
+        };
+        let importance = match &cfg.routing {
+            Routing::TokenBypass(b) => {
+                Some(ImportanceTracker::new(&self.tokenizer, b.n_special.max(N_SPECIAL)))
+            }
+            _ => None,
+        };
+        Trainer::new(&self.rt, cfg, loader, eval_set, importance)
+    }
+
+    /// Convenience: build + run.
+    pub fn run(&self, cfg: RunConfig) -> Result<RunResult> {
+        self.trainer(cfg)?.run()
+    }
+
+    fn gpt_eval_batches(&self, fam: &crate::runtime::FamilyInfo) -> Vec<LmBatch> {
+        let n = self.gpt_eval.n_samples();
+        let mut loader = GptLoader::new(
+            self.gpt_eval.clone(),
+            Box::new(UniformSampler::new(n, 0x0e7a1)),
+            fam.batch,
+        );
+        let st = ClState { seq: fam.max_seq, transform: SeqTransform::None, pool_pct: 1.0 };
+        (0..self.eval_batches)
+            .map(|_| loader.next_batch(fam.max_seq, &st))
+            .collect()
+    }
+
+    fn bert_eval_batches(&self, fam: &crate::runtime::FamilyInfo, _seed: u64) -> Vec<LmBatch> {
+        let n = self.bert_eval.n_samples();
+        // Fixed seed: every run evaluates the identical masked batches.
+        let mut loader = BertLoader::new(
+            self.bert_eval.clone(),
+            Box::new(UniformSampler::new(n, 0x0e7a2)),
+            fam.batch,
+            self.tokenizer.vocab_size,
+            0x0e7a3,
+        );
+        let st = ClState { seq: fam.max_seq, transform: SeqTransform::None, pool_pct: 1.0 };
+        (0..self.eval_batches)
+            .map(|_| loader.next_batch(fam.max_seq, &st))
+            .collect()
+    }
+
+    fn vit_eval_batches(&self, fam: &crate::runtime::FamilyInfo) -> Vec<VitBatch> {
+        // Disjoint cursor range from training (training starts at 0).
+        let mut loader = VitLoader::new(self.vit.clone(), fam.batch, 1 << 40);
+        (0..self.eval_batches).map(|_| loader.next_batch()).collect()
+    }
+}

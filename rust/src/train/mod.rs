@@ -1,0 +1,12 @@
+//! Training: the step orchestrator ([`trainer`]), the data+runtime
+//! environment ([`env`]), the prefetch pipeline ([`pipeline`]) and the
+//! paper's low-cost hyperparameter tuning strategy ([`tuning`]).
+
+pub mod env;
+pub mod pipeline;
+pub mod trainer;
+pub mod tuning;
+
+pub use env::TrainEnv;
+pub use pipeline::Prefetcher;
+pub use trainer::{CurvePoint, EvalSet, LoaderKind, RunResult, Trainer};

@@ -1,0 +1,408 @@
+//! The training orchestrator: composes the curriculum scheduler, the batch
+//! loaders, the token-routing schedules (random-LTD / TokenBypass), the
+//! token accountant and the token-based LR schedule, and drives the
+//! AOT-compiled PJRT executables step by step.
+//!
+//! This is the paper's "DeepSpeed Data Efficiency framework hides several
+//! complexities when composing the two techniques" (§3.3): the trainer
+//! makes random-LTD aware of the CL-adjusted sequence length (kept length
+//! is computed against the *routed* bucket), and charges the LR schedule
+//! with the composed consumed-token count.
+
+use crate::config::schema::{LrBasis, Routing, RunConfig};
+use crate::curriculum::loader::{LmBatch, VitBatch};
+use crate::curriculum::scheduler::ClScheduler;
+use crate::curriculum::{BertLoader, GptLoader, VitLoader};
+use crate::lr::LrSchedule;
+use crate::ltd::schedule::kept_len;
+use crate::ltd::{ImportanceTracker, RandomDropper, TokenAccountant};
+use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_u32, Mode, Runtime};
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// One point on the convergence curve (Fig. 5 reproduction).
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub step: u64,
+    pub compute_tokens: f64,
+    pub eval_loss: f64,
+}
+
+/// Everything a paper table row needs about a finished run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub label: String,
+    pub case: String,
+    pub family: String,
+    pub steps: u64,
+    pub wall_secs: f64,
+    pub data_tokens: u64,
+    pub compute_tokens: f64,
+    pub saving_ratio: f64,
+    pub final_eval_loss: f64,
+    /// ViT only: held-out top-1 accuracy.
+    pub final_accuracy: Option<f64>,
+    pub curve: Vec<CurvePoint>,
+    /// Mean per-step wall time over the run (excludes compile).
+    pub step_secs: f64,
+    /// Executable dispatch histogram (artifact name -> steps).
+    pub dispatch: BTreeMap<String, u64>,
+    /// Mean train loss over the last 10% of steps (cheap progress signal).
+    pub tail_train_loss: f64,
+}
+
+impl RunResult {
+    pub fn perplexity(&self) -> f64 {
+        self.final_eval_loss.exp()
+    }
+}
+
+/// Per-family data plumbing handed to the trainer by
+/// [`crate::train::env::TrainEnv`].
+pub enum LoaderKind {
+    Gpt(GptLoader),
+    Bert(BertLoader),
+    Vit(VitLoader),
+}
+
+/// Fixed held-out evaluation set.
+pub enum EvalSet {
+    Lm(Vec<LmBatch>),
+    Vit(Vec<VitBatch>),
+}
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    run: RunConfig,
+    loader: LoaderKind,
+    eval_set: EvalSet,
+    scheduler: ClScheduler,
+    lr: LrSchedule,
+    accountant: TokenAccountant,
+    dropper: RandomDropper,
+    importance: Option<ImportanceTracker>,
+    state: Vec<xla::Literal>,
+    n_state: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        mut run: RunConfig,
+        loader: LoaderKind,
+        eval_set: EvalSet,
+        importance: Option<ImportanceTracker>,
+    ) -> Result<Trainer<'rt>> {
+        run.validate()?;
+        let fam = rt.registry.family(&run.family)?.clone();
+        let scheduler = ClScheduler::new(&run.curriculum, fam.max_seq)?;
+        // Paper §A.1(5): LR decays over exactly the total training token
+        // budget. If the config doesn't pin it, estimate the composed
+        // budget (CL × LTD aware) analytically.
+        if run.lr.decay_total == 0.0 && run.lr.basis == LrBasis::Tokens {
+            run.lr.decay_total = estimate_compute_tokens(rt, &run)?;
+        } else if run.lr.decay_total == 0.0 {
+            run.lr.decay_total = run.total_steps as f64;
+        }
+        let mut dropper = RandomDropper::new(run.seed ^ 0xd20b);
+        dropper.pin_first_token = run.family == "vit";
+        // Pre-compile every executable this run will route to, so compile
+        // time never pollutes the measured step/wall timings (the registry
+        // caches per process; repeated runs reuse the executables).
+        let (_, planned) = plan_routes(rt, &run)?;
+        for name in &planned {
+            rt.step(name)?;
+        }
+        rt.step(&rt.registry.eval_name(&run.family)?)?;
+        let init = rt.step(&rt.registry.init_name(&run.family)?)?;
+        let state = init.execute(&[scalar_u32(run.seed as u32)])?;
+        let n_state = state.len();
+        Ok(Trainer {
+            rt,
+            lr: LrSchedule::new(run.lr.clone()),
+            scheduler,
+            accountant: TokenAccountant::new(fam.n_layers),
+            dropper,
+            importance,
+            state,
+            n_state,
+            run,
+            loader,
+            eval_set,
+        })
+    }
+
+    /// Requested (seq, keep, mode) for a step, before bucket routing.
+    fn routing_request(&self, step: u64, seq_bucket: usize) -> (usize, Mode) {
+        match &self.run.routing {
+            Routing::None => (seq_bucket, Mode::Plain),
+            Routing::RandomLtd(l) => (kept_len(l, step, seq_bucket), Mode::Ltd),
+            Routing::TokenBypass(b) => {
+                let l = crate::config::schema::LtdConfig {
+                    r_start: b.r_start,
+                    total_steps: b.total_steps,
+                    schedule: b.schedule,
+                    exempt_first_last: true,
+                };
+                (kept_len(&l, step, seq_bucket), Mode::Bypass)
+            }
+        }
+    }
+
+    /// Run to completion.
+    pub fn run(mut self) -> Result<RunResult> {
+        let fam = self.rt.registry.family(&self.run.family)?.clone();
+        let n_mid = fam.n_middle_layers;
+        let mut dispatch: BTreeMap<String, u64> = BTreeMap::new();
+        let mut curve = Vec::new();
+        let mut step_secs_total = 0.0;
+        let mut tail_losses = Vec::new();
+        let tail_from = self.run.total_steps - (self.run.total_steps / 10).max(1);
+        let wall0 = Instant::now();
+
+        for step in 0..self.run.total_steps {
+            let cl = self.scheduler.state_at(step);
+            let seq_bucket = self.rt.registry.seq_bucket(&self.run.family, cl.seq)?;
+            let (keep_req, mode) = self.routing_request(step, seq_bucket);
+            let route =
+                self.rt
+                    .registry
+                    .route_train(&self.run.family, cl.seq, keep_req, mode)?;
+            let exe = self.rt.step(&route.artifact)?;
+            *dispatch.entry(route.artifact.clone()).or_default() += 1;
+
+            let t0 = Instant::now();
+            // ---- assemble inputs: state ++ [t, lr] ++ batch ++ [keep_idx]
+            // State literals are passed by reference (no deep clone on the
+            // hot path); only the small per-step literals are created.
+            let mut extra: Vec<xla::Literal> = Vec::with_capacity(8);
+            let lr_now = self
+                .lr
+                .at_state(self.accountant.compute_tokens(), step);
+            extra.push(scalar_f32((step + 1) as f32));
+            extra.push(scalar_f32(lr_now as f32));
+
+            let (rows, tokens_for_importance) = match &mut self.loader {
+                LoaderKind::Gpt(l) => {
+                    let b = l.next_batch(route.seq, &cl);
+                    let toks = b.tokens.clone();
+                    push_lm_batch(&mut extra, &b)?;
+                    (b.rows, Some((toks, b.rows)))
+                }
+                LoaderKind::Bert(l) => {
+                    let b = l.next_batch(route.seq, &cl);
+                    let toks = b.tokens.clone();
+                    push_lm_batch(&mut extra, &b)?;
+                    (b.rows, Some((toks, b.rows)))
+                }
+                LoaderKind::Vit(l) => {
+                    let b = l.next_batch();
+                    push_vit_batch(&mut extra, &b, &fam)?;
+                    (b.rows, None)
+                }
+            };
+
+            let dropping = route.mode != Mode::Plain && route.keep < route.seq;
+            if dropping {
+                match route.mode {
+                    Mode::Ltd => {
+                        let idx = self.dropper.layerwise(n_mid, route.seq, route.keep);
+                        extra.push(lit_i32(idx, &[n_mid, route.keep])?);
+                    }
+                    Mode::Bypass => {
+                        let tracker = self
+                            .importance
+                            .as_ref()
+                            .ok_or_else(|| anyhow!("TokenBypass needs an ImportanceTracker"))?;
+                        let (toks, rows) = tokens_for_importance
+                            .as_ref()
+                            .ok_or_else(|| anyhow!("TokenBypass needs token batches"))?;
+                        let mut out = Vec::new();
+                        tracker.select_positions(toks, *rows, route.seq, route.keep, &mut out);
+                        extra.push(lit_i32(&out, &[route.keep])?);
+                    }
+                    Mode::Plain => unreachable!(),
+                }
+            }
+
+            // ---- execute
+            let args: Vec<&xla::Literal> =
+                self.state.iter().chain(extra.iter()).collect();
+            let out = exe.execute_refs(&args)?;
+            let loss = crate::runtime::get_f32(&out[self.n_state])? as f64;
+            if !loss.is_finite() {
+                bail!("{}: non-finite loss at step {step}", self.run.label);
+            }
+            self.state.truncate(0);
+            self.state.extend(out.into_iter().take(self.n_state));
+            step_secs_total += t0.elapsed().as_secs_f64();
+
+            // ---- bookkeeping
+            self.accountant.record(
+                rows,
+                route.seq,
+                route.keep,
+                if dropping { n_mid } else { 0 },
+            );
+            if let (Some(tr), Some((toks, _))) =
+                (self.importance.as_mut(), tokens_for_importance.as_ref())
+            {
+                tr.update(toks, loss);
+            }
+            if step >= tail_from {
+                tail_losses.push(loss);
+            }
+            if self.run.eval_every > 0 && (step + 1) % self.run.eval_every == 0 {
+                let (el, _) = self.evaluate()?;
+                curve.push(CurvePoint {
+                    step: step + 1,
+                    compute_tokens: self.accountant.compute_tokens(),
+                    eval_loss: el,
+                });
+            }
+        }
+
+        let (final_eval_loss, final_accuracy) = self.evaluate()?;
+        curve.push(CurvePoint {
+            step: self.run.total_steps,
+            compute_tokens: self.accountant.compute_tokens(),
+            eval_loss: final_eval_loss,
+        });
+        Ok(RunResult {
+            label: self.run.label.clone(),
+            case: self.run.case_name(),
+            family: self.run.family.clone(),
+            steps: self.run.total_steps,
+            wall_secs: wall0.elapsed().as_secs_f64(),
+            data_tokens: self.accountant.data_tokens,
+            compute_tokens: self.accountant.compute_tokens(),
+            saving_ratio: self.accountant.saving_ratio(),
+            final_eval_loss,
+            final_accuracy,
+            curve,
+            step_secs: step_secs_total / self.run.total_steps.max(1) as f64,
+            dispatch,
+            tail_train_loss: mean(&tail_losses),
+        })
+    }
+
+    /// Held-out evaluation: token-weighted mean loss (and ViT accuracy).
+    pub fn evaluate(&self) -> Result<(f64, Option<f64>)> {
+        let eval = self.rt.step(&self.rt.registry.eval_name(&self.run.family)?)?;
+        let fam = self.rt.registry.family(&self.run.family)?;
+        let n_params = fam.n_params;
+        let mut loss_sum = 0.0f64;
+        let mut tok_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut has_acc = false;
+        match &self.eval_set {
+            EvalSet::Lm(batches) => {
+                for b in batches {
+                    let mut extra: Vec<xla::Literal> = Vec::with_capacity(4);
+                    push_lm_batch(&mut extra, b)?;
+                    let args: Vec<&xla::Literal> =
+                        self.state[..n_params].iter().chain(extra.iter()).collect();
+                    let out = eval.execute_refs(&args)?;
+                    loss_sum += crate::runtime::get_f32(&out[0])? as f64;
+                    tok_sum += crate::runtime::get_f32(&out[1])? as f64;
+                }
+            }
+            EvalSet::Vit(batches) => {
+                has_acc = true;
+                let fam = fam.clone();
+                for b in batches {
+                    let mut extra: Vec<xla::Literal> = Vec::with_capacity(2);
+                    push_vit_batch(&mut extra, b, &fam)?;
+                    let args: Vec<&xla::Literal> =
+                        self.state[..n_params].iter().chain(extra.iter()).collect();
+                    let out = eval.execute_refs(&args)?;
+                    loss_sum += crate::runtime::get_f32(&out[0])? as f64;
+                    tok_sum += crate::runtime::get_f32(&out[1])? as f64;
+                    correct += crate::runtime::get_f32(&out[2])? as f64;
+                }
+            }
+        }
+        let mean_loss = loss_sum / tok_sum.max(1.0);
+        let acc = if has_acc { Some(correct / tok_sum.max(1.0)) } else { None };
+        Ok((mean_loss, acc))
+    }
+}
+
+fn push_lm_batch(args: &mut Vec<xla::Literal>, b: &LmBatch) -> Result<()> {
+    let dims = [b.rows, b.seq];
+    args.push(lit_i32(&b.tokens, &dims)?);
+    args.push(lit_i32(&b.targets, &dims)?);
+    args.push(lit_f32(&b.loss_mask, &dims)?);
+    if let Some(pad) = &b.pad_mask {
+        args.push(lit_f32(pad, &dims)?);
+    }
+    Ok(())
+}
+
+fn push_vit_batch(
+    args: &mut Vec<xla::Literal>,
+    b: &VitBatch,
+    fam: &crate::runtime::FamilyInfo,
+) -> Result<()> {
+    let n_patches = fam.max_seq - 1;
+    args.push(lit_f32(&b.patches, &[b.rows, n_patches, fam.patch_dim])?);
+    args.push(lit_i32(&b.labels, &[b.rows])?);
+    Ok(())
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Analytic route plan of a configured run: walks the schedules without
+/// touching data, mirroring exactly the trainer's bucket routing. Returns
+/// the compute-token budget (pins the token-based LR decay — §A.1 point 5)
+/// and the set of executables the run will dispatch to (pre-warmed by
+/// `Trainer::new` so compile time never pollutes step timings).
+pub fn plan_routes(
+    rt: &Runtime,
+    run: &RunConfig,
+) -> Result<(f64, std::collections::BTreeSet<String>)> {
+    let fam = rt.registry.family(&run.family)?.clone();
+    let scheduler = ClScheduler::new(&run.curriculum, fam.max_seq)?;
+    let mut acct = TokenAccountant::new(fam.n_layers);
+    let mut planned = std::collections::BTreeSet::new();
+    for step in 0..run.total_steps {
+        let cl = scheduler.state_at(step);
+        let seq_bucket = rt.registry.seq_bucket(&run.family, cl.seq)?;
+        let (keep_req, mode) = match &run.routing {
+            Routing::None => (seq_bucket, Mode::Plain),
+            Routing::RandomLtd(l) => (kept_len(l, step, seq_bucket), Mode::Ltd),
+            Routing::TokenBypass(b) => {
+                let l = crate::config::schema::LtdConfig {
+                    r_start: b.r_start,
+                    total_steps: b.total_steps,
+                    schedule: b.schedule,
+                    exempt_first_last: true,
+                };
+                (kept_len(&l, step, seq_bucket), Mode::Bypass)
+            }
+        };
+        let route = rt.registry.route_train(&run.family, cl.seq, keep_req, mode)?;
+        let dropping = route.mode != Mode::Plain && route.keep < route.seq;
+        acct.record(
+            fam.batch,
+            route.seq,
+            route.keep,
+            if dropping { fam.n_middle_layers } else { 0 },
+        );
+        planned.insert(route.artifact);
+    }
+    Ok((acct.compute_tokens(), planned))
+}
+
+/// Back-compat shim: just the compute-token budget.
+pub fn estimate_compute_tokens(rt: &Runtime, run: &RunConfig) -> Result<f64> {
+    Ok(plan_routes(rt, run)?.0)
+}

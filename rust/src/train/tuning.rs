@@ -1,0 +1,126 @@
+//! The paper's low-cost hyperparameter tuning strategy (§3.3):
+//!
+//! "perform binary search on a very small portion (e.g., 2%) of training
+//! to find the smallest d_s/r_s and largest T_c/T_r that don't trigger
+//! substantial validation loss fluctuations ('whether the perplexity value
+//! becomes larger than 1.3x of the previous best perplexity')."
+//!
+//! [`probe_is_stable`] runs a short probe training and applies the 1.3×
+//! spike rule to its eval curve; [`search_smallest`]/[`search_largest`]
+//! binary-search a monotone candidate axis with any stability oracle.
+
+use crate::config::schema::RunConfig;
+use crate::train::env::TrainEnv;
+use crate::Result;
+
+/// Perplexity spike threshold from the paper.
+pub const SPIKE_FACTOR: f64 = 1.3;
+
+/// Run a `probe_steps`-step probe of `cfg` and report whether its eval
+/// perplexity stayed within `SPIKE_FACTOR`× of the best seen so far.
+pub fn probe_is_stable(env: &TrainEnv, mut cfg: RunConfig, probe_steps: u64, eval_every: u64) -> Result<bool> {
+    cfg.total_steps = probe_steps.max(2);
+    cfg.eval_every = eval_every.clamp(1, cfg.total_steps);
+    cfg.label = format!("{}-probe", cfg.label);
+    let result = env.run(cfg)?;
+    let mut best = f64::INFINITY;
+    for p in &result.curve {
+        let ppl = p.eval_loss.exp();
+        if !ppl.is_finite() {
+            return Ok(false);
+        }
+        if ppl > best * SPIKE_FACTOR {
+            return Ok(false);
+        }
+        best = best.min(ppl);
+    }
+    Ok(true)
+}
+
+/// Binary-search the smallest candidate (candidates sorted ascending,
+/// stability monotone non-decreasing along the axis) that is stable.
+/// Returns the last index if none are stable on their own (the paper falls
+/// back to the most conservative setting).
+pub fn search_smallest<F>(n_candidates: usize, mut is_stable: F) -> Result<usize>
+where
+    F: FnMut(usize) -> Result<bool>,
+{
+    assert!(n_candidates > 0);
+    let mut lo = 0usize;
+    let mut hi = n_candidates - 1;
+    let mut best = hi;
+    while lo <= hi {
+        let mid = (lo + hi) / 2;
+        if is_stable(mid)? {
+            best = mid;
+            if mid == 0 {
+                break;
+            }
+            hi = mid - 1;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Ok(best)
+}
+
+/// Binary-search the largest stable candidate (stability monotone
+/// non-increasing along the axis). Returns 0 if none are stable.
+pub fn search_largest<F>(n_candidates: usize, mut is_stable: F) -> Result<usize>
+where
+    F: FnMut(usize) -> Result<bool>,
+{
+    assert!(n_candidates > 0);
+    let mut lo = 0usize;
+    let mut hi = n_candidates - 1;
+    let mut best = 0;
+    while lo <= hi {
+        let mid = (lo + hi) / 2;
+        if is_stable(mid)? {
+            best = mid;
+            lo = mid + 1;
+        } else {
+            if mid == 0 {
+                break;
+            }
+            hi = mid - 1;
+        }
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn search_smallest_finds_boundary() {
+        // stable for idx >= 3
+        let idx = search_smallest(8, |i| Ok(i >= 3)).unwrap();
+        assert_eq!(idx, 3);
+        // everything stable → smallest
+        assert_eq!(search_smallest(8, |_| Ok(true)).unwrap(), 0);
+        // nothing stable → most conservative (last)
+        assert_eq!(search_smallest(8, |_| Ok(false)).unwrap(), 7);
+    }
+
+    #[test]
+    fn search_largest_finds_boundary() {
+        // stable for idx <= 5
+        let idx = search_largest(8, |i| Ok(i <= 5)).unwrap();
+        assert_eq!(idx, 5);
+        assert_eq!(search_largest(8, |_| Ok(true)).unwrap(), 7);
+        assert_eq!(search_largest(8, |_| Ok(false)).unwrap(), 0);
+    }
+
+    #[test]
+    fn search_counts_are_logarithmic() {
+        let mut calls = 0;
+        let _ = search_smallest(1024, |i| {
+            calls += 1;
+            Ok(i >= 700)
+        })
+        .unwrap();
+        assert!(calls <= 11, "binary search should be O(log n), made {calls} calls");
+    }
+}

@@ -1,0 +1,227 @@
+//! Cross-module integration tests that don't need the PJRT runtime:
+//! corpus → analyzer → index → curriculum sampler → loader chains, token
+//! accounting against schedules, config round trips, property checks.
+
+use dsde::analysis::analyzer::{analyze, AnalyzerConfig};
+use dsde::analysis::metrics;
+use dsde::config::schema::*;
+use dsde::curriculum::scheduler::ClScheduler;
+use dsde::curriculum::{GptLoader, PoolSampler, Sampler, UniformSampler};
+use dsde::data::corpus::{Corpus, CorpusConfig};
+use dsde::data::dataset::{BertDataset, GptDataset};
+use dsde::data::tokenizer::Tokenizer;
+use dsde::ltd::{kept_len, RandomDropper, TokenAccountant};
+use dsde::testutil::property;
+use std::sync::Arc;
+
+fn corpus() -> (Corpus, Tokenizer) {
+    let c = Corpus::generate(CorpusConfig { n_docs: 400, seed: 5, ..Default::default() });
+    let t = Tokenizer::from_corpus(&c);
+    (c, t)
+}
+
+#[test]
+fn voc_curriculum_orders_batches_easy_to_hard() {
+    let (c, t) = corpus();
+    let ds = Arc::new(GptDataset::build(&c, &t, 64));
+    let (idx, _) = metrics::gpt_voc(&ds, &t, &AnalyzerConfig::default());
+    let idx = Arc::new(idx);
+    let schedules = vec![ClConfig::new(
+        Metric::Voc,
+        Bound::Percentile(0.02),
+        Bound::Percentile(1.0),
+        100,
+    )];
+    let sched = ClScheduler::new(&schedules, 64).unwrap();
+    let mut loader = GptLoader::new(
+        ds.clone(),
+        Box::new(PoolSampler::new(idx.clone(), 3)),
+        8,
+    );
+    let rarity = |tokens: &[i32]| -> f64 {
+        tokens.iter().map(|&x| t.rarity(x as u32)).sum::<f64>() / tokens.len() as f64
+    };
+    // early batches (2% easiest pool) must be less "rare" than late ones
+    let early_state = sched.state_at(0);
+    let mut early = 0.0;
+    for _ in 0..5 {
+        early += rarity(&loader.next_batch(64, &early_state).tokens);
+    }
+    let late_state = sched.state_at(100);
+    let mut late = 0.0;
+    for _ in 0..5 {
+        late += rarity(&loader.next_batch(64, &late_state).tokens);
+    }
+    assert!(
+        early < late,
+        "voc curriculum must serve common-vocabulary batches first: early={early} late={late}"
+    );
+}
+
+#[test]
+fn seqreo_curriculum_serves_short_sequences_first() {
+    let (c, t) = corpus();
+    let ds = BertDataset::build(&c, &t, 64);
+    let (idx, _) = metrics::bert_eff_len(&ds, &AnalyzerConfig::default());
+    let order = idx.order();
+    let n = idx.len();
+    let early_mean: f64 = order[..n / 10]
+        .iter()
+        .map(|&i| ds.eff_len[i as usize] as f64)
+        .sum::<f64>()
+        / (n / 10) as f64;
+    let late_mean: f64 = order[n - n / 10..]
+        .iter()
+        .map(|&i| ds.eff_len[i as usize] as f64)
+        .sum::<f64>()
+        / (n / 10) as f64;
+    assert!(early_mean + 4.0 < late_mean, "{early_mean} vs {late_mean}");
+}
+
+#[test]
+fn accountant_matches_mslg_schedule_analytically() {
+    let cfg = LtdConfig::mslg(16, 200);
+    let mut acct = TokenAccountant::new(4);
+    let mut dropper = RandomDropper::new(1);
+    for step in 0..200u64 {
+        let k = kept_len(&cfg, step, 64);
+        let dropping = k < 64;
+        if dropping {
+            let idx = dropper.layerwise(2, 64, k);
+            assert_eq!(idx.len(), 2 * k);
+        }
+        acct.record(8, 64, k, if dropping { 2 } else { 0 });
+    }
+    let expected = dsde::ltd::token_saving_ratio(&cfg, 200, 64, 4, 2);
+    assert!(
+        (acct.saving_ratio() - expected).abs() < 0.01,
+        "accountant {} vs schedule {}",
+        acct.saving_ratio(),
+        expected
+    );
+}
+
+#[test]
+fn composed_schedule_token_math() {
+    // seqtru shrinks early sequences AND ltd drops: compute tokens must be
+    // strictly below data tokens, which are below the no-CL budget.
+    let schedules = vec![ClConfig::new(
+        Metric::SeqTru,
+        Bound::Value(16.0),
+        Bound::Value(64.0),
+        100,
+    )];
+    let sched = ClScheduler::new(&schedules, 64).unwrap();
+    let ltd = LtdConfig::mslg(16, 100);
+    let mut acct = TokenAccountant::new(4);
+    for step in 0..100u64 {
+        let seq = sched.state_at(step).seq;
+        let k = kept_len(&ltd, step, seq);
+        acct.record(8, seq, k, if k < seq { 2 } else { 0 });
+    }
+    let full_budget = 100 * 8 * 64;
+    assert!(acct.data_tokens < full_budget);
+    assert!(acct.compute_tokens() < acct.data_tokens as f64);
+}
+
+#[test]
+fn analyzer_worker_invariance_on_real_metric() {
+    let (c, t) = corpus();
+    let ds = GptDataset::build(&c, &t, 64);
+    let (a, _) = metrics::gpt_voc(&ds, &t, &AnalyzerConfig { n_workers: 1, shard_size: 100 });
+    let (b, _) = metrics::gpt_voc(&ds, &t, &AnalyzerConfig { n_workers: 8, shard_size: 33 });
+    assert_eq!(a.order(), b.order());
+}
+
+#[test]
+fn index_persistence_roundtrip_through_sampler() {
+    let (c, t) = corpus();
+    let ds = Arc::new(GptDataset::build(&c, &t, 64));
+    let (idx, _) = metrics::gpt_voc(&ds, &t, &AnalyzerConfig::default());
+    let path = std::env::temp_dir().join(format!("dsde_it_{}.idx", std::process::id()));
+    idx.save(&path).unwrap();
+    let reopened = Arc::new(dsde::data::index::DifficultyIndex::open(&path).unwrap());
+    let mut s1 = PoolSampler::new(Arc::new(idx), 9);
+    let mut s2 = PoolSampler::new(reopened, 9);
+    for _ in 0..100 {
+        assert_eq!(s1.next(50), s2.next(50));
+    }
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn prop_loader_batches_always_well_formed() {
+    let (c, t) = corpus();
+    let ds = Arc::new(GptDataset::build(&c, &t, 64));
+    let n = ds.n_samples();
+    let vocab = t.vocab_size as i32;
+    property("gpt loader well-formed", 6, |rng| {
+        let mut loader = GptLoader::new(
+            ds.clone(),
+            Box::new(UniformSampler::new(n, rng.next_u64())),
+            8,
+        );
+        for &(seq, transform) in &[
+            (8usize, dsde::curriculum::SeqTransform::Truncate),
+            (16, dsde::curriculum::SeqTransform::Reshape),
+            (64, dsde::curriculum::SeqTransform::None),
+        ] {
+            let st = dsde::curriculum::ClState {
+                seq,
+                transform,
+                pool_pct: rng.next_f64() * 0.99 + 0.01,
+            };
+            let b = loader.next_batch(seq, &st);
+            if b.tokens.len() != 8 * seq || b.targets.len() != 8 * seq {
+                return Err(format!("bad shape at seq {seq}"));
+            }
+            if b.tokens.iter().any(|&x| x < 0 || x >= vocab) {
+                return Err("token out of vocab".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_analyzer_handles_adversarial_values() {
+    property("analyzer adversarial values", 4, |rng| {
+        let n = 500 + rng.gen_range(500) as usize;
+        let vals: Vec<f32> = (0..n)
+            .map(|i| match i % 5 {
+                0 => 0.0,
+                1 => -1.5,
+                2 => f32::MAX / 2.0,
+                _ => (i as f32).sin(),
+            })
+            .collect();
+        let vals2 = vals.clone();
+        let (idx, _) = analyze(
+            "adv",
+            n,
+            move |i| vals2[i],
+            &AnalyzerConfig { n_workers: 3, shard_size: 64 },
+        );
+        let o = idx.order();
+        for w in o.windows(2) {
+            let (a, b) = (vals[w[0] as usize], vals[w[1] as usize]);
+            if a > b {
+                return Err(format!("unsorted: {a} > {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn presets_roundtrip_through_json_config() {
+    for name in ["gpt-pretrain", "bert-pretrain", "gpt-finetune", "vit-finetune"] {
+        let p = dsde::config::presets::by_name(name, 100, 1e-3, 64).unwrap();
+        let j = p.to_json();
+        let text = j.to_string_compact();
+        let parsed = dsde::config::json::Json::parse(&text).unwrap();
+        let p2 = run_config_from_json(&parsed, "gpt").unwrap();
+        assert_eq!(p.case_name(), p2.case_name(), "{name}");
+        assert_eq!(p.total_steps, p2.total_steps);
+    }
+}

@@ -1,0 +1,90 @@
+//! End-to-end integration: the full coordinator pipeline (corpus →
+//! analyzer → curriculum → LTD routing → PJRT train steps → eval) on every
+//! model family, at smoke scale.
+//!
+//! Grouped into few #[test] fns so each TrainEnv (and its lazily compiled
+//! executables) is shared across many assertions — compilation dominates
+//! at this scale.
+
+use dsde::config::presets;
+use dsde::config::schema::*;
+use dsde::train::TrainEnv;
+
+#[test]
+fn lm_families_end_to_end() {
+    let env = TrainEnv::new(300, 77).expect("artifacts present (run `make artifacts`)");
+
+    // ---- GPT baseline: loss must drop from near-uniform (ln 512 ≈ 6.24).
+    let mut base = RunConfig::baseline("gpt", 40, 3e-3);
+    base.eval_every = 20;
+    let r = env.run(base).unwrap();
+    assert_eq!(r.steps, 40);
+    assert!(r.final_eval_loss.is_finite());
+    assert!(r.final_eval_loss < 6.1, "baseline should learn: {}", r.final_eval_loss);
+    assert_eq!(r.data_tokens, 40 * 8 * 64);
+    assert_eq!(r.saving_ratio, 0.0);
+    assert_eq!(r.curve.len(), 3); // 2 periodic + final
+
+    // ---- GPT composed preset: CL shrinks early sequences, LTD drops tokens.
+    let composed = presets::gpt_pretrain(40, 3e-3, 64);
+    let rc = env.run(composed).unwrap();
+    assert!(rc.final_eval_loss.is_finite());
+    assert!(rc.data_tokens < r.data_tokens, "CL must consume fewer data tokens");
+    assert!(rc.saving_ratio > 0.0, "LTD must save compute");
+    assert!(
+        rc.dispatch.len() > 1,
+        "bucket routing must dispatch multiple variants: {:?}",
+        rc.dispatch
+    );
+    assert!(rc.dispatch.keys().any(|k| k.contains("_s8_") || k.contains("_s16_")));
+    assert!(rc.dispatch.keys().any(|k| k.contains("_s64_")));
+
+    // ---- TokenBypass baseline technique on GPT.
+    let mut cfg = RunConfig::baseline("gpt", 20, 3e-3);
+    cfg.routing = Routing::TokenBypass(BypassConfig {
+        r_start: 32,
+        total_steps: 20,
+        schedule: LtdSchedule::Constant,
+        n_special: 6,
+    });
+    let rb = env.run(cfg).unwrap();
+    assert!(rb.final_eval_loss.is_finite());
+    assert!(rb.dispatch.keys().any(|k| k.contains("bypass")), "{:?}", rb.dispatch);
+    assert!(rb.saving_ratio > 0.1);
+
+    // ---- BERT with random-LTD (MSLG over the whole run).
+    let mut cfg = RunConfig::baseline("bert", 24, 3e-3);
+    cfg.routing = Routing::RandomLtd(LtdConfig::mslg(16, 24));
+    let r = env.run(cfg).unwrap();
+    assert!(r.final_eval_loss.is_finite());
+    assert!(r.saving_ratio > 0.05, "MSLG over whole run saves compute");
+    assert!(r.dispatch.keys().any(|k| k.contains("ltd")));
+
+    // ---- MoE composed.
+    let mut cfg = RunConfig::baseline("moe", 12, 3e-3);
+    cfg.routing = Routing::RandomLtd(LtdConfig::mslg(16, 9));
+    let r = env.run(cfg).unwrap();
+    assert!(r.final_eval_loss.is_finite());
+    assert!(r.final_eval_loss < 6.6);
+}
+
+#[test]
+fn vit_and_determinism() {
+    let env = TrainEnv::new(200, 78).expect("artifacts present");
+
+    // ---- ViT with random-LTD reports accuracy.
+    let cfg = presets::vit_finetune(24, 3e-3);
+    let r = env.run(cfg).unwrap();
+    let acc = r.final_accuracy.expect("vit reports accuracy");
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(r.final_eval_loss.is_finite());
+    assert!(r.dispatch.keys().any(|k| k.contains("ltd")));
+
+    // ---- Determinism: same config twice → bitwise-equal outcomes.
+    let cfg = presets::gpt_pretrain(10, 3e-3, 64);
+    let a = env.run(cfg.clone()).unwrap();
+    let b = env.run(cfg).unwrap();
+    assert_eq!(a.final_eval_loss, b.final_eval_loss);
+    assert_eq!(a.data_tokens, b.data_tokens);
+    assert_eq!(a.dispatch, b.dispatch);
+}
