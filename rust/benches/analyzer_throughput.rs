@@ -59,7 +59,7 @@ fn main() -> dsde::Result<()> {
     let open_s = t1.elapsed().as_secs_f64();
     assert_eq!(opened.order(), idx.order());
     println!(
-        "\nmmap index: {} samples, save {:.1}ms, open (zero-copy) {:.3}ms, {} bytes",
+        "\nindex file: {} samples, save {:.1}ms, open {:.3}ms, {} bytes",
         idx.len(),
         save_s * 1e3,
         open_s * 1e3,

@@ -11,6 +11,7 @@
 //!  * state round-trip (tuple decompose) share
 
 use dsde::bench::{scaled, time_it, Table};
+use dsde::config::schema::{PipelineConfig, RunConfig};
 use dsde::curriculum::scheduler::{ClState, SeqTransform};
 use dsde::curriculum::{GptLoader, UniformSampler};
 use dsde::data::corpus::{Corpus, CorpusConfig};
@@ -18,7 +19,7 @@ use dsde::data::dataset::GptDataset;
 use dsde::data::tokenizer::Tokenizer;
 use dsde::ltd::RandomDropper;
 use dsde::runtime::{lit_f32, lit_i32, scalar_f32, scalar_u32, Runtime};
-use dsde::train::Prefetcher;
+use dsde::train::{Prefetcher, TrainEnv};
 use std::sync::Arc;
 
 fn main() -> dsde::Result<()> {
@@ -170,6 +171,44 @@ fn main() -> dsde::Result<()> {
     println!(
         "\nshape check:\n  [{}] coordinator overhead ({coordinator_ms:.2}ms) ≤ 5% of execute ({step_ms:.2}ms)",
         if coordinator_ms <= step_ms * 0.05 { "PASS" } else { "FAIL" }
+    );
+
+    // ---- async batch pipeline: loader stall with prefetch off vs on.
+    // BERT is the heaviest batch builder (MLM masking), so it shows the
+    // largest synchronous stall; the async pipeline must hide most of it.
+    let steps = scaled(80, 24);
+    let env = TrainEnv::new(400, 7)?;
+    let case = |label: &str, pipeline: PipelineConfig| {
+        let mut c = RunConfig::baseline("bert", steps, 3e-3);
+        c.label = label.to_string();
+        c.pipeline = pipeline;
+        c
+    };
+    let sync = env.run(case("sync-loader", PipelineConfig::disabled()))?;
+    let pre = env.run(case(
+        "prefetch-d4-w4",
+        PipelineConfig { prefetch_depth: 4, n_loader_workers: 4 },
+    ))?;
+    let mut pt = Table::new(&["loader mode", "build ms", "stall ms", "hidden"]);
+    for r in [&sync, &pre] {
+        pt.row(vec![
+            r.label.clone(),
+            format!("{:.2}", r.loader_build_secs * 1e3),
+            format!("{:.2}", r.loader_stall_secs * 1e3),
+            format!("{:.0}%", r.loader_hidden_fraction() * 100.0),
+        ]);
+    }
+    println!("\nasync pipeline overlap ({steps} bert steps, depth 4, 4 workers):");
+    pt.print();
+    pt.save_csv("runtime_overhead_prefetch")?;
+    let hidden = pre.loader_hidden_fraction();
+    println!(
+        "  [{}] prefetch hides >50% of batch-construction time (hidden {:.0}%, \
+         sync stall {:.2}ms -> async stall {:.2}ms)",
+        if hidden > 0.5 { "PASS" } else { "FAIL" },
+        hidden * 100.0,
+        sync.loader_stall_secs * 1e3,
+        pre.loader_stall_secs * 1e3
     );
     Ok(())
 }

@@ -212,6 +212,40 @@ impl LrConfig {
     }
 }
 
+/// Async data-pipeline knobs (see DESIGN.md §Async-data-pipeline).
+///
+/// When enabled, batch *planning* (sampler draws, mask-seed derivation)
+/// stays sequential while batch *materialization* runs on
+/// `n_loader_workers` threads feeding a bounded, step-ordered prefetch
+/// queue `prefetch_depth` batches deep. The stream is byte-identical to
+/// the synchronous path under a fixed seed (enforced by
+/// `tests/pipeline_determinism.rs`), so this is purely a latency-hiding
+/// knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PipelineConfig {
+    /// Bounded prefetch queue depth in batches (0 disables the pipeline).
+    pub prefetch_depth: usize,
+    /// Loader worker threads (0 disables the pipeline).
+    pub n_loader_workers: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { prefetch_depth: 2, n_loader_workers: 2 }
+    }
+}
+
+impl PipelineConfig {
+    /// Fully synchronous loading (the pre-pipeline behavior).
+    pub fn disabled() -> Self {
+        PipelineConfig { prefetch_depth: 0, n_loader_workers: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.prefetch_depth > 0 && self.n_loader_workers > 0
+    }
+}
+
 /// A full training run description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -228,6 +262,8 @@ pub struct RunConfig {
     pub eval_every: u64,
     /// Number of held-out batches per evaluation.
     pub eval_batches: usize,
+    /// Async data-pipeline knobs.
+    pub pipeline: PipelineConfig,
     /// Human-readable case label for tables/logs.
     pub label: String,
 }
@@ -243,6 +279,7 @@ impl RunConfig {
             lr: LrConfig::token_linear(peak_lr, 0.0, 0.0),
             eval_every: 0,
             eval_batches: 8,
+            pipeline: PipelineConfig::default(),
             label: "baseline".to_string(),
         }
     }
@@ -371,6 +408,13 @@ impl RunConfig {
             ("curriculum", Json::Arr(cl)),
             ("routing", routing),
             (
+                "pipeline",
+                Json::obj(vec![
+                    ("prefetch_depth", self.pipeline.prefetch_depth.into()),
+                    ("n_loader_workers", self.pipeline.n_loader_workers.into()),
+                ]),
+            ),
+            (
                 "lr",
                 Json::obj(vec![
                     ("peak", self.lr.peak.into()),
@@ -478,6 +522,19 @@ pub fn run_config_from_json(v: &Json, default_family: &str) -> Result<RunConfig>
     if let Some(e) = v.get("eval_every").as_usize() {
         cfg.eval_every = e as u64;
     }
+    let pipeline = v.get("pipeline");
+    if pipeline.as_obj().is_some() {
+        cfg.pipeline = PipelineConfig {
+            prefetch_depth: pipeline
+                .get("prefetch_depth")
+                .as_usize()
+                .unwrap_or(cfg.pipeline.prefetch_depth),
+            n_loader_workers: pipeline
+                .get("n_loader_workers")
+                .as_usize()
+                .unwrap_or(cfg.pipeline.n_loader_workers),
+        };
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -533,6 +590,21 @@ mod tests {
             40,
         ));
         assert!(c.validate().is_err(), "seqtru must use value bounds");
+    }
+
+    #[test]
+    fn pipeline_config_roundtrips_and_defaults() {
+        let mut c = RunConfig::baseline("gpt", 10, 1e-3);
+        assert!(c.pipeline.enabled(), "pipeline on by default");
+        c.pipeline = PipelineConfig { prefetch_depth: 5, n_loader_workers: 3 };
+        let j = c.to_json();
+        let c2 = run_config_from_json(&j, "gpt").unwrap();
+        assert_eq!(c2.pipeline, c.pipeline);
+        assert!(!PipelineConfig::disabled().enabled());
+        // configs without a pipeline section keep the default knobs
+        let j = Json::parse(r#"{"total_steps": 5}"#).unwrap();
+        let c3 = run_config_from_json(&j, "gpt").unwrap();
+        assert_eq!(c3.pipeline, PipelineConfig::default());
     }
 
     #[test]

@@ -4,12 +4,30 @@
 //! * seqtru  — truncate each sampled sequence to the scheduled length
 //!             (fewer tokens per batch, same number of samples, §3.1);
 //! * seqres  — reshape sampled sequences into more, shorter rows (same
-//!             tokens per batch, MosaicML Composer variant, §3.1);
+//!             tokens per sample, MosaicML Composer variant, §3.1);
 //! * seqreo/voc — no transform; the ordering constraint is enforced by the
 //!             `PoolSampler` prefix.
 //!
 //! BERT batches additionally get MLM masking (15%: 80% `[MASK]`, 10%
 //! random, 10% keep) and a padding mask derived from effective lengths.
+//!
+//! # Plan / materialize split (async pipeline)
+//!
+//! Each loader is factored into two stages so the async data pipeline
+//! ([`crate::train::pipeline::BatchPipeline`]) can overlap batch
+//! construction with step execution *without* changing the batch stream:
+//!
+//! 1. **plan** (`plan_batch`) — the cheap, stateful part: draw sample ids
+//!    from the sampler and derive the batch's masking seed. Plans are
+//!    always produced in step order (under the pipeline's queue lock), so
+//!    sampler state advances exactly as in the synchronous path.
+//! 2. **materialize** (`LoaderCore::materialize`) — the heavy, *pure* part:
+//!    copy tokens, build targets/masks, apply MLM masking from the plan's
+//!    private seed. Safe to run on any worker thread in any order.
+//!
+//! `next_batch` composes the two, so the synchronous path and the async
+//! path share one code path and a fixed seed yields a byte-identical
+//! stream either way (`tests/pipeline_determinism.rs`).
 
 use crate::curriculum::sampler::Sampler;
 use crate::curriculum::scheduler::{ClState, SeqTransform};
@@ -19,7 +37,7 @@ use crate::Pcg32;
 use std::sync::Arc;
 
 /// A language-model batch (GPT / BERT / MoE families).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct LmBatch {
     pub rows: usize,
     pub seq: usize,
@@ -33,13 +51,107 @@ pub struct LmBatch {
 }
 
 /// A ViT batch.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct VitBatch {
     pub rows: usize,
     pub patches: Vec<f32>,
     pub labels: Vec<i32>,
     pub data_tokens: u64,
 }
+
+/// A batch of either family kind (what the pipeline transports).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AnyBatch {
+    Lm(LmBatch),
+    Vit(VitBatch),
+}
+
+impl AnyBatch {
+    pub fn rows(&self) -> usize {
+        match self {
+            AnyBatch::Lm(b) => b.rows,
+            AnyBatch::Vit(b) => b.rows,
+        }
+    }
+
+    pub fn data_tokens(&self) -> u64 {
+        match self {
+            AnyBatch::Lm(b) => b.data_tokens,
+            AnyBatch::Vit(b) => b.data_tokens,
+        }
+    }
+}
+
+/// The sequential output of a loader's planning stage: everything a worker
+/// needs to materialize one batch, with no shared mutable state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LmPlan {
+    pub seq: usize,
+    pub transform: SeqTransform,
+    /// Sample ids drawn from the sampler, in draw order.
+    pub ids: Vec<u32>,
+    /// Per-batch MLM masking seed (BERT); `None` for GPT/MoE.
+    pub mask_seed: Option<u64>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct VitPlan {
+    /// First sample cursor; the batch covers `start..start+rows`.
+    pub start: u64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum BatchPlan {
+    Lm(LmPlan),
+    Vit(VitPlan),
+}
+
+/// The shareable, `Send + Sync` half of a loader: immutable datasets plus
+/// the constants materialization needs. Cloned into every pipeline worker.
+#[derive(Clone)]
+pub enum LoaderCore {
+    Gpt { ds: Arc<GptDataset>, batch: usize },
+    Bert { ds: Arc<BertDataset>, batch: usize, vocab: u32, mask_prob: f32 },
+    Vit { ds: Arc<VitDataset>, batch: usize },
+}
+
+impl LoaderCore {
+    /// Materialize one planned batch. `recycled` (from the
+    /// [`crate::data::prefetch::Pool`]) donates its allocations; every
+    /// field is fully overwritten, so reuse never changes the bytes.
+    pub fn materialize(&self, plan: &BatchPlan, recycled: Option<AnyBatch>) -> AnyBatch {
+        match (self, plan) {
+            (LoaderCore::Gpt { ds, batch }, BatchPlan::Lm(p)) => {
+                let mut out = match recycled {
+                    Some(AnyBatch::Lm(b)) => b,
+                    _ => LmBatch::default(),
+                };
+                materialize_gpt(ds, *batch, p, &mut out);
+                AnyBatch::Lm(out)
+            }
+            (LoaderCore::Bert { ds, batch, vocab, mask_prob }, BatchPlan::Lm(p)) => {
+                let mut out = match recycled {
+                    Some(AnyBatch::Lm(b)) => b,
+                    _ => LmBatch::default(),
+                };
+                materialize_bert(ds, *batch, *vocab, *mask_prob, p, &mut out);
+                AnyBatch::Lm(out)
+            }
+            (LoaderCore::Vit { ds, batch }, BatchPlan::Vit(p)) => {
+                let mut out = match recycled {
+                    Some(AnyBatch::Vit(b)) => b,
+                    _ => VitBatch::default(),
+                };
+                materialize_vit(ds, *batch, p, &mut out);
+                AnyBatch::Vit(out)
+            }
+            _ => unreachable!("batch plan kind does not match loader core"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GPT / MoE
 
 /// GPT/MoE loader over the packed stream.
 pub struct GptLoader {
@@ -53,63 +165,89 @@ impl GptLoader {
         GptLoader { ds, sampler, batch }
     }
 
-    /// Assemble the next batch at the (bucketed) sequence length `seq`.
+    pub fn core(&self) -> LoaderCore {
+        LoaderCore::Gpt { ds: self.ds.clone(), batch: self.batch }
+    }
+
+    /// Draw the sample ids for the next batch at (bucketed) length `seq`.
     /// `state` carries the transform kind and the pool prefix fraction.
-    pub fn next_batch(&mut self, seq: usize, state: &ClState) -> LmBatch {
-        let b = self.batch;
+    pub fn plan_batch(&mut self, seq: usize, state: &ClState) -> LmPlan {
         let n = self.sampler.n_samples();
         let prefix = pool_prefix(n, state.pool_pct);
-        let mut out = LmBatch {
-            rows: b,
-            seq,
-            tokens: Vec::with_capacity(b * seq),
-            targets: Vec::with_capacity(b * seq),
-            loss_mask: vec![1.0; b * seq],
-            pad_mask: None,
-            data_tokens: (b * seq) as u64,
-        };
-        match state.transform {
+        let n_ids = match state.transform {
             SeqTransform::Reshape => {
-                // seqres: fill `b` rows of length `seq` from consecutive
-                // segments; consumes b*seq tokens = b*seq/max_seq samples.
+                // seqres consumes one sample per `segs` rows. (The pre-
+                // pipeline loader drew one extra, unused id whenever `segs`
+                // divided the batch; planning draws exactly what the batch
+                // needs, so seqres sampler streams shift vs. the v0 seed.)
                 let segs = (self.ds.max_seq / seq).max(1);
-                let mut row = 0;
-                'outer: loop {
-                    let id = self.sampler.next(prefix) as usize;
-                    for j in 0..segs {
-                        if row >= b {
-                            break 'outer;
-                        }
-                        // last token of the last segment needs lookahead;
-                        // segment j target slice handles it via stream +1.
-                        extend_i32(&mut out.tokens, self.ds.segment_tokens(id, j, seq));
-                        extend_i32(&mut out.targets, self.ds.segment_targets(id, j, seq));
-                        row += 1;
-                    }
-                }
+                self.batch.div_ceil(segs)
             }
-            _ => {
-                // plain or seqtru: prefix of each sample.
-                for _ in 0..b {
-                    let id = self.sampler.next(prefix) as usize;
-                    extend_i32(&mut out.tokens, self.ds.tokens(id, seq));
-                    extend_i32(&mut out.targets, self.ds.targets(id, seq));
-                }
-            }
-        }
-        debug_assert_eq!(out.tokens.len(), b * seq);
+            _ => self.batch,
+        };
+        let ids = (0..n_ids).map(|_| self.sampler.next(prefix)).collect();
+        LmPlan { seq, transform: state.transform, ids, mask_seed: None }
+    }
+
+    /// Assemble the next batch (plan + materialize in one call).
+    pub fn next_batch(&mut self, seq: usize, state: &ClState) -> LmBatch {
+        let plan = self.plan_batch(seq, state);
+        let mut out = LmBatch::default();
+        materialize_gpt(&self.ds, self.batch, &plan, &mut out);
         out
     }
 }
 
+fn materialize_gpt(ds: &GptDataset, batch: usize, plan: &LmPlan, out: &mut LmBatch) {
+    let seq = plan.seq;
+    reset_lm(out, batch, seq, 1.0, false);
+    match plan.transform {
+        SeqTransform::Reshape => {
+            // seqres: fill `batch` rows of length `seq` from consecutive
+            // segments of each sampled sequence.
+            let segs = (ds.max_seq / seq).max(1);
+            let mut row = 0;
+            'outer: for &id in &plan.ids {
+                for j in 0..segs {
+                    if row >= batch {
+                        break 'outer;
+                    }
+                    // last token of the last segment needs lookahead;
+                    // segment j target slice handles it via stream +1.
+                    extend_i32(&mut out.tokens, ds.segment_tokens(id as usize, j, seq));
+                    extend_i32(&mut out.targets, ds.segment_targets(id as usize, j, seq));
+                    row += 1;
+                }
+            }
+            debug_assert_eq!(row, batch, "plan under-provisioned seqres ids");
+        }
+        _ => {
+            // plain or seqtru: prefix of each sample.
+            for &id in &plan.ids {
+                extend_i32(&mut out.tokens, ds.tokens(id as usize, seq));
+                extend_i32(&mut out.targets, ds.targets(id as usize, seq));
+            }
+        }
+    }
+    debug_assert_eq!(out.tokens.len(), batch * seq);
+}
+
+// ---------------------------------------------------------------------------
+// BERT
+
 /// BERT loader with MLM masking.
+///
+/// Masking randomness is derived per batch from `(seed, batch counter)`,
+/// not from one long-lived RNG stream, so a batch's bytes depend only on
+/// its position in the schedule — the invariant the async pipeline needs.
 pub struct BertLoader {
     ds: Arc<BertDataset>,
     sampler: Box<dyn Sampler>,
     batch: usize,
-    rng: Pcg32,
     vocab: u32,
     mask_prob: f32,
+    seed: u64,
+    planned: u64,
 }
 
 impl BertLoader {
@@ -124,63 +262,89 @@ impl BertLoader {
             ds,
             sampler,
             batch,
-            rng: Pcg32::new(seed, 0xb327),
             vocab,
             mask_prob: 0.15,
+            seed,
+            planned: 0,
         }
     }
 
-    pub fn next_batch(&mut self, seq: usize, state: &ClState) -> LmBatch {
-        let b = self.batch;
+    pub fn core(&self) -> LoaderCore {
+        LoaderCore::Bert {
+            ds: self.ds.clone(),
+            batch: self.batch,
+            vocab: self.vocab,
+            mask_prob: self.mask_prob,
+        }
+    }
+
+    pub fn plan_batch(&mut self, seq: usize, state: &ClState) -> LmPlan {
         let n = self.sampler.n_samples();
         let prefix = pool_prefix(n, state.pool_pct);
-        let mut out = LmBatch {
-            rows: b,
-            seq,
-            tokens: Vec::with_capacity(b * seq),
-            targets: Vec::with_capacity(b * seq),
-            loss_mask: vec![0.0; b * seq],
-            pad_mask: Some(vec![0.0; b * seq]),
-            data_tokens: (b * seq) as u64,
-        };
-        for r in 0..b {
-            let id = self.sampler.next(prefix) as usize;
-            let sample = self.ds.tokens(id);
-            let eff = (self.ds.eff_len[id] as usize).min(seq);
-            let row0 = r * seq;
-            let pad = out.pad_mask.as_mut().unwrap();
-            let mut n_masked = 0;
-            for (j, &t) in sample[..seq].iter().enumerate() {
-                let mut input = t as i32;
-                let target = t as i32;
-                if j < eff {
-                    pad[row0 + j] = 1.0;
-                    let maskable = t != CLS && t != SEP;
-                    if maskable && self.rng.next_f32() < self.mask_prob {
-                        out.loss_mask[row0 + j] = 1.0;
-                        n_masked += 1;
-                        let roll = self.rng.next_f32();
-                        if roll < 0.8 {
-                            input = MASK as i32;
-                        } else if roll < 0.9 {
-                            input =
-                                (N_SPECIAL + self.rng.gen_range(self.vocab - N_SPECIAL)) as i32;
-                        } // else keep original
-                    }
-                }
-                out.tokens.push(input);
-                out.targets.push(target);
-            }
-            // guarantee at least one prediction target per row
-            if n_masked == 0 && eff > 2 {
-                let j = 1 + self.rng.gen_range(eff as u32 - 2) as usize;
-                out.loss_mask[row0 + j] = 1.0;
-                out.tokens[row0 + j] = MASK as i32;
-            }
-        }
+        let ids = (0..self.batch).map(|_| self.sampler.next(prefix)).collect();
+        let mask_seed = self
+            .seed
+            .wrapping_add(self.planned.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+        self.planned += 1;
+        LmPlan { seq, transform: state.transform, ids, mask_seed: Some(mask_seed) }
+    }
+
+    pub fn next_batch(&mut self, seq: usize, state: &ClState) -> LmBatch {
+        let plan = self.plan_batch(seq, state);
+        let mut out = LmBatch::default();
+        materialize_bert(&self.ds, self.batch, self.vocab, self.mask_prob, &plan, &mut out);
         out
     }
 }
+
+fn materialize_bert(
+    ds: &BertDataset,
+    batch: usize,
+    vocab: u32,
+    mask_prob: f32,
+    plan: &LmPlan,
+    out: &mut LmBatch,
+) {
+    let seq = plan.seq;
+    reset_lm(out, batch, seq, 0.0, true);
+    let mut rng = Pcg32::new(plan.mask_seed.unwrap_or(0), 0xb327);
+    for (r, &id) in plan.ids.iter().enumerate() {
+        let sample = ds.tokens(id as usize);
+        let eff = (ds.eff_len[id as usize] as usize).min(seq);
+        let row0 = r * seq;
+        let pad = out.pad_mask.as_mut().expect("bert batch has pad mask");
+        let mut n_masked = 0;
+        for (j, &t) in sample[..seq].iter().enumerate() {
+            let mut input = t as i32;
+            let target = t as i32;
+            if j < eff {
+                pad[row0 + j] = 1.0;
+                let maskable = t != CLS && t != SEP;
+                if maskable && rng.next_f32() < mask_prob {
+                    out.loss_mask[row0 + j] = 1.0;
+                    n_masked += 1;
+                    let roll = rng.next_f32();
+                    if roll < 0.8 {
+                        input = MASK as i32;
+                    } else if roll < 0.9 {
+                        input = (N_SPECIAL + rng.gen_range(vocab - N_SPECIAL)) as i32;
+                    } // else keep original
+                }
+            }
+            out.tokens.push(input);
+            out.targets.push(target);
+        }
+        // guarantee at least one prediction target per row
+        if n_masked == 0 && eff > 2 {
+            let j = 1 + rng.gen_range(eff as u32 - 2) as usize;
+            out.loss_mask[row0 + j] = 1.0;
+            out.tokens[row0 + j] = MASK as i32;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ViT
 
 /// ViT loader (no curriculum in the paper's ViT experiments; random-LTD
 /// only). Samples are synthesized deterministically from a cursor.
@@ -195,24 +359,59 @@ impl VitLoader {
         VitLoader { ds, cursor: start, batch }
     }
 
+    pub fn core(&self) -> LoaderCore {
+        LoaderCore::Vit { ds: self.ds.clone(), batch: self.batch }
+    }
+
+    pub fn plan_batch(&mut self) -> VitPlan {
+        let start = self.cursor;
+        self.cursor += self.batch as u64;
+        VitPlan { start }
+    }
+
     pub fn next_batch(&mut self) -> VitBatch {
-        let b = self.batch;
-        let pd = self.ds.n_patches * self.ds.patch_dim;
-        let mut out = VitBatch {
-            rows: b,
-            patches: vec![0.0; b * pd],
-            labels: Vec::with_capacity(b),
-            data_tokens: (b * (self.ds.n_patches + 1)) as u64,
-        };
-        for r in 0..b {
-            let label = self
-                .ds
-                .sample(self.cursor, &mut out.patches[r * pd..(r + 1) * pd]);
-            out.labels.push(label as i32);
-            self.cursor += 1;
-        }
+        let plan = self.plan_batch();
+        let mut out = VitBatch::default();
+        materialize_vit(&self.ds, self.batch, &plan, &mut out);
         out
     }
+}
+
+fn materialize_vit(ds: &VitDataset, batch: usize, plan: &VitPlan, out: &mut VitBatch) {
+    let pd = ds.n_patches * ds.patch_dim;
+    out.rows = batch;
+    out.patches.clear();
+    out.patches.resize(batch * pd, 0.0);
+    out.labels.clear();
+    out.data_tokens = (batch * (ds.n_patches + 1)) as u64;
+    for r in 0..batch {
+        let label = ds.sample(plan.start + r as u64, &mut out.patches[r * pd..(r + 1) * pd]);
+        out.labels.push(label as i32);
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Reset a (possibly recycled) LM batch so every field is fully defined by
+/// this materialization.
+fn reset_lm(out: &mut LmBatch, batch: usize, seq: usize, loss_fill: f32, pad: bool) {
+    let n = batch * seq;
+    out.rows = batch;
+    out.seq = seq;
+    out.tokens.clear();
+    out.tokens.reserve(n);
+    out.targets.clear();
+    out.targets.reserve(n);
+    out.loss_mask.clear();
+    out.loss_mask.resize(n, loss_fill);
+    if pad {
+        let pm = out.pad_mask.get_or_insert_with(Vec::new);
+        pm.clear();
+        pm.resize(n, 0.0);
+    } else {
+        out.pad_mask = None;
+    }
+    out.data_tokens = n as u64;
 }
 
 fn pool_prefix(n: usize, pct: f64) -> usize {
@@ -280,6 +479,44 @@ mod tests {
     }
 
     #[test]
+    fn plan_then_materialize_equals_next_batch() {
+        let (ds, _) = gpt_setup();
+        let n = ds.n_samples();
+        let mk = || GptLoader::new(ds.clone(), Box::new(UniformSampler::new(n, 3)), 8);
+        let mut a = mk();
+        let mut b = mk();
+        let core = b.core();
+        for &(seq, tf) in &[
+            (64, SeqTransform::None),
+            (16, SeqTransform::Truncate),
+            (16, SeqTransform::Reshape),
+        ] {
+            let state = st(tf, seq);
+            let direct = a.next_batch(seq, &state);
+            let plan = b.plan_batch(seq, &state);
+            let via_core = core.materialize(&BatchPlan::Lm(plan), None);
+            assert_eq!(AnyBatch::Lm(direct), via_core);
+        }
+    }
+
+    #[test]
+    fn materialize_into_recycled_batch_is_identical() {
+        let (ds, _) = gpt_setup();
+        let n = ds.n_samples();
+        let mut l = GptLoader::new(ds.clone(), Box::new(UniformSampler::new(n, 9)), 8);
+        let core = l.core();
+        let plan = BatchPlan::Lm(l.plan_batch(64, &st(SeqTransform::None, 64)));
+        let fresh = core.materialize(&plan, None);
+        // recycle a batch with clashing contents (different shape + masks)
+        let mut junk = LmBatch::default();
+        junk.tokens = vec![-7; 3];
+        junk.loss_mask = vec![0.5; 999];
+        junk.pad_mask = Some(vec![1.0; 4]);
+        let reused = core.materialize(&plan, Some(AnyBatch::Lm(junk)));
+        assert_eq!(fresh, reused);
+    }
+
+    #[test]
     fn bert_mlm_masking_invariants() {
         let c = Corpus::generate(CorpusConfig { n_docs: 200, seed: 4, ..Default::default() });
         let t = Tokenizer::from_corpus(&c);
@@ -310,6 +547,29 @@ mod tests {
         let masked: f32 = b.loss_mask.iter().sum();
         let rate = masked / valid;
         assert!((0.05..0.3).contains(&rate), "mask rate {rate}");
+    }
+
+    #[test]
+    fn bert_mask_seed_is_per_batch_not_streamwise() {
+        let c = Corpus::generate(CorpusConfig { n_docs: 200, seed: 4, ..Default::default() });
+        let t = Tokenizer::from_corpus(&c);
+        let ds = Arc::new(BertDataset::build(&c, &t, 64));
+        let n = ds.n_samples();
+        let mk = || BertLoader::new(ds.clone(), Box::new(UniformSampler::new(n, 5)), 8, t.vocab_size, 11);
+        // batch k's bytes must not depend on whether earlier batches were
+        // materialized — only on the planning counter.
+        let mut a = mk();
+        let b0 = a.next_batch(64, &st(SeqTransform::None, 64));
+        let b1 = a.next_batch(64, &st(SeqTransform::None, 64));
+        let mut c2 = mk();
+        let p0 = c2.plan_batch(64, &st(SeqTransform::None, 64));
+        let p1 = c2.plan_batch(64, &st(SeqTransform::None, 64));
+        let core = c2.core();
+        // materialize out of order
+        let m1 = core.materialize(&BatchPlan::Lm(p1), None);
+        let m0 = core.materialize(&BatchPlan::Lm(p0), None);
+        assert_eq!(AnyBatch::Lm(b0), m0);
+        assert_eq!(AnyBatch::Lm(b1), m1);
     }
 
     #[test]

@@ -7,6 +7,9 @@ pub mod pacing;
 pub mod sampler;
 pub mod scheduler;
 
-pub use loader::{BertLoader, GptLoader, LmBatch, VitBatch, VitLoader};
+pub use loader::{
+    AnyBatch, BatchPlan, BertLoader, GptLoader, LmBatch, LmPlan, LoaderCore, VitBatch,
+    VitLoader, VitPlan,
+};
 pub use sampler::{PoolSampler, Sampler, UniformSampler};
 pub use scheduler::{ClScheduler, ClState, SeqTransform};

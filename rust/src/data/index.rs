@@ -63,7 +63,7 @@ impl DifficultyIndex {
         Ok(())
     }
 
-    /// Open a saved index file read-only (zero-copy).
+    /// Open a saved index file read-only.
     pub fn open(path: &Path) -> Result<DifficultyIndex> {
         let map = Mmap::open(path)?;
         if map.len() < HEADER {

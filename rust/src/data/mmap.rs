@@ -1,23 +1,27 @@
-//! Memory-mapped file substrate — the numpy-memmap equivalent the paper's
+//! File-backed buffer substrate — the numpy-memmap equivalent the paper's
 //! data analyzer writes its difficulty indexes to ("to reduce the memory
 //! overhead when analyzing the huge dataset, we write the index files as
 //! numpy memory-mapped files", §3.1).
 //!
-//! Thin safe wrapper over `libc::mmap`: create a fixed-size writable file
-//! mapping, or open an existing file read-only, and view it as a typed
-//! slice of a `Pod` element type.
+//! The offline vendor set has no `libc` crate, so instead of a raw
+//! `mmap(2)` wrapper this is an 8-byte-aligned heap buffer with explicit
+//! file backing (DESIGN.md §Substitutions): `create` sizes the file and
+//! maps a writable buffer over it, `flush` is the `msync` equivalent, and
+//! `open` loads an existing file read-only. The typed-slice API and the
+//! index file format are identical to the mmap version, so swapping a real
+//! mmap back in is a local change.
 
 use crate::Result;
 use anyhow::{bail, Context};
 use std::fs::{File, OpenOptions};
-use std::os::unix::io::AsRawFd;
-use std::path::Path;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
 
-/// Element types that are safe to reinterpret from raw mapped bytes.
+/// Element types that are safe to reinterpret from raw buffer bytes.
 ///
 /// # Safety
 /// Implementors must be plain-old-data: no padding, no invalid bit
-/// patterns, alignment ≤ 8 (mmap returns page-aligned pointers).
+/// patterns, alignment ≤ 8 (the backing buffer is 8-byte aligned).
 pub unsafe trait Pod: Copy + 'static {}
 unsafe impl Pod for u8 {}
 unsafe impl Pod for u32 {}
@@ -26,19 +30,14 @@ unsafe impl Pod for i32 {}
 unsafe impl Pod for f32 {}
 unsafe impl Pod for f64 {}
 
-/// A memory-mapped file region.
+/// A file-backed byte region with typed-slice views.
 pub struct Mmap {
-    ptr: *mut libc::c_void,
+    /// u64 backing gives 8-byte alignment for every supported `Pod`.
+    buf: Vec<u64>,
     len: usize,
     writable: bool,
-    // Kept open for the lifetime of the mapping (not strictly required by
-    // POSIX, but it keeps the fd accounted for and msync-able).
-    _file: File,
+    path: PathBuf,
 }
-
-// The mapping is plain memory; access control is via &self / &mut self.
-unsafe impl Send for Mmap {}
-unsafe impl Sync for Mmap {}
 
 impl Mmap {
     /// Create (or truncate) `path` at `len` bytes and map it read-write.
@@ -54,40 +53,31 @@ impl Mmap {
             .open(path)
             .with_context(|| format!("creating {}", path.display()))?;
         file.set_len(len as u64)?;
-        Self::map(file, len, true)
+        Ok(Mmap {
+            buf: vec![0u64; len.div_ceil(8)],
+            len,
+            writable: true,
+            path: path.to_path_buf(),
+        })
     }
 
     /// Open an existing file read-only and map all of it.
     pub fn open(path: &Path) -> Result<Mmap> {
-        let file = File::open(path)
+        let mut file = File::open(path)
             .with_context(|| format!("opening {}", path.display()))?;
         let len = file.metadata()?.len() as usize;
         if len == 0 {
             bail!("cannot map zero-length file {}", path.display());
         }
-        Self::map(file, len, false)
-    }
-
-    fn map(file: File, len: usize, writable: bool) -> Result<Mmap> {
-        let prot = if writable {
-            libc::PROT_READ | libc::PROT_WRITE
-        } else {
-            libc::PROT_READ
+        let mut buf = vec![0u64; len.div_ceil(8)];
+        // SAFETY: u64 has no invalid bit patterns; the byte view covers
+        // exactly the allocation.
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len)
         };
-        let ptr = unsafe {
-            libc::mmap(
-                std::ptr::null_mut(),
-                len,
-                prot,
-                libc::MAP_SHARED,
-                file.as_raw_fd(),
-                0,
-            )
-        };
-        if ptr == libc::MAP_FAILED {
-            bail!("mmap failed: {}", std::io::Error::last_os_error());
-        }
-        Ok(Mmap { ptr, len, writable, _file: file })
+        file.read_exact(bytes)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(Mmap { buf, len, writable: false, path: path.to_path_buf() })
     }
 
     pub fn len(&self) -> usize {
@@ -99,12 +89,16 @@ impl Mmap {
     }
 
     pub fn as_bytes(&self) -> &[u8] {
-        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        // SAFETY: the buffer holds at least `len` initialized bytes.
+        unsafe { std::slice::from_raw_parts(self.buf.as_ptr() as *const u8, self.len) }
     }
 
     pub fn as_bytes_mut(&mut self) -> &mut [u8] {
         assert!(self.writable, "mapping is read-only");
-        unsafe { std::slice::from_raw_parts_mut(self.ptr as *mut u8, self.len) }
+        // SAFETY: as above; &mut self gives unique access.
+        unsafe {
+            std::slice::from_raw_parts_mut(self.buf.as_mut_ptr() as *mut u8, self.len)
+        }
     }
 
     /// View a byte range as a typed slice. `offset` must be aligned to
@@ -113,9 +107,11 @@ impl Mmap {
         let bytes = count * std::mem::size_of::<T>();
         assert!(offset + bytes <= self.len, "slice out of bounds");
         assert_eq!(offset % std::mem::align_of::<T>(), 0, "misaligned slice");
+        // SAFETY: `Pod` guarantees any bit pattern is valid; the base
+        // buffer is 8-byte aligned and the offset preserves T's alignment.
         unsafe {
             std::slice::from_raw_parts(
-                (self.ptr as *const u8).add(offset) as *const T,
+                (self.buf.as_ptr() as *const u8).add(offset) as *const T,
                 count,
             )
         }
@@ -126,28 +122,40 @@ impl Mmap {
         let bytes = count * std::mem::size_of::<T>();
         assert!(offset + bytes <= self.len, "slice out of bounds");
         assert_eq!(offset % std::mem::align_of::<T>(), 0, "misaligned slice");
+        // SAFETY: as in `slice`; &mut self gives unique access.
         unsafe {
             std::slice::from_raw_parts_mut(
-                (self.ptr as *mut u8).add(offset) as *mut T,
+                (self.buf.as_mut_ptr() as *mut u8).add(offset) as *mut T,
                 count,
             )
         }
     }
 
-    /// Flush dirty pages back to the file (msync MS_SYNC).
+    /// Flush the buffer back to the file (the `msync` equivalent).
     pub fn flush(&self) -> Result<()> {
-        let rc = unsafe { libc::msync(self.ptr, self.len, libc::MS_SYNC) };
-        if rc != 0 {
-            bail!("msync failed: {}", std::io::Error::last_os_error());
+        if !self.writable {
+            return Ok(());
         }
+        let mut file = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&self.path)
+            .with_context(|| format!("flushing {}", self.path.display()))?;
+        file.write_all(self.as_bytes())?;
+        file.sync_data()?;
         Ok(())
     }
 }
 
 impl Drop for Mmap {
     fn drop(&mut self) {
-        unsafe {
-            libc::munmap(self.ptr, self.len);
+        if self.writable {
+            // Can't propagate from Drop; losing an index file silently
+            // would surface much later as a corrupt-magic open error.
+            if let Err(e) = self.flush() {
+                eprintln!("dsde: failed to flush {}: {e:#}", self.path.display());
+            }
         }
     }
 }
@@ -204,5 +212,18 @@ mod tests {
     #[test]
     fn zero_len_rejected() {
         assert!(Mmap::create(&tmp("zero"), 0).is_err());
+    }
+
+    #[test]
+    fn drop_persists_writable_mapping() {
+        let path = tmp("persist");
+        {
+            let mut m = Mmap::create(&path, 8).unwrap();
+            m.slice_mut::<u64>(0, 1)[0] = 0xdead_beef;
+            // no explicit flush: Drop must write through
+        }
+        let m = Mmap::open(&path).unwrap();
+        assert_eq!(m.slice::<u64>(0, 1)[0], 0xdead_beef);
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -1,14 +1,17 @@
 //! Data substrate: synthetic corpus, tokenizer, per-family datasets, the
-//! memory-mapped file layer and the difficulty index format.
+//! file-backed index layer, the difficulty index format, and the bounded
+//! prefetch primitives behind the async batch pipeline.
 
 pub mod corpus;
 pub mod dataset;
 pub mod index;
 pub mod mmap;
+pub mod prefetch;
 pub mod tokenizer;
 
 pub use corpus::{Corpus, CorpusConfig, Doc};
 pub use dataset::{BertDataset, GptDataset, VitDataset};
 pub use index::DifficultyIndex;
 pub use mmap::Mmap;
+pub use prefetch::{Pool, QueueError, ReorderQueue};
 pub use tokenizer::Tokenizer;

@@ -1,0 +1,369 @@
+//! Order-preserving bounded prefetch primitives for the async data
+//! pipeline (DESIGN.md §Async-data-pipeline).
+//!
+//! * [`ReorderQueue`] — N producers claim item indices *strictly in order*
+//!   (the planning closure runs under the queue lock, so stateful planning
+//!   — sampler draws, RNG-seed derivation — advances exactly as in a
+//!   sequential loop), then produce out of order on worker threads; the
+//!   consumer pops items back in index order. A bounded window
+//!   (`depth`) provides backpressure so at most `depth` items are in
+//!   flight beyond the consumer. This is what makes the async pipeline
+//!   byte-identical to the synchronous path under a fixed seed.
+//! * [`Pool`] — a small free-list recycling batch allocations between the
+//!   consumer and the producers, so steady-state prefetching does not
+//!   allocate.
+//!
+//! Plain `Mutex` + `Condvar` (the offline vendor set has no tokio or
+//! crossbeam; DESIGN.md §Substitutions).
+
+use std::collections::BTreeMap;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// A bounded free-list of reusable objects (batch buffers).
+pub struct Pool<T> {
+    slots: Mutex<Vec<T>>,
+    cap: usize,
+}
+
+impl<T> Pool<T> {
+    pub fn new(cap: usize) -> Pool<T> {
+        Pool { slots: Mutex::new(Vec::new()), cap: cap.max(1) }
+    }
+
+    /// Take a recycled object if one is available.
+    pub fn take(&self) -> Option<T> {
+        self.lock().pop()
+    }
+
+    /// Return an object to the pool (dropped if the pool is full).
+    pub fn put(&self, item: T) {
+        let mut slots = self.lock();
+        if slots.len() < self.cap {
+            slots.push(item);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Vec<T>> {
+        self.slots.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Why [`ReorderQueue::next`] could not return an item.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum QueueError {
+    /// A producer thread panicked; the missing item will never arrive.
+    ProducerPanicked,
+    /// All items were already consumed.
+    Drained,
+    /// Producers exited without producing the next item (internal bug or
+    /// an early `stop`).
+    Incomplete,
+}
+
+impl std::fmt::Display for QueueError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueueError::ProducerPanicked => write!(f, "prefetch producer panicked"),
+            QueueError::Drained => write!(f, "prefetch queue already drained"),
+            QueueError::Incomplete => {
+                write!(f, "prefetch producers exited before the next item was produced")
+            }
+        }
+    }
+}
+
+impl std::error::Error for QueueError {}
+
+struct Inner<S, T> {
+    /// Sequential planning state, advanced strictly in item order.
+    state: S,
+    total: usize,
+    depth: usize,
+    next_issue: usize,
+    next_consume: usize,
+    done: BTreeMap<usize, T>,
+    stopped: bool,
+    failed: bool,
+    producers: usize,
+    build_secs: f64,
+}
+
+/// Bounded, index-ordered producer/consumer queue with sequential
+/// planning. See the module docs for the protocol.
+pub struct ReorderQueue<S, T> {
+    inner: Mutex<Inner<S, T>>,
+    /// Producers wait here for backpressure space.
+    space: Condvar,
+    /// The consumer waits here for the next in-order item.
+    ready: Condvar,
+}
+
+impl<S, T> ReorderQueue<S, T> {
+    /// `n_producers` must match the number of producer threads that will be
+    /// attached; each must call [`ReorderQueue::producer_finished`] exactly
+    /// once (normally or on panic).
+    pub fn new(state: S, total: usize, depth: usize, n_producers: usize) -> ReorderQueue<S, T> {
+        ReorderQueue {
+            inner: Mutex::new(Inner {
+                state,
+                total,
+                depth: depth.max(1),
+                next_issue: 0,
+                next_consume: 0,
+                done: BTreeMap::new(),
+                stopped: false,
+                failed: false,
+                producers: n_producers,
+                build_secs: 0.0,
+            }),
+            space: Condvar::new(),
+            ready: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner<S, T>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Claim the next item index, running `plan` against the shared
+    /// sequential state under the queue lock (this is what pins plan order
+    /// to item order regardless of thread scheduling). Blocks while the
+    /// in-flight window is full. Returns `None` when every index has been
+    /// claimed or the queue stopped — the producer should then exit.
+    pub fn claim<P>(&self, plan: impl FnOnce(&mut S, usize) -> P) -> Option<(usize, P)> {
+        let mut g = self.lock();
+        loop {
+            if g.stopped || g.failed || g.next_issue >= g.total {
+                return None;
+            }
+            if g.next_issue < g.next_consume + g.depth {
+                break;
+            }
+            g = self.space.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        let idx = g.next_issue;
+        g.next_issue += 1;
+        let p = plan(&mut g.state, idx);
+        Some((idx, p))
+    }
+
+    /// Hand a produced item back to the queue.
+    pub fn complete(&self, idx: usize, item: T, build_secs: f64) {
+        let mut g = self.lock();
+        debug_assert!(idx >= g.next_consume && idx < g.next_issue);
+        g.build_secs += build_secs;
+        g.done.insert(idx, item);
+        self.ready.notify_all();
+    }
+
+    /// Producer accounting; `panicked` marks the queue failed so the
+    /// consumer errors out instead of blocking forever.
+    pub fn producer_finished(&self, panicked: bool) {
+        let mut g = self.lock();
+        g.producers = g.producers.saturating_sub(1);
+        if panicked {
+            g.failed = true;
+        }
+        self.ready.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Blocking, in-order pop. Returns the item and the seconds this call
+    /// spent waiting (the consumer-visible stall).
+    pub fn next(&self) -> Result<(T, f64), QueueError> {
+        let t0 = Instant::now();
+        let mut g = self.lock();
+        loop {
+            if let Some(item) = g.done.remove(&g.next_consume) {
+                g.next_consume += 1;
+                self.space.notify_all();
+                return Ok((item, t0.elapsed().as_secs_f64()));
+            }
+            if g.failed {
+                return Err(QueueError::ProducerPanicked);
+            }
+            if g.next_consume >= g.total {
+                return Err(QueueError::Drained);
+            }
+            if g.producers == 0 {
+                return Err(QueueError::Incomplete);
+            }
+            g = self.ready.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Ask producers to exit (used by the pipeline's Drop).
+    pub fn stop(&self) {
+        let mut g = self.lock();
+        g.stopped = true;
+        drop(g);
+        self.space.notify_all();
+        self.ready.notify_all();
+    }
+
+    /// Total producer-side build time accumulated so far.
+    pub fn build_secs(&self) -> f64 {
+        self.lock().build_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    /// Spawn `n` producers that claim from `q`, "materialize" with a
+    /// schedule-dependent delay, and complete.
+    fn spawn_producers(
+        q: &Arc<ReorderQueue<u64, u64>>,
+        n: usize,
+        delay_us: u64,
+    ) -> Vec<std::thread::JoinHandle<()>> {
+        (0..n)
+            .map(|wi| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    // planning: value = running sequential state (order-dependent)
+                    while let Some((idx, plan)) = q.claim(|state, i| {
+                        *state = state.wrapping_mul(31).wrapping_add(i as u64);
+                        *state
+                    }) {
+                        if delay_us > 0 {
+                            // stagger so completion order differs from claim order
+                            std::thread::sleep(Duration::from_micros(
+                                delay_us * ((idx as u64 + wi as u64) % 3 + 1),
+                            ));
+                        }
+                        q.complete(idx, plan, 0.0);
+                    }
+                    q.producer_finished(false);
+                })
+            })
+            .collect()
+    }
+
+    fn sequential_reference(total: usize) -> Vec<u64> {
+        let mut state = 0u64;
+        (0..total)
+            .map(|i| {
+                state = state.wrapping_mul(31).wrapping_add(i as u64);
+                state
+            })
+            .collect()
+    }
+
+    #[test]
+    fn delivers_planned_items_in_order_under_concurrency() {
+        let total = 200;
+        let q = Arc::new(ReorderQueue::<u64, u64>::new(0, total, 4, 4));
+        let workers = spawn_producers(&q, 4, 50);
+        let expect = sequential_reference(total);
+        for (i, want) in expect.iter().enumerate() {
+            let (got, _stall) = q.next().unwrap();
+            assert_eq!(got, *want, "item {i} out of order or misplanned");
+        }
+        assert_eq!(q.next().unwrap_err(), QueueError::Drained);
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn backpressure_bounds_in_flight_items() {
+        let claimed = Arc::new(AtomicUsize::new(0));
+        let q = Arc::new(ReorderQueue::<u64, u64>::new(0, 1000, 3, 2));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                let claimed = claimed.clone();
+                std::thread::spawn(move || {
+                    while let Some((idx, _)) = q.claim(|_, i| i as u64) {
+                        claimed.fetch_add(1, Ordering::SeqCst);
+                        q.complete(idx, idx as u64, 0.0);
+                    }
+                    q.producer_finished(false);
+                })
+            })
+            .collect();
+        // consume nothing: claims must stall at the window size
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(claimed.load(Ordering::SeqCst) <= 3, "window exceeded");
+        // drain a few, window slides
+        for i in 0..10 {
+            let (v, _) = q.next().unwrap();
+            assert_eq!(v, i as u64);
+        }
+        q.stop();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn stop_unblocks_producers() {
+        let q = Arc::new(ReorderQueue::<u64, u64>::new(0, 1_000_000, 2, 2));
+        let workers = spawn_producers(&q, 2, 0);
+        let _ = q.next().unwrap();
+        q.stop();
+        for w in workers {
+            w.join().unwrap(); // must not hang
+        }
+    }
+
+    #[test]
+    fn producer_panic_surfaces_as_error() {
+        let q = Arc::new(ReorderQueue::<u64, u64>::new(0, 10, 2, 1));
+        // claim item 0 but "die" before completing it
+        let _ = q.claim(|_, i| i).unwrap();
+        q.producer_finished(true);
+        assert_eq!(q.next().unwrap_err(), QueueError::ProducerPanicked);
+    }
+
+    #[test]
+    fn exhausted_producers_without_item_error() {
+        let q = Arc::new(ReorderQueue::<u64, u64>::new(0, 10, 2, 1));
+        q.producer_finished(false);
+        assert_eq!(q.next().unwrap_err(), QueueError::Incomplete);
+    }
+
+    #[test]
+    fn stall_time_is_reported() {
+        let q = Arc::new(ReorderQueue::<u64, u64>::new(0, 1, 2, 1));
+        let qc = q.clone();
+        let w = std::thread::spawn(move || {
+            let (idx, p) = qc.claim(|_, i| i as u64).unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+            qc.complete(idx, p, 0.02);
+            qc.producer_finished(false);
+        });
+        let (_, stall) = q.next().unwrap();
+        assert!(stall >= 0.01, "consumer should have waited: {stall}");
+        assert!(q.build_secs() >= 0.02);
+        w.join().unwrap();
+    }
+
+    #[test]
+    fn pool_recycles_up_to_cap() {
+        let p: Pool<Vec<u8>> = Pool::new(2);
+        assert!(p.take().is_none());
+        p.put(vec![1]);
+        p.put(vec![2]);
+        p.put(vec![3]); // over cap: dropped
+        assert_eq!(p.len(), 2);
+        assert!(p.take().is_some());
+        assert!(p.take().is_some());
+        assert!(p.take().is_none());
+        assert!(p.is_empty());
+    }
+}

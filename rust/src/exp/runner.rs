@@ -26,14 +26,17 @@ pub fn run_cases(env: &TrainEnv, cases: Vec<RunConfig>) -> Result<Vec<RunResult>
         let t0 = std::time::Instant::now();
         let r = env.run(cfg)?;
         eprintln!(
-            "[{}/{}] {}: eval_loss={:.4} ppl={:.2} saving={:.1}% {:.1}s",
+            "[{}/{}] {}: eval_loss={:.4} ppl={:.2} saving={:.1}% {:.1}s \
+             (loader stall {:.0}ms, {:.0}% of build hidden)",
             i + 1,
             n,
             label,
             r.final_eval_loss,
             r.perplexity(),
             r.saving_ratio * 100.0,
-            t0.elapsed().as_secs_f64()
+            t0.elapsed().as_secs_f64(),
+            r.loader_stall_secs * 1e3,
+            r.loader_hidden_fraction() * 100.0
         );
         out.push(r);
     }

@@ -21,6 +21,13 @@
 //!   TokenBypass state-of-the-art baseline it is compared against, and the
 //!   consumed-token accounting that composes both techniques with CL.
 //!
+//! The data layer never serializes with the step loop: batch planning,
+//! materialization and MLM masking run on an async, double-buffered
+//! pipeline ([`train::pipeline`], [`data::prefetch`]) that is
+//! byte-identical to synchronous loading under a fixed seed, and the
+//! whole CL + LTD routing schedule is resolved up front
+//! ([`train::plan_schedule`]) instead of per step.
+//!
 //! See DESIGN.md for the full system inventory and the experiment index
 //! mapping every paper table/figure to a bench target.
 

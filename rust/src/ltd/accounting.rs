@@ -40,6 +40,19 @@ impl TokenAccountant {
             rows * (seq as u64 * full_layers + kept as u64 * n_drop_layers as u64);
     }
 
+    /// Layer-tokens actually processed (kept) across all layers so far.
+    pub fn kept_layer_tokens(&self) -> u64 {
+        self.layer_tokens
+    }
+
+    /// Layer-tokens skipped by dropping. Conservation invariant:
+    /// `kept_layer_tokens + dropped_layer_tokens == n_layers * data_tokens`
+    /// (every consumed data token is either processed or dropped in each
+    /// layer) — property-checked in `tests/properties.rs`.
+    pub fn dropped_layer_tokens(&self) -> u64 {
+        self.n_layers * self.data_tokens - self.layer_tokens
+    }
+
     /// Data-token-equivalent compute consumed so far (drives LR decay).
     pub fn compute_tokens(&self) -> f64 {
         if self.n_layers == 0 {

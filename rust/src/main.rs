@@ -37,7 +37,7 @@ fn main() {
 
 const VALUE_KEYS: &[&str] = &[
     "docs", "workers", "metric", "preset", "family", "steps", "lr", "seed",
-    "config", "eval-every", "out",
+    "config", "eval-every", "out", "prefetch-depth", "loader-workers",
 ];
 
 fn run(argv: &[String]) -> dsde::Result<()> {
@@ -171,7 +171,18 @@ fn train(args: &Args) -> dsde::Result<()> {
     };
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     cfg.eval_every = args.get_u64("eval-every", steps.div_ceil(5).max(1))?;
-    println!("case: {} on {} for {} steps", cfg.case_name(), cfg.family, cfg.total_steps);
+    cfg.pipeline.prefetch_depth =
+        args.get_u64("prefetch-depth", cfg.pipeline.prefetch_depth as u64)? as usize;
+    cfg.pipeline.n_loader_workers =
+        args.get_u64("loader-workers", cfg.pipeline.n_loader_workers as u64)? as usize;
+    println!(
+        "case: {} on {} for {} steps (pipeline: depth {}, {} workers)",
+        cfg.case_name(),
+        cfg.family,
+        cfg.total_steps,
+        cfg.pipeline.prefetch_depth,
+        cfg.pipeline.n_loader_workers
+    );
     let env = TrainEnv::new(args.get_u64("docs", 1000)? as usize, 7)?;
     let r = env.run(cfg)?;
     println!("\nstep      tokens        eval_loss   ppl");
@@ -194,6 +205,12 @@ fn train(args: &Args) -> dsde::Result<()> {
         r.saving_ratio * 100.0,
         r.wall_secs,
         r.step_secs * 1e3
+    );
+    println!(
+        "loader: build {:.1}ms, stall {:.1}ms ({:.0}% hidden by prefetch)",
+        r.loader_build_secs * 1e3,
+        r.loader_stall_secs * 1e3,
+        r.loader_hidden_fraction() * 100.0
     );
     if let Some(acc) = r.final_accuracy {
         println!("accuracy: {:.1}%", acc * 100.0);

@@ -8,5 +8,7 @@ pub mod trainer;
 pub mod tuning;
 
 pub use env::TrainEnv;
-pub use pipeline::Prefetcher;
-pub use trainer::{CurvePoint, EvalSet, LoaderKind, RunResult, Trainer};
+pub use pipeline::{BatchPipeline, PipelineStats, Prefetcher, StepSpec};
+pub use trainer::{
+    plan_schedule, CurvePoint, EvalSet, LoaderKind, RunResult, StepRoute, Trainer,
+};

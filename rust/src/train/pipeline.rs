@@ -1,14 +1,36 @@
-//! Bounded prefetch pipeline: overlap host-side batch preparation with
-//! PJRT execution (the streaming/backpressure piece of the L3 coordinator).
+//! Async, double-buffered batch pipeline: overlap host-side batch
+//! preparation with PJRT execution (the streaming/backpressure piece of
+//! the L3 coordinator).
 //!
-//! The producer thread runs a user closure to prepare items; a bounded
-//! `sync_channel` provides backpressure (the producer blocks when the
-//! consumer falls behind by `depth` items — no unbounded queueing). The
-//! vendor set has no tokio, so this is plain threads + channels
+//! Two layers live here:
+//!
+//! * [`Prefetcher`] — the generic single-producer prefetch channel
+//!   (unchanged API, used by benches and ad-hoc pipelines);
+//! * [`BatchPipeline`] — the trainer's N-worker curriculum pipeline. A
+//!   [`ReorderQueue`] issues step indices strictly in order and runs the
+//!   loader's *planning* stage (sampler draws, mask-seed derivation) under
+//!   the queue lock, so sampler state advances exactly as in a sequential
+//!   loop; workers then *materialize* batches in parallel and the trainer
+//!   drains them back in step order. With a fixed seed the delivered
+//!   stream is byte-identical to the synchronous path
+//!   (`tests/pipeline_determinism.rs`), while batch construction, MLM
+//!   masking and curriculum bookkeeping overlap with step execution.
+//!
+//! The vendor set has no tokio, so this is plain threads + channels
 //! (DESIGN.md §Substitutions); semantics are the same.
 
+use crate::config::schema::PipelineConfig;
+use crate::curriculum::loader::AnyBatch;
+use crate::curriculum::scheduler::ClState;
+use crate::data::prefetch::{Pool, ReorderQueue};
+use crate::train::trainer::LoaderKind;
 use std::sync::mpsc::{sync_channel, Receiver, RecvError, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Generic single-producer prefetcher
 
 pub struct Prefetcher<T: Send + 'static> {
     rx: Option<Receiver<T>>,
@@ -64,11 +86,113 @@ impl<T: Send + 'static> Drop for Prefetcher<T> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Trainer batch pipeline
+
+/// Per-step loading instructions, precomputed by the trainer from the
+/// curriculum schedule and bucket routing (`plan_schedule`).
+#[derive(Clone, Copy, Debug)]
+pub struct StepSpec {
+    pub cl: ClState,
+    /// Bucketed sequence length the step will execute at.
+    pub seq: usize,
+}
+
+/// Consumer-side statistics for the runtime_overhead bench and
+/// `RunResult` reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineStats {
+    /// Seconds the step loop spent waiting for a batch.
+    pub stall_secs: f64,
+    /// Total worker-side batch construction seconds (overlapped).
+    pub build_secs: f64,
+}
+
+/// The N-worker, depth-bounded curriculum batch pipeline.
+pub struct BatchPipeline {
+    q: Arc<ReorderQueue<LoaderKind, AnyBatch>>,
+    pool: Arc<Pool<AnyBatch>>,
+    workers: Vec<JoinHandle<()>>,
+    stall_secs: f64,
+}
+
+/// Decrements the producer count on both normal exit and panic, so the
+/// consumer never blocks on a batch that will not arrive.
+struct ProducerGuard {
+    q: Arc<ReorderQueue<LoaderKind, AnyBatch>>,
+}
+
+impl Drop for ProducerGuard {
+    fn drop(&mut self) {
+        self.q.producer_finished(std::thread::panicking());
+    }
+}
+
+impl BatchPipeline {
+    /// Spawn workers materializing `steps.len()` batches from `loader`.
+    pub fn spawn(loader: LoaderKind, steps: Arc<Vec<StepSpec>>, cfg: &PipelineConfig) -> BatchPipeline {
+        let depth = cfg.prefetch_depth.max(1);
+        let n_workers = cfg.n_loader_workers.clamp(1, 64);
+        let core = loader.core();
+        let q = Arc::new(ReorderQueue::new(loader, steps.len(), depth, n_workers));
+        let pool = Arc::new(Pool::new(depth + n_workers + 1));
+        let workers = (0..n_workers)
+            .map(|wi| {
+                let q = q.clone();
+                let pool = pool.clone();
+                let core = core.clone();
+                let steps = steps.clone();
+                std::thread::Builder::new()
+                    .name(format!("dsde-loader-{wi}"))
+                    .spawn(move || {
+                        let _guard = ProducerGuard { q: q.clone() };
+                        while let Some((idx, plan)) = q.claim(|loader, i| {
+                            let spec = &steps[i];
+                            loader.plan_next(spec.seq, &spec.cl)
+                        }) {
+                            let t0 = Instant::now();
+                            let recycled = pool.take();
+                            let batch = core.materialize(&plan, recycled);
+                            q.complete(idx, batch, t0.elapsed().as_secs_f64());
+                        }
+                    })
+                    .expect("spawn loader worker")
+            })
+            .collect();
+        BatchPipeline { q, pool, workers, stall_secs: 0.0 }
+    }
+
+    /// The next batch, in step order (blocks until the workers catch up;
+    /// the wait is accounted as stall time).
+    pub fn next(&mut self) -> crate::Result<AnyBatch> {
+        let (batch, stall) = self.q.next().map_err(|e| anyhow::anyhow!("{e}"))?;
+        self.stall_secs += stall;
+        Ok(batch)
+    }
+
+    /// Return a consumed batch's allocations to the worker pool.
+    pub fn recycle(&self, batch: AnyBatch) {
+        self.pool.put(batch);
+    }
+
+    pub fn stats(&self) -> PipelineStats {
+        PipelineStats { stall_secs: self.stall_secs, build_secs: self.q.build_secs() }
+    }
+}
+
+impl Drop for BatchPipeline {
+    fn drop(&mut self) {
+        self.q.stop();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Arc;
 
     #[test]
     fn delivers_all_items_in_order() {
@@ -117,4 +241,8 @@ mod tests {
         let elapsed = t0.elapsed().as_millis();
         assert!(elapsed < 70, "no overlap: {elapsed}ms");
     }
+
+    // BatchPipeline end-to-end behavior (including byte-identity with the
+    // synchronous path) is covered by tests/pipeline_determinism.rs, which
+    // exercises real loaders over every CL transform.
 }

@@ -8,18 +8,27 @@
 //! makes random-LTD aware of the CL-adjusted sequence length (kept length
 //! is computed against the *routed* bucket), and charges the LR schedule
 //! with the composed consumed-token count.
+//!
+//! The whole run's (CL state, route) sequence is resolved up front by
+//! [`plan_schedule`]; the same plan pre-warms the executable cache, pins
+//! the token-based LR decay budget (§A.1 point 5) and — when
+//! [`PipelineConfig`] enables it — feeds the async batch pipeline so batch
+//! construction overlaps step execution. The trainer then drains batches
+//! in step order and reports how long it stalled waiting for data.
 
-use crate::config::schema::{LrBasis, Routing, RunConfig};
-use crate::curriculum::loader::{LmBatch, VitBatch};
-use crate::curriculum::scheduler::ClScheduler;
+use crate::config::schema::{LrBasis, PipelineConfig, Routing, RunConfig};
+use crate::curriculum::loader::{AnyBatch, LmBatch, VitBatch};
+use crate::curriculum::scheduler::{ClScheduler, ClState};
 use crate::curriculum::{BertLoader, GptLoader, VitLoader};
 use crate::lr::LrSchedule;
 use crate::ltd::schedule::kept_len;
 use crate::ltd::{ImportanceTracker, RandomDropper, TokenAccountant};
-use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_u32, Mode, Runtime};
+use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_u32, Mode, Route, Runtime};
+use crate::train::pipeline::{BatchPipeline, PipelineStats, StepSpec};
 use crate::Result;
 use anyhow::{anyhow, bail};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One point on the convergence curve (Fig. 5 reproduction).
@@ -51,11 +60,25 @@ pub struct RunResult {
     pub dispatch: BTreeMap<String, u64>,
     /// Mean train loss over the last 10% of steps (cheap progress signal).
     pub tail_train_loss: f64,
+    /// Seconds the step loop spent waiting on batch data.
+    pub loader_stall_secs: f64,
+    /// Total batch-construction seconds (== stall when synchronous;
+    /// mostly hidden behind execution when the async pipeline is on).
+    pub loader_build_secs: f64,
 }
 
 impl RunResult {
     pub fn perplexity(&self) -> f64 {
         self.final_eval_loss.exp()
+    }
+
+    /// Fraction of batch-construction time hidden from the step loop by
+    /// prefetching (0 when loading is synchronous).
+    pub fn loader_hidden_fraction(&self) -> f64 {
+        if self.loader_build_secs <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.loader_stall_secs / self.loader_build_secs).max(0.0)
     }
 }
 
@@ -67,18 +90,107 @@ pub enum LoaderKind {
     Vit(VitLoader),
 }
 
+impl LoaderKind {
+    /// Sequential planning stage (see `curriculum::loader`): draw the next
+    /// batch's sample ids under the caller's ordering lock.
+    pub fn plan_next(
+        &mut self,
+        seq: usize,
+        cl: &ClState,
+    ) -> crate::curriculum::loader::BatchPlan {
+        use crate::curriculum::loader::BatchPlan;
+        match self {
+            LoaderKind::Gpt(l) => BatchPlan::Lm(l.plan_batch(seq, cl)),
+            LoaderKind::Bert(l) => BatchPlan::Lm(l.plan_batch(seq, cl)),
+            LoaderKind::Vit(l) => BatchPlan::Vit(l.plan_batch()),
+        }
+    }
+
+    /// The shareable materialization half (cloned into pipeline workers).
+    pub fn core(&self) -> crate::curriculum::loader::LoaderCore {
+        match self {
+            LoaderKind::Gpt(l) => l.core(),
+            LoaderKind::Bert(l) => l.core(),
+            LoaderKind::Vit(l) => l.core(),
+        }
+    }
+}
+
 /// Fixed held-out evaluation set.
 pub enum EvalSet {
     Lm(Vec<LmBatch>),
     Vit(Vec<VitBatch>),
 }
 
+/// The resolved (curriculum state, compiled route) of one training step.
+#[derive(Clone, Debug)]
+pub struct StepRoute {
+    pub cl: ClState,
+    pub route: Route,
+}
+
+/// Where the trainer's batches come from: the synchronous plan+materialize
+/// path, or the async pipeline draining the same plans in step order.
+enum BatchSource {
+    Sync {
+        loader: LoaderKind,
+        core: crate::curriculum::loader::LoaderCore,
+        spare: Option<AnyBatch>,
+        stall_secs: f64,
+    },
+    Async(BatchPipeline),
+}
+
+impl BatchSource {
+    fn new(loader: LoaderKind, schedule: &[StepRoute], cfg: &PipelineConfig) -> BatchSource {
+        if cfg.enabled() && !schedule.is_empty() {
+            let specs: Vec<StepSpec> = schedule
+                .iter()
+                .map(|s| StepSpec { cl: s.cl, seq: s.route.seq })
+                .collect();
+            BatchSource::Async(BatchPipeline::spawn(loader, Arc::new(specs), cfg))
+        } else {
+            let core = loader.core();
+            BatchSource::Sync { loader, core, spare: None, stall_secs: 0.0 }
+        }
+    }
+
+    fn next(&mut self, sr: &StepRoute) -> Result<AnyBatch> {
+        match self {
+            BatchSource::Sync { loader, core, spare, stall_secs } => {
+                let t0 = Instant::now();
+                let plan = loader.plan_next(sr.route.seq, &sr.cl);
+                let batch = core.materialize(&plan, spare.take());
+                *stall_secs += t0.elapsed().as_secs_f64();
+                Ok(batch)
+            }
+            BatchSource::Async(p) => p.next(),
+        }
+    }
+
+    fn recycle(&mut self, batch: AnyBatch) {
+        match self {
+            BatchSource::Sync { spare, .. } => *spare = Some(batch),
+            BatchSource::Async(p) => p.recycle(batch),
+        }
+    }
+
+    fn stats(&self) -> PipelineStats {
+        match self {
+            BatchSource::Sync { stall_secs, .. } => {
+                PipelineStats { stall_secs: *stall_secs, build_secs: *stall_secs }
+            }
+            BatchSource::Async(p) => p.stats(),
+        }
+    }
+}
+
 pub struct Trainer<'rt> {
     rt: &'rt Runtime,
     run: RunConfig,
-    loader: LoaderKind,
+    loader: Option<LoaderKind>,
     eval_set: EvalSet,
-    scheduler: ClScheduler,
+    schedule: Vec<StepRoute>,
     lr: LrSchedule,
     accountant: TokenAccountant,
     dropper: RandomDropper,
@@ -97,12 +209,12 @@ impl<'rt> Trainer<'rt> {
     ) -> Result<Trainer<'rt>> {
         run.validate()?;
         let fam = rt.registry.family(&run.family)?.clone();
-        let scheduler = ClScheduler::new(&run.curriculum, fam.max_seq)?;
+        let (schedule, budget, planned) = plan_schedule(rt, &run)?;
         // Paper §A.1(5): LR decays over exactly the total training token
-        // budget. If the config doesn't pin it, estimate the composed
-        // budget (CL × LTD aware) analytically.
+        // budget. If the config doesn't pin it, use the planned composed
+        // budget (CL × LTD aware).
         if run.lr.decay_total == 0.0 && run.lr.basis == LrBasis::Tokens {
-            run.lr.decay_total = estimate_compute_tokens(rt, &run)?;
+            run.lr.decay_total = budget;
         } else if run.lr.decay_total == 0.0 {
             run.lr.decay_total = run.total_steps as f64;
         }
@@ -111,7 +223,6 @@ impl<'rt> Trainer<'rt> {
         // Pre-compile every executable this run will route to, so compile
         // time never pollutes the measured step/wall timings (the registry
         // caches per process; repeated runs reuse the executables).
-        let (_, planned) = plan_routes(rt, &run)?;
         for name in &planned {
             rt.step(name)?;
         }
@@ -122,33 +233,16 @@ impl<'rt> Trainer<'rt> {
         Ok(Trainer {
             rt,
             lr: LrSchedule::new(run.lr.clone()),
-            scheduler,
+            schedule,
             accountant: TokenAccountant::new(fam.n_layers),
             dropper,
             importance,
             state,
             n_state,
             run,
-            loader,
+            loader: Some(loader),
             eval_set,
         })
-    }
-
-    /// Requested (seq, keep, mode) for a step, before bucket routing.
-    fn routing_request(&self, step: u64, seq_bucket: usize) -> (usize, Mode) {
-        match &self.run.routing {
-            Routing::None => (seq_bucket, Mode::Plain),
-            Routing::RandomLtd(l) => (kept_len(l, step, seq_bucket), Mode::Ltd),
-            Routing::TokenBypass(b) => {
-                let l = crate::config::schema::LtdConfig {
-                    r_start: b.r_start,
-                    total_steps: b.total_steps,
-                    schedule: b.schedule,
-                    exempt_first_last: true,
-                };
-                (kept_len(&l, step, seq_bucket), Mode::Bypass)
-            }
-        }
     }
 
     /// Run to completion.
@@ -162,14 +256,12 @@ impl<'rt> Trainer<'rt> {
         let tail_from = self.run.total_steps - (self.run.total_steps / 10).max(1);
         let wall0 = Instant::now();
 
+        let loader = self.loader.take().expect("trainer runs once");
+        let mut source = BatchSource::new(loader, &self.schedule, &self.run.pipeline);
+
         for step in 0..self.run.total_steps {
-            let cl = self.scheduler.state_at(step);
-            let seq_bucket = self.rt.registry.seq_bucket(&self.run.family, cl.seq)?;
-            let (keep_req, mode) = self.routing_request(step, seq_bucket);
-            let route =
-                self.rt
-                    .registry
-                    .route_train(&self.run.family, cl.seq, keep_req, mode)?;
+            let sr = self.schedule[step as usize].clone();
+            let route = &sr.route;
             let exe = self.rt.step(&route.artifact)?;
             *dispatch.entry(route.artifact.clone()).or_default() += 1;
 
@@ -184,25 +276,23 @@ impl<'rt> Trainer<'rt> {
             extra.push(scalar_f32((step + 1) as f32));
             extra.push(scalar_f32(lr_now as f32));
 
-            let (rows, tokens_for_importance) = match &mut self.loader {
-                LoaderKind::Gpt(l) => {
-                    let b = l.next_batch(route.seq, &cl);
-                    let toks = b.tokens.clone();
-                    push_lm_batch(&mut extra, &b)?;
-                    (b.rows, Some((toks, b.rows)))
+            let batch = source.next(&sr)?;
+            let (rows, tokens_for_importance) = match &batch {
+                AnyBatch::Lm(b) => {
+                    push_lm_batch(&mut extra, b)?;
+                    let toks = self
+                        .importance
+                        .is_some()
+                        .then(|| (b.tokens.clone(), b.rows));
+                    (b.rows, toks)
                 }
-                LoaderKind::Bert(l) => {
-                    let b = l.next_batch(route.seq, &cl);
-                    let toks = b.tokens.clone();
-                    push_lm_batch(&mut extra, &b)?;
-                    (b.rows, Some((toks, b.rows)))
-                }
-                LoaderKind::Vit(l) => {
-                    let b = l.next_batch();
-                    push_vit_batch(&mut extra, &b, &fam)?;
+                AnyBatch::Vit(b) => {
+                    push_vit_batch(&mut extra, b, &fam)?;
                     (b.rows, None)
                 }
             };
+            debug_assert_eq!(batch.data_tokens(), (rows * route.seq) as u64);
+            source.recycle(batch);
 
             let dropping = route.mode != Mode::Plain && route.keep < route.seq;
             if dropping {
@@ -263,6 +353,8 @@ impl<'rt> Trainer<'rt> {
                 });
             }
         }
+        let loader_stats = source.stats();
+        drop(source);
 
         let (final_eval_loss, final_accuracy) = self.evaluate()?;
         curve.push(CurvePoint {
@@ -285,6 +377,8 @@ impl<'rt> Trainer<'rt> {
             step_secs: step_secs_total / self.run.total_steps.max(1) as f64,
             dispatch,
             tail_train_loss: mean(&tail_losses),
+            loader_stall_secs: loader_stats.stall_secs,
+            loader_build_secs: loader_stats.build_secs,
         })
     }
 
@@ -362,17 +456,20 @@ fn mean(xs: &[f64]) -> f64 {
 
 /// Analytic route plan of a configured run: walks the schedules without
 /// touching data, mirroring exactly the trainer's bucket routing. Returns
-/// the compute-token budget (pins the token-based LR decay — §A.1 point 5)
-/// and the set of executables the run will dispatch to (pre-warmed by
-/// `Trainer::new` so compile time never pollutes step timings).
-pub fn plan_routes(
+/// the per-step (CL state, route) sequence the trainer and the async
+/// pipeline both execute, the compute-token budget (pins the token-based
+/// LR decay — §A.1 point 5) and the set of executables the run will
+/// dispatch to (pre-warmed by `Trainer::new` so compile time never
+/// pollutes step timings).
+pub fn plan_schedule(
     rt: &Runtime,
     run: &RunConfig,
-) -> Result<(f64, std::collections::BTreeSet<String>)> {
+) -> Result<(Vec<StepRoute>, f64, std::collections::BTreeSet<String>)> {
     let fam = rt.registry.family(&run.family)?.clone();
     let scheduler = ClScheduler::new(&run.curriculum, fam.max_seq)?;
     let mut acct = TokenAccountant::new(fam.n_layers);
     let mut planned = std::collections::BTreeSet::new();
+    let mut schedule = Vec::with_capacity(run.total_steps as usize);
     for step in 0..run.total_steps {
         let cl = scheduler.state_at(step);
         let seq_bucket = rt.registry.seq_bucket(&run.family, cl.seq)?;
@@ -397,12 +494,22 @@ pub fn plan_routes(
             route.keep,
             if dropping { fam.n_middle_layers } else { 0 },
         );
-        planned.insert(route.artifact);
+        planned.insert(route.artifact.clone());
+        schedule.push(StepRoute { cl, route });
     }
-    Ok((acct.compute_tokens(), planned))
+    Ok((schedule, acct.compute_tokens(), planned))
+}
+
+/// Back-compat shim: the compute-token budget and dispatched-artifact set.
+pub fn plan_routes(
+    rt: &Runtime,
+    run: &RunConfig,
+) -> Result<(f64, std::collections::BTreeSet<String>)> {
+    let (_, budget, planned) = plan_schedule(rt, run)?;
+    Ok((budget, planned))
 }
 
 /// Back-compat shim: just the compute-token budget.
 pub fn estimate_compute_tokens(rt: &Runtime, run: &RunConfig) -> Result<f64> {
-    Ok(plan_routes(rt, run)?.0)
+    Ok(plan_schedule(rt, run)?.1)
 }

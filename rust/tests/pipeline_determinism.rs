@@ -1,0 +1,222 @@
+//! Determinism e2e: under a fixed seed the async double-buffered pipeline
+//! must produce a batch stream (tokens, targets, loss masks, `data_tokens`)
+//! byte-identical to the synchronous loader path — for GPT, BERT and ViT
+//! datasets across all four CL transforms (seqtru, seqres, seqreo, voc).
+//!
+//! This is the invariant that makes curriculum + LTD token accounting
+//! reproducible regardless of loader-worker scheduling: planning is
+//! sequential under the queue lock, materialization is pure, and the
+//! reorder buffer re-serializes completion.
+
+use dsde::analysis::analyzer::AnalyzerConfig;
+use dsde::analysis::metrics;
+use dsde::config::schema::*;
+use dsde::curriculum::loader::AnyBatch;
+use dsde::curriculum::scheduler::ClScheduler;
+use dsde::curriculum::{BertLoader, GptLoader, PoolSampler, Sampler, UniformSampler, VitLoader};
+use dsde::data::corpus::{Corpus, CorpusConfig};
+use dsde::data::dataset::{BertDataset, GptDataset, VitDataset};
+use dsde::data::tokenizer::Tokenizer;
+use dsde::train::trainer::LoaderKind;
+use dsde::train::{BatchPipeline, StepSpec, TrainEnv};
+use std::sync::Arc;
+
+const N_STEPS: usize = 40;
+
+fn corpus() -> (Corpus, Tokenizer) {
+    let c = Corpus::generate(CorpusConfig { n_docs: 300, seed: 17, ..Default::default() });
+    let t = Tokenizer::from_corpus(&c);
+    (c, t)
+}
+
+/// Per-step loading specs from a CL schedule (identity bucketing: the
+/// loader level has no compiled-variant grid).
+fn specs_for(schedules: &[ClConfig], max_seq: usize) -> Arc<Vec<StepSpec>> {
+    let sched = ClScheduler::new(schedules, max_seq).unwrap();
+    Arc::new(
+        (0..N_STEPS as u64)
+            .map(|t| {
+                let cl = sched.state_at(t);
+                StepSpec { cl, seq: cl.seq }
+            })
+            .collect(),
+    )
+}
+
+/// Drain the synchronous path: plan + materialize inline, in step order.
+fn sync_stream(mut loader: LoaderKind, specs: &[StepSpec]) -> Vec<AnyBatch> {
+    let core = loader.core();
+    specs
+        .iter()
+        .map(|s| {
+            let plan = loader.plan_next(s.seq, &s.cl);
+            core.materialize(&plan, None)
+        })
+        .collect()
+}
+
+/// Drain the async pipeline (4 workers, depth 3) in step order.
+fn async_stream(loader: LoaderKind, specs: Arc<Vec<StepSpec>>) -> Vec<AnyBatch> {
+    let cfg = PipelineConfig { prefetch_depth: 3, n_loader_workers: 4 };
+    let mut pipe = BatchPipeline::spawn(loader, specs.clone(), &cfg);
+    (0..specs.len())
+        .map(|_| {
+            let b = pipe.next().expect("pipeline delivers every step");
+            // recycle a clone-equal dummy? No: recycle the real allocation
+            // path by round-tripping a clone, so pooled reuse is exercised.
+            pipe.recycle(b.clone());
+            b
+        })
+        .collect()
+}
+
+fn assert_streams_equal(kind: &str, sync: &[AnyBatch], async_: &[AnyBatch]) {
+    assert_eq!(sync.len(), async_.len());
+    for (i, (a, b)) in sync.iter().zip(async_).enumerate() {
+        assert_eq!(a, b, "{kind}: batch {i} differs between sync and async paths");
+    }
+}
+
+#[test]
+fn gpt_all_transforms_byte_identical() {
+    let (c, t) = corpus();
+    let ds = Arc::new(GptDataset::build(&c, &t, 64));
+    let n = ds.n_samples();
+    let (voc_idx, _) = metrics::gpt_voc(&ds, &t, &AnalyzerConfig::default());
+    let voc_idx = Arc::new(voc_idx);
+
+    let seqtru = ClConfig::new(Metric::SeqTru, Bound::Value(8.0), Bound::Value(64.0), 30);
+    let seqres = ClConfig::new(Metric::SeqRes, Bound::Value(8.0), Bound::Value(64.0), 30);
+    let voc = ClConfig::new(Metric::Voc, Bound::Percentile(0.02), Bound::Percentile(1.0), 30);
+
+    let cases: Vec<(&str, Vec<ClConfig>, bool)> = vec![
+        ("gpt/plain", vec![], false),
+        ("gpt/seqtru", vec![seqtru.clone()], false),
+        ("gpt/seqres", vec![seqres], false),
+        ("gpt/voc", vec![voc.clone()], true),
+        ("gpt/seqtru+voc", vec![seqtru, voc], true),
+    ];
+    for (kind, schedules, pooled) in cases {
+        let specs = specs_for(&schedules, 64);
+        let sampler = |seed: u64| -> Box<dyn Sampler> {
+            if pooled {
+                Box::new(PoolSampler::new(voc_idx.clone(), seed))
+            } else {
+                Box::new(UniformSampler::new(n, seed))
+            }
+        };
+        let sync = sync_stream(
+            LoaderKind::Gpt(GptLoader::new(ds.clone(), sampler(9), 8)),
+            &specs,
+        );
+        let asyncs = async_stream(
+            LoaderKind::Gpt(GptLoader::new(ds.clone(), sampler(9), 8)),
+            specs.clone(),
+        );
+        assert_streams_equal(kind, &sync, &asyncs);
+        // the stream must carry real signal (tokens, masks, data_tokens)
+        match &sync[0] {
+            AnyBatch::Lm(b) => {
+                assert!(b.data_tokens > 0);
+                assert!(!b.tokens.is_empty());
+            }
+            _ => panic!("gpt yields LM batches"),
+        }
+    }
+}
+
+#[test]
+fn bert_seqreo_and_voc_byte_identical() {
+    let (c, t) = corpus();
+    let ds = Arc::new(BertDataset::build(&c, &t, 64));
+    let n = ds.n_samples();
+    let (reo_idx, _) = metrics::bert_eff_len(&ds, &AnalyzerConfig::default());
+    let reo_idx = Arc::new(reo_idx);
+    let (voc_idx, _) = metrics::bert_voc(&ds, &t, &AnalyzerConfig::default());
+    let voc_idx = Arc::new(voc_idx);
+
+    let seqreo = ClConfig::new(Metric::SeqReo, Bound::Percentile(0.05), Bound::Percentile(1.0), 30);
+    let voc = ClConfig::new(Metric::Voc, Bound::Percentile(0.05), Bound::Percentile(1.0), 30);
+    let seqtru = ClConfig::new(Metric::SeqTru, Bound::Value(16.0), Bound::Value(64.0), 30);
+
+    let cases: Vec<(&str, Vec<ClConfig>, Arc<dsde::data::DifficultyIndex>)> = vec![
+        ("bert/seqreo", vec![seqreo], reo_idx),
+        ("bert/voc", vec![voc.clone()], voc_idx.clone()),
+        ("bert/seqtru+voc", vec![seqtru, voc], voc_idx),
+    ];
+    for (kind, schedules, idx) in cases {
+        let specs = specs_for(&schedules, 64);
+        let mk = || {
+            LoaderKind::Bert(BertLoader::new(
+                ds.clone(),
+                Box::new(PoolSampler::new(idx.clone(), 21)),
+                8,
+                t.vocab_size,
+                33,
+            ))
+        };
+        let sync = sync_stream(mk(), &specs);
+        let asyncs = async_stream(mk(), specs.clone());
+        assert_streams_equal(kind, &sync, &asyncs);
+        // MLM masking present and byte-stable
+        match &sync[0] {
+            AnyBatch::Lm(b) => {
+                assert!(b.pad_mask.is_some());
+                assert!(b.loss_mask.iter().any(|&m| m > 0.0));
+            }
+            _ => panic!("bert yields LM batches"),
+        }
+    }
+    // uniform-sampler BERT baseline too (no curriculum)
+    let specs = specs_for(&[], 64);
+    let mk = || {
+        LoaderKind::Bert(BertLoader::new(
+            ds.clone(),
+            Box::new(UniformSampler::new(n, 5)),
+            8,
+            t.vocab_size,
+            7,
+        ))
+    };
+    assert_streams_equal("bert/plain", &sync_stream(mk(), &specs), &async_stream(mk(), specs.clone()));
+}
+
+#[test]
+fn vit_byte_identical() {
+    let ds = Arc::new(VitDataset::new(16, 48, 10, 0.4, 3));
+    let specs = specs_for(&[], 17);
+    let mk = || LoaderKind::Vit(VitLoader::new(ds.clone(), 8, 0));
+    let sync = sync_stream(mk(), &specs);
+    let asyncs = async_stream(mk(), specs.clone());
+    assert_streams_equal("vit", &sync, &asyncs);
+    match &sync[3] {
+        AnyBatch::Vit(b) => assert_eq!(b.labels.len(), 8),
+        _ => panic!("vit yields ViT batches"),
+    }
+}
+
+/// Full-trainer determinism: a run with the async pipeline must land on
+/// bitwise-identical results to the synchronous path (same losses, same
+/// token accounting, same dispatch histogram).
+#[test]
+fn trainer_async_equals_sync_end_to_end() {
+    let env = TrainEnv::new(200, 91).expect("artifacts present (see DESIGN.md)");
+    let cases = vec![
+        dsde::config::presets::gpt_pretrain(12, 3e-3, 64),
+        dsde::config::presets::bert_pretrain(12, 3e-3, 64),
+        dsde::config::presets::vit_finetune(12, 3e-3),
+    ];
+    for base in cases {
+        let mut sync_cfg = base.clone();
+        sync_cfg.pipeline = PipelineConfig::disabled();
+        let mut async_cfg = base.clone();
+        async_cfg.pipeline = PipelineConfig { prefetch_depth: 3, n_loader_workers: 4 };
+        let a = env.run(sync_cfg).unwrap();
+        let b = env.run(async_cfg).unwrap();
+        assert_eq!(a.final_eval_loss, b.final_eval_loss, "{}", base.label);
+        assert_eq!(a.data_tokens, b.data_tokens, "{}", base.label);
+        assert_eq!(a.compute_tokens, b.compute_tokens, "{}", base.label);
+        assert_eq!(a.dispatch, b.dispatch, "{}", base.label);
+        assert_eq!(a.tail_train_loss, b.tail_train_loss, "{}", base.label);
+    }
+}

@@ -1,0 +1,173 @@
+//! Randomized property tests over the schedule/accounting algebra, built
+//! on `testutil::property` (the in-tree proptest substitute).
+//!
+//! * pacing functions are monotone non-decreasing and clamped to
+//!   `[d_start, d_end]`;
+//! * the `TokenAccountant` conserves layer tokens (kept + dropped ==
+//!   consumed) under composed CL + LTD schedules;
+//! * seqres preserves the token count of every sampled sequence, while
+//!   seqtru strictly reduces it (the §3.1 distinction between the two
+//!   length transforms).
+
+use dsde::config::schema::*;
+use dsde::curriculum::loader::{BatchPlan, LoaderCore};
+use dsde::curriculum::scheduler::{ClScheduler, ClState, SeqTransform};
+use dsde::curriculum::{GptLoader, UniformSampler};
+use dsde::data::corpus::{Corpus, CorpusConfig};
+use dsde::data::dataset::GptDataset;
+use dsde::data::tokenizer::Tokenizer;
+use dsde::ltd::schedule::kept_len;
+use dsde::ltd::TokenAccountant;
+use dsde::testutil::property;
+use std::sync::Arc;
+
+#[test]
+fn prop_pacing_monotone_and_clamped() {
+    property("pacing monotone + clamped", 24, |rng| {
+        let pacing = match rng.gen_range(4) {
+            0 => Pacing::Linear,
+            1 => Pacing::Sqrt,
+            2 => Pacing::Power(0.1 + rng.next_f64() * 3.0),
+            _ => Pacing::Step(1 + rng.gen_range(9)),
+        };
+        let d_start = rng.next_f64() * 100.0;
+        let d_end = d_start + rng.next_f64() * 100.0;
+        let total = 1 + rng.gen_range(200) as u64;
+        let mut prev = f64::MIN;
+        for t in 0..=(total + total / 2 + 2) {
+            let d = dsde::curriculum::pacing::pace(pacing, d_start, d_end, t, total);
+            if d < d_start - 1e-9 || d > d_end + 1e-9 {
+                return Err(format!("{pacing:?}: d_t {d} outside [{d_start}, {d_end}] at t={t}"));
+            }
+            if d < prev - 1e-9 {
+                return Err(format!("{pacing:?}: not monotone at t={t}: {d} < {prev}"));
+            }
+            prev = d;
+        }
+        // and the schedule must reach its end difficulty
+        let d_final = dsde::curriculum::pacing::pace(pacing, d_start, d_end, total, total);
+        if (d_final - d_end).abs() > 1e-9 {
+            return Err(format!("{pacing:?}: end {d_final} != d_end {d_end}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_accountant_conserves_tokens_under_composed_schedules() {
+    property("accountant conservation", 16, |rng| {
+        let max_seq = 64usize;
+        let n_layers = 2 + rng.gen_range(6) as usize;
+        let n_mid = rng.gen_range(n_layers as u32 - 1) as usize;
+        let total_steps = 20 + rng.gen_range(80) as u64;
+        let batch = 1 + rng.gen_range(8) as usize;
+        // composed CL (seqtru) + LTD (mslg or constant) schedules
+        let cl = ClConfig::new(
+            Metric::SeqTru,
+            Bound::Value((4 + rng.gen_range(16)) as f64),
+            Bound::Value(max_seq as f64),
+            1 + rng.gen_range(total_steps as u32) as u64,
+        );
+        let ltd = if rng.next_f32() < 0.5 {
+            LtdConfig::mslg(1 + rng.gen_range(32) as usize, 1 + rng.gen_range(total_steps as u32) as u64)
+        } else {
+            LtdConfig::constant(1 + rng.gen_range(32) as usize, 1 + rng.gen_range(total_steps as u32) as u64)
+        };
+        let sched = ClScheduler::new(&[cl], max_seq).unwrap();
+        let mut acct = TokenAccountant::new(n_layers);
+        let mut expect_consumed = 0u64;
+        let mut expect_dropped = 0u64;
+        for step in 0..total_steps {
+            let seq = sched.state_at(step).seq;
+            let kept = kept_len(&ltd, step, seq);
+            let dropping = kept < seq;
+            let drop_layers = if dropping { n_mid } else { 0 };
+            acct.record(batch, seq, kept, drop_layers);
+            expect_consumed += (batch * seq * n_layers) as u64;
+            expect_dropped += (batch * (seq - kept) * drop_layers) as u64;
+        }
+        // conservation: kept + dropped == consumed (per layer-token)
+        let kept = acct.kept_layer_tokens();
+        let dropped = acct.dropped_layer_tokens();
+        if kept + dropped != expect_consumed {
+            return Err(format!(
+                "kept {kept} + dropped {dropped} != consumed {expect_consumed}"
+            ));
+        }
+        if dropped != expect_dropped {
+            return Err(format!("dropped {dropped} != schedule-derived {expect_dropped}"));
+        }
+        // and the derived ratios stay in range
+        let s = acct.saving_ratio();
+        if !(0.0..=1.0).contains(&s) {
+            return Err(format!("saving ratio {s} out of range"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_seqres_preserves_and_seqtru_reduces_tokens() {
+    let c = Corpus::generate(CorpusConfig { n_docs: 250, seed: 13, ..Default::default() });
+    let t = Tokenizer::from_corpus(&c);
+    let ds = Arc::new(GptDataset::build(&c, &t, 64));
+    let n = ds.n_samples();
+    property("seqres preserves / seqtru reduces", 12, |rng| {
+        let batch = 8usize;
+        // a bucketed sub-sequence length strictly below max
+        let seq = [8usize, 16, 32][rng.gen_range(3) as usize];
+        let mut loader = GptLoader::new(
+            ds.clone(),
+            Box::new(UniformSampler::new(n, rng.next_u64())),
+            batch,
+        );
+        let core: LoaderCore = loader.core();
+
+        // --- seqres: every sampled sequence is used in full (reshaped into
+        // segs rows), so tokens used == sampled sequences × max_seq.
+        let st = ClState { seq, transform: SeqTransform::Reshape, pool_pct: 1.0 };
+        let plan = loader.plan_batch(seq, &st);
+        let segs = 64 / seq;
+        let expect_ids = batch.div_ceil(segs);
+        if plan.ids.len() != expect_ids {
+            return Err(format!("seqres drew {} ids, want {expect_ids}", plan.ids.len()));
+        }
+        let batch_out = match core.materialize(&BatchPlan::Lm(plan.clone()), None) {
+            dsde::curriculum::AnyBatch::Lm(b) => b,
+            _ => return Err("wrong batch kind".into()),
+        };
+        let used = batch_out.tokens.len();
+        let sampled = plan.ids.len() * 64;
+        if used != sampled {
+            return Err(format!(
+                "seqres must preserve per-sequence token counts: used {used} != sampled {sampled}"
+            ));
+        }
+        if batch_out.data_tokens != (batch * seq) as u64 {
+            return Err("seqres batch data_tokens mismatch".into());
+        }
+
+        // --- seqtru: one sequence per row, truncated — strictly fewer
+        // tokens used than sampled whenever seq < max_seq.
+        let st = ClState { seq, transform: SeqTransform::Truncate, pool_pct: 1.0 };
+        let plan = loader.plan_batch(seq, &st);
+        if plan.ids.len() != batch {
+            return Err(format!("seqtru draws one id per row, got {}", plan.ids.len()));
+        }
+        let batch_out = match core.materialize(&BatchPlan::Lm(plan.clone()), None) {
+            dsde::curriculum::AnyBatch::Lm(b) => b,
+            _ => return Err("wrong batch kind".into()),
+        };
+        let used = batch_out.tokens.len();
+        let sampled = plan.ids.len() * 64;
+        if used >= sampled {
+            return Err(format!(
+                "seqtru must strictly reduce tokens used: used {used} >= sampled {sampled}"
+            ));
+        }
+        if used != batch * seq {
+            return Err(format!("seqtru batch holds {used} tokens, want {}", batch * seq));
+        }
+        Ok(())
+    });
+}

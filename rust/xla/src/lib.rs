@@ -1,0 +1,1135 @@
+//! Deterministic CPU test-double for the PJRT/XLA runtime.
+//!
+//! The offline vendor set carries no XLA native library, so this crate
+//! re-implements the small slice of the `xla` API the dsde coordinator
+//! uses (`Literal`, `PjRtClient`, `HloModuleProto`, executable load +
+//! execute) as an interpreter over *surrogate HLO modules*: small text
+//! files (written by `python/compile/gen_stub_artifacts.py`) that describe
+//! a trainable softmax model per family instead of a lowered HLO graph.
+//!
+//! The surrogate semantics preserve everything the coordinator is tested
+//! against (see DESIGN.md §Substitutions):
+//!
+//! * `*_init`    — seed-deterministic parameter init, zero Adam moments;
+//! * `*_train`   — masked softmax cross-entropy + Adam on a per-layer
+//!   additive logit model; random-LTD / TokenBypass keep-index inputs
+//!   restrict which positions each middle layer processes (so token
+//!   dropping genuinely changes per-layer compute and gradients);
+//! * `*_eval`    — token-weighted loss sums (and ViT top-1 accuracy).
+//!
+//! Everything is single-threaded and bit-deterministic from the inputs.
+
+use std::borrow::Borrow;
+use std::collections::HashMap;
+use std::fmt;
+
+// ---------------------------------------------------------------------------
+// Errors
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+// ---------------------------------------------------------------------------
+// Literals
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    U32,
+}
+
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl Data {
+    fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match self {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+            Data::U32(_) => ElementType::U32,
+        }
+    }
+}
+
+/// Element types a `Literal` can hold.
+pub trait NativeType: Copy + 'static {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::U32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[Self]> {
+        match d {
+            Data::U32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Array shape metadata (dims only; layout is always dense row-major).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A host literal: a dense typed array or a tuple of literals.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    Array { data: Data, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from a data slice.
+    pub fn vec1<T: NativeType>(xs: &[T]) -> Literal {
+        Literal::Array { data: T::wrap(xs.to_vec()), dims: vec![xs.len() as i64] }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(x: T) -> Literal {
+        Literal::Array { data: T::wrap(vec![x]), dims: Vec::new() }
+    }
+
+    fn from_f32(data: Vec<f32>, dims: Vec<i64>) -> Literal {
+        Literal::Array { data: Data::F32(data), dims }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Array { data, .. } => {
+                let n: i64 = dims.iter().product();
+                if n as usize != data.len() {
+                    return err(format!(
+                        "reshape: {} elements into dims {:?}",
+                        data.len(),
+                        dims
+                    ));
+                }
+                Ok(Literal::Array { data: data.clone(), dims: dims.to_vec() })
+            }
+            Literal::Tuple(_) => err("reshape: tuple literal"),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match self {
+            Literal::Array { data, .. } => data.len(),
+            Literal::Tuple(parts) => parts.iter().map(|p| p.element_count()).sum(),
+        }
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        // all supported element types are 4 bytes wide
+        self.element_count() * 4
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::Array { dims, .. } => Ok(ArrayShape { dims: dims.clone() }),
+            Literal::Tuple(_) => err("array_shape: tuple literal"),
+        }
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        match self {
+            Literal::Array { data, .. } => Ok(data.ty()),
+            Literal::Tuple(_) => err("ty: tuple literal"),
+        }
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        match self {
+            Literal::Array { data, .. } => match T::unwrap(data) {
+                Some(xs) if !xs.is_empty() => Ok(xs[0]),
+                Some(_) => err("get_first_element: empty literal"),
+                None => err("get_first_element: element type mismatch"),
+            },
+            Literal::Tuple(_) => err("get_first_element: tuple literal"),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => match T::unwrap(data) {
+                Some(xs) => Ok(xs.to_vec()),
+                None => err("to_vec: element type mismatch"),
+            },
+            Literal::Tuple(_) => err("to_vec: tuple literal"),
+        }
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts),
+            Literal::Array { .. } => err("to_tuple: array literal"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Surrogate module ("HLO proto") parsing
+
+/// Parsed surrogate module description.
+#[derive(Clone, Debug, Default)]
+struct Program {
+    name: String,
+    semantic: String,
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_mid: usize,
+    rows: usize,
+    seq: usize,
+    keep: usize,
+    mode: String,
+    pad_mask: bool,
+    classes: usize,
+    patch_dim: usize,
+    gain: f32,
+}
+
+/// Stand-in for `HloModuleProto`: holds the parsed surrogate program.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    program: Program,
+}
+
+impl HloModuleProto {
+    /// Parse a surrogate module text file (`key value` lines; `#` comments).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        let mut fields: HashMap<String, String> = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let key = match it.next() {
+                Some(k) => k,
+                None => continue,
+            };
+            let val = it.next().unwrap_or("");
+            fields.insert(key.to_string(), val.to_string());
+        }
+        if fields.get("dsde-hlo").map(String::as_str) != Some("1") {
+            return err(format!("{path}: not a dsde surrogate HLO module"));
+        }
+        let get = |k: &str| fields.get(k).cloned().unwrap_or_default();
+        let get_n = |k: &str| -> usize { fields.get(k).and_then(|v| v.parse().ok()).unwrap_or(0) };
+        let program = Program {
+            name: get("name"),
+            semantic: get("semantic"),
+            vocab: get_n("vocab"),
+            d_model: get_n("d_model"),
+            n_layers: get_n("n_layers"),
+            n_mid: get_n("n_mid"),
+            rows: get_n("rows"),
+            seq: get_n("seq"),
+            keep: get_n("keep"),
+            mode: {
+                let m = get("mode");
+                if m.is_empty() {
+                    "plain".to_string()
+                } else {
+                    m
+                }
+            },
+            pad_mask: get_n("pad_mask") != 0,
+            classes: get_n("classes"),
+            patch_dim: get_n("patch_dim"),
+            gain: fields
+                .get("gain")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(16.0),
+        };
+        if program.semantic.is_empty() {
+            return err(format!("{path}: missing 'semantic'"));
+        }
+        Ok(HloModuleProto { program })
+    }
+}
+
+/// Stand-in for `XlaComputation`.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    program: Program,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { program: proto.program.clone() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client / executable / buffer
+
+/// Stand-in for the PJRT CPU client.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        // "Compilation" validates the program shape table once up front.
+        let p = &comp.program;
+        match p.semantic.as_str() {
+            "lm_init" | "lm_train" | "lm_eval" => {
+                if p.vocab == 0 || p.n_layers < 3 {
+                    return err(format!("{}: bad lm program", p.name));
+                }
+            }
+            "vit_init" | "vit_train" | "vit_eval" => {
+                if p.classes == 0 || p.patch_dim == 0 {
+                    return err(format!("{}: bad vit program", p.name));
+                }
+            }
+            s => return err(format!("{}: unknown semantic '{s}'", p.name)),
+        }
+        Ok(PjRtLoadedExecutable { program: comp.program.clone() })
+    }
+}
+
+/// A device buffer holding one output literal.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// A loaded ("compiled") surrogate executable.
+pub struct PjRtLoadedExecutable {
+    program: Program,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with positional inputs; returns per-device output buffers
+    /// (one device, one tuple buffer — mirroring the real API shape).
+    pub fn execute<L: Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let lits: Vec<&Literal> = args.iter().map(|a| a.borrow()).collect();
+        let out = run_program(&self.program, &lits)?;
+        Ok(vec![vec![PjRtBuffer { lit: out }]])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Surrogate model semantics
+
+const ADAM_B1: f32 = 0.9;
+const ADAM_B2: f32 = 0.99;
+const ADAM_EPS: f32 = 1e-8;
+const INIT_SCALE: f32 = 0.02;
+
+/// splitmix64 — the stub's own deterministic generator (independent of the
+/// coordinator's PCG so seeds don't alias).
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed ^ 0x9e37_79b9_7f4a_7c15)
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [-1, 1).
+    fn next_sym_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (2.0 / (1u64 << 24) as f32) - 1.0
+    }
+}
+
+/// (len, dims) of each parameter tensor, in layout order.
+fn param_shapes(p: &Program) -> Vec<(usize, Vec<i64>)> {
+    let l = p.n_layers;
+    let mut shapes = Vec::with_capacity(3 * l);
+    let (rows_w, cols_w) = if p.semantic.starts_with("vit") {
+        (p.patch_dim, p.classes)
+    } else {
+        (p.vocab, p.vocab)
+    };
+    let bias = if p.semantic.starts_with("vit") { p.classes } else { p.vocab };
+    for _ in 0..l {
+        shapes.push((rows_w * cols_w, vec![rows_w as i64, cols_w as i64]));
+    }
+    for _ in 0..l {
+        shapes.push((bias, vec![bias as i64]));
+    }
+    for _ in 0..l {
+        shapes.push((p.d_model, vec![p.d_model as i64]));
+    }
+    shapes
+}
+
+fn n_params(p: &Program) -> usize {
+    3 * p.n_layers
+}
+
+fn run_program(p: &Program, args: &[&Literal]) -> Result<Literal> {
+    match p.semantic.as_str() {
+        "lm_init" | "vit_init" => run_init(p, args),
+        "lm_train" => run_lm(p, args, true),
+        "lm_eval" => run_lm(p, args, false),
+        "vit_train" => run_vit(p, args, true),
+        "vit_eval" => run_vit(p, args, false),
+        s => err(format!("unknown semantic '{s}'")),
+    }
+}
+
+fn want_args(p: &Program, got: usize, want: usize) -> Result<()> {
+    if got != want {
+        return err(format!("{}: expected {want} inputs, got {got}", p.name));
+    }
+    Ok(())
+}
+
+fn f32s<'a>(p: &Program, l: &'a Literal, what: &str, len: usize) -> Result<&'a [f32]> {
+    match l {
+        Literal::Array { data: Data::F32(v), .. } if v.len() == len => Ok(v),
+        Literal::Array { data: Data::F32(v), .. } => err(format!(
+            "{}: {what} has {} elements, expected {len}",
+            p.name,
+            v.len()
+        )),
+        _ => err(format!("{}: {what} must be an f32 array", p.name)),
+    }
+}
+
+fn i32s<'a>(p: &Program, l: &'a Literal, what: &str, len: usize) -> Result<&'a [i32]> {
+    match l {
+        Literal::Array { data: Data::I32(v), .. } if v.len() == len => Ok(v),
+        Literal::Array { data: Data::I32(v), .. } => err(format!(
+            "{}: {what} has {} elements, expected {len}",
+            p.name,
+            v.len()
+        )),
+        _ => err(format!("{}: {what} must be an i32 array", p.name)),
+    }
+}
+
+fn scalar_f32(p: &Program, l: &Literal, what: &str) -> Result<f32> {
+    l.get_first_element::<f32>()
+        .map_err(|e| Error(format!("{}: {what}: {e}", p.name)))
+}
+
+// ---- init -----------------------------------------------------------------
+
+fn run_init(p: &Program, args: &[&Literal]) -> Result<Literal> {
+    want_args(p, args.len(), 1)?;
+    let seed = args[0]
+        .get_first_element::<u32>()
+        .map_err(|e| Error(format!("{}: seed: {e}", p.name)))? as u64;
+    let shapes = param_shapes(p);
+    let np = n_params(p);
+    let l = p.n_layers;
+    let mut out = Vec::with_capacity(3 * np);
+    // params: W_l random (seed-dependent), b_l zero, g_l one
+    for (ti, (len, dims)) in shapes.iter().enumerate() {
+        let data = if ti < l {
+            let mut rng = Rng::new(seed.wrapping_mul(0x1000_0001).wrapping_add(ti as u64));
+            (0..*len)
+                .map(|_| rng.next_sym_f32() * INIT_SCALE / l as f32)
+                .collect()
+        } else if ti < 2 * l {
+            vec![0.0f32; *len]
+        } else {
+            vec![1.0f32; *len]
+        };
+        out.push(Literal::from_f32(data, dims.clone()));
+    }
+    // Adam moments start at zero
+    for _ in 0..2 {
+        for (len, dims) in &shapes {
+            out.push(Literal::from_f32(vec![0.0; *len], dims.clone()));
+        }
+    }
+    Ok(Literal::Tuple(out))
+}
+
+// ---- shared pieces --------------------------------------------------------
+
+/// Per-middle-layer processed-position mask from the keep-index input.
+/// `keep_idx` layout: ltd = `[n_mid, keep]` (independent per layer),
+/// bypass = `[keep]` (one shared set).
+fn processed_positions(
+    p: &Program,
+    keep_idx: Option<&[i32]>,
+) -> Result<Vec<Vec<bool>>> {
+    let mut proc = vec![vec![true; p.seq]; p.n_mid];
+    let idx = match keep_idx {
+        None => return Ok(proc),
+        Some(idx) => idx,
+    };
+    for layer in proc.iter_mut() {
+        for v in layer.iter_mut() {
+            *v = false;
+        }
+    }
+    let shared = p.mode == "bypass";
+    for (mid, layer) in proc.iter_mut().enumerate() {
+        let row = if shared { idx } else { &idx[mid * p.keep..(mid + 1) * p.keep] };
+        for &j in row {
+            if j < 0 || j as usize >= p.seq {
+                return err(format!("{}: keep index {j} out of range", p.name));
+            }
+            layer[j as usize] = true;
+        }
+    }
+    Ok(proc)
+}
+
+/// Stable softmax cross-entropy at one position. Fills `probs` with the
+/// softmax distribution and returns the CE loss against `target`.
+fn softmax_xent(logits: &[f32], target: usize, probs: &mut [f32]) -> f32 {
+    let mut mx = f32::NEG_INFINITY;
+    for &z in logits {
+        if z > mx {
+            mx = z;
+        }
+    }
+    let mut sum = 0.0f32;
+    for (pr, &z) in probs.iter_mut().zip(logits) {
+        let e = (z - mx).exp();
+        *pr = e;
+        sum += e;
+    }
+    for pr in probs.iter_mut() {
+        *pr /= sum;
+    }
+    sum.ln() + mx - logits[target]
+}
+
+struct AdamOut {
+    state: Vec<Literal>,
+    gnorm: f32,
+}
+
+/// Apply Adam to every parameter tensor given per-tensor gradients
+/// (`None` = zero gradient: parameter and moments pass through).
+#[allow(clippy::too_many_arguments)]
+fn adam_update(
+    p: &Program,
+    args: &[&Literal],
+    grads: &[Option<Vec<f32>>],
+    t: f32,
+    lr: f32,
+) -> Result<AdamOut> {
+    let shapes = param_shapes(p);
+    let np = n_params(p);
+    let t = if t < 1.0 { 1.0 } else { t };
+    let bc1 = 1.0 - ADAM_B1.powf(t);
+    let bc2 = 1.0 - ADAM_B2.powf(t);
+    let step = lr * p.gain;
+    let mut params_out = Vec::with_capacity(np);
+    let mut m_out = Vec::with_capacity(np);
+    let mut v_out = Vec::with_capacity(np);
+    let mut gsq = 0.0f64;
+    for ti in 0..np {
+        let (len, dims) = &shapes[ti];
+        let w = f32s(p, args[ti], "param", *len)?;
+        let m = f32s(p, args[np + ti], "adam m", *len)?;
+        let v = f32s(p, args[2 * np + ti], "adam v", *len)?;
+        match &grads[ti] {
+            None => {
+                params_out.push(Literal::from_f32(w.to_vec(), dims.clone()));
+                m_out.push(Literal::from_f32(m.to_vec(), dims.clone()));
+                v_out.push(Literal::from_f32(v.to_vec(), dims.clone()));
+            }
+            Some(g) => {
+                let mut wn = Vec::with_capacity(*len);
+                let mut mn = Vec::with_capacity(*len);
+                let mut vn = Vec::with_capacity(*len);
+                for i in 0..*len {
+                    let gi = g[i];
+                    gsq += (gi as f64) * (gi as f64);
+                    let mi = ADAM_B1 * m[i] + (1.0 - ADAM_B1) * gi;
+                    let vi = ADAM_B2 * v[i] + (1.0 - ADAM_B2) * gi * gi;
+                    let mhat = mi / bc1;
+                    let vhat = vi / bc2;
+                    wn.push(w[i] - step * mhat / (vhat.sqrt() + ADAM_EPS));
+                    mn.push(mi);
+                    vn.push(vi);
+                }
+                params_out.push(Literal::from_f32(wn, dims.clone()));
+                m_out.push(Literal::from_f32(mn, dims.clone()));
+                v_out.push(Literal::from_f32(vn, dims.clone()));
+            }
+        }
+    }
+    let mut state = params_out;
+    state.extend(m_out);
+    state.extend(v_out);
+    Ok(AdamOut { state, gnorm: (gsq.sqrt()) as f32 })
+}
+
+// ---- language-model semantics --------------------------------------------
+
+/// LM surrogate: per-layer additive bigram logits.
+/// `logits(pos) = Σ_{layers processing pos} W_l[token] + b_l`
+/// First/last layers always process every position; middle layers honor the
+/// keep-index input in ltd/bypass variants.
+fn run_lm(p: &Program, args: &[&Literal], train: bool) -> Result<Literal> {
+    let np = n_params(p);
+    let l = p.n_layers;
+    let vocab = p.vocab;
+    let n = p.rows * p.seq;
+    let pad = usize::from(p.pad_mask);
+    let dropping = train && p.mode != "plain";
+    let want = if train {
+        3 * np + 2 + 3 + pad + usize::from(dropping)
+    } else {
+        np + 3 + pad
+    };
+    want_args(p, args.len(), want)?;
+
+    let (t, lr, base) = if train {
+        (
+            scalar_f32(p, args[3 * np], "t")?,
+            scalar_f32(p, args[3 * np + 1], "lr")?,
+            3 * np + 2,
+        )
+    } else {
+        (0.0, 0.0, np)
+    };
+    let tokens = i32s(p, args[base], "tokens", n)?;
+    let targets = i32s(p, args[base + 1], "targets", n)?;
+    let mask = f32s(p, args[base + 2], "loss_mask", n)?;
+    let keep_idx = if dropping {
+        let len = if p.mode == "bypass" { p.keep } else { p.n_mid * p.keep };
+        Some(i32s(p, args[base + 3 + pad], "keep_idx", len)?)
+    } else {
+        None
+    };
+    let proc = processed_positions(p, keep_idx)?;
+
+    let w: Vec<&[f32]> = (0..l)
+        .map(|i| f32s(p, args[i], "W", vocab * vocab))
+        .collect::<Result<_>>()?;
+    let b: Vec<&[f32]> = (0..l)
+        .map(|i| f32s(p, args[l + i], "b", vocab))
+        .collect::<Result<_>>()?;
+
+    let msum: f32 = mask.iter().sum();
+    let mut gw: Vec<Vec<f32>> = if train {
+        (0..l).map(|_| vec![0.0; vocab * vocab]).collect()
+    } else {
+        Vec::new()
+    };
+    let mut gb: Vec<Vec<f32>> = if train {
+        (0..l).map(|_| vec![0.0; vocab]).collect()
+    } else {
+        Vec::new()
+    };
+
+    let mut logits = vec![0.0f32; vocab];
+    let mut probs = vec![0.0f32; vocab];
+    let mut active = vec![true; l];
+    let mut loss_sum = 0.0f64;
+
+    for pos in 0..n {
+        let m = mask[pos];
+        if m <= 0.0 {
+            continue;
+        }
+        let x = tokens[pos];
+        let y = targets[pos];
+        if x < 0 || x as usize >= vocab || y < 0 || y as usize >= vocab {
+            return err(format!("{}: token id out of vocabulary at {pos}", p.name));
+        }
+        let (x, y) = (x as usize, y as usize);
+        let j = pos % p.seq;
+        for (li, a) in active.iter_mut().enumerate() {
+            *a = li == 0 || li == l - 1 || proc[li - 1][j];
+        }
+        for z in logits.iter_mut() {
+            *z = 0.0;
+        }
+        for li in 0..l {
+            if !active[li] {
+                continue;
+            }
+            let wrow = &w[li][x * vocab..(x + 1) * vocab];
+            let bl = b[li];
+            for v in 0..vocab {
+                logits[v] += wrow[v] + bl[v];
+            }
+        }
+        let ce = softmax_xent(&logits, y, &mut probs);
+        loss_sum += (m * ce) as f64;
+        if train {
+            let coeff = m / msum.max(1.0);
+            for li in 0..l {
+                if !active[li] {
+                    continue;
+                }
+                let grow = &mut gw[li][x * vocab..(x + 1) * vocab];
+                let gbl = &mut gb[li];
+                for v in 0..vocab {
+                    let mut d = probs[v];
+                    if v == y {
+                        d -= 1.0;
+                    }
+                    let d = d * coeff;
+                    grow[v] += d;
+                    gbl[v] += d;
+                }
+            }
+        }
+    }
+
+    if !train {
+        return Ok(Literal::Tuple(vec![
+            Literal::scalar(loss_sum as f32),
+            Literal::scalar(msum),
+        ]));
+    }
+
+    let mut grads: Vec<Option<Vec<f32>>> = Vec::with_capacity(np);
+    for g in gw {
+        grads.push(Some(g));
+    }
+    for g in gb {
+        grads.push(Some(g));
+    }
+    for _ in 0..l {
+        grads.push(None); // gamma tensors: inert in the surrogate
+    }
+    let adam = adam_update(p, args, &grads, t, lr)?;
+    let loss = if msum > 0.0 { loss_sum as f32 / msum } else { 0.0 };
+    let mut out = adam.state;
+    out.push(Literal::scalar(loss));
+    out.push(Literal::scalar(adam.gnorm));
+    out.push(Literal::scalar(msum));
+    Ok(Literal::Tuple(out))
+}
+
+// ---- ViT semantics --------------------------------------------------------
+
+/// ViT surrogate: per-layer mean-pooled linear classifier.
+/// Position 0 is the class token (zero feature); positions `1..=n_patches`
+/// carry the patch vectors. A middle layer pools only the positions it
+/// processes (keep-index input), so random-LTD changes its feature.
+fn run_vit(p: &Program, args: &[&Literal], train: bool) -> Result<Literal> {
+    let np = n_params(p);
+    let l = p.n_layers;
+    let classes = p.classes;
+    let pd = p.patch_dim;
+    let n_patches = p.seq - 1;
+    let dropping = train && p.mode != "plain";
+    let want = if train {
+        3 * np + 2 + 2 + usize::from(dropping)
+    } else {
+        np + 2
+    };
+    want_args(p, args.len(), want)?;
+
+    let (t, lr, base) = if train {
+        (
+            scalar_f32(p, args[3 * np], "t")?,
+            scalar_f32(p, args[3 * np + 1], "lr")?,
+            3 * np + 2,
+        )
+    } else {
+        (0.0, 0.0, np)
+    };
+    let patches = f32s(p, args[base], "patches", p.rows * n_patches * pd)?;
+    let labels = i32s(p, args[base + 1], "labels", p.rows)?;
+    let keep_idx = if dropping {
+        let len = if p.mode == "bypass" { p.keep } else { p.n_mid * p.keep };
+        Some(i32s(p, args[base + 2], "keep_idx", len)?)
+    } else {
+        None
+    };
+    let proc = processed_positions(p, keep_idx)?;
+
+    let w: Vec<&[f32]> = (0..l)
+        .map(|i| f32s(p, args[i], "W", pd * classes))
+        .collect::<Result<_>>()?;
+    let b: Vec<&[f32]> = (0..l)
+        .map(|i| f32s(p, args[l + i], "b", classes))
+        .collect::<Result<_>>()?;
+
+    let mut gw: Vec<Vec<f32>> = if train {
+        (0..l).map(|_| vec![0.0; pd * classes]).collect()
+    } else {
+        Vec::new()
+    };
+    let mut gb: Vec<Vec<f32>> = if train {
+        (0..l).map(|_| vec![0.0; classes]).collect()
+    } else {
+        Vec::new()
+    };
+
+    let mut logits = vec![0.0f32; classes];
+    let mut probs = vec![0.0f32; classes];
+    let mut h = vec![vec![0.0f32; pd]; l];
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0usize;
+
+    for r in 0..p.rows {
+        let y = labels[r];
+        if y < 0 || y as usize >= classes {
+            return err(format!("{}: label out of range in row {r}", p.name));
+        }
+        let y = y as usize;
+        let row = &patches[r * n_patches * pd..(r + 1) * n_patches * pd];
+        // per-layer mean-pooled features over the positions it processes
+        for li in 0..l {
+            let hl = &mut h[li];
+            for v in hl.iter_mut() {
+                *v = 0.0;
+            }
+            let mut count = 0usize;
+            for j in 0..p.seq {
+                let processed = li == 0 || li == l - 1 || proc[li - 1][j];
+                if !processed {
+                    continue;
+                }
+                count += 1;
+                if j == 0 {
+                    continue; // class token: zero feature
+                }
+                let pv = &row[(j - 1) * pd..j * pd];
+                for (hv, &x) in hl.iter_mut().zip(pv) {
+                    *hv += x;
+                }
+            }
+            let denom = count.max(1) as f32;
+            for hv in hl.iter_mut() {
+                *hv /= denom;
+            }
+        }
+        for z in logits.iter_mut() {
+            *z = 0.0;
+        }
+        for li in 0..l {
+            let hl = &h[li];
+            let wl = w[li];
+            let bl = b[li];
+            for c in 0..classes {
+                let mut z = bl[c];
+                for (d, &hv) in hl.iter().enumerate() {
+                    z += hv * wl[d * classes + c];
+                }
+                logits[c] += z;
+            }
+        }
+        let ce = softmax_xent(&logits, y, &mut probs);
+        loss_sum += ce as f64;
+        let mut best = 0usize;
+        for c in 1..classes {
+            if logits[c] > logits[best] {
+                best = c;
+            }
+        }
+        if best == y {
+            correct += 1;
+        }
+        if train {
+            let coeff = 1.0 / p.rows as f32;
+            for li in 0..l {
+                let hl = &h[li];
+                let gwl = &mut gw[li];
+                let gbl = &mut gb[li];
+                for c in 0..classes {
+                    let mut d = probs[c];
+                    if c == y {
+                        d -= 1.0;
+                    }
+                    let d = d * coeff;
+                    gbl[c] += d;
+                    for (dd, &hv) in hl.iter().enumerate() {
+                        gwl[dd * classes + c] += hv * d;
+                    }
+                }
+            }
+        }
+    }
+
+    if !train {
+        return Ok(Literal::Tuple(vec![
+            Literal::scalar(loss_sum as f32),
+            Literal::scalar(p.rows as f32),
+            Literal::scalar(correct as f32),
+        ]));
+    }
+
+    let mut grads: Vec<Option<Vec<f32>>> = Vec::with_capacity(np);
+    for g in gw {
+        grads.push(Some(g));
+    }
+    for g in gb {
+        grads.push(Some(g));
+    }
+    for _ in 0..l {
+        grads.push(None);
+    }
+    let adam = adam_update(p, args, &grads, t, lr)?;
+    let loss = loss_sum as f32 / p.rows.max(1) as f32;
+    let mut out = adam.state;
+    out.push(Literal::scalar(loss));
+    out.push(Literal::scalar(adam.gnorm));
+    out.push(Literal::scalar(p.rows as f32));
+    Ok(Literal::Tuple(out))
+}
+
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lm_program(mode: &str, keep: usize) -> Program {
+        Program {
+            name: "test_lm".into(),
+            semantic: "lm_train".into(),
+            vocab: 16,
+            d_model: 8,
+            n_layers: 4,
+            n_mid: 2,
+            rows: 2,
+            seq: 4,
+            keep,
+            mode: mode.into(),
+            pad_mask: false,
+            classes: 0,
+            patch_dim: 0,
+            gain: 16.0,
+        }
+    }
+
+    fn init_state(p: &Program, seed: u32) -> Vec<Literal> {
+        let mut ip = p.clone();
+        ip.semantic = if p.semantic.starts_with("vit") {
+            "vit_init".into()
+        } else {
+            "lm_init".into()
+        };
+        let seed_lit = Literal::scalar(seed);
+        run_init(&ip, &[&seed_lit]).unwrap().to_tuple().unwrap()
+    }
+
+    #[test]
+    fn literal_roundtrips() {
+        let l = Literal::vec1(&[1i32, 2, 3, 4]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.ty().unwrap(), ElementType::S32);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(Literal::scalar(2.5f32).get_first_element::<f32>().unwrap(), 2.5);
+        assert_eq!(Literal::scalar(7u32).get_first_element::<u32>().unwrap(), 7);
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn init_deterministic_and_seed_sensitive() {
+        let p = lm_program("plain", 4);
+        let a = init_state(&p, 1);
+        let b = init_state(&p, 1);
+        let c = init_state(&p, 2);
+        assert_eq!(a.len(), 36);
+        assert_eq!(a[0].to_vec::<f32>().unwrap(), b[0].to_vec::<f32>().unwrap());
+        assert_ne!(a[0].to_vec::<f32>().unwrap(), c[0].to_vec::<f32>().unwrap());
+        assert!(a[12].to_vec::<f32>().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn train_reduces_loss_on_repeated_batch() {
+        let p = lm_program("plain", 4);
+        let mut state = init_state(&p, 0);
+        let n = p.rows * p.seq;
+        let tokens = Literal::vec1(&(0..n as i32).map(|i| i % 16).collect::<Vec<_>>());
+        let targets = Literal::vec1(&(0..n as i32).map(|i| (i + 3) % 16).collect::<Vec<_>>());
+        let mask = Literal::vec1(&vec![1.0f32; n]);
+        let mut losses = Vec::new();
+        for t in 1..=10 {
+            let tl = Literal::scalar(t as f32);
+            let lrl = Literal::scalar(5e-3f32);
+            let mut args: Vec<&Literal> = state.iter().collect();
+            args.push(&tl);
+            args.push(&lrl);
+            args.push(&tokens);
+            args.push(&targets);
+            args.push(&mask);
+            let out = run_lm(&p, &args, true).unwrap().to_tuple().unwrap();
+            losses.push(out[36].get_first_element::<f32>().unwrap());
+            state = out.into_iter().take(36).collect();
+        }
+        assert!(losses[0] > 2.0, "near ln(16) at init: {losses:?}");
+        assert!(losses[9] < losses[0] * 0.5, "{losses:?}");
+    }
+
+    #[test]
+    fn ltd_keep_indices_change_gradient_scope() {
+        let p = lm_program("ltd", 2);
+        let state = init_state(&p, 0);
+        let n = p.rows * p.seq;
+        let tokens = Literal::vec1(&vec![5i32; n]);
+        let targets = Literal::vec1(&vec![6i32; n]);
+        let mask = Literal::vec1(&vec![1.0f32; n]);
+        let tl = Literal::scalar(1.0f32);
+        let lrl = Literal::scalar(1e-3f32);
+        let keep = Literal::vec1(&[0i32, 1, 2, 3]).reshape(&[2, 2]).unwrap();
+        let mut args: Vec<&Literal> = state.iter().collect();
+        args.push(&tl);
+        args.push(&lrl);
+        args.push(&tokens);
+        args.push(&targets);
+        args.push(&mask);
+        args.push(&keep);
+        let out = run_lm(&p, &args, true).unwrap().to_tuple().unwrap();
+        assert_eq!(out.len(), 39);
+        let loss = out[36].get_first_element::<f32>().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+
+    #[test]
+    fn eval_token_weighted() {
+        let mut p = lm_program("plain", 4);
+        p.semantic = "lm_eval".into();
+        let state = init_state(&p, 0);
+        let n = p.rows * p.seq;
+        let tokens = Literal::vec1(&vec![3i32; n]);
+        let targets = Literal::vec1(&vec![4i32; n]);
+        let mask_v: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { 0.0 }).collect();
+        let mask = Literal::vec1(&mask_v);
+        let mut args: Vec<&Literal> = state[..12].iter().collect();
+        args.push(&tokens);
+        args.push(&targets);
+        args.push(&mask);
+        let out = run_lm(&p, &args, false).unwrap().to_tuple().unwrap();
+        let loss_sum = out[0].get_first_element::<f32>().unwrap();
+        let tok = out[1].get_first_element::<f32>().unwrap();
+        assert_eq!(tok, (n / 2) as f32);
+        let mean = loss_sum / tok;
+        assert!((mean - (16f32).ln()).abs() < 0.5, "{mean}");
+    }
+
+    #[test]
+    fn vit_train_and_eval() {
+        let p = Program {
+            name: "test_vit".into(),
+            semantic: "vit_train".into(),
+            vocab: 0,
+            d_model: 8,
+            n_layers: 4,
+            n_mid: 2,
+            rows: 4,
+            seq: 5,
+            keep: 5,
+            mode: "plain".into(),
+            pad_mask: false,
+            classes: 3,
+            patch_dim: 6,
+            gain: 16.0,
+        };
+        let mut state = init_state(&p, 3);
+        let n_patches = p.seq - 1;
+        let patches_v: Vec<f32> = (0..p.rows * n_patches * p.patch_dim)
+            .map(|i| ((i % 7) as f32 - 3.0) * 0.1)
+            .collect();
+        let patches = Literal::vec1(&patches_v);
+        let labels = Literal::vec1(&[0i32, 1, 2, 0]);
+        for t in 1..=5 {
+            let tl = Literal::scalar(t as f32);
+            let lrl = Literal::scalar(1e-2f32);
+            let mut args: Vec<&Literal> = state.iter().collect();
+            args.push(&tl);
+            args.push(&lrl);
+            args.push(&patches);
+            args.push(&labels);
+            let out = run_vit(&p, &args, true).unwrap().to_tuple().unwrap();
+            let loss = out[36].get_first_element::<f32>().unwrap();
+            assert!(loss.is_finite());
+            state = out.into_iter().take(36).collect();
+        }
+        let mut ep = p.clone();
+        ep.semantic = "vit_eval".into();
+        let mut args: Vec<&Literal> = state[..12].iter().collect();
+        args.push(&patches);
+        args.push(&labels);
+        let out = run_vit(&ep, &args, false).unwrap().to_tuple().unwrap();
+        let count = out[1].get_first_element::<f32>().unwrap();
+        let correct = out[2].get_first_element::<f32>().unwrap();
+        assert_eq!(count, 4.0);
+        assert!((0.0..=4.0).contains(&correct));
+    }
+}
