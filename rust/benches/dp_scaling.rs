@@ -1,0 +1,88 @@
+//! dp_scaling — data-parallel replica-engine scaling (ISSUE 2).
+//!
+//! Runs the composed GPT case (CL seqtru+voc + random-LTD) on the replica
+//! engine at n_replicas ∈ {1, 2, 4} over identical data/seed and reports,
+//! per rank count: wall-clock per step, the all-reduce share of step time,
+//! rank load imbalance, and the final state hash — which MUST be identical
+//! across rows (the bench doubles as a visible rank-equivalence check; the
+//! enforcing suite is tests/dp_equivalence.rs). A fused-path row is
+//! included as the no-engine baseline for the engine's overhead.
+//!
+//! `DSDE_BENCH_QUICK=1` shrinks the run for the CI smoke job.
+
+use dsde::bench::{scaled, Table};
+use dsde::exp::cases::dp_scaling_cases;
+use dsde::train::TrainEnv;
+
+fn main() -> dsde::Result<()> {
+    let steps = scaled(60, 10);
+    let docs = scaled(800, 300) as usize;
+    eprintln!("== dp_scaling: replica engine at n ∈ {{1, 2, 4}} ({steps} steps) ==");
+    let env = TrainEnv::new(docs, 7)?;
+    let fam = env.rt.registry.family("gpt")?.clone();
+
+    let mut t = Table::new(&[
+        "replicas",
+        "step ms",
+        "allreduce ms/step",
+        "allreduce share",
+        "imbalance",
+        "eval loss",
+        "state hash",
+    ]);
+
+    // fused baseline (n_replicas = 0): same schedule, single fused step
+    let mut fused = dp_scaling_cases(steps, fam.max_seq, 1234, &[1])[0].clone();
+    fused.n_replicas = 0;
+    fused.label = "fused".into();
+    let fr = env.run(fused)?;
+    t.row(vec![
+        "fused".into(),
+        format!("{:.2}", fr.step_secs * 1e3),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        format!("{:.4}", fr.final_eval_loss),
+        "-".into(),
+    ]);
+
+    let mut hashes = Vec::new();
+    for cfg in dp_scaling_cases(steps, fam.max_seq, 1234, &[1, 2, 4]) {
+        let n = cfg.n_replicas;
+        let r = env.run(cfg)?;
+        let exec_secs = r.step_secs * steps as f64;
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", r.step_secs * 1e3),
+            format!("{:.3}", r.allreduce_secs * 1e3 / steps as f64),
+            format!("{:.1}%", 100.0 * r.allreduce_secs / exec_secs.max(1e-12)),
+            format!("{:.0}%", r.rank_imbalance * 100.0),
+            format!("{:.4}", r.final_eval_loss),
+            format!("{:016x}", r.state_hash),
+        ]);
+        hashes.push((n, r.state_hash, r.step_losses.clone()));
+    }
+    println!("\ndata-parallel scaling (composed GPT case, batch {} rows):", fam.batch);
+    t.print();
+    t.save_csv("dp_scaling")?;
+
+    let (n1, h1, l1) = &hashes[0];
+    assert_eq!(*n1, 1);
+    let mut all_equal = true;
+    for (n, h, l) in &hashes[1..] {
+        if h != h1 || l != l1 {
+            eprintln!("  dp{n}: state/loss diverged from dp1!");
+            all_equal = false;
+        }
+    }
+    println!(
+        "\nshape check:\n  [{}] rank equivalence: final state + loss curve bit-identical for n ∈ {{1, 2, 4}}",
+        if all_equal { "PASS" } else { "FAIL" }
+    );
+    if !all_equal {
+        // Enforcing, not advisory: the CI bench-smoke job must go red on a
+        // rank-equivalence break even before tests/dp_equivalence.rs runs.
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -37,8 +37,16 @@ pub struct AnalyzerReport {
 }
 
 impl AnalyzerReport {
+    /// Indexing throughput. Guarded for degenerate inputs: an empty run or
+    /// a (clock-resolution) zero duration reports 0 rather than a
+    /// misleading astronomically-large rate — the bench output must never
+    /// print garbage throughput.
     pub fn samples_per_sec(&self) -> f64 {
-        self.n_samples as f64 / (self.map_secs + self.reduce_secs).max(1e-9)
+        let secs = self.map_secs + self.reduce_secs;
+        if self.n_samples == 0 || secs <= 0.0 {
+            return 0.0;
+        }
+        self.n_samples as f64 / secs
     }
 }
 
@@ -224,5 +232,25 @@ mod tests {
         let (_, r) = analyze("m", 1000, |i| i as f32, &AnalyzerConfig::default());
         assert!(r.samples_per_sec() > 0.0);
         assert!(r.n_shards >= 1);
+    }
+
+    // Guard audit (ISSUE 2 satellite): degenerate inputs must produce 0,
+    // never NaN/inf or a bogus 1e12-scale rate from a zero denominator.
+    #[test]
+    fn report_throughput_degenerate_inputs() {
+        let r = |n: usize, map: f64, red: f64| AnalyzerReport {
+            n_samples: n,
+            n_workers: 1,
+            n_shards: 1,
+            map_secs: map,
+            reduce_secs: red,
+        };
+        assert_eq!(r(0, 0.0, 0.0).samples_per_sec(), 0.0);
+        assert_eq!(r(1000, 0.0, 0.0).samples_per_sec(), 0.0);
+        assert_eq!(r(0, 1.0, 1.0).samples_per_sec(), 0.0);
+        assert_eq!(r(1000, -1.0, 0.5).samples_per_sec(), 0.0, "clock skew clamped");
+        let v = r(1000, 0.5, 0.5).samples_per_sec();
+        assert_eq!(v, 1000.0);
+        assert!(!v.is_nan());
     }
 }

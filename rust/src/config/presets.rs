@@ -86,15 +86,23 @@ pub fn vit_finetune(total_steps: u64, peak_lr: f64) -> RunConfig {
     c
 }
 
-/// Look up a preset by name (CLI `--preset`).
+/// Look up a preset by name (CLI `--preset`). A `@dpN` suffix runs the
+/// preset on the data-parallel replica engine with `N` ranks
+/// (e.g. `gpt-pretrain@dp4`).
 pub fn by_name(name: &str, total_steps: u64, peak_lr: f64, max_seq: usize) -> Option<RunConfig> {
-    Some(match name {
+    let (base, n_replicas) = match name.split_once("@dp") {
+        Some((b, n)) => (b, n.parse::<usize>().ok()?),
+        None => (name, 0),
+    };
+    let mut c = match base {
         "gpt-pretrain" => gpt_pretrain(total_steps, peak_lr, max_seq),
         "bert-pretrain" => bert_pretrain(total_steps, peak_lr, max_seq),
         "gpt-finetune" => gpt_finetune(total_steps, peak_lr, max_seq),
         "vit-finetune" => vit_finetune(total_steps, peak_lr),
         _ => return None,
-    })
+    };
+    c.n_replicas = n_replicas;
+    Some(c)
 }
 
 #[cfg(test)]
@@ -135,5 +143,14 @@ mod tests {
     fn by_name_lookup() {
         assert!(by_name("gpt-pretrain", 10, 1e-3, 64).is_some());
         assert!(by_name("nope", 10, 1e-3, 64).is_none());
+    }
+
+    #[test]
+    fn by_name_dp_suffix() {
+        let c = by_name("gpt-pretrain@dp4", 10, 1e-3, 64).unwrap();
+        assert_eq!(c.n_replicas, 4);
+        assert_eq!(by_name("gpt-pretrain", 10, 1e-3, 64).unwrap().n_replicas, 0);
+        assert!(by_name("gpt-pretrain@dpx", 10, 1e-3, 64).is_none());
+        assert!(by_name("nope@dp2", 10, 1e-3, 64).is_none());
     }
 }

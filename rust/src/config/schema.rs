@@ -264,6 +264,15 @@ pub struct RunConfig {
     pub eval_batches: usize,
     /// Async data-pipeline knobs.
     pub pipeline: PipelineConfig,
+    /// Data-parallel replica count. `0` (default) keeps the fused
+    /// single-instance train step; `n ≥ 1` routes every step through the
+    /// replica engine (`train::replica`): the global batch is split into
+    /// `n` row shards, each rank computes unnormalized gradients, a
+    /// fixed-order tree all-reduce combines them, and one shared optimizer
+    /// apply updates the state. `n = 1` is the engine's own single-rank
+    /// reference; any `n` dividing the family batch is bit-identical to it
+    /// (`tests/dp_equivalence.rs`).
+    pub n_replicas: usize,
     /// Human-readable case label for tables/logs.
     pub label: String,
 }
@@ -280,6 +289,7 @@ impl RunConfig {
             eval_every: 0,
             eval_batches: 8,
             pipeline: PipelineConfig::default(),
+            n_replicas: 0,
             label: "baseline".to_string(),
         }
     }
@@ -320,6 +330,9 @@ impl RunConfig {
                 bail!("ltd r_start must be > 0");
             }
         }
+        if self.n_replicas > 64 {
+            bail!("n_replicas {} unreasonably large (max 64)", self.n_replicas);
+        }
         Ok(())
     }
 
@@ -336,10 +349,15 @@ impl RunConfig {
             Routing::TokenBypass(_) => parts.push("TokenBypass".to_string()),
             Routing::None => {}
         }
-        if parts.is_empty() {
+        let base = if parts.is_empty() {
             "baseline".to_string()
         } else {
             parts.join("+")
+        };
+        if self.n_replicas > 0 {
+            format!("{base}@dp{}", self.n_replicas)
+        } else {
+            base
         }
     }
 
@@ -405,6 +423,7 @@ impl RunConfig {
             ("case", self.case_name().into()),
             ("seed", (self.seed as usize).into()),
             ("total_steps", (self.total_steps as usize).into()),
+            ("n_replicas", self.n_replicas.into()),
             ("curriculum", Json::Arr(cl)),
             ("routing", routing),
             (
@@ -451,6 +470,9 @@ pub fn run_config_from_json(v: &Json, default_family: &str) -> Result<RunConfig>
     }
     if let Some(label) = v.get("label").as_str() {
         cfg.label = label.to_string();
+    }
+    if let Some(nr) = v.get("n_replicas").as_usize() {
+        cfg.n_replicas = nr;
     }
     if let Some(arr) = v.get("curriculum").as_arr() {
         for c in arr {
@@ -605,6 +627,23 @@ mod tests {
         let j = Json::parse(r#"{"total_steps": 5}"#).unwrap();
         let c3 = run_config_from_json(&j, "gpt").unwrap();
         assert_eq!(c3.pipeline, PipelineConfig::default());
+    }
+
+    #[test]
+    fn n_replicas_roundtrips_and_tags_case_name() {
+        let mut c = RunConfig::baseline("gpt", 50, 1e-3);
+        assert_eq!(c.n_replicas, 0, "fused path by default");
+        assert_eq!(c.case_name(), "baseline");
+        c.n_replicas = 4;
+        assert_eq!(c.case_name(), "baseline@dp4");
+        let j = c.to_json();
+        let c2 = run_config_from_json(&j, "gpt").unwrap();
+        assert_eq!(c2.n_replicas, 4);
+        // configs without the key keep the fused default
+        let j = Json::parse(r#"{"total_steps": 5}"#).unwrap();
+        assert_eq!(run_config_from_json(&j, "gpt").unwrap().n_replicas, 0);
+        c.n_replicas = 65;
+        assert!(c.validate().is_err());
     }
 
     #[test]

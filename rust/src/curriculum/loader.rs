@@ -151,6 +151,110 @@ impl LoaderCore {
 }
 
 // ---------------------------------------------------------------------------
+// Data-parallel shard plan
+
+/// Deterministic partition of one planned global batch across data-parallel
+/// ranks: contiguous row ranges in rank order, per-rank loads differing by
+/// at most one row, and a pure function of `(rows, n_ranks)` — invariant to
+/// worker scheduling by construction (property-checked in
+/// `tests/properties.rs`).
+///
+/// When [`ShardPlan::aligned`] holds (equal shard sizes that are powers of
+/// two), rank boundaries coincide with subtree boundaries of the fixed
+/// pairwise row tree the `*_grad` artifacts use, which is what makes the
+/// replica engine's n-rank run bit-identical to the 1-rank run
+/// (`runtime::collective`, `tests/dp_equivalence.rs`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    rows: usize,
+    /// `n_ranks + 1` cumulative row offsets; rank r owns `bounds[r]..bounds[r+1]`.
+    bounds: Vec<usize>,
+}
+
+impl ShardPlan {
+    pub fn new(rows: usize, n_ranks: usize) -> ShardPlan {
+        let n = n_ranks.max(1);
+        let q = rows / n;
+        let rem = rows % n;
+        let mut bounds = Vec::with_capacity(n + 1);
+        bounds.push(0);
+        let mut acc = 0;
+        for r in 0..n {
+            acc += q + usize::from(r < rem);
+            bounds.push(acc);
+        }
+        ShardPlan { rows, bounds }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Global row range owned by `rank`.
+    pub fn range(&self, rank: usize) -> std::ops::Range<usize> {
+        self.bounds[rank]..self.bounds[rank + 1]
+    }
+
+    pub fn rows_of(&self, rank: usize) -> usize {
+        self.bounds[rank + 1] - self.bounds[rank]
+    }
+
+    /// Max minus min per-rank load (0 or 1 by construction).
+    pub fn imbalance(&self) -> usize {
+        let loads = (0..self.n_ranks()).map(|r| self.rows_of(r));
+        loads.clone().max().unwrap_or(0) - loads.min().unwrap_or(0)
+    }
+
+    /// Equal shard sizes that are powers of two: the alignment under which
+    /// the tree reduction is bit-identical across replica counts.
+    pub fn aligned(&self) -> bool {
+        let n = self.n_ranks();
+        self.rows % n == 0 && (self.rows / n).max(1).is_power_of_two()
+    }
+
+    /// Materialize rank `rank`'s shard of a global batch (row slice copy;
+    /// every field fully defined by the slice).
+    pub fn shard(&self, batch: &AnyBatch, rank: usize) -> AnyBatch {
+        match batch {
+            AnyBatch::Lm(b) => AnyBatch::Lm(self.shard_lm(b, rank)),
+            AnyBatch::Vit(b) => AnyBatch::Vit(self.shard_vit(b, rank)),
+        }
+    }
+
+    pub fn shard_lm(&self, b: &LmBatch, rank: usize) -> LmBatch {
+        debug_assert_eq!(b.rows, self.rows, "shard plan built for a different batch");
+        let r = self.range(rank);
+        let (s, e) = (r.start * b.seq, r.end * b.seq);
+        LmBatch {
+            rows: r.end - r.start,
+            seq: b.seq,
+            tokens: b.tokens[s..e].to_vec(),
+            targets: b.targets[s..e].to_vec(),
+            loss_mask: b.loss_mask[s..e].to_vec(),
+            pad_mask: b.pad_mask.as_ref().map(|p| p[s..e].to_vec()),
+            data_tokens: ((r.end - r.start) * b.seq) as u64,
+        }
+    }
+
+    pub fn shard_vit(&self, b: &VitBatch, rank: usize) -> VitBatch {
+        debug_assert_eq!(b.rows, self.rows, "shard plan built for a different batch");
+        let r = self.range(rank);
+        let rows = r.end - r.start;
+        let stride = if b.rows > 0 { b.patches.len() / b.rows } else { 0 };
+        VitBatch {
+            rows,
+            patches: b.patches[r.start * stride..r.end * stride].to_vec(),
+            labels: b.labels[r.start..r.end].to_vec(),
+            data_tokens: (b.data_tokens / b.rows.max(1) as u64) * rows as u64,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // GPT / MoE
 
 /// GPT/MoE loader over the packed stream.
@@ -570,6 +674,62 @@ mod tests {
         let m0 = core.materialize(&BatchPlan::Lm(p0), None);
         assert_eq!(AnyBatch::Lm(b0), m0);
         assert_eq!(AnyBatch::Lm(b1), m1);
+    }
+
+    #[test]
+    fn shard_plan_partitions_contiguously() {
+        let p = ShardPlan::new(8, 4);
+        assert_eq!(p.n_ranks(), 4);
+        assert!(p.aligned());
+        assert_eq!(p.imbalance(), 0);
+        assert_eq!(p.range(0), 0..2);
+        assert_eq!(p.range(3), 6..8);
+        let p = ShardPlan::new(7, 3);
+        assert_eq!(p.rows_of(0), 3);
+        assert_eq!(p.rows_of(1), 2);
+        assert_eq!(p.rows_of(2), 2);
+        assert_eq!(p.imbalance(), 1);
+        assert!(!p.aligned());
+    }
+
+    #[test]
+    fn shard_lm_slices_rows_exactly() {
+        let (ds, _) = gpt_setup();
+        let n = ds.n_samples();
+        let mut l = GptLoader::new(ds, Box::new(UniformSampler::new(n, 2)), 8);
+        let b = l.next_batch(16, &st(SeqTransform::Truncate, 16));
+        let plan = ShardPlan::new(b.rows, 4);
+        let mut tokens = Vec::new();
+        let mut dt = 0;
+        for r in 0..4 {
+            let s = plan.shard_lm(&b, r);
+            assert_eq!(s.rows, 2);
+            assert_eq!(s.seq, 16);
+            assert_eq!(s.data_tokens, 32);
+            tokens.extend_from_slice(&s.tokens);
+            dt += s.data_tokens;
+        }
+        assert_eq!(tokens, b.tokens, "concatenated shards reproduce the batch");
+        assert_eq!(dt, b.data_tokens);
+    }
+
+    #[test]
+    fn shard_vit_slices_rows_exactly() {
+        let ds = Arc::new(VitDataset::new(16, 48, 10, 0.3, 2));
+        let mut l = VitLoader::new(ds, 8, 0);
+        let b = l.next_batch();
+        let plan = ShardPlan::new(b.rows, 2);
+        let mut patches = Vec::new();
+        let mut labels = Vec::new();
+        for r in 0..2 {
+            let s = plan.shard_vit(&b, r);
+            assert_eq!(s.rows, 4);
+            assert_eq!(s.data_tokens, b.data_tokens / 2);
+            patches.extend_from_slice(&s.patches);
+            labels.extend_from_slice(&s.labels);
+        }
+        assert_eq!(patches, b.patches);
+        assert_eq!(labels, b.labels);
     }
 
     #[test]

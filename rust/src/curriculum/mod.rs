@@ -8,8 +8,8 @@ pub mod sampler;
 pub mod scheduler;
 
 pub use loader::{
-    AnyBatch, BatchPlan, BertLoader, GptLoader, LmBatch, LmPlan, LoaderCore, VitBatch,
-    VitLoader, VitPlan,
+    AnyBatch, BatchPlan, BertLoader, GptLoader, LmBatch, LmPlan, LoaderCore, ShardPlan,
+    VitBatch, VitLoader, VitPlan,
 };
 pub use sampler::{PoolSampler, Sampler, UniformSampler};
 pub use scheduler::{ClScheduler, ClState, SeqTransform};

@@ -207,6 +207,30 @@ pub fn table4_bert(full_steps: u64, max_seq: usize, seed: u64) -> Vec<RunConfig>
     cases
 }
 
+/// Data-parallel scaling grid (dp_scaling bench): the composed GPT case
+/// (CL seqtru+voc + random-LTD, the most route-diverse schedule) executed
+/// on the replica engine at each requested rank count. Same seed and data
+/// everywhere, so rows differ only in `n_replicas` — the bench checks the
+/// final states are bit-identical while wall-clock and all-reduce share
+/// scale.
+pub fn dp_scaling_cases(steps: u64, max_seq: usize, seed: u64, replicas: &[usize]) -> Vec<RunConfig> {
+    replicas
+        .iter()
+        .map(|&n| {
+            let mut c = gpt_case(&format!("composed@dp{n}"), steps, 1.0, seed);
+            let t_c = (steps as f64 * 0.40) as u64;
+            c.curriculum.push(seqtru(max_seq, t_c));
+            c.curriculum.push(voc(0.01, t_c));
+            c.routing = Routing::RandomLtd(LtdConfig::mslg(
+                max_seq / 4,
+                (steps as f64 * 0.70) as u64,
+            ));
+            c.n_replicas = n;
+            c
+        })
+        .collect()
+}
+
 /// Fig. 2 sweep: (fraction, baseline cfg, composed cfg) per budget point.
 pub fn fig2_pairs(full_steps: u64, max_seq: usize, seed: u64, fractions: &[f64]) -> Vec<(f64, RunConfig, RunConfig)> {
     fractions
@@ -274,6 +298,19 @@ mod tests {
         assert!((peak_lr_for_fraction(1.0) - BASE_PEAK_LR).abs() < 1e-12);
         assert!((peak_lr_for_fraction(0.5) - 2.0 * BASE_PEAK_LR).abs() < 1e-12);
         assert!((peak_lr_for_fraction(0.01) - 4.0 * BASE_PEAK_LR).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dp_scaling_cases_structure() {
+        let cases = dp_scaling_cases(100, 64, 7, &[1, 2, 4]);
+        assert_eq!(cases.len(), 3);
+        for (c, n) in cases.iter().zip([1usize, 2, 4]) {
+            c.validate().unwrap();
+            assert_eq!(c.n_replicas, n);
+            assert_eq!(c.seed, 7);
+            assert_eq!(c.curriculum.len(), 2);
+            assert!(matches!(c.routing, Routing::RandomLtd(_)));
+        }
     }
 
     #[test]

@@ -8,8 +8,10 @@
 //!                                   run the map-reduce analyzer, save the
 //!                                   mmap index under runs/
 //! dsde train [--preset P] [--family F] [--steps N] [--lr X] [--seed S]
-//!            [--config FILE] [--eval-every K]
+//!            [--config FILE] [--eval-every K] [--replicas N]
 //!                                   run one training; prints the curve
+//!                                   (--replicas N: data-parallel replica
+//!                                   engine; 0 = fused single step)
 //! dsde pareto [--steps N]           quick Fig.2-style sweep (3 budgets)
 //! ```
 
@@ -38,6 +40,7 @@ fn main() {
 const VALUE_KEYS: &[&str] = &[
     "docs", "workers", "metric", "preset", "family", "steps", "lr", "seed",
     "config", "eval-every", "out", "prefetch-depth", "loader-workers",
+    "replicas",
 ];
 
 fn run(argv: &[String]) -> dsde::Result<()> {
@@ -175,13 +178,15 @@ fn train(args: &Args) -> dsde::Result<()> {
         args.get_u64("prefetch-depth", cfg.pipeline.prefetch_depth as u64)? as usize;
     cfg.pipeline.n_loader_workers =
         args.get_u64("loader-workers", cfg.pipeline.n_loader_workers as u64)? as usize;
+    cfg.n_replicas = args.get_u64("replicas", cfg.n_replicas as u64)? as usize;
     println!(
-        "case: {} on {} for {} steps (pipeline: depth {}, {} workers)",
+        "case: {} on {} for {} steps (pipeline: depth {}, {} workers; replicas: {})",
         cfg.case_name(),
         cfg.family,
         cfg.total_steps,
         cfg.pipeline.prefetch_depth,
-        cfg.pipeline.n_loader_workers
+        cfg.pipeline.n_loader_workers,
+        if cfg.n_replicas == 0 { "fused".to_string() } else { cfg.n_replicas.to_string() }
     );
     let env = TrainEnv::new(args.get_u64("docs", 1000)? as usize, 7)?;
     let r = env.run(cfg)?;
@@ -212,6 +217,15 @@ fn train(args: &Args) -> dsde::Result<()> {
         r.loader_stall_secs * 1e3,
         r.loader_hidden_fraction() * 100.0
     );
+    if r.n_replicas > 0 {
+        println!(
+            "replicas: {} ranks, all-reduce {:.1}ms total, rank imbalance {:.0}%, state hash {:016x}",
+            r.n_replicas,
+            r.allreduce_secs * 1e3,
+            r.rank_imbalance * 100.0,
+            r.state_hash
+        );
+    }
     if let Some(acc) = r.final_accuracy {
         println!("accuracy: {:.1}%", acc * 100.0);
     }

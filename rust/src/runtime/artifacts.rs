@@ -64,10 +64,13 @@ pub struct ArtifactInfo {
     pub name: String,
     pub file: String,
     pub family: String,
-    pub kind: String, // train | eval | init
+    pub kind: String, // train | eval | init | grad | apply
     pub seq: usize,
     pub mode: Mode,
     pub keep: usize,
+    /// Batch rows this variant was compiled for (the data-parallel shard
+    /// width for `grad` variants; the family batch otherwise).
+    pub rows: usize,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
 }
@@ -89,6 +92,10 @@ pub struct FamilyInfo {
     pub seq_buckets: Vec<usize>,
     pub ltd_seqs: Vec<usize>,
     pub keep_buckets: BTreeMap<usize, Vec<usize>>,
+    /// Shard widths (rows per rank) the gradient variants are compiled
+    /// for: the full batch plus every power-of-two divisor of it
+    /// (non-power-of-two widths would break row-tree alignment).
+    pub grad_rows: Vec<usize>,
     pub n_params: usize,
 }
 
@@ -157,6 +164,7 @@ impl Registry {
                     seq_buckets: usizes("seq_buckets"),
                     ltd_seqs: usizes("ltd_seqs"),
                     keep_buckets,
+                    grad_rows: usizes("grad_rows"),
                     n_params: u("n_params"),
                 },
             );
@@ -189,6 +197,7 @@ impl Registry {
                 seq: a.get("seq").as_usize().unwrap_or(0),
                 mode: Mode::from_name(a.get("mode").as_str().unwrap_or("plain"))?,
                 keep: a.get("keep").as_usize().unwrap_or(0),
+                rows: a.get("rows").as_usize().unwrap_or(0),
                 inputs: spec_list("inputs")?,
                 outputs: spec_list("outputs")?,
             };
@@ -273,6 +282,35 @@ impl Registry {
                 Ok(plain)
             }
         }
+    }
+
+    /// Name of the gradient-returning variant matching a resolved train
+    /// route at shard width `rows` (rows per data-parallel rank). The grad
+    /// grid mirrors the train grid exactly, one variant per width in the
+    /// family's `grad_rows`.
+    pub fn grad_name(&self, family: &str, route: &Route, rows: usize) -> Result<String> {
+        let name = match route.mode {
+            Mode::Plain => format!("{family}_grad_s{}_full_r{rows}", route.seq),
+            Mode::Ltd => format!("{family}_grad_s{}_ltd{}_r{rows}", route.seq, route.keep),
+            Mode::Bypass => {
+                format!("{family}_grad_s{}_bypass{}_r{rows}", route.seq, route.keep)
+            }
+        };
+        self.artifact(&name).map_err(|_| {
+            anyhow!(
+                "no grad variant '{name}' (family {family} compiles shard widths {:?}; \
+                 regenerate artifacts?)",
+                self.families.get(family).map(|f| f.grad_rows.clone()).unwrap_or_default()
+            )
+        })?;
+        Ok(name)
+    }
+
+    /// The family's shared optimizer-apply artifact (replica engine).
+    pub fn apply_name(&self, family: &str) -> Result<String> {
+        let name = format!("{family}_apply");
+        self.artifact(&name)?;
+        Ok(name)
     }
 
     pub fn eval_name(&self, family: &str) -> Result<String> {
@@ -369,6 +407,47 @@ mod tests {
         let r = registry();
         let route = r.route_train("gpt", 64, 32, Mode::Bypass).unwrap();
         assert_eq!(route.artifact, "gpt_train_s64_bypass32");
+    }
+
+    #[test]
+    fn grad_grid_mirrors_train_grid() {
+        let r = registry();
+        let fam = r.family("gpt").unwrap();
+        assert_eq!(fam.grad_rows, vec![8, 4, 2, 1]);
+        for rows in &fam.grad_rows {
+            for (route, want) in [
+                (r.route_train("gpt", 64, 64, Mode::Plain).unwrap(), format!("gpt_grad_s64_full_r{rows}")),
+                (r.route_train("gpt", 64, 20, Mode::Ltd).unwrap(), format!("gpt_grad_s64_ltd32_r{rows}")),
+                (r.route_train("gpt", 64, 32, Mode::Bypass).unwrap(), format!("gpt_grad_s64_bypass32_r{rows}")),
+            ] {
+                assert_eq!(r.grad_name("gpt", &route, *rows).unwrap(), want);
+                let info = r.artifact(&want).unwrap();
+                assert_eq!(info.rows, *rows);
+                assert_eq!(info.kind, "grad");
+                // params + batch (+ keep); outputs: grads + loss_sum + den
+                let n_params = r.family("gpt").unwrap().n_params;
+                assert_eq!(info.outputs.len(), n_params + 2);
+                assert_eq!(info.outputs[n_params].name, "loss_sum");
+                assert_eq!(info.outputs[n_params + 1].name, "den");
+            }
+        }
+        // no variant for a width that is not a power-of-two divisor
+        let route = r.route_train("gpt", 64, 64, Mode::Plain).unwrap();
+        assert!(r.grad_name("gpt", &route, 3).is_err());
+    }
+
+    #[test]
+    fn apply_artifacts_present_for_all_families() {
+        let r = registry();
+        for f in ["gpt", "bert", "vit", "moe"] {
+            let name = r.apply_name(f).unwrap();
+            let info = r.artifact(&name).unwrap();
+            let np = r.family(f).unwrap().n_params;
+            // 3·np state + [t, lr, den] + np grads -> 3·np state + gnorm
+            assert_eq!(info.inputs.len(), 3 * np + 3 + np);
+            assert_eq!(info.outputs.len(), 3 * np + 1);
+            assert_eq!(info.outputs.last().unwrap().name, "gnorm");
+        }
     }
 
     #[test]

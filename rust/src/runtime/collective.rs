@@ -1,0 +1,148 @@
+//! Fixed-order tree all-reduce for the data-parallel replica engine.
+//!
+//! Floating-point addition is not associative, so a data-parallel run is
+//! only bit-identical to the single-rank run if *every* cross-rank sum is
+//! evaluated with the exact bracketing the single rank uses. The scheme:
+//!
+//! * the `*_grad` artifacts (rust/xla) combine per-row partials with a
+//!   **pairwise-adjacent tree** over their shard's rows;
+//! * the coordinator combines rank results with the **same** tree shape
+//!   ([`tree_reduce`]), in rank order.
+//!
+//! When every rank owns an equal, power-of-two number of contiguous rows
+//! (see `ShardPlan::aligned`), each rank-local fold is an exact subtree of
+//! the global row tree, and the cross-rank tree completes the remaining
+//! upper levels — so the reduced gradients, loss sums and denominators are
+//! bit-identical for any aligned replica count. `tests/dp_equivalence.rs`
+//! enforces this end to end; `tree_subtree_consistency` below pins the
+//! algebraic core.
+
+use crate::Result;
+use anyhow::bail;
+
+/// Sum per-rank vectors elementwise with the fixed pairwise-adjacent tree:
+/// level by level, adjacent pairs combined in order, an odd trailing
+/// element carried up unchanged. `parts[r]` is rank `r`'s contribution;
+/// all parts must have equal length.
+pub fn tree_reduce(mut parts: Vec<Vec<f32>>) -> Vec<f32> {
+    assert!(!parts.is_empty(), "tree_reduce: no parts");
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                debug_assert_eq!(a.len(), b.len(), "tree_reduce: length mismatch");
+                for (x, y) in a.iter_mut().zip(&b) {
+                    *x += *y;
+                }
+            }
+            next.push(a);
+        }
+        parts = next;
+    }
+    parts.pop().expect("non-empty parts")
+}
+
+/// Reduce the full output tuples of all ranks: `per_rank[r]` is rank `r`'s
+/// literal list (same arity and shapes on every rank — the grad artifact
+/// outputs). Every slot, scalars and tensors alike, is summed with
+/// [`tree_reduce`]. A single rank passes through untouched.
+pub fn tree_reduce_literals(per_rank: Vec<Vec<xla::Literal>>) -> Result<Vec<xla::Literal>> {
+    let n_ranks = per_rank.len();
+    if n_ranks == 0 {
+        bail!("tree_reduce_literals: no ranks");
+    }
+    let arity = per_rank[0].len();
+    if per_rank.iter().any(|r| r.len() != arity) {
+        bail!("tree_reduce_literals: rank output arity mismatch");
+    }
+    if n_ranks == 1 {
+        return Ok(per_rank.into_iter().next().expect("one rank"));
+    }
+    // Slot-major transpose, then reduce each slot across ranks.
+    let mut slots: Vec<Vec<Vec<f32>>> = (0..arity).map(|_| Vec::with_capacity(n_ranks)).collect();
+    let mut dims: Vec<Vec<usize>> = Vec::with_capacity(arity);
+    for (ri, rank) in per_rank.into_iter().enumerate() {
+        for (k, lit) in rank.into_iter().enumerate() {
+            if ri == 0 {
+                dims.push(lit.array_shape()?.dims().iter().map(|&d| d as usize).collect());
+            }
+            slots[k].push(lit.to_vec::<f32>()?);
+        }
+    }
+    let mut out = Vec::with_capacity(arity);
+    for (k, parts) in slots.into_iter().enumerate() {
+        let reduced = tree_reduce(parts);
+        out.push(crate::runtime::lit_f32(&reduced, &dims[k])?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Pcg32;
+
+    #[test]
+    fn tree_bracketing_is_pairwise_adjacent() {
+        // four parts: ((a+b)+(c+d)) — NOT the sequential ((a+b)+c)+d.
+        let a = vec![1.0e8f32];
+        let b = vec![1.0f32];
+        let c = vec![-1.0e8f32];
+        let d = vec![1.0f32];
+        let got = tree_reduce(vec![a.clone(), b.clone(), c.clone(), d.clone()])[0];
+        let expect = (a[0] + b[0]) + (c[0] + d[0]);
+        assert_eq!(got.to_bits(), expect.to_bits());
+        // three parts: (a+b) then + c (odd element carried up)
+        let got3 = tree_reduce(vec![a.clone(), b.clone(), c.clone()])[0];
+        assert_eq!(got3.to_bits(), ((a[0] + b[0]) + c[0]).to_bits());
+    }
+
+    /// The invariant the replica engine rests on: reducing aligned
+    /// contiguous groups locally and then across groups is bit-identical
+    /// to the flat tree, for every power-of-two group size.
+    #[test]
+    fn tree_subtree_consistency() {
+        let mut rng = Pcg32::seeded(0xd9);
+        for _ in 0..50 {
+            let rows: Vec<Vec<f32>> = (0..8)
+                .map(|_| {
+                    (0..17)
+                        .map(|_| (rng.next_f32() - 0.5) * 10f32.powi(rng.gen_range(12) as i32 - 6))
+                        .collect()
+                })
+                .collect();
+            let flat = tree_reduce(rows.clone());
+            for n_ranks in [1usize, 2, 4, 8] {
+                let s = 8 / n_ranks;
+                let grouped: Vec<Vec<f32>> = (0..n_ranks)
+                    .map(|r| tree_reduce(rows[r * s..(r + 1) * s].to_vec()))
+                    .collect();
+                let combined = tree_reduce(grouped);
+                let fb: Vec<u32> = flat.iter().map(|x| x.to_bits()).collect();
+                let cb: Vec<u32> = combined.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(fb, cb, "subtree mismatch at {n_ranks} ranks");
+            }
+        }
+    }
+
+    #[test]
+    fn literal_reduce_preserves_shapes_and_scalars() {
+        let mk = |v: f32| {
+            vec![
+                crate::runtime::lit_f32(&[v, 2.0 * v, 3.0 * v, 4.0 * v], &[2, 2]).unwrap(),
+                xla::Literal::scalar(v),
+            ]
+        };
+        let out = tree_reduce_literals(vec![mk(1.0), mk(10.0), mk(100.0)]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(out[0].to_vec::<f32>().unwrap(), vec![111.0, 222.0, 333.0, 444.0]);
+        assert_eq!(out[1].get_first_element::<f32>().unwrap(), 111.0);
+        // single rank passes through
+        let one = tree_reduce_literals(vec![mk(7.0)]).unwrap();
+        assert_eq!(one[1].get_first_element::<f32>().unwrap(), 7.0);
+        // arity mismatch rejected
+        assert!(tree_reduce_literals(vec![mk(1.0), vec![xla::Literal::scalar(1.0f32)]]).is_err());
+    }
+}

@@ -7,9 +7,11 @@
 //! bounded channel.
 
 pub mod artifacts;
+pub mod collective;
 pub mod executable;
 
 pub use artifacts::{default_artifacts_dir, ArtifactInfo, DType, FamilyInfo, Mode, Registry, Route, TensorSpec};
+pub use collective::{tree_reduce, tree_reduce_literals};
 pub use executable::{get_f32, lit_f32, lit_i32, scalar_f32, scalar_u32, Step};
 
 use crate::Result;

@@ -1,14 +1,18 @@
 //! Training: the step orchestrator ([`trainer`]), the data+runtime
-//! environment ([`env`]), the prefetch pipeline ([`pipeline`]) and the
-//! paper's low-cost hyperparameter tuning strategy ([`tuning`]).
+//! environment ([`env`]), the prefetch pipeline ([`pipeline`]), the
+//! data-parallel replica engine ([`replica`]) and the paper's low-cost
+//! hyperparameter tuning strategy ([`tuning`]).
 
 pub mod env;
 pub mod pipeline;
+pub mod replica;
 pub mod trainer;
 pub mod tuning;
 
 pub use env::TrainEnv;
 pub use pipeline::{BatchPipeline, PipelineStats, Prefetcher, StepSpec};
+pub use replica::{ReplicaEngine, ReducedStep};
 pub use trainer::{
-    plan_schedule, CurvePoint, EvalSet, LoaderKind, RunResult, StepRoute, Trainer,
+    plan_schedule, state_fingerprint, CurvePoint, EvalSet, LoaderKind, RunResult, StepRoute,
+    Trainer,
 };

@@ -1,0 +1,365 @@
+//! The data-parallel replica engine: `n_replicas` surrogate model
+//! instances on std threads, each executing the gradient-returning step
+//! mode (`*_grad` artifacts) over a disjoint shard of the global batch.
+//!
+//! Per step the trainer:
+//!
+//! 1. splits the planned global batch by rank
+//!    ([`crate::curriculum::loader::ShardPlan`]: contiguous row ranges);
+//! 2. broadcasts a parameter snapshot (`Arc`, no per-rank copy) plus the
+//!    step's shared keep-index literal to every rank worker;
+//! 3. collects per-rank outputs (unnormalized gradient sums, loss-sum and
+//!    denominator partials) and combines them with the fixed-order tree
+//!    all-reduce ([`crate::runtime::collective`]);
+//! 4. runs one shared optimizer update (`{family}_apply`) on the
+//!    coordinator thread.
+//!
+//! Each worker owns its own `xla::PjRtClient` and executable cache (the
+//! PJRT runtime on the coordinator is deliberately single-threaded), so a
+//! rank is genuinely an independent model instance. Determinism does not
+//! depend on scheduling: results are indexed by rank and the reduction
+//! order is fixed, so any interleaving of worker completions yields the
+//! same bits — and with aligned shards the result is bit-identical to the
+//! 1-rank run (`tests/dp_equivalence.rs`).
+
+use crate::curriculum::loader::{AnyBatch, ShardPlan};
+use crate::runtime::collective::tree_reduce_literals;
+use crate::runtime::{get_f32, ArtifactInfo, FamilyInfo, Registry, Step};
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Everything a rank worker needs to compile artifacts on demand:
+/// name → (HLO path, manifest info). Snapshot of the registry's catalog,
+/// shareable across threads (the `Runtime` itself is not `Sync`).
+pub type ArtifactCatalog = Arc<BTreeMap<String, (PathBuf, ArtifactInfo)>>;
+
+/// Build the catalog from a registry (cheap: paths + specs only).
+pub fn artifact_catalog(reg: &Registry) -> ArtifactCatalog {
+    Arc::new(
+        reg.artifacts
+            .iter()
+            .map(|(name, info)| (name.clone(), (reg.dir.join(&info.file), info.clone())))
+            .collect(),
+    )
+}
+
+struct RankJob {
+    /// Engine-wide step sequence number; echoed back in [`RankDone`] so a
+    /// completion can never be attributed to the wrong `grad_step` call
+    /// (e.g. an in-flight job from a step that errored mid-collect).
+    seq: u64,
+    artifact: String,
+    params: Arc<Vec<xla::Literal>>,
+    batch: AnyBatch,
+    keep_idx: Option<Arc<xla::Literal>>,
+}
+
+struct RankDone {
+    seq: u64,
+    rank: usize,
+    out: Result<Vec<xla::Literal>>,
+    busy_secs: f64,
+}
+
+/// The reduced outcome of one data-parallel gradient step.
+pub struct ReducedStep {
+    /// Tree-reduced, still-unnormalized gradient tensors (`n_params`).
+    pub grads: Vec<xla::Literal>,
+    /// Tree-reduced loss numerator.
+    pub loss_sum: f32,
+    /// Tree-reduced denominator (loss-mask sum for LM, row count for ViT).
+    pub den: f32,
+}
+
+pub struct ReplicaEngine {
+    txs: Vec<Sender<RankJob>>,
+    done_rx: Receiver<RankDone>,
+    workers: Vec<JoinHandle<()>>,
+    n_ranks: usize,
+    /// Monotone step counter matching jobs to their completions.
+    next_seq: u64,
+    /// Seconds spent in the cross-rank tree reduction.
+    pub allreduce_secs: f64,
+    /// Per-rank cumulative grad-execution seconds (imbalance reporting).
+    rank_busy: Vec<f64>,
+}
+
+impl ReplicaEngine {
+    /// Spawn `n_ranks` rank workers. Workers compile grad executables
+    /// lazily from `catalog` (each keeps its own cache, so the first step
+    /// per (route, width) pays the surrogate parse cost once per rank).
+    pub fn spawn(n_ranks: usize, catalog: ArtifactCatalog, fam: Arc<FamilyInfo>) -> ReplicaEngine {
+        let n = n_ranks.max(1);
+        let (done_tx, done_rx) = channel::<RankDone>();
+        let mut txs = Vec::with_capacity(n);
+        let workers = (0..n)
+            .map(|rank| {
+                let (tx, rx) = channel::<RankJob>();
+                txs.push(tx);
+                let done_tx = done_tx.clone();
+                let catalog = catalog.clone();
+                let fam = fam.clone();
+                std::thread::Builder::new()
+                    .name(format!("dsde-replica-{rank}"))
+                    .spawn(move || worker_loop(rank, &catalog, &fam, rx, done_tx))
+                    .expect("spawn replica worker")
+            })
+            .collect();
+        ReplicaEngine {
+            txs,
+            done_rx,
+            workers,
+            n_ranks: n,
+            next_seq: 0,
+            allreduce_secs: 0.0,
+            rank_busy: vec![0.0; n],
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    /// Execute one data-parallel gradient step: shard `batch` per `plan`,
+    /// run rank `r`'s shard through `artifacts[r]`, tree-reduce the
+    /// results. `artifacts` must name one grad variant per rank (matching
+    /// each rank's shard width).
+    pub fn grad_step(
+        &mut self,
+        plan: &ShardPlan,
+        artifacts: &[String],
+        params: Arc<Vec<xla::Literal>>,
+        batch: &AnyBatch,
+        keep_idx: Option<Arc<xla::Literal>>,
+        n_grads: usize,
+    ) -> Result<ReducedStep> {
+        if plan.n_ranks() != self.n_ranks || artifacts.len() != self.n_ranks {
+            bail!(
+                "grad_step: plan has {} ranks, engine {} ({} artifacts)",
+                plan.n_ranks(),
+                self.n_ranks,
+                artifacts.len()
+            );
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        for rank in 0..self.n_ranks {
+            let job = RankJob {
+                seq,
+                artifact: artifacts[rank].clone(),
+                params: params.clone(),
+                batch: plan.shard(batch, rank),
+                keep_idx: keep_idx.clone(),
+            };
+            self.txs[rank]
+                .send(job)
+                .map_err(|_| anyhow!("replica rank {rank} exited early"))?;
+        }
+        let mut per_rank: Vec<Option<Vec<xla::Literal>>> =
+            (0..self.n_ranks).map(|_| None).collect();
+        let mut pending = self.n_ranks;
+        while pending > 0 {
+            let done = self
+                .done_rx
+                .recv()
+                .map_err(|_| anyhow!("replica workers disconnected"))?;
+            self.rank_busy[done.rank] += done.busy_secs;
+            if done.seq != seq {
+                // Completion of a step that errored mid-collect earlier:
+                // account its time, never its result.
+                continue;
+            }
+            pending -= 1;
+            let out = done
+                .out
+                .with_context(|| format!("replica rank {} grad step", done.rank))?;
+            per_rank[done.rank] = Some(out);
+        }
+        let t0 = Instant::now();
+        let outs: Vec<Vec<xla::Literal>> = per_rank
+            .into_iter()
+            .map(|o| o.expect("every rank reported"))
+            .collect();
+        let mut reduced = tree_reduce_literals(outs)?;
+        if reduced.len() != n_grads + 2 {
+            bail!(
+                "grad outputs: expected {} tensors + [loss_sum, den], got {}",
+                n_grads,
+                reduced.len()
+            );
+        }
+        let den = get_f32(&reduced.pop().expect("den"))?;
+        let loss_sum = get_f32(&reduced.pop().expect("loss_sum"))?;
+        self.allreduce_secs += t0.elapsed().as_secs_f64();
+        Ok(ReducedStep { grads: reduced, loss_sum, den })
+    }
+
+    /// Load imbalance over the run so far: `1 − mean/max` of per-rank busy
+    /// seconds (0 = perfectly balanced; approaches 1 when one rank does
+    /// all the work).
+    pub fn imbalance(&self) -> f64 {
+        let max = self.rank_busy.iter().cloned().fold(0.0f64, f64::max);
+        if max <= 0.0 {
+            return 0.0;
+        }
+        let mean = self.rank_busy.iter().sum::<f64>() / self.rank_busy.len() as f64;
+        (1.0 - mean / max).max(0.0)
+    }
+}
+
+impl Drop for ReplicaEngine {
+    fn drop(&mut self) {
+        // Closing the job channels ends the worker loops.
+        self.txs.clear();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rank: usize,
+    catalog: &BTreeMap<String, (PathBuf, ArtifactInfo)>,
+    fam: &FamilyInfo,
+    rx: Receiver<RankJob>,
+    done_tx: Sender<RankDone>,
+) {
+    // Each rank is its own model instance: own client, own executables.
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = done_tx.send(RankDone {
+                seq: u64::MAX, // never matches a job; send() failure surfaces it
+                rank,
+                out: Err(anyhow!("rank {rank}: client init: {e}")),
+                busy_secs: 0.0,
+            });
+            return;
+        }
+    };
+    let mut cache: HashMap<String, Step> = HashMap::new();
+    while let Ok(job) = rx.recv() {
+        let t0 = Instant::now();
+        let out = run_job(&client, &mut cache, catalog, fam, &job);
+        let busy_secs = t0.elapsed().as_secs_f64();
+        if done_tx.send(RankDone { seq: job.seq, rank, out, busy_secs }).is_err() {
+            return; // engine dropped
+        }
+    }
+}
+
+fn run_job(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, Step>,
+    catalog: &BTreeMap<String, (PathBuf, ArtifactInfo)>,
+    fam: &FamilyInfo,
+    job: &RankJob,
+) -> Result<Vec<xla::Literal>> {
+    if !cache.contains_key(&job.artifact) {
+        let (path, info) = catalog
+            .get(&job.artifact)
+            .ok_or_else(|| anyhow!("unknown grad artifact '{}'", job.artifact))?;
+        let step = Step::load(client, path, info.clone())
+            .with_context(|| format!("loading {}", job.artifact))?;
+        cache.insert(job.artifact.clone(), step);
+    }
+    let step = cache.get(&job.artifact).expect("just inserted");
+    let mut extra: Vec<xla::Literal> = Vec::with_capacity(5);
+    match &job.batch {
+        AnyBatch::Lm(b) => crate::train::trainer::push_lm_batch(&mut extra, b)?,
+        AnyBatch::Vit(b) => crate::train::trainer::push_vit_batch(&mut extra, b, fam)?,
+    }
+    let mut args: Vec<&xla::Literal> = job.params.iter().collect();
+    args.extend(extra.iter());
+    if let Some(k) = &job.keep_idx {
+        args.push(k.as_ref());
+    }
+    step.execute_refs(&args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::curriculum::loader::LmBatch;
+    use crate::runtime::{scalar_u32, Mode, Runtime};
+
+    fn lm_batch(rows: usize, seq: usize) -> AnyBatch {
+        let n = rows * seq;
+        AnyBatch::Lm(LmBatch {
+            rows,
+            seq,
+            tokens: (0..n as i32).map(|i| 6 + i % 400).collect(),
+            targets: (0..n as i32).map(|i| 6 + (i + 3) % 400).collect(),
+            loss_mask: vec![1.0; n],
+            pad_mask: None,
+            data_tokens: n as u64,
+        })
+    }
+
+    #[test]
+    fn engine_reduces_bit_identically_across_rank_counts() {
+        let rt = Runtime::open_default().expect("artifacts present");
+        let fam = Arc::new(rt.registry.family("gpt").unwrap().clone());
+        let catalog = artifact_catalog(&rt.registry);
+        let init = rt.step("gpt_init").unwrap();
+        let state = init.execute(&[scalar_u32(3)]).unwrap();
+        let params: Arc<Vec<xla::Literal>> =
+            Arc::new(state[..fam.n_params].to_vec());
+        let batch = lm_batch(fam.batch, 64);
+        let route = rt.registry.route_train("gpt", 64, 64, Mode::Plain).unwrap();
+
+        let mut reference: Option<(Vec<Vec<u32>>, u32, u32)> = None;
+        for n in [1usize, 2, 4] {
+            let mut eng = ReplicaEngine::spawn(n, catalog.clone(), fam.clone());
+            let plan = ShardPlan::new(fam.batch, n);
+            assert!(plan.aligned());
+            let names: Vec<String> = (0..n)
+                .map(|r| rt.registry.grad_name("gpt", &route, plan.rows_of(r)).unwrap())
+                .collect();
+            let red = eng
+                .grad_step(&plan, &names, params.clone(), &batch, None, fam.n_params)
+                .unwrap();
+            let gbits: Vec<Vec<u32>> = red
+                .grads
+                .iter()
+                .map(|g| g.to_vec::<f32>().unwrap().iter().map(|x| x.to_bits()).collect())
+                .collect();
+            let key = (gbits, red.loss_sum.to_bits(), red.den.to_bits());
+            match &reference {
+                None => reference = Some(key),
+                Some(r) => assert_eq!(*r, key, "rank count {n} diverged"),
+            }
+            if n > 1 {
+                assert!(eng.allreduce_secs >= 0.0);
+            }
+            assert!(eng.imbalance() >= 0.0 && eng.imbalance() < 1.0);
+        }
+    }
+
+    #[test]
+    fn engine_surfaces_missing_artifact_as_error() {
+        let rt = Runtime::open_default().unwrap();
+        let fam = Arc::new(rt.registry.family("gpt").unwrap().clone());
+        let catalog = artifact_catalog(&rt.registry);
+        let mut eng = ReplicaEngine::spawn(1, catalog, fam.clone());
+        let plan = ShardPlan::new(fam.batch, 1);
+        let params = Arc::new(Vec::new());
+        let err = eng
+            .grad_step(
+                &plan,
+                &["nope_grad".to_string()],
+                params,
+                &lm_batch(fam.batch, 64),
+                None,
+                fam.n_params,
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("nope_grad"));
+    }
+}

@@ -17,7 +17,7 @@
 //! in step order and reports how long it stalled waiting for data.
 
 use crate::config::schema::{LrBasis, PipelineConfig, Routing, RunConfig};
-use crate::curriculum::loader::{AnyBatch, LmBatch, VitBatch};
+use crate::curriculum::loader::{AnyBatch, LmBatch, ShardPlan, VitBatch};
 use crate::curriculum::scheduler::{ClScheduler, ClState};
 use crate::curriculum::{BertLoader, GptLoader, VitLoader};
 use crate::lr::LrSchedule;
@@ -25,6 +25,7 @@ use crate::ltd::schedule::kept_len;
 use crate::ltd::{ImportanceTracker, RandomDropper, TokenAccountant};
 use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_u32, Mode, Route, Runtime};
 use crate::train::pipeline::{BatchPipeline, PipelineStats, StepSpec};
+use crate::train::replica::ReplicaEngine;
 use crate::Result;
 use anyhow::{anyhow, bail};
 use std::collections::BTreeMap;
@@ -40,7 +41,7 @@ pub struct CurvePoint {
 }
 
 /// Everything a paper table row needs about a finished run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct RunResult {
     pub label: String,
     pub case: String,
@@ -65,6 +66,19 @@ pub struct RunResult {
     /// Total batch-construction seconds (== stall when synchronous;
     /// mostly hidden behind execution when the async pipeline is on).
     pub loader_build_secs: f64,
+    /// Data-parallel replica count this run executed with (0 = fused).
+    pub n_replicas: usize,
+    /// Seconds spent in the cross-rank tree all-reduce (0 when fused).
+    pub allreduce_secs: f64,
+    /// Rank load imbalance, `1 − mean/max` of per-rank busy seconds
+    /// (0 = balanced or fused).
+    pub rank_imbalance: f64,
+    /// FNV-1a fingerprint over the bit patterns of the final model state —
+    /// the bit-exact equality witness of `tests/dp_equivalence.rs`.
+    pub state_hash: u64,
+    /// Per-step train loss (f32 exactly as the runtime produced it), for
+    /// bit-exact loss-curve comparison across replica counts.
+    pub step_losses: Vec<f32>,
 }
 
 impl RunResult {
@@ -222,9 +236,50 @@ impl<'rt> Trainer<'rt> {
         dropper.pin_first_token = run.family == "vit";
         // Pre-compile every executable this run will route to, so compile
         // time never pollutes the measured step/wall timings (the registry
-        // caches per process; repeated runs reuse the executables).
-        for name in &planned {
-            rt.step(name)?;
+        // caches per process; repeated runs reuse the executables). In
+        // replica mode the coordinator never executes the fused train
+        // variants — rank workers compile their grad variants instead —
+        // so the pre-warm would be pure waste.
+        if run.n_replicas == 0 {
+            for name in &planned {
+                rt.step(name)?;
+            }
+        }
+        // Replica engine: the shard width must be compiled (n must divide
+        // the batch and hit a grad_rows bucket) for every planned route;
+        // the shared apply executable is pre-warmed on the coordinator
+        // (grad variants compile lazily on the rank workers).
+        if run.n_replicas > 0 {
+            if fam.batch % run.n_replicas != 0 {
+                bail!(
+                    "n_replicas {} must divide the {} family batch {}",
+                    run.n_replicas,
+                    run.family,
+                    fam.batch
+                );
+            }
+            let rows = fam.batch / run.n_replicas;
+            if run.n_replicas > 1 && !rows.is_power_of_two() {
+                bail!(
+                    "n_replicas {} gives shard width {rows}: rank boundaries would not \
+                     align with the gradient row tree, voiding the bit-equivalence \
+                     guarantee (shard width must be a power of two)",
+                    run.n_replicas
+                );
+            }
+            for name in &planned {
+                let info = rt.registry.artifact(name)?;
+                if info.kind == "train" {
+                    let route = Route {
+                        artifact: info.name.clone(),
+                        seq: info.seq,
+                        keep: if info.mode == Mode::Plain { info.seq } else { info.keep },
+                        mode: info.mode,
+                    };
+                    rt.registry.grad_name(&run.family, &route, rows)?;
+                }
+            }
+            rt.step(&rt.registry.apply_name(&run.family)?)?;
         }
         rt.step(&rt.registry.eval_name(&run.family)?)?;
         let init = rt.step(&rt.registry.init_name(&run.family)?)?;
@@ -253,53 +308,67 @@ impl<'rt> Trainer<'rt> {
         let mut curve = Vec::new();
         let mut step_secs_total = 0.0;
         let mut tail_losses = Vec::new();
+        let mut step_losses: Vec<f32> = Vec::with_capacity(self.run.total_steps as usize);
         let tail_from = self.run.total_steps - (self.run.total_steps / 10).max(1);
         let wall0 = Instant::now();
 
         let loader = self.loader.take().expect("trainer runs once");
         let mut source = BatchSource::new(loader, &self.schedule, &self.run.pipeline);
 
+        // Data-parallel replica engine (None = fused single-instance path).
+        let mut engine = if self.run.n_replicas > 0 {
+            Some(ReplicaEngine::spawn(
+                self.run.n_replicas,
+                crate::train::replica::artifact_catalog(&self.rt.registry),
+                Arc::new(fam.clone()),
+            ))
+        } else {
+            None
+        };
+        let apply_name = if engine.is_some() {
+            Some(self.rt.registry.apply_name(&self.run.family)?)
+        } else {
+            None
+        };
+
         for step in 0..self.run.total_steps {
             let sr = self.schedule[step as usize].clone();
             let route = &sr.route;
-            let exe = self.rt.step(&route.artifact)?;
             *dispatch.entry(route.artifact.clone()).or_default() += 1;
+            let exe = if engine.is_none() {
+                Some(self.rt.step(&route.artifact)?)
+            } else {
+                None
+            };
 
             let t0 = Instant::now();
-            // ---- assemble inputs: state ++ [t, lr] ++ batch ++ [keep_idx]
-            // State literals are passed by reference (no deep clone on the
-            // hot path); only the small per-step literals are created.
-            let mut extra: Vec<xla::Literal> = Vec::with_capacity(8);
             let lr_now = self
                 .lr
                 .at_state(self.accountant.compute_tokens(), step);
-            extra.push(scalar_f32((step + 1) as f32));
-            extra.push(scalar_f32(lr_now as f32));
 
             let batch = source.next(&sr)?;
             let (rows, tokens_for_importance) = match &batch {
                 AnyBatch::Lm(b) => {
-                    push_lm_batch(&mut extra, b)?;
                     let toks = self
                         .importance
                         .is_some()
                         .then(|| (b.tokens.clone(), b.rows));
                     (b.rows, toks)
                 }
-                AnyBatch::Vit(b) => {
-                    push_vit_batch(&mut extra, b, &fam)?;
-                    (b.rows, None)
-                }
+                AnyBatch::Vit(b) => (b.rows, None),
             };
             debug_assert_eq!(batch.data_tokens(), (rows * route.seq) as u64);
-            source.recycle(batch);
 
+            // The step's keep-index literal — one shared set per step,
+            // identical on every rank (the dropper stream and the
+            // importance scores depend only on the schedule and the
+            // global batch, never on the replica count).
             let dropping = route.mode != Mode::Plain && route.keep < route.seq;
-            if dropping {
-                match route.mode {
+            let keep_lit: Option<xla::Literal> = if dropping {
+                Some(match route.mode {
                     Mode::Ltd => {
                         let idx = self.dropper.layerwise(n_mid, route.seq, route.keep);
-                        extra.push(lit_i32(idx, &[n_mid, route.keep])?);
+                        lit_i32(idx, &[n_mid, route.keep])?
                     }
                     Mode::Bypass => {
                         let tracker = self
@@ -311,22 +380,82 @@ impl<'rt> Trainer<'rt> {
                             .ok_or_else(|| anyhow!("TokenBypass needs token batches"))?;
                         let mut out = Vec::new();
                         tracker.select_positions(toks, *rows, route.seq, route.keep, &mut out);
-                        extra.push(lit_i32(&out, &[route.keep])?);
+                        lit_i32(&out, &[route.keep])?
                     }
                     Mode::Plain => unreachable!(),
-                }
-            }
+                })
+            } else {
+                None
+            };
 
-            // ---- execute
-            let args: Vec<&xla::Literal> =
-                self.state.iter().chain(extra.iter()).collect();
-            let out = exe.execute_refs(&args)?;
-            let loss = crate::runtime::get_f32(&out[self.n_state])? as f64;
+            let loss = if let Some(engine) = engine.as_mut() {
+                // ---- data-parallel: shard → grad → all-reduce → apply
+                let np = fam.n_params;
+                let plan = ShardPlan::new(rows, engine.n_ranks());
+                let grad_names: Vec<String> = (0..plan.n_ranks())
+                    .map(|r| {
+                        self.rt
+                            .registry
+                            .grad_name(&self.run.family, route, plan.rows_of(r))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                // One params snapshot per step, shared by every rank via
+                // Arc (the copy itself is unavoidable while state literals
+                // are owned: apply produces fresh literals each step; at
+                // surrogate scale it is small next to the execute cost).
+                let params = Arc::new(self.state[..np].to_vec());
+                let red = engine.grad_step(
+                    &plan,
+                    &grad_names,
+                    params,
+                    &batch,
+                    keep_lit.map(Arc::new),
+                    np,
+                )?;
+                source.recycle(batch);
+                let loss = (red.loss_sum / red.den.max(1.0)) as f64;
+                // one shared optimizer update on the coordinator
+                let apply = self.rt.step(apply_name.as_ref().expect("replica mode"))?;
+                let t_lit = scalar_f32((step + 1) as f32);
+                let lr_lit = scalar_f32(lr_now as f32);
+                let den_lit = scalar_f32(red.den);
+                let args: Vec<&xla::Literal> = self
+                    .state
+                    .iter()
+                    .chain([&t_lit, &lr_lit, &den_lit])
+                    .chain(red.grads.iter())
+                    .collect();
+                let out = apply.execute_refs(&args)?;
+                self.state.truncate(0);
+                self.state.extend(out.into_iter().take(self.n_state));
+                loss
+            } else {
+                // ---- fused: state ++ [t, lr] ++ batch ++ [keep_idx].
+                // State literals are passed by reference (no deep clone on
+                // the hot path); only the small per-step literals are made.
+                let mut extra: Vec<xla::Literal> = Vec::with_capacity(8);
+                extra.push(scalar_f32((step + 1) as f32));
+                extra.push(scalar_f32(lr_now as f32));
+                match &batch {
+                    AnyBatch::Lm(b) => push_lm_batch(&mut extra, b)?,
+                    AnyBatch::Vit(b) => push_vit_batch(&mut extra, b, &fam)?,
+                }
+                source.recycle(batch);
+                if let Some(k) = keep_lit {
+                    extra.push(k);
+                }
+                let exe = exe.expect("fused mode");
+                let args: Vec<&xla::Literal> =
+                    self.state.iter().chain(extra.iter()).collect();
+                let out = exe.execute_refs(&args)?;
+                let loss = crate::runtime::get_f32(&out[self.n_state])? as f64;
+                self.state.truncate(0);
+                self.state.extend(out.into_iter().take(self.n_state));
+                loss
+            };
             if !loss.is_finite() {
                 bail!("{}: non-finite loss at step {step}", self.run.label);
             }
-            self.state.truncate(0);
-            self.state.extend(out.into_iter().take(self.n_state));
             step_secs_total += t0.elapsed().as_secs_f64();
 
             // ---- bookkeeping
@@ -341,6 +470,7 @@ impl<'rt> Trainer<'rt> {
             {
                 tr.update(toks, loss);
             }
+            step_losses.push(loss as f32);
             if step >= tail_from {
                 tail_losses.push(loss);
             }
@@ -355,6 +485,11 @@ impl<'rt> Trainer<'rt> {
         }
         let loader_stats = source.stats();
         drop(source);
+        let (allreduce_secs, rank_imbalance) = engine
+            .as_ref()
+            .map(|e| (e.allreduce_secs, e.imbalance()))
+            .unwrap_or((0.0, 0.0));
+        drop(engine);
 
         let (final_eval_loss, final_accuracy) = self.evaluate()?;
         curve.push(CurvePoint {
@@ -379,6 +514,11 @@ impl<'rt> Trainer<'rt> {
             tail_train_loss: mean(&tail_losses),
             loader_stall_secs: loader_stats.stall_secs,
             loader_build_secs: loader_stats.build_secs,
+            n_replicas: self.run.n_replicas,
+            allreduce_secs,
+            rank_imbalance,
+            state_hash: state_fingerprint(&self.state),
+            step_losses,
         })
     }
 
@@ -424,7 +564,7 @@ impl<'rt> Trainer<'rt> {
     }
 }
 
-fn push_lm_batch(args: &mut Vec<xla::Literal>, b: &LmBatch) -> Result<()> {
+pub(crate) fn push_lm_batch(args: &mut Vec<xla::Literal>, b: &LmBatch) -> Result<()> {
     let dims = [b.rows, b.seq];
     args.push(lit_i32(&b.tokens, &dims)?);
     args.push(lit_i32(&b.targets, &dims)?);
@@ -435,7 +575,7 @@ fn push_lm_batch(args: &mut Vec<xla::Literal>, b: &LmBatch) -> Result<()> {
     Ok(())
 }
 
-fn push_vit_batch(
+pub(crate) fn push_vit_batch(
     args: &mut Vec<xla::Literal>,
     b: &VitBatch,
     fam: &crate::runtime::FamilyInfo,
@@ -452,6 +592,24 @@ fn mean(xs: &[f64]) -> f64 {
     } else {
         xs.iter().sum::<f64>() / xs.len() as f64
     }
+}
+
+/// FNV-1a over the bit patterns of every f32 element in `state` — the
+/// cheap bit-exact fingerprint `tests/dp_equivalence.rs` and the
+/// `dp_scaling` bench compare across replica counts.
+pub fn state_fingerprint(state: &[xla::Literal]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for lit in state {
+        if let Ok(v) = lit.to_vec::<f32>() {
+            for x in v {
+                for b in x.to_bits().to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x100_0000_01b3);
+                }
+            }
+        }
+    }
+    h
 }
 
 /// Analytic route plan of a configured run: walks the schedules without
@@ -512,4 +670,52 @@ pub fn plan_routes(
 /// Back-compat shim: just the compute-token budget.
 pub fn estimate_compute_tokens(rt: &Runtime, run: &RunConfig) -> Result<f64> {
     Ok(plan_schedule(rt, run)?.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Guard audit (ISSUE 2 satellite): the observability ratios in bench
+    // output must be well-defined on degenerate inputs, never NaN/inf.
+    #[test]
+    fn loader_hidden_fraction_degenerate_inputs() {
+        let r = |build: f64, stall: f64| RunResult {
+            loader_build_secs: build,
+            loader_stall_secs: stall,
+            ..Default::default()
+        };
+        // zero build time (e.g. a 0-step run): defined, zero
+        assert_eq!(r(0.0, 0.0).loader_hidden_fraction(), 0.0);
+        assert_eq!(r(-1.0, 0.0).loader_hidden_fraction(), 0.0);
+        // stall exceeding build (lock contention noise): clamped, not negative
+        assert_eq!(r(1.0, 3.0).loader_hidden_fraction(), 0.0);
+        // and the ratio is never NaN even with stall-only garbage
+        assert!(!r(0.0, 5.0).loader_hidden_fraction().is_nan());
+        // normal case
+        let h = r(2.0, 0.5).loader_hidden_fraction();
+        assert!((h - 0.75).abs() < 1e-12);
+        assert!((0.0..=1.0).contains(&h));
+    }
+
+    #[test]
+    fn perplexity_of_default_is_one() {
+        let r = RunResult::default();
+        assert_eq!(r.perplexity(), 1.0);
+        assert_eq!(r.n_replicas, 0);
+        assert_eq!(r.allreduce_secs, 0.0);
+    }
+
+    #[test]
+    fn state_fingerprint_is_bit_sensitive() {
+        let a = vec![xla::Literal::vec1(&[1.0f32, 2.0, 3.0])];
+        let b = vec![xla::Literal::vec1(&[1.0f32, 2.0, 3.0])];
+        assert_eq!(state_fingerprint(&a), state_fingerprint(&b));
+        let c = vec![xla::Literal::vec1(&[1.0f32, 2.0, 3.0000002])];
+        assert_ne!(state_fingerprint(&a), state_fingerprint(&c));
+        // -0.0 and 0.0 are different bits, so they must fingerprint apart
+        let z0 = vec![xla::Literal::vec1(&[0.0f32])];
+        let z1 = vec![xla::Literal::vec1(&[-0.0f32])];
+        assert_ne!(state_fingerprint(&z0), state_fingerprint(&z1));
+    }
 }

@@ -1,0 +1,227 @@
+//! Rank-equivalence harness for the data-parallel replica engine — the
+//! forcing function that keeps every layer honest (ISSUE 2 tentpole).
+//!
+//! For each (family × CL transform × routing mode) case and each aligned
+//! replica count n ∈ {1, 2, 4}, an n-rank run must be **bit-identical** to
+//! the 1-rank run on the same seed and global batch stream:
+//!
+//! * same final model state (`state_hash`, FNV over f32 bit patterns),
+//! * same per-step loss curve (`step_losses`, exact f32 equality),
+//! * same eval curve, token accounting and dispatch histogram,
+//!
+//! with the async batch pipeline both on and off. This holds because
+//! (a) the batch stream and keep-index streams are replica-count
+//! independent, (b) grad artifacts combine per-row gradients with a fixed
+//! pairwise tree whose subtree boundaries coincide with aligned shard
+//! boundaries, and (c) the cross-rank all-reduce uses the same tree
+//! (see runtime/collective.rs and DESIGN.md §Data-parallel replica engine).
+
+use dsde::config::schema::*;
+use dsde::train::{RunResult, TrainEnv};
+
+const STEPS: u64 = 10;
+
+fn env() -> TrainEnv {
+    TrainEnv::new(200, 91).expect("artifacts present (see DESIGN.md)")
+}
+
+fn seqtru(max_seq: usize) -> ClConfig {
+    ClConfig::new(
+        Metric::SeqTru,
+        Bound::Value((max_seq / 8) as f64),
+        Bound::Value(max_seq as f64),
+        (STEPS as f64 * 0.6) as u64,
+    )
+}
+
+fn seqres(max_seq: usize) -> ClConfig {
+    ClConfig::new(
+        Metric::SeqRes,
+        Bound::Value((max_seq / 8) as f64),
+        Bound::Value(max_seq as f64),
+        (STEPS as f64 * 0.6) as u64,
+    )
+}
+
+fn seqreo() -> ClConfig {
+    ClConfig::new(Metric::SeqReo, Bound::Percentile(0.05), Bound::Percentile(1.0), STEPS)
+}
+
+fn voc() -> ClConfig {
+    ClConfig::new(Metric::Voc, Bound::Percentile(0.05), Bound::Percentile(1.0), STEPS)
+}
+
+fn ltd(r_start: usize) -> Routing {
+    Routing::RandomLtd(LtdConfig::mslg(r_start, STEPS))
+}
+
+fn bypass(r_start: usize) -> Routing {
+    Routing::TokenBypass(BypassConfig {
+        r_start,
+        total_steps: STEPS,
+        schedule: LtdSchedule::Constant,
+        n_special: 4,
+    })
+}
+
+fn case(family: &str, label: &str, curriculum: Vec<ClConfig>, routing: Routing) -> RunConfig {
+    let mut c = RunConfig::baseline(family, STEPS, 3e-3);
+    c.label = label.to_string();
+    c.seed = 4242;
+    c.eval_every = STEPS / 2;
+    c.curriculum = curriculum;
+    c.routing = routing;
+    c
+}
+
+fn run_with(env: &TrainEnv, base: &RunConfig, n: usize, pipeline_on: bool) -> RunResult {
+    let mut c = base.clone();
+    c.n_replicas = n;
+    c.pipeline = if pipeline_on {
+        PipelineConfig { prefetch_depth: 3, n_loader_workers: 4 }
+    } else {
+        PipelineConfig::disabled()
+    };
+    env.run(c).unwrap_or_else(|e| panic!("{} @dp{n}: {e:#}", base.label))
+}
+
+/// The equivalence oracle: every observable that should not depend on the
+/// replica count, compared bit-exactly against the 1-rank reference.
+fn assert_rank_equivalent(label: &str, reference: &RunResult, r: &RunResult) {
+    assert_eq!(
+        reference.state_hash, r.state_hash,
+        "{label}: final model state diverged at dp{}",
+        r.n_replicas
+    );
+    assert_eq!(
+        reference.step_losses, r.step_losses,
+        "{label}: per-step loss curve diverged at dp{}",
+        r.n_replicas
+    );
+    assert_eq!(reference.curve.len(), r.curve.len(), "{label}: curve length");
+    for (a, b) in reference.curve.iter().zip(&r.curve) {
+        assert_eq!(a.step, b.step, "{label}: curve step");
+        assert_eq!(
+            a.eval_loss.to_bits(),
+            b.eval_loss.to_bits(),
+            "{label}: eval loss diverged at dp{} step {}",
+            r.n_replicas,
+            a.step
+        );
+        assert_eq!(a.compute_tokens, b.compute_tokens, "{label}: token accounting");
+    }
+    assert_eq!(reference.final_eval_loss.to_bits(), r.final_eval_loss.to_bits(), "{label}");
+    assert_eq!(reference.data_tokens, r.data_tokens, "{label}");
+    assert_eq!(reference.compute_tokens, r.compute_tokens, "{label}");
+    assert_eq!(reference.dispatch, r.dispatch, "{label}: dispatch histogram");
+    assert_eq!(reference.final_accuracy, r.final_accuracy, "{label}");
+}
+
+fn check_case(env: &TrainEnv, base: RunConfig, pipelines: &[bool]) {
+    for &pipeline_on in pipelines {
+        let reference = run_with(env, &base, 1, pipeline_on);
+        assert_eq!(reference.n_replicas, 1);
+        assert!(!reference.step_losses.is_empty());
+        for n in [2usize, 4] {
+            let r = run_with(env, &base, n, pipeline_on);
+            let label = format!(
+                "{} ({}, pipeline {})",
+                base.label,
+                base.family,
+                if pipeline_on { "on" } else { "off" }
+            );
+            assert_rank_equivalent(&label, &reference, &r);
+            if n > 1 {
+                assert!(
+                    r.allreduce_secs > 0.0,
+                    "{label}: all-reduce time should be observed at dp{n}"
+                );
+            }
+        }
+    }
+}
+
+// ---- GPT: every applicable CL transform × both routing modes ------------
+
+#[test]
+fn gpt_baseline_plain() {
+    let env = env();
+    check_case(&env, case("gpt", "gpt-baseline", vec![], Routing::None), &[true, false]);
+}
+
+#[test]
+fn gpt_seqtru_ltd() {
+    let env = env();
+    check_case(&env, case("gpt", "gpt-seqtru+ltd", vec![seqtru(64)], ltd(16)), &[true, false]);
+}
+
+#[test]
+fn gpt_seqres_ltd() {
+    let env = env();
+    check_case(&env, case("gpt", "gpt-seqres+ltd", vec![seqres(64)], ltd(16)), &[true]);
+}
+
+#[test]
+fn gpt_voc_bypass() {
+    let env = env();
+    check_case(&env, case("gpt", "gpt-voc+bypass", vec![voc()], bypass(32)), &[true]);
+}
+
+#[test]
+fn gpt_seqtru_voc_composed_ltd() {
+    let env = env();
+    check_case(
+        &env,
+        case("gpt", "gpt-seqtru+voc+ltd", vec![seqtru(64), voc()], ltd(16)),
+        &[true],
+    );
+}
+
+// ---- BERT: seqtru / seqreo / voc ----------------------------------------
+
+#[test]
+fn bert_seqtru_ltd() {
+    let env = env();
+    check_case(&env, case("bert", "bert-seqtru+ltd", vec![seqtru(64)], ltd(16)), &[true, false]);
+}
+
+#[test]
+fn bert_seqreo_ltd() {
+    let env = env();
+    check_case(&env, case("bert", "bert-seqreo+ltd", vec![seqreo()], ltd(16)), &[true]);
+}
+
+#[test]
+fn bert_voc_bypass() {
+    let env = env();
+    check_case(&env, case("bert", "bert-voc+bypass", vec![voc()], bypass(32)), &[true]);
+}
+
+// ---- ViT: random-LTD only (no curriculum in the paper's ViT runs) -------
+
+#[test]
+fn vit_ltd() {
+    let env = env();
+    check_case(&env, case("vit", "vit-ltd", vec![], ltd(5)), &[true, false]);
+}
+
+// ---- engine semantics guards --------------------------------------------
+
+#[test]
+fn unaligned_replica_count_is_rejected_up_front() {
+    let env = env();
+    let mut c = case("gpt", "gpt-dp3", vec![], Routing::None);
+    c.n_replicas = 3; // batch 8: not a divisor
+    let err = env.run(c).unwrap_err();
+    assert!(format!("{err:#}").contains("must divide"), "{err:#}");
+}
+
+#[test]
+fn dp8_single_row_shards_also_equivalent() {
+    // the extreme aligned case: one row per rank
+    let env = env();
+    let base = case("gpt", "gpt-dp8", vec![seqtru(64)], ltd(16));
+    let reference = run_with(&env, &base, 1, true);
+    let r = run_with(&env, &base, 8, true);
+    assert_rank_equivalent("gpt-dp8", &reference, &r);
+}

@@ -1,0 +1,275 @@
+//! Golden-stream regression net (ISSUE 2 satellite): fingerprint the
+//! sampler-id stream and the materialized batch bytes for every
+//! (family × CL transform) loader, against checked-in goldens — so a
+//! silent sampler-stream shift like PR 1's seqres draw-count change can
+//! never land unnoticed again.
+//!
+//! Regeneration path (documented, deliberate):
+//!
+//! ```text
+//! DSDE_UPDATE_GOLDENS=1 cargo test --test golden_streams
+//! ```
+//!
+//! then commit the rewritten `tests/goldens/streams.txt` with an
+//! explanation of WHY the stream moved. If the golden file does not exist
+//! yet (fresh checkout bootstrap), the test writes it and passes — every
+//! subsequent run compares against it.
+
+use dsde::analysis::analyzer::AnalyzerConfig;
+use dsde::analysis::metrics;
+use dsde::config::schema::*;
+use dsde::curriculum::loader::{AnyBatch, BatchPlan};
+use dsde::curriculum::scheduler::ClScheduler;
+use dsde::curriculum::{BertLoader, GptLoader, PoolSampler, Sampler, UniformSampler, VitLoader};
+use dsde::data::corpus::{Corpus, CorpusConfig};
+use dsde::data::dataset::{BertDataset, GptDataset, VitDataset};
+use dsde::data::tokenizer::Tokenizer;
+use dsde::train::trainer::LoaderKind;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const N_STEPS: usize = 24;
+const IDS_SHOWN: usize = 8;
+
+// ---- FNV-1a fingerprints --------------------------------------------------
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+    }
+
+    fn u32(&mut self, x: u32) {
+        for b in x.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn u64v(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn i32s(&mut self, xs: &[i32]) {
+        for &x in xs {
+            self.u32(x as u32);
+        }
+    }
+
+    fn f32s(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.u32(x.to_bits());
+        }
+    }
+}
+
+fn hash_batch(h: &mut Fnv, b: &AnyBatch) {
+    match b {
+        AnyBatch::Lm(b) => {
+            h.u64v(b.rows as u64);
+            h.u64v(b.seq as u64);
+            h.u64v(b.data_tokens);
+            h.i32s(&b.tokens);
+            h.i32s(&b.targets);
+            h.f32s(&b.loss_mask);
+            if let Some(p) = &b.pad_mask {
+                h.f32s(p);
+            }
+        }
+        AnyBatch::Vit(b) => {
+            h.u64v(b.rows as u64);
+            h.u64v(b.data_tokens);
+            h.f32s(&b.patches);
+            h.i32s(&b.labels);
+        }
+    }
+}
+
+// ---- stream construction --------------------------------------------------
+
+/// Drain N_STEPS plan+materialize rounds; return (sampler ids in draw
+/// order, id-stream hash, batch-content hash).
+fn fingerprint(mut loader: LoaderKind, schedules: &[ClConfig], max_seq: usize) -> (Vec<u64>, u64, u64) {
+    let sched = ClScheduler::new(schedules, max_seq).unwrap();
+    let core = loader.core();
+    let mut ids: Vec<u64> = Vec::new();
+    let mut id_hash = Fnv::new();
+    let mut batch_hash = Fnv::new();
+    for t in 0..N_STEPS as u64 {
+        let cl = sched.state_at(t);
+        let plan = loader.plan_next(cl.seq, &cl);
+        match &plan {
+            BatchPlan::Lm(p) => {
+                for &id in &p.ids {
+                    ids.push(id as u64);
+                    id_hash.u32(id);
+                }
+                if let Some(ms) = p.mask_seed {
+                    id_hash.u64v(ms);
+                }
+            }
+            BatchPlan::Vit(p) => {
+                ids.push(p.start);
+                id_hash.u64v(p.start);
+            }
+        }
+        let batch = core.materialize(&plan, None);
+        hash_batch(&mut batch_hash, &batch);
+    }
+    (ids, id_hash.0, batch_hash.0)
+}
+
+fn render_line(name: &str, ids: &[u64], id_hash: u64, batch_hash: u64) -> String {
+    let shown: Vec<String> = ids.iter().take(IDS_SHOWN).map(|i| i.to_string()).collect();
+    format!(
+        "{name} ids8={} nids={} idhash={id_hash:016x} batchhash={batch_hash:016x}",
+        shown.join(","),
+        ids.len()
+    )
+}
+
+fn golden_lines() -> Vec<String> {
+    let corpus = Corpus::generate(CorpusConfig { n_docs: 300, seed: 23, ..Default::default() });
+    let tok = Tokenizer::from_corpus(&corpus);
+    let max_seq = 64;
+    let gpt = Arc::new(GptDataset::build(&corpus, &tok, max_seq));
+    let bert = Arc::new(BertDataset::build(&corpus, &tok, max_seq));
+    let acfg = AnalyzerConfig::default();
+    let (gpt_voc, _) = metrics::gpt_voc(&gpt, &tok, &acfg);
+    let gpt_voc = Arc::new(gpt_voc);
+    let (bert_voc, _) = metrics::bert_voc(&bert, &tok, &acfg);
+    let bert_voc = Arc::new(bert_voc);
+    let (bert_reo, _) = metrics::bert_eff_len(&bert, &acfg);
+    let bert_reo = Arc::new(bert_reo);
+
+    let seqtru = ClConfig::new(Metric::SeqTru, Bound::Value(8.0), Bound::Value(64.0), 16);
+    let seqres = ClConfig::new(Metric::SeqRes, Bound::Value(8.0), Bound::Value(64.0), 16);
+    let voc = ClConfig::new(Metric::Voc, Bound::Percentile(0.05), Bound::Percentile(1.0), 16);
+    let seqreo = ClConfig::new(Metric::SeqReo, Bound::Percentile(0.05), Bound::Percentile(1.0), 16);
+
+    let n_gpt = gpt.n_samples();
+    let n_bert = bert.n_samples();
+    let uni = |seed: u64, n: usize| -> Box<dyn Sampler> { Box::new(UniformSampler::new(n, seed)) };
+
+    let mut lines = Vec::new();
+    let mut push = |name: &str, loader: LoaderKind, schedules: &[ClConfig]| {
+        let (ids, ih, bh) = fingerprint(loader, schedules, max_seq);
+        lines.push(render_line(name, &ids, ih, bh));
+    };
+
+    // GPT: plain + every applicable transform (seqtru, seqres, voc, composed)
+    push("gpt/plain", LoaderKind::Gpt(GptLoader::new(gpt.clone(), uni(9, n_gpt), 8)), &[]);
+    push(
+        "gpt/seqtru",
+        LoaderKind::Gpt(GptLoader::new(gpt.clone(), uni(9, n_gpt), 8)),
+        std::slice::from_ref(&seqtru),
+    );
+    push(
+        "gpt/seqres",
+        LoaderKind::Gpt(GptLoader::new(gpt.clone(), uni(9, n_gpt), 8)),
+        std::slice::from_ref(&seqres),
+    );
+    push(
+        "gpt/voc",
+        LoaderKind::Gpt(GptLoader::new(gpt.clone(), Box::new(PoolSampler::new(gpt_voc.clone(), 9)), 8)),
+        std::slice::from_ref(&voc),
+    );
+    push(
+        "gpt/seqtru+voc",
+        LoaderKind::Gpt(GptLoader::new(gpt.clone(), Box::new(PoolSampler::new(gpt_voc, 9)), 8)),
+        &[seqtru.clone(), voc.clone()],
+    );
+
+    // BERT: plain, seqtru, seqreo, voc
+    let mk_bert = |s: Box<dyn Sampler>| LoaderKind::Bert(BertLoader::new(bert.clone(), s, 8, tok.vocab_size, 33));
+    push("bert/plain", mk_bert(uni(21, n_bert)), &[]);
+    push("bert/seqtru", mk_bert(uni(21, n_bert)), std::slice::from_ref(&seqtru));
+    push(
+        "bert/seqreo",
+        mk_bert(Box::new(PoolSampler::new(bert_reo, 21))),
+        std::slice::from_ref(&seqreo),
+    );
+    push("bert/voc", mk_bert(Box::new(PoolSampler::new(bert_voc, 21))), std::slice::from_ref(&voc));
+
+    // ViT (cursor stream)
+    let vit = Arc::new(VitDataset::new(16, 48, 10, 0.4, 3));
+    push("vit/plain", LoaderKind::Vit(VitLoader::new(vit, 8, 0)), &[]);
+
+    lines
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens/streams.txt")
+}
+
+const HEADER: &str = "# dsde golden sampler/batch streams v1\n\
+# One line per (family × CL transform) loader: first 8 sampler ids, total\n\
+# drawn ids over 24 planned batches, FNV-1a hash of the full id stream\n\
+# (incl. BERT mask seeds), and FNV-1a hash of every materialized batch's\n\
+# bytes. Regenerate deliberately with DSDE_UPDATE_GOLDENS=1 and explain\n\
+# the stream movement in the commit message.\n";
+
+#[test]
+fn sampler_and_batch_streams_match_goldens() {
+    let lines = golden_lines();
+    let mut rendered = String::from(HEADER);
+    for l in &lines {
+        let _ = writeln!(rendered, "{l}");
+    }
+    let path = golden_path();
+    let update = std::env::var("DSDE_UPDATE_GOLDENS").map(|v| v == "1").unwrap_or(false);
+    if update || !path.exists() {
+        // A missing golden on GitHub CI means it was never committed — a
+        // silently unarmed regression net. Fail loudly there; everywhere
+        // else (fresh local checkout, toolchain-less sandboxes) bootstrap.
+        assert!(
+            update || std::env::var_os("GITHUB_ACTIONS").is_none(),
+            "tests/goldens/streams.txt is missing on CI — bootstrap it locally \
+             (run this test once, or DSDE_UPDATE_GOLDENS=1) and commit it"
+        );
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &rendered).unwrap();
+        if !update {
+            eprintln!(
+                "golden_streams: bootstrapped {} — COMMIT IT so future runs (and CI) \
+                 compare against it; until committed this net is not armed",
+                path.display()
+            );
+        }
+        // Round-trip the just-written file so the comparison path is
+        // exercised even on the bootstrap run.
+    }
+    let expected = std::fs::read_to_string(&path).unwrap();
+    let expected_lines: Vec<&str> =
+        expected.lines().filter(|l| !l.is_empty() && !l.starts_with('#')).collect();
+    let got_lines: Vec<&str> = lines.iter().map(|s| s.as_str()).collect();
+    assert_eq!(
+        expected_lines.len(),
+        got_lines.len(),
+        "golden case list changed; regenerate with DSDE_UPDATE_GOLDENS=1 if intended"
+    );
+    for (want, got) in expected_lines.iter().zip(&got_lines) {
+        assert_eq!(
+            want, got,
+            "sampler/batch stream drifted from the checked-in golden.\n\
+             If this change is INTENTIONAL (e.g. a deliberate sampler fix),\n\
+             regenerate with DSDE_UPDATE_GOLDENS=1 and justify it in the commit."
+        );
+    }
+}
+
+/// The golden stream must itself be reproducible within a process — two
+/// independent constructions yield identical fingerprints (guards against
+/// accidental global state in loaders/samplers).
+#[test]
+fn golden_lines_are_self_consistent() {
+    assert_eq!(golden_lines(), golden_lines());
+}

@@ -171,3 +171,114 @@ fn prop_seqres_preserves_and_seqtru_reduces_tokens() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// ShardPlan (ISSUE 2 satellite): the data-parallel batch partitioner.
+
+#[test]
+fn prop_shard_plan_is_an_exact_partition() {
+    use dsde::curriculum::loader::ShardPlan;
+    property("shard plan partitions exactly", 32, |rng| {
+        let rows = 1 + rng.gen_range(64) as usize;
+        let n_ranks = 1 + rng.gen_range(rows as u32 + 4) as usize;
+        let plan = ShardPlan::new(rows, n_ranks);
+        if plan.n_ranks() != n_ranks {
+            return Err(format!("rank count {} != {n_ranks}", plan.n_ranks()));
+        }
+        // every global row lands on exactly one rank, in order
+        let mut covered = 0usize;
+        let mut loads = Vec::new();
+        for r in 0..plan.n_ranks() {
+            let range = plan.range(r);
+            if range.start != covered {
+                return Err(format!("rank {r} starts at {} but {covered} rows assigned", range.start));
+            }
+            covered = range.end;
+            loads.push(plan.rows_of(r));
+        }
+        if covered != rows {
+            return Err(format!("{covered} of {rows} rows covered"));
+        }
+        // per-rank loads differ by at most 1
+        let max = *loads.iter().max().unwrap();
+        let min = *loads.iter().min().unwrap();
+        if max - min > 1 {
+            return Err(format!("loads {loads:?} differ by more than 1"));
+        }
+        if plan.imbalance() != max - min {
+            return Err("imbalance() disagrees with loads".into());
+        }
+        // aligned() iff equal power-of-two shards
+        let aligned = rows % n_ranks == 0 && (rows / n_ranks).max(1).is_power_of_two();
+        if plan.aligned() != aligned {
+            return Err(format!("aligned() = {} for rows={rows} ranks={n_ranks}", plan.aligned()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_plan_invariant_to_worker_scheduling() {
+    use dsde::curriculum::loader::ShardPlan;
+    // The plan is a pure function of (rows, n_ranks): constructing it from
+    // many racing threads, in any order, yields identical partitions.
+    property("shard plan scheduling-invariant", 8, |rng| {
+        let rows = 1 + rng.gen_range(32) as usize;
+        let n_ranks = 1 + rng.gen_range(8) as usize;
+        let reference = ShardPlan::new(rows, n_ranks);
+        let plans: Vec<ShardPlan> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| scope.spawn(move || ShardPlan::new(rows, n_ranks)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("no panic")).collect()
+        });
+        for p in plans {
+            if p != reference {
+                return Err("plan depends on construction context".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shard_slices_reassemble_global_batch() {
+    use dsde::curriculum::loader::ShardPlan;
+    let c = Corpus::generate(CorpusConfig { n_docs: 200, seed: 31, ..Default::default() });
+    let t = Tokenizer::from_corpus(&c);
+    let ds = Arc::new(GptDataset::build(&c, &t, 64));
+    let n = ds.n_samples();
+    property("shards reassemble the batch", 8, |rng| {
+        let mut loader = GptLoader::new(
+            ds.clone(),
+            Box::new(UniformSampler::new(n, rng.next_u64())),
+            8,
+        );
+        let seq = [8usize, 16, 32, 64][rng.gen_range(4) as usize];
+        let st = ClState { seq, transform: SeqTransform::Truncate, pool_pct: 1.0 };
+        let b = loader.next_batch(seq, &st);
+        let n_ranks = [1usize, 2, 3, 4, 5, 8][rng.gen_range(6) as usize];
+        let plan = ShardPlan::new(b.rows, n_ranks);
+        let mut tokens = Vec::new();
+        let mut targets = Vec::new();
+        let mut masks = Vec::new();
+        let mut dt = 0u64;
+        for r in 0..plan.n_ranks() {
+            let s = plan.shard_lm(&b, r);
+            if s.rows != plan.rows_of(r) || s.seq != seq {
+                return Err(format!("shard {r} shape {}x{}", s.rows, s.seq));
+            }
+            tokens.extend_from_slice(&s.tokens);
+            targets.extend_from_slice(&s.targets);
+            masks.extend_from_slice(&s.loss_mask);
+            dt += s.data_tokens;
+        }
+        if tokens != b.tokens || targets != b.targets || masks != b.loss_mask {
+            return Err("concatenated shards differ from the global batch".into());
+        }
+        if dt != b.data_tokens {
+            return Err(format!("shard data_tokens sum {dt} != {}", b.data_tokens));
+        }
+        Ok(())
+    });
+}

@@ -15,7 +15,13 @@
 //!   additive logit model; random-LTD / TokenBypass keep-index inputs
 //!   restrict which positions each middle layer processes (so token
 //!   dropping genuinely changes per-layer compute and gradients);
-//! * `*_eval`    — token-weighted loss sums (and ViT top-1 accuracy).
+//! * `*_eval`    — token-weighted loss sums (and ViT top-1 accuracy);
+//! * `*_grad`    — the data-parallel step mode: *unnormalized* gradient
+//!   sums over a shard of the batch, combined with a fixed
+//!   pairwise-adjacent tree over rows (so rank-local sums are exact
+//!   subtrees of the single-rank reduction), plus `[loss_sum, den]`;
+//! * `*_apply`   — divide reduced gradients by the reduced denominator
+//!   and run the shared Adam update on the full optimizer state.
 //!
 //! Everything is single-threaded and bit-deterministic from the inputs.
 
@@ -343,14 +349,19 @@ impl PjRtClient {
         // "Compilation" validates the program shape table once up front.
         let p = &comp.program;
         match p.semantic.as_str() {
-            "lm_init" | "lm_train" | "lm_eval" => {
+            "lm_init" | "lm_train" | "lm_eval" | "lm_grad" => {
                 if p.vocab == 0 || p.n_layers < 3 {
                     return err(format!("{}: bad lm program", p.name));
                 }
             }
-            "vit_init" | "vit_train" | "vit_eval" => {
+            "vit_init" | "vit_train" | "vit_eval" | "vit_grad" => {
                 if p.classes == 0 || p.patch_dim == 0 {
                     return err(format!("{}: bad vit program", p.name));
+                }
+            }
+            "apply" => {
+                if p.n_layers < 3 || (p.vocab == 0 && (p.classes == 0 || p.patch_dim == 0)) {
+                    return err(format!("{}: bad apply program", p.name));
                 }
             }
             s => return err(format!("{}: unknown semantic '{s}'", p.name)),
@@ -416,16 +427,23 @@ impl Rng {
     }
 }
 
+/// ViT-family parameter layout? (The family-agnostic `apply` semantic has
+/// no `vit_` prefix, so fall back on the field that distinguishes the
+/// families: ViT programs carry classes/patch_dim and no vocabulary.)
+fn vit_params(p: &Program) -> bool {
+    p.semantic.starts_with("vit") || (p.vocab == 0 && p.classes > 0)
+}
+
 /// (len, dims) of each parameter tensor, in layout order.
 fn param_shapes(p: &Program) -> Vec<(usize, Vec<i64>)> {
     let l = p.n_layers;
     let mut shapes = Vec::with_capacity(3 * l);
-    let (rows_w, cols_w) = if p.semantic.starts_with("vit") {
+    let (rows_w, cols_w) = if vit_params(p) {
         (p.patch_dim, p.classes)
     } else {
         (p.vocab, p.vocab)
     };
-    let bias = if p.semantic.starts_with("vit") { p.classes } else { p.vocab };
+    let bias = if vit_params(p) { p.classes } else { p.vocab };
     for _ in 0..l {
         shapes.push((rows_w * cols_w, vec![rows_w as i64, cols_w as i64]));
     }
@@ -447,8 +465,11 @@ fn run_program(p: &Program, args: &[&Literal]) -> Result<Literal> {
         "lm_init" | "vit_init" => run_init(p, args),
         "lm_train" => run_lm(p, args, true),
         "lm_eval" => run_lm(p, args, false),
+        "lm_grad" => run_lm_grad(p, args),
         "vit_train" => run_vit(p, args, true),
         "vit_eval" => run_vit(p, args, false),
+        "vit_grad" => run_vit_grad(p, args),
+        "apply" => run_apply(p, args),
         s => err(format!("unknown semantic '{s}'")),
     }
 }
@@ -780,6 +801,311 @@ fn run_lm(p: &Program, args: &[&Literal], train: bool) -> Result<Literal> {
     Ok(Literal::Tuple(out))
 }
 
+// ---- data-parallel grad / apply semantics ---------------------------------
+
+/// One subtree of the per-row gradient reduction: gradient sums for the
+/// W and bias tensors of every layer plus the loss/denominator partials.
+struct GradPart {
+    gw: Vec<Vec<f32>>,
+    gb: Vec<Vec<f32>>,
+    loss: f32,
+    den: f32,
+}
+
+impl GradPart {
+    fn zeros(l: usize, wlen: usize, blen: usize) -> GradPart {
+        GradPart {
+            gw: (0..l).map(|_| vec![0.0; wlen]).collect(),
+            gb: (0..l).map(|_| vec![0.0; blen]).collect(),
+            loss: 0.0,
+            den: 0.0,
+        }
+    }
+
+    fn add(&mut self, o: &GradPart) {
+        for (a, b) in self.gw.iter_mut().zip(&o.gw) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += *y;
+            }
+        }
+        for (a, b) in self.gb.iter_mut().zip(&o.gb) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += *y;
+            }
+        }
+        self.loss += o.loss;
+        self.den += o.den;
+    }
+}
+
+/// Fixed pairwise-adjacent tree fold over per-row partials. This MUST use
+/// the same bracketing as the coordinator's cross-rank reduction
+/// (dsde::runtime::collective::tree_reduce): level by level, adjacent
+/// pairs combined in order, an odd trailing element carried up unchanged.
+/// When shard boundaries align with subtree boundaries (equal shard sizes
+/// that are powers of two), a rank's local fold is an exact subtree of the
+/// single-rank fold — the bit-equivalence invariant of tests/dp_equivalence.
+fn tree_fold(mut parts: Vec<GradPart>) -> GradPart {
+    debug_assert!(!parts.is_empty());
+    while parts.len() > 1 {
+        let mut next = Vec::with_capacity(parts.len().div_ceil(2));
+        let mut it = parts.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                a.add(&b);
+            }
+            next.push(a);
+        }
+        parts = next;
+    }
+    parts.pop().expect("non-empty parts")
+}
+
+/// Emit a reduced GradPart as the grad artifact's output tuple:
+/// per-layer W grads, per-layer bias grads, zero gamma grads (inert in
+/// the surrogate, exactly like the fused train path), then
+/// `[loss_sum, den]`.
+fn grad_outputs(p: &Program, total: GradPart) -> Literal {
+    let shapes = param_shapes(p);
+    let l = p.n_layers;
+    let mut out = Vec::with_capacity(3 * l + 2);
+    for (li, g) in total.gw.into_iter().enumerate() {
+        out.push(Literal::Array { data: Data::F32(g), dims: shapes[li].1.clone() });
+    }
+    for (li, g) in total.gb.into_iter().enumerate() {
+        out.push(Literal::Array { data: Data::F32(g), dims: shapes[l + li].1.clone() });
+    }
+    for li in 0..l {
+        let (len, dims) = &shapes[2 * l + li];
+        out.push(Literal::from_f32(vec![0.0; *len], dims.clone()));
+    }
+    out.push(Literal::scalar(total.loss));
+    out.push(Literal::scalar(total.den));
+    Literal::Tuple(out)
+}
+
+/// LM gradient shard: same forward math as `run_lm`, but gradients are
+/// accumulated per row with coefficient `m` (NOT `m / msum` — the global
+/// denominator is only known after the cross-rank reduction) and combined
+/// with the fixed row tree. Loss and mask-sum partials follow the same
+/// tree so every cross-rank quantity is bit-stable under resharding.
+fn run_lm_grad(p: &Program, args: &[&Literal]) -> Result<Literal> {
+    let np = n_params(p);
+    let l = p.n_layers;
+    let vocab = p.vocab;
+    let n = p.rows * p.seq;
+    let pad = usize::from(p.pad_mask);
+    let dropping = p.mode != "plain";
+    want_args(p, args.len(), np + 3 + pad + usize::from(dropping))?;
+
+    let tokens = i32s(p, args[np], "tokens", n)?;
+    let targets = i32s(p, args[np + 1], "targets", n)?;
+    let mask = f32s(p, args[np + 2], "loss_mask", n)?;
+    let keep_idx = if dropping {
+        let len = if p.mode == "bypass" { p.keep } else { p.n_mid * p.keep };
+        Some(i32s(p, args[np + 3 + pad], "keep_idx", len)?)
+    } else {
+        None
+    };
+    let proc = processed_positions(p, keep_idx)?;
+
+    let w: Vec<&[f32]> = (0..l)
+        .map(|i| f32s(p, args[i], "W", vocab * vocab))
+        .collect::<Result<_>>()?;
+    let b: Vec<&[f32]> = (0..l)
+        .map(|i| f32s(p, args[l + i], "b", vocab))
+        .collect::<Result<_>>()?;
+
+    let mut logits = vec![0.0f32; vocab];
+    let mut probs = vec![0.0f32; vocab];
+    let mut active = vec![true; l];
+    let mut row_parts: Vec<GradPart> = Vec::with_capacity(p.rows);
+
+    for r in 0..p.rows {
+        let mut part = GradPart::zeros(l, vocab * vocab, vocab);
+        let mut row_loss = 0.0f32;
+        for j in 0..p.seq {
+            let pos = r * p.seq + j;
+            let m = mask[pos];
+            part.den += m;
+            if m <= 0.0 {
+                continue;
+            }
+            let x = tokens[pos];
+            let y = targets[pos];
+            if x < 0 || x as usize >= vocab || y < 0 || y as usize >= vocab {
+                return err(format!("{}: token id out of vocabulary at {pos}", p.name));
+            }
+            let (x, y) = (x as usize, y as usize);
+            for (li, a) in active.iter_mut().enumerate() {
+                *a = li == 0 || li == l - 1 || proc[li - 1][j];
+            }
+            for z in logits.iter_mut() {
+                *z = 0.0;
+            }
+            for li in 0..l {
+                if !active[li] {
+                    continue;
+                }
+                let wrow = &w[li][x * vocab..(x + 1) * vocab];
+                let bl = b[li];
+                for v in 0..vocab {
+                    logits[v] += wrow[v] + bl[v];
+                }
+            }
+            let ce = softmax_xent(&logits, y, &mut probs);
+            row_loss += m * ce;
+            for li in 0..l {
+                if !active[li] {
+                    continue;
+                }
+                let grow = &mut part.gw[li][x * vocab..(x + 1) * vocab];
+                let gbl = &mut part.gb[li];
+                for v in 0..vocab {
+                    let mut d = probs[v];
+                    if v == y {
+                        d -= 1.0;
+                    }
+                    let d = d * m;
+                    grow[v] += d;
+                    gbl[v] += d;
+                }
+            }
+        }
+        part.loss = row_loss;
+        row_parts.push(part);
+    }
+    Ok(grad_outputs(p, tree_fold(row_parts)))
+}
+
+/// ViT gradient shard: per-row gradients with coefficient 1 (the global
+/// 1/rows normalization happens in `apply`); `den` counts rows.
+fn run_vit_grad(p: &Program, args: &[&Literal]) -> Result<Literal> {
+    let np = n_params(p);
+    let l = p.n_layers;
+    let classes = p.classes;
+    let pd = p.patch_dim;
+    let n_patches = p.seq - 1;
+    let dropping = p.mode != "plain";
+    want_args(p, args.len(), np + 2 + usize::from(dropping))?;
+
+    let patches = f32s(p, args[np], "patches", p.rows * n_patches * pd)?;
+    let labels = i32s(p, args[np + 1], "labels", p.rows)?;
+    let keep_idx = if dropping {
+        let len = if p.mode == "bypass" { p.keep } else { p.n_mid * p.keep };
+        Some(i32s(p, args[np + 2], "keep_idx", len)?)
+    } else {
+        None
+    };
+    let proc = processed_positions(p, keep_idx)?;
+
+    let w: Vec<&[f32]> = (0..l)
+        .map(|i| f32s(p, args[i], "W", pd * classes))
+        .collect::<Result<_>>()?;
+    let b: Vec<&[f32]> = (0..l)
+        .map(|i| f32s(p, args[l + i], "b", classes))
+        .collect::<Result<_>>()?;
+
+    let mut logits = vec![0.0f32; classes];
+    let mut probs = vec![0.0f32; classes];
+    let mut h = vec![vec![0.0f32; pd]; l];
+    let mut row_parts: Vec<GradPart> = Vec::with_capacity(p.rows);
+
+    for r in 0..p.rows {
+        let mut part = GradPart::zeros(l, pd * classes, classes);
+        let y = labels[r];
+        if y < 0 || y as usize >= classes {
+            return err(format!("{}: label out of range in row {r}", p.name));
+        }
+        let y = y as usize;
+        let row = &patches[r * n_patches * pd..(r + 1) * n_patches * pd];
+        for li in 0..l {
+            let hl = &mut h[li];
+            for v in hl.iter_mut() {
+                *v = 0.0;
+            }
+            let mut count = 0usize;
+            for j in 0..p.seq {
+                let processed = li == 0 || li == l - 1 || proc[li - 1][j];
+                if !processed {
+                    continue;
+                }
+                count += 1;
+                if j == 0 {
+                    continue; // class token: zero feature
+                }
+                let pv = &row[(j - 1) * pd..j * pd];
+                for (hv, &x) in hl.iter_mut().zip(pv) {
+                    *hv += x;
+                }
+            }
+            let denom = count.max(1) as f32;
+            for hv in hl.iter_mut() {
+                *hv /= denom;
+            }
+        }
+        for z in logits.iter_mut() {
+            *z = 0.0;
+        }
+        for li in 0..l {
+            let hl = &h[li];
+            let wl = w[li];
+            let bl = b[li];
+            for c in 0..classes {
+                let mut z = bl[c];
+                for (d, &hv) in hl.iter().enumerate() {
+                    z += hv * wl[d * classes + c];
+                }
+                logits[c] += z;
+            }
+        }
+        let ce = softmax_xent(&logits, y, &mut probs);
+        part.loss = ce;
+        part.den = 1.0;
+        for li in 0..l {
+            let hl = &h[li];
+            let gwl = &mut part.gw[li];
+            let gbl = &mut part.gb[li];
+            for c in 0..classes {
+                let mut d = probs[c];
+                if c == y {
+                    d -= 1.0;
+                }
+                gbl[c] += d;
+                for (dd, &hv) in hl.iter().enumerate() {
+                    gwl[dd * classes + c] += hv * d;
+                }
+            }
+        }
+        row_parts.push(part);
+    }
+    Ok(grad_outputs(p, tree_fold(row_parts)))
+}
+
+/// The shared optimizer step of the replica engine: normalize the reduced
+/// gradients by the reduced denominator and apply Adam to the full state.
+/// Inputs: `3·np` state + `[t, lr, den]` + `np` gradient tensors;
+/// outputs: `3·np` state + `gnorm`. The gamma gradients arrive as zeros,
+/// so gammas (and their moments) pass through numerically unchanged —
+/// matching the fused train path's inert gamma handling.
+fn run_apply(p: &Program, args: &[&Literal]) -> Result<Literal> {
+    let np = n_params(p);
+    want_args(p, args.len(), 3 * np + 3 + np)?;
+    let t = scalar_f32(p, args[3 * np], "t")?;
+    let lr = scalar_f32(p, args[3 * np + 1], "lr")?;
+    let den = scalar_f32(p, args[3 * np + 2], "den")?.max(1.0);
+    let shapes = param_shapes(p);
+    let mut grads: Vec<Option<Vec<f32>>> = Vec::with_capacity(np);
+    for ti in 0..np {
+        let g = f32s(p, args[3 * np + 3 + ti], "grad", shapes[ti].0)?;
+        grads.push(Some(g.iter().map(|x| x / den).collect()));
+    }
+    let adam = adam_update(p, args, &grads, t, lr)?;
+    let mut out = adam.state;
+    out.push(Literal::scalar(adam.gnorm));
+    Ok(Literal::Tuple(out))
+}
+
 // ---- ViT semantics --------------------------------------------------------
 
 /// ViT surrogate: per-layer mean-pooled linear classifier.
@@ -1059,6 +1385,192 @@ mod tests {
         assert_eq!(out.len(), 39);
         let loss = out[36].get_first_element::<f32>().unwrap();
         assert!(loss.is_finite() && loss > 0.0);
+    }
+
+    /// Cross-rank tree reduce for the tests: pairwise-adjacent, the same
+    /// bracketing as `tree_fold` / dsde::runtime::collective::tree_reduce.
+    fn reduce_outputs(mut ranks: Vec<Vec<Literal>>) -> Vec<Literal> {
+        while ranks.len() > 1 {
+            let mut next = Vec::new();
+            let mut it = ranks.into_iter();
+            while let Some(mut a) = it.next() {
+                if let Some(b) = it.next() {
+                    for (x, y) in a.iter_mut().zip(&b) {
+                        let mut xv = x.to_vec::<f32>().unwrap();
+                        let yv = y.to_vec::<f32>().unwrap();
+                        for (xi, yi) in xv.iter_mut().zip(&yv) {
+                            *xi += *yi;
+                        }
+                        let dims = x.array_shape().unwrap().dims().to_vec();
+                        *x = Literal::from_f32(xv, dims);
+                    }
+                }
+                next.push(a);
+            }
+            ranks = next;
+        }
+        ranks.pop().unwrap()
+    }
+
+    fn bits(lits: &[Literal]) -> Vec<Vec<u32>> {
+        lits.iter()
+            .map(|l| l.to_vec::<f32>().unwrap().iter().map(|x| x.to_bits()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn lm_grad_shards_tree_reduce_bit_identical() {
+        // The dp-equivalence invariant at interpreter level: a full-batch
+        // grad equals the tree-reduction of aligned shard grads, bitwise.
+        let mut pfull = lm_program("plain", 4);
+        pfull.semantic = "lm_grad".into();
+        pfull.rows = 8;
+        let params: Vec<Literal> = init_state(&pfull, 5).into_iter().take(12).collect();
+        let n = pfull.rows * pfull.seq;
+        let tokens: Vec<i32> = (0..n as i32).map(|i| (i * 7 + 3) % 16).collect();
+        let targets: Vec<i32> = (0..n as i32).map(|i| (i * 5 + 1) % 16).collect();
+        let mask: Vec<f32> = (0..n).map(|i| if i % 5 == 0 { 0.0 } else { 1.0 }).collect();
+
+        let run_rows = |row0: usize, rows: usize| -> Vec<Literal> {
+            let mut p = pfull.clone();
+            p.rows = rows;
+            let m = rows * p.seq;
+            let t = Literal::vec1(&tokens[row0 * p.seq..row0 * p.seq + m]);
+            let g = Literal::vec1(&targets[row0 * p.seq..row0 * p.seq + m]);
+            let mk = Literal::vec1(&mask[row0 * p.seq..row0 * p.seq + m]);
+            let mut args: Vec<&Literal> = params.iter().collect();
+            args.push(&t);
+            args.push(&g);
+            args.push(&mk);
+            run_lm_grad(&p, &args).unwrap().to_tuple().unwrap()
+        };
+
+        let full = run_rows(0, 8);
+        assert_eq!(full.len(), 14, "12 grads + loss_sum + den");
+        for n_ranks in [2usize, 4, 8] {
+            let s = 8 / n_ranks;
+            let shards: Vec<Vec<Literal>> =
+                (0..n_ranks).map(|r| run_rows(r * s, s)).collect();
+            let combined = reduce_outputs(shards);
+            assert_eq!(
+                bits(&full),
+                bits(&combined),
+                "lm grad not bit-identical at {n_ranks} ranks"
+            );
+        }
+        // den = mask sum, loss positive
+        let den = full[13].get_first_element::<f32>().unwrap();
+        assert_eq!(den, mask.iter().sum::<f32>());
+        assert!(full[12].get_first_element::<f32>().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn lm_grad_ltd_mode_restricts_middle_layers() {
+        let mut p = lm_program("ltd", 2);
+        p.semantic = "lm_grad".into();
+        let params: Vec<Literal> = init_state(&p, 2).into_iter().take(12).collect();
+        let n = p.rows * p.seq;
+        let tokens = Literal::vec1(&vec![5i32; n]);
+        let targets = Literal::vec1(&vec![6i32; n]);
+        let mask = Literal::vec1(&vec![1.0f32; n]);
+        let keep = Literal::vec1(&[0i32, 1, 2, 3]).reshape(&[2, 2]).unwrap();
+        let mut args: Vec<&Literal> = params.iter().collect();
+        args.push(&tokens);
+        args.push(&targets);
+        args.push(&mask);
+        args.push(&keep);
+        let out = run_lm_grad(&p, &args).unwrap().to_tuple().unwrap();
+        assert_eq!(out.len(), 14);
+        // middle layer 1 (W index 1) only processed positions {0,1}: its
+        // gradient restricted to rows of W for token 5 still nonzero, but
+        // overall must differ from the always-active first layer's.
+        assert_ne!(bits(&out[0..1]), bits(&out[1..2]));
+    }
+
+    #[test]
+    fn vit_grad_shards_tree_reduce_bit_identical() {
+        let p = Program {
+            name: "test_vit_grad".into(),
+            semantic: "vit_grad".into(),
+            vocab: 0,
+            d_model: 8,
+            n_layers: 4,
+            n_mid: 2,
+            rows: 4,
+            seq: 5,
+            keep: 5,
+            mode: "plain".into(),
+            pad_mask: false,
+            classes: 3,
+            patch_dim: 6,
+            gain: 16.0,
+        };
+        let params: Vec<Literal> = init_state(&p, 3).into_iter().take(12).collect();
+        let n_patches = p.seq - 1;
+        let patches: Vec<f32> = (0..p.rows * n_patches * p.patch_dim)
+            .map(|i| ((i % 11) as f32 - 5.0) * 0.13)
+            .collect();
+        let labels = [0i32, 1, 2, 0];
+        let run_rows = |row0: usize, rows: usize| -> Vec<Literal> {
+            let mut sp = p.clone();
+            sp.rows = rows;
+            let stride = n_patches * sp.patch_dim;
+            let pv = Literal::vec1(&patches[row0 * stride..(row0 + rows) * stride]);
+            let lv = Literal::vec1(&labels[row0..row0 + rows]);
+            let mut args: Vec<&Literal> = params.iter().collect();
+            args.push(&pv);
+            args.push(&lv);
+            run_vit_grad(&sp, &args).unwrap().to_tuple().unwrap()
+        };
+        let full = run_rows(0, 4);
+        for n_ranks in [2usize, 4] {
+            let s = 4 / n_ranks;
+            let shards: Vec<Vec<Literal>> =
+                (0..n_ranks).map(|r| run_rows(r * s, s)).collect();
+            assert_eq!(
+                bits(&full),
+                bits(&reduce_outputs(shards)),
+                "vit grad not bit-identical at {n_ranks} ranks"
+            );
+        }
+        assert_eq!(full[13].get_first_element::<f32>().unwrap(), 4.0, "den counts rows");
+    }
+
+    #[test]
+    fn apply_consumes_reduced_grads_and_keeps_gamma_inert() {
+        let mut p = lm_program("plain", 4);
+        p.semantic = "lm_grad".into();
+        let state = init_state(&p, 9);
+        let params: Vec<Literal> = state.iter().take(12).cloned().collect();
+        let n = p.rows * p.seq;
+        let tokens = Literal::vec1(&(0..n as i32).map(|i| i % 16).collect::<Vec<_>>());
+        let targets = Literal::vec1(&(0..n as i32).map(|i| (i + 2) % 16).collect::<Vec<_>>());
+        let mask = Literal::vec1(&vec![1.0f32; n]);
+        let mut args: Vec<&Literal> = params.iter().collect();
+        args.push(&tokens);
+        args.push(&targets);
+        args.push(&mask);
+        let gout = run_lm_grad(&p, &args).unwrap().to_tuple().unwrap();
+        let den = gout[13].clone();
+        let grads: Vec<Literal> = gout.into_iter().take(12).collect();
+
+        let mut ap = p.clone();
+        ap.semantic = "apply".into();
+        let t = Literal::scalar(1.0f32);
+        let lr = Literal::scalar(5e-3f32);
+        let mut aargs: Vec<&Literal> = state.iter().collect();
+        aargs.push(&t);
+        aargs.push(&lr);
+        aargs.push(&den);
+        aargs.extend(grads.iter());
+        let out = run_apply(&ap, &aargs).unwrap().to_tuple().unwrap();
+        assert_eq!(out.len(), 37, "36 state + gnorm");
+        let gnorm = out[36].get_first_element::<f32>().unwrap();
+        assert!(gnorm.is_finite() && gnorm > 0.0);
+        // W0 moved, gamma (tensor 8..12) and its moments unchanged
+        assert_ne!(bits(&state[0..1]), bits(&out[0..1]));
+        assert_eq!(bits(&state[8..12]), bits(&out[8..12]));
+        assert_eq!(bits(&state[20..24]), bits(&out[20..24]));
     }
 
     #[test]
