@@ -28,18 +28,25 @@ fn main() -> dsde::Result<()> {
     let rt = Runtime::open_default()?;
     let fam = rt.registry.family("gpt")?.clone();
 
-    // ---- compile times (cold)
-    let mut compile_table = Table::new(&["artifact", "compile s", "hlo KiB"]);
-    for name in ["gpt_train_s64_full", "gpt_train_s64_ltd32", "gpt_train_s8_full", "gpt_eval_s64"] {
+    // ---- compile times (cold JIT specialization; includes an off-grid
+    // point the static artifact set never carried)
+    let mut compile_table = Table::new(&["artifact", "compile ms", "module B"]);
+    for name in [
+        "gpt_train_s64_full",
+        "gpt_train_s64_ltd32",
+        "gpt_train_s8_full",
+        "gpt_eval_s64",
+        "gpt_train_s20_ltd7", // off-grid: synthesized on demand
+    ] {
         let step = rt.step(name)?;
-        let size = std::fs::metadata(rt.registry.hlo_path(name)?)?.len() / 1024;
+        let size = rt.registry.module_text(&step.info)?.len();
         compile_table.row(vec![
             name.to_string(),
-            format!("{:.2}", step.compile_secs),
+            format!("{:.3}", step.compile_secs * 1e3),
             size.to_string(),
         ]);
     }
-    println!("\ncold compile cost (cached afterwards):");
+    println!("\ncold synthesize+compile cost (LRU-cached afterwards):");
     compile_table.print();
 
     // ---- data plumbing
@@ -209,6 +216,69 @@ fn main() -> dsde::Result<()> {
         hidden * 100.0,
         sync.loader_stall_secs * 1e3,
         pre.loader_stall_secs * 1e3
+    );
+
+    // ---- JIT specialization cache: cold-compile volume, hit rate, and
+    // prewarm effectiveness. Exact dispatch on the composed GPT schedule
+    // is the most specialization-heavy workload we have (every curriculum
+    // seq/keep point compiles its own program); running it with the
+    // background prewarmer off vs on shows how much compile time lands on
+    // the step loop ("stall") vs hides behind it.
+    let jit_steps = scaled(80, 24);
+    let base = dsde::exp::cases::exact_dispatch_cases(jit_steps, fam.max_seq, 7)
+        .into_iter()
+        .next()
+        .expect("exact case");
+    env.rt.clear_cache();
+    let r_off = env.run({
+        let mut c = base.clone();
+        c.prewarm = false;
+        c.label = "prewarm-off".into();
+        c
+    })?;
+    env.rt.clear_cache();
+    let r_on = env.run({
+        let mut c = base;
+        c.label = "prewarm-on".into();
+        c
+    })?;
+    let mut jt = Table::new(&[
+        "prewarm", "inline compiles", "prewarmed", "compile stall ms", "hit rate",
+    ]);
+    for r in [&r_off, &r_on] {
+        let lookups = (r.cache_hits + r.cache_misses).max(1);
+        jt.row(vec![
+            r.label.clone(),
+            r.cache_misses.to_string(),
+            r.prewarmed_compiles.to_string(),
+            format!("{:.3}", r.compile_stall_secs * 1e3),
+            format!("{:.1}%", r.cache_hits as f64 / lookups as f64 * 100.0),
+        ]);
+    }
+    println!("\nJIT specialization cache ({jit_steps} exact-dispatch gpt steps):");
+    jt.print();
+    jt.save_csv("runtime_overhead_jit")?;
+    let stats = env.rt.cache_stats();
+    println!(
+        "  cumulative: {} hits / {} misses ({:.0}% hit rate), {} prewarmed, \
+         {:.1}ms inline + {:.1}ms background compile",
+        stats.hits,
+        stats.misses,
+        stats.hit_rate() * 100.0,
+        stats.prewarmed,
+        stats.inline_compile_secs * 1e3,
+        stats.prewarm_compile_secs * 1e3
+    );
+    println!(
+        "  [{}] prewarm keeps compile off the step loop (stall {:.3}ms with prewarm \
+         vs {:.3}ms without)",
+        if r_on.compile_stall_secs <= r_off.compile_stall_secs + 0.005 {
+            "PASS"
+        } else {
+            "FAIL"
+        },
+        r_on.compile_stall_secs * 1e3,
+        r_off.compile_stall_secs * 1e3
     );
     Ok(())
 }

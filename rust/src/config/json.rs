@@ -105,6 +105,59 @@ impl Json {
         s
     }
 
+    /// Pretty serialization matching Python's
+    /// `json.dump(v, indent=1, sort_keys=True)` byte for byte (object keys
+    /// are already sorted: `Json::Obj` is a `BTreeMap`). Used to emit
+    /// `rust/artifacts/manifest.json` so the Python cross-check harness
+    /// can diff the Rust-emitted registry verbatim.
+    pub fn to_string_python_pretty(&self) -> String {
+        let mut s = String::new();
+        self.write_pretty(&mut s, 0);
+        s
+    }
+
+    fn write_pretty(&self, out: &mut String, level: usize) {
+        match self {
+            Json::Arr(a) if !a.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    for _ in 0..=level {
+                        out.push(' ');
+                    }
+                    v.write_pretty(out, level + 1);
+                }
+                out.push('\n');
+                for _ in 0..level {
+                    out.push(' ');
+                }
+                out.push(']');
+            }
+            Json::Obj(o) if !o.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(",\n");
+                    }
+                    for _ in 0..=level {
+                        out.push(' ');
+                    }
+                    write_escaped(k, out);
+                    out.push_str(": ");
+                    v.write_pretty(out, level + 1);
+                }
+                out.push('\n');
+                for _ in 0..level {
+                    out.push(' ');
+                }
+                out.push('}');
+            }
+            v => v.write(out),
+        }
+    }
+
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),

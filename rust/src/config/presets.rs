@@ -88,12 +88,27 @@ pub fn vit_finetune(total_steps: u64, peak_lr: f64) -> RunConfig {
 
 /// Look up a preset by name (CLI `--preset`). A `@dpN` suffix runs the
 /// preset on the data-parallel replica engine with `N` ranks
-/// (e.g. `gpt-pretrain@dp4`).
+/// (e.g. `gpt-pretrain@dp4`); an `@exact` suffix switches variant
+/// dispatch to the JIT-specializing exact policy (e.g.
+/// `gpt-pretrain@dp3@exact` — an off-grid replica width). Suffixes
+/// compose in any order.
 pub fn by_name(name: &str, total_steps: u64, peak_lr: f64, max_seq: usize) -> Option<RunConfig> {
-    let (base, n_replicas) = match name.split_once("@dp") {
-        Some((b, n)) => (b, n.parse::<usize>().ok()?),
-        None => (name, 0),
-    };
+    let mut base = name;
+    let mut n_replicas = 0usize;
+    let mut dispatch = DispatchPolicy::Bucket;
+    loop {
+        if let Some(b) = base.strip_suffix("@exact") {
+            dispatch = DispatchPolicy::Exact;
+            base = b;
+            continue;
+        }
+        if let Some((b, n)) = base.rsplit_once("@dp") {
+            n_replicas = n.parse::<usize>().ok()?;
+            base = b;
+            continue;
+        }
+        break;
+    }
     let mut c = match base {
         "gpt-pretrain" => gpt_pretrain(total_steps, peak_lr, max_seq),
         "bert-pretrain" => bert_pretrain(total_steps, peak_lr, max_seq),
@@ -102,6 +117,7 @@ pub fn by_name(name: &str, total_steps: u64, peak_lr: f64, max_seq: usize) -> Op
         _ => return None,
     };
     c.n_replicas = n_replicas;
+    c.dispatch = dispatch;
     Some(c)
 }
 
@@ -152,5 +168,21 @@ mod tests {
         assert_eq!(by_name("gpt-pretrain", 10, 1e-3, 64).unwrap().n_replicas, 0);
         assert!(by_name("gpt-pretrain@dpx", 10, 1e-3, 64).is_none());
         assert!(by_name("nope@dp2", 10, 1e-3, 64).is_none());
+    }
+
+    #[test]
+    fn by_name_exact_suffix_composes() {
+        let c = by_name("gpt-pretrain@exact", 10, 1e-3, 64).unwrap();
+        assert_eq!(c.dispatch, DispatchPolicy::Exact);
+        assert_eq!(c.n_replicas, 0);
+        for name in ["gpt-pretrain@dp3@exact", "gpt-pretrain@exact@dp3"] {
+            let c = by_name(name, 10, 1e-3, 64).unwrap();
+            assert_eq!((c.n_replicas, c.dispatch), (3, DispatchPolicy::Exact));
+        }
+        assert_eq!(
+            by_name("gpt-pretrain", 10, 1e-3, 64).unwrap().dispatch,
+            DispatchPolicy::Bucket
+        );
+        assert!(by_name("nope@exact", 10, 1e-3, 64).is_none());
     }
 }

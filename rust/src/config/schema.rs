@@ -246,6 +246,39 @@ impl PipelineConfig {
     }
 }
 
+/// How requested (seq, keep, shard-width) points map to compiled
+/// programs (see `runtime::artifacts`).
+///
+/// * `Bucket` (default) — round up to the legacy variant grid: the
+///   curriculum never gets a shorter sequence or more dropping than it
+///   asked for, and golden streams are unchanged.
+/// * `Exact` — JIT-specialize the requested point verbatim: arbitrary
+///   sequence lengths, keep ratios and replica widths, at the cost of the
+///   grid's bit-equivalence guarantees for uneven shards.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    #[default]
+    Bucket,
+    Exact,
+}
+
+impl DispatchPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchPolicy::Bucket => "bucket",
+            DispatchPolicy::Exact => "exact",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<DispatchPolicy> {
+        Ok(match s {
+            "bucket" => DispatchPolicy::Bucket,
+            "exact" => DispatchPolicy::Exact,
+            _ => bail!("unknown dispatch policy '{s}' (bucket | exact)"),
+        })
+    }
+}
+
 /// A full training run description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -273,6 +306,13 @@ pub struct RunConfig {
     /// reference; any `n` dividing the family batch is bit-identical to it
     /// (`tests/dp_equivalence.rs`).
     pub n_replicas: usize,
+    /// How requested shapes map to compiled programs (`bucket` = legacy
+    /// grid round-up, `exact` = JIT-specialize the request verbatim).
+    pub dispatch: DispatchPolicy,
+    /// Compile upcoming specializations on the runtime's background
+    /// thread (results are bit-identical either way; off = compile
+    /// inline on first dispatch, visible as `compile_stall_secs`).
+    pub prewarm: bool,
     /// Human-readable case label for tables/logs.
     pub label: String,
 }
@@ -290,6 +330,8 @@ impl RunConfig {
             eval_batches: 8,
             pipeline: PipelineConfig::default(),
             n_replicas: 0,
+            dispatch: DispatchPolicy::Bucket,
+            prewarm: true,
             label: "baseline".to_string(),
         }
     }
@@ -354,8 +396,13 @@ impl RunConfig {
         } else {
             parts.join("+")
         };
-        if self.n_replicas > 0 {
+        let base = if self.n_replicas > 0 {
             format!("{base}@dp{}", self.n_replicas)
+        } else {
+            base
+        };
+        if self.dispatch == DispatchPolicy::Exact {
+            format!("{base}@exact")
         } else {
             base
         }
@@ -424,6 +471,8 @@ impl RunConfig {
             ("seed", (self.seed as usize).into()),
             ("total_steps", (self.total_steps as usize).into()),
             ("n_replicas", self.n_replicas.into()),
+            ("dispatch", self.dispatch.name().into()),
+            ("prewarm", self.prewarm.into()),
             ("curriculum", Json::Arr(cl)),
             ("routing", routing),
             (
@@ -473,6 +522,12 @@ pub fn run_config_from_json(v: &Json, default_family: &str) -> Result<RunConfig>
     }
     if let Some(nr) = v.get("n_replicas").as_usize() {
         cfg.n_replicas = nr;
+    }
+    if let Some(d) = v.get("dispatch").as_str() {
+        cfg.dispatch = DispatchPolicy::from_name(d)?;
+    }
+    if let Some(p) = v.get("prewarm").as_bool() {
+        cfg.prewarm = p;
     }
     if let Some(arr) = v.get("curriculum").as_arr() {
         for c in arr {
@@ -644,6 +699,28 @@ mod tests {
         assert_eq!(run_config_from_json(&j, "gpt").unwrap().n_replicas, 0);
         c.n_replicas = 65;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn dispatch_and_prewarm_roundtrip() {
+        let mut c = RunConfig::baseline("gpt", 50, 1e-3);
+        assert_eq!(c.dispatch, DispatchPolicy::Bucket, "bucket by default");
+        assert!(c.prewarm, "prewarm on by default");
+        assert_eq!(c.case_name(), "baseline");
+        c.dispatch = DispatchPolicy::Exact;
+        c.prewarm = false;
+        c.n_replicas = 3;
+        assert_eq!(c.case_name(), "baseline@dp3@exact");
+        let j = c.to_json();
+        let c2 = run_config_from_json(&j, "gpt").unwrap();
+        assert_eq!(c2.dispatch, DispatchPolicy::Exact);
+        assert!(!c2.prewarm);
+        // configs without the keys keep the defaults
+        let j = Json::parse(r#"{"total_steps": 5}"#).unwrap();
+        let c3 = run_config_from_json(&j, "gpt").unwrap();
+        assert_eq!(c3.dispatch, DispatchPolicy::Bucket);
+        assert!(c3.prewarm);
+        assert!(DispatchPolicy::from_name("bogus").is_err());
     }
 
     #[test]

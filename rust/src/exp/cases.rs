@@ -231,6 +231,28 @@ pub fn dp_scaling_cases(steps: u64, max_seq: usize, seed: u64, replicas: &[usize
         .collect()
 }
 
+/// Off-grid specialization cases (`exact` dispatch): the composed GPT
+/// schedule routed verbatim — curriculum sequence lengths that hit no
+/// bucket run exactly as requested — plus an uneven 3-replica variant the
+/// static grid structurally could not serve (no power-of-two shard
+/// width). Used by `tests/exact_dispatch.rs` and the runtime_overhead
+/// bench's JIT section.
+pub fn exact_dispatch_cases(steps: u64, max_seq: usize, seed: u64) -> Vec<RunConfig> {
+    let t_c = (steps as f64 * 0.40) as u64;
+    let mk = |label: &str, n_replicas: usize| {
+        let mut c = gpt_case(label, steps, 1.0, seed);
+        c.curriculum.push(seqtru(max_seq, t_c));
+        c.routing = Routing::RandomLtd(LtdConfig::mslg(
+            max_seq / 4,
+            (steps as f64 * 0.70) as u64,
+        ));
+        c.dispatch = DispatchPolicy::Exact;
+        c.n_replicas = n_replicas;
+        c
+    };
+    vec![mk("exact-composed", 0), mk("exact-composed-dp3", 3)]
+}
+
 /// Fig. 2 sweep: (fraction, baseline cfg, composed cfg) per budget point.
 pub fn fig2_pairs(full_steps: u64, max_seq: usize, seed: u64, fractions: &[f64]) -> Vec<(f64, RunConfig, RunConfig)> {
     fractions
@@ -311,6 +333,19 @@ mod tests {
             assert_eq!(c.curriculum.len(), 2);
             assert!(matches!(c.routing, Routing::RandomLtd(_)));
         }
+    }
+
+    #[test]
+    fn exact_dispatch_cases_structure() {
+        let cases = exact_dispatch_cases(100, 64, 3);
+        assert_eq!(cases.len(), 2);
+        for c in &cases {
+            c.validate().unwrap();
+            assert_eq!(c.dispatch, DispatchPolicy::Exact);
+        }
+        assert_eq!(cases[0].n_replicas, 0);
+        assert_eq!(cases[1].n_replicas, 3, "off-grid replica width");
+        assert!(cases[1].case_name().ends_with("@dp3@exact"));
     }
 
     #[test]

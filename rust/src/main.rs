@@ -9,10 +9,16 @@
 //!                                   mmap index under runs/
 //! dsde train [--preset P] [--family F] [--steps N] [--lr X] [--seed S]
 //!            [--config FILE] [--eval-every K] [--replicas N]
+//!            [--dispatch bucket|exact] [--no-prewarm]
 //!                                   run one training; prints the curve
 //!                                   (--replicas N: data-parallel replica
-//!                                   engine; 0 = fused single step)
+//!                                   engine; 0 = fused single step;
+//!                                   --dispatch exact: JIT-specialize the
+//!                                   requested shapes verbatim)
 //! dsde pareto [--steps N]           quick Fig.2-style sweep (3 budgets)
+//! dsde synth --out DIR              emit manifest.json + the legacy
+//!                                   surrogate module grid (cross-check
+//!                                   target for gen_stub_artifacts.py)
 //! ```
 
 use anyhow::{anyhow, bail};
@@ -40,7 +46,7 @@ fn main() {
 const VALUE_KEYS: &[&str] = &[
     "docs", "workers", "metric", "preset", "family", "steps", "lr", "seed",
     "config", "eval-every", "out", "prefetch-depth", "loader-workers",
-    "replicas",
+    "replicas", "dispatch",
 ];
 
 fn run(argv: &[String]) -> dsde::Result<()> {
@@ -51,7 +57,10 @@ fn run(argv: &[String]) -> dsde::Result<()> {
         Some("analyze") => analyze(&args),
         Some("train") => train(&args),
         Some("pareto") => pareto(&args),
-        Some(cmd) => bail!("unknown command '{cmd}' (try: info, roofline, analyze, train, pareto)"),
+        Some("synth") => synth(&args),
+        Some(cmd) => {
+            bail!("unknown command '{cmd}' (try: info, roofline, analyze, train, pareto, synth)")
+        }
         None => {
             println!("{}", HELP);
             Ok(())
@@ -60,11 +69,11 @@ fn run(argv: &[String]) -> dsde::Result<()> {
 }
 
 const HELP: &str = "dsde — DeepSpeed Data Efficiency reproduction
-commands: info | roofline | analyze | train | pareto   (see README.md)";
+commands: info | roofline | analyze | train | pareto | synth   (see README.md)";
 
 fn info() -> dsde::Result<()> {
     let rt = dsde::runtime::Runtime::open_default()?;
-    println!("artifacts dir: {}", rt.registry.dir.display());
+    println!("registry: in-process synthesis (legacy grid + JIT specialization)");
     println!("families:");
     for (name, f) in &rt.registry.families {
         println!(
@@ -73,8 +82,8 @@ fn info() -> dsde::Result<()> {
             f.n_experts, f.n_classes
         );
     }
-    println!("artifacts: {}", rt.registry.artifacts.len());
-    for (name, a) in &rt.registry.artifacts {
+    println!("legacy grid: {} points (any off-grid point JIT-specializes)", rt.registry.grid.len());
+    for (name, a) in &rt.registry.grid {
         println!(
             "  {name:<28} kind={:<5} seq={:<3} keep={:<3} in={} out={}",
             a.kind,
@@ -179,14 +188,23 @@ fn train(args: &Args) -> dsde::Result<()> {
     cfg.pipeline.n_loader_workers =
         args.get_u64("loader-workers", cfg.pipeline.n_loader_workers as u64)? as usize;
     cfg.n_replicas = args.get_u64("replicas", cfg.n_replicas as u64)? as usize;
+    if let Some(d) = args.get("dispatch") {
+        cfg.dispatch = dsde::config::schema::DispatchPolicy::from_name(d)?;
+    }
+    if args.flag("no-prewarm") {
+        cfg.prewarm = false;
+    }
     println!(
-        "case: {} on {} for {} steps (pipeline: depth {}, {} workers; replicas: {})",
+        "case: {} on {} for {} steps (pipeline: depth {}, {} workers; replicas: {}; \
+         dispatch: {}{})",
         cfg.case_name(),
         cfg.family,
         cfg.total_steps,
         cfg.pipeline.prefetch_depth,
         cfg.pipeline.n_loader_workers,
-        if cfg.n_replicas == 0 { "fused".to_string() } else { cfg.n_replicas.to_string() }
+        if cfg.n_replicas == 0 { "fused".to_string() } else { cfg.n_replicas.to_string() },
+        cfg.dispatch.name(),
+        if cfg.prewarm { "" } else { ", prewarm off" }
     );
     let env = TrainEnv::new(args.get_u64("docs", 1000)? as usize, 7)?;
     let r = env.run(cfg)?;
@@ -217,6 +235,13 @@ fn train(args: &Args) -> dsde::Result<()> {
         r.loader_stall_secs * 1e3,
         r.loader_hidden_fraction() * 100.0
     );
+    println!(
+        "jit cache: {} hits / {} misses, {} prewarmed, compile stall {:.1}ms",
+        r.cache_hits,
+        r.cache_misses,
+        r.prewarmed_compiles,
+        r.compile_stall_secs * 1e3
+    );
     if r.n_replicas > 0 {
         println!(
             "replicas: {} ranks, all-reduce {:.1}ms total, rank imbalance {:.0}%, state hash {:016x}",
@@ -230,6 +255,25 @@ fn train(args: &Args) -> dsde::Result<()> {
         println!("accuracy: {:.1}%", acc * 100.0);
     }
     println!("dispatch: {:?}", r.dispatch);
+    Ok(())
+}
+
+/// Emit the legacy artifact set (manifest + surrogate module texts) to a
+/// directory — the byte-level target `python/compile/gen_stub_artifacts.py
+/// --check` diffs the Python generator against (CI cross-check).
+fn synth(args: &Args) -> dsde::Result<()> {
+    let out = std::path::PathBuf::from(
+        args.get("out").ok_or_else(|| anyhow!("synth requires --out DIR"))?,
+    );
+    std::fs::create_dir_all(&out)?;
+    let registry = dsde::runtime::Registry::builtin()?;
+    std::fs::write(out.join("manifest.json"), registry.manifest_text()?)?;
+    let mut n = 0;
+    for info in registry.grid.values() {
+        std::fs::write(out.join(&info.file), registry.module_text(info)?)?;
+        n += 1;
+    }
+    println!("wrote {n} surrogate modules + manifest.json -> {}", out.display());
     Ok(())
 }
 

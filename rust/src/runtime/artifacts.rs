@@ -1,30 +1,35 @@
-//! Artifact registry: parses `artifacts/manifest.json` (written by the
-//! Python AOT pass) and routes each training step to the right compiled
-//! variant — the bucketed-dispatch decision at the heart of the L3
-//! coordinator (DESIGN.md §Why a variant grid).
+//! Specializing artifact registry: the routing layer between requested
+//! training shapes and synthesized surrogate programs.
+//!
+//! Historically this parsed `artifacts/manifest.json` (written by the
+//! Python AOT pass) and could only dispatch to the pre-committed variant
+//! grid. Program construction now lives in-process
+//! ([`crate::runtime::synth`]), so the registry's job is *policy*, not
+//! inventory:
+//!
+//! * [`DispatchPolicy::Bucket`] (default) — route to the legacy grid
+//!   exactly as before: sequence rounds **up** to the nearest bucket,
+//!   keep rounds **up** (drop fewer tokens than asked, never more), plain
+//!   fallback when no dropping variant exists. Golden streams are
+//!   unchanged under this policy.
+//! * [`DispatchPolicy::Exact`] — return the requested point verbatim; the
+//!   runtime JIT-specializes whatever program it names. This unlocks
+//!   arbitrary sequence lengths, keep ratios and shard widths (e.g.
+//!   `n_replicas = 3`) that the grid structurally could not serve.
+//!
+//! The legacy grid survives as an enumeration (`Registry::grid`) used for
+//! bucket-policy membership and for emitting `manifest.json`.
 
-use crate::config::json::Json;
+use crate::config::schema::DispatchPolicy;
 use crate::Result;
-use anyhow::{anyhow, bail, Context};
+use anyhow::{anyhow, bail};
 use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
     F32,
     I32,
     U32,
-}
-
-impl DType {
-    fn from_name(s: &str) -> Result<DType> {
-        Ok(match s {
-            "f32" => DType::F32,
-            "i32" => DType::I32,
-            "u32" => DType::U32,
-            _ => bail!("unknown dtype '{s}'"),
-        })
-    }
 }
 
 #[derive(Clone, Debug)]
@@ -49,27 +54,30 @@ pub enum Mode {
 }
 
 impl Mode {
-    fn from_name(s: &str) -> Result<Mode> {
-        Ok(match s {
-            "plain" => Mode::Plain,
-            "ltd" => Mode::Ltd,
-            "bypass" => Mode::Bypass,
-            _ => bail!("unknown mode '{s}'"),
-        })
+    /// Wire name, shared by module-text and manifest emission (byte
+    /// parity with the Python reference depends on it).
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Plain => "plain",
+            Mode::Ltd => "ltd",
+            Mode::Bypass => "bypass",
+        }
     }
 }
 
 #[derive(Clone, Debug)]
 pub struct ArtifactInfo {
     pub name: String,
+    /// Manifest-compat file name (`{name}.hlo`); no file exists — modules
+    /// are synthesized in memory.
     pub file: String,
     pub family: String,
     pub kind: String, // train | eval | init | grad | apply
     pub seq: usize,
     pub mode: Mode,
     pub keep: usize,
-    /// Batch rows this variant was compiled for (the data-parallel shard
-    /// width for `grad` variants; the family batch otherwise).
+    /// Batch rows this variant runs at (the data-parallel shard width for
+    /// `grad` variants; the family batch otherwise).
     pub rows: usize,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
@@ -92,26 +100,40 @@ pub struct FamilyInfo {
     pub seq_buckets: Vec<usize>,
     pub ltd_seqs: Vec<usize>,
     pub keep_buckets: BTreeMap<usize, Vec<usize>>,
-    /// Shard widths (rows per rank) the gradient variants are compiled
-    /// for: the full batch plus every power-of-two divisor of it
-    /// (non-power-of-two widths would break row-tree alignment).
+    /// Shard widths (rows per rank) on the legacy grid: the full batch
+    /// plus every power-of-two divisor of it. `exact` dispatch is not
+    /// limited to these.
     pub grad_rows: Vec<usize>,
     pub n_params: usize,
+    /// LM surrogate takes an explicit padding mask (BERT).
+    pub pad_mask: bool,
+    /// TokenBypass variants exist on the legacy grid for this family.
+    pub bypass: bool,
 }
 
-/// Parsed manifest + routing logic. Executable compilation/caching lives in
-/// [`crate::runtime::Runtime`], which holds the PJRT client.
+impl FamilyInfo {
+    /// ViT-style family (patch classifier) vs LM-style (token model).
+    pub fn is_vit(&self) -> bool {
+        self.vocab == 0 && self.n_classes > 0
+    }
+}
+
+/// The specializing registry: family table + legacy-grid enumeration +
+/// routing logic. Executable compilation/caching lives in
+/// [`crate::runtime::Runtime`], which holds the PJRT client and the
+/// bounded specialization cache.
 pub struct Registry {
-    pub dir: PathBuf,
     pub families: BTreeMap<String, FamilyInfo>,
-    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    /// The legacy variant grid (172 points), kept for bucket-policy
+    /// membership checks and `manifest.json` emission.
+    pub grid: BTreeMap<String, ArtifactInfo>,
 }
 
-/// The result of routing a requested (seq, keep) to compiled buckets.
+/// The result of routing a requested (seq, keep) point.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Route {
     pub artifact: String,
-    /// Bucketed sequence length actually used.
+    /// Sequence length actually used (bucketed or verbatim per policy).
     pub seq: usize,
     /// Kept middle-layer length actually used (== seq when not dropping).
     pub keep: usize,
@@ -119,109 +141,44 @@ pub struct Route {
 }
 
 impl Registry {
-    pub fn load(dir: &Path) -> Result<Registry> {
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {} (run `make artifacts`)", manifest_path.display()))?;
-        let v = Json::parse(&text).context("parsing manifest.json")?;
-        let mut families = BTreeMap::new();
-        for (name, f) in v.get("families").as_obj().ok_or_else(|| anyhow!("manifest: families"))? {
-            let mut keep_buckets = BTreeMap::new();
-            if let Some(kb) = f.get("keep_buckets").as_obj() {
-                for (s, arr) in kb {
-                    let s: usize = s.parse()?;
-                    let ks = arr
-                        .as_arr()
-                        .ok_or_else(|| anyhow!("keep_buckets"))?
-                        .iter()
-                        .filter_map(|x| x.as_usize())
-                        .collect();
-                    keep_buckets.insert(s, ks);
-                }
-            }
-            let usizes = |key: &str| -> Vec<usize> {
-                f.get(key)
-                    .as_arr()
-                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
-                    .unwrap_or_default()
-            };
-            let u = |key: &str| f.get(key).as_usize().unwrap_or(0);
-            families.insert(
-                name.clone(),
-                FamilyInfo {
-                    name: name.clone(),
-                    vocab: u("vocab"),
-                    d_model: u("d_model"),
-                    n_layers: u("n_layers"),
-                    n_heads: u("n_heads"),
-                    d_ff: u("d_ff"),
-                    max_seq: u("max_seq"),
-                    batch: u("batch"),
-                    n_experts: u("n_experts"),
-                    n_classes: u("n_classes"),
-                    patch_dim: u("patch_dim"),
-                    n_middle_layers: u("n_middle_layers"),
-                    seq_buckets: usizes("seq_buckets"),
-                    ltd_seqs: usizes("ltd_seqs"),
-                    keep_buckets,
-                    grad_rows: usizes("grad_rows"),
-                    n_params: u("n_params"),
-                },
-            );
-        }
-        let mut artifacts = BTreeMap::new();
-        for a in v.get("artifacts").as_arr().ok_or_else(|| anyhow!("manifest: artifacts"))? {
-            let spec_list = |key: &str| -> Result<Vec<TensorSpec>> {
-                a.get(key)
-                    .as_arr()
-                    .ok_or_else(|| anyhow!("artifact {key}"))?
-                    .iter()
-                    .map(|s| {
-                        Ok(TensorSpec {
-                            name: s.get("name").as_str().unwrap_or("").to_string(),
-                            dtype: DType::from_name(s.get("dtype").as_str().unwrap_or("f32"))?,
-                            shape: s
-                                .get("shape")
-                                .as_arr()
-                                .map(|x| x.iter().filter_map(|d| d.as_usize()).collect())
-                                .unwrap_or_default(),
-                        })
-                    })
-                    .collect()
-            };
-            let info = ArtifactInfo {
-                name: a.get("name").as_str().unwrap_or("").to_string(),
-                file: a.get("file").as_str().unwrap_or("").to_string(),
-                family: a.get("family").as_str().unwrap_or("").to_string(),
-                kind: a.get("kind").as_str().unwrap_or("").to_string(),
-                seq: a.get("seq").as_usize().unwrap_or(0),
-                mode: Mode::from_name(a.get("mode").as_str().unwrap_or("plain"))?,
-                keep: a.get("keep").as_usize().unwrap_or(0),
-                rows: a.get("rows").as_usize().unwrap_or(0),
-                inputs: spec_list("inputs")?,
-                outputs: spec_list("outputs")?,
-            };
-            artifacts.insert(info.name.clone(), info);
-        }
-        Ok(Registry { dir: dir.to_path_buf(), families, artifacts })
+    /// The built-in registry: families and the legacy grid, synthesized
+    /// in-process (no manifest read, no artifact files).
+    pub fn builtin() -> Result<Registry> {
+        let families = crate::runtime::synth::builtin_families();
+        let grid = crate::runtime::synth::legacy_grid(&families)?
+            .into_iter()
+            .map(|a| (a.name.clone(), a))
+            .collect();
+        Ok(Registry { families, grid })
     }
 
     pub fn family(&self, name: &str) -> Result<&FamilyInfo> {
         self.families
             .get(name)
-            .ok_or_else(|| anyhow!("unknown family '{name}' (manifest has: {:?})",
+            .ok_or_else(|| anyhow!("unknown family '{name}' (registry has: {:?})",
                 self.families.keys().collect::<Vec<_>>()))
     }
 
-    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
-        self.artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    /// Describe an artifact by name: grid lookup, falling back to name
+    /// parsing + synthesis for off-grid specializations.
+    pub fn artifact(&self, name: &str) -> Result<ArtifactInfo> {
+        if let Some(a) = self.grid.get(name) {
+            return Ok(a.clone());
+        }
+        crate::runtime::synth::artifact_from_name(&self.families, name)
     }
 
-    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
-        let info = self.artifact(name)?;
-        Ok(self.dir.join(&info.file))
+    /// The surrogate module text for an artifact (what the runtime
+    /// "compiles" — previously the on-disk `.hlo` contents).
+    pub fn module_text(&self, info: &ArtifactInfo) -> Result<String> {
+        let f = self.family(&info.family)?;
+        Ok(crate::runtime::synth::module_text(f, info))
+    }
+
+    /// Emit `manifest.json` (the externally visible registry description,
+    /// byte-compatible with the historical Python emission).
+    pub fn manifest_text(&self) -> Result<String> {
+        crate::runtime::synth::manifest_text(&self.families)
     }
 
     /// Smallest compiled sequence bucket ≥ `requested` (conservative: the
@@ -235,19 +192,33 @@ impl Registry {
             .unwrap_or(f.seq_buckets.last().ok_or_else(|| anyhow!("no seq buckets"))?))
     }
 
+    /// Sequence length a step will execute at under `policy`: the bucket
+    /// round-up, or (exact) the request verbatim, clamped to `[1, max_seq]`
+    /// (the data layer cannot materialize longer samples).
+    pub fn seq_for(&self, family: &str, requested: usize, policy: DispatchPolicy) -> Result<usize> {
+        match policy {
+            DispatchPolicy::Bucket => self.seq_bucket(family, requested),
+            DispatchPolicy::Exact => {
+                let f = self.family(family)?;
+                Ok(requested.clamp(1, f.max_seq))
+            }
+        }
+    }
+
     /// Route a train step: requested sequence length and kept middle-layer
-    /// length → compiled variant. Keep is rounded UP to the nearest bucket
-    /// (drop fewer tokens than asked, never more), falling back to the
-    /// plain variant when no dropping is possible/needed.
+    /// length → program point. Under `Bucket`, seq and keep round UP to
+    /// grid buckets with a plain fallback; under `Exact`, the request is
+    /// honored verbatim (keep ≥ seq still means no dropping).
     pub fn route_train(
         &self,
         family: &str,
         requested_seq: usize,
         requested_keep: usize,
         mode: Mode,
+        policy: DispatchPolicy,
     ) -> Result<Route> {
         let f = self.family(family)?;
-        let seq = self.seq_bucket(family, requested_seq)?;
+        let seq = self.seq_for(family, requested_seq, policy)?;
         let plain = Route {
             artifact: format!("{family}_train_s{seq}_full"),
             seq,
@@ -255,40 +226,52 @@ impl Registry {
             mode: Mode::Plain,
         };
         if mode == Mode::Plain || requested_keep >= seq {
-            self.artifact(&plain.artifact)?;
             return Ok(plain);
         }
-        // dropping requested: find the keep bucket
+        if policy == DispatchPolicy::Exact {
+            let keep = requested_keep.max(1);
+            let artifact = match mode {
+                Mode::Ltd => format!("{family}_train_s{seq}_ltd{keep}"),
+                Mode::Bypass => format!("{family}_train_s{seq}_bypass{keep}"),
+                Mode::Plain => unreachable!(),
+            };
+            return Ok(Route { artifact, seq, keep, mode });
+        }
+        // Bucket policy, dropping requested: find the keep bucket.
         let buckets = match f.keep_buckets.get(&seq) {
             Some(b) if f.ltd_seqs.contains(&seq) || mode == Mode::Bypass => b.clone(),
             _ => Vec::new(),
         };
         let keep = buckets.iter().copied().find(|&k| k >= requested_keep);
-        let (keep, exists) = match keep {
+        let exists = match keep {
             Some(k) => {
                 let name = match mode {
                     Mode::Ltd => format!("{family}_train_s{seq}_ltd{k}"),
                     Mode::Bypass => format!("{family}_train_s{seq}_bypass{k}"),
                     Mode::Plain => unreachable!(),
                 };
-                (k, self.artifacts.contains_key(&name).then_some(name))
+                self.grid.contains_key(&name).then_some((name, k))
             }
-            None => (seq, None),
+            None => None,
         };
         match exists {
-            Some(artifact) => Ok(Route { artifact, seq, keep, mode }),
-            None => {
-                self.artifact(&plain.artifact)?;
-                Ok(plain)
-            }
+            Some((artifact, keep)) => Ok(Route { artifact, seq, keep, mode }),
+            None => Ok(plain),
         }
     }
 
     /// Name of the gradient-returning variant matching a resolved train
-    /// route at shard width `rows` (rows per data-parallel rank). The grad
-    /// grid mirrors the train grid exactly, one variant per width in the
-    /// family's `grad_rows`.
-    pub fn grad_name(&self, family: &str, route: &Route, rows: usize) -> Result<String> {
+    /// route at shard width `rows` (rows per data-parallel rank). Under
+    /// `Bucket` the width must lie on the family's compiled `grad_rows`
+    /// (the bit-equivalence grid); under `Exact` any positive width is
+    /// synthesized on demand.
+    pub fn grad_name(
+        &self,
+        family: &str,
+        route: &Route,
+        rows: usize,
+        policy: DispatchPolicy,
+    ) -> Result<String> {
         let name = match route.mode {
             Mode::Plain => format!("{family}_grad_s{}_full_r{rows}", route.seq),
             Mode::Ltd => format!("{family}_grad_s{}_ltd{}_r{rows}", route.seq, route.keep),
@@ -296,13 +279,23 @@ impl Registry {
                 format!("{family}_grad_s{}_bypass{}_r{rows}", route.seq, route.keep)
             }
         };
-        self.artifact(&name).map_err(|_| {
-            anyhow!(
-                "no grad variant '{name}' (family {family} compiles shard widths {:?}; \
-                 regenerate artifacts?)",
-                self.families.get(family).map(|f| f.grad_rows.clone()).unwrap_or_default()
-            )
-        })?;
+        match policy {
+            DispatchPolicy::Bucket => {
+                if !self.grid.contains_key(&name) {
+                    bail!(
+                        "no grad variant '{name}' on the bucket grid (family {family} \
+                         compiles shard widths {:?}; use the `exact` dispatch policy \
+                         for off-grid widths)",
+                        self.families.get(family).map(|f| f.grad_rows.clone()).unwrap_or_default()
+                    );
+                }
+            }
+            DispatchPolicy::Exact => {
+                if rows == 0 {
+                    bail!("grad shard width must be ≥ 1");
+                }
+            }
+        }
         Ok(name)
     }
 
@@ -327,30 +320,27 @@ impl Registry {
     }
 }
 
-/// Default artifacts directory: `$DSDE_ARTIFACTS` or `./artifacts`.
-pub fn default_artifacts_dir() -> PathBuf {
-    std::env::var("DSDE_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("artifacts"))
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testutil::property;
+
+    const BUCKET: DispatchPolicy = DispatchPolicy::Bucket;
+    const EXACT: DispatchPolicy = DispatchPolicy::Exact;
 
     fn registry() -> Registry {
-        Registry::load(&default_artifacts_dir()).expect("run `make artifacts` first")
+        Registry::builtin().expect("builtin registry")
     }
 
     #[test]
-    fn manifest_loads_all_families() {
+    fn builtin_has_all_families_and_the_legacy_grid() {
         let r = registry();
         for f in ["gpt", "bert", "vit", "moe"] {
             let fam = r.family(f).unwrap();
             assert!(fam.n_layers >= 3);
             assert!(fam.n_params > 10);
         }
-        assert!(r.artifacts.len() >= 40);
+        assert_eq!(r.grid.len(), 172);
     }
 
     #[test]
@@ -367,7 +357,7 @@ mod tests {
     #[test]
     fn route_plain_when_no_drop() {
         let r = registry();
-        let route = r.route_train("gpt", 64, 64, Mode::Ltd).unwrap();
+        let route = r.route_train("gpt", 64, 64, Mode::Ltd, BUCKET).unwrap();
         assert_eq!(route.artifact, "gpt_train_s64_full");
         assert_eq!(route.keep, 64);
     }
@@ -375,10 +365,10 @@ mod tests {
     #[test]
     fn route_ltd_rounds_keep_up() {
         let r = registry();
-        let route = r.route_train("gpt", 64, 20, Mode::Ltd).unwrap();
+        let route = r.route_train("gpt", 64, 20, Mode::Ltd, BUCKET).unwrap();
         assert_eq!(route.artifact, "gpt_train_s64_ltd32");
         assert_eq!(route.keep, 32);
-        let route = r.route_train("gpt", 64, 5, Mode::Ltd).unwrap();
+        let route = r.route_train("gpt", 64, 5, Mode::Ltd, BUCKET).unwrap();
         assert_eq!(route.artifact, "gpt_train_s64_ltd16");
     }
 
@@ -386,7 +376,7 @@ mod tests {
     fn route_composed_cl_and_ltd() {
         let r = registry();
         // CL asks for seq 20 → bucket 32; LTD asks keep 10 → bucket 16
-        let route = r.route_train("gpt", 20, 10, Mode::Ltd).unwrap();
+        let route = r.route_train("gpt", 20, 10, Mode::Ltd, BUCKET).unwrap();
         assert_eq!(route.artifact, "gpt_train_s32_ltd16");
         assert_eq!((route.seq, route.keep), (32, 16));
     }
@@ -395,18 +385,97 @@ mod tests {
     fn route_falls_back_to_plain_when_unavailable() {
         let r = registry();
         // seq bucket 8 has no LTD variants for gpt
-        let route = r.route_train("gpt", 8, 2, Mode::Ltd).unwrap();
+        let route = r.route_train("gpt", 8, 2, Mode::Ltd, BUCKET).unwrap();
         assert_eq!(route.artifact, "gpt_train_s8_full");
         // moe only has ltd at s=64
-        let route = r.route_train("moe", 32, 8, Mode::Ltd).unwrap();
+        let route = r.route_train("moe", 32, 8, Mode::Ltd, BUCKET).unwrap();
         assert_eq!(route.artifact, "moe_train_s32_full");
     }
 
     #[test]
     fn route_bypass() {
         let r = registry();
-        let route = r.route_train("gpt", 64, 32, Mode::Bypass).unwrap();
+        let route = r.route_train("gpt", 64, 32, Mode::Bypass, BUCKET).unwrap();
         assert_eq!(route.artifact, "gpt_train_s64_bypass32");
+    }
+
+    #[test]
+    fn route_exact_returns_request_verbatim() {
+        let r = registry();
+        let route = r.route_train("gpt", 20, 7, Mode::Ltd, EXACT).unwrap();
+        assert_eq!(route.artifact, "gpt_train_s20_ltd7");
+        assert_eq!((route.seq, route.keep), (20, 7));
+        // off-grid artifacts still resolve to full descriptions
+        let info = r.artifact(&route.artifact).unwrap();
+        assert_eq!(info.seq, 20);
+        assert_eq!(info.inputs.last().unwrap().shape, vec![2, 7]);
+        // keep ≥ seq still means plain
+        let route = r.route_train("gpt", 20, 20, Mode::Ltd, EXACT).unwrap();
+        assert_eq!(route.artifact, "gpt_train_s20_full");
+    }
+
+    // ISSUE 3 satellite: dispatch-policy property tests. `bucket` must
+    // never hand back a shorter sequence or more dropping than requested;
+    // `exact` must return the requested point verbatim.
+    #[test]
+    fn property_bucket_rounds_seq_and_keep_up() {
+        let r = registry();
+        property("bucket rounds up", 64, |rng| {
+            let fam = ["gpt", "bert", "moe"][(rng.next_u64() % 3) as usize];
+            let max_seq = r.family(fam).unwrap().max_seq;
+            let req_seq = 1 + (rng.next_u64() as usize) % max_seq;
+            let req_keep = 1 + (rng.next_u64() as usize) % max_seq;
+            let mode = [Mode::Ltd, Mode::Bypass][(rng.next_u64() % 2) as usize];
+            let route = r.route_train(fam, req_seq, req_keep, mode, BUCKET).unwrap();
+            if route.seq < req_seq {
+                return Err(format!("{fam}: seq {req_seq} shortened to {}", route.seq));
+            }
+            // Dropping never exceeds the request: either the routed keep is
+            // ≥ requested, or we fell back to the plain variant (keep == seq).
+            if route.mode != Mode::Plain && route.keep < req_keep.min(route.seq) {
+                return Err(format!(
+                    "{fam}: keep {req_keep} tightened to {} at seq {}",
+                    route.keep, route.seq
+                ));
+            }
+            if route.mode == Mode::Plain && route.keep != route.seq {
+                return Err("plain fallback must keep the full sequence".into());
+            }
+            if !r.grid.contains_key(&route.artifact) {
+                return Err(format!("bucket route left the grid: {}", route.artifact));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_exact_is_verbatim() {
+        let r = registry();
+        property("exact is verbatim", 64, |rng| {
+            let fam = ["gpt", "bert", "moe"][(rng.next_u64() % 3) as usize];
+            let max_seq = r.family(fam).unwrap().max_seq;
+            let req_seq = 1 + (rng.next_u64() as usize) % max_seq;
+            let req_keep = 1 + (rng.next_u64() as usize) % max_seq;
+            let mode = [Mode::Ltd, Mode::Bypass][(rng.next_u64() % 2) as usize];
+            let route = r.route_train(fam, req_seq, req_keep, mode, EXACT).unwrap();
+            if route.seq != req_seq {
+                return Err(format!("seq {req_seq} changed to {}", route.seq));
+            }
+            if req_keep >= req_seq {
+                if route.mode != Mode::Plain || route.keep != route.seq {
+                    return Err("keep ≥ seq must route plain".into());
+                }
+            } else if (route.keep, route.mode) != (req_keep, mode) {
+                return Err(format!(
+                    "keep {req_keep} changed to {} (mode {:?})",
+                    route.keep, route.mode
+                ));
+            }
+            // every exact route must resolve and synthesize
+            let info = r.artifact(&route.artifact).map_err(|e| e.to_string())?;
+            r.module_text(&info).map_err(|e| e.to_string())?;
+            Ok(())
+        });
     }
 
     #[test]
@@ -416,11 +485,11 @@ mod tests {
         assert_eq!(fam.grad_rows, vec![8, 4, 2, 1]);
         for rows in &fam.grad_rows {
             for (route, want) in [
-                (r.route_train("gpt", 64, 64, Mode::Plain).unwrap(), format!("gpt_grad_s64_full_r{rows}")),
-                (r.route_train("gpt", 64, 20, Mode::Ltd).unwrap(), format!("gpt_grad_s64_ltd32_r{rows}")),
-                (r.route_train("gpt", 64, 32, Mode::Bypass).unwrap(), format!("gpt_grad_s64_bypass32_r{rows}")),
+                (r.route_train("gpt", 64, 64, Mode::Plain, BUCKET).unwrap(), format!("gpt_grad_s64_full_r{rows}")),
+                (r.route_train("gpt", 64, 20, Mode::Ltd, BUCKET).unwrap(), format!("gpt_grad_s64_ltd32_r{rows}")),
+                (r.route_train("gpt", 64, 32, Mode::Bypass, BUCKET).unwrap(), format!("gpt_grad_s64_bypass32_r{rows}")),
             ] {
-                assert_eq!(r.grad_name("gpt", &route, *rows).unwrap(), want);
+                assert_eq!(r.grad_name("gpt", &route, *rows, BUCKET).unwrap(), want);
                 let info = r.artifact(&want).unwrap();
                 assert_eq!(info.rows, *rows);
                 assert_eq!(info.kind, "grad");
@@ -431,9 +500,13 @@ mod tests {
                 assert_eq!(info.outputs[n_params + 1].name, "den");
             }
         }
-        // no variant for a width that is not a power-of-two divisor
-        let route = r.route_train("gpt", 64, 64, Mode::Plain).unwrap();
-        assert!(r.grad_name("gpt", &route, 3).is_err());
+        // bucket policy rejects a width off the power-of-two grid...
+        let route = r.route_train("gpt", 64, 64, Mode::Plain, BUCKET).unwrap();
+        assert!(r.grad_name("gpt", &route, 3, BUCKET).is_err());
+        // ...which exact policy synthesizes on demand
+        let name = r.grad_name("gpt", &route, 3, EXACT).unwrap();
+        assert_eq!(name, "gpt_grad_s64_full_r3");
+        assert_eq!(r.artifact(&name).unwrap().rows, 3);
     }
 
     #[test]

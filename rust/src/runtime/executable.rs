@@ -1,31 +1,30 @@
-//! One loaded+compiled step executable, with typed literal helpers.
+//! One synthesized+compiled step executable, with typed literal helpers.
 //!
-//! Loading path (see /opt/xla-example/load_hlo): HLO *text* →
-//! `HloModuleProto::from_text_file` → `XlaComputation` → PJRT compile.
-//! Execution takes host `Literal`s and returns the decomposed output tuple
-//! as `Vec<Literal>` — the training state round-trips through the host,
-//! which is measured (runtime_overhead bench) and negligible at this
-//! model scale.
+//! Loading path (see /opt/xla-example/load_hlo): HLO *text* (built in
+//! memory by `runtime::synth`) → `HloModuleProto::from_text` →
+//! `XlaComputation` → PJRT compile. Execution takes host `Literal`s and
+//! returns the decomposed output tuple as `Vec<Literal>` — the training
+//! state round-trips through the host, which is measured
+//! (runtime_overhead bench) and negligible at this model scale.
 
 use crate::runtime::artifacts::{ArtifactInfo, DType};
 use crate::Result;
 use anyhow::{bail, Context};
-use std::path::Path;
 
 pub struct Step {
     pub info: ArtifactInfo,
     exe: xla::PjRtLoadedExecutable,
-    /// Wall-clock spent compiling (registry cache statistics).
+    /// Wall-clock spent compiling (specialization-cache statistics).
     pub compile_secs: f64,
 }
 
 impl Step {
-    pub fn load(client: &xla::PjRtClient, path: &Path, info: ArtifactInfo) -> Result<Step> {
+    /// Compile a surrogate module from in-memory text. No artifact file is
+    /// involved: this is the JIT specialization path.
+    pub fn from_text(client: &xla::PjRtClient, text: &str, info: ArtifactInfo) -> Result<Step> {
         let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let proto = xla::HloModuleProto::from_text(text)
+            .with_context(|| format!("parsing synthesized module for {}", info.name))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client
             .compile(&comp)

@@ -1,38 +1,216 @@
-//! PJRT runtime: client ownership, executable loading/caching, and the
-//! manifest-driven artifact registry with bucketed variant routing.
+//! PJRT runtime: client ownership, the JIT specialization cache, and the
+//! specializing artifact registry with bucket/exact dispatch policies.
 //!
-//! Single-threaded by design — the PJRT CPU client and its executables are
-//! used from the coordinator thread only; batch *preparation* parallelism
-//! lives in [`crate::train::pipeline`], which feeds host batches through a
-//! bounded channel.
+//! Executables are no longer loaded from an on-disk grid — the registry
+//! synthesizes any requested program point in memory
+//! ([`crate::runtime::synth`]) and [`Runtime::step`] compiles it on first
+//! use into a **bounded LRU cache** with hit/miss/eviction/compile-time
+//! statistics. Because the trainer precomputes its full (CL, route)
+//! schedule, it can hand the upcoming specializations to
+//! [`Runtime::prewarm`], which compiles them on a background thread so
+//! compile latency hides behind the async data pipeline instead of
+//! stalling the step loop.
+//!
+//! The coordinator-side cache stays single-threaded by design (the PJRT
+//! CPU client and its executables are used from the coordinator thread
+//! only); the prewarm worker owns a separate client — mirroring real
+//! PJRT, where compilation is thread-safe and executables are shareable.
 
 pub mod artifacts;
 pub mod collective;
 pub mod executable;
+pub mod synth;
 
-pub use artifacts::{default_artifacts_dir, ArtifactInfo, DType, FamilyInfo, Mode, Registry, Route, TensorSpec};
+pub use artifacts::{ArtifactInfo, DType, FamilyInfo, Mode, Registry, Route, TensorSpec};
 pub use collective::{tree_reduce, tree_reduce_literals};
 pub use executable::{get_f32, lit_f32, lit_i32, scalar_f32, scalar_u32, Step};
 
 use crate::Result;
-use anyhow::Context;
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
-use std::path::Path;
 use std::rc::Rc;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
 
-/// The runtime: one PJRT CPU client + lazily compiled executables.
+/// Default specialization-cache capacity. Far above any single run's
+/// working set (the full legacy grid is 172 programs), so eviction only
+/// matters for long-lived multi-experiment processes — or tests, which
+/// shrink it via [`Runtime::with_cache_capacity`].
+pub const DEFAULT_CACHE_CAPACITY: usize = 512;
+
+/// Counters of the JIT specialization cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Cache hits (executable served without compiling).
+    pub hits: u64,
+    /// Cache misses (executable compiled on the calling thread).
+    pub misses: u64,
+    /// Entries evicted by the LRU bound.
+    pub evictions: u64,
+    /// Executables compiled by the prewarm worker and adopted by the cache.
+    pub prewarmed: u64,
+    /// Seconds spent compiling on the calling thread — the compile cost
+    /// the step loop actually *feels* (prewarm exists to keep this ~0).
+    pub inline_compile_secs: f64,
+    /// Seconds the background worker spent compiling (hidden cost).
+    pub prewarm_compile_secs: f64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served without an inline compile.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    /// Total compile seconds, inline + hidden.
+    pub fn compile_secs(&self) -> f64 {
+        self.inline_compile_secs + self.prewarm_compile_secs
+    }
+
+    /// Per-field difference (for capturing a run's share of a shared
+    /// runtime's counters).
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            evictions: self.evictions - earlier.evictions,
+            prewarmed: self.prewarmed - earlier.prewarmed,
+            inline_compile_secs: self.inline_compile_secs - earlier.inline_compile_secs,
+            prewarm_compile_secs: self.prewarm_compile_secs - earlier.prewarm_compile_secs,
+        }
+    }
+}
+
+/// Bounded LRU over compiled steps. Recency is a monotone tick per access;
+/// eviction drops the stalest entry (holders of the `Rc` keep it alive).
+struct LruCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<String, (Rc<Step>, u64)>,
+}
+
+impl LruCache {
+    fn new(cap: usize) -> LruCache {
+        LruCache { cap: cap.max(1), tick: 0, map: HashMap::new() }
+    }
+
+    fn get(&mut self, name: &str) -> Option<Rc<Step>> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(name).map(|(step, used)| {
+            *used = tick;
+            step.clone()
+        })
+    }
+
+    /// Insert (no-op if present) and evict down to capacity. Returns the
+    /// number of evictions.
+    fn insert(&mut self, name: &str, step: Rc<Step>) -> u64 {
+        self.tick += 1;
+        self.map.entry(name.to_string()).or_insert((step, self.tick));
+        let mut evicted = 0;
+        while self.map.len() > self.cap {
+            if let Some(stalest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, used))| *used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&stalest);
+                evicted += 1;
+            } else {
+                break;
+            }
+        }
+        evicted
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// The background specialization compiler: receives (generation, name,
+/// info, text) jobs, compiles on its own client, ships finished steps
+/// back. The generation stamp lets [`Runtime::clear_cache`] invalidate
+/// everything in flight, so a cleared runtime can never adopt a stale
+/// compile into its counters.
+struct Prewarmer {
+    job_tx: Sender<(u64, String, ArtifactInfo, String)>,
+    done_rx: Receiver<(u64, String, Step)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prewarmer {
+    fn spawn() -> Prewarmer {
+        let (job_tx, job_rx) = channel::<(u64, String, ArtifactInfo, String)>();
+        let (done_tx, done_rx) = channel::<(u64, String, Step)>();
+        let handle = std::thread::Builder::new()
+            .name("dsde-prewarm".into())
+            .spawn(move || {
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => c,
+                    Err(_) => return,
+                };
+                while let Ok((generation, name, info, text)) = job_rx.recv() {
+                    match Step::from_text(&client, &text, info) {
+                        // A failed prewarm is not an error: the same point
+                        // will compile inline (and report properly) if the
+                        // run actually reaches it.
+                        Ok(step) => {
+                            if done_tx.send((generation, name, step)).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => continue,
+                    }
+                }
+            })
+            .expect("spawn prewarm worker");
+        Prewarmer { job_tx, done_rx, handle: Some(handle) }
+    }
+}
+
+impl Drop for Prewarmer {
+    fn drop(&mut self) {
+        // Closing the job channel ends the worker loop.
+        let (tx, _rx) = channel();
+        self.job_tx = tx;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The runtime: one PJRT CPU client + the bounded JIT specialization cache.
 pub struct Runtime {
     pub registry: Registry,
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<Step>>>,
-    /// Cumulative compile time (for the runtime_overhead bench / logs).
-    pub total_compile_secs: RefCell<f64>,
+    cache: RefCell<LruCache>,
+    stats: RefCell<CacheStats>,
+    /// Background compiler, spawned on the first [`Runtime::prewarm`]
+    /// call (prewarm-disabled runs and replica-mode coordinators never
+    /// pay for the thread or its client).
+    prewarmer: RefCell<Option<Prewarmer>>,
+    /// Bumped by [`Runtime::clear_cache`]; prewarm results from older
+    /// generations are discarded on adoption.
+    generation: Cell<u64>,
 }
 
 impl Runtime {
-    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
-        let registry = Registry::load(artifacts_dir)?;
+    pub fn new() -> Result<Runtime> {
+        Self::with_cache_capacity(DEFAULT_CACHE_CAPACITY)
+    }
+
+    /// Build with an explicit specialization-cache bound (tests exercise
+    /// eviction with tiny capacities).
+    pub fn with_cache_capacity(cap: usize) -> Result<Runtime> {
+        use anyhow::Context;
+        let registry = Registry::builtin()?;
         // Perf (EXPERIMENTS.md §Perf L3-1): backend optimization level 1
         // compiles each variant ~5x faster than the default with identical
         // measured step time at this model scale. Respect a user-provided
@@ -44,32 +222,106 @@ impl Runtime {
         Ok(Runtime {
             registry,
             client,
-            cache: RefCell::new(HashMap::new()),
-            total_compile_secs: RefCell::new(0.0),
+            cache: RefCell::new(LruCache::new(cap)),
+            stats: RefCell::new(CacheStats::default()),
+            prewarmer: RefCell::new(None),
+            generation: Cell::new(0),
         })
     }
 
-    /// Open with the default artifacts directory (`$DSDE_ARTIFACTS` or
-    /// `./artifacts`).
+    /// Open the default runtime (kept name: callers predate the in-process
+    /// registry, when this meant "the default artifacts directory").
     pub fn open_default() -> Result<Runtime> {
-        Self::new(&default_artifacts_dir())
+        Self::new()
     }
 
-    /// Get (compiling and caching on first use) the named executable.
+    /// Get the named executable: adopt any finished prewarms, then serve
+    /// from the cache, JIT-specializing (synthesize + compile) on miss.
     pub fn step(&self, name: &str) -> Result<Rc<Step>> {
-        if let Some(s) = self.cache.borrow().get(name) {
-            return Ok(s.clone());
+        self.adopt_prewarmed();
+        if let Some(s) = self.cache.borrow_mut().get(name) {
+            self.stats.borrow_mut().hits += 1;
+            return Ok(s);
         }
-        let info = self.registry.artifact(name)?.clone();
-        let path = self.registry.hlo_path(name)?;
-        let step = Rc::new(Step::load(&self.client, &path, info)?);
-        *self.total_compile_secs.borrow_mut() += step.compile_secs;
-        self.cache.borrow_mut().insert(name.to_string(), step.clone());
+        let info = self.registry.artifact(name)?;
+        let text = self.registry.module_text(&info)?;
+        let step = Rc::new(Step::from_text(&self.client, &text, info)?);
+        {
+            let mut st = self.stats.borrow_mut();
+            st.misses += 1;
+            st.inline_compile_secs += step.compile_secs;
+            st.evictions += self.cache.borrow_mut().insert(name, step.clone());
+        }
         Ok(step)
+    }
+
+    /// Queue upcoming specializations for background compilation
+    /// (spawning the worker on first use). Returns the number of points
+    /// queued (already-cached names are skipped). Purely a latency
+    /// optimization: results are bit-identical with or without
+    /// prewarming, since programs are pure functions of their inputs and
+    /// the cache serves the same executable either way.
+    pub fn prewarm<I: IntoIterator<Item = String>>(&self, names: I) -> Result<usize> {
+        let generation = self.generation.get();
+        let mut prewarmer = self.prewarmer.borrow_mut();
+        let worker = prewarmer.get_or_insert_with(Prewarmer::spawn);
+        let mut queued = 0;
+        for name in names {
+            if self.cache.borrow_mut().get(&name).is_some() {
+                continue;
+            }
+            let info = self.registry.artifact(&name)?;
+            let text = self.registry.module_text(&info)?;
+            if worker.job_tx.send((generation, name, info, text)).is_ok() {
+                queued += 1;
+            }
+        }
+        Ok(queued)
+    }
+
+    /// Pull finished background compilations into the cache. Results
+    /// from before the last [`Self::clear_cache`] are discarded.
+    fn adopt_prewarmed(&self) {
+        let prewarmer = self.prewarmer.borrow();
+        let Some(worker) = prewarmer.as_ref() else {
+            return;
+        };
+        while let Ok((generation, name, step)) = worker.done_rx.try_recv() {
+            if generation != self.generation.get() {
+                continue; // compiled for a cleared cache: stale
+            }
+            let mut cache = self.cache.borrow_mut();
+            if cache.get(&name).is_some() {
+                continue; // lost the race to an inline compile
+            }
+            let mut st = self.stats.borrow_mut();
+            st.prewarmed += 1;
+            st.prewarm_compile_secs += step.compile_secs;
+            st.evictions += cache.insert(&name, Rc::new(step));
+        }
+    }
+
+    /// Drop every cached executable and invalidate in-flight prewarms
+    /// (counters are preserved). Benches use this to re-measure
+    /// cold-compile behavior on a shared runtime.
+    pub fn clear_cache(&self) {
+        self.generation.set(self.generation.get() + 1);
+        let cap = self.cache.borrow().cap;
+        *self.cache.borrow_mut() = LruCache::new(cap);
     }
 
     pub fn cached_executables(&self) -> usize {
         self.cache.borrow().len()
+    }
+
+    /// Snapshot of the specialization-cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        *self.stats.borrow()
+    }
+
+    /// Total compile seconds so far (inline + prewarm).
+    pub fn total_compile_secs(&self) -> f64 {
+        self.cache_stats().compile_secs()
     }
 }
 
@@ -79,22 +331,107 @@ mod tests {
 
     #[test]
     fn step_cache_compiles_once() {
-        let rt = Runtime::open_default().expect("artifacts present");
+        let rt = Runtime::new().expect("builtin registry");
         let a = rt.step("gpt_init").unwrap();
         let b = rt.step("gpt_init").unwrap();
         assert!(Rc::ptr_eq(&a, &b));
         assert_eq!(rt.cached_executables(), 1);
-        assert!(*rt.total_compile_secs.borrow() > 0.0);
+        let st = rt.cache_stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+        assert!(rt.total_compile_secs() > 0.0);
     }
 
     #[test]
     fn init_executes_and_matches_specs() {
-        let rt = Runtime::open_default().unwrap();
+        let rt = Runtime::new().unwrap();
         let init = rt.step("gpt_init").unwrap();
         let out = init.execute(&[scalar_u32(0)]).unwrap();
         assert_eq!(out.len(), init.info.outputs.len());
         for (lit, spec) in out.iter().zip(&init.info.outputs) {
             executable::check_spec(lit, spec).unwrap();
         }
+    }
+
+    #[test]
+    fn off_grid_specialization_compiles_and_runs() {
+        // The point of the JIT port: a (seq, keep) no grid ever carried.
+        let rt = Runtime::new().unwrap();
+        let step = rt.step("gpt_train_s20_ltd7").unwrap();
+        assert_eq!(step.info.seq, 20);
+        assert_eq!(step.info.keep, 7);
+        let init = rt.step("gpt_init").unwrap();
+        let state = init.execute(&[scalar_u32(1)]).unwrap();
+        let fam = rt.registry.family("gpt").unwrap().clone();
+        let n = fam.batch * 20;
+        let mut args: Vec<xla::Literal> = state;
+        args.push(scalar_f32(1.0));
+        args.push(scalar_f32(1e-3));
+        args.push(lit_i32(&(0..n as i32).map(|i| 6 + i % 100).collect::<Vec<_>>(), &[fam.batch, 20]).unwrap());
+        args.push(lit_i32(&(0..n as i32).map(|i| 6 + (i + 1) % 100).collect::<Vec<_>>(), &[fam.batch, 20]).unwrap());
+        args.push(lit_f32(&vec![1.0; n], &[fam.batch, 20]).unwrap());
+        let idx: Vec<i32> = (0..fam.n_middle_layers * 7).map(|i| (i % 20) as i32).collect();
+        args.push(lit_i32(&idx, &[fam.n_middle_layers, 7]).unwrap());
+        let out = step.execute(&args).unwrap();
+        let loss = get_f32(&out[out.len() - 3]).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+
+    #[test]
+    fn lru_evicts_under_small_capacity() {
+        let rt = Runtime::with_cache_capacity(2).unwrap();
+        rt.step("gpt_init").unwrap();
+        rt.step("bert_init").unwrap();
+        assert_eq!(rt.cached_executables(), 2);
+        assert_eq!(rt.cache_stats().evictions, 0);
+        // gpt_init is stalest → evicted by the third distinct program
+        rt.step("moe_init").unwrap();
+        assert_eq!(rt.cached_executables(), 2);
+        assert_eq!(rt.cache_stats().evictions, 1);
+        // bert stays hot; re-requesting gpt is a fresh miss
+        let before = rt.cache_stats();
+        rt.step("bert_init").unwrap();
+        assert_eq!(rt.cache_stats().hits, before.hits + 1);
+        rt.step("gpt_init").unwrap();
+        assert_eq!(rt.cache_stats().misses, before.misses + 1);
+    }
+
+    #[test]
+    fn hit_and_miss_counters_track_lookups() {
+        let rt = Runtime::new().unwrap();
+        for _ in 0..3 {
+            rt.step("vit_init").unwrap();
+        }
+        rt.step("vit_apply").unwrap();
+        let st = rt.cache_stats();
+        assert_eq!((st.hits, st.misses), (2, 2));
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+        assert!(st.inline_compile_secs > 0.0);
+        let delta = st.since(&CacheStats::default());
+        assert_eq!(delta, st);
+    }
+
+    #[test]
+    fn prewarm_compiles_in_background_and_cache_adopts() {
+        let rt = Runtime::new().unwrap();
+        let names = vec!["gpt_train_s64_full".to_string(), "gpt_train_s64_ltd32".to_string()];
+        let queued = rt.prewarm(names.clone()).unwrap();
+        assert_eq!(queued, 2);
+        // Wait for the worker, then adopt: both lookups must be hits.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while rt.cache_stats().prewarmed < 2 && std::time::Instant::now() < deadline {
+            rt.step("gpt_init").unwrap(); // any lookup adopts finished prewarms
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let before = rt.cache_stats();
+        assert_eq!(before.prewarmed, 2);
+        assert!(before.prewarm_compile_secs > 0.0);
+        for n in &names {
+            rt.step(n).unwrap();
+        }
+        let st = rt.cache_stats();
+        assert_eq!(st.hits, before.hits + 2);
+        assert_eq!(st.misses, before.misses, "prewarmed lookups must not compile inline");
+        // already-cached names are not re-queued
+        assert_eq!(rt.prewarm(names).unwrap(), 0);
     }
 }

@@ -1,0 +1,592 @@
+//! In-process surrogate program synthesis.
+//!
+//! This module is the Rust port of the Python AOT pass
+//! (`python/compile/gen_stub_artifacts.py`): instead of routing to a
+//! pre-committed grid of `.hlo` files, the coordinator builds the `xla`
+//! test-double's module text (the `key value` header its interpreter
+//! consumes) in memory for **any** `(family, kind, seq, keep, mode, rows)`
+//! point, on demand. The static grid survives only as an enumeration
+//! ([`legacy_grid`]) used for bucket-policy membership checks and for
+//! emitting `rust/artifacts/manifest.json`, which stays the externally
+//! visible registry description.
+//!
+//! Byte compatibility is a hard invariant: for every point of the legacy
+//! grid, [`module_text`] and [`manifest_text`] must reproduce the Python
+//! generator's output *byte for byte* — `gen_stub_artifacts.py --check`
+//! (CI) and `tests/synth_parity.rs` enforce it, which is what proved the
+//! port against the 172 previously committed artifacts before they were
+//! deleted.
+
+use crate::runtime::artifacts::{ArtifactInfo, DType, FamilyInfo, Mode, TensorSpec};
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::collections::BTreeMap;
+
+/// Surrogate Adam step gain (see rust/xla/src/lib.rs and the Python
+/// generator's `GAIN`).
+pub const GAIN: u32 = 16;
+
+/// Family declaration order of the Python generator's `FAMILIES` dict —
+/// the manifest's artifact array preserves it, so emission must too.
+pub const FAMILY_ORDER: [&str; 4] = ["gpt", "bert", "moe", "vit"];
+
+fn family(
+    name: &str,
+    vocab: usize,
+    pad_mask: bool,
+    bypass: bool,
+    max_seq: usize,
+    n_classes: usize,
+    patch_dim: usize,
+    n_experts: usize,
+    seq_buckets: &[usize],
+    ltd_seqs: &[usize],
+    keep_buckets: &[(usize, &[usize])],
+) -> FamilyInfo {
+    let batch = 8;
+    // Shard widths the replica engine can run on the bucket policy: the
+    // full batch plus every power-of-two divisor of it. Non-power-of-two
+    // widths are excluded (a shard must cover a complete subtree of the
+    // pairwise row tree); the `exact` dispatch policy synthesizes them
+    // anyway, trading away the bit-equivalence guarantee.
+    let mut grad_rows = vec![batch];
+    let mut r = 1;
+    while r < batch {
+        if batch % r == 0 {
+            grad_rows.push(r);
+        }
+        r *= 2;
+    }
+    grad_rows.sort_unstable_by(|a, b| b.cmp(a));
+    grad_rows.dedup();
+    let n_layers = 4;
+    FamilyInfo {
+        name: name.to_string(),
+        vocab,
+        d_model: 64,
+        n_layers,
+        n_heads: 4,
+        d_ff: 256,
+        max_seq,
+        batch,
+        n_experts,
+        n_classes,
+        patch_dim,
+        n_middle_layers: 2,
+        seq_buckets: seq_buckets.to_vec(),
+        ltd_seqs: ltd_seqs.to_vec(),
+        keep_buckets: keep_buckets.iter().map(|(s, ks)| (*s, ks.to_vec())).collect(),
+        grad_rows,
+        n_params: 3 * n_layers,
+        pad_mask,
+        bypass,
+    }
+}
+
+/// The built-in family table (the source of truth the manifest is now
+/// emitted from; previously `FAMILIES` in the Python generator).
+pub fn builtin_families() -> BTreeMap<String, FamilyInfo> {
+    let mut out = BTreeMap::new();
+    for f in [
+        family("gpt", 512, false, true, 64, 0, 0, 0, &[8, 16, 32, 64], &[32, 64],
+            &[(32, &[16]), (64, &[16, 32])]),
+        family("bert", 512, true, true, 64, 0, 0, 0, &[8, 16, 32, 64], &[32, 64],
+            &[(32, &[16]), (64, &[16, 32])]),
+        family("moe", 512, false, true, 64, 0, 0, 4, &[8, 16, 32, 64], &[64],
+            &[(64, &[16, 32])]),
+        family("vit", 0, false, false, 17, 10, 48, 0, &[17], &[17],
+            &[(17, &[5, 9, 13])]),
+    ] {
+        out.insert(f.name.clone(), f);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// IO-spec synthesis (mirrors the Python generator's spec helpers)
+
+fn spec(name: impl Into<String>, dtype: DType, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.into(), dtype, shape: shape.to_vec() }
+}
+
+/// The `3·n_layers` parameter tensor specs, in surrogate layout order.
+fn param_specs(f: &FamilyInfo, prefix: &str) -> Vec<TensorSpec> {
+    let (w_shape, b_shape): (Vec<usize>, Vec<usize>) = if f.is_vit() {
+        (vec![f.patch_dim, f.n_classes], vec![f.n_classes])
+    } else {
+        (vec![f.vocab, f.vocab], vec![f.vocab])
+    };
+    let mut out = Vec::with_capacity(3 * f.n_layers);
+    for i in 0..f.n_layers {
+        out.push(spec(format!("{prefix}w{i}"), DType::F32, &w_shape));
+    }
+    for i in 0..f.n_layers {
+        out.push(spec(format!("{prefix}bias{i}"), DType::F32, &b_shape));
+    }
+    for i in 0..f.n_layers {
+        out.push(spec(format!("{prefix}gamma{i}"), DType::F32, &[f.d_model]));
+    }
+    out
+}
+
+fn state_specs(f: &FamilyInfo) -> Vec<TensorSpec> {
+    let mut out = param_specs(f, "");
+    for moment in ["m_", "v_"] {
+        out.extend(param_specs(f, moment));
+    }
+    out
+}
+
+fn batch_specs(f: &FamilyInfo, seq: usize, rows: usize) -> Vec<TensorSpec> {
+    if f.is_vit() {
+        let n_patches = f.max_seq - 1;
+        return vec![
+            spec("patches", DType::F32, &[rows, n_patches, f.patch_dim]),
+            spec("labels", DType::I32, &[rows]),
+        ];
+    }
+    let mut out = vec![
+        spec("tokens", DType::I32, &[rows, seq]),
+        spec("targets", DType::I32, &[rows, seq]),
+        spec("loss_mask", DType::F32, &[rows, seq]),
+    ];
+    if f.pad_mask {
+        out.push(spec("pad_mask", DType::F32, &[rows, seq]));
+    }
+    out
+}
+
+fn keep_spec(f: &FamilyInfo, mode: Mode, keep: usize) -> TensorSpec {
+    if mode == Mode::Ltd {
+        spec("keep_idx", DType::I32, &[f.n_middle_layers, keep])
+    } else {
+        spec("keep_idx", DType::I32, &[keep])
+    }
+}
+
+fn scalar(name: &str, dtype: DType) -> TensorSpec {
+    spec(name, dtype, &[])
+}
+
+/// Synthesize the full manifest-level description of one program point.
+/// `kind` ∈ init | eval | train | grad | apply; `rows` is the batch-row
+/// count (the shard width for grads). Any positive `(seq, keep, rows)` is
+/// accepted — this is exactly what makes `exact` dispatch unbounded.
+pub fn artifact(
+    f: &FamilyInfo,
+    kind: &str,
+    seq: usize,
+    keep: usize,
+    mode: Mode,
+    rows: usize,
+) -> Result<ArtifactInfo> {
+    let fam = &f.name;
+    let mode_tag = |keep: usize| match mode {
+        Mode::Plain => "full".to_string(),
+        Mode::Ltd | Mode::Bypass => format!("{}{keep}", mode.name()),
+    };
+    let (name, inputs, outputs) = match kind {
+        "init" => (
+            format!("{fam}_init"),
+            vec![scalar("seed", DType::U32)],
+            state_specs(f),
+        ),
+        "eval" => {
+            let mut outs = vec![scalar("loss_sum", DType::F32), scalar("tok", DType::F32)];
+            if f.is_vit() {
+                outs.push(scalar("correct", DType::F32));
+            }
+            let mut ins = param_specs(f, "");
+            ins.extend(batch_specs(f, seq, rows));
+            (format!("{fam}_eval_s{seq}"), ins, outs)
+        }
+        "train" => {
+            let mut ins = state_specs(f);
+            ins.push(scalar("t", DType::F32));
+            ins.push(scalar("lr", DType::F32));
+            ins.extend(batch_specs(f, seq, rows));
+            if mode != Mode::Plain {
+                ins.push(keep_spec(f, mode, keep));
+            }
+            let mut outs = state_specs(f);
+            outs.push(scalar("loss", DType::F32));
+            outs.push(scalar("gnorm", DType::F32));
+            outs.push(scalar("tok", DType::F32));
+            (format!("{fam}_train_s{seq}_{}", mode_tag(keep)), ins, outs)
+        }
+        "grad" => {
+            let mut ins = param_specs(f, "");
+            ins.extend(batch_specs(f, seq, rows));
+            if mode != Mode::Plain {
+                ins.push(keep_spec(f, mode, keep));
+            }
+            let mut outs = param_specs(f, "g_");
+            outs.push(scalar("loss_sum", DType::F32));
+            outs.push(scalar("den", DType::F32));
+            (format!("{fam}_grad_s{seq}_{}_r{rows}", mode_tag(keep)), ins, outs)
+        }
+        "apply" => {
+            let mut ins = state_specs(f);
+            ins.push(scalar("t", DType::F32));
+            ins.push(scalar("lr", DType::F32));
+            ins.push(scalar("den", DType::F32));
+            ins.extend(param_specs(f, "g_"));
+            let mut outs = state_specs(f);
+            outs.push(scalar("gnorm", DType::F32));
+            (format!("{fam}_apply"), ins, outs)
+        }
+        k => bail!("synth: unknown artifact kind '{k}'"),
+    };
+    Ok(ArtifactInfo {
+        file: format!("{name}.hlo"),
+        name,
+        family: fam.clone(),
+        kind: kind.to_string(),
+        seq,
+        mode,
+        keep,
+        rows,
+        inputs,
+        outputs,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Module text synthesis
+
+/// The surrogate module text for one artifact — the `key value` header the
+/// `xla` test-double interprets. Byte-identical to the Python generator's
+/// `hlo_text` (including the historical header comment: parity with the
+/// legacy grid and with the cross-check harness is bytewise).
+pub fn module_text(f: &FamilyInfo, info: &ArtifactInfo) -> String {
+    let semantic = semantic_of(f, &info.kind);
+    let pad = f.pad_mask && matches!(info.kind.as_str(), "train" | "eval" | "grad");
+    let mode = info.mode.name();
+    format!(
+        "# dsde surrogate HLO module — interpreted by the xla test-double\n\
+         # runtime (rust/xla); regenerated by gen_stub_artifacts.py.\n\
+         dsde-hlo 1\n\
+         name {name}\n\
+         semantic {semantic}\n\
+         family {fam}\n\
+         vocab {vocab}\n\
+         d_model {d_model}\n\
+         n_layers {n_layers}\n\
+         n_mid {n_mid}\n\
+         rows {rows}\n\
+         seq {seq}\n\
+         keep {keep}\n\
+         mode {mode}\n\
+         pad_mask {pad}\n\
+         classes {classes}\n\
+         patch_dim {patch_dim}\n\
+         gain {gain}\n",
+        name = info.name,
+        fam = f.name,
+        vocab = f.vocab,
+        d_model = f.d_model,
+        n_layers = f.n_layers,
+        n_mid = f.n_middle_layers,
+        rows = info.rows,
+        seq = info.seq,
+        keep = info.keep,
+        pad = u8::from(pad),
+        classes = f.n_classes,
+        patch_dim = f.patch_dim,
+        gain = GAIN,
+    )
+}
+
+fn semantic_of(f: &FamilyInfo, kind: &str) -> String {
+    if kind == "apply" {
+        return "apply".to_string();
+    }
+    let sem = if f.is_vit() { "vit" } else { "lm" };
+    format!("{sem}_{kind}")
+}
+
+// ---------------------------------------------------------------------------
+// Name parsing (the JIT specialization key is the artifact name)
+
+/// Resolve an artifact name back to its program point and synthesize its
+/// description. Inverse of the naming scheme in [`artifact`]; any
+/// well-formed name resolves, whether or not it lies on the legacy grid.
+pub fn artifact_from_name(
+    families: &BTreeMap<String, FamilyInfo>,
+    name: &str,
+) -> Result<ArtifactInfo> {
+    let (fam_name, rest) = name
+        .split_once('_')
+        .ok_or_else(|| anyhow!("unparseable artifact name '{name}'"))?;
+    let f = families
+        .get(fam_name)
+        .ok_or_else(|| anyhow!("unknown family '{fam_name}' in artifact name '{name}'"))?;
+    let parse_n = |s: &str, what: &str| -> Result<usize> {
+        let v: usize = s
+            .parse()
+            .map_err(|_| anyhow!("bad {what} in artifact name '{name}'"))?;
+        if v == 0 {
+            bail!("zero {what} in artifact name '{name}'");
+        }
+        Ok(v)
+    };
+    // {mode_tag} = full | ltd{K} | bypass{K}
+    let parse_mode = |tag: &str, seq: usize| -> Result<(Mode, usize)> {
+        if tag == "full" {
+            Ok((Mode::Plain, seq))
+        } else if let Some(k) = tag.strip_prefix("ltd") {
+            Ok((Mode::Ltd, parse_n(k, "keep")?))
+        } else if let Some(k) = tag.strip_prefix("bypass") {
+            Ok((Mode::Bypass, parse_n(k, "keep")?))
+        } else {
+            bail!("bad mode tag '{tag}' in artifact name '{name}'")
+        }
+    };
+    if rest == "init" {
+        return artifact(f, "init", 0, 0, Mode::Plain, f.batch);
+    }
+    if rest == "apply" {
+        return artifact(f, "apply", 0, 0, Mode::Plain, f.batch);
+    }
+    if let Some(s) = rest.strip_prefix("eval_s") {
+        return artifact(f, "eval", parse_n(s, "seq")?, parse_n(s, "seq")?, Mode::Plain, f.batch);
+    }
+    if let Some(body) = rest.strip_prefix("train_s") {
+        let (s, tag) = body
+            .split_once('_')
+            .ok_or_else(|| anyhow!("bad train artifact name '{name}'"))?;
+        let seq = parse_n(s, "seq")?;
+        let (mode, keep) = parse_mode(tag, seq)?;
+        if keep > seq {
+            bail!("keep {keep} > seq {seq} in artifact name '{name}'");
+        }
+        return artifact(f, "train", seq, keep, mode, f.batch);
+    }
+    if let Some(body) = rest.strip_prefix("grad_s") {
+        let (s, tail) = body
+            .split_once('_')
+            .ok_or_else(|| anyhow!("bad grad artifact name '{name}'"))?;
+        let (tag, r) = tail
+            .rsplit_once("_r")
+            .ok_or_else(|| anyhow!("grad artifact name '{name}' missing _r{{rows}}"))?;
+        let seq = parse_n(s, "seq")?;
+        let rows = parse_n(r, "rows")?;
+        let (mode, keep) = parse_mode(tag, seq)?;
+        if keep > seq {
+            bail!("keep {keep} > seq {seq} in artifact name '{name}'");
+        }
+        return artifact(f, "grad", seq, keep, mode, rows);
+    }
+    bail!("unparseable artifact name '{name}'")
+}
+
+// ---------------------------------------------------------------------------
+// Legacy grid enumeration + manifest emission
+
+/// Enumerate the legacy variant grid of one family, in the Python
+/// generator's order: init, eval, train (full → ltd → bypass), grad
+/// (mirroring the train order, widest shard first), apply.
+pub fn legacy_grid_family(f: &FamilyInfo) -> Result<Vec<ArtifactInfo>> {
+    let mut out = Vec::new();
+    out.push(artifact(f, "init", 0, 0, Mode::Plain, f.batch)?);
+    out.push(artifact(f, "eval", f.max_seq, f.max_seq, Mode::Plain, f.batch)?);
+    for &seq in &f.seq_buckets {
+        out.push(artifact(f, "train", seq, seq, Mode::Plain, f.batch)?);
+    }
+    for &seq in &f.ltd_seqs {
+        for &keep in f.keep_buckets.get(&seq).map(Vec::as_slice).unwrap_or(&[]) {
+            out.push(artifact(f, "train", seq, keep, Mode::Ltd, f.batch)?);
+        }
+    }
+    if f.bypass {
+        for &seq in &f.ltd_seqs {
+            for &keep in f.keep_buckets.get(&seq).map(Vec::as_slice).unwrap_or(&[]) {
+                out.push(artifact(f, "train", seq, keep, Mode::Bypass, f.batch)?);
+            }
+        }
+    }
+    let grads = |seq: usize, keep: usize, mode: Mode, out: &mut Vec<ArtifactInfo>| -> Result<()> {
+        for &rows in &f.grad_rows {
+            out.push(artifact(f, "grad", seq, keep, mode, rows)?);
+        }
+        Ok(())
+    };
+    for &seq in &f.seq_buckets {
+        grads(seq, seq, Mode::Plain, &mut out)?;
+    }
+    for &seq in &f.ltd_seqs {
+        for &keep in f.keep_buckets.get(&seq).map(Vec::as_slice).unwrap_or(&[]) {
+            grads(seq, keep, Mode::Ltd, &mut out)?;
+        }
+    }
+    if f.bypass {
+        for &seq in &f.ltd_seqs {
+            for &keep in f.keep_buckets.get(&seq).map(Vec::as_slice).unwrap_or(&[]) {
+                grads(seq, keep, Mode::Bypass, &mut out)?;
+            }
+        }
+    }
+    out.push(artifact(f, "apply", 0, 0, Mode::Plain, f.batch)?);
+    Ok(out)
+}
+
+/// The full legacy grid across all families, in manifest order.
+pub fn legacy_grid(families: &BTreeMap<String, FamilyInfo>) -> Result<Vec<ArtifactInfo>> {
+    let mut out = Vec::new();
+    for fam in FAMILY_ORDER {
+        let f = families
+            .get(fam)
+            .ok_or_else(|| anyhow!("family table missing '{fam}'"))?;
+        out.extend(legacy_grid_family(f)?);
+    }
+    Ok(out)
+}
+
+/// Emit `manifest.json` — byte-identical to the Python generator's
+/// `json.dump(manifest, indent=1, sort_keys=True)` plus trailing newline.
+pub fn manifest_text(families: &BTreeMap<String, FamilyInfo>) -> Result<String> {
+    use crate::config::json::Json;
+    let num = |v: usize| Json::Num(v as f64);
+    let nums = |vs: &[usize]| Json::Arr(vs.iter().map(|&v| num(v)).collect());
+    let spec_json = |s: &TensorSpec| {
+        let dtype = match s.dtype {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::U32 => "u32",
+        };
+        Json::obj(vec![
+            ("name", Json::Str(s.name.clone())),
+            ("dtype", Json::Str(dtype.to_string())),
+            ("shape", nums(&s.shape)),
+        ])
+    };
+    let mut fam_objs = BTreeMap::new();
+    for (name, f) in families {
+        let keep_buckets = Json::Obj(
+            f.keep_buckets
+                .iter()
+                .map(|(s, ks)| (s.to_string(), nums(ks)))
+                .collect(),
+        );
+        fam_objs.insert(
+            name.clone(),
+            Json::obj(vec![
+                ("vocab", num(f.vocab)),
+                ("d_model", num(f.d_model)),
+                ("n_layers", num(f.n_layers)),
+                ("n_heads", num(f.n_heads)),
+                ("d_ff", num(f.d_ff)),
+                ("max_seq", num(f.max_seq)),
+                ("batch", num(f.batch)),
+                ("n_experts", num(f.n_experts)),
+                ("n_classes", num(f.n_classes)),
+                ("patch_dim", num(f.patch_dim)),
+                ("n_middle_layers", num(f.n_middle_layers)),
+                ("seq_buckets", nums(&f.seq_buckets)),
+                ("ltd_seqs", nums(&f.ltd_seqs)),
+                ("keep_buckets", keep_buckets),
+                ("grad_rows", nums(&f.grad_rows)),
+                ("n_params", num(f.n_params)),
+            ]),
+        );
+    }
+    let arts: Vec<Json> = legacy_grid(families)?
+        .iter()
+        .map(|a| {
+            let mode = a.mode.name();
+            Json::obj(vec![
+                ("name", Json::Str(a.name.clone())),
+                ("file", Json::Str(a.file.clone())),
+                ("family", Json::Str(a.family.clone())),
+                ("kind", Json::Str(a.kind.clone())),
+                ("seq", num(a.seq)),
+                ("mode", Json::Str(mode.to_string())),
+                ("keep", num(a.keep)),
+                ("rows", num(a.rows)),
+                ("inputs", Json::Arr(a.inputs.iter().map(spec_json).collect())),
+                ("outputs", Json::Arr(a.outputs.iter().map(spec_json).collect())),
+            ])
+        })
+        .collect();
+    let manifest = Json::obj(vec![
+        ("version", num(1)),
+        ("families", Json::Obj(fam_objs)),
+        ("artifacts", Json::Arr(arts)),
+    ]);
+    Ok(format!("{}\n", manifest.to_string_python_pretty()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_grid_has_the_172_points() {
+        let families = builtin_families();
+        let grid = legacy_grid(&families).unwrap();
+        assert_eq!(grid.len(), 172);
+        let per_family = |fam: &str| grid.iter().filter(|a| a.family == fam).count();
+        assert_eq!(per_family("gpt"), 53);
+        assert_eq!(per_family("bert"), 53);
+        assert_eq!(per_family("moe"), 43);
+        assert_eq!(per_family("vit"), 23);
+    }
+
+    #[test]
+    fn names_roundtrip_through_the_parser() {
+        let families = builtin_families();
+        for a in legacy_grid(&families).unwrap() {
+            let b = artifact_from_name(&families, &a.name).unwrap();
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.kind, b.kind);
+            assert_eq!((a.seq, a.keep, a.mode, a.rows), (b.seq, b.keep, b.mode, b.rows));
+            assert_eq!(a.inputs.len(), b.inputs.len());
+            assert_eq!(a.outputs.len(), b.outputs.len());
+        }
+    }
+
+    #[test]
+    fn off_grid_names_resolve() {
+        let families = builtin_families();
+        // A sequence in no bucket, an unusual keep, a non-power-of-two width.
+        let a = artifact_from_name(&families, "gpt_train_s20_ltd7").unwrap();
+        assert_eq!((a.seq, a.keep, a.mode), (20, 7, Mode::Ltd));
+        let g = artifact_from_name(&families, "gpt_grad_s20_full_r3").unwrap();
+        assert_eq!((g.seq, g.rows), (20, 3));
+        assert_eq!(g.inputs[g.inputs.len() - 1].shape, vec![3, 20]);
+        let b = artifact_from_name(&families, "bert_grad_s64_bypass32_r2").unwrap();
+        assert_eq!(b.inputs.last().unwrap().name, "keep_idx");
+        assert_eq!(b.inputs.last().unwrap().shape, vec![32]);
+    }
+
+    #[test]
+    fn malformed_names_rejected() {
+        let families = builtin_families();
+        for bad in [
+            "nope_init",
+            "gpt",
+            "gpt_train_s0_full",
+            "gpt_train_s64_ltd0",
+            "gpt_train_s64_ltd65",
+            "gpt_grad_s64_full",
+            "gpt_warble_s64",
+        ] {
+            assert!(artifact_from_name(&families, bad).is_err(), "{bad} should not parse");
+        }
+    }
+
+    #[test]
+    fn module_text_carries_the_program_header() {
+        let families = builtin_families();
+        let f = &families["bert"];
+        let a = artifact_from_name(&families, "bert_train_s32_ltd16").unwrap();
+        let text = module_text(f, &a);
+        assert!(text.contains("\nsemantic lm_train\n"));
+        assert!(text.contains("\npad_mask 1\n"));
+        assert!(text.contains("\nmode ltd\n"));
+        assert!(text.ends_with("gain 16\n"));
+        // init never takes a pad mask even for bert
+        let init = artifact_from_name(&families, "bert_init").unwrap();
+        assert!(module_text(f, &init).contains("\npad_mask 0\n"));
+    }
+}

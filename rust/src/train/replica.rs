@@ -28,25 +28,38 @@ use crate::runtime::{get_f32, ArtifactInfo, FamilyInfo, Registry, Step};
 use crate::Result;
 use anyhow::{anyhow, bail, Context};
 use std::collections::{BTreeMap, HashMap};
-use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// Everything a rank worker needs to compile artifacts on demand:
-/// name → (HLO path, manifest info). Snapshot of the registry's catalog,
-/// shareable across threads (the `Runtime` itself is not `Sync`).
-pub type ArtifactCatalog = Arc<BTreeMap<String, (PathBuf, ArtifactInfo)>>;
+/// Everything a rank worker needs to JIT-specialize grad executables on
+/// demand: the family table (any artifact synthesizes from its name
+/// alone — see `runtime::synth`), snapshotted so it is shareable across
+/// threads (the `Runtime` itself is not `Sync`). Off-grid widths (the
+/// `exact` dispatch policy, e.g. `n_replicas = 3`) resolve exactly like
+/// grid points.
+pub struct ArtifactCatalog {
+    families: BTreeMap<String, FamilyInfo>,
+}
 
-/// Build the catalog from a registry (cheap: paths + specs only).
-pub fn artifact_catalog(reg: &Registry) -> ArtifactCatalog {
-    Arc::new(
-        reg.artifacts
-            .iter()
-            .map(|(name, info)| (name.clone(), (reg.dir.join(&info.file), info.clone())))
-            .collect(),
-    )
+impl ArtifactCatalog {
+    /// Resolve an artifact name to its description + surrogate module
+    /// text (what a worker compiles).
+    pub fn resolve(&self, name: &str) -> Result<(ArtifactInfo, String)> {
+        let info = crate::runtime::synth::artifact_from_name(&self.families, name)?;
+        let fam = self
+            .families
+            .get(&info.family)
+            .ok_or_else(|| anyhow!("catalog missing family '{}'", info.family))?;
+        let text = crate::runtime::synth::module_text(fam, &info);
+        Ok((info, text))
+    }
+}
+
+/// Build the catalog from a registry (cheap: the family table only).
+pub fn artifact_catalog(reg: &Registry) -> Arc<ArtifactCatalog> {
+    Arc::new(ArtifactCatalog { families: reg.families.clone() })
 }
 
 struct RankJob {
@@ -91,10 +104,15 @@ pub struct ReplicaEngine {
 }
 
 impl ReplicaEngine {
-    /// Spawn `n_ranks` rank workers. Workers compile grad executables
-    /// lazily from `catalog` (each keeps its own cache, so the first step
-    /// per (route, width) pays the surrogate parse cost once per rank).
-    pub fn spawn(n_ranks: usize, catalog: ArtifactCatalog, fam: Arc<FamilyInfo>) -> ReplicaEngine {
+    /// Spawn `n_ranks` rank workers. Workers JIT-specialize grad
+    /// executables lazily from `catalog` (each keeps its own cache, so the
+    /// first step per (route, width) pays the synthesize+compile cost once
+    /// per rank).
+    pub fn spawn(
+        n_ranks: usize,
+        catalog: Arc<ArtifactCatalog>,
+        fam: Arc<FamilyInfo>,
+    ) -> ReplicaEngine {
         let n = n_ranks.max(1);
         let (done_tx, done_rx) = channel::<RankDone>();
         let mut txs = Vec::with_capacity(n);
@@ -225,7 +243,7 @@ impl Drop for ReplicaEngine {
 
 fn worker_loop(
     rank: usize,
-    catalog: &BTreeMap<String, (PathBuf, ArtifactInfo)>,
+    catalog: &ArtifactCatalog,
     fam: &FamilyInfo,
     rx: Receiver<RankJob>,
     done_tx: Sender<RankDone>,
@@ -257,16 +275,16 @@ fn worker_loop(
 fn run_job(
     client: &xla::PjRtClient,
     cache: &mut HashMap<String, Step>,
-    catalog: &BTreeMap<String, (PathBuf, ArtifactInfo)>,
+    catalog: &ArtifactCatalog,
     fam: &FamilyInfo,
     job: &RankJob,
 ) -> Result<Vec<xla::Literal>> {
     if !cache.contains_key(&job.artifact) {
-        let (path, info) = catalog
-            .get(&job.artifact)
-            .ok_or_else(|| anyhow!("unknown grad artifact '{}'", job.artifact))?;
-        let step = Step::load(client, path, info.clone())
-            .with_context(|| format!("loading {}", job.artifact))?;
+        let (info, text) = catalog
+            .resolve(&job.artifact)
+            .with_context(|| format!("synthesizing grad artifact '{}'", job.artifact))?;
+        let step = Step::from_text(client, &text, info)
+            .with_context(|| format!("compiling {}", job.artifact))?;
         cache.insert(job.artifact.clone(), step);
     }
     let step = cache.get(&job.artifact).expect("just inserted");
@@ -286,6 +304,7 @@ fn run_job(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::schema::DispatchPolicy;
     use crate::curriculum::loader::LmBatch;
     use crate::runtime::{scalar_u32, Mode, Runtime};
 
@@ -312,7 +331,10 @@ mod tests {
         let params: Arc<Vec<xla::Literal>> =
             Arc::new(state[..fam.n_params].to_vec());
         let batch = lm_batch(fam.batch, 64);
-        let route = rt.registry.route_train("gpt", 64, 64, Mode::Plain).unwrap();
+        let route = rt
+            .registry
+            .route_train("gpt", 64, 64, Mode::Plain, DispatchPolicy::Bucket)
+            .unwrap();
 
         let mut reference: Option<(Vec<Vec<u32>>, u32, u32)> = None;
         for n in [1usize, 2, 4] {
@@ -320,7 +342,11 @@ mod tests {
             let plan = ShardPlan::new(fam.batch, n);
             assert!(plan.aligned());
             let names: Vec<String> = (0..n)
-                .map(|r| rt.registry.grad_name("gpt", &route, plan.rows_of(r)).unwrap())
+                .map(|r| {
+                    rt.registry
+                        .grad_name("gpt", &route, plan.rows_of(r), DispatchPolicy::Bucket)
+                        .unwrap()
+                })
                 .collect();
             let red = eng
                 .grad_step(&plan, &names, params.clone(), &batch, None, fam.n_params)

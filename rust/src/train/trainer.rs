@@ -16,7 +16,7 @@
 //! construction overlaps step execution. The trainer then drains batches
 //! in step order and reports how long it stalled waiting for data.
 
-use crate::config::schema::{LrBasis, PipelineConfig, Routing, RunConfig};
+use crate::config::schema::{DispatchPolicy, LrBasis, PipelineConfig, Routing, RunConfig};
 use crate::curriculum::loader::{AnyBatch, LmBatch, ShardPlan, VitBatch};
 use crate::curriculum::scheduler::{ClScheduler, ClState};
 use crate::curriculum::{BertLoader, GptLoader, VitLoader};
@@ -79,6 +79,14 @@ pub struct RunResult {
     /// Per-step train loss (f32 exactly as the runtime produced it), for
     /// bit-exact loss-curve comparison across replica counts.
     pub step_losses: Vec<f32>,
+    /// Seconds the run compiled JIT specializations on the step-loop
+    /// thread (inline misses; ~0 when prewarm hides compilation).
+    pub compile_stall_secs: f64,
+    /// Specialization-cache hits / misses during the run.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Executables the background prewarmer compiled for this run.
+    pub prewarmed_compiles: u64,
 }
 
 impl RunResult {
@@ -234,49 +242,63 @@ impl<'rt> Trainer<'rt> {
         }
         let mut dropper = RandomDropper::new(run.seed ^ 0xd20b);
         dropper.pin_first_token = run.family == "vit";
-        // Pre-compile every executable this run will route to, so compile
-        // time never pollutes the measured step/wall timings (the registry
-        // caches per process; repeated runs reuse the executables). In
-        // replica mode the coordinator never executes the fused train
-        // variants — rank workers compile their grad variants instead —
-        // so the pre-warm would be pure waste.
-        if run.n_replicas == 0 {
-            for name in &planned {
-                rt.step(name)?;
-            }
+        // Hand the full planned specialization set to the runtime's
+        // background compiler, so JIT compile latency hides behind the
+        // async data pipeline instead of stalling the step loop (any
+        // point the worker has not finished by dispatch time compiles
+        // inline — bit-identical either way, just slower). In replica
+        // mode the coordinator never executes the fused train variants —
+        // rank workers compile their grad variants instead — so the
+        // prewarm would be pure waste.
+        if run.n_replicas == 0 && run.prewarm {
+            rt.prewarm(planned.iter().cloned())?;
         }
-        // Replica engine: the shard width must be compiled (n must divide
-        // the batch and hit a grad_rows bucket) for every planned route;
-        // the shared apply executable is pre-warmed on the coordinator
-        // (grad variants compile lazily on the rank workers).
+        // Replica engine, bucket policy: the shard width must lie on the
+        // compiled grad_rows grid (n divides the batch, power-of-two
+        // shards) for every planned route — the bit-equivalence
+        // precondition. The exact policy synthesizes any width on demand
+        // (uneven shards allowed; the n↔1 bit-equality guarantee is
+        // explicitly traded away).
         if run.n_replicas > 0 {
-            if fam.batch % run.n_replicas != 0 {
+            if run.n_replicas > fam.batch {
                 bail!(
-                    "n_replicas {} must divide the {} family batch {}",
+                    "n_replicas {} exceeds the {} family batch {}",
                     run.n_replicas,
                     run.family,
                     fam.batch
                 );
             }
-            let rows = fam.batch / run.n_replicas;
-            if run.n_replicas > 1 && !rows.is_power_of_two() {
-                bail!(
-                    "n_replicas {} gives shard width {rows}: rank boundaries would not \
-                     align with the gradient row tree, voiding the bit-equivalence \
-                     guarantee (shard width must be a power of two)",
-                    run.n_replicas
-                );
-            }
-            for name in &planned {
-                let info = rt.registry.artifact(name)?;
-                if info.kind == "train" {
-                    let route = Route {
-                        artifact: info.name.clone(),
-                        seq: info.seq,
-                        keep: if info.mode == Mode::Plain { info.seq } else { info.keep },
-                        mode: info.mode,
-                    };
-                    rt.registry.grad_name(&run.family, &route, rows)?;
+            if run.dispatch == DispatchPolicy::Bucket {
+                if fam.batch % run.n_replicas != 0 {
+                    bail!(
+                        "n_replicas {} must divide the {} family batch {} under bucket \
+                         dispatch (use --dispatch exact for uneven shards)",
+                        run.n_replicas,
+                        run.family,
+                        fam.batch
+                    );
+                }
+                let rows = fam.batch / run.n_replicas;
+                if run.n_replicas > 1 && !rows.is_power_of_two() {
+                    bail!(
+                        "n_replicas {} gives shard width {rows}: rank boundaries would not \
+                         align with the gradient row tree, voiding the bit-equivalence \
+                         guarantee (shard width must be a power of two under bucket \
+                         dispatch)",
+                        run.n_replicas
+                    );
+                }
+                for name in &planned {
+                    let info = rt.registry.artifact(name)?;
+                    if info.kind == "train" {
+                        let route = Route {
+                            artifact: info.name.clone(),
+                            seq: info.seq,
+                            keep: if info.mode == Mode::Plain { info.seq } else { info.keep },
+                            mode: info.mode,
+                        };
+                        rt.registry.grad_name(&run.family, &route, rows, run.dispatch)?;
+                    }
                 }
             }
             rt.step(&rt.registry.apply_name(&run.family)?)?;
@@ -310,6 +332,7 @@ impl<'rt> Trainer<'rt> {
         let mut tail_losses = Vec::new();
         let mut step_losses: Vec<f32> = Vec::with_capacity(self.run.total_steps as usize);
         let tail_from = self.run.total_steps - (self.run.total_steps / 10).max(1);
+        let cache0 = self.rt.cache_stats();
         let wall0 = Instant::now();
 
         let loader = self.loader.take().expect("trainer runs once");
@@ -396,7 +419,7 @@ impl<'rt> Trainer<'rt> {
                     .map(|r| {
                         self.rt
                             .registry
-                            .grad_name(&self.run.family, route, plan.rows_of(r))
+                            .grad_name(&self.run.family, route, plan.rows_of(r), self.run.dispatch)
                     })
                     .collect::<Result<Vec<_>>>()?;
                 // One params snapshot per step, shared by every rank via
@@ -497,6 +520,7 @@ impl<'rt> Trainer<'rt> {
             compute_tokens: self.accountant.compute_tokens(),
             eval_loss: final_eval_loss,
         });
+        let cache = self.rt.cache_stats().since(&cache0);
         Ok(RunResult {
             label: self.run.label.clone(),
             case: self.run.case_name(),
@@ -519,6 +543,10 @@ impl<'rt> Trainer<'rt> {
             rank_imbalance,
             state_hash: state_fingerprint(&self.state),
             step_losses,
+            compile_stall_secs: cache.inline_compile_secs,
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+            prewarmed_compiles: cache.prewarmed,
         })
     }
 
@@ -630,10 +658,10 @@ pub fn plan_schedule(
     let mut schedule = Vec::with_capacity(run.total_steps as usize);
     for step in 0..run.total_steps {
         let cl = scheduler.state_at(step);
-        let seq_bucket = rt.registry.seq_bucket(&run.family, cl.seq)?;
+        let step_seq = rt.registry.seq_for(&run.family, cl.seq, run.dispatch)?;
         let (keep_req, mode) = match &run.routing {
-            Routing::None => (seq_bucket, Mode::Plain),
-            Routing::RandomLtd(l) => (kept_len(l, step, seq_bucket), Mode::Ltd),
+            Routing::None => (step_seq, Mode::Plain),
+            Routing::RandomLtd(l) => (kept_len(l, step, step_seq), Mode::Ltd),
             Routing::TokenBypass(b) => {
                 let l = crate::config::schema::LtdConfig {
                     r_start: b.r_start,
@@ -641,10 +669,10 @@ pub fn plan_schedule(
                     schedule: b.schedule,
                     exempt_first_last: true,
                 };
-                (kept_len(&l, step, seq_bucket), Mode::Bypass)
+                (kept_len(&l, step, step_seq), Mode::Bypass)
             }
         };
-        let route = rt.registry.route_train(&run.family, cl.seq, keep_req, mode)?;
+        let route = rt.registry.route_train(&run.family, cl.seq, keep_req, mode, run.dispatch)?;
         let dropping = route.mode != Mode::Plain && route.keep < route.seq;
         acct.record(
             fam.batch,

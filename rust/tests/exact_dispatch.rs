@@ -1,0 +1,70 @@
+//! End-to-end proof that the `exact` dispatch policy runs shapes the
+//! static artifact grid never carried: curriculum sequence lengths
+//! falling in no bucket, off-bucket keep lengths, and a non-power-of-two
+//! replica count (`n_replicas = 3` → uneven 3/3/2 shards).
+
+use dsde::config::schema::DispatchPolicy;
+use dsde::exp::cases::exact_dispatch_cases;
+use dsde::runtime::Registry;
+use dsde::train::TrainEnv;
+
+fn env() -> TrainEnv {
+    TrainEnv::new(200, 91).expect("builtin registry")
+}
+
+/// The legacy bucket set for gpt: any dispatched train artifact outside
+/// these (seq, keep) pairs is an off-grid specialization.
+fn on_legacy_grid(registry: &Registry, artifact: &str) -> bool {
+    registry.grid.contains_key(artifact)
+}
+
+#[test]
+fn exact_dispatch_runs_off_grid_sequences_end_to_end() {
+    let env = env();
+    let cases = exact_dispatch_cases(40, 64, 7);
+    let r = env.run(cases[0].clone()).expect("exact run completes");
+    assert_eq!(r.steps, 40);
+    assert!(r.final_eval_loss.is_finite());
+    assert!(r.step_losses.iter().all(|l| l.is_finite()));
+    // The seqtru curriculum walks 8..64 linearly; verbatim dispatch must
+    // have specialized points no bucket ever offered (e.g. seq 9, 23, 41).
+    let off_grid: Vec<&String> = r
+        .dispatch
+        .keys()
+        .filter(|name| !on_legacy_grid(&env.rt.registry, name))
+        .collect();
+    assert!(
+        !off_grid.is_empty(),
+        "expected off-grid specializations, dispatch was {:?}",
+        r.dispatch.keys().collect::<Vec<_>>()
+    );
+    // and they were synthesized/compiled by the JIT cache, not pre-listed
+    assert!(r.cache_misses + r.prewarmed_compiles > 0);
+}
+
+#[test]
+fn exact_dispatch_runs_three_replicas_end_to_end() {
+    // n_replicas = 3 on a batch of 8: shard widths 3/3/2, structurally
+    // impossible on the power-of-two grad grid.
+    let env = env();
+    let cases = exact_dispatch_cases(12, 64, 7);
+    let cfg = cases[1].clone();
+    assert_eq!(cfg.n_replicas, 3);
+    let r = env.run(cfg).expect("dp3 exact run completes");
+    assert_eq!(r.n_replicas, 3);
+    assert!(r.final_eval_loss.is_finite());
+    assert!(r.step_losses.iter().all(|l| l.is_finite()));
+    assert!(r.rank_imbalance >= 0.0 && r.rank_imbalance < 1.0);
+}
+
+#[test]
+fn bucket_dispatch_still_rejects_three_replicas() {
+    // The bit-equivalence guard stays on the default policy.
+    let env = env();
+    let mut cfg = exact_dispatch_cases(8, 64, 7)[1].clone();
+    assert_eq!(cfg.n_replicas, 3);
+    cfg.dispatch = DispatchPolicy::Bucket;
+    let err = env.run(cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("must divide"), "unexpected error: {msg}");
+}

@@ -1,0 +1,62 @@
+//! Trainer-level behavior of the JIT specialization cache: prewarm is a
+//! pure latency optimization (bit-identical streams with it on or off),
+//! and a whole run's executables flow through the bounded LRU with sane
+//! counters.
+
+use dsde::config::schema::{LtdConfig, PipelineConfig, Routing, RunConfig};
+use dsde::config::schema::{Bound, ClConfig, Metric};
+use dsde::train::TrainEnv;
+
+fn composed(label: &str, steps: u64) -> RunConfig {
+    let mut c = RunConfig::baseline("gpt", steps, 3e-3);
+    c.label = label.to_string();
+    c.curriculum.push(ClConfig::new(
+        Metric::SeqTru,
+        Bound::Value(8.0),
+        Bound::Value(64.0),
+        (steps / 2).max(1),
+    ));
+    c.routing = Routing::RandomLtd(LtdConfig::mslg(16, steps));
+    c
+}
+
+/// ISSUE 3 satellite: same step stream with prewarm on/off must be
+/// bit-identical — final state, every per-step f32 loss, and the sampler
+/// side (dispatch histogram) all agree.
+#[test]
+fn prewarm_on_off_is_bit_identical() {
+    let env = TrainEnv::new(200, 17).expect("builtin registry");
+    let mut warm = composed("prewarm-on", 24);
+    warm.prewarm = true;
+    let mut cold = composed("prewarm-off", 24);
+    cold.prewarm = false;
+    // Also cross the async pipeline on/off axis to show prewarm composes.
+    for pipeline in [PipelineConfig::default(), PipelineConfig::disabled()] {
+        let mut a = warm.clone();
+        a.pipeline = pipeline;
+        let mut b = cold.clone();
+        b.pipeline = pipeline;
+        let ra = env.run(a).unwrap();
+        let rb = env.run(b).unwrap();
+        assert_eq!(ra.state_hash, rb.state_hash, "state diverged (pipeline {pipeline:?})");
+        let bits = |ls: &[f32]| ls.iter().map(|l| l.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&ra.step_losses), bits(&rb.step_losses));
+        assert_eq!(ra.dispatch, rb.dispatch);
+    }
+}
+
+#[test]
+fn run_reports_cache_counters() {
+    let env = TrainEnv::new(200, 23).expect("builtin registry");
+    let r = env.run(composed("counted", 16)).unwrap();
+    // Every dispatched artifact was served by the cache at least once per
+    // step, so hits+misses covers the run densely.
+    let lookups = r.cache_hits + r.cache_misses + r.prewarmed_compiles;
+    assert!(lookups >= r.steps, "lookups {lookups} < steps {}", r.steps);
+    assert!(r.compile_stall_secs >= 0.0);
+    // A second identical run on the same runtime is all warm.
+    let r2 = env.run(composed("counted-again", 16)).unwrap();
+    assert_eq!(r2.cache_misses, 0, "second run must be fully cached");
+    assert_eq!(r2.prewarmed_compiles, 0, "nothing left to prewarm");
+    assert_eq!(r2.state_hash, r.state_hash, "cache reuse must not change results");
+}

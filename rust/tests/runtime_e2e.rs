@@ -1,11 +1,13 @@
-//! Runtime integration: load AOT artifacts, execute init/train/eval steps
-//! directly against the PJRT client, and verify numeric behavior end to
-//! end (Python is not involved — these run purely from artifacts/).
+//! Runtime integration: JIT-specialize surrogate programs, execute
+//! init/train/eval steps directly against the PJRT client, and verify
+//! numeric behavior end to end (Python is not involved — programs are
+//! synthesized in-process).
 
+use dsde::config::schema::DispatchPolicy;
 use dsde::runtime::{get_f32, lit_f32, lit_i32, scalar_f32, scalar_u32, Mode, Runtime};
 
 fn runtime() -> Runtime {
-    Runtime::open_default().expect("artifacts present (run `make artifacts`)")
+    Runtime::open_default().expect("builtin registry")
 }
 
 /// Build a deterministic fake LM batch.
@@ -127,7 +129,7 @@ fn route_then_execute_all_families() {
         let fam = rt.registry.family(fam_name).unwrap().clone();
         let route = rt
             .registry
-            .route_train(fam_name, fam.max_seq, fam.max_seq / 2, Mode::Ltd)
+            .route_train(fam_name, fam.max_seq, fam.max_seq / 2, Mode::Ltd, DispatchPolicy::Bucket)
             .unwrap();
         let exe = rt.step(&route.artifact).unwrap();
         assert_eq!(exe.info.family, fam_name);

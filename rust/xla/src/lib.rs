@@ -270,6 +270,17 @@ impl HloModuleProto {
     pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| Error(format!("reading {path}: {e}")))?;
+        Self::parse_text(&text, path)
+    }
+
+    /// Parse a surrogate module from in-memory text (the in-process
+    /// synthesis path: no file ever exists for JIT-specialized variants).
+    pub fn from_text(text: &str) -> Result<HloModuleProto> {
+        Self::parse_text(text, "<memory>")
+    }
+
+    fn parse_text(text: &str, src: &str) -> Result<HloModuleProto> {
+        let path = src;
         let mut fields: HashMap<String, String> = HashMap::new();
         for line in text.lines() {
             let line = line.trim();
