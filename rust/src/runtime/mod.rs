@@ -26,10 +26,12 @@ pub use collective::{tree_reduce, tree_reduce_literals};
 pub use executable::{get_f32, lit_f32, lit_i32, scalar_f32, scalar_u32, Step};
 
 use crate::Result;
-use std::cell::{Cell, RefCell};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// Default specialization-cache capacity. Far above any single run's
@@ -136,19 +138,22 @@ impl LruCache {
 
 /// The background specialization compiler: receives (generation, name,
 /// info, text) jobs, compiles on its own client, ships finished steps
-/// back. The generation stamp lets [`Runtime::clear_cache`] invalidate
-/// everything in flight, so a cleared runtime can never adopt a stale
-/// compile into its counters.
+/// back. The shared generation counter makes the queue cancelable:
+/// [`Runtime::clear_cache`] bumps it, so the worker *skips* (not just
+/// the cache discards) every job stamped with an older generation, and
+/// drop stores `u64::MAX` so a pending backlog never delays teardown.
 struct Prewarmer {
     job_tx: Sender<(u64, String, ArtifactInfo, String)>,
     done_rx: Receiver<(u64, String, Step)>,
+    current: Arc<AtomicU64>,
     handle: Option<JoinHandle<()>>,
 }
 
 impl Prewarmer {
-    fn spawn() -> Prewarmer {
+    fn spawn(current: Arc<AtomicU64>) -> Prewarmer {
         let (job_tx, job_rx) = channel::<(u64, String, ArtifactInfo, String)>();
         let (done_tx, done_rx) = channel::<(u64, String, Step)>();
+        let worker_gen = current.clone();
         let handle = std::thread::Builder::new()
             .name("dsde-prewarm".into())
             .spawn(move || {
@@ -157,6 +162,9 @@ impl Prewarmer {
                     Err(_) => return,
                 };
                 while let Ok((generation, name, info, text)) = job_rx.recv() {
+                    if generation != worker_gen.load(Ordering::Relaxed) {
+                        continue; // canceled by clear_cache or teardown
+                    }
                     match Step::from_text(&client, &text, info) {
                         // A failed prewarm is not an error: the same point
                         // will compile inline (and report properly) if the
@@ -171,13 +179,15 @@ impl Prewarmer {
                 }
             })
             .expect("spawn prewarm worker");
-        Prewarmer { job_tx, done_rx, handle: Some(handle) }
+        Prewarmer { job_tx, done_rx, current, handle: Some(handle) }
     }
 }
 
 impl Drop for Prewarmer {
     fn drop(&mut self) {
-        // Closing the job channel ends the worker loop.
+        // Cancel any backlog (the runtime is going away with us), then
+        // close the job channel to end the worker loop.
+        self.current.store(u64::MAX, Ordering::Relaxed);
         let (tx, _rx) = channel();
         self.job_tx = tx;
         if let Some(h) = self.handle.take() {
@@ -196,9 +206,9 @@ pub struct Runtime {
     /// call (prewarm-disabled runs and replica-mode coordinators never
     /// pay for the thread or its client).
     prewarmer: RefCell<Option<Prewarmer>>,
-    /// Bumped by [`Runtime::clear_cache`]; prewarm results from older
-    /// generations are discarded on adoption.
-    generation: Cell<u64>,
+    /// Bumped by [`Runtime::clear_cache`]; the worker skips queued jobs
+    /// from older generations and adoption discards their results.
+    generation: Arc<AtomicU64>,
 }
 
 impl Runtime {
@@ -225,7 +235,7 @@ impl Runtime {
             cache: RefCell::new(LruCache::new(cap)),
             stats: RefCell::new(CacheStats::default()),
             prewarmer: RefCell::new(None),
-            generation: Cell::new(0),
+            generation: Arc::new(AtomicU64::new(0)),
         })
     }
 
@@ -262,9 +272,10 @@ impl Runtime {
     /// prewarming, since programs are pure functions of their inputs and
     /// the cache serves the same executable either way.
     pub fn prewarm<I: IntoIterator<Item = String>>(&self, names: I) -> Result<usize> {
-        let generation = self.generation.get();
+        let generation = self.generation.load(Ordering::Relaxed);
         let mut prewarmer = self.prewarmer.borrow_mut();
-        let worker = prewarmer.get_or_insert_with(Prewarmer::spawn);
+        let worker =
+            prewarmer.get_or_insert_with(|| Prewarmer::spawn(self.generation.clone()));
         let mut queued = 0;
         for name in names {
             if self.cache.borrow_mut().get(&name).is_some() {
@@ -287,7 +298,7 @@ impl Runtime {
             return;
         };
         while let Ok((generation, name, step)) = worker.done_rx.try_recv() {
-            if generation != self.generation.get() {
+            if generation != self.generation.load(Ordering::Relaxed) {
                 continue; // compiled for a cleared cache: stale
             }
             let mut cache = self.cache.borrow_mut();
@@ -305,7 +316,7 @@ impl Runtime {
     /// (counters are preserved). Benches use this to re-measure
     /// cold-compile behavior on a shared runtime.
     pub fn clear_cache(&self) {
-        self.generation.set(self.generation.get() + 1);
+        self.generation.fetch_add(1, Ordering::Relaxed);
         let cap = self.cache.borrow().cap;
         *self.cache.borrow_mut() = LruCache::new(cap);
     }

@@ -36,8 +36,14 @@ fn prewarm_on_off_is_bit_identical() {
         a.pipeline = pipeline;
         let mut b = cold.clone();
         b.pipeline = pipeline;
+        // Cold-start each run: without this, every executable is already
+        // cached after the first run and the prewarm-off case would never
+        // exercise the inline-compile path it exists to compare.
+        env.rt.clear_cache();
         let ra = env.run(a).unwrap();
+        env.rt.clear_cache();
         let rb = env.run(b).unwrap();
+        assert!(rb.cache_misses > 0, "prewarm-off run must compile inline");
         assert_eq!(ra.state_hash, rb.state_hash, "state diverged (pipeline {pipeline:?})");
         let bits = |ls: &[f32]| ls.iter().map(|l| l.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&ra.step_losses), bits(&rb.step_losses));

@@ -1,46 +1,90 @@
-//! Grid parity: the in-process synthesis (`runtime::synth`) must
-//! reproduce the legacy Python-generated artifact set byte for byte —
-//! every surrogate module of the 172-point grid and `manifest.json`
-//! itself. This is the proof obligation that allowed deleting the
-//! committed `.hlo` grid.
+//! Cross-language grid parity: the in-process synthesis
+//! (`runtime::synth`) must agree byte for byte with the independent
+//! Python reference generator (`python/compile/gen_stub_artifacts.py`)
+//! on the full 172-point legacy grid and on `manifest.json`.
+//!
+//! History: before the committed `.hlo` grid was deleted, this test
+//! byte-compared the Rust synthesis against every on-disk artifact (see
+//! the commit introducing `runtime/synth.rs`) — that is what proved the
+//! port. The Python generator now serves as the independent reference,
+//! and CI additionally runs the comparison in the other direction
+//! (`dsde synth --out` ↔ `gen_stub_artifacts.py --check`).
 
 use dsde::runtime::Registry;
+use std::path::{Path, PathBuf};
+use std::process::Command;
 
-/// Every legacy `.hlo` on disk must equal the Rust synthesis, and every
-/// grid point must have an on-disk counterpart (no drift either way).
+/// The committed manifest is an *emitted* spec: Rust emission must
+/// reproduce it byte for byte (this is also what the legacy Python
+/// generator wrote, unchanged by the port).
 #[test]
-fn synthesis_is_byte_identical_to_legacy_artifacts() {
-    let dir = std::path::Path::new("artifacts");
-    let registry = Registry::builtin().unwrap();
-    let mut on_disk = 0usize;
-    for entry in std::fs::read_dir(dir).expect("artifacts dir present") {
-        let path = entry.unwrap().path();
-        if path.extension().and_then(|e| e.to_str()) != Some("hlo") {
-            continue;
-        }
-        on_disk += 1;
-        let name = path.file_stem().unwrap().to_str().unwrap().to_string();
-        let legacy = std::fs::read_to_string(&path).unwrap();
-        let info = registry
-            .grid
-            .get(&name)
-            .unwrap_or_else(|| panic!("on-disk artifact '{name}' missing from the grid"));
-        let synthesized = registry.module_text(info).unwrap();
-        assert_eq!(
-            synthesized, legacy,
-            "synthesized module for '{name}' differs from the legacy artifact"
-        );
-    }
-    assert_eq!(
-        on_disk,
-        registry.grid.len(),
-        "grid enumeration and on-disk artifact set must match 1:1"
-    );
-}
-
-#[test]
-fn manifest_emission_is_byte_identical() {
+fn manifest_emission_is_byte_identical_to_committed() {
     let registry = Registry::builtin().unwrap();
     let legacy = std::fs::read_to_string("artifacts/manifest.json").unwrap();
     assert_eq!(registry.manifest_text().unwrap(), legacy);
+}
+
+#[test]
+fn grid_enumeration_is_stable() {
+    let registry = Registry::builtin().unwrap();
+    assert_eq!(registry.grid.len(), 172);
+    for (name, info) in &registry.grid {
+        assert_eq!(name, &info.name);
+        // every grid point synthesizes and round-trips through the name parser
+        let text = registry.module_text(info).unwrap();
+        assert!(text.starts_with("# dsde surrogate HLO module"));
+        let reparsed = registry.artifact(name).unwrap();
+        assert_eq!(reparsed.inputs.len(), info.inputs.len());
+        assert_eq!(reparsed.outputs.len(), info.outputs.len());
+    }
+}
+
+/// Full byte comparison against the Python reference generator. Skips
+/// (with a note) when `python3` is unavailable; CI always runs it.
+#[test]
+fn synthesis_matches_python_reference_generator() {
+    let script = Path::new("../python/compile/gen_stub_artifacts.py");
+    assert!(script.exists(), "cross-check harness missing");
+    let out_dir: PathBuf =
+        std::env::temp_dir().join(format!("dsde_py_grid_{}", std::process::id()));
+    let status = Command::new("python3")
+        .arg(script)
+        .arg("--out")
+        .arg(&out_dir)
+        .status();
+    let status = match status {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping python cross-check (python3 unavailable: {e})");
+            return;
+        }
+    };
+    assert!(status.success(), "reference generator failed");
+
+    let registry = Registry::builtin().unwrap();
+    let mut compared = 0usize;
+    for entry in std::fs::read_dir(&out_dir).unwrap() {
+        let path = entry.unwrap().path();
+        let file = path.file_name().unwrap().to_str().unwrap().to_string();
+        let reference = std::fs::read_to_string(&path).unwrap();
+        let synthesized = if file == "manifest.json" {
+            registry.manifest_text().unwrap()
+        } else if let Some(name) = file.strip_suffix(".hlo") {
+            let info = registry
+                .grid
+                .get(name)
+                .unwrap_or_else(|| panic!("python emitted '{name}', not on the Rust grid"));
+            registry.module_text(info).unwrap()
+        } else {
+            continue;
+        };
+        assert_eq!(synthesized, reference, "'{file}' diverges from the Python reference");
+        compared += 1;
+    }
+    std::fs::remove_dir_all(&out_dir).ok();
+    assert_eq!(
+        compared,
+        registry.grid.len() + 1,
+        "expected every grid point + manifest to be compared"
+    );
 }
