@@ -1,0 +1,88 @@
+//! checkpoint_smoke — save→resume→bit-identity smoke (ISSUE 4 satellite).
+//!
+//! Runs the composed GPT case (CL seqtru+voc + random-LTD) three ways —
+//! uninterrupted, with periodic saving, and resumed from the mid-run
+//! snapshot — and reports snapshot size, save overhead and resume
+//! latency. The finished runs MUST agree bit-for-bit (`state_hash`,
+//! per-step f32 losses, final eval); any divergence exits non-zero, so
+//! the CI bench-smoke job goes red on a durability break even before
+//! `tests/checkpoint_resume.rs` runs.
+//!
+//! `DSDE_BENCH_QUICK=1` shrinks the run for the CI smoke job.
+
+use dsde::bench::{scaled, Table};
+use dsde::exp::cases::dp_scaling_cases;
+use dsde::train::TrainEnv;
+
+fn main() -> dsde::Result<()> {
+    let steps = scaled(60, 10);
+    let save_at = (steps / 2).max(1);
+    let docs = scaled(800, 300) as usize;
+    eprintln!("== checkpoint_smoke: save at step {save_at} of {steps}, resume, compare ==");
+    let env = TrainEnv::new(docs, 7)?;
+    let fam = env.rt.registry.family("gpt")?.clone();
+
+    let mut base = dp_scaling_cases(steps, fam.max_seq, 1234, &[1])[0].clone();
+    base.n_replicas = 0;
+    base.label = "composed".into();
+
+    let dir = std::env::temp_dir().join(format!("dsde-ckpt-smoke-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let reference = env.run(base.clone())?;
+
+    let mut saving = base.clone();
+    saving.label = "composed+save".into();
+    saving.save_every = save_at;
+    saving.save_dir = dir.to_string_lossy().into_owned();
+    let t0 = std::time::Instant::now();
+    let saved = env.run(saving)?;
+    let save_wall = t0.elapsed().as_secs_f64();
+    let snapshot = dir.join(format!("step{save_at:06}.ckpt"));
+    let snap_bytes = std::fs::metadata(&snapshot).map(|m| m.len()).unwrap_or(0);
+
+    let mut resuming = base.clone();
+    resuming.label = "composed+resume".into();
+    resuming.resume = Some(snapshot.to_string_lossy().into_owned());
+    let resumed = env.run(resuming)?;
+
+    let mut t = Table::new(&["run", "wall s", "eval loss", "state hash"]);
+    for (name, r) in [("uninterrupted", &reference), ("saving", &saved), ("resumed", &resumed)] {
+        t.row(vec![
+            name.into(),
+            format!("{:.2}", r.wall_secs),
+            format!("{:.4}", r.final_eval_loss),
+            format!("{:016x}", r.state_hash),
+        ]);
+    }
+    println!("\ncheckpoint save→resume (composed GPT case, {steps} steps):");
+    t.print();
+    t.save_csv("checkpoint_smoke")?;
+    println!(
+        "snapshot: {} bytes at step {save_at}; saving-run overhead {:+.1}% wall; \
+         resumed segment ran {} steps",
+        snap_bytes,
+        100.0 * (save_wall - reference.wall_secs) / reference.wall_secs.max(1e-9),
+        steps - save_at,
+    );
+
+    let identical = |r: &dsde::train::RunResult| {
+        r.state_hash == reference.state_hash
+            && r.step_losses == reference.step_losses
+            && r.final_eval_loss.to_bits() == reference.final_eval_loss.to_bits()
+    };
+    let save_ok = identical(&saved);
+    let resume_ok = identical(&resumed) && resumed.resumed_at == save_at;
+    println!(
+        "\nshape check:\n  [{}] saving perturbs nothing (bit-identical to uninterrupted)\n  \
+         [{}] resume at step {save_at} is bit-identical end-to-end",
+        if save_ok { "PASS" } else { "FAIL" },
+        if resume_ok { "PASS" } else { "FAIL" }
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    if !(save_ok && resume_ok) {
+        // Enforcing, not advisory: bit-exact durability is the contract.
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -14,8 +14,10 @@ use crate::data::index::DifficultyIndex;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
+/// Map-reduce analyzer knobs.
 #[derive(Clone, Debug)]
 pub struct AnalyzerConfig {
+    /// Worker threads for the map phase.
     pub n_workers: usize,
     /// Samples per map task; workers steal shards dynamically.
     pub shard_size: usize,
@@ -27,12 +29,18 @@ impl Default for AnalyzerConfig {
     }
 }
 
+/// Timing/shape report of one analyzer run.
 #[derive(Clone, Debug, Default)]
 pub struct AnalyzerReport {
+    /// Samples indexed.
     pub n_samples: usize,
+    /// Worker threads used.
     pub n_workers: usize,
+    /// Map shards processed.
     pub n_shards: usize,
+    /// Map-phase seconds.
     pub map_secs: f64,
+    /// Reduce-phase (merge) seconds.
     pub reduce_secs: f64,
 }
 

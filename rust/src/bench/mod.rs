@@ -22,17 +22,25 @@ pub fn scaled(full: u64, quick: u64) -> u64 {
     }
 }
 
+/// Summary statistics over timed samples.
 #[derive(Clone, Debug, Default)]
 pub struct Stats {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Minimum.
     pub min: f64,
+    /// Median.
     pub median: f64,
+    /// Maximum.
     pub max: f64,
 }
 
 impl Stats {
+    /// Compute summary statistics over raw samples.
     pub fn from_samples(samples: &[f64]) -> Stats {
         if samples.is_empty() {
             return Stats::default();
@@ -74,15 +82,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// New table with the given column headers.
     pub fn new(headers: &[&str]) -> Table {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.headers.len(), "row arity");
         self.rows.push(cells);
     }
 
+    /// Render as a fixed-width markdown-style table.
     pub fn render(&self) -> String {
         let cols = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -112,6 +123,7 @@ impl Table {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

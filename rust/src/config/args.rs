@@ -6,8 +6,10 @@ use crate::Result;
 use anyhow::bail;
 use std::collections::BTreeMap;
 
+/// Parsed command line: positionals, `--key value` options, bare flags.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Positional arguments in order (the subcommand is the first).
     pub positional: Vec<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -40,14 +42,17 @@ impl Args {
         Ok(out)
     }
 
+    /// Whether the bare flag `--name` was given.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// `--name` parsed as u64, or `default` when absent.
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -55,6 +60,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as f64, or `default` when absent.
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -62,6 +68,7 @@ impl Args {
         }
     }
 
+    /// `--name` as a string, or `default` when absent.
     pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }

@@ -1,8 +1,9 @@
 //! Minimal JSON value type, parser and writer.
 //!
 //! The offline vendor set has no serde, so the coordinator carries its own
-//! small JSON layer. It is used for `artifacts/manifest.json` (written by
-//! the Python compile path), run configuration files, and the machine-
+//! small JSON layer. It is used for `artifacts/manifest.json` (emitted by
+//! `Registry::manifest_text` / `dsde synth`), run configuration files,
+//! checkpoint headers ([`crate::train::checkpoint`]), and the machine-
 //! readable run logs under `runs/`.
 //!
 //! Supported: the full JSON grammar except `\u` surrogate pairs beyond the
@@ -12,17 +13,25 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A JSON value (numbers are f64; object keys are sorted via `BTreeMap`).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any JSON number, held as f64.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (key-sorted).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing characters are an error).
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { bytes: s.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -36,6 +45,7 @@ impl Json {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -43,14 +53,17 @@ impl Json {
         }
     }
 
+    /// The number as a usize, if it is a non-negative integer.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
     }
 
+    /// The number as an i64, if it is an integer.
     pub fn as_i64(&self) -> Option<i64> {
         self.as_f64().filter(|n| n.fract() == 0.0).map(|n| n as i64)
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -58,6 +71,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -65,6 +79,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -72,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The key map, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -94,6 +110,7 @@ impl Json {
         cur
     }
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
@@ -238,9 +255,12 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
+/// Parse failure: byte position plus a short description.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset the parser stopped at.
     pub pos: usize,
+    /// What went wrong there.
     pub msg: String,
 }
 

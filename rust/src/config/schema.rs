@@ -24,6 +24,7 @@ pub enum Metric {
 }
 
 impl Metric {
+    /// Canonical lowercase name (CLI/JSON wire form).
     pub fn name(self) -> &'static str {
         match self {
             Metric::SeqTru => "seqtru",
@@ -33,6 +34,7 @@ impl Metric {
         }
     }
 
+    /// Parse a metric from its canonical name.
     pub fn from_name(s: &str) -> Result<Metric> {
         Ok(match s {
             "seqtru" => Metric::SeqTru,
@@ -53,7 +55,9 @@ impl Metric {
 /// Pacing function kinds (§3.1). `Power(0.5)` is the paper's `sqrt`.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Pacing {
+    /// Linear interpolation from `d_s` to `d_e` over `T_c` steps.
     Linear,
+    /// `Power(0.5)` shorthand — the paper's default for percentile metrics.
     Sqrt,
     /// d_t = d_s + (d_e - d_s) * min((t/T)^p, 1)
     Power(f64),
@@ -62,6 +66,7 @@ pub enum Pacing {
 }
 
 impl Pacing {
+    /// Canonical name (label/JSON form), e.g. `pow0.5`, `step4`.
     pub fn name(&self) -> String {
         match self {
             Pacing::Linear => "linear".into(),
@@ -75,6 +80,7 @@ impl Pacing {
 /// Start/end difficulty, value- or percentile-based to match the metric.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Bound {
+    /// Absolute difficulty value (e.g. a sequence length).
     Value(f64),
     /// 0.0 ..= 1.0
     Percentile(f64),
@@ -86,9 +92,13 @@ pub enum Bound {
 /// post-processing").
 #[derive(Clone, Debug)]
 pub struct ClConfig {
+    /// Difficulty metric this schedule paces.
     pub metric: Metric,
+    /// Pacing function mapping step → difficulty.
     pub pacing: Pacing,
+    /// d_s — starting difficulty (value or percentile, per the metric).
     pub d_start: Bound,
+    /// d_e — end difficulty.
     pub d_end: Bound,
     /// T_c — steps until the schedule reaches `d_end`.
     pub total_steps: u64,
@@ -113,22 +123,27 @@ pub enum LtdSchedule {
     Constant,
 }
 
+/// random-LTD configuration (§3.2): the two user-tuned knobs plus the
+/// schedule/exemption structure.
 #[derive(Clone, Debug)]
 pub struct LtdConfig {
     /// r_s — kept middle-layer sequence length at step 0.
     pub r_start: usize,
     /// T_r — steps until dropping stops (MSLG) / total drop steps (constant).
     pub total_steps: u64,
+    /// Kept-length growth schedule (MSLG or constant).
     pub schedule: LtdSchedule,
     /// Keep the first and last layers at full sequence (§3.2; ablated).
     pub exempt_first_last: bool,
 }
 
 impl LtdConfig {
+    /// MSLG schedule growing from `r_start` to full length over `total_steps`.
     pub fn mslg(r_start: usize, total_steps: u64) -> Self {
         LtdConfig { r_start, total_steps, schedule: LtdSchedule::Mslg, exempt_first_last: true }
     }
 
+    /// Constant kept length for `total_steps` (the Tab. 14 ablation).
     pub fn constant(r_keep: usize, total_steps: u64) -> Self {
         LtdConfig {
             r_start: r_keep,
@@ -145,7 +160,9 @@ impl LtdConfig {
 /// whitelist.
 #[derive(Clone, Debug)]
 pub struct BypassConfig {
+    /// Kept sequence length at step 0.
     pub r_start: usize,
+    /// Steps until bypassing stops.
     pub total_steps: u64,
     /// TokenBypass is constant-schedule in the original; the paper also
     /// evaluates it with MSLG applied (Tab. 15).
@@ -157,12 +174,16 @@ pub struct BypassConfig {
 /// Token-routing technique for a run.
 #[derive(Clone, Debug)]
 pub enum Routing {
+    /// No routing (every token through every layer).
     None,
+    /// random-LTD layerwise token dropping (§3.2).
     RandomLtd(LtdConfig),
+    /// The TokenBypass baseline (Hou et al. 2022).
     TokenBypass(BypassConfig),
 }
 
 impl Routing {
+    /// Canonical technique name (JSON wire form).
     pub fn name(&self) -> &'static str {
         match self {
             Routing::None => "none",
@@ -176,30 +197,41 @@ impl Routing {
 /// steps, so CL/LTD token reductions don't accelerate the decay.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum LrBasis {
+    /// Decay on consumed compute tokens (the paper's contribution).
     Tokens,
+    /// Decay on the step counter (the conventional baseline).
     Steps,
 }
 
+/// Decay shape after warmup.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum LrDecay {
+    /// Linear ramp from peak to min.
     Linear,
+    /// Half-cosine from peak to min.
     Cosine,
 }
 
+/// Learning-rate schedule parameters (warmup + decay in a chosen basis).
 #[derive(Clone, Debug)]
 pub struct LrConfig {
+    /// Peak LR reached at the end of warmup.
     pub peak: f64,
+    /// Floor LR at the end of decay.
     pub min: f64,
     /// Warmup duration in the basis unit (tokens or steps).
     pub warmup: f64,
     /// Decay duration in the basis unit; the paper sets this equal to the
     /// total training budget (§A.1 point 5).
     pub decay_total: f64,
+    /// Position source for the schedule (tokens or steps).
     pub basis: LrBasis,
+    /// Decay shape.
     pub decay: LrDecay,
 }
 
 impl LrConfig {
+    /// Token-basis linear decay with a 1e-3·peak floor.
     pub fn token_linear(peak: f64, warmup_tokens: f64, total_tokens: f64) -> Self {
         LrConfig {
             peak,
@@ -241,6 +273,7 @@ impl PipelineConfig {
         PipelineConfig { prefetch_depth: 0, n_loader_workers: 0 }
     }
 
+    /// Whether the async pipeline is active (both knobs non-zero).
     pub fn enabled(&self) -> bool {
         self.prefetch_depth > 0 && self.n_loader_workers > 0
     }
@@ -257,12 +290,15 @@ impl PipelineConfig {
 ///   grid's bit-equivalence guarantees for uneven shards.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum DispatchPolicy {
+    /// Round up to the legacy variant grid (default; golden-compatible).
     #[default]
     Bucket,
+    /// JIT-specialize the requested point verbatim.
     Exact,
 }
 
 impl DispatchPolicy {
+    /// Canonical policy name (CLI/JSON wire form).
     pub fn name(self) -> &'static str {
         match self {
             DispatchPolicy::Bucket => "bucket",
@@ -270,6 +306,7 @@ impl DispatchPolicy {
         }
     }
 
+    /// Parse a policy from its canonical name.
     pub fn from_name(s: &str) -> Result<DispatchPolicy> {
         Ok(match s {
             "bucket" => DispatchPolicy::Bucket,
@@ -284,12 +321,15 @@ impl DispatchPolicy {
 pub struct RunConfig {
     /// Model family: gpt | bert | vit | moe (must exist in the manifest).
     pub family: String,
+    /// Master seed; every RNG stream in the run derives from it.
     pub seed: u64,
     /// Training budget in *steps* (token budget follows from accounting).
     pub total_steps: u64,
     /// Curriculum schedules (empty = uniform baseline sampling).
     pub curriculum: Vec<ClConfig>,
+    /// Token-routing technique (random-LTD / TokenBypass / none).
     pub routing: Routing,
+    /// Learning-rate schedule.
     pub lr: LrConfig,
     /// Evaluate every `eval_every` steps (0 = only at the end).
     pub eval_every: u64,
@@ -313,11 +353,25 @@ pub struct RunConfig {
     /// thread (results are bit-identical either way; off = compile
     /// inline on first dispatch, visible as `compile_stall_secs`).
     pub prewarm: bool,
+    /// Write a checkpoint snapshot every `save_every` steps (0 = never;
+    /// CLI `--save-every`). Snapshots land in [`RunConfig::save_dir`] as
+    /// `step{N:06}.ckpt` via atomic write-rename.
+    pub save_every: u64,
+    /// Directory for periodic snapshots (CLI `--save-dir`; the default
+    /// `runs/checkpoints` is gitignored).
+    pub save_dir: String,
+    /// Resume from this checkpoint file (CLI `--resume`): the trainer
+    /// restores the full training state and fast-forwards planning, so
+    /// the finished run is bit-identical to an uninterrupted one. Not
+    /// serialized to run-config JSON — it is a per-invocation flag.
+    pub resume: Option<String>,
     /// Human-readable case label for tables/logs.
     pub label: String,
 }
 
 impl RunConfig {
+    /// The no-technique baseline: uniform sampling, no routing, default
+    /// pipeline/dispatch knobs.
     pub fn baseline(family: &str, total_steps: u64, peak_lr: f64) -> Self {
         RunConfig {
             family: family.to_string(),
@@ -332,10 +386,14 @@ impl RunConfig {
             n_replicas: 0,
             dispatch: DispatchPolicy::Bucket,
             prewarm: true,
+            save_every: 0,
+            save_dir: "runs/checkpoints".to_string(),
+            resume: None,
             label: "baseline".to_string(),
         }
     }
 
+    /// Reject structurally invalid configurations up front.
     pub fn validate(&self) -> Result<()> {
         if self.total_steps == 0 {
             bail!("total_steps must be > 0");
@@ -374,6 +432,9 @@ impl RunConfig {
         }
         if self.n_replicas > 64 {
             bail!("n_replicas {} unreasonably large (max 64)", self.n_replicas);
+        }
+        if self.save_every > 0 && self.save_dir.is_empty() {
+            bail!("save_every is set but save_dir is empty");
         }
         Ok(())
     }
@@ -480,6 +541,13 @@ impl RunConfig {
                 Json::obj(vec![
                     ("prefetch_depth", self.pipeline.prefetch_depth.into()),
                     ("n_loader_workers", self.pipeline.n_loader_workers.into()),
+                ]),
+            ),
+            (
+                "checkpoint",
+                Json::obj(vec![
+                    ("save_every", (self.save_every as usize).into()),
+                    ("save_dir", self.save_dir.as_str().into()),
                 ]),
             ),
             (
@@ -598,6 +666,13 @@ pub fn run_config_from_json(v: &Json, default_family: &str) -> Result<RunConfig>
     }
     if let Some(e) = v.get("eval_every").as_usize() {
         cfg.eval_every = e as u64;
+    }
+    let ckpt = v.get("checkpoint");
+    if ckpt.as_obj().is_some() {
+        cfg.save_every = ckpt.get("save_every").as_usize().unwrap_or(0) as u64;
+        if let Some(d) = ckpt.get("save_dir").as_str() {
+            cfg.save_dir = d.to_string();
+        }
     }
     let pipeline = v.get("pipeline");
     if pipeline.as_obj().is_some() {
@@ -721,6 +796,29 @@ mod tests {
         assert_eq!(c3.dispatch, DispatchPolicy::Bucket);
         assert!(c3.prewarm);
         assert!(DispatchPolicy::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn checkpoint_knobs_roundtrip_and_validate() {
+        let mut c = RunConfig::baseline("gpt", 50, 1e-3);
+        assert_eq!(c.save_every, 0, "saving off by default");
+        assert_eq!(c.save_dir, "runs/checkpoints");
+        assert!(c.resume.is_none());
+        c.save_every = 10;
+        c.save_dir = "/tmp/ckpt".into();
+        c.resume = Some("/tmp/ckpt/step000010.ckpt".into());
+        c.validate().unwrap();
+        let j = c.to_json();
+        let c2 = run_config_from_json(&j, "gpt").unwrap();
+        assert_eq!(c2.save_every, 10);
+        assert_eq!(c2.save_dir, "/tmp/ckpt");
+        assert!(c2.resume.is_none(), "resume is per-invocation, not config");
+        // configs without the section keep the defaults
+        let j = Json::parse(r#"{"total_steps": 5}"#).unwrap();
+        let c3 = run_config_from_json(&j, "gpt").unwrap();
+        assert_eq!((c3.save_every, c3.save_dir.as_str()), (0, "runs/checkpoints"));
+        c.save_dir = String::new();
+        assert!(c.validate().is_err(), "saving needs a directory");
     }
 
     #[test]

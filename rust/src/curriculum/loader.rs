@@ -39,10 +39,15 @@ use std::sync::Arc;
 /// A language-model batch (GPT / BERT / MoE families).
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct LmBatch {
+    /// Batch rows.
     pub rows: usize,
+    /// Sequence length of every row.
     pub seq: usize,
+    /// Input token ids, `[rows × seq]` row-major.
     pub tokens: Vec<i32>,
+    /// Prediction targets, same shape.
     pub targets: Vec<i32>,
+    /// Per-position loss weights (MLM mask for BERT, all-ones for GPT).
     pub loss_mask: Vec<f32>,
     /// BERT only.
     pub pad_mask: Option<Vec<f32>>,
@@ -53,20 +58,27 @@ pub struct LmBatch {
 /// A ViT batch.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct VitBatch {
+    /// Batch rows.
     pub rows: usize,
+    /// Flattened patch features, `[rows × n_patches × patch_dim]`.
     pub patches: Vec<f32>,
+    /// Class labels, one per row.
     pub labels: Vec<i32>,
+    /// Data tokens consumed by this batch (patches + 1 per row).
     pub data_tokens: u64,
 }
 
 /// A batch of either family kind (what the pipeline transports).
 #[derive(Clone, Debug, PartialEq)]
 pub enum AnyBatch {
+    /// A language-model batch.
     Lm(LmBatch),
+    /// A ViT batch.
     Vit(VitBatch),
 }
 
 impl AnyBatch {
+    /// Batch rows, family-agnostic.
     pub fn rows(&self) -> usize {
         match self {
             AnyBatch::Lm(b) => b.rows,
@@ -74,6 +86,7 @@ impl AnyBatch {
         }
     }
 
+    /// Data tokens consumed, family-agnostic.
     pub fn data_tokens(&self) -> u64 {
         match self {
             AnyBatch::Lm(b) => b.data_tokens,
@@ -86,7 +99,9 @@ impl AnyBatch {
 /// needs to materialize one batch, with no shared mutable state.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LmPlan {
+    /// Sequence length the batch will materialize at.
     pub seq: usize,
+    /// Length transform the materializer must apply.
     pub transform: SeqTransform,
     /// Sample ids drawn from the sampler, in draw order.
     pub ids: Vec<u32>,
@@ -94,15 +109,19 @@ pub struct LmPlan {
     pub mask_seed: Option<u64>,
 }
 
+/// The planning-stage output of the ViT loader (a cursor position).
 #[derive(Clone, Debug, PartialEq)]
 pub struct VitPlan {
     /// First sample cursor; the batch covers `start..start+rows`.
     pub start: u64,
 }
 
+/// A planned batch of either family kind.
 #[derive(Clone, Debug, PartialEq)]
 pub enum BatchPlan {
+    /// A planned language-model batch.
     Lm(LmPlan),
+    /// A planned ViT batch.
     Vit(VitPlan),
 }
 
@@ -110,9 +129,31 @@ pub enum BatchPlan {
 /// the constants materialization needs. Cloned into every pipeline worker.
 #[derive(Clone)]
 pub enum LoaderCore {
-    Gpt { ds: Arc<GptDataset>, batch: usize },
-    Bert { ds: Arc<BertDataset>, batch: usize, vocab: u32, mask_prob: f32 },
-    Vit { ds: Arc<VitDataset>, batch: usize },
+    /// GPT/MoE materializer over the packed stream.
+    Gpt {
+        /// Shared dataset.
+        ds: Arc<GptDataset>,
+        /// Batch rows.
+        batch: usize,
+    },
+    /// BERT materializer with MLM masking.
+    Bert {
+        /// Shared dataset.
+        ds: Arc<BertDataset>,
+        /// Batch rows.
+        batch: usize,
+        /// Vocabulary size (random-replacement masking needs it).
+        vocab: u32,
+        /// MLM masking probability (0.15).
+        mask_prob: f32,
+    },
+    /// ViT materializer (synthesized samples from a cursor).
+    Vit {
+        /// Shared dataset.
+        ds: Arc<VitDataset>,
+        /// Batch rows.
+        batch: usize,
+    },
 }
 
 impl LoaderCore {
@@ -172,6 +213,7 @@ pub struct ShardPlan {
 }
 
 impl ShardPlan {
+    /// Partition `rows` across `n_ranks` contiguous shards (loads ≤1 apart).
     pub fn new(rows: usize, n_ranks: usize) -> ShardPlan {
         let n = n_ranks.max(1);
         let q = rows / n;
@@ -186,10 +228,12 @@ impl ShardPlan {
         ShardPlan { rows, bounds }
     }
 
+    /// Number of ranks the plan partitions across.
     pub fn n_ranks(&self) -> usize {
         self.bounds.len() - 1
     }
 
+    /// Global batch rows the plan was built for.
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -199,6 +243,7 @@ impl ShardPlan {
         self.bounds[rank]..self.bounds[rank + 1]
     }
 
+    /// Row count owned by `rank`.
     pub fn rows_of(&self, rank: usize) -> usize {
         self.bounds[rank + 1] - self.bounds[rank]
     }
@@ -225,6 +270,7 @@ impl ShardPlan {
         }
     }
 
+    /// LM shard of `rank` (row-range copy of every field).
     pub fn shard_lm(&self, b: &LmBatch, rank: usize) -> LmBatch {
         debug_assert_eq!(b.rows, self.rows, "shard plan built for a different batch");
         let r = self.range(rank);
@@ -240,6 +286,7 @@ impl ShardPlan {
         }
     }
 
+    /// ViT shard of `rank` (row-range copy of every field).
     pub fn shard_vit(&self, b: &VitBatch, rank: usize) -> VitBatch {
         debug_assert_eq!(b.rows, self.rows, "shard plan built for a different batch");
         let r = self.range(rank);
@@ -265,10 +312,12 @@ pub struct GptLoader {
 }
 
 impl GptLoader {
+    /// New loader drawing `batch` samples per step from `sampler`.
     pub fn new(ds: Arc<GptDataset>, sampler: Box<dyn Sampler>, batch: usize) -> GptLoader {
         GptLoader { ds, sampler, batch }
     }
 
+    /// The shareable materialization half (cloned into pipeline workers).
     pub fn core(&self) -> LoaderCore {
         LoaderCore::Gpt { ds: self.ds.clone(), batch: self.batch }
     }
@@ -355,6 +404,7 @@ pub struct BertLoader {
 }
 
 impl BertLoader {
+    /// New loader; `seed` drives the per-batch MLM mask-seed derivation.
     pub fn new(
         ds: Arc<BertDataset>,
         sampler: Box<dyn Sampler>,
@@ -373,6 +423,7 @@ impl BertLoader {
         }
     }
 
+    /// The shareable materialization half (cloned into pipeline workers).
     pub fn core(&self) -> LoaderCore {
         LoaderCore::Bert {
             ds: self.ds.clone(),
@@ -382,6 +433,8 @@ impl BertLoader {
         }
     }
 
+    /// Draw the sample ids and mask seed for the next batch (sequential
+    /// planning stage; advances the batch counter).
     pub fn plan_batch(&mut self, seq: usize, state: &ClState) -> LmPlan {
         let n = self.sampler.n_samples();
         let prefix = pool_prefix(n, state.pool_pct);
@@ -393,6 +446,7 @@ impl BertLoader {
         LmPlan { seq, transform: state.transform, ids, mask_seed: Some(mask_seed) }
     }
 
+    /// Assemble the next batch (plan + materialize in one call).
     pub fn next_batch(&mut self, seq: usize, state: &ClState) -> LmBatch {
         let plan = self.plan_batch(seq, state);
         let mut out = LmBatch::default();
@@ -459,20 +513,24 @@ pub struct VitLoader {
 }
 
 impl VitLoader {
+    /// New loader starting its sample cursor at `start`.
     pub fn new(ds: Arc<VitDataset>, batch: usize, start: u64) -> VitLoader {
         VitLoader { ds, cursor: start, batch }
     }
 
+    /// The shareable materialization half (cloned into pipeline workers).
     pub fn core(&self) -> LoaderCore {
         LoaderCore::Vit { ds: self.ds.clone(), batch: self.batch }
     }
 
+    /// Claim the next cursor range (sequential planning stage).
     pub fn plan_batch(&mut self) -> VitPlan {
         let start = self.cursor;
         self.cursor += self.batch as u64;
         VitPlan { start }
     }
 
+    /// Assemble the next batch (plan + materialize in one call).
     pub fn next_batch(&mut self) -> VitBatch {
         let plan = self.plan_batch();
         let mut out = VitBatch::default();

@@ -15,11 +15,13 @@ use std::sync::Arc;
 /// while the pacing function creeps forward).
 const GROW_FACTOR: f64 = 1.05;
 
+/// A sample-id source with a difficulty-bounded active pool.
 pub trait Sampler: Send {
     /// Draw one sample id from the easiest `prefix` samples
     /// (`prefix == usize::MAX` / `>= n` means the whole pool).
     fn next(&mut self, prefix: usize) -> u32;
 
+    /// Total samples the underlying dataset/index holds.
     fn n_samples(&self) -> usize;
 }
 
@@ -34,6 +36,7 @@ pub struct PoolSampler {
 }
 
 impl PoolSampler {
+    /// New sampler over a difficulty order, with its own shuffle stream.
     pub fn new(index: Arc<DifficultyIndex>, seed: u64) -> PoolSampler {
         PoolSampler {
             index,
@@ -85,6 +88,7 @@ pub struct UniformSampler {
 }
 
 impl UniformSampler {
+    /// New uniform sampler over `n` ids, with its own shuffle stream.
     pub fn new(n: usize, seed: u64) -> UniformSampler {
         UniformSampler { n, rng: Pcg32::new(seed, 0x4a11), pool: Vec::new(), pos: 0 }
     }

@@ -25,11 +25,13 @@ pub enum SeqTransform {
 pub struct ClState {
     /// Target sequence length (= family max when no length schedule).
     pub seq: usize,
+    /// How the loader must realize that length this step.
     pub transform: SeqTransform,
     /// Fraction of the difficulty-ordered pool available (1.0 = all).
     pub pool_pct: f64,
 }
 
+/// Resolves the per-step [`ClState`] from the configured CL schedules.
 pub struct ClScheduler {
     length: Option<ClConfig>,
     pool: Option<ClConfig>,
@@ -58,6 +60,7 @@ impl ClScheduler {
         Ok(ClScheduler { length, pool, max_seq })
     }
 
+    /// Whether any CL schedule is configured.
     pub fn has_curriculum(&self) -> bool {
         self.length.is_some() || self.pool.is_some()
     }
@@ -71,6 +74,7 @@ impl ClScheduler {
             .unwrap_or(0)
     }
 
+    /// The resolved curriculum state at `step` (pure in `step`).
     pub fn state_at(&self, step: u64) -> ClState {
         let (seq, transform) = match &self.length {
             None => (self.max_seq, SeqTransform::None),

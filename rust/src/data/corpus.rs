@@ -20,39 +20,49 @@ use crate::Pcg32;
 /// A document: sentences of word symbols in `0..vocab_words`.
 #[derive(Clone, Debug)]
 pub struct Doc {
+    /// Sentences, each a run of word symbols.
     pub sentences: Vec<Vec<u32>>,
+    /// Topic the document was sampled from.
     pub topic: u32,
 }
 
 impl Doc {
+    /// Total words across all sentences.
     pub fn len(&self) -> usize {
         self.sentences.iter().map(|s| s.len()).sum()
     }
 
+    /// Whether the document has no words.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// All words in order, flattened across sentences.
     pub fn words(&self) -> impl Iterator<Item = u32> + '_ {
         self.sentences.iter().flatten().copied()
     }
 }
 
+/// Knobs of the synthetic Zipf corpus generator.
 #[derive(Clone, Debug)]
 pub struct CorpusConfig {
+    /// Documents to generate.
     pub n_docs: usize,
     /// Number of distinct word symbols (excludes the tokenizer's specials).
     pub vocab_words: u32,
+    /// Topic count (topics skew the Zipf tables differently).
     pub n_topics: u32,
     /// Zipf exponent (1.0 ≈ natural language).
     pub zipf_s: f64,
     /// Mean document length in words (log-normal).
     pub mean_len: f64,
-    /// Document length bounds.
+    /// Minimum document length in words.
     pub min_len: usize,
+    /// Maximum document length in words.
     pub max_len: usize,
     /// Mean sentence length in words (geometric).
     pub mean_sentence: f64,
+    /// Generation seed.
     pub seed: u64,
 }
 
@@ -76,14 +86,18 @@ impl Default for CorpusConfig {
 /// generated (the analyzer's `voc` metric uses real counts, like the
 /// paper's offline pass over the Pile).
 pub struct Corpus {
+    /// The configuration it was generated from.
     pub config: CorpusConfig,
+    /// The generated documents.
     pub docs: Vec<Doc>,
     /// Unigram counts per word symbol over the whole corpus.
     pub word_counts: Vec<u64>,
+    /// Total words generated.
     pub total_words: u64,
 }
 
 impl Corpus {
+    /// Generate a corpus deterministically from `config`.
     pub fn generate(config: CorpusConfig) -> Corpus {
         let mut rng = Pcg32::new(config.seed, 0x0c0_4b5);
         // One Zipf table per topic with a topic-dependent exponent:
@@ -151,6 +165,7 @@ pub struct ZipfTable {
 }
 
 impl ZipfTable {
+    /// Build the CDF table for Zipf(`s`) over `n` ranks.
     pub fn new(n: usize, s: f64) -> ZipfTable {
         let mut cdf = Vec::with_capacity(n);
         let mut acc = 0.0;

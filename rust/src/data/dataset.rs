@@ -17,11 +17,14 @@ use crate::Pcg32;
 
 /// GPT: one packed token stream.
 pub struct GptDataset {
+    /// The packed token stream (`BOS` + encoded words per document).
     pub stream: Vec<u32>,
+    /// Full sample length the stream is cut into.
     pub max_seq: usize,
 }
 
 impl GptDataset {
+    /// Pack a corpus into the GPT stream with `tok`.
     pub fn build(corpus: &Corpus, tok: &Tokenizer, max_seq: usize) -> GptDataset {
         let total: usize = corpus.docs.iter().map(|d| d.len() + 1).sum();
         let mut stream = Vec::with_capacity(total);
@@ -63,6 +66,7 @@ impl GptDataset {
         &self.stream[start..start + seq]
     }
 
+    /// Targets of segment `j` (shifted by one within the stream).
     pub fn segment_targets(&self, i: usize, j: usize, seq: usize) -> &[u32] {
         let start = i * self.max_seq + j * seq + 1;
         &self.stream[start..start + seq]
@@ -75,10 +79,12 @@ pub struct BertDataset {
     data: Vec<u32>,
     /// Effective (non-padding) length per sample.
     pub eff_len: Vec<u32>,
+    /// Padded sample length.
     pub max_seq: usize,
 }
 
 impl BertDataset {
+    /// Build sentence-pair samples from a corpus with `tok`.
     pub fn build(corpus: &Corpus, tok: &Tokenizer, max_seq: usize) -> BertDataset {
         let mut data = Vec::new();
         let mut eff_len = Vec::new();
@@ -107,10 +113,12 @@ impl BertDataset {
         BertDataset { data, eff_len, max_seq }
     }
 
+    /// Number of sentence-pair samples.
     pub fn n_samples(&self) -> usize {
         self.eff_len.len()
     }
 
+    /// The padded token ids of sample `i`.
     pub fn tokens(&self, i: usize) -> &[u32] {
         &self.data[i * self.max_seq..(i + 1) * self.max_seq]
     }
@@ -120,15 +128,20 @@ impl BertDataset {
 /// characteristic per-patch mean pattern; samples add Gaussian noise, so
 /// accuracy is learnable but not trivial.
 pub struct VitDataset {
+    /// Patches per image.
     pub n_patches: usize,
+    /// Flattened feature width per patch.
     pub patch_dim: usize,
+    /// Number of classes.
     pub n_classes: usize,
     class_means: Vec<f32>, // [n_classes, n_patches, patch_dim]
+    /// Gaussian noise scale added per sample.
     pub noise: f32,
     seed: u64,
 }
 
 impl VitDataset {
+    /// Build the per-class mean patterns deterministically from `seed`.
     pub fn new(n_patches: usize, patch_dim: usize, n_classes: usize, noise: f32, seed: u64) -> Self {
         let mut rng = Pcg32::new(seed, 0x71f);
         let class_means = (0..n_classes * n_patches * patch_dim)

@@ -27,8 +27,24 @@ const HEADER: usize = 4 + 4 + 8 + NAME_BYTES;
 /// An immutable difficulty index backed by a memory-mapped file (or by
 /// heap vectors when built in-memory for tests / small runs).
 pub enum DifficultyIndex {
-    Mapped { map: Mmap, n: usize, metric: String },
-    Owned { values: Vec<f32>, order: Vec<u32>, metric: String },
+    /// File-backed index (the analyzer's on-disk output).
+    Mapped {
+        /// The mapped index file.
+        map: Mmap,
+        /// Indexed sample count.
+        n: usize,
+        /// Difficulty metric name.
+        metric: String,
+    },
+    /// Heap-held index (tests / small in-process runs).
+    Owned {
+        /// Difficulty value per sample id.
+        values: Vec<f32>,
+        /// Sample ids sorted ascending by difficulty.
+        order: Vec<u32>,
+        /// Difficulty metric name.
+        metric: String,
+    },
 }
 
 impl DifficultyIndex {
@@ -85,6 +101,7 @@ impl DifficultyIndex {
         Ok(DifficultyIndex::Mapped { map, n, metric })
     }
 
+    /// Number of indexed samples.
     pub fn len(&self) -> usize {
         match self {
             DifficultyIndex::Mapped { n, .. } => *n,
@@ -92,10 +109,12 @@ impl DifficultyIndex {
         }
     }
 
+    /// Whether the index holds no samples.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Name of the difficulty metric the index was built with.
     pub fn metric(&self) -> &str {
         match self {
             DifficultyIndex::Mapped { metric, .. } => metric,

@@ -80,19 +80,23 @@ impl Mmap {
         Ok(Mmap { buf, len, writable: false, path: path.to_path_buf() })
     }
 
+    /// Mapped length in bytes.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether the mapping is empty.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// The whole mapping as raw bytes.
     pub fn as_bytes(&self) -> &[u8] {
         // SAFETY: the buffer holds at least `len` initialized bytes.
         unsafe { std::slice::from_raw_parts(self.buf.as_ptr() as *const u8, self.len) }
     }
 
+    /// Mutable raw-byte view (writable mappings only).
     pub fn as_bytes_mut(&mut self) -> &mut [u8] {
         assert!(self.writable, "mapping is read-only");
         // SAFETY: as above; &mut self gives unique access.
@@ -117,6 +121,7 @@ impl Mmap {
         }
     }
 
+    /// Mutable typed view (writable mappings only; see [`Mmap::slice`]).
     pub fn slice_mut<T: Pod>(&mut self, offset: usize, count: usize) -> &mut [T] {
         assert!(self.writable, "mapping is read-only");
         let bytes = count * std::mem::size_of::<T>();

@@ -27,6 +27,7 @@ pub struct Pool<T> {
 }
 
 impl<T> Pool<T> {
+    /// New pool holding at most `cap` recycled objects.
     pub fn new(cap: usize) -> Pool<T> {
         Pool { slots: Mutex::new(Vec::new()), cap: cap.max(1) }
     }
@@ -44,10 +45,12 @@ impl<T> Pool<T> {
         }
     }
 
+    /// Recycled objects currently pooled.
     pub fn len(&self) -> usize {
         self.lock().len()
     }
 
+    /// Whether the pool is empty.
     pub fn is_empty(&self) -> bool {
         self.lock().is_empty()
     }

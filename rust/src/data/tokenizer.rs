@@ -6,13 +6,19 @@
 
 use crate::data::corpus::Corpus;
 
-/// Special token ids (must stay below `Tokenizer::n_special`).
+/// Padding token id (special ids stay below [`N_SPECIAL`]).
 pub const PAD: u32 = 0;
+/// Unknown-word token id.
 pub const UNK: u32 = 1;
+/// Beginning-of-sequence token id (GPT stream).
 pub const BOS: u32 = 2;
+/// MLM mask token id (BERT).
 pub const MASK: u32 = 3;
+/// Classification token id (BERT).
 pub const CLS: u32 = 4;
+/// Separator token id (BERT).
 pub const SEP: u32 = 5;
+/// Count of reserved special ids; word ids start here.
 pub const N_SPECIAL: u32 = 6;
 
 /// Vocabulary with frequency statistics.
@@ -27,6 +33,7 @@ pub struct Tokenizer {
 }
 
 impl Tokenizer {
+    /// Fit the vocabulary and frequency table on a generated corpus.
     pub fn from_corpus(corpus: &Corpus) -> Tokenizer {
         let vocab_size = N_SPECIAL + corpus.config.vocab_words;
         let mut neg_log_prob = vec![0.0f64; vocab_size as usize];
@@ -73,6 +80,7 @@ impl Tokenizer {
         self.counts.get(token as usize).copied().unwrap_or(0)
     }
 
+    /// Whether `token` is one of the reserved special ids.
     pub fn is_special(&self, token: u32) -> bool {
         token < N_SPECIAL
     }

@@ -22,9 +22,22 @@ pub fn run_cases(env: &TrainEnv, cases: Vec<RunConfig>) -> Result<Vec<RunResult>
     let n = cases.len();
     for (i, cfg) in cases.into_iter().enumerate() {
         let label = cfg.label.clone();
+        let save_dir = (cfg.save_every > 0).then(|| cfg.save_dir.clone());
         eprintln!("[{}/{}] {} ({} steps)...", i + 1, n, label, cfg.total_steps);
+        if let Some(p) = &cfg.resume {
+            eprintln!("[{}/{}] {}: resuming from {p}", i + 1, n, label);
+        }
         let t0 = std::time::Instant::now();
         let r = env.run(cfg)?;
+        if let Some(dir) = save_dir {
+            eprintln!(
+                "[{}/{}] {}: wrote {} checkpoint snapshot(s) under {dir}",
+                i + 1,
+                n,
+                label,
+                r.checkpoints_written
+            );
+        }
         eprintln!(
             "[{}/{}] {}: eval_loss={:.4} ppl={:.2} saving={:.1}% {:.1}s \
              (loader stall {:.0}ms, {:.0}% of build hidden)",

@@ -28,8 +28,17 @@
 //! whole CL + LTD routing schedule is resolved up front
 //! ([`train::plan_schedule`]) instead of per step.
 //!
-//! See DESIGN.md for the full system inventory and the experiment index
-//! mapping every paper table/figure to a bench target.
+//! Training state is durable: the [`train::checkpoint`] subsystem writes
+//! versioned, self-describing binary snapshots of the full (CL, LTD)
+//! training state, and a run resumed from one is bit-identical to the
+//! uninterrupted run — including elastic restarts that change the replica
+//! count (`tests/checkpoint_resume.rs`).
+//!
+//! See README.md for the quickstart and DESIGN.md for the full system
+//! inventory and the experiment index mapping every paper table/figure to
+//! a bench target.
+
+#![warn(missing_docs)]
 
 pub mod analysis;
 pub mod bench;
@@ -58,6 +67,8 @@ pub struct Pcg32 {
 }
 
 impl Pcg32 {
+    /// Seed a generator on an explicit PCG stream (distinct streams with
+    /// the same seed produce unrelated sequences).
     pub fn new(seed: u64, stream: u64) -> Self {
         let mut rng = Pcg32 { state: 0, inc: (stream << 1) | 1 };
         rng.next_u32();
@@ -66,10 +77,24 @@ impl Pcg32 {
         rng
     }
 
+    /// Seed a generator on the crate's default stream.
     pub fn seeded(seed: u64) -> Self {
         Self::new(seed, 0xda3e_39cb_94b9_5bdb)
     }
 
+    /// The raw `(state, inc)` words — everything the generator is. Used
+    /// by [`train::checkpoint`] to serialize RNG streams mid-run.
+    pub fn raw_parts(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg32::raw_parts`] output, resuming the
+    /// stream at exactly the position it was captured.
+    pub fn from_raw_parts(state: u64, inc: u64) -> Self {
+        Pcg32 { state, inc }
+    }
+
+    /// The next u32 of the stream.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -81,6 +106,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// The next u64 (two u32 draws, high word first).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
@@ -155,6 +181,19 @@ mod tests {
     fn pcg_deterministic() {
         let mut a = Pcg32::seeded(42);
         let mut b = Pcg32::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn pcg_raw_parts_resume_continues_the_stream() {
+        let mut a = Pcg32::seeded(77);
+        for _ in 0..13 {
+            a.next_u32();
+        }
+        let (state, inc) = a.raw_parts();
+        let mut b = Pcg32::from_raw_parts(state, inc);
         for _ in 0..100 {
             assert_eq!(a.next_u32(), b.next_u32());
         }

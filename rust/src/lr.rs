@@ -13,16 +13,19 @@
 
 use crate::config::schema::{LrBasis, LrConfig, LrDecay};
 
+/// A resolved LR schedule: warmup + decay evaluated at any basis position.
 #[derive(Clone, Debug)]
 pub struct LrSchedule {
     cfg: LrConfig,
 }
 
 impl LrSchedule {
+    /// Wrap a configuration for evaluation.
     pub fn new(cfg: LrConfig) -> LrSchedule {
         LrSchedule { cfg }
     }
 
+    /// The configured decay basis (tokens or steps).
     pub fn basis(&self) -> LrBasis {
         self.cfg.basis
     }

@@ -15,17 +15,38 @@
 //! * **compute tokens** = layer tokens / L — data-token-equivalent compute,
 //!   the quantity the paper's LR decay and savings ratios are based on.
 
+/// Running totals of data and per-layer compute tokens for one run.
 #[derive(Clone, Debug, Default)]
 pub struct TokenAccountant {
+    /// Training steps recorded so far.
     pub steps: u64,
+    /// Data tokens the pipeline consumed so far.
     pub data_tokens: u64,
     layer_tokens: u64,
     n_layers: u64,
 }
 
 impl TokenAccountant {
+    /// New accountant for a model with `n_layers` layers.
     pub fn new(n_layers: usize) -> TokenAccountant {
         TokenAccountant { n_layers: n_layers as u64, ..Default::default() }
+    }
+
+    /// The raw counters `[steps, data_tokens, layer_tokens, n_layers]` —
+    /// the checkpoint serialization of the accountant.
+    pub fn raw(&self) -> [u64; 4] {
+        [self.steps, self.data_tokens, self.layer_tokens, self.n_layers]
+    }
+
+    /// Rebuild an accountant from [`TokenAccountant::raw`] output,
+    /// resuming token-based LR positioning exactly where it was captured.
+    pub fn from_raw(raw: [u64; 4]) -> TokenAccountant {
+        TokenAccountant {
+            steps: raw[0],
+            data_tokens: raw[1],
+            layer_tokens: raw[2],
+            n_layers: raw[3],
+        }
     }
 
     /// Record one training step.
@@ -105,6 +126,18 @@ mod tests {
         assert_eq!(a.data_tokens, 256);
         // layer tokens = 8*(32*2 + 16*2) = 768; compute = 192
         assert_eq!(a.compute_tokens(), 192.0);
+    }
+
+    #[test]
+    fn raw_roundtrip_resumes_mid_run() {
+        let mut a = TokenAccountant::new(4);
+        a.record(8, 64, 16, 2);
+        let mut b = TokenAccountant::from_raw(a.raw());
+        assert_eq!(b.compute_tokens(), a.compute_tokens());
+        a.record(8, 64, 64, 2);
+        b.record(8, 64, 64, 2);
+        assert_eq!(b.raw(), a.raw());
+        assert_eq!(b.saving_ratio(), a.saving_ratio());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use crate::Pcg32;
 
+/// Seeded keep-index generator for the random-LTD routing modes.
 pub struct RandomDropper {
     rng: Pcg32,
     /// Reused output buffer: `n_mid * keep` indices, layer-major.
@@ -19,6 +20,7 @@ pub struct RandomDropper {
 }
 
 impl RandomDropper {
+    /// New dropper with its own seeded PCG stream.
     pub fn new(seed: u64) -> RandomDropper {
         RandomDropper {
             rng: Pcg32::new(seed, 0x17d),
@@ -26,6 +28,18 @@ impl RandomDropper {
             scratch: Vec::new(),
             pin_first_token: false,
         }
+    }
+
+    /// The raw RNG words of the keep-index stream (checkpoint capture).
+    pub fn rng_raw(&self) -> (u64, u64) {
+        self.rng.raw_parts()
+    }
+
+    /// Resume the keep-index stream from [`RandomDropper::rng_raw`]
+    /// output: subsequent draws continue bit-exactly where the captured
+    /// run left off.
+    pub fn restore_rng(&mut self, state: u64, inc: u64) {
+        self.rng = Pcg32::from_raw_parts(state, inc);
     }
 
     /// Generate keep indices for `n_mid` middle layers, each keeping `keep`
@@ -101,6 +115,18 @@ mod tests {
                 let layer = &idx[l * 5..(l + 1) * 5];
                 assert!(layer.windows(2).all(|w| w[0] < w[1]), "{layer:?}");
             }
+        }
+    }
+
+    #[test]
+    fn rng_restore_resumes_the_keep_stream() {
+        let mut a = RandomDropper::new(9);
+        let _ = a.layerwise(2, 64, 16);
+        let (state, inc) = a.rng_raw();
+        let mut b = RandomDropper::new(0);
+        b.restore_rng(state, inc);
+        for _ in 0..10 {
+            assert_eq!(a.layerwise(2, 64, 16), b.layerwise(2, 64, 16));
         }
     }
 

@@ -18,7 +18,9 @@
 //! same signal at batch granularity.
 
 use crate::data::tokenizer::Tokenizer;
+use anyhow::bail;
 
+/// Per-token-id importance scores driving TokenBypass position selection.
 pub struct ImportanceTracker {
     /// Accumulated loss mass attributed to each token id.
     cum_loss: Vec<f64>,
@@ -30,6 +32,8 @@ pub struct ImportanceTracker {
 }
 
 impl ImportanceTracker {
+    /// New tracker over `tok`'s vocabulary; ids below `n_special` are
+    /// whitelisted (never dropped).
     pub fn new(tok: &Tokenizer, n_special: u32) -> ImportanceTracker {
         let v = tok.vocab_size as usize;
         let total: f64 = (0..tok.vocab_size).map(|t| tok.count(t) as f64).sum();
@@ -42,6 +46,33 @@ impl ImportanceTracker {
             corpus_freq,
             n_special,
         }
+    }
+
+    /// Token ids the tracker covers (the vocabulary size it was built on).
+    pub fn n_ids(&self) -> usize {
+        self.cum_loss.len()
+    }
+
+    /// The learned (non-derivable) state: accumulated per-id loss mass and
+    /// occurrence counts. The corpus-frequency prior and the whitelist are
+    /// rebuilt deterministically from the tokenizer, so this pair is all a
+    /// checkpoint needs.
+    pub fn snapshot(&self) -> (Vec<f64>, Vec<u64>) {
+        (self.cum_loss.clone(), self.seen.clone())
+    }
+
+    /// Restore the learned state captured by [`ImportanceTracker::snapshot`].
+    pub fn restore(&mut self, cum_loss: Vec<f64>, seen: Vec<u64>) -> crate::Result<()> {
+        if cum_loss.len() != self.cum_loss.len() || seen.len() != self.seen.len() {
+            bail!(
+                "importance restore: snapshot covers {} ids, tracker has {}",
+                cum_loss.len(),
+                self.cum_loss.len()
+            );
+        }
+        self.cum_loss = cum_loss;
+        self.seen = seen;
+        Ok(())
     }
 
     /// Attribute a step's mean loss to the token ids it contained
@@ -129,6 +160,20 @@ mod tests {
         let before = tr.score(id);
         tr.update(&[id as i32; 8], 5.0);
         assert!(tr.score(id) > before);
+    }
+
+    #[test]
+    fn snapshot_restore_preserves_scores() {
+        let (mut tr, tok) = tracker();
+        tr.update(&[(N_SPECIAL + 2) as i32; 16], 3.0);
+        let (cum, seen) = tr.snapshot();
+        let (mut fresh, _) = tracker();
+        assert_ne!(fresh.score(N_SPECIAL + 2), tr.score(N_SPECIAL + 2));
+        fresh.restore(cum, seen).unwrap();
+        for id in N_SPECIAL..tok.vocab_size {
+            assert_eq!(fresh.score(id), tr.score(id));
+        }
+        assert!(fresh.restore(vec![0.0; 3], vec![0; 3]).is_err(), "len checked");
     }
 
     #[test]

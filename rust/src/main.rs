@@ -10,11 +10,16 @@
 //! dsde train [--preset P] [--family F] [--steps N] [--lr X] [--seed S]
 //!            [--config FILE] [--eval-every K] [--replicas N]
 //!            [--dispatch bucket|exact] [--no-prewarm]
+//!            [--save-every N] [--save-dir DIR] [--resume PATH]
 //!                                   run one training; prints the curve
 //!                                   (--replicas N: data-parallel replica
 //!                                   engine; 0 = fused single step;
 //!                                   --dispatch exact: JIT-specialize the
-//!                                   requested shapes verbatim)
+//!                                   requested shapes verbatim;
+//!                                   --save-every N: atomic checkpoint
+//!                                   every N steps into --save-dir;
+//!                                   --resume PATH: restore a snapshot and
+//!                                   continue bit-identically)
 //! dsde pareto [--steps N]           quick Fig.2-style sweep (3 budgets)
 //! dsde synth --out DIR              emit manifest.json + the legacy
 //!                                   surrogate module grid (cross-check
@@ -46,7 +51,7 @@ fn main() {
 const VALUE_KEYS: &[&str] = &[
     "docs", "workers", "metric", "preset", "family", "steps", "lr", "seed",
     "config", "eval-every", "out", "prefetch-depth", "loader-workers",
-    "replicas", "dispatch",
+    "replicas", "dispatch", "save-every", "save-dir", "resume",
 ];
 
 fn run(argv: &[String]) -> dsde::Result<()> {
@@ -194,6 +199,22 @@ fn train(args: &Args) -> dsde::Result<()> {
     if args.flag("no-prewarm") {
         cfg.prewarm = false;
     }
+    cfg.save_every = args.get_u64("save-every", cfg.save_every)?;
+    if let Some(d) = args.get("save-dir") {
+        cfg.save_dir = d.to_string();
+    }
+    if let Some(p) = args.get("resume") {
+        cfg.resume = Some(p.to_string());
+    }
+    if let Some(p) = &cfg.resume {
+        println!("resuming from {p}");
+    }
+    if cfg.save_every > 0 {
+        println!(
+            "checkpointing every {} steps -> {}/step*.ckpt",
+            cfg.save_every, cfg.save_dir
+        );
+    }
     println!(
         "case: {} on {} for {} steps (pipeline: depth {}, {} workers; replicas: {}; \
          dispatch: {}{})",
@@ -206,6 +227,7 @@ fn train(args: &Args) -> dsde::Result<()> {
         cfg.dispatch.name(),
         if cfg.prewarm { "" } else { ", prewarm off" }
     );
+    let cfg_save_dir = cfg.save_dir.clone();
     let env = TrainEnv::new(args.get_u64("docs", 1000)? as usize, 7)?;
     let r = env.run(cfg)?;
     println!("\nstep      tokens        eval_loss   ppl");
@@ -244,16 +266,28 @@ fn train(args: &Args) -> dsde::Result<()> {
     );
     if r.n_replicas > 0 {
         println!(
-            "replicas: {} ranks, all-reduce {:.1}ms total, rank imbalance {:.0}%, state hash {:016x}",
+            "replicas: {} ranks, all-reduce {:.1}ms total, rank imbalance {:.0}%",
             r.n_replicas,
             r.allreduce_secs * 1e3,
-            r.rank_imbalance * 100.0,
-            r.state_hash
+            r.rank_imbalance * 100.0
+        );
+    }
+    if r.resumed_at > 0 {
+        println!(
+            "resume: continued from step {} (segment wall time only)",
+            r.resumed_at
+        );
+    }
+    if r.checkpoints_written > 0 {
+        println!(
+            "checkpoints: wrote {} snapshot(s) under {}",
+            r.checkpoints_written, cfg_save_dir
         );
     }
     if let Some(acc) = r.final_accuracy {
         println!("accuracy: {:.1}%", acc * 100.0);
     }
+    println!("state hash: {:016x}", r.state_hash);
     println!("dispatch: {:?}", r.dispatch);
     Ok(())
 }

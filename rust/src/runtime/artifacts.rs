@@ -25,21 +25,30 @@ use crate::Result;
 use anyhow::{anyhow, bail};
 use std::collections::BTreeMap;
 
+/// Element type of a program input/output tensor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
+    /// 32-bit unsigned integer.
     U32,
 }
 
+/// One named input/output tensor of a compiled program.
 #[derive(Clone, Debug)]
 pub struct TensorSpec {
+    /// Parameter name (manifest wire name).
     pub name: String,
+    /// Element type.
     pub dtype: DType,
+    /// Row-major shape (empty = scalar).
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total element count (1 for scalars).
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -48,8 +57,11 @@ impl TensorSpec {
 /// Routing mode of a compiled variant.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
+    /// No token dropping.
     Plain,
+    /// random-LTD: per-middle-layer keep sets.
     Ltd,
+    /// TokenBypass: one keep set bypassing the whole middle block.
     Bypass,
 }
 
@@ -65,45 +77,71 @@ impl Mode {
     }
 }
 
+/// Full manifest-level description of one program point.
 #[derive(Clone, Debug)]
 pub struct ArtifactInfo {
+    /// Canonical artifact name (e.g. `gpt_train_s64_ltd16`).
     pub name: String,
     /// Manifest-compat file name (`{name}.hlo`); no file exists — modules
     /// are synthesized in memory.
     pub file: String,
+    /// Owning model family.
     pub family: String,
-    pub kind: String, // train | eval | init | grad | apply
+    /// Program kind: train | eval | init | grad | apply.
+    pub kind: String,
+    /// Sequence length the program is specialized for.
     pub seq: usize,
+    /// Routing mode of the variant.
     pub mode: Mode,
+    /// Kept middle-layer length (== `seq` when not dropping).
     pub keep: usize,
     /// Batch rows this variant runs at (the data-parallel shard width for
     /// `grad` variants; the family batch otherwise).
     pub rows: usize,
+    /// Input tensor specs, in argument order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs, in result order.
     pub outputs: Vec<TensorSpec>,
 }
 
+/// Static description of one model family (dims, buckets, grid axes).
 #[derive(Clone, Debug)]
 pub struct FamilyInfo {
+    /// Family name: gpt | bert | moe | vit.
     pub name: String,
+    /// Vocabulary size (0 for ViT).
     pub vocab: usize,
+    /// Model width.
     pub d_model: usize,
+    /// Layer count (the surrogate state has 3 tensors per layer).
     pub n_layers: usize,
+    /// Attention heads (roofline bookkeeping; unused by the surrogate).
     pub n_heads: usize,
+    /// Feed-forward width (roofline bookkeeping).
     pub d_ff: usize,
+    /// Full sequence length (ViT: patches + 1).
     pub max_seq: usize,
+    /// Global batch rows per step.
     pub batch: usize,
+    /// MoE expert count (0 otherwise).
     pub n_experts: usize,
+    /// Classifier classes (ViT only).
     pub n_classes: usize,
+    /// Flattened patch dimension (ViT only).
     pub patch_dim: usize,
+    /// Layers eligible for token dropping (all but first and last).
     pub n_middle_layers: usize,
+    /// Legacy-grid sequence buckets (bucket dispatch rounds up to these).
     pub seq_buckets: Vec<usize>,
+    /// Sequence buckets that carry dropping variants on the legacy grid.
     pub ltd_seqs: Vec<usize>,
+    /// Per-sequence keep-length buckets on the legacy grid.
     pub keep_buckets: BTreeMap<usize, Vec<usize>>,
     /// Shard widths (rows per rank) on the legacy grid: the full batch
     /// plus every power-of-two divisor of it. `exact` dispatch is not
     /// limited to these.
     pub grad_rows: Vec<usize>,
+    /// Parameter tensor count (`3 · n_layers`; Adam mirrors add 2× more).
     pub n_params: usize,
     /// LM surrogate takes an explicit padding mask (BERT).
     pub pad_mask: bool,
@@ -123,6 +161,7 @@ impl FamilyInfo {
 /// [`crate::runtime::Runtime`], which holds the PJRT client and the
 /// bounded specialization cache.
 pub struct Registry {
+    /// The built-in family table.
     pub families: BTreeMap<String, FamilyInfo>,
     /// The legacy variant grid (172 points), kept for bucket-policy
     /// membership checks and `manifest.json` emission.
@@ -132,11 +171,13 @@ pub struct Registry {
 /// The result of routing a requested (seq, keep) point.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Route {
+    /// Artifact name the step dispatches to.
     pub artifact: String,
     /// Sequence length actually used (bucketed or verbatim per policy).
     pub seq: usize,
     /// Kept middle-layer length actually used (== seq when not dropping).
     pub keep: usize,
+    /// Routing mode of the dispatched variant.
     pub mode: Mode,
 }
 
@@ -152,6 +193,7 @@ impl Registry {
         Ok(Registry { families, grid })
     }
 
+    /// Look up a family by name.
     pub fn family(&self, name: &str) -> Result<&FamilyInfo> {
         self.families
             .get(name)
@@ -306,6 +348,7 @@ impl Registry {
         Ok(name)
     }
 
+    /// The family's full-sequence eval artifact.
     pub fn eval_name(&self, family: &str) -> Result<String> {
         let f = self.family(family)?;
         let name = format!("{family}_eval_s{}", f.max_seq);
@@ -313,6 +356,7 @@ impl Registry {
         Ok(name)
     }
 
+    /// The family's seed-deterministic state-init artifact.
     pub fn init_name(&self, family: &str) -> Result<String> {
         let name = format!("{family}_init");
         self.artifact(&name)?;

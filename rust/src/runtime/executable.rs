@@ -11,7 +11,9 @@ use crate::runtime::artifacts::{ArtifactInfo, DType};
 use crate::Result;
 use anyhow::{bail, Context};
 
+/// A compiled executable plus its manifest-level description.
 pub struct Step {
+    /// IO specs and identity of the compiled program point.
     pub info: ArtifactInfo,
     exe: xla::PjRtLoadedExecutable,
     /// Wall-clock spent compiling (specialization-cache statistics).
@@ -78,6 +80,7 @@ pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
     Ok(xla::Literal::vec1(data).reshape(&dims)?)
 }
 
+/// Build a literal from f32 data with the given dims.
 pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     let n: usize = dims.iter().product();
     if n != data.len() {
@@ -87,10 +90,12 @@ pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
     Ok(xla::Literal::vec1(data).reshape(&dims)?)
 }
 
+/// Rank-0 f32 literal.
 pub fn scalar_f32(v: f32) -> xla::Literal {
     xla::Literal::scalar(v)
 }
 
+/// Rank-0 u32 literal.
 pub fn scalar_u32(v: u32) -> xla::Literal {
     xla::Literal::scalar(v)
 }

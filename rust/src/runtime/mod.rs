@@ -198,6 +198,7 @@ impl Drop for Prewarmer {
 
 /// The runtime: one PJRT CPU client + the bounded JIT specialization cache.
 pub struct Runtime {
+    /// The specializing artifact registry (families, grid, routing).
     pub registry: Registry,
     client: xla::PjRtClient,
     cache: RefCell<LruCache>,
@@ -212,6 +213,7 @@ pub struct Runtime {
 }
 
 impl Runtime {
+    /// Build with the default specialization-cache capacity.
     pub fn new() -> Result<Runtime> {
         Self::with_cache_capacity(DEFAULT_CACHE_CAPACITY)
     }
@@ -321,6 +323,7 @@ impl Runtime {
         *self.cache.borrow_mut() = LruCache::new(cap);
     }
 
+    /// Executables currently resident in the specialization cache.
     pub fn cached_executables(&self) -> usize {
         self.cache.borrow().len()
     }

@@ -8,11 +8,14 @@
 //! ratio the paper reports (1x/1.5x/2x/12.5x), since those are token /
 //! wall-clock ratios on both sides. Reported explicitly as "sim" columns.
 
-/// Paper anchor constants.
+/// Paper anchor: GPT-3 1.3B full-data token budget.
 pub const PAPER_FULL_TOKENS: f64 = 300e9;
+/// Paper anchor: hours on 64 V100 for the full-data run.
 pub const PAPER_FULL_HOURS: f64 = 260.0;
+/// Paper anchor: Azure rental cost of the full-data run.
 pub const PAPER_FULL_COST_USD: f64 = 46_300.0;
 
+/// Scales measured testbed runs onto the paper's reporting units.
 #[derive(Clone, Copy, Debug)]
 pub struct CostModel {
     /// Compute-token budget that corresponds to the paper's full-data run
@@ -22,6 +25,7 @@ pub struct CostModel {
     pub full_wall_secs: f64,
 }
 
+/// One run's cost columns (measured + simulated paper-scale).
 #[derive(Clone, Copy, Debug)]
 pub struct CostReport {
     /// Fraction of the full budget this run consumed.
@@ -37,10 +41,12 @@ pub struct CostReport {
 }
 
 impl CostModel {
+    /// Anchor the model on the testbed's full-data baseline run.
     pub fn new(full_compute_tokens: f64, full_wall_secs: f64) -> CostModel {
         CostModel { full_compute_tokens, full_wall_secs }
     }
 
+    /// Cost columns for one run's (compute tokens, wall seconds).
     pub fn report(&self, compute_tokens: f64, wall_secs: f64) -> CostReport {
         let token_fraction = compute_tokens / self.full_compute_tokens.max(1e-9);
         let time_ratio = wall_secs / self.full_wall_secs.max(1e-9);

@@ -7,22 +7,30 @@
 //! arithmetic-intensity-based MXU utilization bound on a TPUv4-like core
 //! (16 MiB VMEM, 275 TFLOP/s bf16 MXU, 1.2 TB/s HBM).
 
-/// TPUv4-like core model.
+/// TPUv4-like core model: VMEM per core.
 pub const VMEM_BYTES: usize = 16 * 1024 * 1024;
+/// TPUv4-like core model: bf16 MXU peak FLOP/s.
 pub const MXU_FLOPS: f64 = 275e12;
+/// TPUv4-like core model: HBM bandwidth.
 pub const HBM_BYTES_PER_S: f64 = 1.2e12;
 
+/// One attention-kernel tile configuration to estimate.
 #[derive(Clone, Copy, Debug)]
 pub struct AttentionTile {
+    /// Sequence-length tile.
     pub seq: usize,
+    /// Head dimension.
     pub head_dim: usize,
+    /// Element width (4 = f32, 2 = bf16).
     pub bytes_per_elem: usize,
 }
 
+/// Roofline outputs for one tile configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct RooflineEstimate {
     /// VMEM bytes resident for one (batch, head) grid point, double-buffered.
     pub vmem_bytes: usize,
+    /// Whether that footprint fits the core's VMEM.
     pub fits_vmem: bool,
     /// FLOPs per grid point (fwd).
     pub flops: f64,

@@ -1,0 +1,769 @@
+//! Bit-exact checkpoint/resume: a versioned, self-describing binary
+//! snapshot of everything a training step depends on.
+//!
+//! The paper's 12.5x cost claim is earned on multi-week pretraining runs,
+//! where preemption is a certainty — so the whole (CL, LTD) training state
+//! must survive a restart **bit-for-bit**: a run resumed at step `k` has
+//! to produce the same `state_hash`, the same per-step f32 losses and the
+//! same eval curve as the uninterrupted run (`tests/checkpoint_resume.rs`
+//! is the enforcing suite).
+//!
+//! What a snapshot carries (and why it is sufficient):
+//!
+//! * **model + Adam state** — every `f32` state literal verbatim;
+//! * **token accounting** — the [`TokenAccountant`] counters that position
+//!   the token-based LR schedule (§3.3);
+//! * **dropper RNG** — the random-LTD keep-index stream (raw PCG32 state);
+//! * **importance tracker** — TokenBypass's accumulated per-id loss/seen
+//!   arrays (its corpus prior is rebuilt deterministically from the data);
+//! * **step losses + eval curve** so far, so the resumed run reports the
+//!   full-run observables;
+//! * a **schedule fingerprint** over the precomputed (CL, route) plan,
+//!   which rejects resuming under a different config/seed/schedule.
+//!
+//! Sampler RNG streams, the BERT mask-seed counter and the ViT cursor are
+//! *not* serialized: planning is cheap and strictly sequential, so the
+//! trainer fast-forwards the loader by replaying the planning stage for
+//! steps `0..k` (no batch is materialized, no step executed) — see
+//! [`crate::train::Trainer`]. The curriculum pacing position is a pure
+//! function of the step and is re-derived from the plan.
+//!
+//! # File format (version 1)
+//!
+//! ```text
+//! [ 0.. 8)  magic  b"DSDECKPT"
+//! [ 8..12)  format version, u32 LE
+//! [12..16)  header length H, u32 LE
+//! [16..16+H) header: compact JSON (sorted keys), self-describing counts
+//! [16+H..N-8) body: raw little-endian sections in fixed order
+//! [N-8..N)  FNV-1a checksum over bytes [0..N-8), u64 LE
+//! ```
+//!
+//! Body order: state tensors (f32, dims from the header) · accountant
+//! (4×u64) · dropper RNG (2×u64) · importance arrays (f64/u64, optional) ·
+//! step losses (f32) · curve points (u64 + 2×f64 each). Writes are atomic:
+//! encode to `<path>.tmp`, fsync, rename — a crash mid-write leaves no
+//! partial file at the final path. Any format change requires bumping
+//! [`FORMAT_VERSION`] (a byte-stability golden pins version 1).
+//!
+//! [`TokenAccountant`]: crate::ltd::TokenAccountant
+
+use crate::config::json::Json;
+use crate::config::schema::RunConfig;
+use crate::curriculum::scheduler::SeqTransform;
+use crate::train::trainer::{CurvePoint, StepRoute};
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::io::Write;
+use std::path::Path;
+
+/// Leading magic bytes of every dsde checkpoint file.
+pub const MAGIC: &[u8; 8] = b"DSDECKPT";
+
+/// Current checkpoint format version. Any change to the byte layout —
+/// header keys, section order, widths — must bump this (enforced by the
+/// byte-stability golden in `tests/checkpoint_format.rs`).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// One serialized state tensor: its dims and raw f32 elements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSnap {
+    /// Row-major dims, as the runtime literal reported them.
+    pub dims: Vec<i64>,
+    /// Dense f32 elements (`dims` product many).
+    pub data: Vec<f32>,
+}
+
+/// Which step engine produced the snapshot. Resuming may change the
+/// replica *count* (the elastic-restart case: the n↔1 bit-equivalence
+/// guarantee makes any aligned count interchangeable) but not cross the
+/// fused/replica boundary — the two paths bracket f32 reductions
+/// differently, so crossing would silently void bit-exactness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// The fused single-instance train step (`n_replicas = 0`).
+    Fused,
+    /// The data-parallel replica engine (`n_replicas ≥ 1`).
+    Replica,
+}
+
+impl Engine {
+    /// Wire name used in the checkpoint header.
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Fused => "fused",
+            Engine::Replica => "replica",
+        }
+    }
+
+    /// Parse a header wire name.
+    pub fn from_name(s: &str) -> Result<Engine> {
+        Ok(match s {
+            "fused" => Engine::Fused,
+            "replica" => Engine::Replica,
+            _ => bail!("unknown engine '{s}' in checkpoint header"),
+        })
+    }
+}
+
+/// A decoded (or to-be-encoded) training snapshot at step [`Checkpoint::step`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Model family the state belongs to.
+    pub family: String,
+    /// Completed training steps (the resume point; also the loss count).
+    pub step: u64,
+    /// Total steps of the run that wrote the snapshot.
+    pub total_steps: u64,
+    /// Replica count at save time (informational — resuming at a
+    /// different count is legal within the same [`Engine`]).
+    pub n_replicas: usize,
+    /// Step engine at save time (see [`Engine`]).
+    pub engine: Engine,
+    /// Fingerprint of the full (CL, route) plan, seed and family — see
+    /// [`schedule_fingerprint`].
+    pub schedule_fp: u64,
+    /// Model parameters + Adam moments, in state-literal order.
+    pub state: Vec<TensorSnap>,
+    /// Raw [`TokenAccountant`] counters: steps, data tokens, layer
+    /// tokens, layer count.
+    ///
+    /// [`TokenAccountant`]: crate::ltd::TokenAccountant
+    pub accountant: [u64; 4],
+    /// Raw PCG32 (state, inc) of the random-LTD dropper stream.
+    pub dropper_rng: (u64, u64),
+    /// TokenBypass importance state `(cum_loss, seen)`, when the run
+    /// routes with an importance tracker.
+    pub importance: Option<(Vec<f64>, Vec<u64>)>,
+    /// Per-step train losses for steps `0..step`, bit-exact f32.
+    pub step_losses: Vec<f32>,
+    /// Eval-curve points recorded so far.
+    pub curve: Vec<CurvePoint>,
+}
+
+impl Checkpoint {
+    /// Serialize to the on-disk byte format (see the module docs).
+    pub fn encode(&self) -> Vec<u8> {
+        let header = self.header_json().to_string_compact();
+        let mut buf = Vec::with_capacity(64 + header.len() + self.body_len());
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        buf.extend_from_slice(header.as_bytes());
+        for t in &self.state {
+            for x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        for v in self.accountant {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.extend_from_slice(&self.dropper_rng.0.to_le_bytes());
+        buf.extend_from_slice(&self.dropper_rng.1.to_le_bytes());
+        if let Some((cum, seen)) = &self.importance {
+            for x in cum {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            for s in seen {
+                buf.extend_from_slice(&s.to_le_bytes());
+            }
+        }
+        for l in &self.step_losses {
+            buf.extend_from_slice(&l.to_le_bytes());
+        }
+        for p in &self.curve {
+            buf.extend_from_slice(&p.step.to_le_bytes());
+            buf.extend_from_slice(&p.compute_tokens.to_le_bytes());
+            buf.extend_from_slice(&p.eval_loss.to_le_bytes());
+        }
+        let checksum = fnv1a(&buf);
+        buf.extend_from_slice(&checksum.to_le_bytes());
+        buf
+    }
+
+    /// Decode and fully validate a checkpoint byte image. Errors name the
+    /// failure class: bad magic, unsupported version, truncation,
+    /// checksum mismatch, or a malformed header/body.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        if bytes.len() < 16 + 8 {
+            bail!("truncated checkpoint ({} bytes; the prelude is missing)", bytes.len());
+        }
+        if &bytes[..8] != MAGIC {
+            bail!("not a dsde checkpoint (bad magic)");
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            bail!(
+                "unsupported checkpoint format version {version} \
+                 (this build reads {FORMAT_VERSION})"
+            );
+        }
+        let header_len = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        if 16 + header_len + 8 > bytes.len() {
+            bail!(
+                "truncated checkpoint (header claims {header_len} bytes, file has {})",
+                bytes.len()
+            );
+        }
+        let header = std::str::from_utf8(&bytes[16..16 + header_len])
+            .map_err(|_| anyhow!("corrupt checkpoint: header is not UTF-8"))?;
+        let h = Json::parse(header).map_err(|e| anyhow!("corrupt checkpoint header: {e}"))?;
+
+        let family = h
+            .get("family")
+            .as_str()
+            .ok_or_else(|| anyhow!("corrupt checkpoint header: missing family"))?
+            .to_string();
+        let step = h
+            .get("step")
+            .as_usize()
+            .ok_or_else(|| anyhow!("corrupt checkpoint header: missing step"))? as u64;
+        let total_steps = h
+            .get("total_steps")
+            .as_usize()
+            .ok_or_else(|| anyhow!("corrupt checkpoint header: missing total_steps"))?
+            as u64;
+        let n_replicas = h.get("n_replicas").as_usize().unwrap_or(0);
+        let engine = Engine::from_name(h.get("engine").as_str().unwrap_or("fused"))?;
+        let schedule_fp = u64::from_str_radix(h.get("schedule_fp").as_str().unwrap_or(""), 16)
+            .map_err(|_| anyhow!("corrupt checkpoint header: bad schedule_fp"))?;
+        let importance_len = h.get("importance").as_usize().unwrap_or(0);
+        let n_curve = h.get("curve").as_usize().unwrap_or(0);
+        let tensors = h
+            .get("tensors")
+            .as_arr()
+            .ok_or_else(|| anyhow!("corrupt checkpoint header: missing tensors"))?;
+        let mut dims_list: Vec<Vec<i64>> = Vec::with_capacity(tensors.len());
+        let mut state_elems = 0usize;
+        for t in tensors {
+            let dims: Vec<i64> = t
+                .as_arr()
+                .ok_or_else(|| anyhow!("corrupt checkpoint header: bad tensor dims"))?
+                .iter()
+                .map(|d| d.as_i64().ok_or_else(|| anyhow!("corrupt checkpoint header: bad dim")))
+                .collect::<Result<_>>()?;
+            if dims.iter().any(|&d| d < 0) {
+                bail!("corrupt checkpoint header: negative dim");
+            }
+            let elems = dims
+                .iter()
+                .try_fold(1i64, |acc, &d| acc.checked_mul(d))
+                .filter(|&n| n <= i32::MAX as i64)
+                .ok_or_else(|| anyhow!("corrupt checkpoint header: tensor dims overflow"))?;
+            state_elems += elems as usize;
+            dims_list.push(dims);
+        }
+
+        // The header fully determines the body size: enforce it before
+        // trusting any offset, so truncation reports as truncation.
+        let body_len = state_elems * 4
+            + 4 * 8
+            + 2 * 8
+            + importance_len * (8 + 8)
+            + step as usize * 4
+            + n_curve * (8 + 8 + 8);
+        let expected = 16 + header_len + body_len + 8;
+        if bytes.len() < expected {
+            bail!("truncated checkpoint (expected {expected} bytes, got {})", bytes.len());
+        }
+        if bytes.len() > expected {
+            bail!("corrupt checkpoint: {} trailing bytes", bytes.len() - expected);
+        }
+        let stored = u64::from_le_bytes(bytes[expected - 8..].try_into().unwrap());
+        let actual = fnv1a(&bytes[..expected - 8]);
+        if stored != actual {
+            bail!("corrupt checkpoint: checksum mismatch ({stored:016x} != {actual:016x})");
+        }
+
+        let mut c = Cursor { bytes: &bytes[16 + header_len..expected - 8], pos: 0 };
+        let mut state = Vec::with_capacity(dims_list.len());
+        for dims in dims_list {
+            let n = dims.iter().product::<i64>() as usize;
+            let mut data = Vec::with_capacity(n);
+            for _ in 0..n {
+                data.push(c.f32()?);
+            }
+            state.push(TensorSnap { dims, data });
+        }
+        let accountant = [c.u64()?, c.u64()?, c.u64()?, c.u64()?];
+        let dropper_rng = (c.u64()?, c.u64()?);
+        let importance = if importance_len > 0 {
+            let mut cum = Vec::with_capacity(importance_len);
+            for _ in 0..importance_len {
+                cum.push(c.f64()?);
+            }
+            let mut seen = Vec::with_capacity(importance_len);
+            for _ in 0..importance_len {
+                seen.push(c.u64()?);
+            }
+            Some((cum, seen))
+        } else {
+            None
+        };
+        let mut step_losses = Vec::with_capacity(step as usize);
+        for _ in 0..step {
+            step_losses.push(c.f32()?);
+        }
+        let mut curve = Vec::with_capacity(n_curve);
+        for _ in 0..n_curve {
+            curve.push(CurvePoint {
+                step: c.u64()?,
+                compute_tokens: c.f64()?,
+                eval_loss: c.f64()?,
+            });
+        }
+        debug_assert_eq!(c.pos, c.bytes.len(), "body length pre-validated");
+        Ok(Checkpoint {
+            family,
+            step,
+            total_steps,
+            n_replicas,
+            engine,
+            schedule_fp,
+            state,
+            accountant,
+            dropper_rng,
+            importance,
+            step_losses,
+            curve,
+        })
+    }
+
+    /// Atomically write the snapshot to `path`: encode into a sibling
+    /// `.tmp` file, fsync it, then rename over the final name — so a crash
+    /// at any point leaves either the previous file or no file, never a
+    /// partial one. Parent directories are created as needed.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating checkpoint dir {}", parent.display()))?;
+            }
+        }
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        let bytes = self.encode();
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Read and decode a checkpoint file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Checkpoint::decode(&bytes).with_context(|| format!("decoding {}", path.display()))
+    }
+
+    /// Check the snapshot against the run about to resume from it:
+    /// family, plan fingerprint, step bounds, loss count, engine
+    /// compatibility (elastic replica-count changes allowed; crossing the
+    /// fused/replica boundary rejected) and state/importance shape.
+    pub fn validate_for(
+        &self,
+        run: &RunConfig,
+        schedule_fp: u64,
+        n_state: usize,
+        importance_ids: Option<usize>,
+    ) -> Result<()> {
+        if self.family != run.family {
+            bail!("checkpoint is for family '{}', run is '{}'", self.family, run.family);
+        }
+        if self.schedule_fp != schedule_fp {
+            bail!(
+                "checkpoint was written under a different run plan \
+                 (schedule fingerprint {:016x} != {:016x}: config, seed or \
+                 schedule changed)",
+                self.schedule_fp,
+                schedule_fp
+            );
+        }
+        if self.step > run.total_steps {
+            bail!(
+                "checkpoint is at step {} but the run has only {} steps",
+                self.step,
+                run.total_steps
+            );
+        }
+        if self.step_losses.len() as u64 != self.step {
+            bail!(
+                "corrupt checkpoint: {} losses for {} completed steps",
+                self.step_losses.len(),
+                self.step
+            );
+        }
+        let run_engine = if run.n_replicas > 0 { Engine::Replica } else { Engine::Fused };
+        if self.engine != run_engine {
+            bail!(
+                "checkpoint was saved on the {} path but the run uses the {} path: \
+                 the two bracket f32 reductions differently, so resuming across \
+                 them would silently lose bit-exactness (elastic restart may \
+                 change the replica count, not the engine)",
+                self.engine.name(),
+                run_engine.name()
+            );
+        }
+        if self.state.len() != n_state {
+            bail!(
+                "checkpoint has {} state tensors, the {} family expects {}",
+                self.state.len(),
+                run.family,
+                n_state
+            );
+        }
+        match (self.importance.as_ref(), importance_ids) {
+            (None, None) => {}
+            (Some((cum, _)), Some(n)) if cum.len() == n => {}
+            (Some((cum, _)), Some(n)) => bail!(
+                "checkpoint importance state covers {} token ids, run expects {n}",
+                cum.len()
+            ),
+            (Some(_), None) => bail!(
+                "checkpoint carries TokenBypass importance state but the run \
+                 does not route with TokenBypass"
+            ),
+            (None, Some(_)) => bail!(
+                "run routes with TokenBypass but the checkpoint has no \
+                 importance state"
+            ),
+        }
+        Ok(())
+    }
+
+    fn header_json(&self) -> Json {
+        let tensors: Vec<Json> = self
+            .state
+            .iter()
+            .map(|t| Json::Arr(t.dims.iter().map(|&d| Json::Num(d as f64)).collect()))
+            .collect();
+        Json::obj(vec![
+            ("curve", self.curve.len().into()),
+            ("engine", self.engine.name().into()),
+            ("family", self.family.as_str().into()),
+            ("importance", self.importance.as_ref().map(|(c, _)| c.len()).unwrap_or(0).into()),
+            ("n_replicas", self.n_replicas.into()),
+            ("schedule_fp", format!("{:016x}", self.schedule_fp).into()),
+            ("step", (self.step as usize).into()),
+            ("tensors", Json::Arr(tensors)),
+            ("total_steps", (self.total_steps as usize).into()),
+        ])
+    }
+
+    fn body_len(&self) -> usize {
+        let elems: usize = self.state.iter().map(|t| t.data.len()).sum();
+        elems * 4
+            + 4 * 8
+            + 2 * 8
+            + self.importance.as_ref().map(|(c, _)| c.len() * 16).unwrap_or(0)
+            + self.step_losses.len() * 4
+            + self.curve.len() * 24
+    }
+}
+
+/// Convert runtime state literals into serializable tensors. Errors if a
+/// state literal is not a dense f32 array (the surrogate state always is).
+pub fn tensors_from_state(state: &[xla::Literal]) -> Result<Vec<TensorSnap>> {
+    state
+        .iter()
+        .map(|lit| {
+            let dims = lit
+                .array_shape()
+                .map_err(|e| anyhow!("checkpoint: state literal has no shape: {e}"))?
+                .dims()
+                .to_vec();
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("checkpoint: non-f32 state literal: {e}"))?;
+            Ok(TensorSnap { dims, data })
+        })
+        .collect()
+}
+
+/// Rebuild runtime state literals from decoded tensors.
+pub fn state_from_tensors(tensors: &[TensorSnap]) -> Result<Vec<xla::Literal>> {
+    tensors
+        .iter()
+        .map(|t| {
+            xla::Literal::vec1(&t.data)
+                .reshape(&t.dims)
+                .map_err(|e| anyhow!("checkpoint: state tensor shape mismatch: {e}"))
+        })
+        .collect()
+}
+
+/// FNV-1a over a byte slice (the same hash family as
+/// [`crate::train::state_fingerprint`], applied to raw bytes).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Fingerprint of everything that determines the batch/route stream of a
+/// run: family, seed, step budget, dispatch policy and the per-step
+/// resolved (CL state, route). Two configs with the same fingerprint plan
+/// identical streams, so a snapshot from one resumes bit-exactly under
+/// the other; anything else is rejected. The replica count and pipeline
+/// knobs are deliberately **excluded** — both are bit-neutral by the
+/// engine's equivalence guarantees, which is what makes elastic restart
+/// legal.
+pub fn schedule_fingerprint(run: &RunConfig, schedule: &[StepRoute]) -> u64 {
+    let mut buf: Vec<u8> = Vec::with_capacity(64 + schedule.len() * 32);
+    buf.extend_from_slice(run.family.as_bytes());
+    buf.push(0xff);
+    buf.extend_from_slice(&run.seed.to_le_bytes());
+    buf.extend_from_slice(&run.total_steps.to_le_bytes());
+    buf.extend_from_slice(run.dispatch.name().as_bytes());
+    buf.push(0xff);
+    for sr in schedule {
+        buf.extend_from_slice(&(sr.cl.seq as u64).to_le_bytes());
+        buf.push(match sr.cl.transform {
+            SeqTransform::None => 0,
+            SeqTransform::Truncate => 1,
+            SeqTransform::Reshape => 2,
+        });
+        buf.extend_from_slice(&sr.cl.pool_pct.to_bits().to_le_bytes());
+        buf.extend_from_slice(sr.route.artifact.as_bytes());
+        buf.push(0xff);
+        buf.extend_from_slice(&(sr.route.seq as u64).to_le_bytes());
+        buf.extend_from_slice(&(sr.route.keep as u64).to_le_bytes());
+        buf.push(sr.route.mode.name().as_bytes()[0]);
+    }
+    fnv1a(&buf)
+}
+
+/// Bounds-checked little-endian reader over the checkpoint body.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("truncated checkpoint body");
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::RunConfig;
+    use crate::curriculum::scheduler::ClState;
+    use crate::runtime::{Mode, Route};
+
+    pub(crate) fn sample() -> Checkpoint {
+        Checkpoint {
+            family: "gpt".into(),
+            step: 3,
+            total_steps: 10,
+            n_replicas: 2,
+            engine: Engine::Replica,
+            schedule_fp: 0x1234_5678_9abc_def0,
+            state: vec![
+                TensorSnap { dims: vec![2, 2], data: vec![1.0, -2.5, 0.0, 3.25] },
+                TensorSnap { dims: vec![3], data: vec![0.5, 0.25, -0.125] },
+            ],
+            accountant: [3, 1536, 6144, 4],
+            dropper_rng: (0xdead_beef_0000_0001, 0x0000_0000_0000_02ff),
+            importance: Some((vec![0.5, 1.5], vec![7, 9])),
+            step_losses: vec![5.5, 5.25, 5.0],
+            curve: vec![CurvePoint { step: 2, compute_tokens: 1024.0, eval_loss: 5.125 }],
+        }
+    }
+
+    fn plan() -> (RunConfig, Vec<StepRoute>) {
+        let run = RunConfig::baseline("gpt", 2, 1e-3);
+        let schedule = vec![
+            StepRoute {
+                cl: ClState {
+                    seq: 64,
+                    transform: SeqTransform::None,
+                    pool_pct: 1.0,
+                },
+                route: Route {
+                    artifact: "gpt_train_s64_full".into(),
+                    seq: 64,
+                    keep: 64,
+                    mode: Mode::Plain,
+                },
+            };
+            2
+        ];
+        (run, schedule)
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let ck = sample();
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn roundtrip_without_importance() {
+        let mut ck = sample();
+        ck.importance = None;
+        ck.engine = Engine::Fused;
+        ck.n_replicas = 0;
+        let back = Checkpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample().encode();
+        bytes[0] = b'X';
+        let err = Checkpoint::decode(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("not a dsde checkpoint"), "{err}");
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut bytes = sample().encode();
+        bytes[8] = 99;
+        let err = Checkpoint::decode(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn truncation_rejected_at_every_length() {
+        let bytes = sample().encode();
+        for cut in [0, 7, 15, 16, bytes.len() / 2, bytes.len() - 9, bytes.len() - 1] {
+            let err = Checkpoint::decode(&bytes[..cut]).unwrap_err();
+            assert!(
+                format!("{err}").contains("truncated"),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn corruption_rejected_by_checksum() {
+        let mut bytes = sample().encode();
+        // flip a bit inside the body (past the header), so lengths stay
+        // plausible and the checksum is what must catch it
+        let hlen = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        bytes[16 + hlen + 5] ^= 0x40;
+        let err = Checkpoint::decode(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = sample().encode();
+        bytes.push(0);
+        let err = Checkpoint::decode(&bytes).unwrap_err();
+        assert!(format!("{err}").contains("trailing"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_plan_and_seed() {
+        let (mut run, schedule) = plan();
+        let fp = schedule_fingerprint(&run, &schedule);
+        assert_eq!(fp, schedule_fingerprint(&run, &schedule), "deterministic");
+        run.seed ^= 1;
+        assert_ne!(fp, schedule_fingerprint(&run, &schedule), "seed must matter");
+        run.seed ^= 1;
+        let mut shorter = schedule.clone();
+        shorter.pop();
+        run.total_steps = 1;
+        assert_ne!(fp, schedule_fingerprint(&run, &shorter), "plan must matter");
+    }
+
+    #[test]
+    fn fingerprint_ignores_replica_count_and_pipeline() {
+        let (mut run, schedule) = plan();
+        let fp = schedule_fingerprint(&run, &schedule);
+        run.n_replicas = 4;
+        run.pipeline = crate::config::schema::PipelineConfig::disabled();
+        assert_eq!(fp, schedule_fingerprint(&run, &schedule), "elastic knobs excluded");
+    }
+
+    #[test]
+    fn validate_rejects_engine_crossing_and_plan_drift() {
+        let (mut run, _) = plan();
+        let ck = sample(); // replica engine, fp 0x123...
+        run.n_replicas = 2;
+        run.total_steps = 10;
+        let n_state = ck.state.len();
+        // wrong fingerprint
+        let err = ck.validate_for(&run, 1, n_state, Some(2)).unwrap_err();
+        assert!(format!("{err}").contains("different run plan"), "{err}");
+        // fused run against a replica checkpoint
+        run.n_replicas = 0;
+        let err = ck
+            .validate_for(&run, ck.schedule_fp, n_state, Some(2))
+            .unwrap_err();
+        assert!(format!("{err}").contains("fused"), "{err}");
+        // elastic count change within the replica engine is fine
+        run.n_replicas = 8;
+        ck.validate_for(&run, ck.schedule_fp, n_state, Some(2)).unwrap();
+        // importance shape mismatch
+        let err = ck
+            .validate_for(&run, ck.schedule_fp, n_state, Some(5))
+            .unwrap_err();
+        assert!(format!("{err}").contains("token ids"), "{err}");
+        let err = ck.validate_for(&run, ck.schedule_fp, n_state, None).unwrap_err();
+        assert!(format!("{err}").contains("TokenBypass"), "{err}");
+    }
+
+    #[test]
+    fn state_tensor_roundtrip_through_literals() {
+        let ck = sample();
+        let lits = state_from_tensors(&ck.state).unwrap();
+        assert_eq!(lits.len(), 2);
+        assert_eq!(lits[0].array_shape().unwrap().dims(), &[2, 2]);
+        let back = tensors_from_state(&lits).unwrap();
+        assert_eq!(back, ck.state);
+    }
+
+    #[test]
+    fn save_is_atomic_and_loadable() {
+        let dir = std::env::temp_dir().join(format!("dsde-ckpt-unit-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested").join("step000003.ckpt");
+        let ck = sample();
+
+        // Simulated crash: a partial image parked at the tmp path must not
+        // surface at the final path, and a later real save must win.
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        let tmp = path.with_extension("ckpt.tmp");
+        std::fs::write(&tmp, &ck.encode()[..10]).unwrap();
+        assert!(!path.exists(), "no partial file at the final path");
+        assert!(Checkpoint::load(&path).is_err());
+
+        ck.save(&path).unwrap();
+        assert!(path.exists());
+        assert!(!tmp.exists(), "publish replaces the tmp file");
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck, back);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -23,18 +23,31 @@ use crate::Result;
 use anyhow::bail;
 use std::sync::Arc;
 
+/// Shared data + runtime environment every case of an experiment runs in.
 pub struct TrainEnv {
+    /// The PJRT runtime + specializing registry.
     pub rt: Runtime,
+    /// Tokenizer fitted on the training corpus.
     pub tokenizer: Tokenizer,
+    /// GPT/MoE training dataset.
     pub gpt_train: Arc<GptDataset>,
+    /// GPT/MoE held-out dataset.
     pub gpt_eval: Arc<GptDataset>,
+    /// BERT training dataset.
     pub bert_train: Arc<BertDataset>,
+    /// BERT held-out dataset.
     pub bert_eval: Arc<BertDataset>,
+    /// Synthetic ViT dataset (train + eval by cursor range).
     pub vit: Arc<VitDataset>,
+    /// GPT `voc` difficulty index.
     pub gpt_voc: Arc<DifficultyIndex>,
+    /// BERT `voc` difficulty index.
     pub bert_voc: Arc<DifficultyIndex>,
+    /// BERT `seqreo` (effective length) difficulty index.
     pub bert_seqreo: Arc<DifficultyIndex>,
+    /// BERT composed `seqreo_voc` difficulty index.
     pub bert_seqreo_voc: Arc<DifficultyIndex>,
+    /// Held-out batches per evaluation.
     pub eval_batches: usize,
 }
 

@@ -1,17 +1,20 @@
 //! Training: the step orchestrator ([`trainer`]), the data+runtime
 //! environment ([`env`]), the prefetch pipeline ([`pipeline`]), the
-//! data-parallel replica engine ([`replica`]) and the paper's low-cost
+//! data-parallel replica engine ([`replica`]), the bit-exact
+//! checkpoint/resume subsystem ([`checkpoint`]) and the paper's low-cost
 //! hyperparameter tuning strategy ([`tuning`]).
 
+pub mod checkpoint;
 pub mod env;
 pub mod pipeline;
 pub mod replica;
 pub mod trainer;
 pub mod tuning;
 
+pub use checkpoint::{Checkpoint, Engine, FORMAT_VERSION};
 pub use env::TrainEnv;
 pub use pipeline::{BatchPipeline, PipelineStats, Prefetcher, StepSpec};
-pub use replica::{ReplicaEngine, ReducedStep};
+pub use replica::{ReducedStep, ReplicaEngine};
 pub use trainer::{
     plan_schedule, state_fingerprint, CurvePoint, EvalSet, LoaderKind, RunResult, StepRoute,
     Trainer,

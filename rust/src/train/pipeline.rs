@@ -32,6 +32,7 @@ use std::time::Instant;
 // ---------------------------------------------------------------------------
 // Generic single-producer prefetcher
 
+/// Generic single-producer prefetch channel (benches, ad-hoc pipelines).
 pub struct Prefetcher<T: Send + 'static> {
     rx: Option<Receiver<T>>,
     // Joined on drop so producer panics surface in tests.
@@ -93,6 +94,7 @@ impl<T: Send + 'static> Drop for Prefetcher<T> {
 /// curriculum schedule and bucket routing (`plan_schedule`).
 #[derive(Clone, Copy, Debug)]
 pub struct StepSpec {
+    /// Curriculum state of the step.
     pub cl: ClState,
     /// Bucketed sequence length the step will execute at.
     pub seq: usize,
@@ -175,6 +177,7 @@ impl BatchPipeline {
         self.pool.put(batch);
     }
 
+    /// Consumer-side stall vs worker-side build time so far.
     pub fn stats(&self) -> PipelineStats {
         PipelineStats { stall_secs: self.stall_secs, build_secs: self.q.build_secs() }
     }

@@ -90,6 +90,7 @@ pub struct ReducedStep {
     pub den: f32,
 }
 
+/// The coordinator-side handle over the rank worker threads.
 pub struct ReplicaEngine {
     txs: Vec<Sender<RankJob>>,
     done_rx: Receiver<RankDone>,
@@ -140,6 +141,7 @@ impl ReplicaEngine {
         }
     }
 
+    /// Rank count the engine was spawned with.
     pub fn n_ranks(&self) -> usize {
         self.n_ranks
     }

@@ -15,6 +15,13 @@
 //! [`PipelineConfig`] enables it — feeds the async batch pipeline so batch
 //! construction overlaps step execution. The trainer then drains batches
 //! in step order and reports how long it stalled waiting for data.
+//!
+//! Runs are durable: `RunConfig.save_every` writes periodic atomic
+//! snapshots ([`crate::train::checkpoint`]), and `RunConfig.resume`
+//! restores one — the trainer fast-forwards the planning stage over the
+//! already-executed prefix (no batch materialized, no step re-executed),
+//! re-seeds the prewarm queue from the remaining schedule, and continues
+//! bit-identically to the uninterrupted run (`tests/checkpoint_resume.rs`).
 
 use crate::config::schema::{DispatchPolicy, LrBasis, PipelineConfig, Routing, RunConfig};
 use crate::curriculum::loader::{AnyBatch, LmBatch, ShardPlan, VitBatch};
@@ -24,36 +31,51 @@ use crate::lr::LrSchedule;
 use crate::ltd::schedule::kept_len;
 use crate::ltd::{ImportanceTracker, RandomDropper, TokenAccountant};
 use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_u32, Mode, Route, Runtime};
+use crate::train::checkpoint::{self, Checkpoint};
 use crate::train::pipeline::{BatchPipeline, PipelineStats, StepSpec};
 use crate::train::replica::ReplicaEngine;
 use crate::Result;
-use anyhow::{anyhow, bail};
+use anyhow::{anyhow, bail, Context};
 use std::collections::BTreeMap;
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
 /// One point on the convergence curve (Fig. 5 reproduction).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CurvePoint {
+    /// Training step the evaluation ran after.
     pub step: u64,
+    /// Compute tokens consumed up to this point.
     pub compute_tokens: f64,
+    /// Held-out token-weighted mean loss.
     pub eval_loss: f64,
 }
 
 /// Everything a paper table row needs about a finished run.
 #[derive(Clone, Debug, Default)]
 pub struct RunResult {
+    /// Human-readable case label (from the run config).
     pub label: String,
+    /// Canonical case name (`CL_seqtru_voc+random-LTD` style).
     pub case: String,
+    /// Model family the run trained.
     pub family: String,
+    /// Total training steps of the run.
     pub steps: u64,
+    /// Wall-clock seconds (the resumed segment only, when resuming).
     pub wall_secs: f64,
+    /// Data tokens consumed by the pipeline.
     pub data_tokens: u64,
+    /// Data-token-equivalent compute consumed (LR-decay basis).
     pub compute_tokens: f64,
+    /// Fraction of compute saved vs processing every token everywhere.
     pub saving_ratio: f64,
+    /// Final held-out token-weighted mean loss.
     pub final_eval_loss: f64,
     /// ViT only: held-out top-1 accuracy.
     pub final_accuracy: Option<f64>,
+    /// Eval-curve points over the whole run.
     pub curve: Vec<CurvePoint>,
     /// Mean per-step wall time over the run (excludes compile).
     pub step_secs: f64,
@@ -84,12 +106,20 @@ pub struct RunResult {
     pub compile_stall_secs: f64,
     /// Specialization-cache hits / misses during the run.
     pub cache_hits: u64,
+    /// Specialization-cache misses (inline compiles) during the run.
     pub cache_misses: u64,
     /// Executables the background prewarmer compiled for this run.
     pub prewarmed_compiles: u64,
+    /// Step this run resumed from (0 = fresh run). Wall-clock and stall
+    /// metrics cover the resumed segment only; state/loss/curve
+    /// observables always cover the whole run.
+    pub resumed_at: u64,
+    /// Checkpoint snapshots this run wrote (`save_every` cadence).
+    pub checkpoints_written: u64,
 }
 
 impl RunResult {
+    /// Final eval perplexity, `exp(final_eval_loss)`.
     pub fn perplexity(&self) -> f64 {
         self.final_eval_loss.exp()
     }
@@ -107,8 +137,11 @@ impl RunResult {
 /// Per-family data plumbing handed to the trainer by
 /// [`crate::train::env::TrainEnv`].
 pub enum LoaderKind {
+    /// GPT/MoE packed-stream loader.
     Gpt(GptLoader),
+    /// BERT loader with MLM masking.
     Bert(BertLoader),
+    /// ViT cursor loader.
     Vit(VitLoader),
 }
 
@@ -140,14 +173,18 @@ impl LoaderKind {
 
 /// Fixed held-out evaluation set.
 pub enum EvalSet {
+    /// Language-model eval batches (GPT/BERT/MoE).
     Lm(Vec<LmBatch>),
+    /// ViT eval batches.
     Vit(Vec<VitBatch>),
 }
 
 /// The resolved (curriculum state, compiled route) of one training step.
 #[derive(Clone, Debug)]
 pub struct StepRoute {
+    /// Curriculum state the step runs under.
     pub cl: ClState,
+    /// Compiled route (artifact, bucketed seq/keep, mode) it dispatches to.
     pub route: Route,
 }
 
@@ -207,6 +244,8 @@ impl BatchSource {
     }
 }
 
+/// The step orchestrator: owns one run's full training state and drives
+/// it to completion (see the module docs for what it composes).
 pub struct Trainer<'rt> {
     rt: &'rt Runtime,
     run: RunConfig,
@@ -219,15 +258,27 @@ pub struct Trainer<'rt> {
     importance: Option<ImportanceTracker>,
     state: Vec<xla::Literal>,
     n_state: usize,
+    /// Fingerprint of the resolved plan, stamped into every snapshot.
+    schedule_fp: u64,
+    /// First step `run()` will execute (> 0 when resuming).
+    start_step: u64,
+    /// Losses/curve restored from the checkpoint, prepended by `run()`.
+    resume_losses: Vec<f32>,
+    resume_curve: Vec<CurvePoint>,
 }
 
 impl<'rt> Trainer<'rt> {
+    /// Build a trainer: resolve the full (CL, route) schedule, pin the LR
+    /// decay budget, pre-warm the specialization cache, and either run
+    /// seed-deterministic init or — when `run.resume` is set — restore
+    /// the full training state from the snapshot after validating it
+    /// against this run's plan fingerprint.
     pub fn new(
         rt: &'rt Runtime,
         mut run: RunConfig,
         loader: LoaderKind,
         eval_set: EvalSet,
-        importance: Option<ImportanceTracker>,
+        mut importance: Option<ImportanceTracker>,
     ) -> Result<Trainer<'rt>> {
         run.validate()?;
         let fam = rt.registry.family(&run.family)?.clone();
@@ -242,16 +293,50 @@ impl<'rt> Trainer<'rt> {
         }
         let mut dropper = RandomDropper::new(run.seed ^ 0xd20b);
         dropper.pin_first_token = run.family == "vit";
-        // Hand the full planned specialization set to the runtime's
-        // background compiler, so JIT compile latency hides behind the
-        // async data pipeline instead of stalling the step loop (any
-        // point the worker has not finished by dispatch time compiles
-        // inline — bit-identical either way, just slower). In replica
-        // mode the coordinator never executes the fused train variants —
-        // rank workers compile their grad variants instead — so the
-        // prewarm would be pure waste.
+        // The plan fingerprint ties every snapshot to this exact
+        // batch/route stream; a checkpoint from a different config, seed
+        // or schedule is rejected up front rather than resuming into a
+        // silently different run.
+        let schedule_fp = checkpoint::schedule_fingerprint(&run, &schedule);
+        let resumed: Option<Checkpoint> = match &run.resume {
+            Some(path) => {
+                let ck = Checkpoint::load(Path::new(path))?;
+                let n_state = rt
+                    .registry
+                    .artifact(&rt.registry.init_name(&run.family)?)?
+                    .outputs
+                    .len();
+                ck.validate_for(
+                    &run,
+                    schedule_fp,
+                    n_state,
+                    importance.as_ref().map(|t| t.n_ids()),
+                )
+                .with_context(|| format!("resuming from {path}"))?;
+                Some(ck)
+            }
+            None => None,
+        };
+        let start_step = resumed.as_ref().map(|c| c.step).unwrap_or(0);
+        // Hand the planned specialization set to the runtime's background
+        // compiler, so JIT compile latency hides behind the async data
+        // pipeline instead of stalling the step loop (any point the
+        // worker has not finished by dispatch time compiles inline —
+        // bit-identical either way, just slower). On resume the queue is
+        // re-seeded from the *remaining* schedule: the already-executed
+        // prefix (e.g. the short early-curriculum variants) would be pure
+        // waste. In replica mode the coordinator never executes the fused
+        // train variants — rank workers compile their grad variants
+        // instead — so the prewarm would be pure waste there too.
         if run.n_replicas == 0 && run.prewarm {
-            rt.prewarm(planned.iter().cloned())?;
+            if start_step == 0 {
+                rt.prewarm(planned.iter().cloned())?;
+            } else {
+                let from = start_step as usize;
+                let remaining: std::collections::BTreeSet<String> =
+                    schedule[from..].iter().map(|s| s.route.artifact.clone()).collect();
+                rt.prewarm(remaining)?;
+            }
         }
         // Replica engine, bucket policy: the shard width must lie on the
         // compiled grad_rows grid (n divides the batch, power-of-two
@@ -304,14 +389,36 @@ impl<'rt> Trainer<'rt> {
             rt.step(&rt.registry.apply_name(&run.family)?)?;
         }
         rt.step(&rt.registry.eval_name(&run.family)?)?;
-        let init = rt.step(&rt.registry.init_name(&run.family)?)?;
-        let state = init.execute(&[scalar_u32(run.seed as u32)])?;
+        let (state, accountant, resume_losses, resume_curve) = match resumed {
+            Some(ck) => {
+                // Restore the non-derivable run state; sampler/mask-seed
+                // streams are fast-forwarded by `run()` instead.
+                dropper.restore_rng(ck.dropper_rng.0, ck.dropper_rng.1);
+                if let Some((cum, seen)) = ck.importance {
+                    importance
+                        .as_mut()
+                        .ok_or_else(|| anyhow!("validated: importance tracker present"))?
+                        .restore(cum, seen)?;
+                }
+                (
+                    checkpoint::state_from_tensors(&ck.state)?,
+                    TokenAccountant::from_raw(ck.accountant),
+                    ck.step_losses,
+                    ck.curve,
+                )
+            }
+            None => {
+                let init = rt.step(&rt.registry.init_name(&run.family)?)?;
+                let state = init.execute(&[scalar_u32(run.seed as u32)])?;
+                (state, TokenAccountant::new(fam.n_layers), Vec::new(), Vec::new())
+            }
+        };
         let n_state = state.len();
         Ok(Trainer {
             rt,
             lr: LrSchedule::new(run.lr.clone()),
             schedule,
-            accountant: TokenAccountant::new(fam.n_layers),
+            accountant,
             dropper,
             importance,
             state,
@@ -319,24 +426,40 @@ impl<'rt> Trainer<'rt> {
             run,
             loader: Some(loader),
             eval_set,
+            schedule_fp,
+            start_step,
+            resume_losses,
+            resume_curve,
         })
     }
 
-    /// Run to completion.
+    /// Run to completion (from the resume point when resuming).
     pub fn run(mut self) -> Result<RunResult> {
         let fam = self.rt.registry.family(&self.run.family)?.clone();
         let n_mid = fam.n_middle_layers;
+        let start = self.start_step.min(self.run.total_steps) as usize;
         let mut dispatch: BTreeMap<String, u64> = BTreeMap::new();
-        let mut curve = Vec::new();
+        let mut curve = std::mem::take(&mut self.resume_curve);
         let mut step_secs_total = 0.0;
-        let mut tail_losses = Vec::new();
-        let mut step_losses: Vec<f32> = Vec::with_capacity(self.run.total_steps as usize);
+        let mut step_losses: Vec<f32> = std::mem::take(&mut self.resume_losses);
+        step_losses.reserve(self.run.total_steps as usize - start);
         let tail_from = self.run.total_steps - (self.run.total_steps / 10).max(1);
         let cache0 = self.rt.cache_stats();
         let wall0 = Instant::now();
+        let mut checkpoints_written = 0u64;
 
-        let loader = self.loader.take().expect("trainer runs once");
-        let mut source = BatchSource::new(loader, &self.schedule, &self.run.pipeline);
+        let mut loader = self.loader.take().expect("trainer runs once");
+        // Fast-forward the already-executed prefix: replay only the cheap,
+        // sequential *planning* stage (sampler draws, mask-seed counters,
+        // the ViT cursor) so every loader RNG stream sits exactly where
+        // the interrupted run left it — no batch is materialized and no
+        // step re-executed. The dispatch histogram is re-derived from the
+        // plan so full-run observables stay comparable.
+        for sr in &self.schedule[..start] {
+            *dispatch.entry(sr.route.artifact.clone()).or_default() += 1;
+            let _ = loader.plan_next(sr.route.seq, &sr.cl);
+        }
+        let mut source = BatchSource::new(loader, &self.schedule[start..], &self.run.pipeline);
 
         // Data-parallel replica engine (None = fused single-instance path).
         let mut engine = if self.run.n_replicas > 0 {
@@ -354,7 +477,7 @@ impl<'rt> Trainer<'rt> {
             None
         };
 
-        for step in 0..self.run.total_steps {
+        for step in start as u64..self.run.total_steps {
             let sr = self.schedule[step as usize].clone();
             let route = &sr.route;
             *dispatch.entry(route.artifact.clone()).or_default() += 1;
@@ -494,9 +617,6 @@ impl<'rt> Trainer<'rt> {
                 tr.update(toks, loss);
             }
             step_losses.push(loss as f32);
-            if step >= tail_from {
-                tail_losses.push(loss);
-            }
             if self.run.eval_every > 0 && (step + 1) % self.run.eval_every == 0 {
                 let (el, _) = self.evaluate()?;
                 curve.push(CurvePoint {
@@ -504,6 +624,17 @@ impl<'rt> Trainer<'rt> {
                     compute_tokens: self.accountant.compute_tokens(),
                     eval_loss: el,
                 });
+            }
+            // Periodic durable snapshot: atomic write-rename, so an
+            // interruption at any point leaves a resumable file set.
+            if self.run.save_every > 0 && (step + 1) % self.run.save_every == 0 {
+                let ck = self.snapshot(step + 1, &step_losses, &curve)?;
+                let file = format!("step{:06}.ckpt", step + 1);
+                let path = Path::new(&self.run.save_dir).join(file);
+                ck.save(&path).with_context(|| {
+                    format!("{}: saving checkpoint at step {}", self.run.label, step + 1)
+                })?;
+                checkpoints_written += 1;
             }
         }
         let loader_stats = source.stats();
@@ -521,6 +652,10 @@ impl<'rt> Trainer<'rt> {
             eval_loss: final_eval_loss,
         });
         let cache = self.rt.cache_stats().since(&cache0);
+        // Tail signal from the recorded f32 losses (which on resume span
+        // the whole run, not just the resumed segment).
+        let tail: Vec<f64> = step_losses[tail_from as usize..].iter().map(|&x| x as f64).collect();
+        let executed = (self.run.total_steps - start as u64).max(1);
         Ok(RunResult {
             label: self.run.label.clone(),
             case: self.run.case_name(),
@@ -533,9 +668,9 @@ impl<'rt> Trainer<'rt> {
             final_eval_loss,
             final_accuracy,
             curve,
-            step_secs: step_secs_total / self.run.total_steps.max(1) as f64,
+            step_secs: step_secs_total / executed as f64,
             dispatch,
-            tail_train_loss: mean(&tail_losses),
+            tail_train_loss: mean(&tail),
             loader_stall_secs: loader_stats.stall_secs,
             loader_build_secs: loader_stats.build_secs,
             n_replicas: self.run.n_replicas,
@@ -547,6 +682,37 @@ impl<'rt> Trainer<'rt> {
             cache_hits: cache.hits,
             cache_misses: cache.misses,
             prewarmed_compiles: cache.prewarmed,
+            resumed_at: self.start_step,
+            checkpoints_written,
+        })
+    }
+
+    /// Capture the full training state after `completed` steps as a
+    /// [`Checkpoint`] (see [`crate::train::checkpoint`] for the format
+    /// and the sufficiency argument).
+    fn snapshot(
+        &self,
+        completed: u64,
+        step_losses: &[f32],
+        curve: &[CurvePoint],
+    ) -> Result<Checkpoint> {
+        Ok(Checkpoint {
+            family: self.run.family.clone(),
+            step: completed,
+            total_steps: self.run.total_steps,
+            n_replicas: self.run.n_replicas,
+            engine: if self.run.n_replicas > 0 {
+                checkpoint::Engine::Replica
+            } else {
+                checkpoint::Engine::Fused
+            },
+            schedule_fp: self.schedule_fp,
+            state: checkpoint::tensors_from_state(&self.state)?,
+            accountant: self.accountant.raw(),
+            dropper_rng: self.dropper.rng_raw(),
+            importance: self.importance.as_ref().map(|t| t.snapshot()),
+            step_losses: step_losses.to_vec(),
+            curve: curve.to_vec(),
         })
     }
 

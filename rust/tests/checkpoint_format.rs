@@ -1,0 +1,92 @@
+//! Byte-stability net for the checkpoint format (ISSUE 4 satellite).
+//!
+//! A fixed fixture snapshot must encode to the exact bytes pinned in
+//! `tests/goldens/checkpoint_v1.txt`. Any layout change — header keys,
+//! section order, field widths — moves the fingerprint, and the only
+//! legitimate response is bumping `FORMAT_VERSION` (old files must not be
+//! misread as the new layout) and regenerating deliberately with
+//!
+//! ```text
+//! DSDE_UPDATE_GOLDENS=1 cargo test --test checkpoint_format
+//! ```
+//!
+//! Robustness rejection paths (truncation, corruption, version mismatch,
+//! atomicity) are unit-tested in `src/train/checkpoint.rs`; this file
+//! pins the wire image itself.
+
+use dsde::train::checkpoint::{fnv1a, Checkpoint, Engine, TensorSnap, FORMAT_VERSION};
+use dsde::train::CurvePoint;
+use std::path::PathBuf;
+
+/// The frozen v1 fixture. Do not edit casually: it IS the format witness.
+fn fixture() -> Checkpoint {
+    Checkpoint {
+        family: "gpt".into(),
+        step: 3,
+        total_steps: 10,
+        n_replicas: 2,
+        engine: Engine::Replica,
+        schedule_fp: 0x1234_5678_9abc_def0,
+        state: vec![
+            TensorSnap { dims: vec![2, 2], data: vec![1.0, -2.5, 0.0, 3.25] },
+            TensorSnap { dims: vec![3], data: vec![0.5, 0.25, -0.125] },
+        ],
+        accountant: [3, 1536, 6144, 4],
+        dropper_rng: (0xdead_beef_0000_0001, 0x0000_0000_0000_02ff),
+        importance: Some((vec![0.5, 1.5], vec![7, 9])),
+        step_losses: vec![5.5, 5.25, 5.0],
+        curve: vec![CurvePoint { step: 2, compute_tokens: 1024.0, eval_loss: 5.125 }],
+    }
+}
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens/checkpoint_v1.txt")
+}
+
+const HEADER: &str = "# dsde checkpoint wire-format golden (format version 1)\n\
+# Byte length and FNV-1a of the fixed fixture snapshot in\n\
+# tests/checkpoint_format.rs. If these move, the on-disk layout changed:\n\
+# bump train::checkpoint::FORMAT_VERSION and regenerate with\n\
+# DSDE_UPDATE_GOLDENS=1, explaining the format change in the commit.\n";
+
+#[test]
+fn encoded_bytes_match_golden() {
+    assert_eq!(FORMAT_VERSION, 1, "golden below pins version 1 — regenerate for a new version");
+    let bytes = fixture().encode();
+    let rendered = format!("{HEADER}len {}\nfnv {:016x}\n", bytes.len(), fnv1a(&bytes));
+
+    let path = golden_path();
+    let update = std::env::var("DSDE_UPDATE_GOLDENS").map(|v| v == "1").unwrap_or(false);
+    if update || !path.exists() {
+        assert!(
+            update || std::env::var_os("GITHUB_ACTIONS").is_none(),
+            "tests/goldens/checkpoint_v1.txt missing on CI — bootstrap locally and commit it"
+        );
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &rendered).unwrap();
+    }
+    let expected = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        expected, rendered,
+        "checkpoint byte format drifted from the committed golden.\n\
+         A layout change REQUIRES bumping FORMAT_VERSION (old snapshots must\n\
+         be rejected, not misread); then regenerate with DSDE_UPDATE_GOLDENS=1."
+    );
+}
+
+#[test]
+fn decode_inverts_encode_for_the_fixture() {
+    let ck = fixture();
+    assert_eq!(Checkpoint::decode(&ck.encode()).unwrap(), ck);
+}
+
+#[test]
+fn fixture_roundtrips_through_a_file() {
+    let dir = std::env::temp_dir().join(format!("dsde-ckpt-fmt-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let path = dir.join("fixture.ckpt");
+    let ck = fixture();
+    ck.save(&path).unwrap();
+    assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,314 @@
+//! Bit-exact save→resume harness for the checkpoint subsystem (ISSUE 4
+//! tentpole).
+//!
+//! For each (family × CL transform × routing mode) case, with the async
+//! pipeline on/off and on both the fused path (`n_replicas = 0`) and the
+//! replica engine (`n_replicas = 2`), three runs are compared:
+//!
+//! 1. the **uninterrupted** reference;
+//! 2. the same run **with periodic saving on** — saving must not perturb
+//!    a single bit;
+//! 3. a run **resumed** from the mid-run snapshot — the finished run must
+//!    be bit-identical to the reference: `state_hash`, per-step f32
+//!    `step_losses`, eval curve, final eval loss, token accounting and
+//!    dispatch histogram.
+//!
+//! One case additionally performs an **elastic restart** (saved `@dp2`,
+//! resumed `@dp4`): legal because the fingerprint excludes the replica
+//! count and the engine's n↔1 equivalence guarantee makes aligned counts
+//! interchangeable (see `tests/dp_equivalence.rs`).
+
+use dsde::config::schema::*;
+use dsde::train::{RunResult, TrainEnv};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const STEPS: u64 = 10;
+const SAVE_AT: u64 = 5;
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn env() -> TrainEnv {
+    TrainEnv::new(200, 91).expect("surrogate runtime available")
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "dsde-ckpt-{}-{}-{}",
+        std::process::id(),
+        tag,
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn seqtru(max_seq: usize) -> ClConfig {
+    ClConfig::new(
+        Metric::SeqTru,
+        Bound::Value((max_seq / 8) as f64),
+        Bound::Value(max_seq as f64),
+        (STEPS as f64 * 0.6) as u64,
+    )
+}
+
+fn seqres(max_seq: usize) -> ClConfig {
+    ClConfig::new(
+        Metric::SeqRes,
+        Bound::Value((max_seq / 8) as f64),
+        Bound::Value(max_seq as f64),
+        (STEPS as f64 * 0.6) as u64,
+    )
+}
+
+fn voc() -> ClConfig {
+    ClConfig::new(Metric::Voc, Bound::Percentile(0.05), Bound::Percentile(1.0), STEPS)
+}
+
+fn ltd(r_start: usize) -> Routing {
+    Routing::RandomLtd(LtdConfig::mslg(r_start, STEPS))
+}
+
+fn bypass(r_start: usize) -> Routing {
+    Routing::TokenBypass(BypassConfig {
+        r_start,
+        total_steps: STEPS,
+        schedule: LtdSchedule::Constant,
+        n_special: 4,
+    })
+}
+
+fn case(family: &str, label: &str, curriculum: Vec<ClConfig>, routing: Routing) -> RunConfig {
+    let mut c = RunConfig::baseline(family, STEPS, 3e-3);
+    c.label = label.to_string();
+    c.seed = 4242;
+    c.eval_every = STEPS / 2;
+    c.curriculum = curriculum;
+    c.routing = routing;
+    c
+}
+
+fn with_knobs(base: &RunConfig, n: usize, pipeline_on: bool) -> RunConfig {
+    let mut c = base.clone();
+    c.n_replicas = n;
+    c.pipeline = if pipeline_on {
+        PipelineConfig { prefetch_depth: 3, n_loader_workers: 4 }
+    } else {
+        PipelineConfig::disabled()
+    };
+    c
+}
+
+/// Every observable that the checkpoint guarantees, compared bit-exactly.
+fn assert_bit_identical(label: &str, reference: &RunResult, r: &RunResult) {
+    assert_eq!(reference.state_hash, r.state_hash, "{label}: final model state diverged");
+    assert_eq!(reference.step_losses, r.step_losses, "{label}: per-step loss curve diverged");
+    assert_eq!(reference.curve.len(), r.curve.len(), "{label}: curve length");
+    for (a, b) in reference.curve.iter().zip(&r.curve) {
+        assert_eq!(a.step, b.step, "{label}: curve step");
+        assert_eq!(
+            a.eval_loss.to_bits(),
+            b.eval_loss.to_bits(),
+            "{label}: eval loss diverged at step {}",
+            a.step
+        );
+        assert_eq!(a.compute_tokens, b.compute_tokens, "{label}: token accounting");
+    }
+    assert_eq!(
+        reference.final_eval_loss.to_bits(),
+        r.final_eval_loss.to_bits(),
+        "{label}: final eval"
+    );
+    assert_eq!(reference.data_tokens, r.data_tokens, "{label}: data tokens");
+    assert_eq!(reference.compute_tokens, r.compute_tokens, "{label}: compute tokens");
+    assert_eq!(reference.dispatch, r.dispatch, "{label}: dispatch histogram");
+    assert_eq!(reference.final_accuracy, r.final_accuracy, "{label}: accuracy");
+}
+
+/// The save→resume oracle for one case at one (replicas, pipeline) point.
+fn check_point(env: &TrainEnv, base: &RunConfig, n: usize, pipeline_on: bool) {
+    let label = format!(
+        "{} ({}, dp{}, pipeline {})",
+        base.label,
+        base.family,
+        n,
+        if pipeline_on { "on" } else { "off" }
+    );
+    let reference = env
+        .run(with_knobs(base, n, pipeline_on))
+        .unwrap_or_else(|e| panic!("{label} reference: {e:#}"));
+    assert_eq!(reference.resumed_at, 0);
+
+    // Saving must not perturb the run.
+    let dir = temp_dir(&base.label);
+    let mut saving = with_knobs(base, n, pipeline_on);
+    saving.save_every = SAVE_AT;
+    saving.save_dir = dir.to_string_lossy().into_owned();
+    let saved = env.run(saving).unwrap_or_else(|e| panic!("{label} save run: {e:#}"));
+    assert_bit_identical(&format!("{label} [saving run]"), &reference, &saved);
+    assert_eq!(saved.checkpoints_written, STEPS / SAVE_AT, "{label}: snapshot cadence");
+    let snapshot = dir.join(format!("step{SAVE_AT:06}.ckpt"));
+    assert!(snapshot.exists(), "{label}: {} missing", snapshot.display());
+
+    // Resume from mid-run: the finished run must match the reference.
+    let mut resuming = with_knobs(base, n, pipeline_on);
+    resuming.resume = Some(snapshot.to_string_lossy().into_owned());
+    let resumed = env.run(resuming).unwrap_or_else(|e| panic!("{label} resume: {e:#}"));
+    assert_eq!(resumed.resumed_at, SAVE_AT, "{label}: resume point");
+    assert_bit_identical(&format!("{label} [resumed run]"), &reference, &resumed);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn check_case(env: &TrainEnv, base: RunConfig, pipelines: &[bool], replicas: &[usize]) {
+    for &pipeline_on in pipelines {
+        for &n in replicas {
+            check_point(env, &base, n, pipeline_on);
+        }
+    }
+}
+
+// ---- GPT -----------------------------------------------------------------
+
+#[test]
+fn gpt_seqtru_ltd() {
+    let env = env();
+    check_case(
+        &env,
+        case("gpt", "gpt-seqtru+ltd", vec![seqtru(64)], ltd(16)),
+        &[true, false],
+        &[0, 2],
+    );
+}
+
+#[test]
+fn gpt_seqres_voc_bypass() {
+    let env = env();
+    check_case(
+        &env,
+        case("gpt", "gpt-seqres+voc+bypass", vec![seqres(64), voc()], bypass(32)),
+        &[true],
+        &[0, 2],
+    );
+}
+
+// ---- BERT ----------------------------------------------------------------
+
+#[test]
+fn bert_seqtru_ltd() {
+    let env = env();
+    check_case(
+        &env,
+        case("bert", "bert-seqtru+ltd", vec![seqtru(64)], ltd(16)),
+        &[true, false],
+        &[0, 2],
+    );
+}
+
+#[test]
+fn bert_voc_bypass() {
+    let env = env();
+    check_case(&env, case("bert", "bert-voc+bypass", vec![voc()], bypass(32)), &[true], &[0, 2]);
+}
+
+// ---- ViT (random-LTD only, as in the paper) ------------------------------
+
+#[test]
+fn vit_ltd() {
+    let env = env();
+    check_case(&env, case("vit", "vit-ltd", vec![], ltd(5)), &[true, false], &[0, 2]);
+}
+
+// ---- Elastic restart: save @dp2, resume @dp4 -----------------------------
+
+#[test]
+fn elastic_restart_dp2_to_dp4() {
+    let env = env();
+    let base = case("gpt", "gpt-elastic", vec![seqtru(64)], ltd(16));
+    let reference = env.run(with_knobs(&base, 4, true)).expect("dp4 reference");
+
+    let dir = temp_dir("elastic");
+    let mut saving = with_knobs(&base, 2, true);
+    saving.save_every = SAVE_AT;
+    saving.save_dir = dir.to_string_lossy().into_owned();
+    env.run(saving).expect("dp2 saving run");
+
+    let mut resuming = with_knobs(&base, 4, true);
+    resuming.resume = Some(
+        dir.join(format!("step{SAVE_AT:06}.ckpt")).to_string_lossy().into_owned(),
+    );
+    let resumed = env.run(resuming).expect("dp4 resume from dp2 snapshot");
+    assert_eq!(resumed.resumed_at, SAVE_AT);
+    assert_bit_identical("elastic dp2→dp4", &reference, &resumed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- Resume-at-the-end edge ----------------------------------------------
+
+#[test]
+fn resume_at_final_step_reruns_nothing() {
+    let env = env();
+    let base = case("gpt", "gpt-final-step", vec![seqtru(64)], ltd(16));
+    let reference = env.run(with_knobs(&base, 0, true)).expect("reference");
+
+    let dir = temp_dir("final");
+    let mut saving = with_knobs(&base, 0, true);
+    saving.save_every = STEPS; // one snapshot, at the last step
+    saving.save_dir = dir.to_string_lossy().into_owned();
+    env.run(saving).expect("saving run");
+
+    let mut resuming = with_knobs(&base, 0, true);
+    resuming.resume = Some(
+        dir.join(format!("step{STEPS:06}.ckpt")).to_string_lossy().into_owned(),
+    );
+    let resumed = env.run(resuming).expect("resume at final step");
+    assert_eq!(resumed.resumed_at, STEPS);
+    assert_bit_identical("resume-at-end", &reference, &resumed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- Guards: wrong-plan / wrong-engine / garbage snapshots ---------------
+
+#[test]
+fn mismatched_resume_is_rejected_up_front() {
+    let env = env();
+    let base = case("gpt", "gpt-guards", vec![seqtru(64)], ltd(16));
+    let dir = temp_dir("guards");
+    let mut saving = with_knobs(&base, 0, true);
+    saving.save_every = SAVE_AT;
+    saving.save_dir = dir.to_string_lossy().into_owned();
+    env.run(saving).expect("saving run");
+    let snapshot = dir.join(format!("step{SAVE_AT:06}.ckpt"));
+
+    // different seed = different plan fingerprint
+    let mut other_seed = with_knobs(&base, 0, true);
+    other_seed.seed ^= 1;
+    other_seed.resume = Some(snapshot.to_string_lossy().into_owned());
+    let err = env.run(other_seed).unwrap_err();
+    assert!(format!("{err:#}").contains("different run plan"), "{err:#}");
+
+    // crossing the fused/replica boundary voids bit-exactness
+    let mut crossed = with_knobs(&base, 2, true);
+    crossed.resume = Some(snapshot.to_string_lossy().into_owned());
+    let err = env.run(crossed).unwrap_err();
+    assert!(format!("{err:#}").contains("fused"), "{err:#}");
+
+    // truncated snapshot file
+    let bytes = std::fs::read(&snapshot).unwrap();
+    let cut = dir.join("cut.ckpt");
+    std::fs::write(&cut, &bytes[..bytes.len() / 2]).unwrap();
+    let mut truncated = with_knobs(&base, 0, true);
+    truncated.resume = Some(cut.to_string_lossy().into_owned());
+    let err = env.run(truncated).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+
+    // not a checkpoint at all
+    let junk = dir.join("junk.ckpt");
+    std::fs::write(&junk, b"definitely not a checkpoint").unwrap();
+    let mut garbage = with_knobs(&base, 0, true);
+    garbage.resume = Some(junk.to_string_lossy().into_owned());
+    let err = env.run(garbage).unwrap_err();
+    assert!(format!("{err:#}").contains("not a dsde checkpoint"), "{err:#}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

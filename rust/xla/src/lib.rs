@@ -3,9 +3,11 @@
 //! The offline vendor set carries no XLA native library, so this crate
 //! re-implements the small slice of the `xla` API the dsde coordinator
 //! uses (`Literal`, `PjRtClient`, `HloModuleProto`, executable load +
-//! execute) as an interpreter over *surrogate HLO modules*: small text
-//! files (written by `python/compile/gen_stub_artifacts.py`) that describe
-//! a trainable softmax model per family instead of a lowered HLO graph.
+//! execute) as an interpreter over *surrogate HLO modules*: short
+//! `key value` texts (synthesized in memory by `dsde`'s
+//! `runtime/synth.rs`; `python/compile/gen_stub_artifacts.py` survives as
+//! the byte-identical cross-check reference) that describe a trainable
+//! softmax model per family instead of a lowered HLO graph.
 //!
 //! The surrogate semantics preserve everything the coordinator is tested
 //! against (see DESIGN.md §Substitutions):
