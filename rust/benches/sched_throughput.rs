@@ -1,0 +1,165 @@
+//! sched_throughput — multi-tenant scheduler overhead + bit-identity
+//! smoke (ISSUE 5 satellite).
+//!
+//! Runs a mixed N-job grid (gpt composed / gpt baseline / bert composed /
+//! vit ltd) twice on one shared environment: sequentially via
+//! `exp::run_cases`, then through the time-slicing scheduler (preemption
+//! = checkpoint-save + requeue every slice). Reports makespan for both
+//! paths, the per-slice preemption overhead, and the shared JIT-cache hit
+//! rate across tenants, then emits `runs/BENCH_sched.json`. Every
+//! time-sliced job's `state_hash` MUST equal its uninterrupted reference;
+//! any drift exits non-zero, so the CI bench-smoke job goes red on a
+//! scheduler bit-neutrality break even before `tests/scheduler.rs` runs.
+//!
+//! `DSDE_BENCH_QUICK=1` shrinks the run for the CI smoke job.
+
+use dsde::bench::{scaled, Table};
+use dsde::config::json::Json;
+use dsde::config::schema::{Bound, ClConfig, LtdConfig, Metric, Routing, RunConfig};
+use dsde::exp::run_cases;
+use dsde::orch::{JobSpec, JobState, Scheduler, SchedulerConfig};
+use dsde::train::TrainEnv;
+
+fn composed(family: &str, label: &str, steps: u64, max_seq: usize, r_s: usize) -> RunConfig {
+    let mut c = RunConfig::baseline(family, steps, 3e-3);
+    c.label = label.to_string();
+    c.seed = 1234;
+    c.curriculum.push(ClConfig::new(
+        Metric::SeqTru,
+        Bound::Value((max_seq / 8) as f64),
+        Bound::Value(max_seq as f64),
+        (steps as f64 * 0.6) as u64,
+    ));
+    c.routing = Routing::RandomLtd(LtdConfig::mslg(r_s, steps));
+    c
+}
+
+fn main() -> dsde::Result<()> {
+    let steps = scaled(40, 8);
+    let slice = scaled(10, 3);
+    let docs = scaled(800, 300) as usize;
+    eprintln!("== sched_throughput: {steps}-step jobs, {slice}-step slices ==");
+    let env = TrainEnv::new(docs, 7)?;
+    let max_seq = env.rt.registry.family("gpt")?.max_seq;
+
+    let mut baseline = RunConfig::baseline("gpt", steps, 3e-3);
+    baseline.label = "gpt-baseline".into();
+    baseline.seed = 1234;
+    // ViT takes random-LTD only (no sequence curriculum), as in the paper.
+    let mut vit = RunConfig::baseline("vit", steps, 3e-3);
+    vit.label = "vit-ltd".into();
+    vit.seed = 1234;
+    vit.routing = Routing::RandomLtd(LtdConfig::mslg(5, steps));
+    let cases = vec![
+        composed("gpt", "gpt-composed", steps, max_seq, max_seq / 4),
+        baseline,
+        composed("bert", "bert-composed", steps, max_seq, max_seq / 4),
+        vit,
+    ];
+    let n_jobs = cases.len();
+
+    // ---- sequential reference (cold cache)
+    env.rt.clear_cache();
+    let cache0 = env.rt.cache_stats();
+    let t0 = std::time::Instant::now();
+    let sequential = run_cases(&env, cases.clone())?;
+    let seq_wall = t0.elapsed().as_secs_f64();
+    let seq_cache = env.rt.cache_stats().since(&cache0);
+
+    // ---- scheduler path: same jobs, time-sliced on the shared runtime
+    let dir = std::env::temp_dir().join(format!("dsde-sched-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    env.rt.clear_cache();
+    let cache1 = env.rt.cache_stats();
+    let mut sched = Scheduler::new(SchedulerConfig {
+        max_active: n_jobs,
+        default_slice: slice,
+        quantum: slice,
+        cleanup_done: true,
+    });
+    let mut ids = Vec::new();
+    for mut cfg in cases {
+        cfg.save_dir = dir.to_string_lossy().into_owned();
+        ids.push(sched.submit(JobSpec::new(cfg))?);
+    }
+    let t1 = std::time::Instant::now();
+    sched.drain(&env)?;
+    let sched_wall = t1.elapsed().as_secs_f64();
+    let sched_cache = env.rt.cache_stats().since(&cache1);
+    let stats = sched.stats();
+
+    let mut t = Table::new(&["job", "state", "slices", "preempt", "state hash", "drift"]);
+    let mut identical = true;
+    for (id, reference) in ids.iter().zip(&sequential) {
+        let job = sched.job(*id).expect("submitted job");
+        let (hash, drift) = match (&job.result, job.state) {
+            (Some(r), JobState::Done) => {
+                let ok = r.state_hash == reference.state_hash
+                    && r.step_losses == reference.step_losses;
+                (format!("{:016x}", r.state_hash), !ok)
+            }
+            _ => ("-".into(), true),
+        };
+        identical &= !drift;
+        t.row(vec![
+            reference.label.clone(),
+            job.state.name().into(),
+            job.slices.to_string(),
+            job.preemptions.to_string(),
+            hash,
+            if drift { "DRIFT".into() } else { "ok".into() },
+        ]);
+    }
+    println!("\nscheduler vs sequential ({n_jobs} jobs × {steps} steps, slice {slice}):");
+    t.print();
+    t.save_csv("sched_throughput")?;
+
+    let overhead = sched_wall - seq_wall;
+    let per_slice = overhead / (stats.slices.max(1) as f64);
+    let hit_rate = |h: u64, m: u64| h as f64 / ((h + m).max(1) as f64);
+    println!(
+        "\nmakespan: sequential {seq_wall:.2}s, scheduled {sched_wall:.2}s \
+         ({overhead:+.2}s; {} slices, {} preemptions, {:.0}ms/slice preemption overhead)",
+        stats.slices,
+        stats.preemptions,
+        per_slice * 1e3
+    );
+    println!(
+        "shared jit cache across tenants: sequential {}h/{}m ({:.0}%), \
+         scheduled {}h/{}m ({:.0}%)",
+        seq_cache.hits,
+        seq_cache.misses,
+        hit_rate(seq_cache.hits, seq_cache.misses) * 100.0,
+        sched_cache.hits,
+        sched_cache.misses,
+        hit_rate(sched_cache.hits, sched_cache.misses) * 100.0
+    );
+
+    let report = Json::obj(vec![
+        ("n_jobs", n_jobs.into()),
+        ("steps_per_job", (steps as usize).into()),
+        ("slice_steps", (slice as usize).into()),
+        ("makespan_sequential_s", seq_wall.into()),
+        ("makespan_scheduled_s", sched_wall.into()),
+        ("slices", (stats.slices as usize).into()),
+        ("preemptions", (stats.preemptions as usize).into()),
+        ("preempt_overhead_s_per_slice", per_slice.into()),
+        ("cache_hit_rate_scheduled", hit_rate(sched_cache.hits, sched_cache.misses).into()),
+        ("bit_identical", identical.into()),
+    ]);
+    std::fs::create_dir_all("runs")?;
+    std::fs::write("runs/BENCH_sched.json", report.to_string_compact())?;
+    println!("report -> runs/BENCH_sched.json");
+
+    println!(
+        "\nshape check:\n  [{}] every time-sliced job is bit-identical to its \
+         uninterrupted reference",
+        if identical { "PASS" } else { "FAIL" }
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    if !identical {
+        // Enforcing, not advisory: time-slicing must be bit-neutral.
+        std::process::exit(1);
+    }
+    Ok(())
+}

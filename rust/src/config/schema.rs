@@ -531,6 +531,7 @@ impl RunConfig {
             ("case", self.case_name().into()),
             ("seed", (self.seed as usize).into()),
             ("total_steps", (self.total_steps as usize).into()),
+            ("eval_every", (self.eval_every as usize).into()),
             ("n_replicas", self.n_replicas.into()),
             ("dispatch", self.dispatch.name().into()),
             ("prewarm", self.prewarm.into()),
@@ -831,11 +832,13 @@ mod tests {
             100,
         ));
         c.routing = Routing::RandomLtd(LtdConfig::mslg(16, 200));
+        c.eval_every = 25;
         let j = c.to_json();
         let c2 = run_config_from_json(&j, "gpt").unwrap();
         assert_eq!(c2.family, "bert");
         assert_eq!(c2.case_name(), c.case_name());
         assert_eq!(c2.total_steps, 200);
+        assert_eq!(c2.eval_every, 25, "eval cadence survives the wire (SUBMIT)");
         assert_eq!(c2.curriculum.len(), 1);
         assert!(matches!(c2.routing, Routing::RandomLtd(_)));
     }

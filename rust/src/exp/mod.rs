@@ -4,4 +4,4 @@
 pub mod cases;
 pub mod runner;
 
-pub use runner::{relative_quality, run_cases, table_headers, table_row};
+pub use runner::{relative_quality, run_cases, run_cases_scheduled, table_headers, table_row};

@@ -2,18 +2,22 @@
 //! derive paper-style quality numbers, and log machine-readable results.
 
 use crate::config::schema::RunConfig;
+use crate::orch::{JobState, Scheduler, SchedulerConfig};
 use crate::sim::CostModel;
 use crate::train::trainer::RunResult;
 use crate::train::TrainEnv;
 use crate::Result;
+use anyhow::bail;
 
 /// Relative model quality versus a baseline eval loss, as a percentage
 /// (baseline = 100%; lower loss ⇒ higher quality). The paper's quality
 /// columns are task accuracies; here quality is the inverse-loss ratio —
 /// monotone in the same direction and 100-normalized (DESIGN.md
-/// §Substitutions).
+/// §Substitutions). Both losses are clamped to a tiny positive floor, so
+/// a degenerate (zero/negative/NaN) baseline yields a well-defined,
+/// non-negative percentage instead of nonsense.
 pub fn relative_quality(baseline_loss: f64, loss: f64) -> f64 {
-    100.0 * baseline_loss / loss.max(1e-9)
+    100.0 * baseline_loss.max(1e-9) / loss.max(1e-9)
 }
 
 /// Run every case sequentially, printing progress.
@@ -52,6 +56,67 @@ pub fn run_cases(env: &TrainEnv, cases: Vec<RunConfig>) -> Result<Vec<RunResult>
             r.loader_hidden_fraction() * 100.0
         );
         out.push(r);
+    }
+    Ok(out)
+}
+
+/// Run the grid through the multi-tenant scheduler instead of
+/// sequentially: up to `max_active` cases interleave on the shared
+/// runtime, time-sliced every `slice` steps (preemption = checkpoint-save
+/// + requeue under `save_dir`). Results come back in submission order and
+/// are bit-identical to [`run_cases`] — the scheduler invariant
+/// (`tests/scheduler.rs`) — so `dsde pareto --jobs N` prints the same
+/// table rows as the sequential path. A failing case marks only its own
+/// job `Failed`; the rest of the grid completes, and the first failure is
+/// reported after the drain.
+pub fn run_cases_scheduled(
+    env: &TrainEnv,
+    cases: Vec<RunConfig>,
+    max_active: usize,
+    slice: u64,
+    save_dir: &str,
+) -> Result<Vec<RunResult>> {
+    let n = cases.len();
+    let mut sched = Scheduler::new(SchedulerConfig {
+        max_active: max_active.max(1),
+        default_slice: slice,
+        quantum: slice.max(1),
+        cleanup_done: true,
+    });
+    for mut cfg in cases {
+        cfg.save_dir = save_dir.to_string();
+        sched.submit(crate::orch::JobSpec::new(cfg))?;
+    }
+    sched.drain(env)?;
+    let stats = sched.stats();
+    eprintln!(
+        "[scheduler] {n} case(s), {} slice(s), {} preemption(s), {} failed",
+        stats.slices, stats.preemptions, stats.failed
+    );
+    let mut out = Vec::with_capacity(n);
+    let mut first_failure: Option<String> = None;
+    for job in sched.jobs() {
+        match job.state {
+            JobState::Done => {
+                out.push(job.result.clone().expect("done job has a result"));
+            }
+            JobState::Failed => {
+                let msg = format!(
+                    "case '{}' failed: {}",
+                    job.spec.config.label,
+                    job.error.as_deref().unwrap_or("unknown error")
+                );
+                eprintln!("[scheduler] {msg}");
+                first_failure.get_or_insert(msg);
+            }
+            s => {
+                first_failure
+                    .get_or_insert(format!("case '{}' ended {}", job.spec.config.label, s.name()));
+            }
+        }
+    }
+    if let Some(msg) = first_failure {
+        bail!("{msg} (the rest of the grid completed)");
     }
     Ok(out)
 }
@@ -95,5 +160,32 @@ mod tests {
         assert!((relative_quality(3.0, 3.0) - 100.0).abs() < 1e-9);
         assert!(relative_quality(3.0, 2.7) > 100.0);
         assert!(relative_quality(3.0, 3.3) < 100.0);
+    }
+
+    // Guard audit (ISSUE 5 satellite, mirroring the samples_per_sec /
+    // loader_hidden_fraction style): quality% must be well-defined on
+    // degenerate inputs — never negative, infinite or NaN.
+    #[test]
+    fn quality_degenerate_inputs() {
+        // zero/negative baseline (a broken reference run) clamps to the
+        // floor instead of producing 0% or a negative quality
+        assert!(relative_quality(0.0, 3.0) > 0.0);
+        assert!(relative_quality(-2.0, 3.0) > 0.0);
+        assert!(relative_quality(0.0, 3.0).is_finite());
+        // degenerate measured loss: clamped, finite
+        assert!(relative_quality(3.0, 0.0).is_finite());
+        assert!(relative_quality(3.0, -1.0).is_finite());
+        // both degenerate: floor/floor = exactly 100%
+        assert!((relative_quality(0.0, 0.0) - 100.0).abs() < 1e-9);
+        assert!((relative_quality(-1.0, -5.0) - 100.0).abs() < 1e-9);
+        // NaN poison clamps to the floor rather than propagating
+        assert!(!relative_quality(f64::NAN, 3.0).is_nan());
+        assert!(!relative_quality(3.0, f64::NAN).is_nan());
+        // and the result is never negative for any sign combination
+        for b in [-1.0, 0.0, 1e-12, 3.0] {
+            for l in [-1.0, 0.0, 1e-12, 3.0] {
+                assert!(relative_quality(b, l) >= 0.0, "({b}, {l})");
+            }
+        }
     }
 }

@@ -34,6 +34,12 @@
 //! uninterrupted run — including elastic restarts that change the replica
 //! count (`tests/checkpoint_resume.rs`).
 //!
+//! Durability makes the system *multi-tenant*: the [`orch`] layer
+//! time-slices many jobs over one shared runtime (preemption =
+//! checkpoint-save + requeue, so arbitrarily preempted jobs stay
+//! bit-identical to uninterrupted ones), with a TCP control plane behind
+//! the `dsde serve`/`submit`/`status`/`cancel` subcommands.
+//!
 //! See README.md for the quickstart and DESIGN.md for the full system
 //! inventory and the experiment index mapping every paper table/figure to
 //! a bench target.
@@ -48,6 +54,7 @@ pub mod data;
 pub mod exp;
 pub mod lr;
 pub mod ltd;
+pub mod orch;
 pub mod runtime;
 pub mod sim;
 pub mod testutil;

@@ -20,10 +20,23 @@
 //!                                   every N steps into --save-dir;
 //!                                   --resume PATH: restore a snapshot and
 //!                                   continue bit-identically)
-//! dsde pareto [--steps N]           quick Fig.2-style sweep (3 budgets)
+//! dsde pareto [--steps N] [--jobs J] quick Fig.2-style sweep (3 budgets;
+//!                                   --jobs J > 1 runs the cases through
+//!                                   the multi-tenant scheduler — same
+//!                                   rows, time-sliced concurrently)
 //! dsde synth --out DIR              emit manifest.json + the legacy
 //!                                   surrogate module grid (cross-check
 //!                                   target for gen_stub_artifacts.py)
+//! dsde serve [--addr A] [--docs N] [--jobs J] [--slice S]
+//!                                   host the multi-tenant scheduler's TCP
+//!                                   control plane (J-wide executor pool,
+//!                                   S-step time slices)
+//! dsde submit [--addr A] [train flags] [--priority P] [--share W] [--slice S]
+//!                                   submit a run to a control plane
+//! dsde status [--addr A] [--job N]  job table (or one job) + stats
+//! dsde cancel --job N [--addr A]    cancel a job (its last boundary
+//!                                   snapshot is kept and stays resumable)
+//! dsde drain [--addr A]             stop admission, exit when all jobs end
 //! ```
 
 use anyhow::{anyhow, bail};
@@ -36,7 +49,8 @@ use dsde::config::schema::{run_config_from_json, RunConfig};
 use dsde::data::corpus::{Corpus, CorpusConfig};
 use dsde::data::dataset::{BertDataset, GptDataset};
 use dsde::data::tokenizer::Tokenizer;
-use dsde::exp::{relative_quality, run_cases};
+use dsde::exp::{relative_quality, run_cases, run_cases_scheduled};
+use dsde::orch::{request, serve_with, SchedulerConfig, ServeOptions};
 use dsde::sim::{max_seq_tile, AttentionTile};
 use dsde::train::TrainEnv;
 
@@ -51,7 +65,8 @@ fn main() {
 const VALUE_KEYS: &[&str] = &[
     "docs", "workers", "metric", "preset", "family", "steps", "lr", "seed",
     "config", "eval-every", "out", "prefetch-depth", "loader-workers",
-    "replicas", "dispatch", "save-every", "save-dir", "resume",
+    "replicas", "dispatch", "save-every", "save-dir", "resume", "label",
+    "addr", "jobs", "slice", "priority", "share", "job",
 ];
 
 fn run(argv: &[String]) -> dsde::Result<()> {
@@ -63,8 +78,16 @@ fn run(argv: &[String]) -> dsde::Result<()> {
         Some("train") => train(&args),
         Some("pareto") => pareto(&args),
         Some("synth") => synth(&args),
+        Some("serve") => serve(&args),
+        Some("submit") => submit(&args),
+        Some("status") => status(&args),
+        Some("cancel") => cancel(&args),
+        Some("drain") => drain(&args),
         Some(cmd) => {
-            bail!("unknown command '{cmd}' (try: info, roofline, analyze, train, pareto, synth)")
+            bail!(
+                "unknown command '{cmd}' (try: info, roofline, analyze, train, pareto, \
+                 synth, serve, submit, status, cancel, drain)"
+            )
         }
         None => {
             println!("{}", HELP);
@@ -74,7 +97,11 @@ fn run(argv: &[String]) -> dsde::Result<()> {
 }
 
 const HELP: &str = "dsde — DeepSpeed Data Efficiency reproduction
-commands: info | roofline | analyze | train | pareto | synth   (see README.md)";
+commands: info | roofline | analyze | train | pareto | synth
+          serve | submit | status | cancel | drain   (see README.md)";
+
+/// Default control-plane address for `serve`/`submit`/`status`/`cancel`.
+const DEFAULT_ADDR: &str = "127.0.0.1:4800";
 
 fn info() -> dsde::Result<()> {
     let rt = dsde::runtime::Runtime::open_default()?;
@@ -172,7 +199,10 @@ fn analyze(args: &Args) -> dsde::Result<()> {
     Ok(())
 }
 
-fn train(args: &Args) -> dsde::Result<()> {
+/// Assemble a [`RunConfig`] from `--config`/`--preset`/flags — shared by
+/// `dsde train` (runs it locally) and `dsde submit` (ships it to a
+/// control plane).
+fn run_config_from_args(args: &Args) -> dsde::Result<RunConfig> {
     let steps = args.get_u64("steps", 100)?;
     let lr = args.get_f64("lr", 3e-3)?;
     let family = args.get_str("family", "gpt").to_string();
@@ -206,6 +236,14 @@ fn train(args: &Args) -> dsde::Result<()> {
     if let Some(p) = args.get("resume") {
         cfg.resume = Some(p.to_string());
     }
+    if let Some(l) = args.get("label") {
+        cfg.label = l.to_string();
+    }
+    Ok(cfg)
+}
+
+fn train(args: &Args) -> dsde::Result<()> {
+    let cfg = run_config_from_args(args)?;
     if let Some(p) = &cfg.resume {
         println!("resuming from {p}");
     }
@@ -313,14 +351,31 @@ fn synth(args: &Args) -> dsde::Result<()> {
 
 fn pareto(args: &Args) -> dsde::Result<()> {
     let full = args.get_u64("steps", 120)?;
+    let jobs = args.get_u64("jobs", 1)? as usize;
+    let slice = args.get_u64("slice", (full / 4).max(1))?;
     let env = TrainEnv::new(800, 7)?;
     let fam = env.rt.registry.family("gpt")?.clone();
     let pairs = dsde::exp::cases::fig2_pairs(full, fam.max_seq, 1234, &[0.25, 0.5, 1.0]);
+    let sched_dir = std::env::temp_dir()
+        .join(format!("dsde-pareto-sched-{}", std::process::id()));
     let mut results = Vec::new();
     for (f, base, comp) in pairs {
-        let rs = run_cases(&env, vec![base, comp])?;
+        // --jobs N > 1: the same cases through the multi-tenant scheduler
+        // (time-sliced, checkpoint-preempted) — bit-identical rows.
+        let rs = if jobs > 1 {
+            run_cases_scheduled(
+                &env,
+                vec![base, comp],
+                jobs,
+                slice,
+                &sched_dir.to_string_lossy(),
+            )?
+        } else {
+            run_cases(&env, vec![base, comp])?
+        };
         results.push((f, rs));
     }
+    let _ = std::fs::remove_dir_all(&sched_dir);
     let baseline_full = results.last().unwrap().1[0].final_eval_loss;
     println!("\nfraction  baseline_q  composed_q");
     for (f, rs) in &results {
@@ -331,5 +386,155 @@ fn pareto(args: &Args) -> dsde::Result<()> {
             relative_quality(baseline_full, rs[1].final_eval_loss)
         );
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Multi-tenant control plane (orch/): serve + thin TCP clients
+
+/// Host the scheduler: bind the control plane, build the shared
+/// environment, and run slices until a `DRAIN` completes.
+fn serve(args: &Args) -> dsde::Result<()> {
+    let addr = args.get_str("addr", DEFAULT_ADDR).to_string();
+    let listener = std::net::TcpListener::bind(&addr)?;
+    let bound = listener.local_addr()?;
+    let sched = SchedulerConfig {
+        max_active: args.get_u64("jobs", 4)?.max(1) as usize,
+        default_slice: args.get_u64("slice", 25)?,
+        ..SchedulerConfig::default()
+    };
+    println!(
+        "dsde control plane listening on {bound} (pool {}, slice {} steps)",
+        sched.max_active, sched.default_slice
+    );
+    println!("building shared environment ({} docs)...", args.get_u64("docs", 1000)?);
+    let env = TrainEnv::new(args.get_u64("docs", 1000)? as usize, 7)?;
+    let stats = serve_with(
+        &env,
+        listener,
+        ServeOptions { sched, default_family: args.get_str("family", "gpt").to_string() },
+    )?;
+    println!(
+        "drained: {} slice(s), {} preemption(s), {} done / {} failed / {} cancelled",
+        stats.slices, stats.preemptions, stats.completed, stats.failed, stats.cancelled
+    );
+    let cache = env.rt.cache_stats();
+    println!(
+        "shared jit cache across tenants: {} hits / {} misses ({:.0}% hit rate)",
+        cache.hits,
+        cache.misses,
+        cache.hit_rate() * 100.0
+    );
+    Ok(())
+}
+
+fn expect_ok(resp: &Json) -> dsde::Result<()> {
+    if resp.get("ok").as_bool() != Some(true) {
+        bail!("{}", resp.get("error").as_str().unwrap_or("unknown control-plane error"));
+    }
+    Ok(())
+}
+
+/// Submit a run (same config flags as `train`) to a running control plane.
+fn submit(args: &Args) -> dsde::Result<()> {
+    let addr = args.get_str("addr", DEFAULT_ADDR);
+    let cfg = run_config_from_args(args)?;
+    if cfg.resume.is_some() {
+        bail!(
+            "submit does not carry --resume: preemption/resume of scheduled jobs \
+             is managed by the server (each job gets its own snapshot namespace)"
+        );
+    }
+    let req = Json::obj(vec![
+        ("cmd", "SUBMIT".into()),
+        ("config", cfg.to_json()),
+        ("priority", (args.get_u64("priority", 1)? as usize).into()),
+        ("share", (args.get_u64("share", 1)? as usize).into()),
+        ("max_slice_steps", (args.get_u64("slice", 0)? as usize).into()),
+    ]);
+    let resp = request(addr, &req)?;
+    expect_ok(&resp)?;
+    println!(
+        "submitted job {} ({} on {})",
+        resp.get("job").as_usize().unwrap_or(0),
+        cfg.case_name(),
+        cfg.family
+    );
+    Ok(())
+}
+
+/// Print the job table (or one job) plus scheduler/cache stats.
+fn status(args: &Args) -> dsde::Result<()> {
+    let addr = args.get_str("addr", DEFAULT_ADDR);
+    let mut req = vec![("cmd", Json::from("STATUS"))];
+    if let Some(id) = args.get("job") {
+        req.push(("job", Json::Num(id.parse::<u64>()? as f64)));
+    }
+    let resp = request(addr, &Json::obj(req))?;
+    expect_ok(&resp)?;
+    let one = resp.get("job");
+    let jobs: Vec<&Json> = if one.as_obj().is_some() {
+        vec![one]
+    } else {
+        resp.get("jobs").as_arr().map(|a| a.iter().collect()).unwrap_or_default()
+    };
+    println!("job  state      steps        pri share slices preempt case");
+    for j in jobs {
+        println!(
+            "{:<4} {:<10} {:>5}/{:<5} {:>4} {:>5} {:>6} {:>7} {}",
+            j.get("id").as_usize().unwrap_or(0),
+            j.get("state").as_str().unwrap_or("?"),
+            j.get("completed_steps").as_usize().unwrap_or(0),
+            j.get("total_steps").as_usize().unwrap_or(0),
+            j.get("priority").as_usize().unwrap_or(0),
+            j.get("share").as_usize().unwrap_or(0),
+            j.get("slices").as_usize().unwrap_or(0),
+            j.get("preemptions").as_usize().unwrap_or(0),
+            j.get("case").as_str().unwrap_or("?"),
+        );
+        if let Some(e) = j.get("error").as_str() {
+            println!("     error: {e}");
+        }
+    }
+    let stats = request(addr, &Json::obj(vec![("cmd", "STATS".into())]))?;
+    expect_ok(&stats)?;
+    println!(
+        "scheduler: {} slice(s), {} preemption(s); shared cache {:.0}% hit rate",
+        stats.get("slices").as_usize().unwrap_or(0),
+        stats.get("preemptions").as_usize().unwrap_or(0),
+        stats.path("cache.hit_rate").as_f64().unwrap_or(0.0) * 100.0
+    );
+    Ok(())
+}
+
+/// Cancel a job; its last boundary snapshot stays valid and resumable.
+fn cancel(args: &Args) -> dsde::Result<()> {
+    let addr = args.get_str("addr", DEFAULT_ADDR);
+    let id: u64 = args
+        .get("job")
+        .ok_or_else(|| anyhow!("cancel requires --job ID"))?
+        .parse()?;
+    let resp = request(
+        addr,
+        &Json::obj(vec![("cmd", "CANCEL".into()), ("job", (id as usize).into())]),
+    )?;
+    expect_ok(&resp)?;
+    print!("job {id} cancelled");
+    match resp.get("checkpoint").as_str() {
+        Some(ck) => println!("; last boundary snapshot kept at {ck} (resumable)"),
+        None => println!(" (never ran; no snapshot)"),
+    }
+    Ok(())
+}
+
+/// Stop admission and let the server exit once every job is terminal.
+fn drain(args: &Args) -> dsde::Result<()> {
+    let addr = args.get_str("addr", DEFAULT_ADDR);
+    let resp = request(addr, &Json::obj(vec![("cmd", "DRAIN".into())]))?;
+    expect_ok(&resp)?;
+    println!(
+        "draining: {} job(s) still pending; server exits when they finish",
+        resp.get("pending").as_usize().unwrap_or(0)
+    );
     Ok(())
 }

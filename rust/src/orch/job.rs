@@ -1,0 +1,302 @@
+//! Job model of the multi-tenant scheduler: what a tenant submits
+//! ([`JobSpec`]), the lifecycle state machine ([`JobState`]) and the
+//! scheduler's per-job record ([`Job`]).
+//!
+//! The lifecycle is
+//! `Queued → Running → {Preempted ⇄ Running} → Done | Failed | Cancelled`:
+//! a job only ever runs in bounded slices, every preemption is a checkpoint
+//! save + requeue, and every resume goes through the fingerprint-validated
+//! restore — so an arbitrarily time-sliced job is bit-identical to an
+//! uninterrupted one (`tests/scheduler.rs`).
+
+use crate::config::json::Json;
+use crate::config::schema::{run_config_from_json, RunConfig};
+use crate::train::RunResult;
+use crate::Result;
+use anyhow::bail;
+use std::path::PathBuf;
+
+/// Lifecycle state of a scheduled job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Submitted, never run (or displaced before its first slice).
+    Queued,
+    /// Executing a slice on the shared runtime right now.
+    Running,
+    /// Preempted at a slice boundary; a boundary snapshot exists and the
+    /// job is waiting to be rescheduled.
+    Preempted,
+    /// Finished all steps; [`Job::result`] holds the run result.
+    Done,
+    /// A slice errored; [`Job::error`] holds the message. Any boundary
+    /// snapshot written before the failure is kept.
+    Failed,
+    /// Cancelled by the operator. The last boundary snapshot (if the job
+    /// ever ran) is kept and stays resumable.
+    Cancelled,
+}
+
+impl JobState {
+    /// Wire/display name of the state.
+    pub fn name(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Preempted => "preempted",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Whether the state is final (the scheduler will never run the job
+    /// again).
+    pub fn terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+
+    /// Whether the job is waiting for executor time.
+    pub fn runnable(self) -> bool {
+        matches!(self, JobState::Queued | JobState::Preempted)
+    }
+
+    /// The legal transitions of the lifecycle state machine.
+    pub fn can_transition(self, to: JobState) -> bool {
+        use JobState::*;
+        matches!(
+            (self, to),
+            (Queued, Running)
+                | (Queued, Cancelled)
+                | (Running, Preempted)
+                | (Running, Done)
+                | (Running, Failed)
+                | (Running, Cancelled)
+                | (Preempted, Running)
+                | (Preempted, Cancelled)
+        )
+    }
+}
+
+/// What a tenant submits: the run plus its scheduling envelope.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// The training run to execute.
+    pub config: RunConfig,
+    /// Strict priority class (higher preempts lower at slice boundaries;
+    /// jobs in the same class share the executor).
+    pub priority: u32,
+    /// Deficit-round-robin weight within the priority class — the job's
+    /// share of the class's step budget (a share-2 job earns executor
+    /// steps twice as fast as a share-1 job). Must be ≥ 1.
+    pub share: u32,
+    /// Maximum steps per slice before the job is preempted
+    /// (checkpoint-save + requeue). `0` defers to the scheduler's
+    /// `default_slice`.
+    pub max_slice_steps: u64,
+}
+
+impl JobSpec {
+    /// A spec with default scheduling envelope (priority 1, share 1,
+    /// scheduler-default slice).
+    pub fn new(config: RunConfig) -> JobSpec {
+        JobSpec { config, priority: 1, share: 1, max_slice_steps: 0 }
+    }
+
+    /// Reject structurally invalid specs up front.
+    pub fn validate(&self) -> Result<()> {
+        self.config.validate()?;
+        if self.share == 0 {
+            bail!("job share must be ≥ 1");
+        }
+        Ok(())
+    }
+
+    /// Wire form used by the control plane's `SUBMIT` command.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("config", self.config.to_json()),
+            ("priority", (self.priority as usize).into()),
+            ("share", (self.share as usize).into()),
+            ("max_slice_steps", (self.max_slice_steps as usize).into()),
+        ])
+    }
+
+    /// Parse the `SUBMIT` wire form (missing envelope fields default to
+    /// priority 1 / share 1 / scheduler-default slice).
+    pub fn from_json(v: &Json, default_family: &str) -> Result<JobSpec> {
+        let mut spec = JobSpec::new(run_config_from_json(v.get("config"), default_family)?);
+        if let Some(p) = v.get("priority").as_usize() {
+            spec.priority = p as u32;
+        }
+        if let Some(s) = v.get("share").as_usize() {
+            spec.share = s as u32;
+        }
+        if let Some(m) = v.get("max_slice_steps").as_usize() {
+            spec.max_slice_steps = m as u64;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// The scheduler's record of one submitted job.
+#[derive(Debug)]
+pub struct Job {
+    /// Scheduler-assigned id (1-based, also the arrival order).
+    pub id: u64,
+    /// The submitted spec. `config.save_dir` is rewritten at submit time
+    /// to the job's private namespace (`job-{id:06}/` under the submitted
+    /// dir) so concurrent jobs can never clobber each other's snapshots.
+    pub spec: JobSpec,
+    /// Current lifecycle state.
+    pub state: JobState,
+    /// Completed training steps so far.
+    pub completed_steps: u64,
+    /// Executor slices this job has run.
+    pub slices: u64,
+    /// Times this job was preempted at a slice boundary.
+    pub preemptions: u64,
+    /// Deficit-round-robin credit, in steps (see `orch::scheduler`).
+    pub(crate) deficit: i64,
+    /// Latest boundary snapshot (what a resume restores from).
+    pub checkpoint: Option<PathBuf>,
+    /// The finished run, once `Done`.
+    pub result: Option<RunResult>,
+    /// The failure message, once `Failed`.
+    pub error: Option<String>,
+}
+
+impl Job {
+    pub(crate) fn new(id: u64, spec: JobSpec) -> Job {
+        Job {
+            id,
+            spec,
+            state: JobState::Queued,
+            completed_steps: 0,
+            slices: 0,
+            preemptions: 0,
+            deficit: 0,
+            checkpoint: None,
+            result: None,
+            error: None,
+        }
+    }
+
+    /// Steps still to execute.
+    pub fn remaining_steps(&self) -> u64 {
+        self.spec.config.total_steps.saturating_sub(self.completed_steps)
+    }
+
+    /// Enforced state-machine transition.
+    pub(crate) fn set_state(&mut self, to: JobState) -> Result<()> {
+        if !self.state.can_transition(to) {
+            bail!(
+                "job {}: illegal state transition {} → {}",
+                self.id,
+                self.state.name(),
+                to.name()
+            );
+        }
+        self.state = to;
+        Ok(())
+    }
+
+    /// Control-plane view of the job (`STATUS` wire form).
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("id", (self.id as usize).into()),
+            ("label", self.spec.config.label.as_str().into()),
+            ("case", self.spec.config.case_name().into()),
+            ("family", self.spec.config.family.as_str().into()),
+            ("state", self.state.name().into()),
+            ("priority", (self.spec.priority as usize).into()),
+            ("share", (self.spec.share as usize).into()),
+            ("completed_steps", (self.completed_steps as usize).into()),
+            ("total_steps", (self.spec.config.total_steps as usize).into()),
+            ("slices", (self.slices as usize).into()),
+            ("preemptions", (self.preemptions as usize).into()),
+        ];
+        if let Some(ck) = &self.checkpoint {
+            pairs.push(("checkpoint", ck.to_string_lossy().into_owned().into()));
+        }
+        if let Some(e) = &self.error {
+            pairs.push(("error", e.as_str().into()));
+        }
+        if let Some(r) = &self.result {
+            pairs.push(("eval_loss", r.final_eval_loss.into()));
+            pairs.push(("state_hash", format!("{:016x}", r.state_hash).into()));
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn state_machine_transitions() {
+        use JobState::*;
+        // the documented lifecycle, including the Preempted ⇄ Running loop
+        for (from, to) in [
+            (Queued, Running),
+            (Running, Preempted),
+            (Preempted, Running),
+            (Running, Done),
+            (Running, Failed),
+            (Queued, Cancelled),
+            (Preempted, Cancelled),
+            (Running, Cancelled),
+        ] {
+            assert!(from.can_transition(to), "{} → {}", from.name(), to.name());
+        }
+        // terminal states are final; runs never restart from terminal
+        for term in [Done, Failed, Cancelled] {
+            assert!(term.terminal());
+            assert!(!term.runnable());
+            for to in [Queued, Running, Preempted, Done, Failed, Cancelled] {
+                assert!(!term.can_transition(to), "{} must be final", term.name());
+            }
+        }
+        // no shortcut from Queued straight to Done/Failed, no requeue
+        assert!(!Queued.can_transition(Done));
+        assert!(!Queued.can_transition(Failed));
+        assert!(!Preempted.can_transition(Queued));
+        assert!(Queued.runnable());
+        assert!(Preempted.runnable());
+        assert!(!Running.runnable());
+    }
+
+    #[test]
+    fn job_enforces_transitions() {
+        let mut j = Job::new(1, JobSpec::new(RunConfig::baseline("gpt", 10, 1e-3)));
+        assert_eq!(j.state, JobState::Queued);
+        assert_eq!(j.remaining_steps(), 10);
+        j.set_state(JobState::Running).unwrap();
+        j.set_state(JobState::Preempted).unwrap();
+        let err = j.set_state(JobState::Done).unwrap_err();
+        assert!(format!("{err}").contains("illegal state transition"), "{err}");
+        j.set_state(JobState::Cancelled).unwrap();
+        assert!(j.set_state(JobState::Running).is_err(), "cancelled is final");
+    }
+
+    #[test]
+    fn spec_json_roundtrip_and_validation() {
+        let mut spec = JobSpec::new(RunConfig::baseline("bert", 20, 1e-3));
+        spec.priority = 3;
+        spec.share = 2;
+        spec.max_slice_steps = 5;
+        let back = JobSpec::from_json(&spec.to_json(), "gpt").unwrap();
+        assert_eq!(back.config.family, "bert");
+        assert_eq!(back.config.total_steps, 20);
+        assert_eq!((back.priority, back.share, back.max_slice_steps), (3, 2, 5));
+
+        // envelope fields default when absent
+        let j = Json::parse(r#"{"config": {"total_steps": 5}}"#).unwrap();
+        let d = JobSpec::from_json(&j, "gpt").unwrap();
+        assert_eq!((d.priority, d.share, d.max_slice_steps), (1, 1, 0));
+
+        spec.share = 0;
+        assert!(spec.validate().is_err(), "share 0 would never earn credit");
+    }
+}

@@ -1,0 +1,23 @@
+//! Multi-tenant orchestration: a preemptive time-slicing job scheduler
+//! over bit-exact checkpoints, with a TCP control plane.
+//!
+//! The paper's pitch is squeezing more value out of a fixed compute
+//! budget; this layer is where that budget gets *shared*. [`job`] defines
+//! what a tenant submits and the job lifecycle state machine;
+//! [`scheduler`] time-slices jobs across the shared runtime (preemption =
+//! checkpoint-save + requeue, resume = the fingerprint-validated restore,
+//! so every preempted job finishes bit-identical to its uninterrupted
+//! run); [`server`] exposes `SUBMIT`/`STATUS`/`CANCEL`/`DRAIN`/`STATS`
+//! over newline-delimited JSON on TCP, surfaced as the `dsde serve` /
+//! `submit` / `status` / `cancel` / `drain` CLI subcommands.
+//!
+//! See DESIGN.md §Job-scheduler for the policy and wire protocol, and
+//! `tests/scheduler.rs` for the bit-identity invariant suite.
+
+pub mod job;
+pub mod scheduler;
+pub mod server;
+
+pub use job::{Job, JobSpec, JobState};
+pub use scheduler::{SchedStats, Scheduler, SchedulerConfig};
+pub use server::{request, serve_with, ServeOptions};

@@ -1,0 +1,459 @@
+//! The multi-tenant time-slicing scheduler.
+//!
+//! One executor thread owns the shared [`TrainEnv`] (the PJRT runtime and
+//! its JIT specialization cache are single-threaded by design, see
+//! `runtime/mod.rs`), and *concurrency* is preemptive time-slicing over
+//! bit-exact checkpoints: a job runs for at most its slice budget, is
+//! preempted by a boundary snapshot + requeue, and later resumes through
+//! the fingerprint-validated restore path. Because save/resume is
+//! bit-neutral (`tests/checkpoint_resume.rs`), any interleaving of any
+//! number of tenants leaves every job bit-identical to its uninterrupted
+//! run — the invariant `tests/scheduler.rs` enforces. All tenants share
+//! one `Runtime`, so specializations compiled for one job are cache hits
+//! for the next (`STATS` exposes the cross-tenant hit rate).
+//!
+//! # Scheduling policy
+//!
+//! * **Admission** — at every slice boundary the runnable jobs are ranked
+//!   by (priority desc, id asc) and the top `max_active` form the executor
+//!   pool (the bounded interleave set); a newly submitted high-priority
+//!   job therefore displaces a lower one at the next boundary.
+//! * **Strict priority across classes** — only the highest priority class
+//!   present in the pool runs; lower classes wait.
+//! * **Deficit round robin within a class** — each visit of the ring
+//!   grants a job `quantum × share` steps of credit; a job runs when its
+//!   credit covers its next slice and the slice cost is debited after.
+//!   Long-run throughput within a class is therefore proportional to
+//!   `share` (the token-budget share), and the carried deficit stays
+//!   bounded by one accrual.
+//!
+//! Every decision is a pure function of (submission order, priorities,
+//! shares, step counts) — the schedule itself is deterministic.
+
+use crate::orch::job::{Job, JobSpec, JobState};
+use crate::train::{checkpoint, SliceOutcome, TrainEnv};
+use crate::Result;
+use anyhow::bail;
+use std::path::Path;
+
+/// Scheduler policy knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Bounded executor pool: how many runnable jobs interleave at once
+    /// (the rest wait in the queue untouched).
+    pub max_active: usize,
+    /// Slice budget (steps) for jobs whose spec leaves `max_slice_steps`
+    /// at 0. `0` = no slicing: such jobs run to completion in one slice.
+    pub default_slice: u64,
+    /// Deficit-round-robin credit granted per ring visit per unit share,
+    /// in steps.
+    pub quantum: u64,
+    /// Remove a job's snapshot namespace once it is `Done` (boundary
+    /// snapshots are scheduler-internal scratch unless the job itself
+    /// asked for periodic saves via `save_every`).
+    pub cleanup_done: bool,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_active: 4, default_slice: 0, quantum: 8, cleanup_done: true }
+    }
+}
+
+/// Aggregate scheduler counters (the `STATS` wire form).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// Executor slices run (including the failing one of a failed job).
+    pub slices: u64,
+    /// Preemptions at slice boundaries (checkpoint-save + requeue).
+    pub preemptions: u64,
+    /// Jobs finished successfully.
+    pub completed: u64,
+    /// Jobs that errored.
+    pub failed: u64,
+    /// Jobs cancelled by the operator.
+    pub cancelled: u64,
+}
+
+/// The multi-tenant job scheduler (see the module docs for the policy).
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    jobs: Vec<Job>,
+    stats: SchedStats,
+    /// Id of the last job served by the DRR ring (round-robin cursor).
+    cursor: u64,
+    /// `(job id, steps executed)` per slice, in execution order — the
+    /// interleaving witness used by tests and the sched_throughput bench.
+    slice_log: Vec<(u64, u64)>,
+}
+
+impl Scheduler {
+    /// A scheduler with the given policy.
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler {
+            cfg: SchedulerConfig {
+                max_active: cfg.max_active.max(1),
+                quantum: cfg.quantum.max(1),
+                ..cfg
+            },
+            jobs: Vec::new(),
+            stats: SchedStats::default(),
+            cursor: 0,
+            slice_log: Vec::new(),
+        }
+    }
+
+    /// Submit a job: validate the spec, move its snapshots into the
+    /// job-private namespace (`job-{id:06}/` under the submitted
+    /// `save_dir`), and queue it. Rejects a spec that tries to resume
+    /// from another job's namespace.
+    pub fn submit(&mut self, mut spec: JobSpec) -> Result<u64> {
+        spec.validate()?;
+        let id = self.jobs.len() as u64 + 1;
+        if spec.config.save_dir.is_empty() {
+            spec.config.save_dir = "runs/checkpoints".to_string();
+        }
+        spec.config.save_dir = checkpoint::job_namespace(&spec.config.save_dir, id)
+            .to_string_lossy()
+            .into_owned();
+        if let Some(r) = &spec.config.resume {
+            checkpoint::check_job_namespace(Path::new(r), id)?;
+        }
+        self.jobs.push(Job::new(id, spec));
+        Ok(id)
+    }
+
+    /// All submitted jobs, in id order.
+    pub fn jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    /// Lookup by id.
+    pub fn job(&self, id: u64) -> Option<&Job> {
+        self.jobs.get(id.checked_sub(1)? as usize)
+    }
+
+    /// Aggregate counters.
+    pub fn stats(&self) -> SchedStats {
+        self.stats
+    }
+
+    /// The per-slice `(job id, steps)` execution log.
+    pub fn slice_log(&self) -> &[(u64, u64)] {
+        &self.slice_log
+    }
+
+    /// Whether every job has reached a terminal state.
+    pub fn all_terminal(&self) -> bool {
+        self.jobs.iter().all(|j| j.state.terminal())
+    }
+
+    /// Whether any job is waiting for executor time.
+    pub fn has_runnable(&self) -> bool {
+        self.jobs.iter().any(|j| j.state.runnable())
+    }
+
+    /// Cancel a job. A job that has run keeps its last boundary snapshot,
+    /// which stays valid and resumable (`tests/scheduler.rs` proves a
+    /// cancelled job's snapshot resumes bit-identically).
+    pub fn cancel(&mut self, id: u64) -> Result<()> {
+        let job = self.job_mut(id)?;
+        if job.state.terminal() {
+            bail!("job {id} is already {}", job.state.name());
+        }
+        job.set_state(JobState::Cancelled)?;
+        self.stats.cancelled += 1;
+        Ok(())
+    }
+
+    /// Elastic re-size across a preemption: change a waiting job's replica
+    /// count. Legal within the same engine (the schedule fingerprint
+    /// excludes the replica count); crossing the fused/replica boundary
+    /// after the job has a snapshot is rejected, mirroring
+    /// `Checkpoint::validate_for`.
+    pub fn resize_replicas(&mut self, id: u64, n_replicas: usize) -> Result<()> {
+        let job = self.job_mut(id)?;
+        if !job.state.runnable() {
+            bail!("job {id} is {} — can only re-size a waiting job", job.state.name());
+        }
+        if job.checkpoint.is_some() {
+            let was_replica = job.spec.config.n_replicas > 0;
+            if was_replica != (n_replicas > 0) {
+                bail!(
+                    "job {id}: re-sizing {} → {} crosses the fused/replica engine \
+                     boundary, which would void bit-exactness of the resume",
+                    job.spec.config.n_replicas,
+                    n_replicas
+                );
+            }
+        }
+        let old = job.spec.config.n_replicas;
+        job.spec.config.n_replicas = n_replicas;
+        if let Err(e) = job.spec.validate() {
+            self.job_mut(id)?.spec.config.n_replicas = old;
+            return Err(e);
+        }
+        Ok(())
+    }
+
+    /// Pick the next job to run, or `None` when nothing is runnable. Pure
+    /// bookkeeping (deficit accrual + ring cursor); does not execute.
+    pub fn next_job(&mut self) -> Option<u64> {
+        // Admission: top max_active runnable jobs by (priority, arrival).
+        let mut admitted: Vec<usize> = (0..self.jobs.len())
+            .filter(|&i| self.jobs[i].state.runnable())
+            .collect();
+        if admitted.is_empty() {
+            return None;
+        }
+        admitted.sort_by_key(|&i| (std::cmp::Reverse(self.jobs[i].spec.priority), i));
+        admitted.truncate(self.cfg.max_active);
+        // Strict priority: only the top class present forms the DRR ring.
+        let top = self.jobs[admitted[0]].spec.priority;
+        let ring: Vec<usize> = admitted
+            .into_iter()
+            .filter(|&i| self.jobs[i].spec.priority == top)
+            .collect();
+        // Round-robin from just past the cursor: conceptually, repeated
+        // passes over the ring accrue `quantum × share` credit per visit
+        // and the first job whose credit covers its slice cost is served.
+        // Computed in closed form instead of looping passes: member k is
+        // served on pass p_k = max(1, ceil((cost − deficit) / accrual));
+        // the winner is the smallest (pass, ring position), members at or
+        // before it accrue p_win visits, later members p_win − 1.
+        let start = ring
+            .iter()
+            .position(|&i| self.jobs[i].id > self.cursor)
+            .unwrap_or(0);
+        let mut accruals: Vec<i64> = Vec::with_capacity(ring.len());
+        let mut win: (u64, usize) = (u64::MAX, 0); // (pass, ring position)
+        for k in 0..ring.len() {
+            let i = ring[(start + k) % ring.len()];
+            let job = &self.jobs[i];
+            let accrual = (self.cfg.quantum * job.spec.share as u64).max(1);
+            let shortfall = (self.slice_steps(job) as i64 - job.deficit).max(0) as u64;
+            let pass = shortfall.div_ceil(accrual).max(1);
+            if pass < win.0 {
+                win = (pass, k);
+            }
+            accruals.push(accrual as i64);
+        }
+        let (p_win, k_win) = win;
+        for k in 0..ring.len() {
+            let i = ring[(start + k) % ring.len()];
+            let visits = (p_win - 1) + u64::from(k <= k_win);
+            self.jobs[i].deficit += visits as i64 * accruals[k];
+        }
+        let winner = ring[(start + k_win) % ring.len()];
+        self.cursor = self.jobs[winner].id;
+        Some(self.jobs[winner].id)
+    }
+
+    /// Execute one slice of `id` on the shared environment. Job-level
+    /// failures are recorded on the job (state `Failed`), not propagated —
+    /// the rest of the pool keeps running; only scheduler-level misuse
+    /// (unknown id, non-runnable job) errors.
+    pub fn run_slice(&mut self, env: &TrainEnv, id: u64) -> Result<()> {
+        let (cfg, slice, before) = {
+            let job = self.job_ref(id)?;
+            if !job.state.runnable() {
+                bail!("job {id} is {} — not runnable", job.state.name());
+            }
+            let mut cfg = job.spec.config.clone();
+            if let Some(ck) = &job.checkpoint {
+                cfg.resume = Some(ck.to_string_lossy().into_owned());
+            }
+            (cfg, self.slice_steps(job), job.completed_steps)
+        };
+        self.job_mut(id)?.set_state(JobState::Running)?;
+        let outcome = env.trainer(cfg).and_then(|t| t.run_slice(slice));
+        self.stats.slices += 1;
+        match outcome {
+            Ok(SliceOutcome::Finished(r)) => {
+                let steps = r.steps;
+                // Debit only what this invocation executed: a job submitted
+                // with a manual resume checkpoint starts its first slice at
+                // the snapshot's step, not at `before` (= 0).
+                let executed = steps.saturating_sub(r.resumed_at.max(before));
+                let job = self.job_mut(id)?;
+                job.slices += 1;
+                job.deficit -= executed as i64;
+                job.completed_steps = steps;
+                job.result = Some(*r);
+                job.set_state(JobState::Done)?;
+                self.stats.completed += 1;
+                self.slice_log.push((id, executed));
+                let job = self.job_ref(id)?;
+                if self.cfg.cleanup_done && job.spec.config.save_every == 0 {
+                    // the namespace held only scheduler-internal boundary
+                    // snapshots — scratch, not user data
+                    let _ = std::fs::remove_dir_all(&job.spec.config.save_dir);
+                    self.job_mut(id)?.checkpoint = None;
+                }
+            }
+            Ok(SliceOutcome::Preempted { checkpoint, completed, resumed_at }) => {
+                let executed = completed.saturating_sub(resumed_at.max(before));
+                let job = self.job_mut(id)?;
+                job.slices += 1;
+                job.deficit -= executed as i64;
+                job.completed_steps = completed;
+                job.checkpoint = Some(checkpoint);
+                job.preemptions += 1;
+                job.set_state(JobState::Preempted)?;
+                self.stats.preemptions += 1;
+                self.slice_log.push((id, executed));
+            }
+            Err(e) => {
+                let job = self.job_mut(id)?;
+                job.slices += 1;
+                job.error = Some(format!("{e:#}"));
+                job.set_state(JobState::Failed)?;
+                self.stats.failed += 1;
+                self.slice_log.push((id, 0));
+            }
+        }
+        Ok(())
+    }
+
+    /// Run slices until no job is runnable (every job terminal). Job
+    /// failures are recorded per job, not propagated.
+    pub fn drain(&mut self, env: &TrainEnv) -> Result<()> {
+        while let Some(id) = self.next_job() {
+            self.run_slice(env, id)?;
+        }
+        Ok(())
+    }
+
+    /// The slice budget `id` would get right now (spec cap, else the
+    /// scheduler default, capped by the job's remaining steps).
+    fn slice_steps(&self, job: &Job) -> u64 {
+        let cap = if job.spec.max_slice_steps > 0 {
+            job.spec.max_slice_steps
+        } else if self.cfg.default_slice > 0 {
+            self.cfg.default_slice
+        } else {
+            u64::MAX
+        };
+        cap.min(job.remaining_steps().max(1))
+    }
+
+    fn job_ref(&self, id: u64) -> Result<&Job> {
+        self.job(id).ok_or_else(|| anyhow::anyhow!("unknown job id {id}"))
+    }
+
+    fn job_mut(&mut self, id: u64) -> Result<&mut Job> {
+        let idx = id
+            .checked_sub(1)
+            .map(|i| i as usize)
+            .filter(|&i| i < self.jobs.len())
+            .ok_or_else(|| anyhow::anyhow!("unknown job id {id}"))?;
+        Ok(&mut self.jobs[idx])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::RunConfig;
+
+    fn tiny(label: &str, steps: u64) -> JobSpec {
+        let mut c = RunConfig::baseline("gpt", steps, 1e-3);
+        c.label = label.to_string();
+        JobSpec::new(c)
+    }
+
+    #[test]
+    fn submit_namespaces_snapshots_and_guards_resume() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let a = s.submit(tiny("a", 10)).unwrap();
+        let b = s.submit(tiny("b", 10)).unwrap();
+        assert_eq!((a, b), (1, 2));
+        let da = &s.job(a).unwrap().spec.config.save_dir;
+        let db = &s.job(b).unwrap().spec.config.save_dir;
+        assert_ne!(da, db, "jobs sharing a save_dir get disjoint namespaces");
+        assert!(da.ends_with("job-000001"), "{da}");
+
+        // resuming from another job's namespace is rejected at submit
+        let mut foreign = tiny("c", 10);
+        foreign.config.resume = Some(format!("{da}/step000005.ckpt"));
+        let err = s.submit(foreign).unwrap_err();
+        assert!(format!("{err}").contains("belongs to job 1"), "{err}");
+        // ...but a manual (non-namespaced) checkpoint passes submit
+        let mut manual = tiny("d", 10);
+        manual.config.resume = Some("/tmp/manual/step000005.ckpt".into());
+        s.submit(manual).unwrap();
+    }
+
+    #[test]
+    fn pick_respects_strict_priority_and_round_robin() {
+        let mut s = Scheduler::new(SchedulerConfig { quantum: 100, ..Default::default() });
+        let lo = s.submit(tiny("lo", 10)).unwrap();
+        let mut hi_spec = tiny("hi", 10);
+        hi_spec.priority = 2;
+        let hi = s.submit(hi_spec).unwrap();
+        // strict priority: only the high class is in the ring
+        for _ in 0..3 {
+            assert_eq!(s.next_job(), Some(hi));
+        }
+        // once the high job is terminal, the low one runs
+        s.cancel(hi).unwrap();
+        assert_eq!(s.next_job(), Some(lo));
+
+        // equal-priority jobs alternate (round-robin ring)
+        let mut s = Scheduler::new(SchedulerConfig { quantum: 100, ..Default::default() });
+        let a = s.submit(tiny("a", 10)).unwrap();
+        let b = s.submit(tiny("b", 10)).unwrap();
+        assert_eq!(s.next_job(), Some(a));
+        assert_eq!(s.next_job(), Some(b));
+        assert_eq!(s.next_job(), Some(a));
+    }
+
+    #[test]
+    fn admission_pool_is_bounded_and_priority_ordered() {
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_active: 1,
+            quantum: 100,
+            ..Default::default()
+        });
+        let _lo = s.submit(tiny("lo", 10)).unwrap();
+        let mut hi_spec = tiny("hi", 10);
+        hi_spec.priority = 5;
+        let hi = s.submit(hi_spec).unwrap();
+        // pool of one: only the highest-priority job is admitted at all
+        for _ in 0..4 {
+            assert_eq!(s.next_job(), Some(hi));
+        }
+    }
+
+    #[test]
+    fn cancel_transitions_and_is_final() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let id = s.submit(tiny("x", 10)).unwrap();
+        s.cancel(id).unwrap();
+        assert_eq!(s.job(id).unwrap().state, JobState::Cancelled);
+        assert!(s.cancel(id).is_err(), "terminal jobs cannot be re-cancelled");
+        assert!(s.all_terminal());
+        assert_eq!(s.next_job(), None);
+        assert_eq!(s.stats().cancelled, 1);
+        assert!(s.cancel(99).is_err(), "unknown id");
+    }
+
+    #[test]
+    fn resize_guards_engine_crossing_once_snapshotted() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let mut dp = tiny("dp", 10);
+        dp.config.n_replicas = 2;
+        let id = s.submit(dp).unwrap();
+        // no snapshot yet: any re-size (even engine-crossing) is just a
+        // config edit on a queued job
+        s.resize_replicas(id, 4).unwrap();
+        assert_eq!(s.job(id).unwrap().spec.config.n_replicas, 4);
+        // with a snapshot parked, crossing fused↔replica is rejected
+        s.job_mut(id).unwrap().checkpoint = Some("x.ckpt".into());
+        let err = s.resize_replicas(id, 0).unwrap_err();
+        assert!(format!("{err}").contains("engine"), "{err}");
+        s.resize_replicas(id, 8).unwrap();
+        assert!(s.resize_replicas(id, 65).is_err(), "validation still applies");
+        assert_eq!(s.job(id).unwrap().spec.config.n_replicas, 8, "failed re-size rolls back");
+    }
+}

@@ -1,0 +1,264 @@
+//! The scheduler's control plane: a std-only TCP server speaking
+//! newline-delimited JSON, plus the one-shot client used by the `dsde
+//! submit`/`status`/`cancel`/`drain` subcommands.
+//!
+//! # Wire protocol
+//!
+//! One JSON object per line in each direction. Requests carry a `cmd`
+//! field; every response carries `"ok": true|false` (plus `"error"` on
+//! failure):
+//!
+//! ```text
+//! {"cmd":"SUBMIT","config":{...RunConfig JSON...},
+//!  "priority":1,"share":1,"max_slice_steps":20}   → {"ok":true,"job":1}
+//! {"cmd":"STATUS"}                   → {"ok":true,"jobs":[{...}, ...]}
+//! {"cmd":"STATUS","job":1}           → {"ok":true,"job":{...}}
+//! {"cmd":"CANCEL","job":1}           → {"ok":true,"state":"cancelled",...}
+//! {"cmd":"DRAIN"}                    → {"ok":true,"draining":true,...}
+//! {"cmd":"STATS"}                    → {"ok":true,"slices":...,"cache":{...}}
+//! ```
+//!
+//! # Threading
+//!
+//! The *executor* thread — the caller of [`serve_with`] — owns the
+//! [`TrainEnv`] and the [`Scheduler`] (the PJRT runtime is
+//! single-threaded by design). An accept thread and one thread per
+//! connection only parse lines and forward `(request, reply-channel)`
+//! pairs over an mpsc channel; the executor applies every pending command
+//! **between slices**, so control operations are linearized at slice
+//! boundaries and never race a running step. `DRAIN` stops admission and
+//! shuts the server down once every job is terminal.
+
+use crate::config::json::Json;
+use crate::orch::job::JobSpec;
+use crate::orch::scheduler::{SchedStats, Scheduler, SchedulerConfig};
+use crate::train::TrainEnv;
+use crate::Result;
+use anyhow::Context;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Server-side options for [`serve_with`].
+#[derive(Clone, Debug, Default)]
+pub struct ServeOptions {
+    /// Scheduling policy of the hosted scheduler.
+    pub sched: SchedulerConfig,
+    /// Family assumed for submitted configs that omit one.
+    pub default_family: String,
+}
+
+/// Run the control plane on an already-bound listener until a `DRAIN`
+/// completes (all jobs terminal). The calling thread becomes the executor:
+/// it owns `env` and runs every slice; connection threads only relay
+/// commands. Returns the final scheduler counters.
+pub fn serve_with(env: &TrainEnv, listener: TcpListener, opts: ServeOptions) -> Result<SchedStats> {
+    let addr = listener.local_addr()?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    // Replies routed through the executor but not yet written to their
+    // socket — drained before serve_with returns, so the final DRAIN/
+    // STATUS answer is never lost to process exit.
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = channel::<(Json, Sender<String>)>();
+    let accept_shutdown = shutdown.clone();
+    let accept_inflight = inflight.clone();
+    let accept = std::thread::Builder::new()
+        .name("dsde-ctl-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if accept_shutdown.load(Ordering::Relaxed) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let tx = tx.clone();
+                let inflight = accept_inflight.clone();
+                let _ = std::thread::Builder::new()
+                    .name("dsde-ctl-conn".into())
+                    .spawn(move || handle_conn(stream, tx, inflight));
+            }
+        })
+        .context("spawning control-plane accept thread")?;
+
+    let mut sched = Scheduler::new(opts.sched.clone());
+    let mut draining = false;
+    loop {
+        // Linearization point: apply every pending control command at the
+        // slice boundary.
+        while let Ok((req, reply)) = rx.try_recv() {
+            let resp = handle_request(env, &mut sched, &mut draining, &opts, &req);
+            let _ = reply.send(resp);
+        }
+        if draining && sched.all_terminal() {
+            break;
+        }
+        if let Some(id) = sched.next_job() {
+            sched.run_slice(env, id)?;
+        } else {
+            // idle: wait for commands without spinning
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok((req, reply)) => {
+                    let resp = handle_request(env, &mut sched, &mut draining, &opts, &req);
+                    let _ = reply.send(resp);
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+    }
+    // Let queued replies reach their sockets (bounded), then unblock the
+    // accept() call so the thread observes the flag and exits.
+    let deadline = Instant::now() + Duration::from_secs(2);
+    while inflight.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    shutdown.store(true, Ordering::Relaxed);
+    let _ = TcpStream::connect(addr);
+    let _ = accept.join();
+    Ok(sched.stats())
+}
+
+/// One-shot control-plane client: connect, send one request line, read
+/// one response line. Used by the `dsde submit`/`status`/`cancel`/`drain`
+/// subcommands.
+pub fn request(addr: &str, req: &Json) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to the control plane at {addr}"))?;
+    stream.write_all(req.to_string_compact().as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    if line.trim().is_empty() {
+        anyhow::bail!("control plane at {addr} closed the connection without replying");
+    }
+    Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad control-plane response: {e}"))
+}
+
+/// Per-connection relay: parse each line, forward to the executor, write
+/// the reply back. Exits when the client disconnects or the server stops.
+/// `inflight` brackets the forward→write window so [`serve_with`] can
+/// drain pending replies before the process exits.
+fn handle_conn(stream: TcpStream, tx: Sender<(Json, Sender<String>)>, inflight: Arc<AtomicUsize>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let reader = BufReader::new(read_half);
+    let mut writer = stream;
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (resp, forwarded) = match Json::parse(line.trim()) {
+            Err(e) => (err_line(&format!("bad request: {e}")), false),
+            Ok(req) => {
+                inflight.fetch_add(1, Ordering::SeqCst);
+                let (rtx, rrx) = channel::<String>();
+                let resp = if tx.send((req, rtx)).is_err() {
+                    err_line("server shutting down")
+                } else {
+                    rrx.recv().unwrap_or_else(|_| err_line("server shutting down"))
+                };
+                (resp, true)
+            }
+        };
+        let wrote = writer.write_all(resp.as_bytes()).is_ok() && writer.write_all(b"\n").is_ok();
+        if forwarded {
+            inflight.fetch_sub(1, Ordering::SeqCst);
+        }
+        if !wrote {
+            break;
+        }
+    }
+}
+
+fn err_line(msg: &str) -> String {
+    Json::obj(vec![("ok", false.into()), ("error", msg.into())]).to_string_compact()
+}
+
+fn ok_line(mut pairs: Vec<(&str, Json)>) -> String {
+    pairs.insert(0, ("ok", true.into()));
+    Json::obj(pairs).to_string_compact()
+}
+
+/// Dispatch one control command against the scheduler (executor thread
+/// only; see the module docs for the linearization argument).
+fn handle_request(
+    env: &TrainEnv,
+    sched: &mut Scheduler,
+    draining: &mut bool,
+    opts: &ServeOptions,
+    req: &Json,
+) -> String {
+    let family: &str =
+        if opts.default_family.is_empty() { "gpt" } else { opts.default_family.as_str() };
+    match req.get("cmd").as_str() {
+        Some("SUBMIT") => {
+            if *draining {
+                return err_line("server is draining — no new jobs");
+            }
+            match JobSpec::from_json(req, family).and_then(|s| sched.submit(s)) {
+                Ok(id) => ok_line(vec![("job", (id as usize).into())]),
+                Err(e) => err_line(&format!("{e:#}")),
+            }
+        }
+        Some("STATUS") => match req.get("job").as_usize() {
+            Some(id) => match sched.job(id as u64) {
+                Some(j) => ok_line(vec![("job", j.to_json())]),
+                None => err_line(&format!("unknown job id {id}")),
+            },
+            None => {
+                let jobs: Vec<Json> = sched.jobs().iter().map(|j| j.to_json()).collect();
+                ok_line(vec![("jobs", Json::Arr(jobs))])
+            }
+        },
+        Some("CANCEL") => {
+            let Some(id) = req.get("job").as_usize() else {
+                return err_line("CANCEL requires a 'job' id");
+            };
+            match sched.cancel(id as u64) {
+                Ok(()) => {
+                    let job = sched.job(id as u64).expect("cancelled job exists");
+                    let mut pairs: Vec<(&str, Json)> =
+                        vec![("job", id.into()), ("state", job.state.name().into())];
+                    if let Some(ck) = &job.checkpoint {
+                        pairs.push(("checkpoint", ck.to_string_lossy().into_owned().into()));
+                    }
+                    ok_line(pairs)
+                }
+                Err(e) => err_line(&format!("{e:#}")),
+            }
+        }
+        Some("DRAIN") => {
+            *draining = true;
+            let pending = sched.jobs().iter().filter(|j| !j.state.terminal()).count();
+            ok_line(vec![("draining", true.into()), ("pending", pending.into())])
+        }
+        Some("STATS") => {
+            let s = sched.stats();
+            let cache = env.rt.cache_stats();
+            ok_line(vec![
+                ("slices", (s.slices as usize).into()),
+                ("preemptions", (s.preemptions as usize).into()),
+                ("completed", (s.completed as usize).into()),
+                ("failed", (s.failed as usize).into()),
+                ("cancelled", (s.cancelled as usize).into()),
+                (
+                    "cache",
+                    Json::obj(vec![
+                        ("hits", (cache.hits as usize).into()),
+                        ("misses", (cache.misses as usize).into()),
+                        ("prewarmed", (cache.prewarmed as usize).into()),
+                        ("hit_rate", cache.hit_rate().into()),
+                    ]),
+                ),
+            ])
+        }
+        Some(cmd) => err_line(&format!(
+            "unknown command '{cmd}' (SUBMIT | STATUS | CANCEL | DRAIN | STATS)"
+        )),
+        None => err_line("request has no 'cmd' field"),
+    }
+}

@@ -542,6 +542,42 @@ pub fn schedule_fingerprint(run: &RunConfig, schedule: &[StepRoute]) -> u64 {
     fnv1a(&buf)
 }
 
+/// Per-job checkpoint namespace: job `id`'s snapshots live in
+/// `save_dir/job-{id:06}/`, so concurrent jobs sharing one save directory
+/// (the default `runs/checkpoints`) can never clobber each other's
+/// `step{N:06}.ckpt` files. Used by the [`crate::orch`] scheduler.
+pub fn job_namespace(save_dir: &str, job_id: u64) -> std::path::PathBuf {
+    Path::new(save_dir).join(format!("job-{job_id:06}"))
+}
+
+/// Reject resuming job `job_id` from a snapshot parked in *another* job's
+/// namespace: any `job-NNNNNN` path component (6+ digits — `{id:06}` pads
+/// to *at least* six) must name `job_id` itself. Paths without a job
+/// component (manual checkpoints) pass.
+pub fn check_job_namespace(path: &Path, job_id: u64) -> Result<()> {
+    for comp in path.components() {
+        let Some(s) = comp.as_os_str().to_str() else { continue };
+        let Some(num) = s.strip_prefix("job-") else { continue };
+        if num.len() < 6 || !num.bytes().all(|b| b.is_ascii_digit()) {
+            continue; // not a scheduler namespace component
+        }
+        // an unparseable (overflowing) id can never be this job's own
+        match num.parse::<u64>() {
+            Ok(owner) if owner == job_id => {}
+            parsed => {
+                let owner =
+                    parsed.map(|o| o.to_string()).unwrap_or_else(|_| num.to_string());
+                bail!(
+                    "checkpoint {} belongs to job {owner}'s namespace — refusing to \
+                     resume job {job_id} from another job's snapshots",
+                    path.display()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Bounds-checked little-endian reader over the checkpoint body.
 struct Cursor<'a> {
     bytes: &'a [u8],
@@ -732,6 +768,31 @@ mod tests {
         assert!(format!("{err}").contains("token ids"), "{err}");
         let err = ck.validate_for(&run, ck.schedule_fp, n_state, None).unwrap_err();
         assert!(format!("{err}").contains("TokenBypass"), "{err}");
+    }
+
+    #[test]
+    fn job_namespaces_are_disjoint_and_guarded() {
+        let a = job_namespace("runs/checkpoints", 1);
+        let b = job_namespace("runs/checkpoints", 2);
+        assert_ne!(a, b, "two jobs never share a snapshot directory");
+        assert!(a.ends_with("job-000001"), "{}", a.display());
+
+        // resuming from your own namespace is fine
+        check_job_namespace(&a.join("step000005.ckpt"), 1).unwrap();
+        // ...from another job's is rejected with a clear error
+        let err = check_job_namespace(&a.join("step000005.ckpt"), 2).unwrap_err();
+        assert!(format!("{err}").contains("belongs to job 1"), "{err}");
+        // manual (non-namespaced) paths pass, as do job-ish names that are
+        // not scheduler namespaces
+        check_job_namespace(Path::new("/tmp/ck/step000005.ckpt"), 7).unwrap();
+        check_job_namespace(Path::new("/tmp/job-12/x.ckpt"), 7).unwrap();
+        check_job_namespace(Path::new("/tmp/job-abcdef/x.ckpt"), 7).unwrap();
+        // ids past 999999 widen beyond six digits; the guard must keep up
+        let wide = job_namespace("runs/checkpoints", 1_000_000);
+        assert!(wide.ends_with("job-1000000"), "{}", wide.display());
+        check_job_namespace(&wide.join("step000001.ckpt"), 1_000_000).unwrap();
+        let err = check_job_namespace(&wide.join("step000001.ckpt"), 2).unwrap_err();
+        assert!(format!("{err}").contains("belongs to job 1000000"), "{err}");
     }
 
     #[test]

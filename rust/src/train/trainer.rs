@@ -179,6 +179,30 @@ pub enum EvalSet {
     Vit(Vec<VitBatch>),
 }
 
+/// How a bounded trainer invocation ended (see [`Trainer::run_slice`]).
+///
+/// `Preempted` is the scheduler's building block: the boundary snapshot it
+/// names is an ordinary checkpoint, so the job resumes through the same
+/// fingerprint-validated restore path as a crash recovery — which is what
+/// makes arbitrary time-slicing bit-neutral (`tests/scheduler.rs`).
+#[derive(Debug)]
+pub enum SliceOutcome {
+    /// The run reached `total_steps`; the full result is available.
+    Finished(Box<RunResult>),
+    /// The slice budget expired first. A boundary snapshot was written (or
+    /// reused, when a periodic save already covered this step) and the run
+    /// can continue from it bit-identically.
+    Preempted {
+        /// Path of the boundary snapshot to resume from.
+        checkpoint: std::path::PathBuf,
+        /// Completed steps at the preemption point.
+        completed: u64,
+        /// Step this invocation started from (0 for a fresh run), so
+        /// `completed − resumed_at` is what the slice actually executed.
+        resumed_at: u64,
+    },
+}
+
 /// The resolved (curriculum state, compiled route) of one training step.
 #[derive(Clone, Debug)]
 pub struct StepRoute {
@@ -434,7 +458,24 @@ impl<'rt> Trainer<'rt> {
     }
 
     /// Run to completion (from the resume point when resuming).
-    pub fn run(mut self) -> Result<RunResult> {
+    pub fn run(self) -> Result<RunResult> {
+        match self.run_bounded(u64::MAX)? {
+            SliceOutcome::Finished(r) => Ok(*r),
+            SliceOutcome::Preempted { .. } => unreachable!("unbounded run cannot preempt"),
+        }
+    }
+
+    /// Run at most `max_new_steps` steps past the start point, then either
+    /// finish normally or preempt: write a boundary snapshot into
+    /// `RunConfig::save_dir` (named `step{N:06}.ckpt`, exactly like a
+    /// periodic save) and return [`SliceOutcome::Preempted`]. Resuming from
+    /// that snapshot and continuing — through any number of further slices
+    /// — is bit-identical to the uninterrupted run.
+    pub fn run_slice(self, max_new_steps: u64) -> Result<SliceOutcome> {
+        self.run_bounded(max_new_steps.max(1))
+    }
+
+    fn run_bounded(mut self, max_new_steps: u64) -> Result<SliceOutcome> {
         let fam = self.rt.registry.family(&self.run.family)?.clone();
         let n_mid = fam.n_middle_layers;
         let start = self.start_step.min(self.run.total_steps) as usize;
@@ -627,6 +668,7 @@ impl<'rt> Trainer<'rt> {
             }
             // Periodic durable snapshot: atomic write-rename, so an
             // interruption at any point leaves a resumable file set.
+            let mut saved_this_step = false;
             if self.run.save_every > 0 && (step + 1) % self.run.save_every == 0 {
                 let ck = self.snapshot(step + 1, &step_losses, &curve)?;
                 let file = format!("step{:06}.ckpt", step + 1);
@@ -635,6 +677,36 @@ impl<'rt> Trainer<'rt> {
                     format!("{}: saving checkpoint at step {}", self.run.label, step + 1)
                 })?;
                 checkpoints_written += 1;
+                saved_this_step = true;
+            }
+            // Slice boundary: the budget is spent and steps remain — park a
+            // boundary snapshot (unless the periodic save just wrote this
+            // exact step) and hand control back to the caller.
+            if step + 1 - start as u64 >= max_new_steps && step + 1 < self.run.total_steps {
+                let completed = step + 1;
+                if self.run.save_dir.is_empty() {
+                    bail!(
+                        "{}: slice boundary at step {completed} needs a save_dir \
+                         for the boundary snapshot",
+                        self.run.label
+                    );
+                }
+                let path =
+                    Path::new(&self.run.save_dir).join(format!("step{completed:06}.ckpt"));
+                if !saved_this_step {
+                    let ck = self.snapshot(completed, &step_losses, &curve)?;
+                    ck.save(&path).with_context(|| {
+                        format!(
+                            "{}: saving boundary snapshot at step {completed}",
+                            self.run.label
+                        )
+                    })?;
+                }
+                return Ok(SliceOutcome::Preempted {
+                    checkpoint: path,
+                    completed,
+                    resumed_at: start as u64,
+                });
             }
         }
         let loader_stats = source.stats();
@@ -656,7 +728,7 @@ impl<'rt> Trainer<'rt> {
         // the whole run, not just the resumed segment).
         let tail: Vec<f64> = step_losses[tail_from as usize..].iter().map(|&x| x as f64).collect();
         let executed = (self.run.total_steps - start as u64).max(1);
-        Ok(RunResult {
+        Ok(SliceOutcome::Finished(Box::new(RunResult {
             label: self.run.label.clone(),
             case: self.run.case_name(),
             family: self.run.family.clone(),
@@ -684,7 +756,7 @@ impl<'rt> Trainer<'rt> {
             prewarmed_compiles: cache.prewarmed,
             resumed_at: self.start_step,
             checkpoints_written,
-        })
+        })))
     }
 
     /// Capture the full training state after `completed` steps as a

@@ -1,0 +1,602 @@
+//! Multi-tenant scheduler invariant suite (ISSUE 5 tentpole).
+//!
+//! The core claim: **time-slicing is bit-neutral**. A job run under the
+//! scheduler — preempted at arbitrary slice boundaries (checkpoint-save +
+//! requeue), interleaved with other tenants on the shared runtime, even
+//! elastically re-sized dp2→dp4 across a preemption — finishes with
+//! `state_hash`, per-step f32 `step_losses`, eval curve and token
+//! accounting bit-identical to the same run executed uninterrupted.
+//!
+//! Also covered: strict priorities and DRR shares shape the interleave,
+//! cancel leaves a valid resumable snapshot, per-job checkpoint
+//! namespaces isolate concurrent tenants, `run_cases` propagates a
+//! mid-grid failure while the scheduler-backed path fails only the bad
+//! job, and `run_cases_scheduled` (the `dsde pareto --jobs N` path)
+//! produces the same rows as sequential `run_cases`.
+
+use dsde::config::json::Json;
+use dsde::config::schema::*;
+use dsde::exp::{run_cases, run_cases_scheduled};
+use dsde::orch::{request, serve_with, JobSpec, JobState, Scheduler, SchedulerConfig, ServeOptions};
+use dsde::train::{RunResult, TrainEnv};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+const STEPS: u64 = 10;
+const SLICE: u64 = 3;
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn env() -> TrainEnv {
+    TrainEnv::new(200, 91).expect("surrogate runtime available")
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "dsde-sched-{}-{}-{}",
+        std::process::id(),
+        tag,
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn seqtru(max_seq: usize) -> ClConfig {
+    ClConfig::new(
+        Metric::SeqTru,
+        Bound::Value((max_seq / 8) as f64),
+        Bound::Value(max_seq as f64),
+        (STEPS as f64 * 0.6) as u64,
+    )
+}
+
+fn seqres(max_seq: usize) -> ClConfig {
+    ClConfig::new(
+        Metric::SeqRes,
+        Bound::Value((max_seq / 8) as f64),
+        Bound::Value(max_seq as f64),
+        (STEPS as f64 * 0.6) as u64,
+    )
+}
+
+fn voc() -> ClConfig {
+    ClConfig::new(Metric::Voc, Bound::Percentile(0.05), Bound::Percentile(1.0), STEPS)
+}
+
+fn ltd(r_start: usize) -> Routing {
+    Routing::RandomLtd(LtdConfig::mslg(r_start, STEPS))
+}
+
+fn bypass(r_start: usize) -> Routing {
+    Routing::TokenBypass(BypassConfig {
+        r_start,
+        total_steps: STEPS,
+        schedule: LtdSchedule::Constant,
+        n_special: 4,
+    })
+}
+
+fn case(family: &str, label: &str, curriculum: Vec<ClConfig>, routing: Routing) -> RunConfig {
+    let mut c = RunConfig::baseline(family, STEPS, 3e-3);
+    c.label = label.to_string();
+    c.seed = 4242;
+    c.eval_every = STEPS / 2;
+    c.curriculum = curriculum;
+    c.routing = routing;
+    c
+}
+
+fn with_knobs(base: &RunConfig, n: usize, pipeline_on: bool) -> RunConfig {
+    let mut c = base.clone();
+    c.n_replicas = n;
+    c.pipeline = if pipeline_on {
+        PipelineConfig { prefetch_depth: 3, n_loader_workers: 4 }
+    } else {
+        PipelineConfig::disabled()
+    };
+    c
+}
+
+/// Every observable the scheduler invariant guarantees, bit-exactly.
+fn assert_bit_identical(label: &str, reference: &RunResult, r: &RunResult) {
+    assert_eq!(reference.state_hash, r.state_hash, "{label}: final model state diverged");
+    assert_eq!(reference.step_losses, r.step_losses, "{label}: per-step loss curve diverged");
+    assert_eq!(reference.curve.len(), r.curve.len(), "{label}: curve length");
+    for (a, b) in reference.curve.iter().zip(&r.curve) {
+        assert_eq!(a.step, b.step, "{label}: curve step");
+        assert_eq!(
+            a.eval_loss.to_bits(),
+            b.eval_loss.to_bits(),
+            "{label}: eval loss diverged at step {}",
+            a.step
+        );
+        assert_eq!(a.compute_tokens, b.compute_tokens, "{label}: token accounting");
+    }
+    assert_eq!(
+        reference.final_eval_loss.to_bits(),
+        r.final_eval_loss.to_bits(),
+        "{label}: final eval"
+    );
+    assert_eq!(reference.data_tokens, r.data_tokens, "{label}: data tokens");
+    assert_eq!(reference.compute_tokens, r.compute_tokens, "{label}: compute tokens");
+    assert_eq!(reference.dispatch, r.dispatch, "{label}: dispatch histogram");
+    assert_eq!(reference.final_accuracy, r.final_accuracy, "{label}: accuracy");
+}
+
+fn sched(max_active: usize, slice: u64) -> Scheduler {
+    Scheduler::new(SchedulerConfig {
+        max_active,
+        default_slice: slice,
+        quantum: slice.max(1),
+        cleanup_done: false, // tests inspect the snapshot files
+    })
+}
+
+/// The time-slicing oracle for one case at one (replicas, pipeline) point:
+/// the scheduled, repeatedly-preempted run must match the uninterrupted
+/// reference bit for bit.
+fn check_sliced(env: &TrainEnv, base: &RunConfig, n: usize, pipeline_on: bool) {
+    let label = format!(
+        "{} ({}, dp{}, pipeline {})",
+        base.label,
+        base.family,
+        n,
+        if pipeline_on { "on" } else { "off" }
+    );
+    let reference = env
+        .run(with_knobs(base, n, pipeline_on))
+        .unwrap_or_else(|e| panic!("{label} reference: {e:#}"));
+
+    let dir = temp_dir(&base.label);
+    let mut cfg = with_knobs(base, n, pipeline_on);
+    cfg.save_dir = dir.to_string_lossy().into_owned();
+    let mut s = sched(4, SLICE);
+    let id = s.submit(JobSpec::new(cfg)).unwrap();
+    s.drain(env).unwrap_or_else(|e| panic!("{label} drain: {e:#}"));
+
+    let job = s.job(id).unwrap();
+    assert_eq!(job.state, JobState::Done, "{label}: {:?}", job.error);
+    assert_eq!(job.completed_steps, STEPS, "{label}: completed steps");
+    assert_eq!(job.slices, STEPS.div_ceil(SLICE), "{label}: slice count");
+    assert_eq!(job.preemptions, STEPS.div_ceil(SLICE) - 1, "{label}: preemption count");
+    let r = job.result.as_ref().expect("done job has a result");
+    assert_bit_identical(&format!("{label} [time-sliced]"), &reference, r);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn check_case(env: &TrainEnv, base: RunConfig, pipelines: &[bool], replicas: &[usize]) {
+    for &pipeline_on in pipelines {
+        for &n in replicas {
+            check_sliced(env, &base, n, pipeline_on);
+        }
+    }
+}
+
+// ---- Bit-identity across the case matrix ---------------------------------
+
+#[test]
+fn gpt_seqtru_ltd_sliced() {
+    let env = env();
+    check_case(
+        &env,
+        case("gpt", "gpt-seqtru+ltd", vec![seqtru(64)], ltd(16)),
+        &[true, false],
+        &[0, 2],
+    );
+}
+
+#[test]
+fn gpt_seqres_voc_bypass_sliced() {
+    let env = env();
+    check_case(
+        &env,
+        case("gpt", "gpt-seqres+voc+bypass", vec![seqres(64), voc()], bypass(32)),
+        &[true],
+        &[0, 2],
+    );
+}
+
+#[test]
+fn bert_seqtru_ltd_sliced() {
+    let env = env();
+    check_case(
+        &env,
+        case("bert", "bert-seqtru+ltd", vec![seqtru(64)], ltd(16)),
+        &[true, false],
+        &[0, 2],
+    );
+}
+
+#[test]
+fn vit_ltd_sliced() {
+    let env = env();
+    check_case(&env, case("vit", "vit-ltd", vec![], ltd(5)), &[true, false], &[0, 2]);
+}
+
+// ---- Multi-tenant interleaving -------------------------------------------
+
+#[test]
+fn interleaved_tenants_stay_bit_exact() {
+    let env = env();
+    let bases = [
+        case("gpt", "tenant-gpt", vec![seqtru(64)], ltd(16)),
+        case("bert", "tenant-bert", vec![seqtru(64)], ltd(16)),
+        case("vit", "tenant-vit", vec![], ltd(5)),
+    ];
+    let references: Vec<RunResult> = bases
+        .iter()
+        .map(|b| env.run(with_knobs(b, 0, true)).expect("reference"))
+        .collect();
+
+    let dir = temp_dir("tenants");
+    let mut s = sched(4, SLICE);
+    let ids: Vec<u64> = bases
+        .iter()
+        .map(|b| {
+            let mut cfg = with_knobs(b, 0, true);
+            cfg.save_dir = dir.to_string_lossy().into_owned();
+            s.submit(JobSpec::new(cfg)).unwrap()
+        })
+        .collect();
+    s.drain(&env).unwrap();
+
+    for (id, reference) in ids.iter().zip(&references) {
+        let job = s.job(*id).unwrap();
+        assert_eq!(job.state, JobState::Done, "job {id}: {:?}", job.error);
+        assert!(job.preemptions >= 2, "job {id} was barely time-sliced");
+        assert_bit_identical(
+            &format!("tenant {id}"),
+            reference,
+            job.result.as_ref().unwrap(),
+        );
+    }
+    // the executor genuinely interleaved (round-robin ring visible)
+    let log = s.slice_log();
+    let switches = log.windows(2).filter(|w| w[0].0 != w[1].0).count();
+    assert!(switches >= 4, "no real interleaving: {log:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- Elastic dp2 → dp4 re-size across a preemption ------------------------
+
+#[test]
+fn elastic_dp2_to_dp4_across_preemption() {
+    let env = env();
+    let base = case("gpt", "gpt-elastic", vec![seqtru(64)], ltd(16));
+    let reference = env.run(with_knobs(&base, 4, true)).expect("dp4 reference");
+
+    let dir = temp_dir("elastic");
+    let mut cfg = with_knobs(&base, 2, true);
+    cfg.save_dir = dir.to_string_lossy().into_owned();
+    let mut s = sched(4, 4);
+    let id = s.submit(JobSpec::new(cfg)).unwrap();
+    let picked = s.next_job().unwrap();
+    assert_eq!(picked, id);
+    s.run_slice(&env, id).unwrap();
+    assert_eq!(s.job(id).unwrap().state, JobState::Preempted);
+    assert_eq!(s.job(id).unwrap().completed_steps, 4);
+
+    // elastic re-size while preempted: legal within the replica engine
+    s.resize_replicas(id, 4).unwrap();
+    s.drain(&env).unwrap();
+    let job = s.job(id).unwrap();
+    assert_eq!(job.state, JobState::Done, "{:?}", job.error);
+    assert_bit_identical("elastic dp2→dp4", &reference, job.result.as_ref().unwrap());
+
+    // crossing the engine boundary would have been rejected up front
+    let mut s2 = sched(4, 4);
+    let mut cfg2 = with_knobs(&base, 2, true);
+    cfg2.save_dir = dir.to_string_lossy().into_owned();
+    let id2 = s2.submit(JobSpec::new(cfg2)).unwrap();
+    let picked = s2.next_job().unwrap();
+    s2.run_slice(&env, picked).unwrap();
+    let err = s2.resize_replicas(id2, 0).unwrap_err();
+    assert!(format!("{err}").contains("engine"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- Priorities and shares ------------------------------------------------
+
+#[test]
+fn strict_priority_runs_high_class_first() {
+    let env = env();
+    let dir = temp_dir("prio");
+    let mut s = sched(4, SLICE);
+    let mk = |label: &str, priority: u32| {
+        let mut cfg = case("gpt", label, vec![seqtru(64)], ltd(16));
+        cfg.save_dir = dir.to_string_lossy().into_owned();
+        let mut spec = JobSpec::new(cfg);
+        spec.priority = priority;
+        spec
+    };
+    let lo = s.submit(mk("low-pri", 1)).unwrap();
+    let hi = s.submit(mk("high-pri", 2)).unwrap();
+    s.drain(&env).unwrap();
+    assert_eq!(s.job(lo).unwrap().state, JobState::Done);
+    assert_eq!(s.job(hi).unwrap().state, JobState::Done);
+    // every high-priority slice precedes every low-priority slice
+    let log = s.slice_log();
+    let first_lo = log.iter().position(|&(id, _)| id == lo).unwrap();
+    let last_hi = log.iter().rposition(|&(id, _)| id == hi).unwrap();
+    assert!(
+        last_hi < first_lo,
+        "high-priority job must fully drain before the low class runs: {log:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn drr_share_weights_the_interleave() {
+    let env = env();
+    let dir = temp_dir("share");
+    let mut s = Scheduler::new(SchedulerConfig {
+        max_active: 4,
+        default_slice: 2,
+        quantum: 1,
+        cleanup_done: false,
+    });
+    let mk = |label: &str, share: u32| {
+        let mut cfg = case("gpt", label, vec![seqtru(64)], ltd(16));
+        cfg.total_steps = 8;
+        cfg.eval_every = 4;
+        cfg.save_dir = dir.to_string_lossy().into_owned();
+        let mut spec = JobSpec::new(cfg);
+        spec.share = share;
+        spec
+    };
+    let heavy = s.submit(mk("share-2", 2)).unwrap();
+    let light = s.submit(mk("share-1", 1)).unwrap();
+    s.drain(&env).unwrap();
+    assert_eq!(s.job(heavy).unwrap().state, JobState::Done);
+    assert_eq!(s.job(light).unwrap().state, JobState::Done);
+    let log = s.slice_log();
+    // proportional fair share: the share-2 tenant earns credit twice as
+    // fast, so it front-loads the schedule and finishes first
+    let heavy_first3 = log.iter().take(3).filter(|&&(id, _)| id == heavy).count();
+    assert!(heavy_first3 >= 2, "share-2 job under-served early: {log:?}");
+    let last_heavy = log.iter().rposition(|&(id, _)| id == heavy).unwrap();
+    let last_light = log.iter().rposition(|&(id, _)| id == light).unwrap();
+    assert!(last_heavy < last_light, "share-2 job must finish first: {log:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- Cancel ---------------------------------------------------------------
+
+#[test]
+fn cancel_leaves_a_valid_resumable_checkpoint() {
+    let env = env();
+    let base = case("gpt", "gpt-cancel", vec![seqtru(64)], ltd(16));
+    let reference = env.run(with_knobs(&base, 0, true)).expect("reference");
+
+    let dir = temp_dir("cancel");
+    let mut cfg = with_knobs(&base, 0, true);
+    cfg.save_dir = dir.to_string_lossy().into_owned();
+    let mut s = sched(4, SLICE);
+    let id = s.submit(JobSpec::new(cfg)).unwrap();
+    let picked = s.next_job().unwrap();
+    s.run_slice(&env, picked).unwrap();
+    s.cancel(id).unwrap();
+
+    let job = s.job(id).unwrap();
+    assert_eq!(job.state, JobState::Cancelled);
+    let ck = job.checkpoint.clone().expect("cancelled job keeps its snapshot");
+    assert!(ck.exists(), "{} missing", ck.display());
+    assert_eq!(s.next_job(), None, "cancelled job never reschedules");
+
+    // the kept snapshot is an ordinary checkpoint: resuming from it
+    // completes the run bit-identically
+    let mut resuming = with_knobs(&base, 0, true);
+    resuming.resume = Some(ck.to_string_lossy().into_owned());
+    let resumed = env.run(resuming).expect("resume from cancelled job's snapshot");
+    assert_eq!(resumed.resumed_at, SLICE);
+    assert_bit_identical("cancel → manual resume", &reference, &resumed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- Namespace isolation --------------------------------------------------
+
+#[test]
+fn concurrent_jobs_share_a_save_dir_without_clobbering() {
+    let env = env();
+    let dir = temp_dir("ns");
+    let mut s = sched(4, SLICE);
+    let mut ids = Vec::new();
+    for label in ["ns-a", "ns-b"] {
+        let mut cfg = case("gpt", label, vec![seqtru(64)], ltd(16));
+        cfg.save_dir = dir.to_string_lossy().into_owned(); // the SAME dir
+        ids.push(s.submit(JobSpec::new(cfg)).unwrap());
+    }
+    // one slice each: both jobs now have a step000003.ckpt — which would
+    // collide without per-job namespaces
+    for _ in 0..2 {
+        let id = s.next_job().unwrap();
+        s.run_slice(&env, id).unwrap();
+    }
+    let cks: Vec<PathBuf> = ids
+        .iter()
+        .map(|&id| s.job(id).unwrap().checkpoint.clone().expect("boundary snapshot"))
+        .collect();
+    assert_ne!(cks[0], cks[1], "same save_dir, same step — paths must differ");
+    for (id, ck) in ids.iter().zip(&cks) {
+        assert!(ck.exists(), "{} missing", ck.display());
+        assert!(
+            ck.to_string_lossy().contains(&format!("job-{id:06}")),
+            "{} not namespaced",
+            ck.display()
+        );
+    }
+    s.drain(&env).unwrap();
+    // identical configs in disjoint namespaces converge to identical runs
+    let ra = s.job(ids[0]).unwrap().result.as_ref().unwrap().clone();
+    let rb = s.job(ids[1]).unwrap().result.as_ref().unwrap();
+    assert_bit_identical("namespaced twins", &ra, rb);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- Failure isolation + run_cases error propagation ----------------------
+
+#[test]
+fn run_cases_propagates_a_mid_grid_failure() {
+    let env = env();
+    let good = case("gpt", "good", vec![], Routing::None);
+    let mut bad = case("gpt", "bad", vec![], Routing::None);
+    bad.family = "not-a-family".into();
+    // sequential runner: the `?` path surfaces the error to the caller
+    let err = run_cases(&env, vec![good.clone(), bad.clone(), good.clone()]).unwrap_err();
+    assert!(format!("{err:#}").contains("not-a-family"), "{err:#}");
+}
+
+#[test]
+fn scheduler_fails_only_the_bad_job() {
+    let env = env();
+    let dir = temp_dir("fail");
+    let good = case("gpt", "good", vec![seqtru(64)], ltd(16));
+    let mut bad = good.clone();
+    bad.label = "bad".into();
+    bad.family = "not-a-family".into();
+
+    let mut s = sched(4, SLICE);
+    let mut submit = |cfg: &RunConfig| {
+        let mut cfg = cfg.clone();
+        cfg.save_dir = dir.to_string_lossy().into_owned();
+        s.submit(JobSpec::new(cfg)).unwrap()
+    };
+    let a = submit(&good);
+    let b = submit(&bad);
+    let c = submit(&good);
+    s.drain(&env).unwrap();
+    assert_eq!(s.job(a).unwrap().state, JobState::Done);
+    assert_eq!(s.job(c).unwrap().state, JobState::Done);
+    let failed = s.job(b).unwrap();
+    assert_eq!(failed.state, JobState::Failed);
+    assert!(
+        failed.error.as_deref().unwrap_or("").contains("not-a-family"),
+        "{:?}",
+        failed.error
+    );
+    assert_eq!(s.stats().failed, 1);
+    assert_eq!(s.stats().completed, 2);
+
+    // the grid wrapper reports the failure after completing the rest
+    let err = run_cases_scheduled(
+        &env,
+        vec![good.clone(), bad, good],
+        2,
+        SLICE,
+        &dir.to_string_lossy(),
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("'bad'"), "{msg}");
+    assert!(msg.contains("rest of the grid completed"), "{msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- TCP control plane end-to-end -----------------------------------------
+
+#[test]
+fn control_plane_end_to_end() {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let dir = temp_dir("ctl");
+    let save_dir = dir.to_string_lossy().into_owned();
+    // The executor thread owns the environment (the runtime is
+    // single-threaded by design); clients talk over the wire.
+    let server = std::thread::spawn(move || {
+        let env = env();
+        serve_with(
+            &env,
+            listener,
+            ServeOptions {
+                sched: SchedulerConfig {
+                    max_active: 2,
+                    default_slice: SLICE,
+                    quantum: SLICE,
+                    cleanup_done: false,
+                },
+                default_family: "gpt".into(),
+            },
+        )
+        .expect("serve_with")
+    });
+
+    let mut cfg = case("gpt", "wire-job", vec![seqtru(64)], ltd(16));
+    cfg.save_dir = save_dir;
+    let resp = request(
+        &addr,
+        &Json::obj(vec![("cmd", "SUBMIT".into()), ("config", cfg.to_json())]),
+    )
+    .expect("SUBMIT");
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let id = resp.get("job").as_usize().expect("job id");
+
+    // poll STATUS until the job drains through Queued/Running/Preempted
+    let deadline = Instant::now() + Duration::from_secs(300);
+    loop {
+        let st = request(
+            &addr,
+            &Json::obj(vec![("cmd", "STATUS".into()), ("job", id.into())]),
+        )
+        .expect("STATUS");
+        let state = st.path("job.state").as_str().unwrap_or("?").to_string();
+        if state == "done" {
+            assert_eq!(
+                st.path("job.completed_steps").as_usize(),
+                Some(STEPS as usize),
+                "{st:?}"
+            );
+            break;
+        }
+        assert_ne!(state, "failed", "{st:?}");
+        assert!(Instant::now() < deadline, "job stuck in state {state}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // STATS shows the job was genuinely time-sliced on the shared runtime
+    let stats = request(&addr, &Json::obj(vec![("cmd", "STATS".into())])).expect("STATS");
+    assert!(stats.get("preemptions").as_usize().unwrap_or(0) >= 1, "{stats:?}");
+    assert_eq!(stats.get("completed").as_usize(), Some(1), "{stats:?}");
+
+    // unknown commands and bad cancels error cleanly, not fatally
+    let bad = request(&addr, &Json::obj(vec![("cmd", "NOPE".into())])).expect("bad cmd");
+    assert_eq!(bad.get("ok").as_bool(), Some(false), "{bad:?}");
+    let bad = request(
+        &addr,
+        &Json::obj(vec![("cmd", "CANCEL".into()), ("job", 99usize.into())]),
+    )
+    .expect("bad cancel");
+    assert_eq!(bad.get("ok").as_bool(), Some(false), "{bad:?}");
+
+    // DRAIN shuts the server down once every job is terminal
+    let dr = request(&addr, &Json::obj(vec![("cmd", "DRAIN".into())])).expect("DRAIN");
+    assert_eq!(dr.get("ok").as_bool(), Some(true), "{dr:?}");
+    let final_stats = server.join().expect("server thread");
+    assert_eq!(final_stats.completed, 1);
+    assert!(final_stats.preemptions >= 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- dsde pareto --jobs N parity ------------------------------------------
+
+#[test]
+fn scheduled_grid_matches_sequential_rows() {
+    let env = env();
+    let fam = env.rt.registry.family("gpt").unwrap().clone();
+    let pairs = dsde::exp::cases::fig2_pairs(STEPS, fam.max_seq, 1234, &[0.5, 1.0]);
+    let dir = temp_dir("pareto");
+    for (f, base, comp) in pairs {
+        let cases = vec![base, comp];
+        let sequential = run_cases(&env, cases.clone()).expect("sequential grid");
+        let scheduled =
+            run_cases_scheduled(&env, cases, 2, SLICE, &dir.to_string_lossy())
+                .expect("scheduled grid");
+        assert_eq!(sequential.len(), scheduled.len());
+        for (a, b) in sequential.iter().zip(&scheduled) {
+            assert_eq!(a.label, b.label, "fraction {f}: submission order preserved");
+            assert_bit_identical(&format!("pareto row {} @{f}", a.label), a, b);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
