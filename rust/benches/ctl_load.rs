@@ -1,0 +1,365 @@
+//! ctl_load — concurrent-load harness for the TCP control plane
+//! (ISSUE 6 tentpole).
+//!
+//! Hammers a live `serve_with` front end with ≥200 concurrent submitter
+//! threads: a handful submit *real* training jobs and poll them to
+//! completion; the rest pump batched `SUBMIT`s of decoy jobs and `CANCEL`
+//! them straight back, with periodic `METRICS` probes mixed in. Every
+//! client retries explicit backpressure rejects (`queue full` /
+//! `server busy`), so the bench doubles as a check that overload degrades
+//! into immediate, parseable rejects rather than stalls.
+//!
+//! Reported: client-side p50/p99 command latency, accepted-SUBMIT
+//! throughput, reject/retry counts, and the server's own `METRICS`
+//! gauges. Every real job's wire-reported `state_hash` MUST equal the
+//! same config executed sequentially on an identically-seeded
+//! environment; any drift exits non-zero so CI goes red on a
+//! concurrency-induced bit-neutrality break.
+//!
+//! `DSDE_BENCH_QUICK=1` shrinks the grid (but never below the 200
+//! submitters the tentpole promises) for the CI smoke job.
+
+use dsde::bench::{history_append, scaled, Table};
+use dsde::config::json::Json;
+use dsde::config::schema::{Bound, ClConfig, LtdConfig, Metric, Routing, RunConfig};
+use dsde::exp::run_cases;
+use dsde::orch::{serve_with, SchedStats, SchedulerConfig, ServeOptions};
+use dsde::train::TrainEnv;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// One client command over a fresh connection (connections are cheap and
+/// the server's worker pool serves one connection at a time, so holding
+/// hundreds open would measure the backlog, not the command path).
+fn try_rpc(addr: &str, line: &str) -> std::io::Result<Json> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_read_timeout(Some(Duration::from_secs(30)))?;
+    s.write_all(line.as_bytes())?;
+    s.write_all(b"\n")?;
+    let mut reply = String::new();
+    BufReader::new(s).read_line(&mut reply)?;
+    if reply.trim().is_empty() {
+        return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "no reply"));
+    }
+    Json::parse(reply.trim())
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, format!("{e}")))
+}
+
+/// Retry-on-backpressure client. Explicit rejects and dropped
+/// connections are counted and retried; anything else is returned with
+/// its end-to-end latency recorded.
+fn rpc(addr: &str, line: &str, rejects: &mut u64, lat_us: &mut Vec<u64>) -> Json {
+    for _attempt in 0..100_000 {
+        let t0 = Instant::now();
+        match try_rpc(addr, line) {
+            Ok(resp) => {
+                let rejected = resp.get("ok").as_bool() == Some(false)
+                    && resp
+                        .get("error")
+                        .as_str()
+                        .map(|e| e.contains("queue full") || e.contains("server busy"))
+                        .unwrap_or(false);
+                if rejected {
+                    *rejects += 1;
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
+                lat_us.push(t0.elapsed().as_micros() as u64);
+                return resp;
+            }
+            Err(_) => {
+                // backlog-reject drop or transient connect failure
+                *rejects += 1;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+    panic!("command never accepted after 100000 attempts: {line}");
+}
+
+fn composed(label: &str, steps: u64, max_seq: usize, seed: u64) -> RunConfig {
+    let mut c = RunConfig::baseline("gpt", steps, 3e-3);
+    c.label = label.to_string();
+    c.seed = seed;
+    c.curriculum.push(ClConfig::new(
+        Metric::SeqTru,
+        Bound::Value((max_seq / 8) as f64),
+        Bound::Value(max_seq as f64),
+        (steps as f64 * 0.6) as u64,
+    ));
+    c.routing = Routing::RandomLtd(LtdConfig::mslg(max_seq / 4, steps));
+    c
+}
+
+/// Per-submitter results, merged after the load phase.
+#[derive(Default)]
+struct Out {
+    lat_us: Vec<u64>,
+    rejects: u64,
+    submits_ok: u64,
+    /// `(label, wire state_hash, completed_steps)` for real jobs.
+    real: Option<(String, String, u64)>,
+}
+
+fn main() -> dsde::Result<()> {
+    let submitters = scaled(300, 200) as usize; // tentpole floor: ≥200 even quick
+    let real_jobs = scaled(8, 4) as usize;
+    let batch = scaled(6, 3) as usize;
+    let steps = scaled(30, 10);
+    let slice = scaled(10, 3);
+    let docs = scaled(400, 200) as usize;
+    eprintln!(
+        "== ctl_load: {submitters} submitters ({real_jobs} real x {steps} steps, \
+         rest {batch}-job decoy batches) =="
+    );
+
+    let dir = std::env::temp_dir().join(format!("dsde-ctl-load-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let save_dir = dir.to_string_lossy().into_owned();
+
+    // ---- sequential reference on an identically-seeded environment
+    let ref_env = TrainEnv::new(docs, 7)?;
+    let max_seq = ref_env.rt.registry.family("gpt")?.max_seq;
+    let mut cases = Vec::new();
+    for i in 0..real_jobs {
+        let mut c = composed(&format!("real-{i}"), steps, max_seq, 1000 + i as u64);
+        c.save_dir = save_dir.clone();
+        cases.push(c);
+    }
+    let reference = run_cases(&ref_env, cases.clone())?;
+    drop(ref_env);
+
+    // ---- live server (executor thread owns its own, identically-seeded env)
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let server = std::thread::spawn(move || -> dsde::Result<SchedStats> {
+        let env = TrainEnv::new(docs, 7)?;
+        serve_with(
+            &env,
+            listener,
+            ServeOptions {
+                sched: SchedulerConfig {
+                    max_active: 8,
+                    default_slice: slice,
+                    quantum: slice,
+                    cleanup_done: false,
+                },
+                default_family: "gpt".into(),
+                conn_threads: 16,
+                ..ServeOptions::default()
+            },
+        )
+    });
+
+    // ---- load phase
+    let t0 = Instant::now();
+    let outs: Vec<Out> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..submitters {
+            let addr = &addr;
+            let save_dir = &save_dir;
+            let real_cfg = cases.get(t).cloned();
+            handles.push(scope.spawn(move || {
+                let mut out = Out::default();
+                if let Some(cfg) = real_cfg {
+                    run_real(addr, &cfg, &mut out);
+                } else {
+                    run_decoys(addr, save_dir, t, batch, &mut out);
+                }
+                out
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("submitter thread")).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+
+    // ---- merge client-side observations
+    let mut lat: Vec<u64> = Vec::new();
+    let mut rejects = 0u64;
+    let mut submits_ok = 0u64;
+    let mut real: Vec<(String, String, u64)> = Vec::new();
+    for mut o in outs {
+        lat.append(&mut o.lat_us);
+        rejects += o.rejects;
+        submits_ok += o.submits_ok;
+        real.extend(o.real);
+    }
+    lat.sort_unstable();
+    let q = |q: f64| -> u64 {
+        if lat.is_empty() {
+            return 0;
+        }
+        lat[((q * (lat.len() - 1) as f64).round() as usize).min(lat.len() - 1)]
+    };
+    let (p50, p99) = (q(0.50), q(0.99));
+
+    // ---- server-side view, then shut down
+    let (mut r, mut l) = (0u64, Vec::new());
+    let metrics = rpc(&addr, r#"{"cmd":"METRICS"}"#, &mut r, &mut l);
+    let drain = rpc(&addr, r#"{"cmd":"DRAIN"}"#, &mut r, &mut l);
+    assert_eq!(drain.get("ok").as_bool(), Some(true), "{drain:?}");
+    let stats = server.join().expect("server thread")?;
+
+    // ---- drift check: wire-reported hashes vs the sequential reference
+    let mut t = Table::new(&["job", "steps", "state hash (wire)", "reference", "drift"]);
+    let mut identical = real.len() == real_jobs;
+    for reference in &reference {
+        let expect = format!("{:016x}", reference.state_hash);
+        let (hash, done) = real
+            .iter()
+            .find(|(label, _, _)| *label == reference.label)
+            .map(|(_, h, s)| (h.clone(), *s))
+            .unwrap_or(("MISSING".into(), 0));
+        let drift = hash != expect || done != steps;
+        identical &= !drift;
+        t.row(vec![
+            reference.label.clone(),
+            done.to_string(),
+            hash,
+            expect,
+            if drift { "DRIFT".into() } else { "ok".into() },
+        ]);
+    }
+    println!("\nreal jobs under load vs sequential reference:");
+    t.print();
+    t.save_csv("ctl_load")?;
+
+    let m = |path: &str| metrics.path(path).as_u64().unwrap_or(0);
+    println!(
+        "\nload: {} commands in {wall:.2}s from {submitters} submitters \
+         ({submits_ok} submits accepted, {:.0} submits/s, {rejects} client-side \
+         retries on explicit rejects)",
+        lat.len(),
+        submits_ok as f64 / wall.max(1e-9),
+    );
+    println!("client latency: p50 {p50}us, p99 {p99}us");
+    println!(
+        "server gauges: {} requests, rejects queue/conns/oversize {}/{}/{}, \
+         {} parse errors, server p50/p99 {}us/{}us, {} slices, {} preemptions, \
+         {} completed, {} cancelled",
+        m("requests"),
+        m("rejects.queue"),
+        m("rejects.conns"),
+        m("rejects.oversize"),
+        m("parse_errors"),
+        m("latency_us.p50"),
+        m("latency_us.p99"),
+        m("sched.slices"),
+        m("sched.preemptions"),
+        m("sched.completed"),
+        m("sched.cancelled"),
+    );
+
+    let report = Json::obj(vec![
+        ("submitters", submitters.into()),
+        ("real_jobs", real_jobs.into()),
+        ("decoy_batch", batch.into()),
+        ("commands", lat.len().into()),
+        ("wall_s", wall.into()),
+        ("submits_accepted", submits_ok.into()),
+        ("submit_throughput_per_s", (submits_ok as f64 / wall.max(1e-9)).into()),
+        ("client_reject_retries", rejects.into()),
+        ("client_p50_us", p50.into()),
+        ("client_p99_us", p99.into()),
+        ("server_requests", m("requests").into()),
+        ("server_rejects_queue", m("rejects.queue").into()),
+        ("server_rejects_conns", m("rejects.conns").into()),
+        ("server_p50_us", m("latency_us.p50").into()),
+        ("server_p99_us", m("latency_us.p99").into()),
+        ("slices", stats.slices.into()),
+        ("preemptions", stats.preemptions.into()),
+        ("completed", stats.completed.into()),
+        ("cancelled", stats.cancelled.into()),
+        ("bit_identical", identical.into()),
+    ]);
+    std::fs::create_dir_all("runs")?;
+    std::fs::write("runs/BENCH_ctl.json", report.to_string_compact())?;
+    history_append("ctl_load", &report)?;
+    println!("report -> runs/BENCH_ctl.json");
+
+    println!(
+        "\nshape check:\n  [{}] >=200 concurrent submitters\n  [{}] every real job \
+         served under load is bit-identical to its sequential reference",
+        if submitters >= 200 { "PASS" } else { "FAIL" },
+        if identical { "PASS" } else { "FAIL" }
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    if submitters < 200 || !identical {
+        // Enforcing, not advisory: concurrency must not buy drift.
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
+/// Submit one real job and poll STATUS until the server reports it done,
+/// capturing the wire-reported state hash.
+fn run_real(addr: &str, cfg: &RunConfig, out: &mut Out) {
+    let submit = Json::obj(vec![
+        ("cmd", "SUBMIT".into()),
+        ("config", cfg.to_json()),
+        ("priority", 3usize.into()), // outrank the decoy flood
+    ])
+    .to_string_compact();
+    let resp = rpc(addr, &submit, &mut out.rejects, &mut out.lat_us);
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "real SUBMIT: {resp:?}");
+    out.submits_ok += 1;
+    let id = resp.get("job").as_u64().expect("job id");
+
+    let status = Json::obj(vec![("cmd", "STATUS".into()), ("job", id.into())])
+        .to_string_compact();
+    let deadline = Instant::now() + Duration::from_secs(600);
+    loop {
+        let st = rpc(addr, &status, &mut out.rejects, &mut out.lat_us);
+        let state = st.path("job.state").as_str().unwrap_or("?").to_string();
+        if state == "done" {
+            out.real = Some((
+                cfg.label.clone(),
+                st.path("job.state_hash").as_str().unwrap_or("NO-HASH").to_string(),
+                st.path("job.completed_steps").as_u64().unwrap_or(0),
+            ));
+            return;
+        }
+        assert_ne!(state, "failed", "{st:?}");
+        assert!(Instant::now() < deadline, "job {id} stuck in state {state}");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Pump one batched SUBMIT of tiny decoy jobs, then CANCEL each straight
+/// back (a cancel that loses the race to completion is fine — the job is
+/// terminal either way). Every 8th submitter probes METRICS, which must
+/// answer connection-side even while the command queue is rejecting.
+fn run_decoys(addr: &str, save_dir: &str, t: usize, batch: usize, out: &mut Out) {
+    let entries: Vec<Json> = (0..batch)
+        .map(|m| {
+            let mut c = RunConfig::baseline("gpt", 4, 3e-3);
+            c.label = format!("decoy-{t}-{m}");
+            c.seed = (7000 + t * batch + m) as u64;
+            c.save_dir = save_dir.to_string();
+            Json::obj(vec![("config", c.to_json()), ("priority", 1usize.into())])
+        })
+        .collect();
+    let submit = Json::obj(vec![("cmd", "SUBMIT".into()), ("jobs", Json::Arr(entries))])
+        .to_string_compact();
+    let resp = rpc(addr, &submit, &mut out.rejects, &mut out.lat_us);
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "batch SUBMIT: {resp:?}");
+    let verdicts = match resp.get("jobs") {
+        Json::Arr(a) => a.clone(),
+        other => panic!("batch reply missing per-job verdicts: {other:?}"),
+    };
+    assert_eq!(verdicts.len(), batch, "one verdict per submitted entry");
+    for v in &verdicts {
+        assert_eq!(v.get("ok").as_bool(), Some(true), "decoy rejected: {v:?}");
+        out.submits_ok += 1;
+        let id = v.get("job").as_u64().expect("decoy job id");
+        let cancel = Json::obj(vec![("cmd", "CANCEL".into()), ("job", id.into())])
+            .to_string_compact();
+        let _ = rpc(addr, &cancel, &mut out.rejects, &mut out.lat_us);
+    }
+    if t % 8 == 0 {
+        let m = rpc(addr, r#"{"cmd":"METRICS"}"#, &mut out.rejects, &mut out.lat_us);
+        assert_eq!(m.get("ok").as_bool(), Some(true), "{m:?}");
+        assert!(m.get("queue_cap").as_u64().unwrap_or(0) > 0, "{m:?}");
+    }
+}

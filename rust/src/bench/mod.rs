@@ -8,9 +8,45 @@
 
 use std::time::Instant;
 
+use crate::config::json::Json;
+
 /// True when `DSDE_BENCH_QUICK=1` (make bench-quick).
 pub fn quick_mode() -> bool {
     std::env::var("DSDE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Append one record to the committed `BENCH_HISTORY.json` JSONL log.
+///
+/// The log is append-only: one compact JSON object per line, tagged with
+/// the bench name, quick/full mode, and a unix timestamp, so successive
+/// CI runs accumulate a comparable series. No-op unless
+/// `DSDE_BENCH_HISTORY=1` (benches always write their `runs/BENCH_*.json`
+/// snapshot; the history line is opt-in so local experiments don't dirty
+/// the committed log). Benches run with the package root (`rust/`) as the
+/// working directory, so the repo-root log is normally `../BENCH_HISTORY.json`.
+pub fn history_append(name: &str, report: &Json) -> crate::Result<()> {
+    if std::env::var("DSDE_BENCH_HISTORY").map(|v| v == "1").unwrap_or(false) {
+        let path = ["../BENCH_HISTORY.json", "BENCH_HISTORY.json"]
+            .iter()
+            .map(std::path::Path::new)
+            .find(|p| p.exists())
+            .unwrap_or_else(|| std::path::Path::new("BENCH_HISTORY.json"))
+            .to_path_buf();
+        let ts = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let line = Json::obj(vec![
+            ("bench", name.into()),
+            ("quick", quick_mode().into()),
+            ("unix_time", ts.into()),
+            ("report", report.clone()),
+        ]);
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(&path)?;
+        writeln!(f, "{}", line.to_string_compact())?;
+    }
+    Ok(())
 }
 
 /// Pick a scale parameter depending on quick mode.

@@ -1,26 +1,43 @@
-//! Minimal JSON value type, parser and writer.
+//! Minimal JSON value type, parser, writer — and a zero-alloc lazy field
+//! scanner for request hot paths.
 //!
 //! The offline vendor set has no serde, so the coordinator carries its own
 //! small JSON layer. It is used for `artifacts/manifest.json` (emitted by
 //! `Registry::manifest_text` / `dsde synth`), run configuration files,
-//! checkpoint headers ([`crate::train::checkpoint`]), and the machine-
-//! readable run logs under `runs/`.
+//! checkpoint headers ([`crate::train::checkpoint`]), the control-plane
+//! wire protocol ([`crate::orch::server`]), and the machine-readable run
+//! logs under `runs/`.
 //!
 //! Supported: the full JSON grammar except `\u` surrogate pairs beyond the
-//! BMP are passed through unvalidated. Numbers parse as f64 (adequate: the
-//! manifest only carries shapes and bucket tables).
+//! BMP are passed through unvalidated. Numbers written in integer form
+//! (no `.`/`e`) are kept **losslessly** as [`Json::Int`]/[`Json::UInt`] —
+//! wire integers such as job ids, step counts and byte counters round-trip
+//! exactly across the whole u64/i64 range instead of being squeezed
+//! through f64 (which silently corrupts above 2^53). Non-integral numbers
+//! (and integers beyond u64::MAX) are held as f64; the integer accessors
+//! *reject* values a f64 cannot represent exactly rather than truncating.
+//!
+//! [`LazyScan`] is the allocation-free complement for hot paths that need
+//! a handful of fields out of a request line: it scans the raw bytes for
+//! a top-level key and returns borrowed slices / parsed integers without
+//! building a `Json` tree (see DESIGN.md §Control-plane for the rationale
+//! and the ~33x lazy-scan win it is modeled on).
 
 use std::collections::BTreeMap;
 use std::fmt;
 
-/// A JSON value (numbers are f64; object keys are sorted via `BTreeMap`).
+/// A JSON value (object keys are sorted via `BTreeMap`).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
     /// `null`
     Null,
     /// `true` / `false`
     Bool(bool),
-    /// Any JSON number, held as f64.
+    /// An integral number within i64 range, held losslessly.
+    Int(i64),
+    /// An integral number in `(i64::MAX, u64::MAX]`, held losslessly.
+    UInt(u64),
+    /// A non-integral number (or an integer beyond u64 range), as f64.
     Num(f64),
     /// A string.
     Str(String),
@@ -29,6 +46,11 @@ pub enum Json {
     /// An object (key-sorted).
     Obj(BTreeMap<String, Json>),
 }
+
+/// Largest magnitude at which every integer is exactly representable in
+/// f64 (2^53). `Json::Num` values beyond it are rejected — not truncated —
+/// by the integer accessors.
+const F64_EXACT_INT: f64 = 9_007_199_254_740_992.0;
 
 impl Json {
     /// Parse a complete JSON document (trailing characters are an error).
@@ -45,22 +67,47 @@ impl Json {
 
     // -- typed accessors ---------------------------------------------------
 
-    /// The number, if this is a `Num`.
+    /// The number as f64, if this is numeric. Integral values convert
+    /// (lossy above 2^53 — the caller explicitly asked for a float).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::Int(i) => Some(*i as f64),
+            Json::UInt(u) => Some(*u as f64),
             _ => None,
         }
     }
 
-    /// The number as a usize, if it is a non-negative integer.
+    /// The number as a usize, if it is a non-negative integer that fits.
+    /// f64-held values beyond 2^53 are rejected, never truncated.
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().filter(|n| *n >= 0.0 && n.fract() == 0.0).map(|n| n as usize)
+        self.as_u64().and_then(|u| usize::try_from(u).ok())
     }
 
-    /// The number as an i64, if it is an integer.
+    /// The number as an i64, if it is an integer in i64 range. Lossless
+    /// for parsed integer literals; f64-held values are accepted only
+    /// within the exactly-representable ±2^53 window.
     pub fn as_i64(&self) -> Option<i64> {
-        self.as_f64().filter(|n| n.fract() == 0.0).map(|n| n as i64)
+        match self {
+            Json::Int(i) => Some(*i),
+            Json::UInt(_) => None, // > i64::MAX by construction
+            Json::Num(n) if n.fract() == 0.0 && n.abs() <= F64_EXACT_INT => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    /// The number as a u64, if it is a non-negative integer. Lossless for
+    /// parsed integer literals across the whole u64 range; f64-held values
+    /// are accepted only within the exactly-representable 2^53 window.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Int(i) if *i >= 0 => Some(*i as u64),
+            Json::UInt(u) => Some(*u),
+            Json::Num(n) if n.fract() == 0.0 && (0.0..=F64_EXACT_INT).contains(n) => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
     }
 
     /// The string, if this is a `Str`.
@@ -179,6 +226,8 @@ impl Json {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Int(i) => out.push_str(&format!("{i}")),
+            Json::UInt(u) => out.push_str(&format!("{u}")),
             Json::Num(n) => {
                 if n.fract() == 0.0 && n.abs() < 1e15 {
                     out.push_str(&format!("{}", *n as i64));
@@ -220,7 +269,25 @@ impl From<f64> for Json {
 }
 impl From<usize> for Json {
     fn from(n: usize) -> Json {
-        Json::Num(n as f64)
+        Json::from(n as u64)
+    }
+}
+impl From<u64> for Json {
+    fn from(n: u64) -> Json {
+        match i64::try_from(n) {
+            Ok(i) => Json::Int(i),
+            Err(_) => Json::UInt(n),
+        }
+    }
+}
+impl From<i64> for Json {
+    fn from(n: i64) -> Json {
+        Json::Int(n)
+    }
+}
+impl From<u32> for Json {
+    fn from(n: u32) -> Json {
+        Json::Int(n as i64)
     }
 }
 impl From<&str> for Json {
@@ -431,6 +498,7 @@ impl<'a> Parser<'a> {
 
     fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.pos;
+        let mut integral = true;
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
@@ -438,12 +506,14 @@ impl<'a> Parser<'a> {
             self.pos += 1;
         }
         if self.peek() == Some(b'.') {
+            integral = false;
             self.pos += 1;
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.pos += 1;
             }
         }
         if matches!(self.peek(), Some(b'e' | b'E')) {
+            integral = false;
             self.pos += 1;
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.pos += 1;
@@ -453,9 +523,219 @@ impl<'a> Parser<'a> {
             }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        if integral {
+            // Lossless integer fast path: i64 range, then the u64 tail;
+            // only integers beyond u64::MAX degrade to f64 (and are then
+            // rejected, not truncated, by the integer accessors).
+            if let Ok(i) = text.parse::<i64>() {
+                return Ok(Json::Int(i));
+            }
+            if let Ok(u) = text.parse::<u64>() {
+                return Ok(Json::UInt(u));
+            }
+        }
         text.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
+    }
+}
+
+// -- lazy field scanner ------------------------------------------------------
+
+/// Allocation-free field extraction over one raw JSON object line.
+///
+/// `LazyScan` never builds a [`Json`] tree: each lookup walks the bytes
+/// once, skipping values it does not need (strings escape-aware, containers
+/// by bracket depth). The control-plane front end uses it to pull `cmd`,
+/// `job` and SUBMIT's top-level knobs out of a request without paying for
+/// a full parse of the (possibly large) embedded run config.
+///
+/// It is deliberately forgiving: a malformed line simply yields `None`,
+/// and the caller falls back to [`Json::parse`] for a real error message.
+/// Keys written with escape sequences are not matched (the wire protocol's
+/// keys are plain ASCII).
+pub struct LazyScan<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> LazyScan<'a> {
+    /// Wrap one raw request line (expected to be a JSON object).
+    pub fn new(line: &'a str) -> LazyScan<'a> {
+        LazyScan { bytes: line.as_bytes() }
+    }
+
+    /// The raw value slice (quotes/braces included, unescaped) for a
+    /// top-level `key`, or `None` if the key is absent or the line is not
+    /// a well-formed object up to that point.
+    pub fn field_raw(&self, key: &str) -> Option<&'a str> {
+        let b = self.bytes;
+        let mut p = 0usize;
+        scan_ws(b, &mut p);
+        if b.get(p) != Some(&b'{') {
+            return None;
+        }
+        p += 1;
+        loop {
+            scan_ws(b, &mut p);
+            if b.get(p) != Some(&b'"') {
+                return None; // includes '}' (key absent) and malformed
+            }
+            let kstart = p + 1;
+            if !scan_string(b, &mut p) {
+                return None;
+            }
+            let kend = p - 1;
+            scan_ws(b, &mut p);
+            if b.get(p) != Some(&b':') {
+                return None;
+            }
+            p += 1;
+            scan_ws(b, &mut p);
+            let vstart = p;
+            if !scan_value(b, &mut p) {
+                return None;
+            }
+            if &b[kstart..kend] == key.as_bytes() {
+                return std::str::from_utf8(&b[vstart..p]).ok();
+            }
+            scan_ws(b, &mut p);
+            match b.get(p) {
+                Some(b',') => p += 1,
+                _ => return None, // '}' (key absent), garbage, or EOF
+            }
+        }
+    }
+
+    /// String-value fast path: the inner slice of an escape-free string.
+    /// Values containing `\` escapes return `None` — fall back to a full
+    /// parse for those (wire commands and families never need escapes).
+    pub fn field_str(&self, key: &str) -> Option<&'a str> {
+        let raw = self.field_raw(key)?;
+        let rb = raw.as_bytes();
+        if rb.len() >= 2 && rb[0] == b'"' && rb[rb.len() - 1] == b'"' {
+            let inner = &raw[1..raw.len() - 1];
+            if !inner.bytes().any(|c| c == b'\\') {
+                return Some(inner);
+            }
+        }
+        None
+    }
+
+    /// Unsigned-integer value: a pure digit run parsed losslessly as u64
+    /// (no f64 round-trip). Floats, negatives and overflow yield `None`.
+    pub fn field_u64(&self, key: &str) -> Option<u64> {
+        let raw = self.field_raw(key)?;
+        if raw.is_empty() || !raw.bytes().all(|c| c.is_ascii_digit()) {
+            return None;
+        }
+        raw.parse::<u64>().ok()
+    }
+
+    /// Split a raw array slice (e.g. `field_raw("jobs")`) into raw element
+    /// slices. `None` if `raw` is not exactly one well-formed array.
+    pub fn array_elems(raw: &str) -> Option<Vec<&str>> {
+        let b = raw.as_bytes();
+        let mut p = 0usize;
+        scan_ws(b, &mut p);
+        if b.get(p) != Some(&b'[') {
+            return None;
+        }
+        p += 1;
+        let mut out = Vec::new();
+        scan_ws(b, &mut p);
+        if b.get(p) == Some(&b']') {
+            p += 1;
+        } else {
+            loop {
+                scan_ws(b, &mut p);
+                let start = p;
+                if !scan_value(b, &mut p) {
+                    return None;
+                }
+                out.push(std::str::from_utf8(&b[start..p]).ok()?);
+                scan_ws(b, &mut p);
+                match b.get(p) {
+                    Some(b',') => p += 1,
+                    Some(b']') => {
+                        p += 1;
+                        break;
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        scan_ws(b, &mut p);
+        if p == b.len() {
+            Some(out)
+        } else {
+            None
+        }
+    }
+}
+
+fn scan_ws(b: &[u8], p: &mut usize) {
+    while matches!(b.get(*p), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+        *p += 1;
+    }
+}
+
+/// Skip one string; `*p` must sit on the opening quote. False on EOF.
+fn scan_string(b: &[u8], p: &mut usize) -> bool {
+    *p += 1;
+    while let Some(&c) = b.get(*p) {
+        match c {
+            b'"' => {
+                *p += 1;
+                return true;
+            }
+            b'\\' => *p += 2,
+            _ => *p += 1,
+        }
+    }
+    false
+}
+
+/// Skip one JSON value of any kind. Containers are skipped by bracket
+/// depth (string-aware, so braces inside string values do not count);
+/// scalars run to the next delimiter. False on EOF/malformed.
+fn scan_value(b: &[u8], p: &mut usize) -> bool {
+    match b.get(*p) {
+        Some(b'"') => scan_string(b, p),
+        Some(b'{' | b'[') => {
+            let mut depth = 0usize;
+            while let Some(&c) = b.get(*p) {
+                match c {
+                    b'"' => {
+                        if !scan_string(b, p) {
+                            return false;
+                        }
+                        continue;
+                    }
+                    b'{' | b'[' => depth += 1,
+                    b'}' | b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            *p += 1;
+                            return true;
+                        }
+                    }
+                    _ => {}
+                }
+                *p += 1;
+            }
+            false
+        }
+        Some(_) => {
+            let start = *p;
+            while let Some(&c) = b.get(*p) {
+                if matches!(c, b',' | b'}' | b']' | b' ' | b'\t' | b'\n' | b'\r') {
+                    break;
+                }
+                *p += 1;
+            }
+            *p > start
+        }
+        None => false,
     }
 }
 
@@ -511,9 +791,109 @@ mod tests {
     #[test]
     fn accessor_types() {
         let v = Json::parse(r#"{"n": 3, "f": 3.5, "neg": -2}"#).unwrap();
+        assert_eq!(v.get("n"), &Json::Int(3));
         assert_eq!(v.get("n").as_usize(), Some(3));
         assert_eq!(v.get("f").as_usize(), None);
         assert_eq!(v.get("neg").as_usize(), None);
         assert_eq!(v.get("neg").as_i64(), Some(-2));
+    }
+
+    #[test]
+    fn integers_parse_losslessly() {
+        // 2^53 + 1: the first integer f64 cannot represent.
+        let v = Json::parse("9007199254740993").unwrap();
+        assert_eq!(v, Json::Int(9007199254740993));
+        assert_eq!(v.as_u64(), Some(9007199254740993));
+        assert_eq!(v.to_string_compact(), "9007199254740993");
+
+        let v = Json::parse(&format!("{}", i64::MAX)).unwrap();
+        assert_eq!(v.as_i64(), Some(i64::MAX));
+        let v = Json::parse(&format!("{}", i64::MIN)).unwrap();
+        assert_eq!(v.as_i64(), Some(i64::MIN));
+        assert_eq!(v.as_u64(), None);
+
+        // The u64 tail above i64::MAX.
+        let v = Json::parse(&format!("{}", u64::MAX)).unwrap();
+        assert_eq!(v, Json::UInt(u64::MAX));
+        assert_eq!(v.as_u64(), Some(u64::MAX));
+        assert_eq!(v.as_i64(), None);
+        assert_eq!(v.to_string_compact(), format!("{}", u64::MAX));
+    }
+
+    #[test]
+    fn out_of_range_rejected_not_truncated() {
+        // Integer beyond u64::MAX degrades to f64 and is then rejected.
+        let v = Json::parse("18446744073709551616").unwrap();
+        assert!(matches!(v, Json::Num(_)));
+        assert_eq!(v.as_u64(), None);
+        assert_eq!(v.as_i64(), None);
+        // Float-held integers beyond the 2^53 exact window are rejected.
+        let v = Json::parse("9007199254740993.0").unwrap();
+        assert_eq!(v.as_u64(), None);
+        assert_eq!(v.as_i64(), None);
+        // …and within the window they are accepted.
+        let v = Json::parse("9007199254740992.0").unwrap();
+        assert_eq!(v.as_u64(), Some(9007199254740992));
+    }
+
+    #[test]
+    fn from_integer_conversions() {
+        assert_eq!(Json::from(3usize), Json::Int(3));
+        assert_eq!(Json::from(u64::MAX), Json::UInt(u64::MAX));
+        assert_eq!(Json::from(-5i64), Json::Int(-5));
+        assert_eq!(Json::from(7u32), Json::Int(7));
+    }
+
+    #[test]
+    fn lazy_scan_matches_full_parse() {
+        let line = r#"{"cmd":"SUBMIT","job":18446744073709551615,"family":"gpt","config":{"steps":[1,2],"note":"a}b"},"priority": 2 }"#;
+        let scan = LazyScan::new(line);
+        let full = Json::parse(line).unwrap();
+        assert_eq!(scan.field_str("cmd"), full.get("cmd").as_str());
+        assert_eq!(scan.field_u64("job"), full.get("job").as_u64());
+        assert_eq!(scan.field_u64("job"), Some(u64::MAX));
+        assert_eq!(scan.field_str("family"), Some("gpt"));
+        assert_eq!(scan.field_u64("priority"), Some(2));
+        // Raw subtree extraction parses to the same value as the full tree.
+        let cfg_raw = scan.field_raw("config").unwrap();
+        assert_eq!(&Json::parse(cfg_raw).unwrap(), full.get("config"));
+        assert_eq!(scan.field_raw("missing"), None);
+    }
+
+    #[test]
+    fn lazy_scan_ignores_decoys_inside_strings() {
+        // A value containing what looks like a later key/value pair.
+        let line = r#"{"note":"\"cmd\": \"FAKE\", {[","cmd":"STATUS"}"#;
+        assert_eq!(LazyScan::new(line).field_str("cmd"), Some("STATUS"));
+        // Braces and quotes nested inside skipped containers.
+        let line = r#"{"a":{"x":"}","y":["]",-1.5]},"cmd":"DRAIN"}"#;
+        assert_eq!(LazyScan::new(line).field_str("cmd"), Some("DRAIN"));
+    }
+
+    #[test]
+    fn lazy_scan_rejects_malformed_and_escaped() {
+        assert_eq!(LazyScan::new("STATUS").field_raw("cmd"), None);
+        assert_eq!(LazyScan::new(r#"{"cmd":"#).field_raw("cmd"), None);
+        assert_eq!(LazyScan::new(r#"{"cmd" "STATUS"}"#).field_raw("cmd"), None);
+        // Escaped string values fall back to the full parser.
+        assert_eq!(LazyScan::new(r#"{"cmd":"A\nB"}"#).field_str("cmd"), None);
+        assert!(LazyScan::new(r#"{"cmd":"A\nB"}"#).field_raw("cmd").is_some());
+        // Floats and negatives are not u64s.
+        assert_eq!(LazyScan::new(r#"{"n":1.5}"#).field_u64("n"), None);
+        assert_eq!(LazyScan::new(r#"{"n":-4}"#).field_u64("n"), None);
+    }
+
+    #[test]
+    fn lazy_scan_array_elems() {
+        let raw = r#" [ {"a":1}, "x,y", [1,2] , 7 ] "#;
+        let elems = LazyScan::array_elems(raw).unwrap();
+        assert_eq!(elems.len(), 4);
+        assert_eq!(Json::parse(elems[0]).unwrap().get("a").as_u64(), Some(1));
+        assert_eq!(elems[1], r#""x,y""#);
+        assert_eq!(elems[3], "7");
+        assert_eq!(LazyScan::array_elems("[]").unwrap().len(), 0);
+        assert_eq!(LazyScan::array_elems("[1,]"), None);
+        assert_eq!(LazyScan::array_elems("{}"), None);
+        assert_eq!(LazyScan::array_elems("[1] x"), None);
     }
 }

@@ -27,16 +27,22 @@
 //! dsde synth --out DIR              emit manifest.json + the legacy
 //!                                   surrogate module grid (cross-check
 //!                                   target for gen_stub_artifacts.py)
-//! dsde serve [--addr A] [--docs N] [--jobs J] [--slice S]
+//! dsde serve [--addr A] [--docs N] [--jobs J] [--default-slice S]
+//!            [--conn-threads T] [--queue-cap Q] [--conn-backlog B]
+//!            [--max-request-bytes M]
 //!                                   host the multi-tenant scheduler's TCP
 //!                                   control plane (J-wide executor pool,
-//!                                   S-step time slices)
+//!                                   S-step time slices, T-wide connection
+//!                                   pool over bounded queues — overload
+//!                                   rejects explicitly, never stalls)
 //! dsde submit [--addr A] [train flags] [--priority P] [--share W] [--slice S]
 //!                                   submit a run to a control plane
 //! dsde status [--addr A] [--job N]  job table (or one job) + stats
 //! dsde cancel --job N [--addr A]    cancel a job (its last boundary
 //!                                   snapshot is kept and stays resumable)
 //! dsde drain [--addr A]             stop admission, exit when all jobs end
+//! dsde metrics [--addr A]           serving gauges: queue depth, rejects,
+//!                                   p50/p99 command latency, slice counters
 //! ```
 
 use anyhow::{anyhow, bail};
@@ -50,7 +56,7 @@ use dsde::data::corpus::{Corpus, CorpusConfig};
 use dsde::data::dataset::{BertDataset, GptDataset};
 use dsde::data::tokenizer::Tokenizer;
 use dsde::exp::{relative_quality, run_cases, run_cases_scheduled};
-use dsde::orch::{request, serve_with, SchedulerConfig, ServeOptions};
+use dsde::orch::{request, serve_with, SchedulerConfig, ServeOptions, DEFAULT_SERVE_SLICE};
 use dsde::sim::{max_seq_tile, AttentionTile};
 use dsde::train::TrainEnv;
 
@@ -66,7 +72,8 @@ const VALUE_KEYS: &[&str] = &[
     "docs", "workers", "metric", "preset", "family", "steps", "lr", "seed",
     "config", "eval-every", "out", "prefetch-depth", "loader-workers",
     "replicas", "dispatch", "save-every", "save-dir", "resume", "label",
-    "addr", "jobs", "slice", "priority", "share", "job",
+    "addr", "jobs", "slice", "priority", "share", "job", "default-slice",
+    "conn-threads", "queue-cap", "conn-backlog", "max-request-bytes",
 ];
 
 fn run(argv: &[String]) -> dsde::Result<()> {
@@ -83,10 +90,11 @@ fn run(argv: &[String]) -> dsde::Result<()> {
         Some("status") => status(&args),
         Some("cancel") => cancel(&args),
         Some("drain") => drain(&args),
+        Some("metrics") => metrics(&args),
         Some(cmd) => {
             bail!(
                 "unknown command '{cmd}' (try: info, roofline, analyze, train, pareto, \
-                 synth, serve, submit, status, cancel, drain)"
+                 synth, serve, submit, status, cancel, drain, metrics)"
             )
         }
         None => {
@@ -98,7 +106,7 @@ fn run(argv: &[String]) -> dsde::Result<()> {
 
 const HELP: &str = "dsde — DeepSpeed Data Efficiency reproduction
 commands: info | roofline | analyze | train | pareto | synth
-          serve | submit | status | cancel | drain   (see README.md)";
+          serve | submit | status | cancel | drain | metrics   (see README.md)";
 
 /// Default control-plane address for `serve`/`submit`/`status`/`cancel`.
 const DEFAULT_ADDR: &str = "127.0.0.1:4800";
@@ -398,22 +406,38 @@ fn serve(args: &Args) -> dsde::Result<()> {
     let addr = args.get_str("addr", DEFAULT_ADDR).to_string();
     let listener = std::net::TcpListener::bind(&addr)?;
     let bound = listener.local_addr()?;
+    // --default-slice (falling back to the older --slice spelling) must
+    // stay finite: an unsliced job would block STATUS/CANCEL/DRAIN for its
+    // whole duration. 0 is coerced by serve_with (see DEFAULT_SERVE_SLICE).
+    let slice = args.get_u64("default-slice", args.get_u64("slice", DEFAULT_SERVE_SLICE)?)?;
     let sched = SchedulerConfig {
         max_active: args.get_u64("jobs", 4)?.max(1) as usize,
-        default_slice: args.get_u64("slice", 25)?,
+        default_slice: slice,
         ..SchedulerConfig::default()
     };
+    let defaults = ServeOptions::default();
+    let opts = ServeOptions {
+        sched,
+        default_family: args.get_str("family", "gpt").to_string(),
+        conn_threads: args.get_u64("conn-threads", defaults.conn_threads as u64)?.max(1) as usize,
+        queue_cap: args.get_u64("queue-cap", defaults.queue_cap as u64)?.max(1) as usize,
+        conn_backlog: args.get_u64("conn-backlog", defaults.conn_backlog as u64)?.max(1) as usize,
+        max_request_bytes: args
+            .get_u64("max-request-bytes", defaults.max_request_bytes as u64)?
+            as usize,
+        ..defaults
+    };
     println!(
-        "dsde control plane listening on {bound} (pool {}, slice {} steps)",
-        sched.max_active, sched.default_slice
+        "dsde control plane listening on {bound} (executor pool {}, slice {} steps, \
+         {} conn threads, queue cap {})",
+        opts.sched.max_active,
+        if opts.sched.default_slice == 0 { DEFAULT_SERVE_SLICE } else { opts.sched.default_slice },
+        opts.conn_threads,
+        opts.queue_cap
     );
     println!("building shared environment ({} docs)...", args.get_u64("docs", 1000)?);
     let env = TrainEnv::new(args.get_u64("docs", 1000)? as usize, 7)?;
-    let stats = serve_with(
-        &env,
-        listener,
-        ServeOptions { sched, default_family: args.get_str("family", "gpt").to_string() },
-    )?;
+    let stats = serve_with(&env, listener, opts)?;
     println!(
         "drained: {} slice(s), {} preemption(s), {} done / {} failed / {} cancelled",
         stats.slices, stats.preemptions, stats.completed, stats.failed, stats.cancelled
@@ -468,7 +492,7 @@ fn status(args: &Args) -> dsde::Result<()> {
     let addr = args.get_str("addr", DEFAULT_ADDR);
     let mut req = vec![("cmd", Json::from("STATUS"))];
     if let Some(id) = args.get("job") {
-        req.push(("job", Json::Num(id.parse::<u64>()? as f64)));
+        req.push(("job", Json::from(id.parse::<u64>()?)));
     }
     let resp = request(addr, &Json::obj(req))?;
     expect_ok(&resp)?;
@@ -524,6 +548,56 @@ fn cancel(args: &Args) -> dsde::Result<()> {
         Some(ck) => println!("; last boundary snapshot kept at {ck} (resumable)"),
         None => println!(" (never ran; no snapshot)"),
     }
+    Ok(())
+}
+
+/// Print the serving front end's gauges: queue depth, rejects, p50/p99
+/// command latency, scheduler slice counters and the shared cache.
+fn metrics(args: &Args) -> dsde::Result<()> {
+    let addr = args.get_str("addr", DEFAULT_ADDR);
+    let m = request(addr, &Json::obj(vec![("cmd", "METRICS".into())]))?;
+    expect_ok(&m)?;
+    let u = |path: &str| m.path(path).as_u64().unwrap_or(0);
+    println!(
+        "queue: {}/{} deep, {} inflight, executor {}",
+        u("queue_depth"),
+        u("queue_cap"),
+        u("inflight"),
+        if u("executor_busy") == 1 { "busy" } else { "idle" }
+    );
+    println!(
+        "conns: {} active / {} total; requests: {} ({} submitted)",
+        u("conns_active"),
+        u("conns_total"),
+        u("requests"),
+        u("submitted")
+    );
+    println!(
+        "rejects: {} queue-full, {} backlog, {} oversize; {} parse error(s), \
+         {} write error(s)",
+        u("rejects.queue"),
+        u("rejects.conns"),
+        u("rejects.oversize"),
+        u("parse_errors"),
+        u("write_errors")
+    );
+    println!(
+        "command latency: p50 {}us p99 {}us over {} request(s)",
+        u("latency_us.p50"),
+        u("latency_us.p99"),
+        u("latency_us.count")
+    );
+    println!(
+        "scheduler: {} job(s), {} slice(s), {} preemption(s), \
+         {} done / {} failed / {} cancelled",
+        u("sched.jobs"),
+        u("sched.slices"),
+        u("sched.preemptions"),
+        u("sched.completed"),
+        u("sched.failed"),
+        u("sched.cancelled")
+    );
+    println!("shared cache: {} hits / {} misses", u("cache.hits"), u("cache.misses"));
     Ok(())
 }
 

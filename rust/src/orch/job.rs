@@ -9,7 +9,7 @@
 //! restore — so an arbitrarily time-sliced job is bit-identical to an
 //! uninterrupted one (`tests/scheduler.rs`).
 
-use crate::config::json::Json;
+use crate::config::json::{Json, LazyScan};
 use crate::config::schema::{run_config_from_json, RunConfig};
 use crate::train::RunResult;
 use crate::Result;
@@ -122,20 +122,76 @@ impl JobSpec {
     }
 
     /// Parse the `SUBMIT` wire form (missing envelope fields default to
-    /// priority 1 / share 1 / scheduler-default slice).
+    /// priority 1 / share 1 / scheduler-default slice). Out-of-range
+    /// envelope values are rejected, never truncated.
     pub fn from_json(v: &Json, default_family: &str) -> Result<JobSpec> {
         let mut spec = JobSpec::new(run_config_from_json(v.get("config"), default_family)?);
-        if let Some(p) = v.get("priority").as_usize() {
-            spec.priority = p as u32;
-        }
-        if let Some(s) = v.get("share").as_usize() {
-            spec.share = s as u32;
-        }
-        if let Some(m) = v.get("max_slice_steps").as_usize() {
-            spec.max_slice_steps = m as u64;
+        spec.priority = envelope_u32(v, "priority", spec.priority)?;
+        spec.share = envelope_u32(v, "share", spec.share)?;
+        if !matches!(v.get("max_slice_steps"), Json::Null) {
+            spec.max_slice_steps = v
+                .get("max_slice_steps")
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("max_slice_steps must be a u64 integer"))?;
         }
         spec.validate()?;
         Ok(spec)
+    }
+
+    /// Parse one `SUBMIT` entry straight from its raw request bytes. The
+    /// lazy-scan fast path for the serving front end: the envelope knobs
+    /// come out of [`LazyScan`] without building a tree, and only the
+    /// `config` subtree (when present) pays for a full parse. Semantics
+    /// match [`JobSpec::from_json`] on the envelope fields it knows; any
+    /// shape the scanner cannot handle falls back to the full parser, so
+    /// error messages stay identical.
+    pub fn from_submit_entry(raw: &str, default_family: &str) -> Result<JobSpec> {
+        let scan = LazyScan::new(raw);
+        let config = match scan.field_raw("config") {
+            Some(cfg_raw) => {
+                let v = Json::parse(cfg_raw)
+                    .map_err(|e| anyhow::anyhow!("bad config subtree: {e}"))?;
+                run_config_from_json(&v, default_family)?
+            }
+            // Absent key and malformed line look the same to the scanner;
+            // a full parse distinguishes them (and reports the position).
+            None => match Json::parse(raw) {
+                Ok(v) => return JobSpec::from_json(&v, default_family),
+                Err(e) => bail!("bad request: {e}"),
+            },
+        };
+        let mut spec = JobSpec::new(config);
+        for (key, slot) in [("priority", &mut spec.priority), ("share", &mut spec.share)] {
+            if scan.field_raw(key).is_some() {
+                let u = scan
+                    .field_u64(key)
+                    .ok_or_else(|| anyhow::anyhow!("{key} must be a u64 integer"))?;
+                *slot = u32::try_from(u)
+                    .map_err(|_| anyhow::anyhow!("{key} {u} out of range (max {})", u32::MAX))?;
+            }
+        }
+        if scan.field_raw("max_slice_steps").is_some() {
+            spec.max_slice_steps = scan
+                .field_u64("max_slice_steps")
+                .ok_or_else(|| anyhow::anyhow!("max_slice_steps must be a u64 integer"))?;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+/// A u32 envelope field: absent → `default`, present → must be an
+/// integer that fits (rejected, not truncated, otherwise).
+fn envelope_u32(v: &Json, key: &str, default: u32) -> Result<u32> {
+    match v.get(key) {
+        Json::Null => Ok(default),
+        field => {
+            let u = field
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("{key} must be a u64 integer"))?;
+            u32::try_from(u)
+                .map_err(|_| anyhow::anyhow!("{key} {u} out of range (max {})", u32::MAX))
+        }
     }
 }
 
@@ -185,6 +241,12 @@ impl Job {
     /// Steps still to execute.
     pub fn remaining_steps(&self) -> u64 {
         self.spec.config.total_steps.saturating_sub(self.completed_steps)
+    }
+
+    /// Current DRR credit in steps (read-only observability; the
+    /// scheduler owns the bookkeeping — see `orch::scheduler`).
+    pub fn deficit(&self) -> i64 {
+        self.deficit
     }
 
     /// Enforced state-machine transition.
@@ -298,5 +360,47 @@ mod tests {
 
         spec.share = 0;
         assert!(spec.validate().is_err(), "share 0 would never earn credit");
+    }
+
+    #[test]
+    fn envelope_rejects_out_of_range() {
+        let j = Json::parse(r#"{"config":{"total_steps":5},"priority":4294967296}"#).unwrap();
+        let err = JobSpec::from_json(&j, "gpt").unwrap_err();
+        assert!(format!("{err}").contains("out of range"), "{err}");
+        let j = Json::parse(r#"{"config":{"total_steps":5},"share":1.5}"#).unwrap();
+        assert!(JobSpec::from_json(&j, "gpt").is_err(), "non-integer share");
+    }
+
+    #[test]
+    fn submit_entry_lazy_path_matches_full_parse() {
+        let mut spec = JobSpec::new(RunConfig::baseline("bert", 20, 1e-3));
+        spec.priority = 3;
+        spec.share = 2;
+        spec.max_slice_steps = 5;
+        let raw = spec.to_json().to_string_compact();
+        let lazy = JobSpec::from_submit_entry(&raw, "gpt").unwrap();
+        let full = JobSpec::from_json(&Json::parse(&raw).unwrap(), "gpt").unwrap();
+        assert_eq!(lazy.config.family, full.config.family);
+        assert_eq!(lazy.config.total_steps, full.config.total_steps);
+        assert_eq!(
+            (lazy.priority, lazy.share, lazy.max_slice_steps),
+            (full.priority, full.share, full.max_slice_steps)
+        );
+
+        // envelope defaults without a config key fall back to the full
+        // parser and still succeed / fail identically
+        let d = JobSpec::from_submit_entry(r#"{"config":{"total_steps":5}}"#, "gpt").unwrap();
+        assert_eq!((d.priority, d.share, d.max_slice_steps), (1, 1, 0));
+        assert!(JobSpec::from_submit_entry("not json", "gpt").is_err());
+        let err =
+            JobSpec::from_submit_entry(r#"{"config":{"total_steps":5},"share":0}"#, "gpt")
+                .unwrap_err();
+        assert!(format!("{err}").contains("share"), "{err}");
+        let err = JobSpec::from_submit_entry(
+            r#"{"config":{"total_steps":5},"priority":4294967296}"#,
+            "gpt",
+        )
+        .unwrap_err();
+        assert!(format!("{err}").contains("out of range"), "{err}");
     }
 }

@@ -7,12 +7,18 @@
 //! [`scheduler`] time-slices jobs across the shared runtime (preemption =
 //! checkpoint-save + requeue, resume = the fingerprint-validated restore,
 //! so every preempted job finishes bit-identical to its uninterrupted
-//! run); [`server`] exposes `SUBMIT`/`STATUS`/`CANCEL`/`DRAIN`/`STATS`
-//! over newline-delimited JSON on TCP, surfaced as the `dsde serve` /
-//! `submit` / `status` / `cancel` / `drain` CLI subcommands.
+//! run); [`server`] is the serving front end — a fixed-size connection
+//! pool with bounded queues and explicit backpressure exposing
+//! `SUBMIT` (single or batched) / `STATUS` / `CANCEL` / `DRAIN` /
+//! `STATS` / `METRICS` over newline-delimited JSON on TCP, surfaced as
+//! the `dsde serve` / `submit` / `status` / `cancel` / `drain` /
+//! `metrics` CLI subcommands.
 //!
-//! See DESIGN.md §Job-scheduler for the policy and wire protocol, and
-//! `tests/scheduler.rs` for the bit-identity invariant suite.
+//! See DESIGN.md §Job-scheduler for the policy, §Control-plane for the
+//! wire protocol and front-end architecture, `tests/scheduler.rs` for the
+//! bit-identity invariant suite, `tests/ctl_protocol.rs` for the wire
+//! robustness suite, and `benches/ctl_load.rs` for the concurrent-load
+//! harness.
 
 pub mod job;
 pub mod scheduler;
@@ -20,4 +26,4 @@ pub mod server;
 
 pub use job::{Job, JobSpec, JobState};
 pub use scheduler::{SchedStats, Scheduler, SchedulerConfig};
-pub use server::{request, serve_with, ServeOptions};
+pub use server::{request, serve_with, ServeOptions, DEFAULT_SERVE_SLICE, MAX_SUBMIT_BATCH};

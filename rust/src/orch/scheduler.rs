@@ -75,6 +75,17 @@ pub struct SchedStats {
     pub cancelled: u64,
 }
 
+/// A scheduling decision: the winning job plus the DRR bookkeeping
+/// (per-job deficit accruals) that [`Scheduler::run_slice`] commits when —
+/// and only when — the pick is actually executed. Keeping the decision
+/// side-effect-free is what makes `next_job` safe to call speculatively.
+struct Pick {
+    /// Winning job id.
+    id: u64,
+    /// `(jobs index, deficit increment)` for every DRR ring member.
+    deltas: Vec<(usize, i64)>,
+}
+
 /// The multi-tenant job scheduler (see the module docs for the policy).
 pub struct Scheduler {
     cfg: SchedulerConfig,
@@ -196,9 +207,17 @@ impl Scheduler {
         Ok(())
     }
 
-    /// Pick the next job to run, or `None` when nothing is runnable. Pure
-    /// bookkeeping (deficit accrual + ring cursor); does not execute.
-    pub fn next_job(&mut self) -> Option<u64> {
+    /// Pick the next job to run, or `None` when nothing is runnable.
+    /// **Pure**: repeated calls (idle polling, lookahead, STATUS probes)
+    /// never perturb the schedule — the deficit accrual and ring cursor a
+    /// pick implies are committed by [`Scheduler::run_slice`] only when
+    /// the pick is actually executed.
+    pub fn next_job(&self) -> Option<u64> {
+        self.compute_pick().map(|p| p.id)
+    }
+
+    /// The scheduling decision itself, side-effect-free.
+    fn compute_pick(&self) -> Option<Pick> {
         // Admission: top max_active runnable jobs by (priority, arrival).
         let mut admitted: Vec<usize> = (0..self.jobs.len())
             .filter(|&i| self.jobs[i].state.runnable())
@@ -239,14 +258,22 @@ impl Scheduler {
             accruals.push(accrual as i64);
         }
         let (p_win, k_win) = win;
+        let mut deltas = Vec::with_capacity(ring.len());
         for k in 0..ring.len() {
             let i = ring[(start + k) % ring.len()];
             let visits = (p_win - 1) + u64::from(k <= k_win);
-            self.jobs[i].deficit += visits as i64 * accruals[k];
+            deltas.push((i, visits as i64 * accruals[k]));
         }
         let winner = ring[(start + k_win) % ring.len()];
-        self.cursor = self.jobs[winner].id;
-        Some(self.jobs[winner].id)
+        Some(Pick { id: self.jobs[winner].id, deltas })
+    }
+
+    /// Apply a pick's DRR bookkeeping (deficit accruals + ring cursor).
+    fn commit_pick(&mut self, pick: &Pick) {
+        for &(i, d) in &pick.deltas {
+            self.jobs[i].deficit += d;
+        }
+        self.cursor = pick.id;
     }
 
     /// Execute one slice of `id` on the shared environment. Job-level
@@ -265,6 +292,15 @@ impl Scheduler {
             }
             (cfg, self.slice_steps(job), job.completed_steps)
         };
+        // Commit the DRR bookkeeping for this execution. The normal path
+        // (executor runs what `next_job` returned) commits the pick that
+        // selected `id`; running some other runnable job directly still
+        // moves the ring cursor, and the executed steps are debited below
+        // either way, so shares stay honest.
+        match self.compute_pick() {
+            Some(p) if p.id == id => self.commit_pick(&p),
+            _ => self.cursor = id,
+        }
         self.job_mut(id)?.set_state(JobState::Running)?;
         let outcome = env.trainer(cfg).and_then(|t| t.run_slice(slice));
         self.stats.slices += 1;
@@ -391,7 +427,8 @@ mod tests {
         let mut hi_spec = tiny("hi", 10);
         hi_spec.priority = 2;
         let hi = s.submit(hi_spec).unwrap();
-        // strict priority: only the high class is in the ring
+        // strict priority: only the high class is in the ring — and the
+        // pick is pure, so asking repeatedly never changes the answer
         for _ in 0..3 {
             assert_eq!(s.next_job(), Some(hi));
         }
@@ -399,13 +436,32 @@ mod tests {
         s.cancel(hi).unwrap();
         assert_eq!(s.next_job(), Some(lo));
 
-        // equal-priority jobs alternate (round-robin ring)
+        // equal-priority jobs alternate (round-robin ring) once picks are
+        // executed — emulate execution as run_slice does: commit the
+        // pick's bookkeeping, then debit the slice cost (10 steps here)
         let mut s = Scheduler::new(SchedulerConfig { quantum: 100, ..Default::default() });
         let a = s.submit(tiny("a", 10)).unwrap();
         let b = s.submit(tiny("b", 10)).unwrap();
-        assert_eq!(s.next_job(), Some(a));
-        assert_eq!(s.next_job(), Some(b));
-        assert_eq!(s.next_job(), Some(a));
+        for expect in [a, b, a, b, a] {
+            let pick = s.compute_pick().unwrap();
+            assert_eq!(pick.id, expect);
+            s.commit_pick(&pick);
+            s.job_mut(expect).unwrap().deficit -= 10;
+        }
+    }
+
+    #[test]
+    fn pick_without_run_accrues_nothing() {
+        let mut s = Scheduler::new(SchedulerConfig { quantum: 100, ..Default::default() });
+        let a = s.submit(tiny("a", 10)).unwrap();
+        let _b = s.submit(tiny("b", 10)).unwrap();
+        for _ in 0..50 {
+            assert_eq!(s.next_job(), Some(a));
+        }
+        assert!(
+            s.jobs().iter().all(|j| j.deficit == 0),
+            "speculative picks must not inflate DRR credit"
+        );
     }
 
     #[test]

@@ -1,6 +1,6 @@
-//! The scheduler's control plane: a std-only TCP server speaking
-//! newline-delimited JSON, plus the one-shot client used by the `dsde
-//! submit`/`status`/`cancel`/`drain` subcommands.
+//! The scheduler's control plane: a std-only TCP serving front end
+//! speaking newline-delimited JSON, plus the one-shot client used by the
+//! `dsde submit`/`status`/`cancel`/`drain`/`metrics` subcommands.
 //!
 //! # Wire protocol
 //!
@@ -11,60 +11,290 @@
 //! ```text
 //! {"cmd":"SUBMIT","config":{...RunConfig JSON...},
 //!  "priority":1,"share":1,"max_slice_steps":20}   → {"ok":true,"job":1}
+//! {"cmd":"SUBMIT","jobs":[{...entry...}, ...]}    → {"ok":true,"jobs":[
+//!                                  {"ok":true,"job":1},{"ok":false,...}]}
 //! {"cmd":"STATUS"}                   → {"ok":true,"jobs":[{...}, ...]}
 //! {"cmd":"STATUS","job":1}           → {"ok":true,"job":{...}}
 //! {"cmd":"CANCEL","job":1}           → {"ok":true,"state":"cancelled",...}
 //! {"cmd":"DRAIN"}                    → {"ok":true,"draining":true,...}
 //! {"cmd":"STATS"}                    → {"ok":true,"slices":...,"cache":{...}}
+//! {"cmd":"METRICS"}                  → {"ok":true,"queue_depth":...,
+//!                                       "latency_us":{"p50":...,"p99":...},...}
 //! ```
 //!
-//! # Threading
+//! Batched `SUBMIT` (the `jobs` array form) traverses the command queue as
+//! **one** command and gets one reply line with a per-job verdict in
+//! submission order — partial failure is per-entry, not all-or-nothing.
+//!
+//! # Threading and backpressure
 //!
 //! The *executor* thread — the caller of [`serve_with`] — owns the
-//! [`TrainEnv`] and the [`Scheduler`] (the PJRT runtime is
-//! single-threaded by design). An accept thread and one thread per
-//! connection only parse lines and forward `(request, reply-channel)`
-//! pairs over an mpsc channel; the executor applies every pending command
-//! **between slices**, so control operations are linearized at slice
-//! boundaries and never race a running step. `DRAIN` stops admission and
-//! shuts the server down once every job is terminal.
+//! [`TrainEnv`] and the [`Scheduler`] (the PJRT runtime is single-threaded
+//! by design). In front of it sits a fixed-size pool:
+//!
+//! ```text
+//! accept thread → bounded conn queue → N conn workers → bounded command
+//!                                                        queue → executor
+//! ```
+//!
+//! Workers parse each request line with the zero-alloc [`LazyScan`] (only
+//! the fields a command needs; a `SUBMIT`'s embedded config is the only
+//! subtree that pays for a full parse, and that cost lands on the worker,
+//! not the executor). The executor applies every pending command **between
+//! slices**, so control operations are linearized at slice boundaries and
+//! never race a running step. `DRAIN` stops admission and shuts the server
+//! down once every job is terminal.
+//!
+//! Every queue is bounded and every enqueue is a `try_send`: a full
+//! command queue answers `{"ok":false,"error":"queue full..."}` on the
+//! spot and a full connection backlog gets a `server busy` line before the
+//! socket is dropped — overload degrades into explicit, immediate rejects,
+//! never into unbounded buffering or a stalled client. Reads and writes
+//! carry socket timeouts; a client that stops reading its replies is
+//! treated as disconnected (the write times out) rather than pinning a
+//! worker, so shutdown never waits on a stalled peer. `METRICS` is served
+//! connection-side from shared atomic gauges and therefore stays
+//! responsive even while the command queue is rejecting.
+//!
+//! [`LazyScan`]: crate::config::json::LazyScan
 
-use crate::config::json::Json;
+use crate::config::json::{Json, LazyScan};
 use crate::orch::job::JobSpec;
 use crate::orch::scheduler::{SchedStats, Scheduler, SchedulerConfig};
 use crate::train::TrainEnv;
 use crate::Result;
 use anyhow::Context;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+/// Slice budget (steps) `serve_with` falls back to when the scheduler
+/// config leaves `default_slice` at 0. A *served* scheduler must slice:
+/// an unsliced job runs to completion inside one slice, and every
+/// STATUS/CANCEL/DRAIN would hang for the job's whole duration (commands
+/// are linearized at slice boundaries). Embedding the [`Scheduler`]
+/// directly keeps 0 = unsliced; the server refuses it.
+pub const DEFAULT_SERVE_SLICE: u64 = 25;
+
+/// Largest number of entries a batched `SUBMIT` may carry.
+pub const MAX_SUBMIT_BATCH: usize = 1024;
+
+/// How often blocked connection reads wake up to check for shutdown.
+const READ_POLL_MS: u64 = 100;
+
 /// Server-side options for [`serve_with`].
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct ServeOptions {
-    /// Scheduling policy of the hosted scheduler.
+    /// Scheduling policy of the hosted scheduler. A `default_slice` of 0
+    /// is coerced to [`DEFAULT_SERVE_SLICE`] (see there).
     pub sched: SchedulerConfig,
     /// Family assumed for submitted configs that omit one.
     pub default_family: String,
+    /// Connection worker pool size (each worker serves one connection at
+    /// a time).
+    pub conn_threads: usize,
+    /// Bounded command queue capacity; a full queue rejects with
+    /// `"queue full"` instead of buffering.
+    pub queue_cap: usize,
+    /// Bounded accepted-connection backlog; beyond it new connections get
+    /// a `"server busy"` line and are dropped.
+    pub conn_backlog: usize,
+    /// Maximum request line length in bytes; longer lines are rejected
+    /// and the connection closed.
+    pub max_request_bytes: usize,
+    /// Socket write timeout (ms): a reply write that cannot complete in
+    /// this window means the client stopped reading — treated as a
+    /// disconnect.
+    pub write_timeout_ms: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            sched: SchedulerConfig::default(),
+            default_family: String::new(),
+            conn_threads: 8,
+            queue_cap: 64,
+            conn_backlog: 128,
+            max_request_bytes: 1 << 20,
+            write_timeout_ms: 1000,
+        }
+    }
+}
+
+/// Shared atomic gauges behind the `METRICS` command. Front-end counters
+/// are written by the accept thread and the workers; the `sched_*`/cache
+/// counters are published by the executor at slice boundaries. All
+/// relaxed — they are monitoring data, not synchronization.
+struct Gauges {
+    requests: AtomicU64,
+    submitted: AtomicU64,
+    rejects_queue: AtomicU64,
+    rejects_conn: AtomicU64,
+    rejects_oversize: AtomicU64,
+    parse_errors: AtomicU64,
+    write_errors: AtomicU64,
+    conns_total: AtomicU64,
+    conns_active: AtomicU64,
+    queue_depth: AtomicU64,
+    inflight: AtomicU64,
+    executor_busy: AtomicU64,
+    sched_jobs: AtomicU64,
+    sched_slices: AtomicU64,
+    sched_preemptions: AtomicU64,
+    sched_completed: AtomicU64,
+    sched_failed: AtomicU64,
+    sched_cancelled: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    lat: LatHist,
+}
+
+impl Gauges {
+    fn new() -> Gauges {
+        Gauges {
+            requests: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            rejects_queue: AtomicU64::new(0),
+            rejects_conn: AtomicU64::new(0),
+            rejects_oversize: AtomicU64::new(0),
+            parse_errors: AtomicU64::new(0),
+            write_errors: AtomicU64::new(0),
+            conns_total: AtomicU64::new(0),
+            conns_active: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            executor_busy: AtomicU64::new(0),
+            sched_jobs: AtomicU64::new(0),
+            sched_slices: AtomicU64::new(0),
+            sched_preemptions: AtomicU64::new(0),
+            sched_completed: AtomicU64::new(0),
+            sched_failed: AtomicU64::new(0),
+            sched_cancelled: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            lat: LatHist::new(),
+        }
+    }
+}
+
+/// Lock-free log₂-bucketed latency histogram over microseconds. Quantiles
+/// report the bucket's upper bound — at most 2x the true value, which is
+/// plenty for p50/p99 monitoring gauges.
+struct LatHist {
+    buckets: [AtomicU64; 40],
+}
+
+impl LatHist {
+    fn new() -> LatHist {
+        LatHist { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    fn record(&self, us: u64) {
+        let v = us.max(1);
+        let idx = (63 - v.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The q-quantile in microseconds (0 when empty).
+    fn quantile(&self, q: f64) -> u64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return (1u64 << (i + 1)) - 1;
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// A parsed control command. Workers produce these (all request parsing —
+/// including `SUBMIT`'s config subtree — happens off the executor thread);
+/// the executor only applies them.
+enum Request {
+    /// `SUBMIT`: one pre-parsed entry per job, in submission order. Parse
+    /// failures stay per-entry so a batch can partially succeed.
+    Submit { entries: Vec<std::result::Result<JobSpec, String>>, batch: bool },
+    Status(Option<u64>),
+    Cancel(u64),
+    Drain,
+    Stats,
+    /// Served connection-side from [`Gauges`]; never forwarded.
+    Metrics,
+}
+
+type Cmd = (Request, std::sync::mpsc::Sender<String>);
+
+/// Everything a connection worker needs.
+struct WorkerCtx {
+    gauges: Arc<Gauges>,
+    cmd_tx: SyncSender<Cmd>,
+    shutdown: Arc<AtomicBool>,
+    family: String,
+    queue_cap: usize,
+    max_request_bytes: usize,
+    write_timeout_ms: u64,
 }
 
 /// Run the control plane on an already-bound listener until a `DRAIN`
 /// completes (all jobs terminal). The calling thread becomes the executor:
-/// it owns `env` and runs every slice; connection threads only relay
-/// commands. Returns the final scheduler counters.
+/// it owns `env` and runs every slice; the accept thread and the
+/// connection workers only parse and relay commands. Returns the final
+/// scheduler counters.
 pub fn serve_with(env: &TrainEnv, listener: TcpListener, opts: ServeOptions) -> Result<SchedStats> {
     let addr = listener.local_addr()?;
+    let mut sched_cfg = opts.sched.clone();
+    if sched_cfg.default_slice == 0 {
+        // Liveness: a served scheduler must preempt (see DEFAULT_SERVE_SLICE).
+        sched_cfg.default_slice = DEFAULT_SERVE_SLICE;
+    }
+    let family =
+        if opts.default_family.is_empty() { "gpt".to_string() } else { opts.default_family.clone() };
     let shutdown = Arc::new(AtomicBool::new(false));
-    // Replies routed through the executor but not yet written to their
-    // socket — drained before serve_with returns, so the final DRAIN/
-    // STATUS answer is never lost to process exit.
-    let inflight = Arc::new(AtomicUsize::new(0));
-    let (tx, rx) = channel::<(Json, Sender<String>)>();
+    let gauges = Arc::new(Gauges::new());
+    let (cmd_tx, cmd_rx) = sync_channel::<Cmd>(opts.queue_cap.max(1));
+    let (conn_tx, conn_rx) = sync_channel::<TcpStream>(opts.conn_backlog.max(1));
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+    let ctx = Arc::new(WorkerCtx {
+        gauges: gauges.clone(),
+        cmd_tx,
+        shutdown: shutdown.clone(),
+        family,
+        queue_cap: opts.queue_cap.max(1),
+        max_request_bytes: opts.max_request_bytes.max(1024),
+        write_timeout_ms: opts.write_timeout_ms.max(1),
+    });
+
+    let mut workers = Vec::new();
+    for i in 0..opts.conn_threads.max(1) {
+        let ctx = ctx.clone();
+        let conn_rx = conn_rx.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("dsde-ctl-worker-{i}"))
+                .spawn(move || worker_loop(&ctx, &conn_rx))
+                .context("spawning control-plane worker thread")?,
+        );
+    }
+    drop(conn_rx); // workers hold the only receiver clones now
+
     let accept_shutdown = shutdown.clone();
-    let accept_inflight = inflight.clone();
+    let accept_gauges = gauges.clone();
     let accept = std::thread::Builder::new()
         .name("dsde-ctl-accept".into())
         .spawn(move || {
@@ -73,56 +303,89 @@ pub fn serve_with(env: &TrainEnv, listener: TcpListener, opts: ServeOptions) -> 
                     break;
                 }
                 let Ok(stream) = conn else { continue };
-                let tx = tx.clone();
-                let inflight = accept_inflight.clone();
-                let _ = std::thread::Builder::new()
-                    .name("dsde-ctl-conn".into())
-                    .spawn(move || handle_conn(stream, tx, inflight));
+                accept_gauges.conns_total.fetch_add(1, Ordering::Relaxed);
+                match conn_tx.try_send(stream) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(stream)) => {
+                        // Explicit reject, then drop: the backlog is the
+                        // bound, not an invitation to buffer.
+                        accept_gauges.rejects_conn.fetch_add(1, Ordering::Relaxed);
+                        let mut s = stream;
+                        let _ = s.set_write_timeout(Some(Duration::from_millis(100)));
+                        let mut line = err_line("server busy: connection backlog full");
+                        line.push('\n');
+                        let _ = s.write_all(line.as_bytes());
+                    }
+                    Err(TrySendError::Disconnected(_)) => break,
+                }
             }
         })
         .context("spawning control-plane accept thread")?;
 
-    let mut sched = Scheduler::new(opts.sched.clone());
+    // -- executor loop -------------------------------------------------------
+    let mut sched = Scheduler::new(sched_cfg);
     let mut draining = false;
-    loop {
+    let run_result = loop {
         // Linearization point: apply every pending control command at the
         // slice boundary.
-        while let Ok((req, reply)) = rx.try_recv() {
-            let resp = handle_request(env, &mut sched, &mut draining, &opts, &req);
+        while let Ok((req, reply)) = cmd_rx.try_recv() {
+            gauges.queue_depth.fetch_sub(1, Ordering::Relaxed);
+            let resp = apply(env, &mut sched, &mut draining, &gauges, req);
             let _ = reply.send(resp);
         }
+        publish_exec_stats(&gauges, &sched, env);
         if draining && sched.all_terminal() {
-            break;
+            break Ok(());
         }
         if let Some(id) = sched.next_job() {
-            sched.run_slice(env, id)?;
+            gauges.executor_busy.store(1, Ordering::Relaxed);
+            let r = sched.run_slice(env, id);
+            gauges.executor_busy.store(0, Ordering::Relaxed);
+            if let Err(e) = r {
+                break Err(e);
+            }
         } else {
             // idle: wait for commands without spinning
-            match rx.recv_timeout(Duration::from_millis(50)) {
+            match cmd_rx.recv_timeout(Duration::from_millis(50)) {
                 Ok((req, reply)) => {
-                    let resp = handle_request(env, &mut sched, &mut draining, &opts, &req);
+                    gauges.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                    let resp = apply(env, &mut sched, &mut draining, &gauges, req);
                     let _ = reply.send(resp);
                 }
                 Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => break,
+                Err(RecvTimeoutError::Disconnected) => break Ok(()),
             }
         }
+    };
+
+    // -- shutdown ------------------------------------------------------------
+    // Answer anything still queued, then drop the receiver so late sends
+    // fail fast (workers self-reply "server shutting down").
+    while let Ok((_, reply)) = cmd_rx.try_recv() {
+        gauges.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        let _ = reply.send(err_line("server shutting down"));
     }
-    // Let queued replies reach their sockets (bounded), then unblock the
-    // accept() call so the thread observes the flag and exits.
+    drop(cmd_rx);
+    // Let in-flight replies reach their sockets. Bounded twice over: the
+    // deadline here, and the per-socket write timeout that turns a stalled
+    // reader into a disconnect long before the deadline.
     let deadline = Instant::now() + Duration::from_secs(2);
-    while inflight.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+    while gauges.inflight.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
         std::thread::sleep(Duration::from_millis(2));
     }
     shutdown.store(true, Ordering::Relaxed);
-    let _ = TcpStream::connect(addr);
-    let _ = accept.join();
+    let _ = TcpStream::connect(addr); // unblock accept()
+    let _ = accept.join(); // drops conn_tx → workers drain and exit
+    for w in workers {
+        let _ = w.join();
+    }
+    run_result?;
     Ok(sched.stats())
 }
 
 /// One-shot control-plane client: connect, send one request line, read
-/// one response line. Used by the `dsde submit`/`status`/`cancel`/`drain`
-/// subcommands.
+/// one response line. Used by the `dsde submit`/`status`/`cancel`/
+/// `drain`/`metrics` subcommands.
 pub fn request(addr: &str, req: &Json) -> Result<Json> {
     let mut stream = TcpStream::connect(addr)
         .with_context(|| format!("connecting to the control plane at {addr}"))?;
@@ -138,41 +401,251 @@ pub fn request(addr: &str, req: &Json) -> Result<Json> {
     Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad control-plane response: {e}"))
 }
 
-/// Per-connection relay: parse each line, forward to the executor, write
-/// the reply back. Exits when the client disconnects or the server stops.
-/// `inflight` brackets the forward→write window so [`serve_with`] can
-/// drain pending replies before the process exits.
-fn handle_conn(stream: TcpStream, tx: Sender<(Json, Sender<String>)>, inflight: Arc<AtomicUsize>) {
-    let Ok(read_half) = stream.try_clone() else { return };
-    let reader = BufReader::new(read_half);
-    let mut writer = stream;
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let (resp, forwarded) = match Json::parse(line.trim()) {
-            Err(e) => (err_line(&format!("bad request: {e}")), false),
-            Ok(req) => {
-                inflight.fetch_add(1, Ordering::SeqCst);
-                let (rtx, rrx) = channel::<String>();
-                let resp = if tx.send((req, rtx)).is_err() {
-                    err_line("server shutting down")
-                } else {
-                    rrx.recv().unwrap_or_else(|_| err_line("server shutting down"))
-                };
-                (resp, true)
+// -- connection workers ------------------------------------------------------
+
+fn worker_loop(ctx: &WorkerCtx, conn_rx: &Mutex<Receiver<TcpStream>>) {
+    loop {
+        let stream = {
+            let rx = conn_rx.lock().unwrap_or_else(|e| e.into_inner());
+            match rx.recv() {
+                Ok(s) => s,
+                Err(_) => return, // accept thread gone → no more work
             }
         };
-        let wrote = writer.write_all(resp.as_bytes()).is_ok() && writer.write_all(b"\n").is_ok();
-        if forwarded {
-            inflight.fetch_sub(1, Ordering::SeqCst);
+        ctx.gauges.conns_active.fetch_add(1, Ordering::Relaxed);
+        handle_conn(stream, ctx);
+        ctx.gauges.conns_active.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Serve one connection until the client disconnects, misbehaves
+/// (oversized line, stalled reads) or the server shuts down. The read
+/// loop is a hand-rolled bounded line reader: requests may arrive split
+/// across writes or many-per-write (pipelined), and short read timeouts
+/// double as the shutdown poll.
+fn handle_conn(mut stream: TcpStream, ctx: &WorkerCtx) {
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(READ_POLL_MS)));
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(ctx.write_timeout_ms)));
+    let mut carry: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 8192];
+    loop {
+        // Serve every complete line already buffered before reading more.
+        while let Some(pos) = carry.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = carry.drain(..=pos).collect();
+            let reply = match std::str::from_utf8(&raw[..pos]) {
+                Ok(text) if text.trim().is_empty() => continue,
+                Ok(text) => serve_line(text.trim(), ctx),
+                Err(_) => {
+                    ctx.gauges.parse_errors.fetch_add(1, Ordering::Relaxed);
+                    err_line("bad request: not valid utf-8")
+                }
+            };
+            if !write_reply(&mut stream, reply, ctx) {
+                return;
+            }
         }
-        if !wrote {
-            break;
+        if carry.len() > ctx.max_request_bytes {
+            ctx.gauges.rejects_oversize.fetch_add(1, Ordering::Relaxed);
+            let reply = err_line(&format!(
+                "request exceeds max length of {} bytes",
+                ctx.max_request_bytes
+            ));
+            let _ = write_reply(&mut stream, reply, ctx);
+            return; // can't resynchronize mid-line — drop the connection
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return, // EOF (an unterminated trailing line is dropped)
+            Ok(n) => carry.extend_from_slice(&tmp[..n]),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if ctx.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return,
         }
     }
 }
+
+/// Parse + dispatch one request line, returning the reply body. The
+/// `inflight` gauge brackets forward→reply-written for forwarded commands
+/// (see `write_reply`), so `serve_with` can drain pending replies before
+/// the process exits.
+fn serve_line(line: &str, ctx: &WorkerCtx) -> String {
+    let t0 = Instant::now();
+    ctx.gauges.requests.fetch_add(1, Ordering::Relaxed);
+    let reply = match parse_request(line, &ctx.family) {
+        Err(msg) => {
+            ctx.gauges.parse_errors.fetch_add(1, Ordering::Relaxed);
+            err_line(&msg)
+        }
+        // METRICS never touches the executor: it must answer even (and
+        // especially) while the command queue is rejecting.
+        Ok(Request::Metrics) => metrics_reply(ctx),
+        Ok(req) => {
+            ctx.gauges.inflight.fetch_add(1, Ordering::SeqCst);
+            let (rtx, rrx) = channel::<String>();
+            match ctx.cmd_tx.try_send((req, rtx)) {
+                Ok(()) => {
+                    ctx.gauges.queue_depth.fetch_add(1, Ordering::Relaxed);
+                    rrx.recv().unwrap_or_else(|_| err_line("server shutting down"))
+                }
+                Err(TrySendError::Full(_)) => {
+                    // Explicit backpressure: reject with reason, right now.
+                    ctx.gauges.rejects_queue.fetch_add(1, Ordering::Relaxed);
+                    err_line(&format!(
+                        "queue full ({} pending commands) — retry",
+                        ctx.queue_cap
+                    ))
+                }
+                Err(TrySendError::Disconnected(_)) => err_line("server shutting down"),
+            }
+        }
+    };
+    ctx.gauges.lat.record(t0.elapsed().as_micros() as u64);
+    reply
+}
+
+/// Write one reply line; false ends the connection. A timed-out or failed
+/// write means the client stopped reading — count it and disconnect
+/// rather than pinning the worker. Always releases `inflight`.
+fn write_reply(stream: &mut TcpStream, reply: String, ctx: &WorkerCtx) -> bool {
+    let mut out = reply.into_bytes();
+    out.push(b'\n');
+    let ok = stream.write_all(&out).is_ok();
+    if !ok {
+        ctx.gauges.write_errors.fetch_add(1, Ordering::Relaxed);
+    }
+    // Saturating: only forwarded commands raised it (METRICS and parse
+    // errors never did), but releasing here keeps every exit path covered.
+    let _ = ctx.gauges.inflight.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+        Some(v.saturating_sub(1))
+    });
+    ok
+}
+
+// -- request parsing (worker side) -------------------------------------------
+
+fn unknown_cmd(cmd: &str) -> String {
+    format!("unknown command '{cmd}' (SUBMIT | STATUS | CANCEL | DRAIN | STATS | METRICS)")
+}
+
+/// Parse one request line into a [`Request`], `Err` being the error-reply
+/// message. The lazy scanner handles the hot path without building a
+/// `Json` tree; anything it cannot see (escaped `cmd`, malformed line)
+/// falls back to the full parser for exact diagnostics.
+fn parse_request(line: &str, family: &str) -> std::result::Result<Request, String> {
+    let scan = LazyScan::new(line);
+    match scan.field_str("cmd") {
+        Some(cmd) => request_from_scan(cmd, &scan, line, family),
+        None => {
+            let v = Json::parse(line).map_err(|e| format!("bad request: {e}"))?;
+            match v.get("cmd").as_str() {
+                Some(cmd) => request_from_tree(cmd, &v, family),
+                None => Err("request has no 'cmd' field".to_string()),
+            }
+        }
+    }
+}
+
+fn request_from_scan(
+    cmd: &str,
+    scan: &LazyScan<'_>,
+    line: &str,
+    family: &str,
+) -> std::result::Result<Request, String> {
+    match cmd {
+        "SUBMIT" => match scan.field_raw("jobs") {
+            Some(raw) => {
+                let elems = LazyScan::array_elems(raw)
+                    .ok_or_else(|| "'jobs' must be an array".to_string())?;
+                if elems.len() > MAX_SUBMIT_BATCH {
+                    return Err(format!(
+                        "batch of {} exceeds the {MAX_SUBMIT_BATCH}-job limit",
+                        elems.len()
+                    ));
+                }
+                let entries = elems
+                    .iter()
+                    .map(|e| JobSpec::from_submit_entry(e, family).map_err(|e| format!("{e:#}")))
+                    .collect();
+                Ok(Request::Submit { entries, batch: true })
+            }
+            None => {
+                let spec =
+                    JobSpec::from_submit_entry(line, family).map_err(|e| format!("{e:#}"))?;
+                Ok(Request::Submit { entries: vec![Ok(spec)], batch: false })
+            }
+        },
+        "STATUS" => match scan.field_raw("job") {
+            None => Ok(Request::Status(None)),
+            Some(_) => Ok(Request::Status(Some(job_id_from(|| scan.field_u64("job"))?))),
+        },
+        "CANCEL" => match scan.field_raw("job") {
+            None => Err("CANCEL requires a 'job' id".to_string()),
+            Some(_) => Ok(Request::Cancel(job_id_from(|| scan.field_u64("job"))?)),
+        },
+        "DRAIN" => Ok(Request::Drain),
+        "STATS" => Ok(Request::Stats),
+        "METRICS" => Ok(Request::Metrics),
+        other => Err(unknown_cmd(other)),
+    }
+}
+
+/// Tree-based fallback with semantics identical to `request_from_scan`.
+fn request_from_tree(
+    cmd: &str,
+    v: &Json,
+    family: &str,
+) -> std::result::Result<Request, String> {
+    match cmd {
+        "SUBMIT" => match v.get("jobs") {
+            Json::Null => {
+                let spec = JobSpec::from_json(v, family).map_err(|e| format!("{e:#}"))?;
+                Ok(Request::Submit { entries: vec![Ok(spec)], batch: false })
+            }
+            Json::Arr(a) => {
+                if a.len() > MAX_SUBMIT_BATCH {
+                    return Err(format!(
+                        "batch of {} exceeds the {MAX_SUBMIT_BATCH}-job limit",
+                        a.len()
+                    ));
+                }
+                let entries = a
+                    .iter()
+                    .map(|e| JobSpec::from_json(e, family).map_err(|e| format!("{e:#}")))
+                    .collect();
+                Ok(Request::Submit { entries, batch: true })
+            }
+            _ => Err("'jobs' must be an array".to_string()),
+        },
+        "STATUS" => match v.get("job") {
+            Json::Null => Ok(Request::Status(None)),
+            f => Ok(Request::Status(Some(job_id_from(|| f.as_u64())?))),
+        },
+        "CANCEL" => match v.get("job") {
+            Json::Null => Err("CANCEL requires a 'job' id".to_string()),
+            f => Ok(Request::Cancel(job_id_from(|| f.as_u64())?)),
+        },
+        "DRAIN" => Ok(Request::Drain),
+        "STATS" => Ok(Request::Stats),
+        "METRICS" => Ok(Request::Metrics),
+        other => Err(unknown_cmd(other)),
+    }
+}
+
+fn job_id_from(
+    get: impl FnOnce() -> Option<u64>,
+) -> std::result::Result<u64, String> {
+    get().ok_or_else(|| "'job' must be an unsigned integer".to_string())
+}
+
+// -- replies -----------------------------------------------------------------
 
 fn err_line(msg: &str) -> String {
     Json::obj(vec![("ok", false.into()), ("error", msg.into())]).to_string_compact()
@@ -183,82 +656,162 @@ fn ok_line(mut pairs: Vec<(&str, Json)>) -> String {
     Json::obj(pairs).to_string_compact()
 }
 
-/// Dispatch one control command against the scheduler (executor thread
-/// only; see the module docs for the linearization argument).
-fn handle_request(
+fn metrics_reply(ctx: &WorkerCtx) -> String {
+    let g = &ctx.gauges;
+    let ld = |a: &AtomicU64| Json::from(a.load(Ordering::Relaxed));
+    ok_line(vec![
+        ("queue_depth", ld(&g.queue_depth)),
+        ("queue_cap", ctx.queue_cap.into()),
+        ("inflight", ld(&g.inflight)),
+        ("executor_busy", ld(&g.executor_busy)),
+        ("conns_active", ld(&g.conns_active)),
+        ("conns_total", ld(&g.conns_total)),
+        ("requests", ld(&g.requests)),
+        ("submitted", ld(&g.submitted)),
+        (
+            "rejects",
+            Json::obj(vec![
+                ("queue", ld(&g.rejects_queue)),
+                ("conns", ld(&g.rejects_conn)),
+                ("oversize", ld(&g.rejects_oversize)),
+            ]),
+        ),
+        ("parse_errors", ld(&g.parse_errors)),
+        ("write_errors", ld(&g.write_errors)),
+        (
+            "latency_us",
+            Json::obj(vec![
+                ("count", g.lat.count().into()),
+                ("p50", g.lat.quantile(0.50).into()),
+                ("p99", g.lat.quantile(0.99).into()),
+            ]),
+        ),
+        (
+            "sched",
+            Json::obj(vec![
+                ("jobs", ld(&g.sched_jobs)),
+                ("slices", ld(&g.sched_slices)),
+                ("preemptions", ld(&g.sched_preemptions)),
+                ("completed", ld(&g.sched_completed)),
+                ("failed", ld(&g.sched_failed)),
+                ("cancelled", ld(&g.sched_cancelled)),
+            ]),
+        ),
+        (
+            "cache",
+            Json::obj(vec![("hits", ld(&g.cache_hits)), ("misses", ld(&g.cache_misses))]),
+        ),
+    ])
+}
+
+// -- executor side -----------------------------------------------------------
+
+/// Publish scheduler/cache counters into the shared gauges so `METRICS`
+/// can answer connection-side without touching the executor.
+fn publish_exec_stats(gauges: &Gauges, sched: &Scheduler, env: &TrainEnv) {
+    let s = sched.stats();
+    gauges.sched_jobs.store(sched.jobs().len() as u64, Ordering::Relaxed);
+    gauges.sched_slices.store(s.slices, Ordering::Relaxed);
+    gauges.sched_preemptions.store(s.preemptions, Ordering::Relaxed);
+    gauges.sched_completed.store(s.completed, Ordering::Relaxed);
+    gauges.sched_failed.store(s.failed, Ordering::Relaxed);
+    gauges.sched_cancelled.store(s.cancelled, Ordering::Relaxed);
+    let c = env.rt.cache_stats();
+    gauges.cache_hits.store(c.hits as u64, Ordering::Relaxed);
+    gauges.cache_misses.store(c.misses as u64, Ordering::Relaxed);
+}
+
+/// Apply one control command against the scheduler (executor thread only;
+/// see the module docs for the linearization argument).
+fn apply(
     env: &TrainEnv,
     sched: &mut Scheduler,
     draining: &mut bool,
-    opts: &ServeOptions,
-    req: &Json,
+    gauges: &Gauges,
+    req: Request,
 ) -> String {
-    let family: &str =
-        if opts.default_family.is_empty() { "gpt" } else { opts.default_family.as_str() };
-    match req.get("cmd").as_str() {
-        Some("SUBMIT") => {
+    match req {
+        Request::Submit { entries, batch } => {
             if *draining {
                 return err_line("server is draining — no new jobs");
             }
-            match JobSpec::from_json(req, family).and_then(|s| sched.submit(s)) {
-                Ok(id) => ok_line(vec![("job", (id as usize).into())]),
-                Err(e) => err_line(&format!("{e:#}")),
-            }
-        }
-        Some("STATUS") => match req.get("job").as_usize() {
-            Some(id) => match sched.job(id as u64) {
-                Some(j) => ok_line(vec![("job", j.to_json())]),
-                None => err_line(&format!("unknown job id {id}")),
-            },
-            None => {
-                let jobs: Vec<Json> = sched.jobs().iter().map(|j| j.to_json()).collect();
-                ok_line(vec![("jobs", Json::Arr(jobs))])
-            }
-        },
-        Some("CANCEL") => {
-            let Some(id) = req.get("job").as_usize() else {
-                return err_line("CANCEL requires a 'job' id");
-            };
-            match sched.cancel(id as u64) {
-                Ok(()) => {
-                    let job = sched.job(id as u64).expect("cancelled job exists");
-                    let mut pairs: Vec<(&str, Json)> =
-                        vec![("job", id.into()), ("state", job.state.name().into())];
-                    if let Some(ck) = &job.checkpoint {
-                        pairs.push(("checkpoint", ck.to_string_lossy().into_owned().into()));
+            let mut verdicts = Vec::with_capacity(entries.len());
+            for entry in entries {
+                let verdict = match entry.and_then(|spec| {
+                    sched.submit(spec).map_err(|e| format!("{e:#}"))
+                }) {
+                    Ok(id) => {
+                        gauges.submitted.fetch_add(1, Ordering::Relaxed);
+                        Ok(id)
                     }
-                    ok_line(pairs)
+                    Err(msg) => Err(msg),
+                };
+                verdicts.push(verdict);
+            }
+            if batch {
+                let jobs: Vec<Json> = verdicts
+                    .into_iter()
+                    .map(|v| match v {
+                        Ok(id) => Json::obj(vec![("ok", true.into()), ("job", id.into())]),
+                        Err(msg) => {
+                            Json::obj(vec![("ok", false.into()), ("error", msg.as_str().into())])
+                        }
+                    })
+                    .collect();
+                ok_line(vec![("jobs", Json::Arr(jobs))])
+            } else {
+                match verdicts.pop().expect("single submit has one entry") {
+                    Ok(id) => ok_line(vec![("job", id.into())]),
+                    Err(msg) => err_line(&msg),
                 }
-                Err(e) => err_line(&format!("{e:#}")),
             }
         }
-        Some("DRAIN") => {
+        Request::Status(Some(id)) => match sched.job(id) {
+            Some(j) => ok_line(vec![("job", j.to_json())]),
+            None => err_line(&format!("unknown job id {id}")),
+        },
+        Request::Status(None) => {
+            let jobs: Vec<Json> = sched.jobs().iter().map(|j| j.to_json()).collect();
+            ok_line(vec![("jobs", Json::Arr(jobs))])
+        }
+        Request::Cancel(id) => match sched.cancel(id) {
+            Ok(()) => {
+                let job = sched.job(id).expect("cancelled job exists");
+                let mut pairs: Vec<(&str, Json)> =
+                    vec![("job", id.into()), ("state", job.state.name().into())];
+                if let Some(ck) = &job.checkpoint {
+                    pairs.push(("checkpoint", ck.to_string_lossy().into_owned().into()));
+                }
+                ok_line(pairs)
+            }
+            Err(e) => err_line(&format!("{e:#}")),
+        },
+        Request::Drain => {
             *draining = true;
             let pending = sched.jobs().iter().filter(|j| !j.state.terminal()).count();
             ok_line(vec![("draining", true.into()), ("pending", pending.into())])
         }
-        Some("STATS") => {
+        Request::Stats => {
             let s = sched.stats();
             let cache = env.rt.cache_stats();
             ok_line(vec![
-                ("slices", (s.slices as usize).into()),
-                ("preemptions", (s.preemptions as usize).into()),
-                ("completed", (s.completed as usize).into()),
-                ("failed", (s.failed as usize).into()),
-                ("cancelled", (s.cancelled as usize).into()),
+                ("slices", s.slices.into()),
+                ("preemptions", s.preemptions.into()),
+                ("completed", s.completed.into()),
+                ("failed", s.failed.into()),
+                ("cancelled", s.cancelled.into()),
                 (
                     "cache",
                     Json::obj(vec![
-                        ("hits", (cache.hits as usize).into()),
-                        ("misses", (cache.misses as usize).into()),
-                        ("prewarmed", (cache.prewarmed as usize).into()),
+                        ("hits", cache.hits.into()),
+                        ("misses", cache.misses.into()),
+                        ("prewarmed", cache.prewarmed.into()),
                         ("hit_rate", cache.hit_rate().into()),
                     ]),
                 ),
             ])
         }
-        Some(cmd) => err_line(&format!(
-            "unknown command '{cmd}' (SUBMIT | STATUS | CANCEL | DRAIN | STATS)"
-        )),
-        None => err_line("request has no 'cmd' field"),
+        // Served connection-side; a forwarded METRICS is a worker bug.
+        Request::Metrics => err_line("METRICS is served connection-side"),
     }
 }

@@ -446,7 +446,7 @@ pub fn legacy_grid(families: &BTreeMap<String, FamilyInfo>) -> Result<Vec<Artifa
 /// `json.dump(manifest, indent=1, sort_keys=True)` plus trailing newline.
 pub fn manifest_text(families: &BTreeMap<String, FamilyInfo>) -> Result<String> {
     use crate::config::json::Json;
-    let num = |v: usize| Json::Num(v as f64);
+    let num = |v: usize| Json::from(v);
     let nums = |vs: &[usize]| Json::Arr(vs.iter().map(|&v| num(v)).collect());
     let spec_json = |s: &TensorSpec| {
         let dtype = match s.dtype {

@@ -441,7 +441,7 @@ impl Checkpoint {
         let tensors: Vec<Json> = self
             .state
             .iter()
-            .map(|t| Json::Arr(t.dims.iter().map(|&d| Json::Num(d as f64)).collect()))
+            .map(|t| Json::Arr(t.dims.iter().map(|&d| Json::from(d)).collect()))
             .collect();
         Json::obj(vec![
             ("curve", self.curve.len().into()),

@@ -1,0 +1,478 @@
+//! Control-plane wire-protocol and liveness regression suite (ISSUE 6).
+//!
+//! Each test spins a real `serve_with` front end on a loopback port and
+//! talks to it over raw sockets, covering the four bugfix satellites and
+//! the robustness guarantees the serving rework promises:
+//!
+//! * a long **unsliced** job no longer wedges the control plane — the
+//!   server coerces `default_slice: 0` to a finite slice, so CANCEL lands
+//!   at a slice boundary mid-job;
+//! * a client that stops reading its replies is disconnected by the
+//!   socket write timeout instead of pinning a worker, and shutdown does
+//!   not wait on it;
+//! * a full command queue answers `queue full` immediately (explicit
+//!   backpressure, never a stall), while `METRICS` keeps answering
+//!   connection-side;
+//! * oversized lines, requests split across writes, binary garbage and
+//!   early disconnects get error replies (or a clean close) without
+//!   killing the server or leaking connection slots;
+//! * batched `SUBMIT` returns one verdict per entry, partial failure
+//!   included;
+//! * job ids above 2^53 survive the wire round-trip digit-for-digit.
+
+use dsde::config::json::Json;
+use dsde::config::schema::RunConfig;
+use dsde::orch::{request, serve_with, SchedStats, SchedulerConfig, ServeOptions};
+use dsde::train::TrainEnv;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dsde-ctlproto-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn cfg(label: &str, steps: u64, save_dir: &str) -> RunConfig {
+    let mut c = RunConfig::baseline("gpt", steps, 3e-3);
+    c.label = label.to_string();
+    c.seed = 4242;
+    c.save_dir = save_dir.to_string();
+    c
+}
+
+/// Bind a fresh loopback server; the spawned thread is the executor.
+fn spawn_server(opts: ServeOptions) -> (String, JoinHandle<SchedStats>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        let env = TrainEnv::new(160, 13).expect("env");
+        serve_with(&env, listener, opts).expect("serve_with")
+    });
+    (addr, handle)
+}
+
+fn sched(max_active: usize, default_slice: u64) -> SchedulerConfig {
+    SchedulerConfig { max_active, default_slice, quantum: 8, cleanup_done: false }
+}
+
+fn cmd(pairs: Vec<(&str, Json)>) -> Json {
+    Json::obj(pairs)
+}
+
+// ---- satellite 1: liveness under unsliced jobs ------------------------------
+
+/// `default_slice: 0` means "run to completion in one slice" for the
+/// embedded scheduler — served, that used to wedge every STATUS/CANCEL
+/// for the job's whole duration. The server must coerce it to a finite
+/// slice so CANCEL lands *between slices* of a long unsliced job.
+#[test]
+fn cancel_lands_between_slices_of_long_unsliced_job() {
+    let dir = temp_dir("liveness");
+    let (addr, server) = spawn_server(ServeOptions {
+        sched: sched(2, 0), // the buggy config: unsliced by default
+        ..ServeOptions::default()
+    });
+
+    // 3000 steps, no per-job slice either: under the old behavior this
+    // job holds the executor in one slice until it finishes.
+    let c = cfg("long-unsliced", 3000, &dir.to_string_lossy());
+    let resp = request(&addr, &cmd(vec![("cmd", "SUBMIT".into()), ("config", c.to_json())]))
+        .expect("SUBMIT");
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let id = resp.get("job").as_u64().expect("job id");
+
+    // Wait until at least one slice has run, proving the job is mid-way.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let st = request(&addr, &cmd(vec![("cmd", "STATUS".into()), ("job", id.into())]))
+            .expect("STATUS");
+        let done = st.path("job.completed_steps").as_u64().unwrap_or(0);
+        if done > 0 {
+            assert!(done < 3000, "job finished before CANCEL could land: {st:?}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "no slice boundary reached: {st:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let t0 = Instant::now();
+    let resp = request(&addr, &cmd(vec![("cmd", "CANCEL".into()), ("job", id.into())]))
+        .expect("CANCEL");
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(resp.get("state").as_str(), Some("cancelled"), "{resp:?}");
+    // Landing "between slices" bounds the wait by one slice, not one job.
+    assert!(
+        t0.elapsed() < Duration::from_secs(60),
+        "CANCEL took {:?} — executor wedged in a single giant slice",
+        t0.elapsed()
+    );
+
+    let st = request(&addr, &cmd(vec![("cmd", "STATUS".into()), ("job", id.into())]))
+        .expect("STATUS after cancel");
+    let done = st.path("job.completed_steps").as_u64().unwrap_or(0);
+    assert!(0 < done && done < 3000, "cancel mid-job, at a boundary: {st:?}");
+    assert_eq!(
+        done % dsde::orch::DEFAULT_SERVE_SLICE,
+        0,
+        "preemption happens on the coerced slice grid: {st:?}"
+    );
+
+    let dr = request(&addr, &cmd(vec![("cmd", "DRAIN".into())])).expect("DRAIN");
+    assert_eq!(dr.get("ok").as_bool(), Some(true), "{dr:?}");
+    let stats = server.join().expect("server thread");
+    assert_eq!(stats.cancelled, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- satellite 2: stalled readers must not pin workers or shutdown ----------
+
+/// A client that pipelines thousands of requests and never reads a byte
+/// of reply used to pin its connection thread in `write_all` forever
+/// (and shutdown joined that thread). With a socket write timeout the
+/// stalled write is a disconnect: `write_errors` ticks, the worker moves
+/// on, and DRAIN + shutdown complete while the stalled socket is still
+/// open.
+#[test]
+fn stalled_reader_is_disconnected_not_serviced_forever() {
+    let dir = temp_dir("stalled");
+    let (addr, server) = spawn_server(ServeOptions {
+        sched: sched(2, 5),
+        write_timeout_ms: 250,
+        ..ServeOptions::default()
+    });
+
+    // A fat job makes every STATUS-all reply ~2KB, so a few hundred
+    // unread replies overflow any socket buffer.
+    let c = cfg(&"x".repeat(2000), 4, &dir.to_string_lossy());
+    let resp = request(&addr, &cmd(vec![("cmd", "SUBMIT".into()), ("config", c.to_json())]))
+        .expect("SUBMIT");
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+
+    // The misbehaving client: pipeline 4000 STATUS requests, read nothing.
+    let mut stalled = TcpStream::connect(&addr).expect("connect");
+    stalled.set_write_timeout(Some(Duration::from_secs(2))).unwrap();
+    let line = b"{\"cmd\":\"STATUS\"}\n";
+    let mut sent = 0usize;
+    for _ in 0..4000 {
+        match stalled.write_all(line) {
+            Ok(()) => sent += 1,
+            Err(_) => break, // our own buffer filled — plenty already queued
+        }
+    }
+    assert!(sent > 100, "could not queue enough pipelined requests ({sent})");
+
+    // From a well-behaved connection: the write timeout must fire.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let m = request(&addr, &cmd(vec![("cmd", "METRICS".into())])).expect("METRICS");
+        if m.get("write_errors").as_u64().unwrap_or(0) >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "stalled reader never disconnected: {m:?}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    // Shutdown must not wait on the stalled socket (still open, unread).
+    let dr = request(&addr, &cmd(vec![("cmd", "DRAIN".into())])).expect("DRAIN");
+    assert_eq!(dr.get("ok").as_bool(), Some(true), "{dr:?}");
+    let t0 = Instant::now();
+    server.join().expect("server thread");
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "shutdown stalled for {:?} behind a non-reading client",
+        t0.elapsed()
+    );
+    drop(stalled);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- tentpole: explicit backpressure on a full command queue ----------------
+
+/// With the executor stuck in one long slice and `queue_cap: 1`, extra
+/// commands must get `{"ok":false,"error":"queue full..."}` immediately —
+/// and METRICS, served connection-side, must keep answering.
+#[test]
+fn full_queue_rejects_explicitly_and_metrics_still_answers() {
+    let dir = temp_dir("queuefull");
+    let (addr, server) = spawn_server(ServeOptions {
+        sched: sched(2, 5),
+        queue_cap: 1,
+        ..ServeOptions::default()
+    });
+
+    // One 300-step slice: the job asks for max_slice_steps == total, so
+    // the executor is busy for the whole job (per-job slices are the
+    // tenant's right; only the *default* is coerced).
+    let c = cfg("one-big-slice", 300, &dir.to_string_lossy());
+    let resp = request(
+        &addr,
+        &cmd(vec![
+            ("cmd", "SUBMIT".into()),
+            ("config", c.to_json()),
+            ("max_slice_steps", 300usize.into()),
+        ]),
+    )
+    .expect("SUBMIT");
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+
+    // Wait for the executor to enter the slice.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let m = request(&addr, &cmd(vec![("cmd", "METRICS".into())])).expect("METRICS");
+        if m.get("executor_busy").as_u64() == Some(1) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "executor never got busy: {m:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Concurrent STATUS burst: capacity for one queued command, the rest
+    // must be rejected with a reason — promptly, not at the slice end.
+    let outcomes: Vec<(bool, Duration)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let addr = &addr;
+                scope.spawn(move || {
+                    let t0 = Instant::now();
+                    let r = request(addr, &cmd(vec![("cmd", "STATUS".into())]))
+                        .expect("STATUS under load");
+                    let rejected = r.get("ok").as_bool() == Some(false)
+                        && r.get("error").as_str().unwrap_or("").contains("queue full");
+                    if !rejected {
+                        assert_eq!(r.get("ok").as_bool(), Some(true), "{r:?}");
+                    }
+                    (rejected, t0.elapsed())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("status thread")).collect()
+    });
+    let rejected = outcomes.iter().filter(|(r, _)| *r).count();
+    assert!(rejected >= 1, "no explicit queue-full reject out of 6 concurrent commands");
+    for (r, took) in &outcomes {
+        if *r {
+            assert!(
+                *took < Duration::from_secs(5),
+                "queue-full reject took {took:?} — backpressure must not stall"
+            );
+        }
+    }
+
+    // METRICS still answers from the connection side during the jam.
+    let m = request(&addr, &cmd(vec![("cmd", "METRICS".into())])).expect("METRICS");
+    assert_eq!(m.get("ok").as_bool(), Some(true), "{m:?}");
+    assert!(m.path("rejects.queue").as_u64().unwrap_or(0) >= 1, "{m:?}");
+
+    let dr = request(&addr, &cmd(vec![("cmd", "DRAIN".into())])).expect("DRAIN");
+    assert_eq!(dr.get("ok").as_bool(), Some(true), "{dr:?}");
+    let stats = server.join().expect("server thread");
+    assert_eq!(stats.completed, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- robustness: oversized / split / garbage / early-disconnect -------------
+
+#[test]
+fn oversized_line_gets_error_reply_then_close() {
+    let dir = temp_dir("oversize");
+    let (addr, server) = spawn_server(ServeOptions {
+        sched: sched(2, 5),
+        max_request_bytes: 2048,
+        ..ServeOptions::default()
+    });
+
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    s.write_all(&vec![b'x'; 5000]).expect("oversized write");
+    let mut reader = BufReader::new(s);
+    let mut reply = String::new();
+    reader.read_line(&mut reply).expect("error reply");
+    let v = Json::parse(reply.trim()).expect("reply parses");
+    assert_eq!(v.get("ok").as_bool(), Some(false), "{v:?}");
+    assert!(
+        v.get("error").as_str().unwrap_or("").contains("exceeds max length"),
+        "{v:?}"
+    );
+    // The server cannot resynchronize mid-line: the connection closes.
+    let mut rest = String::new();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match reader.read_line(&mut rest) {
+            Ok(0) => break,
+            Ok(_) => panic!("server kept talking after an oversized line: {rest:?}"),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(_) => break,
+        }
+        assert!(Instant::now() < deadline, "connection not closed");
+    }
+
+    // ...but the server itself is fine.
+    let m = request(&addr, &cmd(vec![("cmd", "METRICS".into())])).expect("METRICS");
+    assert!(m.path("rejects.oversize").as_u64().unwrap_or(0) >= 1, "{m:?}");
+    let dr = request(&addr, &cmd(vec![("cmd", "DRAIN".into())])).expect("DRAIN");
+    assert_eq!(dr.get("ok").as_bool(), Some(true), "{dr:?}");
+    server.join().expect("server thread");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn split_writes_garbage_and_early_disconnects_do_not_kill_the_server() {
+    let dir = temp_dir("robust");
+    let (addr, server) = spawn_server(ServeOptions {
+        sched: sched(2, 5),
+        ..ServeOptions::default()
+    });
+
+    // (a) one request split across three writes, slower than the server's
+    // read-poll interval: the line reader must reassemble it.
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    for chunk in [&b"{\"cmd\":"[..], &b"\"STA"[..], &b"TUS\"}\n"[..]] {
+        s.write_all(chunk).expect("chunk");
+        s.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+    }
+    let mut reader = BufReader::new(s.try_clone().expect("clone"));
+    let mut reply = String::new();
+    reader.read_line(&mut reply).expect("reassembled reply");
+    let v = Json::parse(reply.trim()).expect("reply parses");
+    assert_eq!(v.get("ok").as_bool(), Some(true), "{v:?}");
+
+    // (b) binary garbage on the same connection: an error reply, and the
+    // connection keeps working afterwards (newline resynchronizes).
+    s.write_all(b"\x80\x81\xfe\xff\n").expect("garbage");
+    reply.clear();
+    reader.read_line(&mut reply).expect("garbage reply");
+    let v = Json::parse(reply.trim()).expect("reply parses");
+    assert_eq!(v.get("ok").as_bool(), Some(false), "{v:?}");
+    assert!(v.get("error").as_str().unwrap_or("").contains("utf-8"), "{v:?}");
+    s.write_all(b"{\"cmd\":\"STATUS\"}\n").expect("follow-up");
+    reply.clear();
+    reader.read_line(&mut reply).expect("follow-up reply");
+    assert_eq!(Json::parse(reply.trim()).unwrap().get("ok").as_bool(), Some(true));
+    drop(reader);
+    drop(s);
+
+    // (c) early disconnect: fire a request and hang up without reading.
+    for _ in 0..8 {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.write_all(b"{\"cmd\":\"STATUS\"}\n").expect("fire");
+        drop(s); // reply has nowhere to go
+    }
+
+    // The server survives all of it, and no connection slot leaks: once
+    // the dust settles the only active connection is the probe itself.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let m = request(&addr, &cmd(vec![("cmd", "METRICS".into())])).expect("METRICS");
+        if m.get("conns_active").as_u64() == Some(1) {
+            assert!(m.get("conns_total").as_u64().unwrap_or(0) >= 10, "{m:?}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "connection slots leaked: {m:?}");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+
+    let dr = request(&addr, &cmd(vec![("cmd", "DRAIN".into())])).expect("DRAIN");
+    assert_eq!(dr.get("ok").as_bool(), Some(true), "{dr:?}");
+    server.join().expect("server thread");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- batched SUBMIT ---------------------------------------------------------
+
+/// The `jobs` array form crosses the queue as one command and returns a
+/// per-entry verdict: partial failure must not poison the batch.
+#[test]
+fn batched_submit_returns_per_entry_verdicts() {
+    let dir = temp_dir("batch");
+    let (addr, server) = spawn_server(ServeOptions {
+        sched: sched(2, 5),
+        ..ServeOptions::default()
+    });
+    let save = dir.to_string_lossy().into_owned();
+
+    let good = |label: &str| {
+        Json::obj(vec![("config", cfg(label, 4, &save).to_json())])
+    };
+    let mut bad_cfg = cfg("bad", 4, &save);
+    bad_cfg.family = "not-a-family".into();
+    let batch = cmd(vec![
+        ("cmd", "SUBMIT".into()),
+        (
+            "jobs",
+            Json::Arr(vec![
+                good("batch-a"),
+                Json::obj(vec![("config", bad_cfg.to_json())]),
+                good("batch-b"),
+            ]),
+        ),
+    ]);
+    let resp = request(&addr, &batch).expect("batched SUBMIT");
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let verdicts = match resp.get("jobs") {
+        Json::Arr(a) => a.clone(),
+        other => panic!("no per-entry verdicts: {other:?}"),
+    };
+    assert_eq!(verdicts.len(), 3, "{resp:?}");
+    assert_eq!(verdicts[0].get("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(verdicts[2].get("ok").as_bool(), Some(true), "{resp:?}");
+    assert_eq!(verdicts[1].get("ok").as_bool(), Some(false), "{resp:?}");
+    assert!(
+        verdicts[1].get("error").as_str().unwrap_or("").contains("not-a-family"),
+        "{resp:?}"
+    );
+    assert_ne!(
+        verdicts[0].get("job").as_u64(),
+        verdicts[2].get("job").as_u64(),
+        "{resp:?}"
+    );
+
+    let dr = request(&addr, &cmd(vec![("cmd", "DRAIN".into())])).expect("DRAIN");
+    assert_eq!(dr.get("ok").as_bool(), Some(true), "{dr:?}");
+    let stats = server.join().expect("server thread");
+    assert_eq!(stats.completed, 2, "both good entries ran to completion");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- satellite 3 on the wire: ids above 2^53 stay exact ---------------------
+
+/// Wire integers used to round-trip through f64, silently corrupting ids
+/// above 2^53. The id embedded in the error reply must match the request
+/// digit-for-digit at u64::MAX and at 2^53 + 1 (the first f64-unrepresentable
+/// integer).
+#[test]
+fn job_ids_above_2_pow_53_round_trip_exactly() {
+    let dir = temp_dir("bigids");
+    let (addr, server) = spawn_server(ServeOptions {
+        sched: sched(2, 5),
+        ..ServeOptions::default()
+    });
+
+    for id in ["18446744073709551615", "9007199254740993"] {
+        for verb in ["STATUS", "CANCEL"] {
+            let mut s = TcpStream::connect(&addr).expect("connect");
+            s.write_all(format!("{{\"cmd\":\"{verb}\",\"job\":{id}}}\n").as_bytes())
+                .expect("request");
+            let mut reply = String::new();
+            BufReader::new(s).read_line(&mut reply).expect("reply");
+            let v = Json::parse(reply.trim()).expect("reply parses");
+            assert_eq!(v.get("ok").as_bool(), Some(false), "{v:?}");
+            let err = v.get("error").as_str().unwrap_or("").to_string();
+            assert!(
+                err.contains(id),
+                "{verb} id {id} corrupted on the wire: {err:?}"
+            );
+        }
+    }
+
+    let dr = request(&addr, &cmd(vec![("cmd", "DRAIN".into())])).expect("DRAIN");
+    assert_eq!(dr.get("ok").as_bool(), Some(true), "{dr:?}");
+    server.join().expect("server thread");
+    let _ = std::fs::remove_dir_all(&dir);
+}

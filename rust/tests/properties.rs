@@ -7,7 +7,11 @@
 //!   consumed) under composed CL + LTD schedules;
 //! * seqres preserves the token count of every sampled sequence, while
 //!   seqtru strictly reduces it (the §3.1 distinction between the two
-//!   length transforms).
+//!   length transforms);
+//! * JSON wire integers round-trip losslessly across the full u64/i64
+//!   range (the control plane's job ids), and integers no integer type
+//!   can represent exactly are rejected, never silently truncated
+//!   (ISSUE 6 precision satellite).
 
 use dsde::config::schema::*;
 use dsde::curriculum::loader::{BatchPlan, LoaderCore};
@@ -278,6 +282,113 @@ fn prop_shard_slices_reassemble_global_batch() {
         }
         if dt != b.data_tokens {
             return Err(format!("shard data_tokens sum {dt} != {}", b.data_tokens));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON wire integers (ISSUE 6 precision satellite): `as_usize`/`as_i64`
+// used to round-trip through f64, corrupting every integer above 2^53.
+
+#[test]
+fn prop_json_u64_round_trips_digit_for_digit() {
+    use dsde::config::json::Json;
+    property("u64 wire round-trip", 96, |rng| {
+        // Bias the draw toward the boundaries where the old f64 path broke:
+        // the 2^53 exactness window edge, i64::MAX, and u64::MAX.
+        let v: u64 = match rng.gen_range(5) {
+            0 => rng.next_u64(),
+            1 => (1u64 << 53).wrapping_add(rng.gen_range(9) as u64).wrapping_sub(4),
+            2 => u64::MAX - rng.gen_range(4) as u64,
+            3 => (i64::MAX as u64).wrapping_add(rng.gen_range(5) as u64).wrapping_sub(2),
+            _ => rng.gen_range(u32::MAX) as u64,
+        };
+        let text = v.to_string();
+        let parsed = Json::parse(&text).map_err(|e| format!("parse {text}: {e:#}"))?;
+        if parsed.as_u64() != Some(v) {
+            return Err(format!("as_u64({text}) = {:?}, want {v}", parsed.as_u64()));
+        }
+        if parsed.to_string_compact() != text {
+            return Err(format!(
+                "serialize({text}) = {} — wire digits corrupted",
+                parsed.to_string_compact()
+            ));
+        }
+        // a second parse→print cycle is a fixpoint
+        let again = Json::parse(&parsed.to_string_compact()).map_err(|e| format!("{e:#}"))?;
+        if again.as_u64() != Some(v) {
+            return Err(format!("second round-trip lost {v}"));
+        }
+        // usize (64-bit targets) sees the same exact value
+        if parsed.as_usize() != Some(v as usize) {
+            return Err(format!("as_usize({text}) = {:?}", parsed.as_usize()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_i64_round_trips_digit_for_digit() {
+    use dsde::config::json::Json;
+    property("i64 wire round-trip", 96, |rng| {
+        let v: i64 = match rng.gen_range(5) {
+            0 => rng.next_u64() as i64,
+            1 => i64::MIN + rng.gen_range(4) as i64,
+            2 => i64::MAX - rng.gen_range(4) as i64,
+            3 => -(((1u64 << 53) as i64).wrapping_add(rng.gen_range(9) as i64 - 4)),
+            _ => rng.gen_range(u32::MAX) as i64 - (u32::MAX / 2) as i64,
+        };
+        let text = v.to_string();
+        let parsed = Json::parse(&text).map_err(|e| format!("parse {text}: {e:#}"))?;
+        if parsed.as_i64() != Some(v) {
+            return Err(format!("as_i64({text}) = {:?}, want {v}", parsed.as_i64()));
+        }
+        if parsed.to_string_compact() != text {
+            return Err(format!(
+                "serialize({text}) = {} — wire digits corrupted",
+                parsed.to_string_compact()
+            ));
+        }
+        // From<i64> agrees with the parser on the wire form
+        if Json::from(v).to_string_compact() != text {
+            return Err(format!("From<i64>({v}) prints differently"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_unrepresentable_integers_rejected_not_truncated() {
+    use dsde::config::json::Json;
+    property("unrepresentable rejected", 64, |rng| {
+        // (a) float-notation integers beyond the 2^53 exactness window:
+        // the f64 carries rounding error, so integer accessors must refuse.
+        let beyond = (1u64 << 53) + 1 + (rng.next_u64() >> 20);
+        let text = format!("{beyond}.0");
+        let parsed = Json::parse(&text).map_err(|e| format!("{e:#}"))?;
+        if parsed.as_u64().is_some() || parsed.as_i64().is_some() || parsed.as_usize().is_some()
+        {
+            return Err(format!(
+                "{text} is not exactly representable but an integer accessor accepted it"
+            ));
+        }
+        if parsed.as_f64().is_none() {
+            return Err(format!("{text} must still be readable as f64"));
+        }
+        // (b) digit strings beyond u64::MAX: no integer accessor may
+        // silently wrap or truncate.
+        let overflow = format!("{}{}", u64::MAX, rng.gen_range(10));
+        let parsed = Json::parse(&overflow).map_err(|e| format!("{e:#}"))?;
+        if parsed.as_u64().is_some() || parsed.as_i64().is_some() {
+            return Err(format!("{overflow} overflows u64 but was accepted as an integer"));
+        }
+        // (c) in-window float notation stays accepted: the window edge
+        // itself is exact.
+        let edge = 1u64 << 53;
+        let parsed = Json::parse(&format!("{edge}.0")).map_err(|e| format!("{e:#}"))?;
+        if parsed.as_u64() != Some(edge) {
+            return Err(format!("2^53 (exact in f64) was rejected: {parsed:?}"));
         }
         Ok(())
     });

@@ -362,6 +362,51 @@ fn drr_share_weights_the_interleave() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+#[test]
+fn speculative_picks_do_not_skew_shares() {
+    // Regression (fairness skew): `next_job` used to accrue DRR deficits
+    // as a side effect, so idle polling or lookahead without a matching
+    // `run_slice` inflated credits and bent the share ratios. The pick is
+    // now pure — a drain interleaved with heavy speculative picking must
+    // produce the exact same slice log as an undisturbed drain.
+    let env = env();
+    let run = |tag: &str, spurious_picks: usize| {
+        let dir = temp_dir(tag);
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_active: 4,
+            default_slice: 2,
+            quantum: 1,
+            cleanup_done: false,
+        });
+        for (label, share) in [("pure-2", 2u32), ("pure-1", 1u32)] {
+            let mut cfg = case("gpt", label, vec![seqtru(64)], ltd(16));
+            cfg.total_steps = 8;
+            cfg.eval_every = 4;
+            cfg.save_dir = dir.to_string_lossy().into_owned();
+            let mut spec = JobSpec::new(cfg);
+            spec.share = share;
+            s.submit(spec).unwrap();
+        }
+        loop {
+            for _ in 0..spurious_picks {
+                let _ = s.next_job(); // idle polling / lookahead
+            }
+            match s.next_job() {
+                Some(id) => s.run_slice(&env, id).unwrap(),
+                None => break,
+            }
+        }
+        let log = s.slice_log().to_vec();
+        let deficits: Vec<i64> = s.jobs().iter().map(|j| j.deficit()).collect();
+        let _ = std::fs::remove_dir_all(&dir);
+        (log, deficits)
+    };
+    let (clean_log, clean_deficits) = run("purepick-clean", 0);
+    let (polled_log, polled_deficits) = run("purepick-polled", 50);
+    assert_eq!(clean_log, polled_log, "speculative picks changed the schedule");
+    assert_eq!(clean_deficits, polled_deficits, "speculative picks inflated DRR credit");
+}
+
 // ---- Cancel ---------------------------------------------------------------
 
 #[test]
@@ -517,6 +562,7 @@ fn control_plane_end_to_end() {
                     cleanup_done: false,
                 },
                 default_family: "gpt".into(),
+                ..ServeOptions::default()
             },
         )
         .expect("serve_with")
