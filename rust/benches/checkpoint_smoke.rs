@@ -10,7 +10,8 @@
 //!
 //! `DSDE_BENCH_QUICK=1` shrinks the run for the CI smoke job.
 
-use dsde::bench::{scaled, Table};
+use dsde::bench::{history_append, scaled, Table};
+use dsde::config::json::Json;
 use dsde::exp::cases::dp_scaling_cases;
 use dsde::train::TrainEnv;
 
@@ -73,6 +74,16 @@ fn main() -> dsde::Result<()> {
     };
     let save_ok = identical(&saved);
     let resume_ok = identical(&resumed) && resumed.resumed_at == save_at;
+    history_append(
+        "checkpoint_smoke",
+        &Json::obj(vec![
+            ("steps", (steps as usize).into()),
+            ("save_at", (save_at as usize).into()),
+            ("snapshot_bytes", (snap_bytes as usize).into()),
+            ("save_overhead_s", (save_wall - reference.wall_secs).into()),
+            ("bit_identical", (save_ok && resume_ok).into()),
+        ]),
+    )?;
     println!(
         "\nshape check:\n  [{}] saving perturbs nothing (bit-identical to uninterrupted)\n  \
          [{}] resume at step {save_at} is bit-identical end-to-end",

@@ -1,0 +1,230 @@
+//! sched_replay — fleet-scale policy replay (ISSUE 7 tentpole).
+//!
+//! Drives 10⁴ (quick) / 10⁵ (full) synthetic `JobSpec`s through the real
+//! admission + deficit-round-robin machinery **in closed form**
+//! (`Scheduler::simulate_slice`: every pick, credit accrual, debit and
+//! state transition is the production code path — only the training
+//! itself is replaced by "the slice executes its budget"). Reports
+//! ns/decision and a Jain fairness index over the slice log, and checks
+//! the pick sequence bit-for-bit against an **independent reference
+//! replay** — a from-scratch implementation of the documented policy
+//! (full-scan admission sort + iterative DRR pass loop, none of the
+//! scheduler's incremental-index or closed-form shortcuts). Any drift
+//! exits non-zero, so CI goes red if an optimization ever changes a
+//! scheduling decision. Emits `runs/BENCH_sched_replay.json`.
+//!
+//! `DSDE_BENCH_QUICK=1` shrinks the run for the CI smoke job.
+
+use dsde::bench::{history_append, scaled, Table};
+use dsde::config::json::Json;
+use dsde::config::schema::RunConfig;
+use dsde::orch::{JobSpec, Scheduler, SchedulerConfig};
+
+const MAX_ACTIVE: usize = 16;
+const SLICE: u64 = 16;
+const QUANTUM: u64 = 4;
+
+/// Deterministic spec mix: 3 priority classes, shares 1–4, 8–64 steps.
+fn synth_specs(n: usize) -> Vec<JobSpec> {
+    let mut state: u64 = 0x9e37_79b9_7f4a_7c15;
+    let mut rng = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    (0..n)
+        .map(|i| {
+            let steps = 8 + rng() % 57;
+            let mut c = RunConfig::baseline("gpt", steps, 1e-3);
+            c.label = format!("synthetic-{i}");
+            let mut spec = JobSpec::new(c);
+            spec.priority = 1 + (rng() % 3) as u32;
+            spec.share = 1 + (rng() % 4) as u32;
+            spec
+        })
+        .collect()
+}
+
+/// Reference replay: the documented policy, implemented the slow obvious
+/// way. Admission re-scans and re-sorts every runnable job per pick; the
+/// DRR ring is walked pass by pass, accruing `quantum × share` per visit
+/// until a job's credit covers its slice. Deliberately shares no code
+/// (and no algorithmic shortcut) with `orch::scheduler`.
+fn reference_replay(specs: &[JobSpec]) -> Vec<(u64, u64)> {
+    struct RefJob {
+        id: u64,
+        priority: u32,
+        share: u64,
+        remaining: u64,
+        deficit: i64,
+    }
+    let mut jobs: Vec<RefJob> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| RefJob {
+            id: i as u64 + 1,
+            priority: s.priority,
+            share: s.share as u64,
+            remaining: s.config.total_steps,
+            deficit: 0,
+        })
+        .collect();
+    let mut cursor: u64 = 0;
+    let mut log = Vec::new();
+    loop {
+        // admission: full scan, sort by (priority desc, arrival asc)
+        let mut runnable: Vec<usize> =
+            (0..jobs.len()).filter(|&i| jobs[i].remaining > 0).collect();
+        if runnable.is_empty() {
+            break;
+        }
+        runnable.sort_by_key(|&i| (std::cmp::Reverse(jobs[i].priority), i));
+        runnable.truncate(MAX_ACTIVE);
+        let top = jobs[runnable[0]].priority;
+        let ring: Vec<usize> =
+            runnable.into_iter().filter(|&i| jobs[i].priority == top).collect();
+        let start = ring.iter().position(|&i| jobs[i].id > cursor).unwrap_or(0);
+        // iterative DRR: pass over the ring until credit covers a slice
+        let winner = 'outer: loop {
+            for k in 0..ring.len() {
+                let i = ring[(start + k) % ring.len()];
+                let accrual = QUANTUM
+                    .saturating_mul(jobs[i].share)
+                    .clamp(1, i64::MAX as u64) as i64;
+                jobs[i].deficit = jobs[i].deficit.saturating_add(accrual);
+                let cost = SLICE.min(jobs[i].remaining).min(i64::MAX as u64) as i64;
+                if jobs[i].deficit >= cost {
+                    break 'outer i;
+                }
+            }
+        };
+        let executed = SLICE.min(jobs[winner].remaining);
+        jobs[winner].deficit -= executed as i64;
+        jobs[winner].remaining -= executed;
+        cursor = jobs[winner].id;
+        log.push((jobs[winner].id, executed));
+    }
+    log
+}
+
+/// Jain fairness index over share-normalized service: J = (Σx)²/(n·Σx²),
+/// x_i = steps job i received in the window / share_i. 1.0 = perfectly
+/// proportional; 1/n = one job hogged everything.
+fn jain(window: &[(u64, u64)], specs: &[JobSpec]) -> f64 {
+    use std::collections::HashMap;
+    let mut served: HashMap<u64, u64> = HashMap::new();
+    for &(id, steps) in window {
+        *served.entry(id).or_default() += steps;
+    }
+    let xs: Vec<f64> = served
+        .iter()
+        .map(|(&id, &steps)| steps as f64 / specs[id as usize - 1].share as f64)
+        .collect();
+    let n = xs.len() as f64;
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    sum * sum / (n * sq)
+}
+
+fn main() -> dsde::Result<()> {
+    let n_jobs = scaled(100_000, 10_000) as usize;
+    let n_ref = scaled(2_000, 500) as usize;
+    let cfg = SchedulerConfig {
+        max_active: MAX_ACTIVE,
+        default_slice: SLICE,
+        quantum: QUANTUM,
+        cleanup_done: false,
+    };
+    eprintln!(
+        "== sched_replay: {n_jobs} synthetic jobs, pool {MAX_ACTIVE}, \
+         slice {SLICE}, quantum {QUANTUM} =="
+    );
+
+    // ---- drift check: indexed scheduler vs independent reference -----------
+    let ref_specs = synth_specs(n_ref);
+    let mut ref_sched = Scheduler::new(cfg.clone());
+    for spec in ref_specs.clone() {
+        ref_sched.submit(spec)?;
+    }
+    ref_sched.simulate_drain()?;
+    let expected = reference_replay(&ref_specs);
+    let got = ref_sched.slice_log();
+    let drift = got != expected.as_slice();
+    if drift {
+        let at = got
+            .iter()
+            .zip(&expected)
+            .position(|(a, b)| a != b)
+            .unwrap_or_else(|| got.len().min(expected.len()));
+        eprintln!(
+            "DRIFT at slice {at}: scheduler {:?} vs reference {:?} \
+             (log lengths {} vs {})",
+            got.get(at),
+            expected.get(at),
+            got.len(),
+            expected.len()
+        );
+    }
+
+    // ---- fleet-scale replay: ns/decision + fairness ------------------------
+    let specs = synth_specs(n_jobs);
+    let mut sched = Scheduler::new(cfg);
+    let t0 = std::time::Instant::now();
+    for spec in specs.clone() {
+        sched.submit(spec)?;
+    }
+    let submit_wall = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let slices = sched.simulate_drain()?;
+    let drain_wall = t1.elapsed().as_secs_f64();
+    assert!(sched.all_terminal(), "replay must drain every job");
+    assert_eq!(sched.stats().completed, n_jobs as u64, "every job must complete");
+    let ns_per_decision = drain_wall * 1e9 / slices.max(1) as f64;
+    let ns_per_submit = submit_wall * 1e9 / n_jobs.max(1) as f64;
+    // Fairness window: the first half of the log, where the pool is still
+    // contended — a drained log as a whole only measures the spec mix.
+    let log = sched.slice_log();
+    let fairness = jain(&log[..log.len() / 2], &specs);
+
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(vec!["jobs".into(), n_jobs.to_string()]);
+    t.row(vec!["decisions (slices)".into(), slices.to_string()]);
+    t.row(vec!["submit ns/job".into(), format!("{ns_per_submit:.0}")]);
+    t.row(vec!["decision ns".into(), format!("{ns_per_decision:.0}")]);
+    t.row(vec!["jain fairness".into(), format!("{fairness:.4}")]);
+    t.row(vec![
+        format!("drift vs reference ({n_ref} jobs)"),
+        if drift { "DRIFT".into() } else { "none".into() },
+    ]);
+    println!("\nfleet-scale policy replay:");
+    t.print();
+    t.save_csv("sched_replay")?;
+
+    let report = Json::obj(vec![
+        ("n_jobs", n_jobs.into()),
+        ("decisions", (slices as usize).into()),
+        ("submit_ns_per_job", ns_per_submit.into()),
+        ("decision_ns", ns_per_decision.into()),
+        ("jain_fairness", fairness.into()),
+        ("drift_check_jobs", n_ref.into()),
+        ("pick_sequence_identical", (!drift).into()),
+    ]);
+    std::fs::create_dir_all("runs")?;
+    std::fs::write("runs/BENCH_sched_replay.json", report.to_string_compact())?;
+    history_append("sched_replay", &report)?;
+    println!("report -> runs/BENCH_sched_replay.json");
+
+    println!(
+        "\nshape check:\n  [{}] pick sequence identical to the independent reference replay",
+        if drift { "FAIL" } else { "PASS" }
+    );
+    if drift {
+        // Enforcing, not advisory: optimizations must not change decisions.
+        std::process::exit(1);
+    }
+    Ok(())
+}

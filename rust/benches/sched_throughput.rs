@@ -13,7 +13,7 @@
 //!
 //! `DSDE_BENCH_QUICK=1` shrinks the run for the CI smoke job.
 
-use dsde::bench::{scaled, Table};
+use dsde::bench::{history_append, scaled, Table};
 use dsde::config::json::Json;
 use dsde::config::schema::{Bound, ClConfig, LtdConfig, Metric, Routing, RunConfig};
 use dsde::exp::run_cases;
@@ -149,6 +149,7 @@ fn main() -> dsde::Result<()> {
     ]);
     std::fs::create_dir_all("runs")?;
     std::fs::write("runs/BENCH_sched.json", report.to_string_compact())?;
+    history_append("sched_throughput", &report)?;
     println!("report -> runs/BENCH_sched.json");
 
     println!(

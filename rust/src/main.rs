@@ -29,14 +29,25 @@
 //!                                   target for gen_stub_artifacts.py)
 //! dsde serve [--addr A] [--docs N] [--jobs J] [--default-slice S]
 //!            [--conn-threads T] [--queue-cap Q] [--conn-backlog B]
-//!            [--max-request-bytes M]
+//!            [--max-request-bytes M] [--save-dir DIR] [--recover]
 //!                                   host the multi-tenant scheduler's TCP
 //!                                   control plane (J-wide executor pool,
 //!                                   S-step time slices, T-wide connection
 //!                                   pool over bounded queues — overload
-//!                                   rejects explicitly, never stalls)
+//!                                   rejects explicitly, never stalls;
+//!                                   --save-dir DIR: journal accepted jobs
+//!                                   and terminal transitions to an fsync'd
+//!                                   DIR/jobs.jsonl; --recover: rebuild the
+//!                                   scheduler from DIR after a crash —
+//!                                   preempted jobs resume bit-identically
+//!                                   from their last boundary snapshot,
+//!                                   queued jobs requeue in submission
+//!                                   order)
 //! dsde submit [--addr A] [train flags] [--priority P] [--share W] [--slice S]
 //!                                   submit a run to a control plane
+//!                                   (--resume PATH: post-mortem restart
+//!                                   from a failed/cancelled job's last
+//!                                   journaled snapshot)
 //! dsde status [--addr A] [--job N]  job table (or one job) + stats
 //! dsde cancel --job N [--addr A]    cancel a job (its last boundary
 //!                                   snapshot is kept and stays resumable)
@@ -425,8 +436,13 @@ fn serve(args: &Args) -> dsde::Result<()> {
         max_request_bytes: args
             .get_u64("max-request-bytes", defaults.max_request_bytes as u64)?
             as usize,
+        save_dir: args.get_str("save-dir", "").to_string(),
+        recover: args.flag("recover"),
         ..defaults
     };
+    if opts.recover && opts.save_dir.is_empty() {
+        bail!("serve --recover requires --save-dir DIR (the directory to recover from)");
+    }
     println!(
         "dsde control plane listening on {bound} (executor pool {}, slice {} steps, \
          {} conn threads, queue cap {})",
@@ -435,6 +451,13 @@ fn serve(args: &Args) -> dsde::Result<()> {
         opts.conn_threads,
         opts.queue_cap
     );
+    if !opts.save_dir.is_empty() {
+        println!(
+            "durable job state: {}/jobs.jsonl{}",
+            opts.save_dir,
+            if opts.recover { " (recovering)" } else { "" }
+        );
+    }
     println!("building shared environment ({} docs)...", args.get_u64("docs", 1000)?);
     let env = TrainEnv::new(args.get_u64("docs", 1000)? as usize, 7)?;
     let stats = serve_with(&env, listener, opts)?;
@@ -463,11 +486,12 @@ fn expect_ok(resp: &Json) -> dsde::Result<()> {
 fn submit(args: &Args) -> dsde::Result<()> {
     let addr = args.get_str("addr", DEFAULT_ADDR);
     let cfg = run_config_from_args(args)?;
-    if cfg.resume.is_some() {
-        bail!(
-            "submit does not carry --resume: preemption/resume of scheduled jobs \
-             is managed by the server (each job gets its own snapshot namespace)"
-        );
+    if let Some(p) = &cfg.resume {
+        // Preemption/resume of *live* jobs is managed by the server; an
+        // explicit --resume is the post-mortem restart path: the server
+        // accepts it only for manual checkpoints or snapshots whose
+        // owning job is terminal (failed/cancelled/done).
+        println!("requesting post-mortem resume from {p}");
     }
     let req = Json::obj(vec![
         ("cmd", "SUBMIT".into()),

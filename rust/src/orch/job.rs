@@ -49,6 +49,21 @@ impl JobState {
         }
     }
 
+    /// Parse a wire/display name back into a state (the inverse of
+    /// [`JobState::name`]); `None` for anything unrecognized. Used when
+    /// replaying journaled terminal records (`orch::recover`).
+    pub fn from_name(s: &str) -> Option<JobState> {
+        Some(match s {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "preempted" => JobState::Preempted,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            "cancelled" => JobState::Cancelled,
+            _ => return None,
+        })
+    }
+
     /// Whether the state is final (the scheduler will never run the job
     /// again).
     pub fn terminal(self) -> bool {
@@ -287,6 +302,17 @@ impl Job {
         if let Some(r) = &self.result {
             pairs.push(("eval_loss", r.final_eval_loss.into()));
             pairs.push(("state_hash", format!("{:016x}", r.state_hash).into()));
+            pairs.push(("data_tokens", Json::from(r.data_tokens)));
+            // FNV-1a over the per-step losses' raw f32 bytes: a bit-exact
+            // loss-trajectory witness that survives the wire (float
+            // formatting can't), used by the crash-recovery suite to
+            // prove a recovered drain identical to an uninterrupted run.
+            let bytes: Vec<u8> =
+                r.step_losses.iter().flat_map(|l| l.to_bits().to_le_bytes()).collect();
+            pairs.push((
+                "losses_fnv",
+                format!("{:016x}", crate::train::checkpoint::fnv1a(&bytes)).into(),
+            ));
         }
         Json::obj(pairs)
     }

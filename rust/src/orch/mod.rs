@@ -14,16 +14,27 @@
 //! the `dsde serve` / `submit` / `status` / `cancel` / `drain` /
 //! `metrics` CLI subcommands.
 //!
+//! [`recover`] makes the whole thing crash-safe: submissions and
+//! terminal transitions are journaled to an fsync'd `jobs.jsonl` as they
+//! happen, and `dsde serve --recover` rebuilds the scheduler from the
+//! journal plus the per-job boundary snapshots — queued jobs requeue in
+//! submission order, preempted jobs resume bit-identically from their
+//! last boundary.
+//!
 //! See DESIGN.md §Job-scheduler for the policy, §Control-plane for the
-//! wire protocol and front-end architecture, `tests/scheduler.rs` for the
-//! bit-identity invariant suite, `tests/ctl_protocol.rs` for the wire
-//! robustness suite, and `benches/ctl_load.rs` for the concurrent-load
-//! harness.
+//! wire protocol and front-end architecture, §Recovery for the journal
+//! and restart path, `tests/scheduler.rs` for the bit-identity invariant
+//! suite, `tests/crash_recovery.rs` for the crash-injection suite,
+//! `tests/ctl_protocol.rs` for the wire robustness suite, and
+//! `benches/ctl_load.rs` / `benches/sched_replay.rs` for the
+//! concurrent-load and fleet-scale policy harnesses.
 
 pub mod job;
+pub mod recover;
 pub mod scheduler;
 pub mod server;
 
 pub use job::{Job, JobSpec, JobState};
+pub use recover::{recover, scan_namespace, Journal, NamespaceScan, RecoveryReport};
 pub use scheduler::{SchedStats, Scheduler, SchedulerConfig};
 pub use server::{request, serve_with, ServeOptions, DEFAULT_SERVE_SLICE, MAX_SUBMIT_BATCH};

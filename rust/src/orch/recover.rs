@@ -1,0 +1,348 @@
+//! Crash recovery for the serving scheduler: the durable job journal
+//! and the restart path that rebuilds a [`Scheduler`] from a `save_dir`.
+//!
+//! # What is durable
+//!
+//! Two artifacts survive a crash of the serving process:
+//!
+//! * **`save_dir/jobs.jsonl`** — the [`Journal`]: one fsync'd JSON line
+//!   per accepted submission (`{"event":"submit","id":N,"spec":{…}}`,
+//!   the spec **as submitted**, before save-dir defaulting and
+//!   namespacing) and per terminal transition
+//!   (`{"event":"terminal","id":N,"state":…,"completed_steps":N,
+//!   "checkpoint":…,"error":…}`).
+//! * **`save_dir/job-NNNNNN/step{N:06}.ckpt`** — the per-job boundary
+//!   snapshots the preemptive scheduler already writes (bit-exact,
+//!   atomically published, durable after the PR-7 rename fix).
+//!
+//! # Recovery ([`recover`])
+//!
+//! 1. Replay the journal in file order (which is id order — ids are
+//!    assigned chronologically). Each `submit` record goes back through
+//!    [`Scheduler::submit`], which re-derives the same id and the same
+//!    namespace — the **id-stability invariant**: replay bails if a
+//!    replayed id ever disagrees with the journaled one. Each `terminal`
+//!    record settles its job without re-journaling.
+//! 2. Scan every replayed job's namespace ([`scan_namespace`]): the
+//!    newest `*.ckpt` that decodes cleanly wins; truncated or corrupt
+//!    snapshots are skipped; stranded `*.ckpt.tmp` files (a crash inside
+//!    [`crate::train::Checkpoint::save`]'s write window) are deleted.
+//! 3. Jobs with a recovered snapshot are re-admitted `Preempted` at the
+//!    snapshot's step; jobs that never snapshotted restart `Queued` at
+//!    step 0. Submission order — and therefore the admission order of
+//!    queued-but-never-started jobs — is preserved by construction.
+//!
+//! What is **not** recovered: in-memory run results of `Done` jobs
+//! (their terminal record keeps state/steps/checkpoint), per-process
+//! slice and preemption counters, and anything the crashed process never
+//! got to fsync — at most the work since the last slice boundary.
+
+use crate::config::json::Json;
+use crate::orch::job::{JobSpec, JobState};
+use crate::orch::scheduler::{Scheduler, SchedulerConfig};
+use crate::train::{checkpoint, Checkpoint};
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// The append-only, fsync-per-record job-state journal
+/// (`save_dir/jobs.jsonl`). See the module docs for the record shapes.
+pub struct Journal {
+    file: std::fs::File,
+    path: PathBuf,
+}
+
+impl Journal {
+    /// The journal's location under a save dir.
+    pub fn path_under(save_dir: &str) -> PathBuf {
+        Path::new(save_dir).join("jobs.jsonl")
+    }
+
+    /// Open (creating if absent) the journal under `save_dir` for
+    /// appending, and make the file's directory entry durable.
+    pub fn open(save_dir: &str) -> Result<Journal> {
+        std::fs::create_dir_all(save_dir)
+            .with_context(|| format!("creating save dir {save_dir}"))?;
+        let path = Journal::path_under(save_dir);
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        checkpoint::sync_dir(Path::new(save_dir))?;
+        Ok(Journal { file, path })
+    }
+
+    /// Append one record as a compact JSON line and fsync it — the
+    /// record is durable (or an error) before the caller proceeds.
+    pub fn append(&mut self, record: &Json) -> Result<()> {
+        let mut line = record.to_string_compact();
+        line.push('\n');
+        self.file
+            .write_all(line.as_bytes())
+            .and_then(|()| self.file.sync_data())
+            .with_context(|| format!("appending to journal {}", self.path.display()))
+    }
+}
+
+/// What [`scan_namespace`] found in one job's snapshot directory.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NamespaceScan {
+    /// Newest snapshot that decodes cleanly: `(path, step)`.
+    pub latest: Option<(PathBuf, u64)>,
+    /// Stranded `*.ckpt.tmp` files deleted by this scan.
+    pub gc_tmp: usize,
+    /// `*.ckpt` files that failed validation and were ignored.
+    pub skipped: usize,
+}
+
+/// Aggregate outcome of [`recover`], for operator logging.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// `submit` records replayed from the journal.
+    pub replayed: usize,
+    /// Jobs settled into a terminal state by their journal record.
+    pub terminal: usize,
+    /// Runnable jobs re-admitted `Preempted` at a recovered snapshot.
+    pub resumed: usize,
+    /// Runnable jobs with no usable snapshot, requeued from step 0.
+    pub queued: usize,
+    /// Stranded `*.ckpt.tmp` files garbage-collected.
+    pub gc_tmp: usize,
+    /// Corrupt/truncated `*.ckpt` files ignored by the scan.
+    pub skipped: usize,
+}
+
+/// Scan one snapshot namespace: find the newest `*.ckpt` that decodes
+/// cleanly (highest checkpoint `step`; filename breaks ties), count and
+/// delete stranded `*.ckpt.tmp` files, ignore everything else. A missing
+/// directory is an empty scan, not an error.
+pub fn scan_namespace(dir: &Path) -> Result<NamespaceScan> {
+    let mut scan = NamespaceScan::default();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(scan),
+        Err(e) => {
+            return Err(anyhow!(e)).with_context(|| format!("scanning {}", dir.display()))
+        }
+    };
+    let mut names: Vec<String> = Vec::new();
+    for entry in entries {
+        let entry = entry.with_context(|| format!("scanning {}", dir.display()))?;
+        if let Some(name) = entry.file_name().to_str() {
+            names.push(name.to_string());
+        }
+    }
+    // Deterministic scan order regardless of directory enumeration.
+    names.sort();
+    for name in names {
+        let path = dir.join(&name);
+        if name.ends_with(".ckpt.tmp") {
+            std::fs::remove_file(&path)
+                .with_context(|| format!("garbage-collecting {}", path.display()))?;
+            scan.gc_tmp += 1;
+        } else if name.ends_with(".ckpt") {
+            match Checkpoint::load(&path) {
+                // `>=`: equal steps resolve to the lexicographically
+                // later filename (names are sorted above).
+                Ok(ck) if scan.latest.as_ref().is_none_or(|(_, s)| ck.step >= *s) => {
+                    scan.latest = Some((path, ck.step));
+                }
+                Ok(_) => {}
+                Err(_) => scan.skipped += 1,
+            }
+        }
+        // foreign files: none of our business
+    }
+    Ok(scan)
+}
+
+/// Rebuild a scheduler from `save_dir` after a crash (the
+/// `dsde serve --recover` path). Replays the journal, scans snapshot
+/// namespaces, re-admits unfinished jobs, and attaches a fresh
+/// [`Journal`] so post-recovery activity is journaled again. A
+/// `save_dir` with no journal yields an empty (but journaled) scheduler.
+pub fn recover(
+    cfg: SchedulerConfig,
+    save_dir: &str,
+    default_family: &str,
+) -> Result<(Scheduler, RecoveryReport)> {
+    let mut sched = Scheduler::new(cfg);
+    let mut report = RecoveryReport::default();
+    let journal_path = Journal::path_under(save_dir);
+    match std::fs::read_to_string(&journal_path) {
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => {
+            return Err(anyhow!(e))
+                .with_context(|| format!("reading journal {}", journal_path.display()))
+        }
+        Ok(text) => {
+            for (lineno, line) in text.lines().enumerate() {
+                let at = || format!("{}:{}", journal_path.display(), lineno + 1);
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                let rec = Json::parse(line)
+                    .map_err(|e| anyhow!("{}: bad journal line: {e}", at()))?;
+                let id = rec
+                    .get("id")
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("{}: record has no id", at()))?;
+                match rec.get("event").as_str() {
+                    Some("submit") => {
+                        let spec = JobSpec::from_json(rec.get("spec"), default_family)
+                            .with_context(|| format!("{}: bad journaled spec", at()))?;
+                        let got = sched.submit(spec)?;
+                        if got != id {
+                            bail!(
+                                "{}: replay assigned id {got} to journaled job {id} — \
+                                 the journal is not a prefix-complete submission record",
+                                at()
+                            );
+                        }
+                        report.replayed += 1;
+                    }
+                    Some("terminal") => {
+                        let state = rec
+                            .get("state")
+                            .as_str()
+                            .and_then(JobState::from_name)
+                            .ok_or_else(|| anyhow!("{}: bad terminal state", at()))?;
+                        let steps = rec.get("completed_steps").as_u64().unwrap_or(0);
+                        let ck = rec.get("checkpoint").as_str().map(PathBuf::from);
+                        let err = rec.get("error").as_str().map(String::from);
+                        sched
+                            .restore_terminal(id, state, steps, ck, err)
+                            .with_context(|| at())?;
+                        report.terminal += 1;
+                    }
+                    other => bail!("{}: unknown journal event {other:?}", at()),
+                }
+            }
+        }
+    }
+    // Snapshot scan: every namespace is swept for crash debris; runnable
+    // jobs additionally get their newest valid snapshot re-admitted.
+    let jobs: Vec<(u64, String, bool)> = sched
+        .jobs()
+        .iter()
+        .map(|j| (j.id, j.spec.config.save_dir.clone(), j.state.runnable()))
+        .collect();
+    for (id, dir, runnable) in jobs {
+        let scan = scan_namespace(Path::new(&dir))?;
+        report.gc_tmp += scan.gc_tmp;
+        report.skipped += scan.skipped;
+        if !runnable {
+            continue;
+        }
+        match scan.latest {
+            Some((path, step)) => {
+                sched.restore_snapshot(id, path, step)?;
+                report.resumed += 1;
+            }
+            None => report.queued += 1,
+        }
+    }
+    sched.attach_journal(Journal::open(save_dir)?);
+    Ok((sched, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::RunConfig;
+    use crate::orch::job::JobSpec;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("dsde-recover-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn spec(label: &str, steps: u64, save_dir: &str) -> JobSpec {
+        let mut c = RunConfig::baseline("gpt", steps, 1e-3);
+        c.label = label.to_string();
+        c.save_dir = save_dir.to_string();
+        JobSpec::new(c)
+    }
+
+    #[test]
+    fn journal_replay_restores_ids_states_and_order() {
+        let dir = temp_dir("replay");
+        let save = dir.to_str().unwrap().to_string();
+        let mut live = Scheduler::new(SchedulerConfig::default());
+        live.attach_journal(Journal::open(&save).unwrap());
+        let a = live.submit(spec("a", 10, &save)).unwrap();
+        let b = live.submit(spec("b", 10, &save)).unwrap();
+        let c = live.submit(spec("c", 10, &save)).unwrap();
+        live.cancel(b).unwrap();
+
+        let (back, report) =
+            recover(SchedulerConfig::default(), &save, "gpt").unwrap();
+        assert_eq!((report.replayed, report.terminal), (3, 1));
+        assert_eq!(report.queued, 2, "a and c restart queued");
+        assert_eq!(back.jobs().len(), 3);
+        assert_eq!(back.job(a).unwrap().state, JobState::Queued);
+        assert_eq!(back.job(b).unwrap().state, JobState::Cancelled);
+        assert_eq!(back.job(c).unwrap().state, JobState::Queued);
+        // id stability: replayed namespaces match the live ones
+        for id in [a, b, c] {
+            assert_eq!(
+                back.job(id).unwrap().spec.config.save_dir,
+                live.job(id).unwrap().spec.config.save_dir
+            );
+        }
+        // admission order preserved: a before c
+        assert_eq!(back.next_job(), Some(a));
+        assert_eq!(back.stats().cancelled, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_on_empty_save_dir_is_a_fresh_scheduler() {
+        let dir = temp_dir("fresh");
+        let save = dir.to_str().unwrap().to_string();
+        let (sched, report) =
+            recover(SchedulerConfig::default(), &save, "gpt").unwrap();
+        assert_eq!(report, RecoveryReport::default());
+        assert!(sched.jobs().is_empty());
+        assert!(Journal::path_under(&save).exists(), "a fresh journal is created");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn post_recovery_submissions_are_journaled_again() {
+        let dir = temp_dir("rejournal");
+        let save = dir.to_str().unwrap().to_string();
+        let mut live = Scheduler::new(SchedulerConfig::default());
+        live.attach_journal(Journal::open(&save).unwrap());
+        live.submit(spec("a", 10, &save)).unwrap();
+
+        let (mut back, _) = recover(SchedulerConfig::default(), &save, "gpt").unwrap();
+        back.submit(spec("late", 10, &save)).unwrap();
+        // a second recovery sees both: the first one's replay did not
+        // double-journal, and the post-recovery submit did journal
+        let (again, report) = recover(SchedulerConfig::default(), &save, "gpt").unwrap();
+        assert_eq!(report.replayed, 2);
+        assert_eq!(again.jobs().len(), 2);
+        assert_eq!(again.job(2).unwrap().spec.config.label, "late");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_rejects_garbage_and_unknown_events() {
+        let dir = temp_dir("garbage");
+        let save = dir.to_str().unwrap().to_string();
+        std::fs::write(Journal::path_under(&save), "not json\n").unwrap();
+        let err = recover(SchedulerConfig::default(), &save, "gpt").unwrap_err();
+        assert!(format!("{err:#}").contains("bad journal line"), "{err:#}");
+        std::fs::write(Journal::path_under(&save), "{\"event\":\"x\",\"id\":1}\n").unwrap();
+        let err = recover(SchedulerConfig::default(), &save, "gpt").unwrap_err();
+        assert!(format!("{err:#}").contains("unknown journal event"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -29,12 +29,28 @@
 //!
 //! Every decision is a pure function of (submission order, priorities,
 //! shares, step counts) — the schedule itself is deterministic.
+//!
+//! # Durability
+//!
+//! With a [`Journal`] attached (the serving front end attaches one when
+//! it has a `--save-dir`), every accepted submission and every terminal
+//! transition is appended to the fsync'd `jobs.jsonl` journal *as it
+//! happens*, so a crashed process can rebuild its queue exactly
+//! (`orch::recover`). Submission records carry the spec **as submitted**
+//! (before the save-dir default and the per-job namespacing are applied):
+//! replaying them through [`Scheduler::submit`] re-derives the same ids
+//! and the same namespaces, which is the id-stability invariant recovery
+//! depends on.
 
+use crate::config::json::Json;
 use crate::orch::job::{Job, JobSpec, JobState};
+use crate::orch::recover::Journal;
 use crate::train::{checkpoint, SliceOutcome, TrainEnv};
 use crate::Result;
 use anyhow::bail;
-use std::path::Path;
+use std::cmp::Reverse;
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
 
 /// Scheduler policy knobs.
 #[derive(Clone, Debug)]
@@ -96,6 +112,14 @@ pub struct Scheduler {
     /// `(job id, steps executed)` per slice, in execution order — the
     /// interleaving witness used by tests and the sched_throughput bench.
     slice_log: Vec<(u64, u64)>,
+    /// Incremental admission index: exactly the runnable jobs, ordered by
+    /// `(priority desc, arrival asc)` — the same order the admission sort
+    /// used to produce, maintained in O(log n) at each state transition so
+    /// a pick is O(max_active · log n) instead of O(n log n) at fleet
+    /// scale (`benches/sched_replay.rs` drives 10⁵ jobs through it).
+    runnable: BTreeSet<(Reverse<u32>, usize)>,
+    /// Durable job-state journal, if serving with a save dir.
+    journal: Option<Journal>,
 }
 
 impl Scheduler {
@@ -111,16 +135,32 @@ impl Scheduler {
             stats: SchedStats::default(),
             cursor: 0,
             slice_log: Vec::new(),
+            runnable: BTreeSet::new(),
+            journal: None,
         }
+    }
+
+    /// Attach the durable job-state journal. Every *subsequent* accepted
+    /// submission and terminal transition is appended (and fsync'd) as it
+    /// happens — so recovery attaches the journal only **after** replaying
+    /// it, and the replayed events are not re-journaled.
+    pub fn attach_journal(&mut self, journal: Journal) {
+        self.journal = Some(journal);
     }
 
     /// Submit a job: validate the spec, move its snapshots into the
     /// job-private namespace (`job-{id:06}/` under the submitted
-    /// `save_dir`), and queue it. Rejects a spec that tries to resume
-    /// from another job's namespace.
+    /// `save_dir`), journal the accepted spec, and queue it. Rejects a
+    /// spec that tries to resume from a *live* job's namespace; resuming
+    /// from a **terminal** job's namespace is a legal post-mortem restart
+    /// (that owner will never write there again).
     pub fn submit(&mut self, mut spec: JobSpec) -> Result<u64> {
         spec.validate()?;
         let id = self.jobs.len() as u64 + 1;
+        // Journal the spec exactly as submitted — before the save-dir
+        // default and the namespacing below — so a replay through this
+        // same method re-derives the identical job.
+        let wire = spec.to_json();
         if spec.config.save_dir.is_empty() {
             spec.config.save_dir = "runs/checkpoints".to_string();
         }
@@ -128,9 +168,23 @@ impl Scheduler {
             .to_string_lossy()
             .into_owned();
         if let Some(r) = &spec.config.resume {
-            checkpoint::check_job_namespace(Path::new(r), id)?;
+            let rp = Path::new(r);
+            if let Err(e) = checkpoint::check_job_namespace(rp, id) {
+                match checkpoint::namespace_owner(rp).and_then(|o| self.job(o)) {
+                    Some(owner) if owner.state.terminal() => {}
+                    _ => return Err(e),
+                }
+            }
+        }
+        if let Some(journal) = self.journal.as_mut() {
+            journal.append(&Json::obj(vec![
+                ("event", "submit".into()),
+                ("id", Json::from(id)),
+                ("spec", wire),
+            ]))?;
         }
         self.jobs.push(Job::new(id, spec));
+        self.runnable.insert((Reverse(self.jobs[id as usize - 1].spec.priority), id as usize - 1));
         Ok(id)
     }
 
@@ -168,13 +222,13 @@ impl Scheduler {
     /// which stays valid and resumable (`tests/scheduler.rs` proves a
     /// cancelled job's snapshot resumes bit-identically).
     pub fn cancel(&mut self, id: u64) -> Result<()> {
-        let job = self.job_mut(id)?;
-        if job.state.terminal() {
-            bail!("job {id} is already {}", job.state.name());
+        let idx = self.index_of(id)?;
+        if self.jobs[idx].state.terminal() {
+            bail!("job {id} is already {}", self.jobs[idx].state.name());
         }
-        job.set_state(JobState::Cancelled)?;
+        self.mark(idx, JobState::Cancelled)?;
         self.stats.cancelled += 1;
-        Ok(())
+        self.journal_terminal(idx)
     }
 
     /// Elastic re-size across a preemption: change a waiting job's replica
@@ -218,15 +272,14 @@ impl Scheduler {
 
     /// The scheduling decision itself, side-effect-free.
     fn compute_pick(&self) -> Option<Pick> {
-        // Admission: top max_active runnable jobs by (priority, arrival).
-        let mut admitted: Vec<usize> = (0..self.jobs.len())
-            .filter(|&i| self.jobs[i].state.runnable())
-            .collect();
+        // Admission: top max_active runnable jobs by (priority, arrival) —
+        // read straight off the incremental index, which keeps exactly
+        // that order.
+        let admitted: Vec<usize> =
+            self.runnable.iter().take(self.cfg.max_active).map(|&(_, i)| i).collect();
         if admitted.is_empty() {
             return None;
         }
-        admitted.sort_by_key(|&i| (std::cmp::Reverse(self.jobs[i].spec.priority), i));
-        admitted.truncate(self.cfg.max_active);
         // Strict priority: only the top class present forms the DRR ring.
         let top = self.jobs[admitted[0]].spec.priority;
         let ring: Vec<usize> = admitted
@@ -249,8 +302,15 @@ impl Scheduler {
         for k in 0..ring.len() {
             let i = ring[(start + k) % ring.len()];
             let job = &self.jobs[i];
-            let accrual = (self.cfg.quantum * job.spec.share as u64).max(1);
-            let shortfall = (self.slice_steps(job) as i64 - job.deficit).max(0) as u64;
+            // Saturating, i64-clamped credit arithmetic: a huge
+            // quantum × share must saturate (wrapping would collapse a
+            // big-share tenant's accrual to near zero and starve it), and
+            // an unsliced u64::MAX step budget must clamp rather than
+            // wrap negative through the i64 cast.
+            let accrual =
+                self.cfg.quantum.saturating_mul(job.spec.share as u64).clamp(1, i64::MAX as u64);
+            let cost = self.slice_steps(job).min(i64::MAX as u64) as i64;
+            let shortfall = cost.saturating_sub(job.deficit).max(0) as u64;
             let pass = shortfall.div_ceil(accrual).max(1);
             if pass < win.0 {
                 win = (pass, k);
@@ -262,7 +322,7 @@ impl Scheduler {
         for k in 0..ring.len() {
             let i = ring[(start + k) % ring.len()];
             let visits = (p_win - 1) + u64::from(k <= k_win);
-            deltas.push((i, visits as i64 * accruals[k]));
+            deltas.push((i, (visits.min(i64::MAX as u64) as i64).saturating_mul(accruals[k])));
         }
         let winner = ring[(start + k_win) % ring.len()];
         Some(Pick { id: self.jobs[winner].id, deltas })
@@ -271,7 +331,7 @@ impl Scheduler {
     /// Apply a pick's DRR bookkeeping (deficit accruals + ring cursor).
     fn commit_pick(&mut self, pick: &Pick) {
         for &(i, d) in &pick.deltas {
-            self.jobs[i].deficit += d;
+            self.jobs[i].deficit = self.jobs[i].deficit.saturating_add(d);
         }
         self.cursor = pick.id;
     }
@@ -301,7 +361,8 @@ impl Scheduler {
             Some(p) if p.id == id => self.commit_pick(&p),
             _ => self.cursor = id,
         }
-        self.job_mut(id)?.set_state(JobState::Running)?;
+        let idx = self.index_of(id)?;
+        self.mark(idx, JobState::Running)?;
         let outcome = env.trainer(cfg).and_then(|t| t.run_slice(slice));
         self.stats.slices += 1;
         match outcome {
@@ -311,44 +372,100 @@ impl Scheduler {
                 // with a manual resume checkpoint starts its first slice at
                 // the snapshot's step, not at `before` (= 0).
                 let executed = steps.saturating_sub(r.resumed_at.max(before));
-                let job = self.job_mut(id)?;
+                let job = &mut self.jobs[idx];
                 job.slices += 1;
-                job.deficit -= executed as i64;
+                job.deficit = job.deficit.saturating_sub(executed.min(i64::MAX as u64) as i64);
                 job.completed_steps = steps;
                 job.result = Some(*r);
-                job.set_state(JobState::Done)?;
+                self.mark(idx, JobState::Done)?;
                 self.stats.completed += 1;
                 self.slice_log.push((id, executed));
-                let job = self.job_ref(id)?;
+                let job = &self.jobs[idx];
                 if self.cfg.cleanup_done && job.spec.config.save_every == 0 {
                     // the namespace held only scheduler-internal boundary
                     // snapshots — scratch, not user data
                     let _ = std::fs::remove_dir_all(&job.spec.config.save_dir);
-                    self.job_mut(id)?.checkpoint = None;
+                    self.jobs[idx].checkpoint = None;
                 }
+                self.journal_terminal(idx)?;
             }
             Ok(SliceOutcome::Preempted { checkpoint, completed, resumed_at }) => {
                 let executed = completed.saturating_sub(resumed_at.max(before));
-                let job = self.job_mut(id)?;
+                let job = &mut self.jobs[idx];
                 job.slices += 1;
-                job.deficit -= executed as i64;
+                job.deficit = job.deficit.saturating_sub(executed.min(i64::MAX as u64) as i64);
                 job.completed_steps = completed;
                 job.checkpoint = Some(checkpoint);
                 job.preemptions += 1;
-                job.set_state(JobState::Preempted)?;
+                self.mark(idx, JobState::Preempted)?;
                 self.stats.preemptions += 1;
                 self.slice_log.push((id, executed));
             }
             Err(e) => {
-                let job = self.job_mut(id)?;
+                let job = &mut self.jobs[idx];
                 job.slices += 1;
                 job.error = Some(format!("{e:#}"));
-                job.set_state(JobState::Failed)?;
+                // `job.checkpoint` (the last *good* boundary snapshot) is
+                // deliberately kept: the terminal record journals it so a
+                // post-mortem resume restarts from the last boundary, not
+                // step 0.
+                self.mark(idx, JobState::Failed)?;
                 self.stats.failed += 1;
                 self.slice_log.push((id, 0));
+                self.journal_terminal(idx)?;
             }
         }
         Ok(())
+    }
+
+    /// Execute one slice of `id` **in closed form**: identical scheduling
+    /// bookkeeping to [`Scheduler::run_slice`] — pick commit, DRR debit,
+    /// state machine, slice log, terminal journaling — with the training
+    /// itself replaced by "the slice executes exactly its budget". This
+    /// is the policy-replay engine of `benches/sched_replay.rs`: it lets
+    /// 10⁵+ synthetic jobs exercise the real admission/DRR code without
+    /// paying for a single training step, and produces the slice log an
+    /// independent reference replay is compared against. Returns the
+    /// steps the simulated slice executed.
+    pub fn simulate_slice(&mut self, id: u64) -> Result<u64> {
+        let idx = self.index_of(id)?;
+        if !self.jobs[idx].state.runnable() {
+            bail!("job {id} is {} — not runnable", self.jobs[idx].state.name());
+        }
+        let executed = self.slice_steps(&self.jobs[idx]);
+        match self.compute_pick() {
+            Some(p) if p.id == id => self.commit_pick(&p),
+            _ => self.cursor = id,
+        }
+        self.mark(idx, JobState::Running)?;
+        self.stats.slices += 1;
+        let job = &mut self.jobs[idx];
+        job.slices += 1;
+        job.deficit = job.deficit.saturating_sub(executed.min(i64::MAX as u64) as i64);
+        job.completed_steps = job.completed_steps.saturating_add(executed);
+        if job.remaining_steps() == 0 {
+            self.mark(idx, JobState::Done)?;
+            self.stats.completed += 1;
+            self.slice_log.push((id, executed));
+            self.journal_terminal(idx)?;
+        } else {
+            job.preemptions += 1;
+            self.mark(idx, JobState::Preempted)?;
+            self.stats.preemptions += 1;
+            self.slice_log.push((id, executed));
+        }
+        Ok(executed)
+    }
+
+    /// Simulated [`Scheduler::drain`]: run [`Scheduler::simulate_slice`]
+    /// until every job is terminal. Returns the number of slices run.
+    pub fn simulate_drain(&mut self) -> Result<u64> {
+        let mut slices = 0;
+        while let Some(id) = self.next_job() {
+            self.simulate_slice(id)?;
+            slices += 1;
+        }
+        Ok(slices)
     }
 
     /// Run slices until no job is runnable (every job terminal). Job
@@ -377,13 +494,118 @@ impl Scheduler {
         self.job(id).ok_or_else(|| anyhow::anyhow!("unknown job id {id}"))
     }
 
-    fn job_mut(&mut self, id: u64) -> Result<&mut Job> {
-        let idx = id
-            .checked_sub(1)
+    fn index_of(&self, id: u64) -> Result<usize> {
+        id.checked_sub(1)
             .map(|i| i as usize)
             .filter(|&i| i < self.jobs.len())
-            .ok_or_else(|| anyhow::anyhow!("unknown job id {id}"))?;
+            .ok_or_else(|| anyhow::anyhow!("unknown job id {id}"))
+    }
+
+    fn job_mut(&mut self, id: u64) -> Result<&mut Job> {
+        let idx = self.index_of(id)?;
         Ok(&mut self.jobs[idx])
+    }
+
+    /// Enforced state transition that keeps the runnable index in sync —
+    /// the **only** way scheduler code may change a job's state.
+    fn mark(&mut self, idx: usize, to: JobState) -> Result<()> {
+        let was = self.jobs[idx].state.runnable();
+        self.jobs[idx].set_state(to)?;
+        let key = (Reverse(self.jobs[idx].spec.priority), idx);
+        match (was, self.jobs[idx].state.runnable()) {
+            (true, false) => {
+                self.runnable.remove(&key);
+            }
+            (false, true) => {
+                self.runnable.insert(key);
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Append the job's terminal record to the journal (no-op without
+    /// one): state, completed steps, the last-good checkpoint path (what
+    /// a post-mortem resume restarts from) and the failure message.
+    fn journal_terminal(&mut self, idx: usize) -> Result<()> {
+        let Some(journal) = self.journal.as_mut() else {
+            return Ok(());
+        };
+        let job = &self.jobs[idx];
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("event", "terminal".into()),
+            ("id", Json::from(job.id)),
+            ("state", job.state.name().into()),
+            ("completed_steps", Json::from(job.completed_steps)),
+        ];
+        if let Some(ck) = &job.checkpoint {
+            pairs.push(("checkpoint", ck.to_string_lossy().into_owned().into()));
+        }
+        if let Some(e) = &job.error {
+            pairs.push(("error", e.as_str().into()));
+        }
+        journal.append(&Json::obj(pairs))
+    }
+
+    /// Recovery: park a freshly replayed (still `Queued`) job as
+    /// `Preempted` at its recovered snapshot, exactly as if the crashed
+    /// process had preempted it there. Slice/preemption counters restart
+    /// at zero — they died with the old process and are documented as
+    /// process-lifetime observability, not durable state.
+    pub(crate) fn restore_snapshot(
+        &mut self,
+        id: u64,
+        checkpoint: PathBuf,
+        step: u64,
+    ) -> Result<()> {
+        let idx = self.index_of(id)?;
+        let job = &mut self.jobs[idx];
+        if job.state != JobState::Queued {
+            bail!("job {id} is {} — can only restore a freshly replayed job", job.state.name());
+        }
+        job.checkpoint = Some(checkpoint);
+        job.completed_steps = step;
+        // Queued and Preempted are both runnable: the admission index
+        // needs no update for this restore-only transition.
+        job.state = JobState::Preempted;
+        Ok(())
+    }
+
+    /// Recovery: settle a freshly replayed (still `Queued`) job into the
+    /// terminal state its journal record carries, without re-journaling
+    /// it. The record's checkpoint is the job's last good snapshot (kept
+    /// even for `Failed`, so a post-mortem resume has a starting point).
+    pub(crate) fn restore_terminal(
+        &mut self,
+        id: u64,
+        state: JobState,
+        completed_steps: u64,
+        checkpoint: Option<PathBuf>,
+        error: Option<String>,
+    ) -> Result<()> {
+        if !state.terminal() {
+            bail!("job {id}: {} is not a terminal state", state.name());
+        }
+        let idx = self.index_of(id)?;
+        if self.jobs[idx].state != JobState::Queued {
+            bail!(
+                "job {id} is {} — duplicate terminal record in the journal?",
+                self.jobs[idx].state.name()
+            );
+        }
+        self.runnable.remove(&(Reverse(self.jobs[idx].spec.priority), idx));
+        let job = &mut self.jobs[idx];
+        job.state = state;
+        job.completed_steps = completed_steps;
+        job.checkpoint = checkpoint;
+        job.error = error;
+        match state {
+            JobState::Done => self.stats.completed += 1,
+            JobState::Failed => self.stats.failed += 1,
+            JobState::Cancelled => self.stats.cancelled += 1,
+            _ => unreachable!("terminal() checked above"),
+        }
+        Ok(())
     }
 }
 
@@ -492,6 +714,91 @@ mod tests {
         assert_eq!(s.next_job(), None);
         assert_eq!(s.stats().cancelled, 1);
         assert!(s.cancel(99).is_err(), "unknown id");
+    }
+
+    #[test]
+    fn drr_accrual_saturates_instead_of_wrapping() {
+        // quantum × share = 2⁶³ × 2 wraps to 0 in u64; the old code's
+        // `.max(1)` then left the *big-share* tenant with accrual 1 while
+        // the share-1 tenant kept 2⁶³ — starving exactly the job that
+        // paid for more. Saturation clamps both to i64::MAX, both reach
+        // their slice in one pass, and ring order (arrival) decides.
+        let mut s = Scheduler::new(SchedulerConfig {
+            quantum: 1u64 << 63,
+            default_slice: 10,
+            ..Default::default()
+        });
+        let mut big = tiny("big", 100);
+        big.share = 2;
+        let a = s.submit(big).unwrap();
+        let _b = s.submit(tiny("small", 100)).unwrap();
+        assert_eq!(s.next_job(), Some(a), "share-2 job must not starve on accrual overflow");
+    }
+
+    #[test]
+    fn unsliced_huge_step_budget_clamps_instead_of_wrapping() {
+        // With no slicing, slice cost = remaining steps; u64::MAX used to
+        // wrap to -1 through the i64 cast, making the infinite job look
+        // *cheapest* (shortfall 0). Clamped, its cost is i64::MAX and the
+        // 10-step job (2 passes at quantum 8) wins.
+        let mut s =
+            Scheduler::new(SchedulerConfig { quantum: 8, default_slice: 0, ..Default::default() });
+        let _huge = s.submit(tiny("huge", u64::MAX)).unwrap();
+        let b = s.submit(tiny("small", 10)).unwrap();
+        assert_eq!(s.next_job(), Some(b), "u64::MAX budget must clamp, not wrap negative");
+    }
+
+    #[test]
+    fn simulate_matches_policy_and_index_stays_consistent() {
+        // simulate_slice must walk the exact (id, steps) sequence the
+        // policy dictates, and the incremental runnable index must agree
+        // with a full scan at every boundary.
+        let mut s = Scheduler::new(SchedulerConfig {
+            max_active: 2,
+            default_slice: 4,
+            quantum: 4,
+            ..Default::default()
+        });
+        let a = s.submit(tiny("a", 10)).unwrap();
+        let b = s.submit(tiny("b", 6)).unwrap();
+        let mut hi = tiny("hi", 5);
+        hi.priority = 2;
+        let h = s.submit(hi).unwrap();
+        let mut log = Vec::new();
+        while let Some(id) = s.next_job() {
+            let scan: Vec<usize> = (0..s.jobs.len())
+                .filter(|&i| s.jobs[i].state.runnable())
+                .collect();
+            let index: Vec<usize> = s.runnable.iter().map(|&(_, i)| i).collect();
+            let mut by_policy = scan.clone();
+            by_policy.sort_by_key(|&i| (Reverse(s.jobs[i].spec.priority), i));
+            assert_eq!(index, by_policy, "runnable index drifted from a full scan");
+            log.push((id, s.simulate_slice(id).unwrap()));
+        }
+        // strict priority first (h: 4+1 steps), then a/b round-robin
+        assert_eq!(
+            log,
+            vec![(h, 4), (h, 1), (a, 4), (b, 4), (a, 4), (b, 2), (a, 2)],
+            "simulated schedule drifted"
+        );
+        assert!(s.all_terminal());
+        assert_eq!(s.stats().completed, 3);
+        assert_eq!(s.slice_log().len(), 7);
+    }
+
+    #[test]
+    fn resume_from_terminal_owner_namespace_is_allowed() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let dead = s.submit(tiny("dead", 10)).unwrap();
+        let ns = s.job(dead).unwrap().spec.config.save_dir.clone();
+        // live owner: rejected (unchanged behaviour)
+        let mut post = tiny("post", 10);
+        post.config.resume = Some(format!("{ns}/step000004.ckpt"));
+        assert!(s.submit(post.clone()).is_err(), "live owner must still reject");
+        // terminal owner: the post-mortem restart path
+        s.cancel(dead).unwrap();
+        let id = s.submit(post).unwrap();
+        assert_eq!(s.job(id).unwrap().spec.config.resume.as_deref(), Some(&*format!("{ns}/step000004.ckpt")));
     }
 
     #[test]

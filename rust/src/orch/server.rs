@@ -105,6 +105,16 @@ pub struct ServeOptions {
     /// Maximum request line length in bytes; longer lines are rejected
     /// and the connection closed.
     pub max_request_bytes: usize,
+    /// Durable state directory. Non-empty: accepted submissions and
+    /// terminal transitions are journaled to `save_dir/jobs.jsonl`
+    /// (fsync'd per record) so a crashed server can be restarted with
+    /// [`ServeOptions::recover`]. Empty: no journal, no recovery.
+    pub save_dir: String,
+    /// Rebuild the scheduler from [`ServeOptions::save_dir`] before
+    /// serving: replay the journal, rescan snapshot namespaces, re-admit
+    /// unfinished jobs (see `orch::recover`). Requires a non-empty
+    /// `save_dir`.
+    pub recover: bool,
     /// Socket write timeout (ms): a reply write that cannot complete in
     /// this window means the client stopped reading — treated as a
     /// disconnect.
@@ -120,6 +130,8 @@ impl Default for ServeOptions {
             queue_cap: 64,
             conn_backlog: 128,
             max_request_bytes: 1 << 20,
+            save_dir: String::new(),
+            recover: false,
             write_timeout_ms: 1000,
         }
     }
@@ -323,7 +335,31 @@ pub fn serve_with(env: &TrainEnv, listener: TcpListener, opts: ServeOptions) -> 
         .context("spawning control-plane accept thread")?;
 
     // -- executor loop -------------------------------------------------------
-    let mut sched = Scheduler::new(sched_cfg);
+    let mut sched = if opts.recover {
+        if opts.save_dir.is_empty() {
+            anyhow::bail!("--recover requires a --save-dir to recover from");
+        }
+        let (sched, report) =
+            crate::orch::recover::recover(sched_cfg, &opts.save_dir, &ctx.family)?;
+        eprintln!(
+            "recovered {} job(s) from {}: {} resumed at a snapshot, {} requeued, \
+             {} already terminal, {} stranded tmp file(s) removed, {} corrupt snapshot(s) ignored",
+            report.replayed,
+            opts.save_dir,
+            report.resumed,
+            report.queued,
+            report.terminal,
+            report.gc_tmp,
+            report.skipped
+        );
+        sched
+    } else {
+        let mut sched = Scheduler::new(sched_cfg);
+        if !opts.save_dir.is_empty() {
+            sched.attach_journal(crate::orch::recover::Journal::open(&opts.save_dir)?);
+        }
+        sched
+    };
     let mut draining = false;
     let run_result = loop {
         // Linearization point: apply every pending control command at the

@@ -41,10 +41,23 @@
 //!
 //! Body order: state tensors (f32, dims from the header) · accountant
 //! (4×u64) · dropper RNG (2×u64) · importance arrays (f64/u64, optional) ·
-//! step losses (f32) · curve points (u64 + 2×f64 each). Writes are atomic:
-//! encode to `<path>.tmp`, fsync, rename — a crash mid-write leaves no
-//! partial file at the final path. Any format change requires bumping
+//! step losses (f32) · curve points (u64 + 2×f64 each). Writes are atomic
+//! **and durable**: encode to `<path>.tmp`, fsync the file, rename, then
+//! fsync the parent directory — a crash mid-write leaves no partial file
+//! at the final path, and a power loss after [`Checkpoint::save`] returns
+//! cannot un-publish the rename (the directory entry itself is on disk).
+//! A failed save removes its own `.tmp` instead of stranding it; `.tmp`
+//! files that survive a hard crash are garbage-collected by the recovery
+//! scanner ([`crate::orch::recover`]). Any format change requires bumping
 //! [`FORMAT_VERSION`] (a byte-stability golden pins version 1).
+//!
+//! For crash-injection testing, `DSDE_CRASH_AFTER_SAVES=N` arms a fault
+//! hook in the save path: the first `N` saves publish normally, then the
+//! next save writes and fsyncs its `.tmp` and kills the process (exit
+//! code [`CRASH_EXIT_CODE`]) *before* the rename — exactly the on-disk
+//! state a mid-write power cut leaves behind (complete older snapshots +
+//! one stranded `.tmp`). `tests/crash_recovery.rs` drives a real `dsde
+//! serve` child through this hook and `--recover`.
 //!
 //! [`TokenAccountant`]: crate::ltd::TokenAccountant
 
@@ -329,30 +342,52 @@ impl Checkpoint {
         })
     }
 
-    /// Atomically write the snapshot to `path`: encode into a sibling
-    /// `.tmp` file, fsync it, then rename over the final name — so a crash
-    /// at any point leaves either the previous file or no file, never a
-    /// partial one. Parent directories are created as needed.
+    /// Atomically and durably write the snapshot to `path`: encode into a
+    /// sibling `.tmp` file, fsync it, rename over the final name, then
+    /// fsync the parent directory — so a crash at any point leaves either
+    /// the previous file or no file (never a partial one), and once this
+    /// returns the published name survives power loss (the rename's
+    /// directory entry is itself flushed; fsyncing only the file leaves
+    /// the entry in the page cache). A failed save removes its own `.tmp`
+    /// rather than stranding it. Parent directories are created as needed.
+    ///
+    /// Honors the `DSDE_CRASH_AFTER_SAVES` fault hook (see the module
+    /// docs): when the budget is spent the process exits *between* the
+    /// tmp fsync and the rename, leaving a stranded `.tmp`.
     pub fn save(&self, path: &Path) -> Result<()> {
-        if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)
-                    .with_context(|| format!("creating checkpoint dir {}", parent.display()))?;
+        let parent = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => {
+                std::fs::create_dir_all(p)
+                    .with_context(|| format!("creating checkpoint dir {}", p.display()))?;
+                p
             }
-        }
+            _ => Path::new("."),
+        };
         let mut tmp = path.as_os_str().to_owned();
         tmp.push(".tmp");
         let tmp = std::path::PathBuf::from(tmp);
         let bytes = self.encode();
-        {
-            let mut f = std::fs::File::create(&tmp)
-                .with_context(|| format!("creating {}", tmp.display()))?;
-            f.write_all(&bytes)?;
-            f.sync_all()?;
+        let published = (|| -> Result<()> {
+            {
+                let mut f = std::fs::File::create(&tmp)
+                    .with_context(|| format!("creating {}", tmp.display()))?;
+                f.write_all(&bytes)?;
+                f.sync_all()?;
+            }
+            // Crash injection: the tmp is durable, the rename never runs —
+            // the exact window a real power cut can hit.
+            crash_hook_before_publish(path);
+            std::fs::rename(&tmp, path)
+                .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+            sync_dir(parent)?;
+            Ok(())
+        })();
+        if published.is_err() {
+            // Never strand a half-written tmp on an error path; recovery
+            // treats any surviving .tmp as crash debris.
+            let _ = std::fs::remove_file(&tmp);
         }
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
-        Ok(())
+        published
     }
 
     /// Read and decode a checkpoint file.
@@ -498,6 +533,72 @@ pub fn state_from_tensors(tensors: &[TensorSnap]) -> Result<Vec<xla::Literal>> {
         .collect()
 }
 
+/// Exit code of the `DSDE_CRASH_AFTER_SAVES` crash-injection hook, so a
+/// harness can tell an injected crash apart from a real failure.
+pub const CRASH_EXIT_CODE: i32 = 42;
+
+/// Remaining publish budget of the crash hook: `None` when the hook is
+/// unarmed (the env var is absent/unparseable — the production case),
+/// else the number of saves still allowed to publish. Read once per
+/// process; tests that re-arm it must spawn a fresh child.
+fn crash_budget() -> Option<&'static std::sync::atomic::AtomicU64> {
+    use std::sync::atomic::AtomicU64;
+    use std::sync::OnceLock;
+    static BUDGET: OnceLock<Option<AtomicU64>> = OnceLock::new();
+    BUDGET
+        .get_or_init(|| {
+            std::env::var("DSDE_CRASH_AFTER_SAVES")
+                .ok()
+                .and_then(|v| v.parse::<u64>().ok())
+                .map(AtomicU64::new)
+        })
+        .as_ref()
+}
+
+/// The fault point of the `DSDE_CRASH_AFTER_SAVES=N` hook: a no-op for
+/// the first `N` calls, then kills the process with [`CRASH_EXIT_CODE`]
+/// — invoked between the tmp fsync and the rename, so the crash strands
+/// a durable `.tmp` and never publishes the snapshot.
+fn crash_hook_before_publish(path: &Path) {
+    use std::sync::atomic::Ordering;
+    let Some(budget) = crash_budget() else { return };
+    loop {
+        let left = budget.load(Ordering::Relaxed);
+        if left == 0 {
+            eprintln!(
+                "DSDE_CRASH_AFTER_SAVES: injected crash before publishing {}",
+                path.display()
+            );
+            std::process::exit(CRASH_EXIT_CODE);
+        }
+        if budget
+            .compare_exchange(left, left - 1, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            return;
+        }
+    }
+}
+
+/// Fsync a directory so a just-renamed entry inside it is durable. On
+/// non-unix targets directory handles cannot be fsynced; the rename is
+/// still atomic, the durability window just stays (as before) at the
+/// mercy of the OS flush. Also used by the job journal (`orch::recover`).
+#[cfg(unix)]
+pub(crate) fn sync_dir(dir: &Path) -> Result<()> {
+    let d = std::fs::File::open(dir)
+        .with_context(|| format!("opening checkpoint dir {} for fsync", dir.display()))?;
+    d.sync_all()
+        .with_context(|| format!("fsyncing checkpoint dir {}", dir.display()))?;
+    Ok(())
+}
+
+/// See the unix variant; no directory fsync available here.
+#[cfg(not(unix))]
+pub(crate) fn sync_dir(_dir: &Path) -> Result<()> {
+    Ok(())
+}
+
 /// FNV-1a over a byte slice (the same hash family as
 /// [`crate::train::state_fingerprint`], applied to raw bytes).
 pub fn fnv1a(bytes: &[u8]) -> u64 {
@@ -548,6 +649,26 @@ pub fn schedule_fingerprint(run: &RunConfig, schedule: &[StepRoute]) -> u64 {
 /// `step{N:06}.ckpt` files. Used by the [`crate::orch`] scheduler.
 pub fn job_namespace(save_dir: &str, job_id: u64) -> std::path::PathBuf {
     Path::new(save_dir).join(format!("job-{job_id:06}"))
+}
+
+/// The job id owning `path`, if any: the innermost `job-NNNNNN` path
+/// component (6+ digits, parseable as u64). `None` for manual
+/// (non-namespaced) checkpoint paths. The scheduler uses this to allow
+/// post-mortem resumes from a **terminal** job's namespace while
+/// [`check_job_namespace`] keeps rejecting live owners.
+pub fn namespace_owner(path: &Path) -> Option<u64> {
+    let mut owner = None;
+    for comp in path.components() {
+        let Some(s) = comp.as_os_str().to_str() else { continue };
+        let Some(num) = s.strip_prefix("job-") else { continue };
+        if num.len() < 6 || !num.bytes().all(|b| b.is_ascii_digit()) {
+            continue;
+        }
+        if let Ok(id) = num.parse::<u64>() {
+            owner = Some(id);
+        }
+    }
+    owner
 }
 
 /// Reject resuming job `job_id` from a snapshot parked in *another* job's

@@ -11,7 +11,7 @@ pub mod replica;
 pub mod trainer;
 pub mod tuning;
 
-pub use checkpoint::{Checkpoint, Engine, FORMAT_VERSION};
+pub use checkpoint::{Checkpoint, Engine, CRASH_EXIT_CODE, FORMAT_VERSION};
 pub use env::TrainEnv;
 pub use pipeline::{BatchPipeline, PipelineStats, Prefetcher, StepSpec};
 pub use replica::{ReducedStep, ReplicaEngine};

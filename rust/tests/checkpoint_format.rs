@@ -12,8 +12,13 @@
 //!
 //! Robustness rejection paths (truncation, corruption, version mismatch,
 //! atomicity) are unit-tested in `src/train/checkpoint.rs`; this file
-//! pins the wire image itself.
+//! pins the wire image itself, plus the snapshot-directory hygiene rules
+//! (`orch::scan_namespace`) that crash recovery depends on: a polluted
+//! namespace — truncated snapshots, foreign files, stranded `*.ckpt.tmp`
+//! from an interrupted publish — must still yield the latest *valid*
+//! snapshot, and the tmp debris must be garbage-collected exactly once.
 
+use dsde::orch::scan_namespace;
 use dsde::train::checkpoint::{fnv1a, Checkpoint, Engine, TensorSnap, FORMAT_VERSION};
 use dsde::train::CurvePoint;
 use std::path::PathBuf;
@@ -89,4 +94,53 @@ fn fixture_roundtrips_through_a_file() {
     ck.save(&path).unwrap();
     assert_eq!(Checkpoint::load(&path).unwrap(), ck);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- snapshot-namespace hygiene (ISSUE 7 satellite) ------------------------
+
+#[test]
+fn polluted_namespace_scan_finds_latest_valid_and_gcs_tmp_once() {
+    let dir = std::env::temp_dir().join(format!("dsde-ckpt-hygiene-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // two valid snapshots, steps 3 and 7
+    let mut ck = fixture();
+    ck.save(&dir.join("step000003.ckpt")).unwrap();
+    ck.step = 7;
+    ck.save(&dir.join("step000007.ckpt")).unwrap();
+    // a truncated snapshot — would sort latest by name, must be ignored
+    let bytes = ck.encode();
+    std::fs::write(dir.join("step000009.ckpt"), &bytes[..bytes.len() / 2]).unwrap();
+    // a foreign file that is not the scanner's to touch
+    std::fs::write(dir.join("NOTES.txt"), "operator breadcrumbs\n").unwrap();
+    // a stranded interrupted publish (the crash-mid-save residue)
+    std::fs::write(dir.join("step000010.ckpt.tmp"), b"half-written").unwrap();
+
+    let scan = scan_namespace(&dir).unwrap();
+    let (latest, step) = scan.latest.expect("a valid snapshot exists");
+    assert_eq!(step, 7, "latest is picked by checkpoint step, not filename");
+    assert_eq!(latest, dir.join("step000007.ckpt"));
+    assert_eq!(scan.gc_tmp, 1, "the stranded tmp is deleted");
+    assert_eq!(scan.skipped, 1, "the truncated snapshot is ignored, not fatal");
+    assert!(!dir.join("step000010.ckpt.tmp").exists());
+    assert!(dir.join("NOTES.txt").exists(), "foreign files survive the scan");
+    assert!(dir.join("step000009.ckpt").exists(), "skipped files are kept for post-mortems");
+
+    // idempotent: a re-scan finds the same snapshot and nothing left to GC
+    let again = scan_namespace(&dir).unwrap();
+    assert_eq!(again.latest.as_ref().map(|(_, s)| *s), Some(7));
+    assert_eq!(again.gc_tmp, 0, "the tmp was garbage-collected exactly once");
+    assert_eq!(again.skipped, 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_namespace_is_an_empty_scan_not_an_error() {
+    let dir =
+        std::env::temp_dir().join(format!("dsde-ckpt-hygiene-missing-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let scan = scan_namespace(&dir).unwrap();
+    assert!(scan.latest.is_none());
+    assert_eq!((scan.gc_tmp, scan.skipped), (0, 0));
 }

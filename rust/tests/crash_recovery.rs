@@ -1,0 +1,291 @@
+//! Crash-injection recovery suite (ISSUE 7 tentpole).
+//!
+//! The core claim: **a crash is a preemption with worse manners**. A
+//! serving `dsde` process killed mid-slice — here, deterministically,
+//! while publishing its third snapshot via the `DSDE_CRASH_AFTER_SAVES`
+//! fault hook — loses no accepted work: `dsde serve --recover` rebuilds
+//! the scheduler from the fsync'd `jobs.jsonl` journal plus a namespace
+//! scan, re-admits snapshotted jobs at their last boundary, requeues
+//! never-snapshotted jobs from step 0, garbage-collects the stranded
+//! `*.ckpt.tmp` the crash left behind, and drains to results that are
+//! **bit-identical** (`state_hash`, per-step loss trajectory via
+//! `losses_fnv`, `data_tokens`) to uninterrupted runs of the same
+//! configs.
+//!
+//! These tests drive the real binary (`CARGO_BIN_EXE_dsde`) over the TCP
+//! control plane: the crash must kill an actual process with real kernel
+//! buffers in flight, not a thread we politely unwind.
+
+use dsde::config::json::Json;
+use dsde::config::schema::RunConfig;
+use dsde::orch::request;
+use dsde::train::checkpoint::fnv1a;
+use dsde::train::{TrainEnv, CRASH_EXIT_CODE};
+use std::io::{BufRead, BufReader, Read};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+/// Must match the serving defaults the children are launched with: the
+/// bit-identity references are computed on an identical environment.
+const DOCS: usize = 200;
+const SERVE_SEED: u64 = 7; // `dsde serve` builds TrainEnv::new(docs, 7)
+const STEPS: u64 = 10;
+const SLICE: u64 = 3;
+const N_JOBS: usize = 4;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dsde-crash-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn job_config(i: usize, save_dir: &Path) -> RunConfig {
+    let mut c = RunConfig::baseline("gpt", STEPS, 3e-3);
+    c.label = format!("crash-{}", i + 1);
+    c.seed = 4242 + i as u64;
+    c.save_dir = save_dir.to_string_lossy().into_owned();
+    c
+}
+
+/// Spawn `dsde serve` on an ephemeral port and parse the bound address
+/// from its startup banner. stdout/stderr stay piped so the test can
+/// inspect them after exit.
+fn spawn_serve(save_dir: &Path, extra: &[&str], envs: &[(&str, &str)]) -> (Child, String) {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_dsde"));
+    cmd.args([
+        "serve",
+        "--addr",
+        "127.0.0.1:0",
+        "--docs",
+        &DOCS.to_string(),
+        "--jobs",
+        &N_JOBS.to_string(),
+        "--default-slice",
+        &SLICE.to_string(),
+        "--save-dir",
+        &save_dir.to_string_lossy(),
+    ]);
+    cmd.args(extra);
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.stdout(Stdio::piped()).stderr(Stdio::piped());
+    let mut child = cmd.spawn().expect("spawn dsde serve");
+
+    // The banner is printed before the environment build, so the address
+    // is available immediately; the OS listen backlog holds any requests
+    // we send before the accept thread comes up.
+    let stdout = child.stdout.as_mut().expect("piped stdout");
+    let mut lines = BufReader::new(stdout).lines();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let addr = loop {
+        assert!(Instant::now() < deadline, "no listening banner within 60s");
+        let line = lines.next().expect("serve exited before banner").expect("read banner");
+        if let Some(rest) = line.strip_prefix("dsde control plane listening on ") {
+            break rest.split_whitespace().next().expect("address in banner").to_string();
+        }
+    };
+    (child, addr)
+}
+
+fn wait_deadline(child: &mut Child, secs: u64, what: &str) -> ExitStatus {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if let Some(status) = child.try_wait().expect("try_wait") {
+            return status;
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            panic!("{what} did not exit within {secs}s");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn drain_stderr(child: &mut Child) -> String {
+    let mut s = String::new();
+    if let Some(mut e) = child.stderr.take() {
+        let _ = e.read_to_string(&mut s);
+    }
+    s
+}
+
+/// Every `*.ckpt.tmp` under `dir` (journal root + job namespaces).
+fn stranded_tmps(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let Ok(entries) = std::fs::read_dir(&d) else { continue };
+        for entry in entries.flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.to_string_lossy().ends_with(".ckpt.tmp") {
+                out.push(p);
+            }
+        }
+    }
+    out
+}
+
+fn status_of(addr: &str, id: usize) -> Json {
+    let resp = request(addr, &Json::obj(vec![("cmd", "STATUS".into()), ("job", id.into())]))
+        .expect("STATUS");
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    resp
+}
+
+/// Kill a serving child mid-slice (third snapshot publish), recover with
+/// a second child, and prove the drain bit-identical to uninterrupted
+/// references — the ISSUE 7 acceptance test.
+#[test]
+fn kill_mid_slice_then_recover_drains_bit_identical() {
+    let dir = temp_dir("e2e");
+    let configs: Vec<RunConfig> = (0..N_JOBS).map(|i| job_config(i, &dir)).collect();
+
+    // ---- uninterrupted references on the serving environment ---------------
+    let env = TrainEnv::new(DOCS, SERVE_SEED).expect("surrogate runtime available");
+    let references: Vec<_> =
+        configs.iter().map(|c| env.run(c.clone()).expect("reference run")).collect();
+    drop(env); // the children build their own; keep peak memory flat
+
+    // ---- child A: serve, accept 4 jobs, crash on the 3rd snapshot ----------
+    let (mut child_a, addr_a) = spawn_serve(&dir, &[], &[("DSDE_CRASH_AFTER_SAVES", "2")]);
+    // One batch SUBMIT: all four jobs enter at a single slice boundary, so
+    // the round-robin is deterministic — job 1 saves at step 3, job 2 saves
+    // at step 3, and the crash hook fires inside job 3's first publish.
+    let entries: Vec<Json> =
+        configs.iter().map(|c| Json::obj(vec![("config", c.to_json())])).collect();
+    let resp = request(
+        &addr_a,
+        &Json::obj(vec![("cmd", "SUBMIT".into()), ("jobs", Json::Arr(entries))]),
+    )
+    .expect("batch SUBMIT");
+    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+    let accepted = resp.get("jobs").as_arr().expect("batch response");
+    assert_eq!(accepted.len(), N_JOBS);
+    for (i, j) in accepted.iter().enumerate() {
+        assert_eq!(j.get("ok").as_bool(), Some(true), "{j:?}");
+        assert_eq!(j.get("job").as_usize(), Some(i + 1), "ids assigned in submission order");
+    }
+
+    let status = wait_deadline(&mut child_a, 300, "crashing server");
+    let stderr_a = drain_stderr(&mut child_a);
+    assert_eq!(
+        status.code(),
+        Some(CRASH_EXIT_CODE),
+        "child must die through the crash hook, not cleanly; stderr:\n{stderr_a}"
+    );
+
+    // ---- the wreckage is exactly as designed -------------------------------
+    let journal = std::fs::read_to_string(dir.join("jobs.jsonl")).expect("journal survives");
+    let records: Vec<Json> =
+        journal.lines().map(|l| Json::parse(l).expect("journal line parses")).collect();
+    assert_eq!(records.len(), N_JOBS, "4 fsync'd submit records, no terminals:\n{journal}");
+    for (i, r) in records.iter().enumerate() {
+        assert_eq!(r.get("event").as_str(), Some("submit"), "{r:?}");
+        assert_eq!(r.get("id").as_usize(), Some(i + 1), "{r:?}");
+    }
+    for id in [1, 2] {
+        let snap = dir.join(format!("job-{id:06}")).join(format!("step{SLICE:06}.ckpt"));
+        assert!(snap.is_file(), "job {id} published its boundary snapshot at {snap:?}");
+    }
+    let tmps = stranded_tmps(&dir);
+    assert_eq!(tmps.len(), 1, "exactly one stranded publish: {tmps:?}");
+    assert!(
+        tmps[0].starts_with(dir.join("job-000003")),
+        "the stranded tmp is job 3's interrupted snapshot: {tmps:?}"
+    );
+    assert!(
+        !dir.join("job-000003").join(format!("step{SLICE:06}.ckpt")).exists(),
+        "the crash fired before rename — job 3 must have no published snapshot"
+    );
+    assert!(!dir.join("job-000004").exists(), "job 4 never ran, so it has no namespace");
+
+    // ---- child B: --recover, drain, compare bit-for-bit --------------------
+    let (mut child_b, addr_b) = spawn_serve(&dir, &["--recover"], &[]);
+    let deadline = Instant::now() + Duration::from_secs(300);
+    for id in 1..=N_JOBS {
+        loop {
+            let st = status_of(&addr_b, id);
+            let state = st.path("job.state").as_str().unwrap_or("?").to_string();
+            if state == "done" {
+                break;
+            }
+            assert_ne!(state, "failed", "{st:?}");
+            assert!(Instant::now() < deadline, "job {id} stuck in state {state}");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+    for (i, reference) in references.iter().enumerate() {
+        let st = status_of(&addr_b, i + 1);
+        // Ids and labels line up: recovery replayed the journal in
+        // submission order, so queued-never-started jobs kept their slots.
+        assert_eq!(st.path("job.label").as_str(), Some(configs[i].label.as_str()), "{st:?}");
+        assert_eq!(st.path("job.completed_steps").as_usize(), Some(STEPS as usize), "{st:?}");
+        let expect_losses: Vec<u8> =
+            reference.step_losses.iter().flat_map(|l| l.to_bits().to_le_bytes()).collect();
+        assert_eq!(
+            st.path("job.state_hash").as_str(),
+            Some(format!("{:016x}", reference.state_hash).as_str()),
+            "job {}: recovered model state diverged: {st:?}",
+            i + 1
+        );
+        assert_eq!(
+            st.path("job.losses_fnv").as_str(),
+            Some(format!("{:016x}", fnv1a(&expect_losses)).as_str()),
+            "job {}: recovered loss trajectory diverged: {st:?}",
+            i + 1
+        );
+        assert_eq!(
+            st.path("job.data_tokens").as_u64(),
+            Some(reference.data_tokens),
+            "job {}: recovered token accounting diverged: {st:?}",
+            i + 1
+        );
+    }
+
+    let dr = request(&addr_b, &Json::obj(vec![("cmd", "DRAIN".into())])).expect("DRAIN");
+    assert_eq!(dr.get("ok").as_bool(), Some(true), "{dr:?}");
+    let status = wait_deadline(&mut child_b, 300, "recovering server");
+    let stderr_b = drain_stderr(&mut child_b);
+    assert!(status.success(), "recovered server must drain cleanly; stderr:\n{stderr_b}");
+    assert!(
+        stderr_b.contains("2 resumed at a snapshot, 2 requeued"),
+        "jobs 1–2 resume at step {SLICE}, jobs 3–4 restart from 0; stderr:\n{stderr_b}"
+    );
+    assert!(
+        stderr_b.contains("1 stranded tmp file(s) removed"),
+        "recovery garbage-collects the interrupted publish; stderr:\n{stderr_b}"
+    );
+
+    // ---- post-drain hygiene: tmp gone, journal closed out ------------------
+    assert!(stranded_tmps(&dir).is_empty(), "no tmp debris survives recovery");
+    let journal = std::fs::read_to_string(dir.join("jobs.jsonl")).expect("journal");
+    let records: Vec<Json> =
+        journal.lines().map(|l| Json::parse(l).expect("journal line parses")).collect();
+    assert_eq!(records.len(), 2 * N_JOBS, "4 submits + 4 terminals:\n{journal}");
+    let terminals: Vec<&Json> =
+        records.iter().filter(|r| r.get("event").as_str() == Some("terminal")).collect();
+    assert_eq!(terminals.len(), N_JOBS, "{journal}");
+    for t in terminals {
+        assert_eq!(t.get("state").as_str(), Some("done"), "{t:?}");
+        assert_eq!(t.get("completed_steps").as_usize(), Some(STEPS as usize), "{t:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--recover` without a journal directory is a usage error, caught
+/// before the environment build.
+#[test]
+fn recover_without_save_dir_fails_fast() {
+    let out = Command::new(env!("CARGO_BIN_EXE_dsde"))
+        .args(["serve", "--addr", "127.0.0.1:0", "--recover"])
+        .output()
+        .expect("run dsde serve --recover");
+    assert!(!out.status.success(), "must refuse to serve: {out:?}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("save-dir"), "error names the missing flag: {stderr}");
+}
