@@ -1,0 +1,206 @@
+//! step_loop — raw-speed pass over the step loop and checkpoint path
+//! (ISSUE 8 tentpole).
+//!
+//! Three measurements, every one gated by bit-identity:
+//!
+//! 1. **steps/sec** on a tiny-step composed GPT config — the sequential
+//!    (sync loader, fused) reference vs the interned-dispatch + pooled
+//!    zero-copy pipeline path. The two runs MUST agree bit-for-bit
+//!    (`state_hash`, per-step f32 losses, dispatch histogram); any drift
+//!    exits non-zero so the CI bench-smoke job goes red.
+//! 2. **checkpoint encode + write MB/s** on a synthetic multi-MB
+//!    snapshot: the parallel section-filled encode must be byte-stable
+//!    across repeats and decode back to the identical checkpoint.
+//! 3. **per-slice preemption overhead**: full-image save vs DELTA-record
+//!    save (few tensors changed), wall time and bytes — the cost a
+//!    preempted slice actually pays at its boundary.
+//!
+//! Results land in `BENCH_HISTORY.json` under `step_loop` when
+//! `DSDE_BENCH_HISTORY=1`. `DSDE_BENCH_QUICK=1` shrinks everything for
+//! the CI smoke job.
+
+use dsde::bench::{history_append, scaled, Table};
+use dsde::config::json::Json;
+use dsde::config::schema::*;
+use dsde::train::checkpoint::{image_checksum, Checkpoint, DeltaBase, TensorSnap};
+use dsde::train::{CurvePoint, Engine, TrainEnv};
+use std::time::Instant;
+
+fn tiny_case(steps: u64, pipeline_on: bool) -> RunConfig {
+    let mut c = RunConfig::baseline("gpt", steps, 3e-3);
+    c.label = if pipeline_on { "pipelined" } else { "sequential" }.into();
+    c.seed = 4242;
+    c.eval_every = steps; // keep the loop hot: evaluate only at the end
+    c.curriculum = vec![ClConfig::new(
+        Metric::SeqTru,
+        Bound::Value(8.0),
+        Bound::Value(64.0),
+        (steps as f64 * 0.6) as u64,
+    )];
+    c.routing = Routing::RandomLtd(LtdConfig::mslg(16, steps));
+    c.pipeline = if pipeline_on {
+        PipelineConfig { prefetch_depth: 3, n_loader_workers: 4 }
+    } else {
+        PipelineConfig::disabled()
+    };
+    c
+}
+
+/// A synthetic snapshot big enough to cross the parallel-encode
+/// threshold: `n_tensors` square-ish f32 tensors of `elems` elements.
+fn synthetic_ckpt(n_tensors: usize, elems: usize) -> Checkpoint {
+    let state = (0..n_tensors)
+        .map(|t| TensorSnap {
+            dims: vec![elems as i64],
+            data: (0..elems).map(|i| ((t * 31 + i) % 997) as f32 * 0.125).collect(),
+        })
+        .collect();
+    Checkpoint {
+        family: "gpt".into(),
+        step: 500,
+        total_steps: 1000,
+        n_replicas: 0,
+        engine: Engine::Fused,
+        schedule_fp: 0x5eed_cafe_f00d_0001,
+        state,
+        accountant: [500, 1 << 20, 1 << 18, 4],
+        dropper_rng: (0x9e37_79b9_7f4a_7c15, 0xda94_2042_e4dd_58b5),
+        importance: None,
+        step_losses: (0..500).map(|i| 5.0 - i as f32 * 0.005).collect(),
+        curve: (0..10u64)
+            .map(|i| CurvePoint {
+                step: i * 50,
+                compute_tokens: (i * 50 * 4096) as f64,
+                eval_loss: 5.0 - i as f64 * 0.2,
+            })
+            .collect(),
+    }
+}
+
+fn main() -> dsde::Result<()> {
+    let steps = scaled(160, 12);
+    let docs = scaled(400, 200) as usize;
+    eprintln!("== step_loop: steps/sec, encode MB/s, preemption overhead ==");
+    let env = TrainEnv::new(docs, 7)?;
+
+    // ---- 1. step-loop throughput, sequential vs pipelined ----------------
+    let seq = env.run(tiny_case(steps, false))?;
+    let piped = env.run(tiny_case(steps, true))?;
+    let seq_sps = steps as f64 / seq.wall_secs.max(1e-9);
+    let piped_sps = steps as f64 / piped.wall_secs.max(1e-9);
+    let loop_ok = seq.state_hash == piped.state_hash
+        && seq.step_losses == piped.step_losses
+        && seq.dispatch == piped.dispatch;
+
+    let mut t = Table::new(&["path", "steps", "wall s", "steps/s"]);
+    t.row(vec![
+        "sequential".into(),
+        steps.to_string(),
+        format!("{:.3}", seq.wall_secs),
+        format!("{seq_sps:.1}"),
+    ]);
+    t.row(vec![
+        "pipelined".into(),
+        steps.to_string(),
+        format!("{:.3}", piped.wall_secs),
+        format!("{piped_sps:.1}"),
+    ]);
+    println!("\nstep-loop throughput (composed GPT, {steps} tiny steps):");
+    t.print();
+
+    // ---- 2. parallel checkpoint encode + write MB/s ----------------------
+    let (n_tensors, elems) = if dsde::bench::quick_mode() { (8, 1 << 16) } else { (24, 1 << 18) };
+    let ck = synthetic_ckpt(n_tensors, elems);
+    let reps = scaled(20, 3) as usize;
+    let first = ck.encode();
+    let mb = first.len() as f64 / (1024.0 * 1024.0);
+    let t0 = Instant::now();
+    let mut encode_ok = true;
+    for _ in 0..reps {
+        encode_ok &= ck.encode() == first;
+    }
+    let encode_s = t0.elapsed().as_secs_f64() / reps as f64;
+    // Roundtrip gate: the parallel fill must decode to the same snapshot.
+    encode_ok &= Checkpoint::decode(&first).map(|d| d == ck).unwrap_or(false);
+
+    let dir = std::env::temp_dir().join(format!("dsde-step-loop-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let full_path = dir.join(format!("step{:06}.ckpt", ck.step));
+    let t0 = Instant::now();
+    ck.save(&full_path)?;
+    let full_save_s = t0.elapsed().as_secs_f64();
+
+    // ---- 3. preemption overhead: full vs delta save ----------------------
+    // A boundary where only a couple of tensors moved since the base —
+    // the delta writes just those plus the bookkeeping sections.
+    let base = DeltaBase {
+        step: ck.step,
+        file_fnv: image_checksum(&std::fs::read(&full_path)?)?,
+        tensor_fnvs: ck.tensor_fnvs(),
+    };
+    let mut next = ck.clone();
+    next.step += 10;
+    next.step_losses.extend((0..10).map(|i| 2.5 - i as f32 * 0.001));
+    next.state[0].data[0] += 1.0;
+    next.state[n_tensors / 2].data[7] += 1.0;
+    let delta_path = dir.join(format!("step{:06}.ckpt", next.step));
+    let t0 = Instant::now();
+    let (delta_bytes, n_changed) = next.encode_delta(&base)?;
+    dsde::train::checkpoint::write_snapshot(&delta_path, &delta_bytes)?;
+    let delta_save_s = t0.elapsed().as_secs_f64();
+    // Chain gate: full+delta restore must equal the in-memory snapshot.
+    let delta_ok =
+        n_changed == 2 && Checkpoint::load_chain(&delta_path).map(|c| c == next).unwrap_or(false);
+
+    let full_bytes = first.len();
+    let mut t = Table::new(&["publish", "bytes", "wall ms", "MB/s"]);
+    for (name, bytes, secs) in [
+        ("encode (mem)", full_bytes, encode_s),
+        ("full save", full_bytes, full_save_s),
+        ("delta save", delta_bytes.len(), delta_save_s),
+    ] {
+        t.row(vec![
+            name.into(),
+            bytes.to_string(),
+            format!("{:.2}", secs * 1e3),
+            format!("{:.1}", bytes as f64 / (1024.0 * 1024.0) / secs.max(1e-9)),
+        ]);
+    }
+    println!("\ncheckpoint path ({n_tensors} tensors × {elems} f32, {mb:.1} MB image):");
+    t.print();
+    t.save_csv("step_loop")?;
+    println!(
+        "delta record: {n_changed} changed tensors, {:.1}% of the full image",
+        100.0 * delta_bytes.len() as f64 / full_bytes as f64
+    );
+
+    history_append(
+        "step_loop",
+        &Json::obj(vec![
+            ("steps", (steps as usize).into()),
+            ("seq_steps_per_s", seq_sps.into()),
+            ("piped_steps_per_s", piped_sps.into()),
+            ("encode_mb_per_s", (mb / encode_s.max(1e-9)).into()),
+            ("full_save_s", full_save_s.into()),
+            ("delta_save_s", delta_save_s.into()),
+            ("full_bytes", full_bytes.into()),
+            ("delta_bytes", delta_bytes.len().into()),
+            ("bit_identical", (loop_ok && encode_ok && delta_ok).into()),
+        ]),
+    )?;
+
+    println!(
+        "\nshape check:\n  [{}] pipelined step loop bit-identical to sequential reference\n  \
+         [{}] parallel encode byte-stable and decode-roundtrips\n  \
+         [{}] full+delta chain restores the exact snapshot",
+        if loop_ok { "PASS" } else { "FAIL" },
+        if encode_ok { "PASS" } else { "FAIL" },
+        if delta_ok { "PASS" } else { "FAIL" }
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    if !(loop_ok && encode_ok && delta_ok) {
+        // Enforcing, not advisory: every speed win is gated on identity.
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -357,6 +357,13 @@ pub struct RunConfig {
     /// CLI `--save-every`). Snapshots land in [`RunConfig::save_dir`] as
     /// `step{N:06}.ckpt` via atomic write-rename.
     pub save_every: u64,
+    /// Delta-snapshot cadence (CLI `--delta-every`): with `k > 0`, every
+    /// k-th publish is a full snapshot and the ones between are `DELTA`
+    /// records carrying only the tensors that changed since the last full
+    /// one (0 = every publish is full). Restore resolves either kind
+    /// bit-identically; excluded from the schedule fingerprint like the
+    /// other elastic knobs.
+    pub delta_every: u64,
     /// Directory for periodic snapshots (CLI `--save-dir`; the default
     /// `runs/checkpoints` is gitignored).
     pub save_dir: String,
@@ -387,6 +394,7 @@ impl RunConfig {
             dispatch: DispatchPolicy::Bucket,
             prewarm: true,
             save_every: 0,
+            delta_every: 0,
             save_dir: "runs/checkpoints".to_string(),
             resume: None,
             label: "baseline".to_string(),
@@ -547,6 +555,7 @@ impl RunConfig {
             (
                 "checkpoint",
                 Json::obj(vec![
+                    ("delta_every", (self.delta_every as usize).into()),
                     ("save_every", (self.save_every as usize).into()),
                     ("save_dir", self.save_dir.as_str().into()),
                 ]),
@@ -671,6 +680,7 @@ pub fn run_config_from_json(v: &Json, default_family: &str) -> Result<RunConfig>
     let ckpt = v.get("checkpoint");
     if ckpt.as_obj().is_some() {
         cfg.save_every = ckpt.get("save_every").as_usize().unwrap_or(0) as u64;
+        cfg.delta_every = ckpt.get("delta_every").as_usize().unwrap_or(0) as u64;
         if let Some(d) = ckpt.get("save_dir").as_str() {
             cfg.save_dir = d.to_string();
         }
@@ -806,12 +816,14 @@ mod tests {
         assert_eq!(c.save_dir, "runs/checkpoints");
         assert!(c.resume.is_none());
         c.save_every = 10;
+        c.delta_every = 4;
         c.save_dir = "/tmp/ckpt".into();
         c.resume = Some("/tmp/ckpt/step000010.ckpt".into());
         c.validate().unwrap();
         let j = c.to_json();
         let c2 = run_config_from_json(&j, "gpt").unwrap();
         assert_eq!(c2.save_every, 10);
+        assert_eq!(c2.delta_every, 4);
         assert_eq!(c2.save_dir, "/tmp/ckpt");
         assert!(c2.resume.is_none(), "resume is per-invocation, not config");
         // configs without the section keep the defaults

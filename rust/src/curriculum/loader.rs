@@ -157,6 +157,26 @@ pub enum LoaderCore {
 }
 
 impl LoaderCore {
+    /// Preallocate an empty batch with capacity for this core's rows at
+    /// sequence length `max_seq`, for pool prefill: workers then write
+    /// into pooled buffers from the very first step instead of growing
+    /// fresh `Vec`s until recycles start returning. The batch carries no
+    /// data — [`LoaderCore::materialize`] fully defines every field.
+    pub fn prealloc(&self, max_seq: usize) -> AnyBatch {
+        match self {
+            LoaderCore::Gpt { batch, .. } => AnyBatch::Lm(prealloc_lm(batch * max_seq, false)),
+            LoaderCore::Bert { batch, .. } => AnyBatch::Lm(prealloc_lm(batch * max_seq, true)),
+            LoaderCore::Vit { ds, batch } => {
+                let pd = ds.n_patches * ds.patch_dim;
+                AnyBatch::Vit(VitBatch {
+                    patches: Vec::with_capacity(batch * pd),
+                    labels: Vec::with_capacity(*batch),
+                    ..VitBatch::default()
+                })
+            }
+        }
+    }
+
     /// Materialize one planned batch. `recycled` (from the
     /// [`crate::data::prefetch::Pool`]) donates its allocations; every
     /// field is fully overwritten, so reuse never changes the bytes.
@@ -553,6 +573,19 @@ fn materialize_vit(ds: &VitDataset, batch: usize, plan: &VitPlan, out: &mut VitB
 }
 
 // ---------------------------------------------------------------------------
+
+/// An empty LM batch with `n`-element capacity in every buffer (and a pad
+/// mask when `pad`), so the first materialization into it allocates
+/// nothing.
+fn prealloc_lm(n: usize, pad: bool) -> LmBatch {
+    LmBatch {
+        tokens: Vec::with_capacity(n),
+        targets: Vec::with_capacity(n),
+        loss_mask: Vec::with_capacity(n),
+        pad_mask: pad.then(|| Vec::with_capacity(n)),
+        ..LmBatch::default()
+    }
+}
 
 /// Reset a (possibly recycled) LM batch so every field is fully defined by
 /// this materialization.

@@ -17,6 +17,7 @@
 //! crossbeam; DESIGN.md §Substitutions).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
@@ -24,17 +25,48 @@ use std::time::Instant;
 pub struct Pool<T> {
     slots: Mutex<Vec<T>>,
     cap: usize,
+    reused: AtomicU64,
+    missed: AtomicU64,
 }
 
 impl<T> Pool<T> {
     /// New pool holding at most `cap` recycled objects.
     pub fn new(cap: usize) -> Pool<T> {
-        Pool { slots: Mutex::new(Vec::new()), cap: cap.max(1) }
+        Pool {
+            slots: Mutex::new(Vec::new()),
+            cap: cap.max(1),
+            reused: AtomicU64::new(0),
+            missed: AtomicU64::new(0),
+        }
+    }
+
+    /// Seed the pool with up to `n` (capped at the pool's capacity)
+    /// preallocated objects built by `make`, so takers hit recycled
+    /// buffers from the very first item instead of growing fresh
+    /// allocations until the first recycles return.
+    pub fn prefill(&self, n: usize, mut make: impl FnMut() -> T) {
+        let mut slots = self.lock();
+        let target = self.cap.min(n);
+        while slots.len() < target {
+            slots.push(make());
+        }
     }
 
     /// Take a recycled object if one is available.
     pub fn take(&self) -> Option<T> {
-        self.lock().pop()
+        let got = self.lock().pop();
+        match got {
+            Some(_) => self.reused.fetch_add(1, Ordering::Relaxed),
+            None => self.missed.fetch_add(1, Ordering::Relaxed),
+        };
+        got
+    }
+
+    /// `(reused, missed)` take counts: takes served from the pool vs
+    /// takes that came up empty (each miss is a fresh allocation at the
+    /// caller). With prefill, `missed` stays 0 in steady state.
+    pub fn stats(&self) -> (u64, u64) {
+        (self.reused.load(Ordering::Relaxed), self.missed.load(Ordering::Relaxed))
     }
 
     /// Return an object to the pool (dropped if the pool is full).
@@ -368,5 +400,22 @@ mod tests {
         assert!(p.take().is_some());
         assert!(p.take().is_none());
         assert!(p.is_empty());
+    }
+
+    #[test]
+    fn pool_prefill_serves_first_takes_and_counts_misses() {
+        let p: Pool<Vec<u8>> = Pool::new(3);
+        p.prefill(10, || Vec::with_capacity(8)); // clamped to cap
+        assert_eq!(p.len(), 3);
+        for _ in 0..3 {
+            let buf = p.take().expect("prefilled");
+            assert_eq!(buf.capacity(), 8, "preallocated buffer served");
+        }
+        assert!(p.take().is_none());
+        assert_eq!(p.stats(), (3, 1), "3 pool hits, 1 miss");
+        // prefill tops up only to cap, never past current contents
+        p.put(vec![1]);
+        p.prefill(2, Vec::new);
+        assert_eq!(p.len(), 2);
     }
 }

@@ -10,7 +10,7 @@
 //! dsde train [--preset P] [--family F] [--steps N] [--lr X] [--seed S]
 //!            [--config FILE] [--eval-every K] [--replicas N]
 //!            [--dispatch bucket|exact] [--no-prewarm]
-//!            [--save-every N] [--save-dir DIR] [--resume PATH]
+//!            [--save-every N] [--delta-every K] [--save-dir DIR] [--resume PATH]
 //!                                   run one training; prints the curve
 //!                                   (--replicas N: data-parallel replica
 //!                                   engine; 0 = fused single step;
@@ -18,6 +18,9 @@
 //!                                   requested shapes verbatim;
 //!                                   --save-every N: atomic checkpoint
 //!                                   every N steps into --save-dir;
+//!                                   --delta-every K: every K-th publish is
+//!                                   full, the rest are DELTA records of
+//!                                   just the changed tensors;
 //!                                   --resume PATH: restore a snapshot and
 //!                                   continue bit-identically)
 //! dsde pareto [--steps N] [--jobs J] quick Fig.2-style sweep (3 budgets;
@@ -82,7 +85,7 @@ fn main() {
 const VALUE_KEYS: &[&str] = &[
     "docs", "workers", "metric", "preset", "family", "steps", "lr", "seed",
     "config", "eval-every", "out", "prefetch-depth", "loader-workers",
-    "replicas", "dispatch", "save-every", "save-dir", "resume", "label",
+    "replicas", "dispatch", "save-every", "delta-every", "save-dir", "resume", "label",
     "addr", "jobs", "slice", "priority", "share", "job", "default-slice",
     "conn-threads", "queue-cap", "conn-backlog", "max-request-bytes",
 ];
@@ -249,6 +252,7 @@ fn run_config_from_args(args: &Args) -> dsde::Result<RunConfig> {
         cfg.prewarm = false;
     }
     cfg.save_every = args.get_u64("save-every", cfg.save_every)?;
+    cfg.delta_every = args.get_u64("delta-every", cfg.delta_every)?;
     if let Some(d) = args.get("save-dir") {
         cfg.save_dir = d.to_string();
     }

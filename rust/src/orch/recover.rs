@@ -114,10 +114,14 @@ pub struct RecoveryReport {
     pub skipped: usize,
 }
 
-/// Scan one snapshot namespace: find the newest `*.ckpt` that decodes
-/// cleanly (highest checkpoint `step`; filename breaks ties), count and
-/// delete stranded `*.ckpt.tmp` files, ignore everything else. A missing
-/// directory is an empty scan, not an error.
+/// Scan one snapshot namespace: find the newest `*.ckpt` whose whole
+/// restore chain resolves cleanly (highest checkpoint `step`; filename
+/// breaks ties), count and delete stranded `*.ckpt.tmp` files, ignore
+/// everything else. A DELTA record with a missing, rewritten or corrupt
+/// base fails its chain validation and is skipped like any corrupt file —
+/// so the scan falls back to the newest snapshot that *is* restorable
+/// (typically the chain's own full base). A missing directory is an empty
+/// scan, not an error.
 pub fn scan_namespace(dir: &Path) -> Result<NamespaceScan> {
     let mut scan = NamespaceScan::default();
     let entries = match std::fs::read_dir(dir) {
@@ -143,7 +147,9 @@ pub fn scan_namespace(dir: &Path) -> Result<NamespaceScan> {
                 .with_context(|| format!("garbage-collecting {}", path.display()))?;
             scan.gc_tmp += 1;
         } else if name.ends_with(".ckpt") {
-            match Checkpoint::load(&path) {
+            // load_chain: full snapshots load directly; deltas must also
+            // resolve their validated base to count as recoverable.
+            match Checkpoint::load_chain(&path) {
                 // `>=`: equal steps resolve to the lexicographically
                 // later filename (names are sorted above).
                 Ok(ck) if scan.latest.as_ref().is_none_or(|(_, s)| ck.step >= *s) => {

@@ -23,7 +23,76 @@
 use crate::config::schema::DispatchPolicy;
 use crate::Result;
 use anyhow::{anyhow, bail};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, RwLock};
+
+/// Interned artifact-name key: a dense `u32` handed out by [`KeyInterner`].
+///
+/// `Copy`, trivially hashable and 8× smaller than a `String` — the hot
+/// path (dispatch histogram, JIT-cache lookups, replica-worker resolve)
+/// keys on this; names are rebuilt only at the JSON/reporting boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct KeyId(pub u32);
+
+/// Append-only, thread-safe artifact-name intern table.
+///
+/// Ids are dense (`0..len`), allocated in first-sight order and never
+/// reused, so a `Vec` indexed by `KeyId` is a valid per-run side table.
+/// Shared as an `Arc` by [`Registry`] and every structure derived from it
+/// (`Runtime` cache, prewarmer, replica catalog), so one id means one
+/// name process-wide for a given registry.
+#[derive(Default)]
+pub struct KeyInterner {
+    inner: RwLock<Intern>,
+}
+
+#[derive(Default)]
+struct Intern {
+    ids: HashMap<String, u32>,
+    names: Vec<String>,
+}
+
+impl KeyInterner {
+    /// Empty table.
+    pub fn new() -> KeyInterner {
+        KeyInterner::default()
+    }
+
+    /// Id for `name`, allocating the next dense id on first sight.
+    pub fn intern(&self, name: &str) -> KeyId {
+        if let Some(&id) = self.inner.read().unwrap().ids.get(name) {
+            return KeyId(id);
+        }
+        let mut w = self.inner.write().unwrap();
+        if let Some(&id) = w.ids.get(name) {
+            return KeyId(id);
+        }
+        let id = u32::try_from(w.names.len()).expect("intern table overflow");
+        w.names.push(name.to_string());
+        w.ids.insert(name.to_string(), id);
+        KeyId(id)
+    }
+
+    /// The name behind `id` (panics on an id from a different table).
+    pub fn name(&self, id: KeyId) -> String {
+        self.inner.read().unwrap().names[id.0 as usize].clone()
+    }
+
+    /// Run `f` over the name behind `id` without cloning the string.
+    pub fn with_name<R>(&self, id: KeyId, f: impl FnOnce(&str) -> R) -> R {
+        f(&self.inner.read().unwrap().names[id.0 as usize])
+    }
+
+    /// Number of interned names.
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().names.len()
+    }
+
+    /// True when nothing has been interned yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
 
 /// Element type of a program input/output tensor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -166,13 +235,18 @@ pub struct Registry {
     /// The legacy variant grid (172 points), kept for bucket-policy
     /// membership checks and `manifest.json` emission.
     pub grid: BTreeMap<String, ArtifactInfo>,
+    /// The shared artifact-name intern table (hot-path `KeyId` handles).
+    pub keys: Arc<KeyInterner>,
 }
 
 /// The result of routing a requested (seq, keep) point.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug)]
 pub struct Route {
-    /// Artifact name the step dispatches to.
+    /// Artifact name the step dispatches to (kept for the JSON/reporting
+    /// boundary and the schedule fingerprint, which hashes these bytes).
     pub artifact: String,
+    /// Interned id of `artifact` — the handle the step loop dispatches on.
+    pub key: KeyId,
     /// Sequence length actually used (bucketed or verbatim per policy).
     pub seq: usize,
     /// Kept middle-layer length actually used (== seq when not dropping).
@@ -180,6 +254,18 @@ pub struct Route {
     /// Routing mode of the dispatched variant.
     pub mode: Mode,
 }
+
+// Equality is by routed point, not intern id: two registries intern in
+// different first-sight orders, and a route's identity is its name.
+impl PartialEq for Route {
+    fn eq(&self, other: &Route) -> bool {
+        self.artifact == other.artifact
+            && self.seq == other.seq
+            && self.keep == other.keep
+            && self.mode == other.mode
+    }
+}
+impl Eq for Route {}
 
 impl Registry {
     /// The built-in registry: families and the legacy grid, synthesized
@@ -190,7 +276,12 @@ impl Registry {
             .into_iter()
             .map(|a| (a.name.clone(), a))
             .collect();
-        Ok(Registry { families, grid })
+        Ok(Registry { families, grid, keys: Arc::new(KeyInterner::new()) })
+    }
+
+    /// Intern an artifact name in the registry's shared table.
+    pub fn key(&self, name: &str) -> KeyId {
+        self.keys.intern(name)
     }
 
     /// Look up a family by name.
@@ -261,8 +352,10 @@ impl Registry {
     ) -> Result<Route> {
         let f = self.family(family)?;
         let seq = self.seq_for(family, requested_seq, policy)?;
+        let plain_name = format!("{family}_train_s{seq}_full");
         let plain = Route {
-            artifact: format!("{family}_train_s{seq}_full"),
+            key: self.keys.intern(&plain_name),
+            artifact: plain_name,
             seq,
             keep: seq,
             mode: Mode::Plain,
@@ -277,7 +370,7 @@ impl Registry {
                 Mode::Bypass => format!("{family}_train_s{seq}_bypass{keep}"),
                 Mode::Plain => unreachable!(),
             };
-            return Ok(Route { artifact, seq, keep, mode });
+            return Ok(Route { key: self.keys.intern(&artifact), artifact, seq, keep, mode });
         }
         // Bucket policy, dropping requested: find the keep bucket.
         let buckets = match f.keep_buckets.get(&seq) {
@@ -297,7 +390,9 @@ impl Registry {
             None => None,
         };
         match exists {
-            Some((artifact, keep)) => Ok(Route { artifact, seq, keep, mode }),
+            Some((artifact, keep)) => {
+                Ok(Route { key: self.keys.intern(&artifact), artifact, seq, keep, mode })
+            }
             None => Ok(plain),
         }
     }
@@ -339,6 +434,19 @@ impl Registry {
             }
         }
         Ok(name)
+    }
+
+    /// Interned id of [`Registry::grad_name`] — the handle the replica
+    /// engine dispatches on. Routing/validation cost is paid here (plan
+    /// time), not per step.
+    pub fn grad_key(
+        &self,
+        family: &str,
+        route: &Route,
+        rows: usize,
+        policy: DispatchPolicy,
+    ) -> Result<KeyId> {
+        Ok(self.keys.intern(&self.grad_name(family, route, rows, policy)?))
     }
 
     /// The family's shared optimizer-apply artifact (replica engine).
@@ -565,6 +673,25 @@ mod tests {
             assert_eq!(info.outputs.len(), 3 * np + 1);
             assert_eq!(info.outputs.last().unwrap().name, "gnorm");
         }
+    }
+
+    #[test]
+    fn interner_is_stable_dense_and_route_keys_match_names() {
+        let r = registry();
+        let a = r.key("gpt_train_s64_full");
+        let b = r.key("gpt_train_s64_ltd16");
+        assert_ne!(a, b);
+        assert_eq!(r.key("gpt_train_s64_full"), a, "re-intern returns the same id");
+        assert_eq!(r.keys.name(a), "gpt_train_s64_full");
+        r.keys.with_name(b, |n| assert_eq!(n, "gpt_train_s64_ltd16"));
+        let route = r.route_train("gpt", 64, 20, Mode::Ltd, BUCKET).unwrap();
+        assert_eq!(r.keys.name(route.key), route.artifact, "route key ↔ route name");
+        let g = r.grad_key("gpt", &route, 4, BUCKET).unwrap();
+        assert_eq!(r.keys.name(g), r.grad_name("gpt", &route, 4, BUCKET).unwrap());
+        // equality ignores intern order: same point from a fresh registry
+        let r2 = registry();
+        let route2 = r2.route_train("gpt", 64, 20, Mode::Ltd, BUCKET).unwrap();
+        assert_eq!(route, route2);
     }
 
     #[test]

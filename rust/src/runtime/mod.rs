@@ -21,7 +21,9 @@ pub mod collective;
 pub mod executable;
 pub mod synth;
 
-pub use artifacts::{ArtifactInfo, DType, FamilyInfo, Mode, Registry, Route, TensorSpec};
+pub use artifacts::{
+    ArtifactInfo, DType, FamilyInfo, KeyId, KeyInterner, Mode, Registry, Route, TensorSpec,
+};
 pub use collective::{tree_reduce, tree_reduce_literals};
 pub use executable::{get_f32, lit_f32, lit_i32, scalar_f32, scalar_u32, Step};
 
@@ -87,12 +89,14 @@ impl CacheStats {
     }
 }
 
-/// Bounded LRU over compiled steps. Recency is a monotone tick per access;
-/// eviction drops the stalest entry (holders of the `Rc` keep it alive).
+/// Bounded LRU over compiled steps, keyed by interned [`KeyId`] (one
+/// `u32` hash per lookup instead of re-hashing an artifact name).
+/// Recency is a monotone tick per access; eviction drops the stalest
+/// entry (holders of the `Rc` keep it alive).
 struct LruCache {
     cap: usize,
     tick: u64,
-    map: HashMap<String, (Rc<Step>, u64)>,
+    map: HashMap<KeyId, (Rc<Step>, u64)>,
 }
 
 impl LruCache {
@@ -100,10 +104,10 @@ impl LruCache {
         LruCache { cap: cap.max(1), tick: 0, map: HashMap::new() }
     }
 
-    fn get(&mut self, name: &str) -> Option<Rc<Step>> {
+    fn get(&mut self, key: KeyId) -> Option<Rc<Step>> {
         self.tick += 1;
         let tick = self.tick;
-        self.map.get_mut(name).map(|(step, used)| {
+        self.map.get_mut(&key).map(|(step, used)| {
             *used = tick;
             step.clone()
         })
@@ -111,16 +115,13 @@ impl LruCache {
 
     /// Insert (no-op if present) and evict down to capacity. Returns the
     /// number of evictions.
-    fn insert(&mut self, name: &str, step: Rc<Step>) -> u64 {
+    fn insert(&mut self, key: KeyId, step: Rc<Step>) -> u64 {
         self.tick += 1;
-        self.map.entry(name.to_string()).or_insert((step, self.tick));
+        self.map.entry(key).or_insert((step, self.tick));
         let mut evicted = 0;
         while self.map.len() > self.cap {
-            if let Some(stalest) = self
-                .map
-                .iter()
-                .min_by_key(|(_, (_, used))| *used)
-                .map(|(k, _)| k.clone())
+            if let Some(stalest) =
+                self.map.iter().min_by_key(|(_, (_, used))| *used).map(|(&k, _)| k)
             {
                 self.map.remove(&stalest);
                 evicted += 1;
@@ -143,16 +144,16 @@ impl LruCache {
 /// the cache discards) every job stamped with an older generation, and
 /// drop stores `u64::MAX` so a pending backlog never delays teardown.
 struct Prewarmer {
-    job_tx: Sender<(u64, String, ArtifactInfo, String)>,
-    done_rx: Receiver<(u64, String, Step)>,
+    job_tx: Sender<(u64, KeyId, ArtifactInfo, String)>,
+    done_rx: Receiver<(u64, KeyId, Step)>,
     current: Arc<AtomicU64>,
     handle: Option<JoinHandle<()>>,
 }
 
 impl Prewarmer {
     fn spawn(current: Arc<AtomicU64>) -> Prewarmer {
-        let (job_tx, job_rx) = channel::<(u64, String, ArtifactInfo, String)>();
-        let (done_tx, done_rx) = channel::<(u64, String, Step)>();
+        let (job_tx, job_rx) = channel::<(u64, KeyId, ArtifactInfo, String)>();
+        let (done_tx, done_rx) = channel::<(u64, KeyId, Step)>();
         let worker_gen = current.clone();
         let handle = std::thread::Builder::new()
             .name("dsde-prewarm".into())
@@ -161,7 +162,7 @@ impl Prewarmer {
                     Ok(c) => c,
                     Err(_) => return,
                 };
-                while let Ok((generation, name, info, text)) = job_rx.recv() {
+                while let Ok((generation, key, info, text)) = job_rx.recv() {
                     if generation != worker_gen.load(Ordering::Relaxed) {
                         continue; // canceled by clear_cache or teardown
                     }
@@ -170,7 +171,7 @@ impl Prewarmer {
                         // will compile inline (and report properly) if the
                         // run actually reaches it.
                         Ok(step) => {
-                            if done_tx.send((generation, name, step)).is_err() {
+                            if done_tx.send((generation, key, step)).is_err() {
                                 return;
                             }
                         }
@@ -247,22 +248,30 @@ impl Runtime {
         Self::new()
     }
 
-    /// Get the named executable: adopt any finished prewarms, then serve
-    /// from the cache, JIT-specializing (synthesize + compile) on miss.
+    /// Get the named executable: interns the name, then defers to
+    /// [`Runtime::step_by_key`]. Hot loops should intern once (the route
+    /// plan already carries `Route::key`) and call `step_by_key` directly.
     pub fn step(&self, name: &str) -> Result<Rc<Step>> {
+        self.step_by_key(self.registry.key(name))
+    }
+
+    /// Get an executable by interned key: adopt any finished prewarms,
+    /// then serve from the cache, JIT-specializing (synthesize + compile)
+    /// on miss. The cache lookup hashes a `u32`, not an artifact name.
+    pub fn step_by_key(&self, key: KeyId) -> Result<Rc<Step>> {
         self.adopt_prewarmed();
-        if let Some(s) = self.cache.borrow_mut().get(name) {
+        if let Some(s) = self.cache.borrow_mut().get(key) {
             self.stats.borrow_mut().hits += 1;
             return Ok(s);
         }
-        let info = self.registry.artifact(name)?;
+        let info = self.registry.keys.with_name(key, |name| self.registry.artifact(name))?;
         let text = self.registry.module_text(&info)?;
         let step = Rc::new(Step::from_text(&self.client, &text, info)?);
         {
             let mut st = self.stats.borrow_mut();
             st.misses += 1;
             st.inline_compile_secs += step.compile_secs;
-            st.evictions += self.cache.borrow_mut().insert(name, step.clone());
+            st.evictions += self.cache.borrow_mut().insert(key, step.clone());
         }
         Ok(step)
     }
@@ -280,12 +289,13 @@ impl Runtime {
             prewarmer.get_or_insert_with(|| Prewarmer::spawn(self.generation.clone()));
         let mut queued = 0;
         for name in names {
-            if self.cache.borrow_mut().get(&name).is_some() {
+            let key = self.registry.key(&name);
+            if self.cache.borrow_mut().get(key).is_some() {
                 continue;
             }
             let info = self.registry.artifact(&name)?;
             let text = self.registry.module_text(&info)?;
-            if worker.job_tx.send((generation, name, info, text)).is_ok() {
+            if worker.job_tx.send((generation, key, info, text)).is_ok() {
                 queued += 1;
             }
         }
@@ -299,18 +309,18 @@ impl Runtime {
         let Some(worker) = prewarmer.as_ref() else {
             return;
         };
-        while let Ok((generation, name, step)) = worker.done_rx.try_recv() {
+        while let Ok((generation, key, step)) = worker.done_rx.try_recv() {
             if generation != self.generation.load(Ordering::Relaxed) {
                 continue; // compiled for a cleared cache: stale
             }
             let mut cache = self.cache.borrow_mut();
-            if cache.get(&name).is_some() {
+            if cache.get(key).is_some() {
                 continue; // lost the race to an inline compile
             }
             let mut st = self.stats.borrow_mut();
             st.prewarmed += 1;
             st.prewarm_compile_secs += step.compile_secs;
-            st.evictions += cache.insert(&name, Rc::new(step));
+            st.evictions += cache.insert(key, Rc::new(step));
         }
     }
 
@@ -353,6 +363,17 @@ mod tests {
         let st = rt.cache_stats();
         assert_eq!((st.hits, st.misses), (1, 1));
         assert!(rt.total_compile_secs() > 0.0);
+    }
+
+    #[test]
+    fn step_by_key_and_step_share_one_cache_entry() {
+        let rt = Runtime::new().expect("builtin registry");
+        let key = rt.registry.key("gpt_init");
+        let a = rt.step_by_key(key).unwrap();
+        let b = rt.step("gpt_init").unwrap();
+        assert!(Rc::ptr_eq(&a, &b), "name and key lookups hit the same executable");
+        assert_eq!(rt.cached_executables(), 1);
+        assert_eq!((rt.cache_stats().hits, rt.cache_stats().misses), (1, 1));
     }
 
     #[test]

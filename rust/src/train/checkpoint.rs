@@ -41,7 +41,31 @@
 //!
 //! Body order: state tensors (f32, dims from the header) · accountant
 //! (4×u64) · dropper RNG (2×u64) · importance arrays (f64/u64, optional) ·
-//! step losses (f32) · curve points (u64 + 2×f64 each). Writes are atomic
+//! step losses (f32) · curve points (u64 + 2×f64 each). The encoder
+//! computes every section's byte offset up front (the preallocation is
+//! exact — encode never reallocates) and fills large bodies from multiple
+//! threads over a fixed chunk tree; the bytes and the trailing checksum
+//! are identical to the sequential serialization either way.
+//!
+//! # DELTA records (incremental snapshots)
+//!
+//! The same v1 container can carry an **incremental** snapshot: a record
+//! whose header adds `kind:"delta"`, `base_step`, `base_fnv` (the trailing
+//! checksum of the base file) and `changed` (state-tensor indices), and
+//! whose body carries **only the tensors whose per-tensor FNV changed**
+//! since the base full snapshot — preemption cost scales with what
+//! changed. The non-tensor sections (accountant, RNG, importance, losses,
+//! curve) are always complete; they are small next to the tensor payload.
+//! Chain rules: a delta chains to exactly one **full** snapshot
+//! (`step{base_step:06}.ckpt` in the same directory), validated by
+//! `base_fnv` against the base file's actual checksum, so a rewritten or
+//! corrupt base breaks the chain loudly instead of restoring mixed state.
+//! [`Checkpoint::load_chain`] resolves either record kind to a fully
+//! materialized snapshot; plain [`Checkpoint::decode`] rejects deltas
+//! with a pointer to `load_chain`. Full-snapshot bytes are unchanged
+//! (`tests/goldens/checkpoint_v1.txt` still pins them).
+//!
+//! Writes are atomic
 //! **and durable**: encode to `<path>.tmp`, fsync the file, rename, then
 //! fsync the parent directory — a crash mid-write leaves no partial file
 //! at the final path, and a power loss after [`Checkpoint::save`] returns
@@ -154,50 +178,131 @@ pub struct Checkpoint {
     pub curve: Vec<CurvePoint>,
 }
 
+/// Byte size above which body serialization fans out across threads
+/// (below it, spawn overhead exceeds the copy itself).
+const PARALLEL_ENCODE_MIN_BYTES: usize = 1 << 20;
+
+/// Chain metadata of the full snapshot a DELTA record is cut against.
+/// The trainer captures this when it publishes a full snapshot and hands
+/// it to [`Checkpoint::encode_delta`] on the deltas in between.
+#[derive(Clone, Debug)]
+pub struct DeltaBase {
+    /// Step of the base full snapshot (`step{step:06}.ckpt` beside the
+    /// delta).
+    pub step: u64,
+    /// Trailing FNV-1a checksum of the base *file* — the chain-validation
+    /// fingerprint stored in every dependent delta.
+    pub file_fnv: u64,
+    /// Per-tensor FNV-1a fingerprints of the base state
+    /// ([`Checkpoint::tensor_fnvs`]).
+    pub tensor_fnvs: Vec<u64>,
+}
+
+/// Header fields that make a record a DELTA (see the module docs).
+struct DeltaInfo {
+    base_step: u64,
+    base_fnv: u64,
+    changed: Vec<usize>,
+}
+
 impl Checkpoint {
-    /// Serialize to the on-disk byte format (see the module docs).
+    /// Serialize to the on-disk byte format (see the module docs). The
+    /// allocation is exact and large bodies are filled in parallel; the
+    /// bytes are identical to the historical sequential encoding.
     pub fn encode(&self) -> Vec<u8> {
         let header = self.header_json().to_string_compact();
-        let mut buf = Vec::with_capacity(64 + header.len() + self.body_len());
-        buf.extend_from_slice(MAGIC);
-        buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
-        buf.extend_from_slice(&(header.len() as u32).to_le_bytes());
-        buf.extend_from_slice(header.as_bytes());
-        for t in &self.state {
-            for x in &t.data {
-                buf.extend_from_slice(&x.to_le_bytes());
-            }
-        }
-        for v in self.accountant {
-            buf.extend_from_slice(&v.to_le_bytes());
-        }
-        buf.extend_from_slice(&self.dropper_rng.0.to_le_bytes());
-        buf.extend_from_slice(&self.dropper_rng.1.to_le_bytes());
-        if let Some((cum, seen)) = &self.importance {
-            for x in cum {
-                buf.extend_from_slice(&x.to_le_bytes());
-            }
-            for s in seen {
-                buf.extend_from_slice(&s.to_le_bytes());
-            }
-        }
-        for l in &self.step_losses {
-            buf.extend_from_slice(&l.to_le_bytes());
-        }
-        for p in &self.curve {
-            buf.extend_from_slice(&p.step.to_le_bytes());
-            buf.extend_from_slice(&p.compute_tokens.to_le_bytes());
-            buf.extend_from_slice(&p.eval_loss.to_le_bytes());
-        }
-        let checksum = fnv1a(&buf);
-        buf.extend_from_slice(&checksum.to_le_bytes());
+        let all: Vec<usize> = (0..self.state.len()).collect();
+        let buf = self.encode_image(&header, &all);
+        debug_assert_eq!(buf.len(), 16 + header.len() + self.body_len() + 8);
         buf
     }
 
-    /// Decode and fully validate a checkpoint byte image. Errors name the
-    /// failure class: bad magic, unsupported version, truncation,
-    /// checksum mismatch, or a malformed header/body.
+    /// Encode a DELTA record against `base`: the header gains
+    /// `kind`/`base_step`/`base_fnv`/`changed`, and the body carries only
+    /// the tensors whose per-tensor FNV moved since the base. Returns the
+    /// bytes and the changed-tensor count (callers report/bench it).
+    pub fn encode_delta(&self, base: &DeltaBase) -> Result<(Vec<u8>, usize)> {
+        if base.tensor_fnvs.len() != self.state.len() {
+            bail!(
+                "delta base fingerprints cover {} tensors, snapshot has {}",
+                base.tensor_fnvs.len(),
+                self.state.len()
+            );
+        }
+        let changed: Vec<usize> = self
+            .state
+            .iter()
+            .enumerate()
+            .filter(|(i, t)| tensor_fnv(t) != base.tensor_fnvs[*i])
+            .map(|(i, _)| i)
+            .collect();
+        let header = self.delta_header_json(base, &changed).to_string_compact();
+        let n = changed.len();
+        Ok((self.encode_image(&header, &changed), n))
+    }
+
+    /// Per-tensor FNV-1a fingerprints over each state tensor's f32 bit
+    /// patterns (dims are invariant across one run's snapshots), used to
+    /// decide which tensors a DELTA record must carry.
+    pub fn tensor_fnvs(&self) -> Vec<u64> {
+        self.state.iter().map(tensor_fnv).collect()
+    }
+
+    /// Shared serializer of full and delta images: prelude + header, then
+    /// the fixed body sections (the tensors at `tensor_idx`, in order,
+    /// followed by the non-tensor sections), then the checksum. Offsets
+    /// are computed up front, so the body fills disjoint chunks — in
+    /// parallel when large — into an exactly-sized buffer.
+    fn encode_image(&self, header: &str, tensor_idx: &[usize]) -> Vec<u8> {
+        let rng = [self.dropper_rng.0, self.dropper_rng.1];
+        let mut sections: Vec<Section> = Vec::with_capacity(tensor_idx.len() + 5);
+        for &i in tensor_idx {
+            sections.push(Section::F32(&self.state[i].data));
+        }
+        sections.push(Section::U64(&self.accountant));
+        sections.push(Section::U64(&rng));
+        if let Some((cum, seen)) = &self.importance {
+            sections.push(Section::F64(cum));
+            sections.push(Section::U64(seen));
+        }
+        sections.push(Section::F32(&self.step_losses));
+        sections.push(Section::Curve(&self.curve));
+
+        let body_len: usize = sections.iter().map(|s| s.byte_len()).sum();
+        let prelude = 16 + header.len();
+        let total = prelude + body_len + 8;
+        let mut buf = vec![0u8; total];
+        debug_assert_eq!(buf.len(), buf.capacity(), "encode must never reallocate");
+        buf[..8].copy_from_slice(MAGIC);
+        buf[8..12].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+        buf[12..16].copy_from_slice(&(header.len() as u32).to_le_bytes());
+        buf[16..prelude].copy_from_slice(header.as_bytes());
+        fill_sections(&sections, &mut buf[prelude..total - 8]);
+        let checksum = fnv1a(&buf[..total - 8]);
+        buf[total - 8..].copy_from_slice(&checksum.to_le_bytes());
+        buf
+    }
+
+    /// Decode and fully validate a **full** checkpoint byte image. Errors
+    /// name the failure class: bad magic, unsupported version, truncation,
+    /// checksum mismatch, or a malformed header/body. DELTA records are
+    /// rejected here — their state is partial by construction; use
+    /// [`Checkpoint::load_chain`] to resolve one against its base.
     pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        let (ck, delta) = Checkpoint::decode_image(bytes)?;
+        if delta.is_some() {
+            bail!(
+                "checkpoint is a DELTA record (partial state): resolve it \
+                 with Checkpoint::load_chain"
+            );
+        }
+        Ok(ck)
+    }
+
+    /// Decode either record kind: a full snapshot (`delta` is `None`) or a
+    /// DELTA record, whose returned `state` holds only the changed tensors
+    /// (in `changed`-index order) and must be overlaid onto its base.
+    fn decode_image(bytes: &[u8]) -> Result<(Checkpoint, Option<DeltaInfo>)> {
         if bytes.len() < 16 + 8 {
             bail!("truncated checkpoint ({} bytes; the prelude is missing)", bytes.len());
         }
@@ -242,10 +347,43 @@ impl Checkpoint {
             .map_err(|_| anyhow!("corrupt checkpoint header: bad schedule_fp"))?;
         let importance_len = h.get("importance").as_usize().unwrap_or(0);
         let n_curve = h.get("curve").as_usize().unwrap_or(0);
+        let delta = match h.get("kind").as_str() {
+            None => None,
+            Some("delta") => {
+                let base_step = h
+                    .get("base_step")
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("corrupt delta record: missing base_step"))?
+                    as u64;
+                let base_fnv = u64::from_str_radix(h.get("base_fnv").as_str().unwrap_or(""), 16)
+                    .map_err(|_| anyhow!("corrupt delta record: bad base_fnv"))?;
+                let changed: Vec<usize> = h
+                    .get("changed")
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("corrupt delta record: missing changed"))?
+                    .iter()
+                    .map(|j| {
+                        j.as_usize()
+                            .ok_or_else(|| anyhow!("corrupt delta record: bad changed index"))
+                    })
+                    .collect::<Result<_>>()?;
+                Some(DeltaInfo { base_step, base_fnv, changed })
+            }
+            Some(other) => bail!("unknown checkpoint record kind '{other}'"),
+        };
         let tensors = h
             .get("tensors")
             .as_arr()
             .ok_or_else(|| anyhow!("corrupt checkpoint header: missing tensors"))?;
+        if let Some(d) = &delta {
+            if d.changed.len() != tensors.len() {
+                bail!(
+                    "corrupt delta record: {} changed indices for {} tensors",
+                    d.changed.len(),
+                    tensors.len()
+                );
+            }
+        }
         let mut dims_list: Vec<Vec<i64>> = Vec::with_capacity(tensors.len());
         let mut state_elems = 0usize;
         for t in tensors {
@@ -326,20 +464,84 @@ impl Checkpoint {
             });
         }
         debug_assert_eq!(c.pos, c.bytes.len(), "body length pre-validated");
-        Ok(Checkpoint {
-            family,
-            step,
-            total_steps,
-            n_replicas,
-            engine,
-            schedule_fp,
-            state,
-            accountant,
-            dropper_rng,
-            importance,
-            step_losses,
-            curve,
-        })
+        Ok((
+            Checkpoint {
+                family,
+                step,
+                total_steps,
+                n_replicas,
+                engine,
+                schedule_fp,
+                state,
+                accountant,
+                dropper_rng,
+                importance,
+                step_losses,
+                curve,
+            },
+            delta,
+        ))
+    }
+
+    /// Resolve a checkpoint file of **either** record kind to a fully
+    /// materialized snapshot. Full snapshots decode directly; a DELTA
+    /// record chains (depth 1) to the full snapshot `step{base_step:06}.ckpt`
+    /// in the same directory, which must exist, itself be a full record,
+    /// and carry exactly the trailing checksum the delta pinned as
+    /// `base_fnv` — a missing, rewritten or corrupt base fails the whole
+    /// chain loudly instead of restoring mixed state.
+    pub fn load_chain(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        let (partial, delta) = Checkpoint::decode_image(&bytes)
+            .with_context(|| format!("decoding {}", path.display()))?;
+        let Some(d) = delta else { return Ok(partial) };
+
+        let dir = path.parent().unwrap_or_else(|| Path::new("."));
+        let base_path = dir.join(format!("step{:06}.ckpt", d.base_step));
+        let base_bytes = std::fs::read(&base_path).with_context(|| {
+            format!(
+                "delta {} chains to missing base snapshot {}",
+                path.display(),
+                base_path.display()
+            )
+        })?;
+        let actual_fnv = image_checksum(&base_bytes)?;
+        if actual_fnv != d.base_fnv {
+            bail!(
+                "delta {} chains to base {} with checksum {:016x}, but the \
+                 file on disk has {:016x} (base rewritten or corrupt — chain \
+                 broken)",
+                path.display(),
+                base_path.display(),
+                d.base_fnv,
+                actual_fnv
+            );
+        }
+        let (mut base, base_delta) = Checkpoint::decode_image(&base_bytes)
+            .with_context(|| format!("decoding base snapshot {}", base_path.display()))?;
+        if base_delta.is_some() {
+            bail!(
+                "delta {} chains to {}, which is itself a delta record \
+                 (chains are depth 1: a base must be a full snapshot)",
+                path.display(),
+                base_path.display()
+            );
+        }
+        let mut full = partial;
+        let changed_state = std::mem::take(&mut full.state);
+        let n_base = base.state.len();
+        for (slot, tensor) in d.changed.iter().zip(changed_state) {
+            let dst = base.state.get_mut(*slot).ok_or_else(|| {
+                anyhow!(
+                    "corrupt delta record: changed index {slot} out of range \
+                     ({n_base} base tensors)"
+                )
+            })?;
+            *dst = tensor;
+        }
+        full.state = base.state;
+        Ok(full)
     }
 
     /// Atomically and durably write the snapshot to `path`: encode into a
@@ -355,39 +557,7 @@ impl Checkpoint {
     /// docs): when the budget is spent the process exits *between* the
     /// tmp fsync and the rename, leaving a stranded `.tmp`.
     pub fn save(&self, path: &Path) -> Result<()> {
-        let parent = match path.parent() {
-            Some(p) if !p.as_os_str().is_empty() => {
-                std::fs::create_dir_all(p)
-                    .with_context(|| format!("creating checkpoint dir {}", p.display()))?;
-                p
-            }
-            _ => Path::new("."),
-        };
-        let mut tmp = path.as_os_str().to_owned();
-        tmp.push(".tmp");
-        let tmp = std::path::PathBuf::from(tmp);
-        let bytes = self.encode();
-        let published = (|| -> Result<()> {
-            {
-                let mut f = std::fs::File::create(&tmp)
-                    .with_context(|| format!("creating {}", tmp.display()))?;
-                f.write_all(&bytes)?;
-                f.sync_all()?;
-            }
-            // Crash injection: the tmp is durable, the rename never runs —
-            // the exact window a real power cut can hit.
-            crash_hook_before_publish(path);
-            std::fs::rename(&tmp, path)
-                .with_context(|| format!("publishing checkpoint {}", path.display()))?;
-            sync_dir(parent)?;
-            Ok(())
-        })();
-        if published.is_err() {
-            // Never strand a half-written tmp on an error path; recovery
-            // treats any surviving .tmp as crash debris.
-            let _ = std::fs::remove_file(&tmp);
-        }
-        published
+        write_snapshot(path, &self.encode())
     }
 
     /// Read and decode a checkpoint file.
@@ -491,6 +661,33 @@ impl Checkpoint {
         ])
     }
 
+    /// DELTA header: the full-snapshot keys plus `base_fnv`/`base_step`/
+    /// `changed`/`kind`, all in sorted-key order, with `tensors` listing
+    /// only the changed tensors' dims — so the header-derived body-size
+    /// formula in [`Checkpoint::decode`] applies unchanged.
+    fn delta_header_json(&self, base: &DeltaBase, changed: &[usize]) -> Json {
+        let tensors: Vec<Json> = changed
+            .iter()
+            .map(|&i| Json::Arr(self.state[i].dims.iter().map(|&d| Json::from(d)).collect()))
+            .collect();
+        let changed_idx: Vec<Json> = changed.iter().map(|&i| i.into()).collect();
+        Json::obj(vec![
+            ("base_fnv", format!("{:016x}", base.file_fnv).into()),
+            ("base_step", (base.step as usize).into()),
+            ("changed", Json::Arr(changed_idx)),
+            ("curve", self.curve.len().into()),
+            ("engine", self.engine.name().into()),
+            ("family", self.family.as_str().into()),
+            ("importance", self.importance.as_ref().map(|(c, _)| c.len()).unwrap_or(0).into()),
+            ("kind", "delta".into()),
+            ("n_replicas", self.n_replicas.into()),
+            ("schedule_fp", format!("{:016x}", self.schedule_fp).into()),
+            ("step", (self.step as usize).into()),
+            ("tensors", Json::Arr(tensors)),
+            ("total_steps", (self.total_steps as usize).into()),
+        ])
+    }
+
     fn body_len(&self) -> usize {
         let elems: usize = self.state.iter().map(|t| t.data.len()).sum();
         elems * 4
@@ -500,6 +697,175 @@ impl Checkpoint {
             + self.step_losses.len() * 4
             + self.curve.len() * 24
     }
+}
+
+/// One contiguous body section to serialize: a typed view over the source
+/// data whose little-endian byte image fills a pre-computed chunk of the
+/// output buffer.
+enum Section<'a> {
+    /// Dense f32 elements (state tensors, step losses).
+    F32(&'a [f32]),
+    /// Raw u64 words (accountant, RNG, importance seen-counts).
+    U64(&'a [u64]),
+    /// Raw f64 values (importance cumulative losses).
+    F64(&'a [f64]),
+    /// Curve points, 24 bytes each (u64 step + f64 tokens + f64 loss).
+    Curve(&'a [CurvePoint]),
+}
+
+impl Section<'_> {
+    fn byte_len(&self) -> usize {
+        match self {
+            Section::F32(v) => v.len() * 4,
+            Section::U64(v) => v.len() * 8,
+            Section::F64(v) => v.len() * 8,
+            Section::Curve(v) => v.len() * 24,
+        }
+    }
+
+    /// Serialize this section into its exactly-sized output chunk.
+    fn fill(&self, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), self.byte_len());
+        match self {
+            Section::F32(v) => {
+                for (dst, x) in out.chunks_exact_mut(4).zip(v.iter()) {
+                    dst.copy_from_slice(&x.to_le_bytes());
+                }
+            }
+            Section::U64(v) => {
+                for (dst, x) in out.chunks_exact_mut(8).zip(v.iter()) {
+                    dst.copy_from_slice(&x.to_le_bytes());
+                }
+            }
+            Section::F64(v) => {
+                for (dst, x) in out.chunks_exact_mut(8).zip(v.iter()) {
+                    dst.copy_from_slice(&x.to_le_bytes());
+                }
+            }
+            Section::Curve(v) => {
+                for (dst, p) in out.chunks_exact_mut(24).zip(v.iter()) {
+                    dst[..8].copy_from_slice(&p.step.to_le_bytes());
+                    dst[8..16].copy_from_slice(&p.compute_tokens.to_le_bytes());
+                    dst[16..24].copy_from_slice(&p.eval_loss.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+/// Fill the body buffer from its sections. Small bodies serialize on the
+/// calling thread; large ones split into a fixed tree of disjoint
+/// (chunk, section) pairs dealt round-robin across scoped std threads —
+/// every byte has exactly one writer, so the image is identical to the
+/// sequential fill regardless of thread count or interleaving.
+fn fill_sections(sections: &[Section], body: &mut [u8]) {
+    let n_threads = if body.len() < PARALLEL_ENCODE_MIN_BYTES {
+        1
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(sections.len())
+            .min(8)
+    };
+    if n_threads <= 1 {
+        let mut rest = body;
+        for s in sections {
+            let (chunk, tail) = rest.split_at_mut(s.byte_len());
+            s.fill(chunk);
+            rest = tail;
+        }
+        return;
+    }
+    let mut jobs: Vec<Vec<(&mut [u8], &Section)>> = (0..n_threads).map(|_| Vec::new()).collect();
+    let mut rest = body;
+    for (i, s) in sections.iter().enumerate() {
+        let (chunk, tail) = rest.split_at_mut(s.byte_len());
+        jobs[i % n_threads].push((chunk, s));
+        rest = tail;
+    }
+    std::thread::scope(|scope| {
+        let mut own = Vec::new();
+        for (i, job) in jobs.into_iter().enumerate() {
+            if i == 0 {
+                own = job; // the calling thread is worker 0
+            } else {
+                scope.spawn(move || {
+                    for (chunk, s) in job {
+                        s.fill(chunk);
+                    }
+                });
+            }
+        }
+        for (chunk, s) in own {
+            s.fill(chunk);
+        }
+    });
+}
+
+/// FNV-1a over one state tensor's f32 bit patterns (LE bytes). Dims are
+/// excluded: within one run they never change, and the delta encoder only
+/// compares fingerprints across snapshots of the same run.
+fn tensor_fnv(t: &TensorSnap) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for x in &t.data {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// The trailing stored FNV-1a checksum of an encoded checkpoint image —
+/// the fingerprint DELTA records pin their base with. This reads the
+/// stored value without re-hashing; chain validation compares the base
+/// file's stored checksum against the delta's pinned `base_fnv`.
+pub fn image_checksum(bytes: &[u8]) -> Result<u64> {
+    if bytes.len() < 16 + 8 {
+        bail!("truncated checkpoint image ({} bytes)", bytes.len());
+    }
+    Ok(u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap()))
+}
+
+/// Atomically and durably publish pre-encoded snapshot bytes to `path`:
+/// write a sibling `.tmp`, fsync it, rename over the final name, then
+/// fsync the parent directory. Shared by full and DELTA saves so both get
+/// the same crash-safety contract (and the same `DSDE_CRASH_AFTER_SAVES`
+/// fault hook); see [`Checkpoint::save`] for the full guarantees.
+pub fn write_snapshot(path: &Path, bytes: &[u8]) -> Result<()> {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => {
+            std::fs::create_dir_all(p)
+                .with_context(|| format!("creating checkpoint dir {}", p.display()))?;
+            p
+        }
+        _ => Path::new("."),
+    };
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    let published = (|| -> Result<()> {
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+        }
+        // Crash injection: the tmp is durable, the rename never runs —
+        // the exact window a real power cut can hit.
+        crash_hook_before_publish(path);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing checkpoint {}", path.display()))?;
+        sync_dir(parent)?;
+        Ok(())
+    })();
+    if published.is_err() {
+        // Never strand a half-written tmp on an error path; recovery
+        // treats any surviving .tmp as crash debris.
+        let _ = std::fs::remove_file(&tmp);
+    }
+    published
 }
 
 /// Convert runtime state literals into serializable tensors. Errors if a
@@ -733,7 +1099,7 @@ mod tests {
     use super::*;
     use crate::config::schema::RunConfig;
     use crate::curriculum::scheduler::ClState;
-    use crate::runtime::{Mode, Route};
+    use crate::runtime::{KeyId, Mode, Route};
 
     pub(crate) fn sample() -> Checkpoint {
         Checkpoint {
@@ -766,6 +1132,7 @@ mod tests {
                 },
                 route: Route {
                     artifact: "gpt_train_s64_full".into(),
+                    key: KeyId(0),
                     seq: 64,
                     keep: 64,
                     mode: Mode::Plain,
@@ -841,6 +1208,143 @@ mod tests {
     }
 
     #[test]
+    fn parallel_encode_is_bit_identical_and_exact() {
+        // Body > PARALLEL_ENCODE_MIN_BYTES so the threaded fill runs, with
+        // several tensors so the round-robin deal actually distributes.
+        let mut ck = sample();
+        ck.state = (0..6)
+            .map(|t| TensorSnap {
+                dims: vec![64 * 1024],
+                data: (0..64 * 1024).map(|i| (i as f32) * 0.5 - t as f32).collect(),
+            })
+            .collect();
+        let bytes = ck.encode();
+        assert!(bytes.len() > PARALLEL_ENCODE_MIN_BYTES);
+        // decode re-verifies the checksum over every byte and rebuilds all
+        // sections, so roundtrip equality proves the parallel fill wrote
+        // the exact sequential image.
+        assert_eq!(Checkpoint::decode(&bytes).unwrap(), ck);
+        assert_eq!(bytes, ck.encode(), "encode must be deterministic");
+    }
+
+    fn delta_dir(tag: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("dsde-delta-unit-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// sample() advanced two steps with only state[1] touched.
+    fn advanced(base: &Checkpoint) -> Checkpoint {
+        let mut next = base.clone();
+        next.step = 5;
+        next.state[1].data[0] = 9.75;
+        next.accountant[0] = 5;
+        next.step_losses.extend([4.75, 4.5]);
+        next.curve.push(CurvePoint { step: 4, compute_tokens: 2048.0, eval_loss: 4.875 });
+        next
+    }
+
+    #[test]
+    fn delta_chain_roundtrip_is_bit_exact() {
+        let dir = delta_dir("roundtrip");
+        let mut base = sample();
+        // A realistically-sized unchanged tensor: dropping it from the
+        // delta body must dominate the chain-metadata header overhead.
+        base.state[0] =
+            TensorSnap { dims: vec![16, 16], data: (0..256).map(|i| i as f32 * 0.5).collect() };
+        let base_bytes = base.encode();
+        write_snapshot(&dir.join("step000003.ckpt"), &base_bytes).unwrap();
+        let db = DeltaBase {
+            step: base.step,
+            file_fnv: image_checksum(&base_bytes).unwrap(),
+            tensor_fnvs: base.tensor_fnvs(),
+        };
+        let next = advanced(&base);
+        let (delta_bytes, n_changed) = next.encode_delta(&db).unwrap();
+        assert_eq!(n_changed, 1, "only state[1] moved");
+        assert!(
+            delta_bytes.len() < next.encode().len(),
+            "a delta must be smaller than the full snapshot it replaces"
+        );
+        let path = dir.join("step000005.ckpt");
+        write_snapshot(&path, &delta_bytes).unwrap();
+        assert_eq!(Checkpoint::load_chain(&path).unwrap(), next);
+        // a full snapshot loads through the same entry point
+        assert_eq!(Checkpoint::load_chain(&dir.join("step000003.ckpt")).unwrap(), base);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plain_decode_rejects_delta_records() {
+        let base = sample();
+        let db = DeltaBase {
+            step: base.step,
+            file_fnv: 0x1111,
+            tensor_fnvs: base.tensor_fnvs(),
+        };
+        let (delta_bytes, _) = advanced(&base).encode_delta(&db).unwrap();
+        let err = Checkpoint::decode(&delta_bytes).unwrap_err();
+        assert!(format!("{err}").contains("load_chain"), "{err}");
+    }
+
+    #[test]
+    fn broken_chain_is_rejected_loudly() {
+        let dir = delta_dir("broken");
+        let base = sample();
+        let base_bytes = base.encode();
+        write_snapshot(&dir.join("step000003.ckpt"), &base_bytes).unwrap();
+        let db = DeltaBase {
+            step: base.step,
+            file_fnv: image_checksum(&base_bytes).unwrap(),
+            tensor_fnvs: base.tensor_fnvs(),
+        };
+        let next = advanced(&base);
+        let (delta_bytes, _) = next.encode_delta(&db).unwrap();
+        let path = dir.join("step000005.ckpt");
+        write_snapshot(&path, &delta_bytes).unwrap();
+
+        // base rewritten under the delta: checksum pin must catch it
+        let mut other = base.clone();
+        other.state[0].data[0] += 1.0;
+        write_snapshot(&dir.join("step000003.ckpt"), &other.encode()).unwrap();
+        let err = Checkpoint::load_chain(&path).unwrap_err();
+        assert!(format!("{err}").contains("chain broken"), "{err}");
+
+        // base missing entirely
+        std::fs::remove_file(dir.join("step000003.ckpt")).unwrap();
+        let err = Checkpoint::load_chain(&path).unwrap_err();
+        assert!(format!("{err}").contains("missing base"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn delta_chains_are_depth_one() {
+        let dir = delta_dir("depth");
+        let base = sample();
+        let db0 = DeltaBase {
+            step: 1,
+            file_fnv: 0x2222,
+            tensor_fnvs: vec![0, 0], // everything "changed"
+        };
+        // a delta record parked where a base full snapshot should live
+        let (mid_bytes, _) = base.encode_delta(&db0).unwrap();
+        write_snapshot(&dir.join("step000003.ckpt"), &mid_bytes).unwrap();
+        let db1 = DeltaBase {
+            step: 3,
+            file_fnv: image_checksum(&mid_bytes).unwrap(),
+            tensor_fnvs: base.tensor_fnvs(),
+        };
+        let (delta_bytes, _) = advanced(&base).encode_delta(&db1).unwrap();
+        let path = dir.join("step000005.ckpt");
+        write_snapshot(&path, &delta_bytes).unwrap();
+        let err = Checkpoint::load_chain(&path).unwrap_err();
+        assert!(format!("{err}").contains("depth 1"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn fingerprint_sensitive_to_plan_and_seed() {
         let (mut run, schedule) = plan();
         let fp = schedule_fingerprint(&run, &schedule);
@@ -860,6 +1364,7 @@ mod tests {
         let fp = schedule_fingerprint(&run, &schedule);
         run.n_replicas = 4;
         run.pipeline = crate::config::schema::PipelineConfig::disabled();
+        run.delta_every = 7;
         assert_eq!(fp, schedule_fingerprint(&run, &schedule), "elastic knobs excluded");
     }
 

@@ -138,6 +138,12 @@ impl BatchPipeline {
         let core = loader.core();
         let q = Arc::new(ReorderQueue::new(loader, steps.len(), depth, n_workers));
         let pool = Arc::new(Pool::new(depth + n_workers + 1));
+        // Zero-copy steady state from step 0: prefill the pool with
+        // buffers preallocated for the largest scheduled sequence length,
+        // so workers never grow a fresh Vec mid-run. Materialization fully
+        // overwrites every field, so prefill is bit-invisible.
+        let max_seq = steps.iter().map(|s| s.seq).max().unwrap_or(0);
+        pool.prefill(depth + n_workers + 1, || core.prealloc(max_seq));
         let workers = (0..n_workers)
             .map(|wi| {
                 let q = q.clone();
@@ -180,6 +186,12 @@ impl BatchPipeline {
     /// Consumer-side stall vs worker-side build time so far.
     pub fn stats(&self) -> PipelineStats {
         PipelineStats { stall_secs: self.stall_secs, build_secs: self.q.build_secs() }
+    }
+
+    /// `(reused, missed)` pool-take counts: with prefill, `missed` stays 0
+    /// — every batch materialized into a pooled buffer.
+    pub fn pool_stats(&self) -> (u64, u64) {
+        self.pool.stats()
     }
 }
 

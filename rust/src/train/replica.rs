@@ -24,7 +24,7 @@
 
 use crate::curriculum::loader::{AnyBatch, ShardPlan};
 use crate::runtime::collective::tree_reduce_literals;
-use crate::runtime::{get_f32, ArtifactInfo, FamilyInfo, Registry, Step};
+use crate::runtime::{get_f32, ArtifactInfo, FamilyInfo, KeyId, KeyInterner, Registry, Step};
 use crate::Result;
 use anyhow::{anyhow, bail, Context};
 use std::collections::{BTreeMap, HashMap};
@@ -41,6 +41,9 @@ use std::time::Instant;
 /// grid points.
 pub struct ArtifactCatalog {
     families: BTreeMap<String, FamilyInfo>,
+    /// The registry's intern table: job dispatch and worker caches key on
+    /// `KeyId`; names are rebuilt only on a cold compile.
+    keys: Arc<KeyInterner>,
 }
 
 impl ArtifactCatalog {
@@ -55,11 +58,23 @@ impl ArtifactCatalog {
         let text = crate::runtime::synth::module_text(fam, &info);
         Ok((info, text))
     }
+
+    /// Resolve an interned key (cold-compile path only — the per-step hot
+    /// path never touches names).
+    pub fn resolve_key(&self, key: KeyId) -> Result<(ArtifactInfo, String)> {
+        self.keys.with_name(key, |name| self.resolve(name))
+    }
+
+    /// The name behind an interned key (error reporting).
+    pub fn name(&self, key: KeyId) -> String {
+        self.keys.name(key)
+    }
 }
 
-/// Build the catalog from a registry (cheap: the family table only).
+/// Build the catalog from a registry (cheap: the family table plus a
+/// handle on the shared intern table).
 pub fn artifact_catalog(reg: &Registry) -> Arc<ArtifactCatalog> {
-    Arc::new(ArtifactCatalog { families: reg.families.clone() })
+    Arc::new(ArtifactCatalog { families: reg.families.clone(), keys: reg.keys.clone() })
 }
 
 struct RankJob {
@@ -67,7 +82,7 @@ struct RankJob {
     /// completion can never be attributed to the wrong `grad_step` call
     /// (e.g. an in-flight job from a step that errored mid-collect).
     seq: u64,
-    artifact: String,
+    artifact: KeyId,
     params: Arc<Vec<xla::Literal>>,
     batch: AnyBatch,
     keep_idx: Option<Arc<xla::Literal>>,
@@ -148,12 +163,13 @@ impl ReplicaEngine {
 
     /// Execute one data-parallel gradient step: shard `batch` per `plan`,
     /// run rank `r`'s shard through `artifacts[r]`, tree-reduce the
-    /// results. `artifacts` must name one grad variant per rank (matching
-    /// each rank's shard width).
+    /// results. `artifacts` must hold one interned grad-variant key per
+    /// rank (matching each rank's shard width); keys are `Copy`, so the
+    /// fan-out allocates nothing per rank.
     pub fn grad_step(
         &mut self,
         plan: &ShardPlan,
-        artifacts: &[String],
+        artifacts: &[KeyId],
         params: Arc<Vec<xla::Literal>>,
         batch: &AnyBatch,
         keep_idx: Option<Arc<xla::Literal>>,
@@ -172,7 +188,7 @@ impl ReplicaEngine {
         for rank in 0..self.n_ranks {
             let job = RankJob {
                 seq,
-                artifact: artifacts[rank].clone(),
+                artifact: artifacts[rank],
                 params: params.clone(),
                 batch: plan.shard(batch, rank),
                 keep_idx: keep_idx.clone(),
@@ -263,7 +279,7 @@ fn worker_loop(
             return;
         }
     };
-    let mut cache: HashMap<String, Step> = HashMap::new();
+    let mut cache: HashMap<KeyId, Step> = HashMap::new();
     while let Ok(job) = rx.recv() {
         let t0 = Instant::now();
         let out = run_job(&client, &mut cache, catalog, fam, &job);
@@ -276,18 +292,22 @@ fn worker_loop(
 
 fn run_job(
     client: &xla::PjRtClient,
-    cache: &mut HashMap<String, Step>,
+    cache: &mut HashMap<KeyId, Step>,
     catalog: &ArtifactCatalog,
     fam: &FamilyInfo,
     job: &RankJob,
 ) -> Result<Vec<xla::Literal>> {
     if !cache.contains_key(&job.artifact) {
+        // Cold path only: the name leaves the intern table just to
+        // synthesize + compile (and to label errors).
         let (info, text) = catalog
-            .resolve(&job.artifact)
-            .with_context(|| format!("synthesizing grad artifact '{}'", job.artifact))?;
+            .resolve_key(job.artifact)
+            .with_context(|| {
+                format!("synthesizing grad artifact '{}'", catalog.name(job.artifact))
+            })?;
         let step = Step::from_text(client, &text, info)
-            .with_context(|| format!("compiling {}", job.artifact))?;
-        cache.insert(job.artifact.clone(), step);
+            .with_context(|| format!("compiling {}", catalog.name(job.artifact)))?;
+        cache.insert(job.artifact, step);
     }
     let step = cache.get(&job.artifact).expect("just inserted");
     let mut extra: Vec<xla::Literal> = Vec::with_capacity(5);
@@ -343,15 +363,15 @@ mod tests {
             let mut eng = ReplicaEngine::spawn(n, catalog.clone(), fam.clone());
             let plan = ShardPlan::new(fam.batch, n);
             assert!(plan.aligned());
-            let names: Vec<String> = (0..n)
+            let keys: Vec<KeyId> = (0..n)
                 .map(|r| {
                     rt.registry
-                        .grad_name("gpt", &route, plan.rows_of(r), DispatchPolicy::Bucket)
+                        .grad_key("gpt", &route, plan.rows_of(r), DispatchPolicy::Bucket)
                         .unwrap()
                 })
                 .collect();
             let red = eng
-                .grad_step(&plan, &names, params.clone(), &batch, None, fam.n_params)
+                .grad_step(&plan, &keys, params.clone(), &batch, None, fam.n_params)
                 .unwrap();
             let gbits: Vec<Vec<u32>> = red
                 .grads
@@ -381,7 +401,7 @@ mod tests {
         let err = eng
             .grad_step(
                 &plan,
-                &["nope_grad".to_string()],
+                &[rt.registry.key("nope_grad")],
                 params,
                 &lm_batch(fam.batch, 64),
                 None,

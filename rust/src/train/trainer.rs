@@ -30,13 +30,13 @@ use crate::curriculum::{BertLoader, GptLoader, VitLoader};
 use crate::lr::LrSchedule;
 use crate::ltd::schedule::kept_len;
 use crate::ltd::{ImportanceTracker, RandomDropper, TokenAccountant};
-use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_u32, Mode, Route, Runtime};
+use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_u32, KeyId, Mode, Route, Runtime};
 use crate::train::checkpoint::{self, Checkpoint};
 use crate::train::pipeline::{BatchPipeline, PipelineStats, StepSpec};
 use crate::train::replica::ReplicaEngine;
 use crate::Result;
 use anyhow::{anyhow, bail, Context};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
@@ -234,7 +234,12 @@ impl BatchSource {
             BatchSource::Async(BatchPipeline::spawn(loader, Arc::new(specs), cfg))
         } else {
             let core = loader.core();
-            BatchSource::Sync { loader, core, spare: None, stall_secs: 0.0 }
+            // Same zero-copy treatment as the async pool: start the
+            // single recycled slot preallocated for the largest scheduled
+            // seq, so even the synchronous path materializes into a
+            // reused buffer from step 0.
+            let spare = schedule.iter().map(|s| s.route.seq).max().map(|m| core.prealloc(m));
+            BatchSource::Sync { loader, core, spare, stall_secs: 0.0 }
         }
     }
 
@@ -324,7 +329,9 @@ impl<'rt> Trainer<'rt> {
         let schedule_fp = checkpoint::schedule_fingerprint(&run, &schedule);
         let resumed: Option<Checkpoint> = match &run.resume {
             Some(path) => {
-                let ck = Checkpoint::load(Path::new(path))?;
+                // load_chain resolves either record kind: a full snapshot
+                // directly, a DELTA record via its validated base.
+                let ck = Checkpoint::load_chain(Path::new(path))?;
                 let n_state = rt
                     .registry
                     .artifact(&rt.registry.init_name(&run.family)?)?
@@ -401,6 +408,7 @@ impl<'rt> Trainer<'rt> {
                     let info = rt.registry.artifact(name)?;
                     if info.kind == "train" {
                         let route = Route {
+                            key: rt.registry.key(&info.name),
                             artifact: info.name.clone(),
                             seq: info.seq,
                             keep: if info.mode == Mode::Plain { info.seq } else { info.keep },
@@ -479,7 +487,10 @@ impl<'rt> Trainer<'rt> {
         let fam = self.rt.registry.family(&self.run.family)?.clone();
         let n_mid = fam.n_middle_layers;
         let start = self.start_step.min(self.run.total_steps) as usize;
-        let mut dispatch: BTreeMap<String, u64> = BTreeMap::new();
+        // Interned dispatch histogram: one u32 hash per step instead of
+        // hashing (and on the old clone path, allocating) the artifact
+        // string; names are rehydrated once at the end for reporting.
+        let mut dispatch: HashMap<KeyId, u64> = HashMap::new();
         let mut curve = std::mem::take(&mut self.resume_curve);
         let mut step_secs_total = 0.0;
         let mut step_losses: Vec<f32> = std::mem::take(&mut self.resume_losses);
@@ -497,7 +508,7 @@ impl<'rt> Trainer<'rt> {
         // step re-executed. The dispatch histogram is re-derived from the
         // plan so full-run observables stay comparable.
         for sr in &self.schedule[..start] {
-            *dispatch.entry(sr.route.artifact.clone()).or_default() += 1;
+            *dispatch.entry(sr.route.key).or_default() += 1;
             let _ = loader.plan_next(sr.route.seq, &sr.cl);
         }
         let mut source = BatchSource::new(loader, &self.schedule[start..], &self.run.pipeline);
@@ -512,18 +523,25 @@ impl<'rt> Trainer<'rt> {
         } else {
             None
         };
-        let apply_name = if engine.is_some() {
-            Some(self.rt.registry.apply_name(&self.run.family)?)
+        let apply_key = if engine.is_some() {
+            Some(self.rt.registry.key(&self.rt.registry.apply_name(&self.run.family)?))
         } else {
             None
         };
+        // Replica fan-out: per-rank grad artifact keys resolved once per
+        // (route, shard width) and shared — the per-step `Vec<String>`
+        // rebuild (one `format!` per rank per step) was pure overhead.
+        let mut grad_keys: HashMap<(KeyId, usize), Arc<Vec<KeyId>>> = HashMap::new();
+        // Delta-snapshot tracking: the last full publish this slice wrote
+        // (each slice starts fresh — its first publish is always full).
+        let mut delta = DeltaTrack { base: None, since_full: 0 };
 
         for step in start as u64..self.run.total_steps {
-            let sr = self.schedule[step as usize].clone();
+            let sr = &self.schedule[step as usize];
             let route = &sr.route;
-            *dispatch.entry(route.artifact.clone()).or_default() += 1;
+            *dispatch.entry(route.key).or_default() += 1;
             let exe = if engine.is_none() {
-                Some(self.rt.step(&route.artifact)?)
+                Some(self.rt.step_by_key(route.key)?)
             } else {
                 None
             };
@@ -533,7 +551,7 @@ impl<'rt> Trainer<'rt> {
                 .lr
                 .at_state(self.accountant.compute_tokens(), step);
 
-            let batch = source.next(&sr)?;
+            let batch = source.next(sr)?;
             let (rows, tokens_for_importance) = match &batch {
                 AnyBatch::Lm(b) => {
                     let toks = self
@@ -579,13 +597,22 @@ impl<'rt> Trainer<'rt> {
                 // ---- data-parallel: shard → grad → all-reduce → apply
                 let np = fam.n_params;
                 let plan = ShardPlan::new(rows, engine.n_ranks());
-                let grad_names: Vec<String> = (0..plan.n_ranks())
-                    .map(|r| {
-                        self.rt
-                            .registry
-                            .grad_name(&self.run.family, route, plan.rows_of(r), self.run.dispatch)
-                    })
-                    .collect::<Result<Vec<_>>>()?;
+                let rank_keys = match grad_keys.entry((route.key, rows)) {
+                    std::collections::hash_map::Entry::Occupied(e) => e.get().clone(),
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        let ks: Vec<KeyId> = (0..plan.n_ranks())
+                            .map(|r| {
+                                self.rt.registry.grad_key(
+                                    &self.run.family,
+                                    route,
+                                    plan.rows_of(r),
+                                    self.run.dispatch,
+                                )
+                            })
+                            .collect::<Result<Vec<_>>>()?;
+                        e.insert(Arc::new(ks)).clone()
+                    }
+                };
                 // One params snapshot per step, shared by every rank via
                 // Arc (the copy itself is unavoidable while state literals
                 // are owned: apply produces fresh literals each step; at
@@ -593,7 +620,7 @@ impl<'rt> Trainer<'rt> {
                 let params = Arc::new(self.state[..np].to_vec());
                 let red = engine.grad_step(
                     &plan,
-                    &grad_names,
+                    &rank_keys,
                     params,
                     &batch,
                     keep_lit.map(Arc::new),
@@ -602,7 +629,7 @@ impl<'rt> Trainer<'rt> {
                 source.recycle(batch);
                 let loss = (red.loss_sum / red.den.max(1.0)) as f64;
                 // one shared optimizer update on the coordinator
-                let apply = self.rt.step(apply_name.as_ref().expect("replica mode"))?;
+                let apply = self.rt.step_by_key(apply_key.expect("replica mode"))?;
                 let t_lit = scalar_f32((step + 1) as f32);
                 let lr_lit = scalar_f32(lr_now as f32);
                 let den_lit = scalar_f32(red.den);
@@ -667,15 +694,15 @@ impl<'rt> Trainer<'rt> {
                 });
             }
             // Periodic durable snapshot: atomic write-rename, so an
-            // interruption at any point leaves a resumable file set.
+            // interruption at any point leaves a resumable file set. On the
+            // delta cadence, publishes between full snapshots carry only
+            // the tensors that changed since the last full one.
             let mut saved_this_step = false;
             if self.run.save_every > 0 && (step + 1) % self.run.save_every == 0 {
-                let ck = self.snapshot(step + 1, &step_losses, &curve)?;
-                let file = format!("step{:06}.ckpt", step + 1);
-                let path = Path::new(&self.run.save_dir).join(file);
-                ck.save(&path).with_context(|| {
-                    format!("{}: saving checkpoint at step {}", self.run.label, step + 1)
-                })?;
+                self.save_snapshot(step + 1, &step_losses, &curve, &mut delta)
+                    .with_context(|| {
+                        format!("{}: saving checkpoint at step {}", self.run.label, step + 1)
+                    })?;
                 checkpoints_written += 1;
                 saved_this_step = true;
             }
@@ -694,13 +721,13 @@ impl<'rt> Trainer<'rt> {
                 let path =
                     Path::new(&self.run.save_dir).join(format!("step{completed:06}.ckpt"));
                 if !saved_this_step {
-                    let ck = self.snapshot(completed, &step_losses, &curve)?;
-                    ck.save(&path).with_context(|| {
-                        format!(
-                            "{}: saving boundary snapshot at step {completed}",
-                            self.run.label
-                        )
-                    })?;
+                    self.save_snapshot(completed, &step_losses, &curve, &mut delta)
+                        .with_context(|| {
+                            format!(
+                                "{}: saving boundary snapshot at step {completed}",
+                                self.run.label
+                            )
+                        })?;
                 }
                 return Ok(SliceOutcome::Preempted {
                     checkpoint: path,
@@ -716,6 +743,13 @@ impl<'rt> Trainer<'rt> {
             .map(|e| (e.allreduce_secs, e.imbalance()))
             .unwrap_or((0.0, 0.0));
         drop(engine);
+
+        // Rehydrate the interned histogram to names once, at the
+        // reporting boundary.
+        let dispatch: BTreeMap<String, u64> = dispatch
+            .iter()
+            .map(|(&k, &v)| (self.rt.registry.keys.name(k), v))
+            .collect();
 
         let (final_eval_loss, final_accuracy) = self.evaluate()?;
         curve.push(CurvePoint {
@@ -757,6 +791,44 @@ impl<'rt> Trainer<'rt> {
             resumed_at: self.start_step,
             checkpoints_written,
         })))
+    }
+
+    /// Publish a durable snapshot at `completed` into `save_dir`, choosing
+    /// the record kind by the delta cadence: a full snapshot when deltas
+    /// are off (`delta_every == 0`), when no base is live yet this slice,
+    /// or when `delta_every - 1` deltas have been written since the last
+    /// full one; otherwise a DELTA record against the tracked base. Both
+    /// kinds go through the same atomic/durable publish path (and crash
+    /// hook), and restore through `Checkpoint::load_chain` bit-identically.
+    fn save_snapshot(
+        &self,
+        completed: u64,
+        step_losses: &[f32],
+        curve: &[CurvePoint],
+        delta: &mut DeltaTrack,
+    ) -> Result<std::path::PathBuf> {
+        let ck = self.snapshot(completed, step_losses, curve)?;
+        let path = Path::new(&self.run.save_dir).join(format!("step{completed:06}.ckpt"));
+        let as_delta = self.run.delta_every > 0
+            && delta.base.is_some()
+            && delta.since_full < self.run.delta_every - 1;
+        if as_delta {
+            let base = delta.base.as_ref().expect("checked above");
+            let (bytes, _n_changed) = ck.encode_delta(base)?;
+            checkpoint::write_snapshot(&path, &bytes)?;
+            delta.since_full += 1;
+        } else {
+            let bytes = ck.encode();
+            let file_fnv = checkpoint::image_checksum(&bytes)?;
+            checkpoint::write_snapshot(&path, &bytes)?;
+            delta.base = Some(checkpoint::DeltaBase {
+                step: completed,
+                file_fnv,
+                tensor_fnvs: ck.tensor_fnvs(),
+            });
+            delta.since_full = 0;
+        }
+        Ok(path)
     }
 
     /// Capture the full training state after `completed` steps as a
@@ -828,6 +900,14 @@ impl<'rt> Trainer<'rt> {
         let acc = if has_acc { Some(correct / tok_sum.max(1.0)) } else { None };
         Ok((mean_loss, acc))
     }
+}
+
+/// Rolling delta-snapshot state across one `run_bounded` invocation: the
+/// last full publish (the live delta base) and how many deltas chained to
+/// it so far.
+struct DeltaTrack {
+    base: Option<checkpoint::DeltaBase>,
+    since_full: u64,
 }
 
 pub(crate) fn push_lm_batch(args: &mut Vec<xla::Literal>, b: &LmBatch) -> Result<()> {

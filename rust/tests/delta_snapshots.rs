@@ -1,0 +1,240 @@
+//! Delta-snapshot chain suite (ISSUE 8 satellite).
+//!
+//! With `delta_every = K`, every K-th published snapshot is a FULL image
+//! and the publishes between are DELTA records holding only the tensors
+//! whose FNV changed since the chain's base. These tests pin the four
+//! guarantees the format makes:
+//!
+//! 1. a run resumed from a full+delta chain is **bit-identical** to the
+//!    uninterrupted reference (`state_hash`, `step_losses`, eval curve,
+//!    token accounting, dispatch histogram);
+//! 2. a corrupt or missing base demotes its whole chain: the recovery
+//!    scan falls back to the newest snapshot that still restores —
+//!    ultimately the last valid full image;
+//! 3. `dsde serve --recover`'s namespace scan prefers the newest valid
+//!    chain, delta or not;
+//! 4. a crash mid-delta-publish (complete older chain + stranded
+//!    `*.ckpt.tmp`, exactly what `write_snapshot`'s crash window leaves)
+//!    is garbage-collected and the prior chain stays restorable. The
+//!    real process-kill path is exercised by `tests/crash_recovery.rs`;
+//!    here we lay down the documented on-disk state directly.
+
+use dsde::config::schema::*;
+use dsde::orch::recover::scan_namespace;
+use dsde::train::checkpoint::Checkpoint;
+use dsde::train::{RunResult, TrainEnv};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const STEPS: u64 = 12;
+const SAVE_EVERY: u64 = 2;
+const DELTA_EVERY: u64 = 3;
+// Publishes land at steps 2,4,6,8,10,12; with delta_every = 3 the record
+// kinds are: 2 FULL, 4 DELTA(2), 6 DELTA(2), 8 FULL, 10 DELTA(8),
+// 12 DELTA(8).
+const FULLS: [u64; 2] = [2, 8];
+const DELTAS: [u64; 4] = [4, 6, 10, 12];
+
+static DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn env() -> TrainEnv {
+    TrainEnv::new(200, 91).expect("surrogate runtime available")
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "dsde-delta-{}-{}-{}",
+        std::process::id(),
+        tag,
+        DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn base_case() -> RunConfig {
+    let mut c = RunConfig::baseline("gpt", STEPS, 3e-3);
+    c.label = "delta-chain".to_string();
+    c.seed = 4242;
+    c.eval_every = STEPS / 2;
+    c.curriculum = vec![ClConfig::new(
+        Metric::SeqTru,
+        Bound::Value(8.0),
+        Bound::Value(64.0),
+        (STEPS as f64 * 0.6) as u64,
+    )];
+    c.routing = Routing::RandomLtd(LtdConfig::mslg(16, STEPS));
+    c.pipeline = PipelineConfig { prefetch_depth: 3, n_loader_workers: 4 };
+    c
+}
+
+fn ckpt(dir: &Path, step: u64) -> PathBuf {
+    dir.join(format!("step{step:06}.ckpt"))
+}
+
+/// Run the base case with full+delta saving into a fresh namespace;
+/// returns `(save_dir, result)` with every expected snapshot on disk.
+fn saving_run(env: &TrainEnv, tag: &str) -> (PathBuf, RunResult) {
+    let dir = temp_dir(tag);
+    let mut cfg = base_case();
+    cfg.save_every = SAVE_EVERY;
+    cfg.delta_every = DELTA_EVERY;
+    cfg.save_dir = dir.to_string_lossy().into_owned();
+    let r = env.run(cfg).expect("saving run");
+    assert_eq!(r.checkpoints_written, STEPS / SAVE_EVERY, "snapshot cadence");
+    for step in FULLS.iter().chain(&DELTAS) {
+        assert!(ckpt(&dir, *step).exists(), "step{step:06}.ckpt missing");
+    }
+    (dir, r)
+}
+
+fn assert_bit_identical(label: &str, reference: &RunResult, r: &RunResult) {
+    assert_eq!(reference.state_hash, r.state_hash, "{label}: final model state diverged");
+    assert_eq!(reference.step_losses, r.step_losses, "{label}: per-step loss curve diverged");
+    assert_eq!(reference.curve.len(), r.curve.len(), "{label}: curve length");
+    for (a, b) in reference.curve.iter().zip(&r.curve) {
+        assert_eq!(a.step, b.step, "{label}: curve step");
+        assert_eq!(
+            a.eval_loss.to_bits(),
+            b.eval_loss.to_bits(),
+            "{label}: eval loss diverged at step {}",
+            a.step
+        );
+        assert_eq!(a.compute_tokens, b.compute_tokens, "{label}: token accounting");
+    }
+    assert_eq!(
+        reference.final_eval_loss.to_bits(),
+        r.final_eval_loss.to_bits(),
+        "{label}: final eval"
+    );
+    assert_eq!(reference.data_tokens, r.data_tokens, "{label}: data tokens");
+    assert_eq!(reference.compute_tokens, r.compute_tokens, "{label}: compute tokens");
+    assert_eq!(reference.dispatch, r.dispatch, "{label}: dispatch histogram");
+}
+
+/// Flip one byte in the middle of a snapshot so its FNV re-hash fails.
+fn corrupt(path: &Path) {
+    let mut bytes = std::fs::read(path).expect("read snapshot");
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(path, bytes).expect("rewrite snapshot");
+}
+
+// ---- 1. full+delta resume is bit-identical -------------------------------
+
+#[test]
+fn resume_from_delta_chain_is_bit_identical() {
+    let env = env();
+    let reference = env.run(base_case()).expect("reference");
+    let (dir, saved) = saving_run(&env, "resume");
+    // Saving (full or delta) must not perturb the run itself.
+    assert_bit_identical("saving run", &reference, &saved);
+
+    // The on-disk kinds match the cadence: plain decode loads full
+    // images and rejects deltas, which need their chain resolved.
+    for step in FULLS {
+        Checkpoint::load(&ckpt(&dir, step))
+            .unwrap_or_else(|e| panic!("step {step} should be a full image: {e:#}"));
+    }
+    for step in DELTAS {
+        let err = Checkpoint::load(&ckpt(&dir, step)).expect_err("delta must reject plain load");
+        assert!(format!("{err:#}").contains("load_chain"), "unhelpful error: {err:#}");
+    }
+
+    // Resume from a DELTA snapshot: full+delta restore ≡ uninterrupted.
+    let mut from_delta = base_case();
+    from_delta.resume = Some(ckpt(&dir, 10).to_string_lossy().into_owned());
+    let resumed = env.run(from_delta).expect("resume from delta");
+    assert_eq!(resumed.resumed_at, 10);
+    assert_bit_identical("resumed from delta @10", &reference, &resumed);
+
+    // And from the chain's full base, for contrast.
+    let mut from_full = base_case();
+    from_full.resume = Some(ckpt(&dir, 8).to_string_lossy().into_owned());
+    let resumed = env.run(from_full).expect("resume from full");
+    assert_eq!(resumed.resumed_at, 8);
+    assert_bit_identical("resumed from full @8", &reference, &resumed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- 2. broken base demotes the chain ------------------------------------
+
+#[test]
+fn corrupt_base_falls_back_to_newest_restorable() {
+    let env = env();
+    let (dir, _) = saving_run(&env, "corrupt-base");
+
+    // Corrupt the step-8 full image: itself and both deltas chained to it
+    // (10, 12) stop restoring. The scan falls back to the newest snapshot
+    // that still does — the step-6 delta on the intact step-2 base.
+    corrupt(&ckpt(&dir, 8));
+    let scan = scan_namespace(&dir).expect("scan");
+    assert_eq!(scan.skipped, 3, "steps 8, 10, 12 must all be skipped");
+    assert_eq!(scan.latest, Some((ckpt(&dir, 6), 6)));
+
+    // Remove the surviving deltas too: the scan lands on the last valid
+    // FULL snapshot.
+    std::fs::remove_file(ckpt(&dir, 4)).expect("rm step 4");
+    std::fs::remove_file(ckpt(&dir, 6)).expect("rm step 6");
+    let scan = scan_namespace(&dir).expect("rescan");
+    assert_eq!(scan.skipped, 3);
+    assert_eq!(scan.latest, Some((ckpt(&dir, 2), 2)));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn missing_base_falls_back_to_previous_chain() {
+    let env = env();
+    let (dir, _) = saving_run(&env, "missing-base");
+    std::fs::remove_file(ckpt(&dir, 8)).expect("rm step 8");
+    let scan = scan_namespace(&dir).expect("scan");
+    assert_eq!(scan.skipped, 2, "orphaned deltas 10 and 12 must be skipped");
+    assert_eq!(scan.latest, Some((ckpt(&dir, 6), 6)), "previous chain still restores");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- 3. scan prefers the newest valid chain ------------------------------
+
+#[test]
+fn scan_prefers_newest_valid_chain() {
+    let env = env();
+    let (dir, _) = saving_run(&env, "scan-newest");
+    let scan = scan_namespace(&dir).expect("scan");
+    assert_eq!(scan.skipped, 0, "every snapshot in an intact namespace restores");
+    assert_eq!(scan.gc_tmp, 0);
+    assert_eq!(scan.latest, Some((ckpt(&dir, 12), 12)), "newest chain wins, delta or not");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- 4. crash mid-delta leaves the chain restorable ----------------------
+
+#[test]
+fn crash_mid_delta_publish_leaves_chain_restorable() {
+    let env = env();
+    let reference = env.run(base_case()).expect("reference");
+    let (dir, _) = saving_run(&env, "crash-mid-delta");
+
+    // Re-create the crash window: the step-12 delta died before its
+    // atomic rename, leaving a stranded tmp (here: a truncated torso of
+    // the real bytes) and no final file.
+    let twelve = ckpt(&dir, 12);
+    let bytes = std::fs::read(&twelve).expect("read step 12");
+    std::fs::write(dir.join("step000012.ckpt.tmp"), &bytes[..bytes.len() / 2])
+        .expect("strand tmp");
+    std::fs::remove_file(&twelve).expect("rm step 12");
+
+    let scan = scan_namespace(&dir).expect("scan");
+    assert_eq!(scan.gc_tmp, 1, "stranded tmp must be garbage-collected");
+    assert!(!dir.join("step000012.ckpt.tmp").exists());
+    assert_eq!(scan.skipped, 0);
+    let (latest, step) = scan.latest.expect("chain survives the crash");
+    assert_eq!((latest.clone(), step), (ckpt(&dir, 10), 10));
+
+    // ... and the surviving delta chain restores bit-exactly.
+    let mut resuming = base_case();
+    resuming.resume = Some(latest.to_string_lossy().into_owned());
+    let resumed = env.run(resuming).expect("resume after crash");
+    assert_eq!(resumed.resumed_at, 10);
+    assert_bit_identical("post-crash resume", &reference, &resumed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
