@@ -1,0 +1,136 @@
+//! pdd_quality — quality-vs-tokens rows for the new sampler policies
+//! (ISSUE 9 satellite).
+//!
+//! Three checks in one smoke bench:
+//!
+//! 1. **PDD pareto rows**: at each dropout endpoint, a fixed-schedule
+//!    baseline vs the same run with progressive data dropout. The PDD arm
+//!    must train on strictly fewer data tokens (the masked rows stop
+//!    counting) at comparable final quality.
+//! 2. **Loss-signal row**: the composed loss-signal-curriculum + PDD run
+//!    vs the fixed baseline — same pareto shape from the self-supervised
+//!    difficulty signal.
+//! 3. **Drift check**: the MoE case composing the loss-signal curriculum
+//!    with PDD runs twice and MUST agree bit-for-bit (`state_hash`,
+//!    per-step f32 losses). Any divergence exits non-zero so the CI
+//!    bench-smoke job goes red on a determinism break even before the
+//!    equivalence suites run.
+//!
+//! `DSDE_BENCH_QUICK=1` shrinks the sweep for the CI smoke job;
+//! `DSDE_BENCH_HISTORY=1` appends the report to `BENCH_HISTORY.json`.
+
+use dsde::bench::{history_append, quick_mode, scaled, Table};
+use dsde::config::json::Json;
+use dsde::config::schema::{PddConfig, RunConfig};
+use dsde::exp::cases::{loss_signal, pdd_quality_pairs};
+use dsde::exp::relative_quality;
+use dsde::train::TrainEnv;
+
+/// The composed quick case: loss-signal curriculum + PDD on the given
+/// family. Exercises both new policies (and, on `moe`, the expert grid)
+/// in a single run.
+fn composed_case(family: &str, steps: u64, seed: u64) -> RunConfig {
+    let mut c = RunConfig::baseline(family, steps, 3e-3);
+    c.label = format!("{family}+loss-signal+pdd");
+    c.seed = seed;
+    c.curriculum.push(loss_signal((steps as f64 * 0.4) as u64));
+    c.pdd = Some(PddConfig::new(0.0, 0.3, 4, ((steps as f64 * 0.8) as u64).max(1)));
+    c
+}
+
+fn main() -> dsde::Result<()> {
+    let steps = scaled(60, 10);
+    let docs = scaled(800, 300) as usize;
+    let f_ends: Vec<f64> = if quick_mode() { vec![0.3] } else { vec![0.1, 0.3, 0.5] };
+    eprintln!("== pdd_quality: {} dropout endpoints x {steps} steps ==", f_ends.len());
+    let env = TrainEnv::new(docs, 7)?;
+
+    let mut t = Table::new(&[
+        "case",
+        "trained data tokens",
+        "dropped tokens",
+        "quality % (vs fixed)",
+    ]);
+    let mut fewer_tokens = true;
+    let mut comparable = true;
+    let mut report_rows = Vec::new();
+    for (f_end, base, pdd) in pdd_quality_pairs(steps, 4242, &f_ends) {
+        let b = env.run(base)?;
+        let p = env.run(pdd)?;
+        let qb = relative_quality(b.final_eval_loss, b.final_eval_loss);
+        let qp = relative_quality(b.final_eval_loss, p.final_eval_loss);
+        fewer_tokens &= p.data_tokens < b.data_tokens && p.pdd_dropped_tokens > 0;
+        // "comparable": within 10% relative quality of the fixed schedule.
+        comparable &= qp >= qb - 10.0;
+        for (name, r, q) in [(b.label.clone(), &b, qb), (p.label.clone(), &p, qp)] {
+            t.row(vec![
+                name,
+                format!("{}", r.data_tokens),
+                format!("{}", r.pdd_dropped_tokens),
+                format!("{q:.1}"),
+            ]);
+        }
+        report_rows.push(Json::obj(vec![
+            ("f_end", f_end.into()),
+            ("baseline_tokens", (b.data_tokens as usize).into()),
+            ("pdd_tokens", (p.data_tokens as usize).into()),
+            ("pdd_quality_pct", qp.into()),
+        ]));
+    }
+
+    // Loss-signal pareto row: composed policies vs the fixed baseline.
+    let fixed = {
+        let mut c = RunConfig::baseline("gpt", steps, 3e-3);
+        c.label = "gpt-fixed".into();
+        c.seed = 4242;
+        c
+    };
+    let b = env.run(fixed)?;
+    let c = env.run(composed_case("gpt", steps, 4242))?;
+    let qc = relative_quality(b.final_eval_loss, c.final_eval_loss);
+    fewer_tokens &= c.data_tokens < b.data_tokens;
+    comparable &= qc >= 90.0;
+    t.row(vec![b.label.clone(), format!("{}", b.data_tokens), "0".into(), "100.0".into()]);
+    t.row(vec![c.label.clone(), format!("{}", c.data_tokens), format!("{}", c.pdd_dropped_tokens), format!("{qc:.1}")]);
+
+    println!("\npdd_quality (quality normalized to each fixed-schedule baseline):");
+    t.print();
+    t.save_csv("pdd_quality")?;
+
+    // Determinism drift check on the MoE composed case: two runs of the
+    // identical config must agree bit-for-bit.
+    let moe_steps = steps.min(10);
+    let r1 = env.run(composed_case("moe", moe_steps, 4242))?;
+    let r2 = env.run(composed_case("moe", moe_steps, 4242))?;
+    let drift_free = r1.state_hash == r2.state_hash
+        && r1.step_losses == r2.step_losses
+        && r1.final_eval_loss.to_bits() == r2.final_eval_loss.to_bits();
+
+    history_append(
+        "pdd_quality",
+        &Json::obj(vec![
+            ("steps", (steps as usize).into()),
+            ("pairs", Json::Arr(report_rows)),
+            ("loss_signal_quality_pct", qc.into()),
+            ("fewer_tokens", fewer_tokens.into()),
+            ("comparable_quality", comparable.into()),
+            ("moe_drift_free", drift_free.into()),
+        ]),
+    )?;
+    println!(
+        "\nshape checks:\n  [{}] every policy arm trains on fewer data tokens\n  \
+         [{}] quality stays comparable to the fixed schedule\n  \
+         [{}] moe+loss-signal+pdd is bit-identical across reruns ({:016x})",
+        if fewer_tokens { "PASS" } else { "FAIL" },
+        if comparable { "PASS" } else { "FAIL" },
+        if drift_free { "PASS" } else { "FAIL" },
+        r1.state_hash,
+    );
+    if !(fewer_tokens && drift_free) {
+        // Enforcing, not advisory: token accounting and bit-exact
+        // determinism are the contract; quality is scale-sensitive and
+        // reported but only enforced via the history log.
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -55,7 +55,7 @@ fn main() -> dsde::Result<()> {
     let ds = Arc::new(GptDataset::build(&corpus, &tok, fam.max_seq));
     let n = ds.n_samples();
     let mut loader = GptLoader::new(ds.clone(), Box::new(UniformSampler::new(n, 1)), fam.batch);
-    let st = ClState { seq: 64, transform: SeqTransform::None, pool_pct: 1.0 };
+    let st = ClState { seq: 64, transform: SeqTransform::None, pool_pct: 1.0, pdd_frac: 0.0 };
     let batch_prep = time_it(3, iters, || {
         let b = loader.next_batch(64, &st);
         std::hint::black_box(b.tokens.len());
@@ -131,7 +131,10 @@ fn main() -> dsde::Result<()> {
     let pf = Prefetcher::new(iters as u64, 4, move |i| {
         let mut loader =
             GptLoader::new(ds2.clone(), Box::new(UniformSampler::new(n, i)), 8);
-        loader.next_batch(64, &ClState { seq: 64, transform: SeqTransform::None, pool_pct: 1.0 })
+        loader.next_batch(
+            64,
+            &ClState { seq: 64, transform: SeqTransform::None, pool_pct: 1.0, pdd_frac: 0.0 },
+        )
     });
     let consume = time_it(0, iters, || {
         let b = pf.next().unwrap();

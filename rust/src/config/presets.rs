@@ -90,15 +90,28 @@ pub fn vit_finetune(total_steps: u64, peak_lr: f64) -> RunConfig {
 /// preset on the data-parallel replica engine with `N` ranks
 /// (e.g. `gpt-pretrain@dp4`); an `@exact` suffix switches variant
 /// dispatch to the JIT-specializing exact policy (e.g.
-/// `gpt-pretrain@dp3@exact` — an off-grid replica width). Suffixes
-/// compose in any order.
+/// `gpt-pretrain@dp3@exact` — an off-grid replica width); a `@pdd`
+/// suffix layers the default progressive-data-dropout schedule on top
+/// (drop 0% → 50% of samples over the first 80% of the run in 4 stages,
+/// e.g. `gpt-pretrain@pdd`). Suffixes compose in any order.
 pub fn by_name(name: &str, total_steps: u64, peak_lr: f64, max_seq: usize) -> Option<RunConfig> {
     let mut base = name;
     let mut n_replicas = 0usize;
     let mut dispatch = DispatchPolicy::Bucket;
+    let mut pdd = None;
     loop {
         if let Some(b) = base.strip_suffix("@exact") {
             dispatch = DispatchPolicy::Exact;
+            base = b;
+            continue;
+        }
+        if let Some(b) = base.strip_suffix("@pdd") {
+            pdd = Some(PddConfig::new(
+                0.0,
+                0.5,
+                4,
+                ((total_steps as f64 * 0.80) as u64).max(1),
+            ));
             base = b;
             continue;
         }
@@ -118,6 +131,12 @@ pub fn by_name(name: &str, total_steps: u64, peak_lr: f64, max_seq: usize) -> Op
     };
     c.n_replicas = n_replicas;
     c.dispatch = dispatch;
+    if pdd.is_some() {
+        c.pdd = pdd;
+        if c.validate().is_err() {
+            return None; // e.g. vit-finetune@pdd: pdd is LM-only
+        }
+    }
     Some(c)
 }
 
@@ -168,6 +187,23 @@ mod tests {
         assert_eq!(by_name("gpt-pretrain", 10, 1e-3, 64).unwrap().n_replicas, 0);
         assert!(by_name("gpt-pretrain@dpx", 10, 1e-3, 64).is_none());
         assert!(by_name("nope@dp2", 10, 1e-3, 64).is_none());
+    }
+
+    #[test]
+    fn by_name_pdd_suffix_composes() {
+        let c = by_name("gpt-pretrain@pdd", 100, 1e-3, 64).unwrap();
+        let p = c.pdd.expect("@pdd layers the default dropout schedule");
+        assert_eq!((p.f_start, p.f_end, p.stages, p.total_steps), (0.0, 0.5, 4, 80));
+        c.validate().unwrap();
+        assert!(by_name("gpt-pretrain", 100, 1e-3, 64).unwrap().pdd.is_none());
+        let c = by_name("gpt-pretrain@pdd@dp2", 100, 1e-3, 64).unwrap();
+        assert_eq!(c.n_replicas, 2);
+        assert!(c.pdd.is_some());
+        let c = by_name("bert-pretrain@dp2@pdd", 100, 1e-3, 64).unwrap();
+        assert_eq!(c.n_replicas, 2);
+        assert!(c.pdd.is_some());
+        assert!(by_name("vit-finetune@pdd", 100, 1e-3, 64).is_none(), "pdd is LM-only");
+        assert!(by_name("nope@pdd", 100, 1e-3, 64).is_none());
     }
 
     #[test]

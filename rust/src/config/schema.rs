@@ -10,7 +10,9 @@ use crate::config::json::Json;
 use crate::Result;
 use anyhow::{anyhow, bail};
 
-/// The paper's 7 difficulty metrics (§3.1).
+/// The paper's 7 difficulty metrics (§3.1), plus the loss-signal
+/// curriculum (a model-signal difficulty source in the spirit of the
+/// paper's "other data efficiency scenarios" extension list).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Metric {
     /// Truncation-based sequence length (GPT + BERT).
@@ -21,6 +23,11 @@ pub enum Metric {
     SeqReo,
     /// Vocabulary rarity: -sum log p(w) (GPT + BERT).
     Voc,
+    /// Loss-signal difficulty: per-sample difficulty computed from the
+    /// run's *own* cumulative per-token-id loss statistics, re-ranked at
+    /// deterministic epoch boundaries (see `curriculum::sampler::
+    /// LossSignalSampler` and `ltd::token_bypass::LossSignalTracker`).
+    Loss,
 }
 
 impl Metric {
@@ -31,6 +38,7 @@ impl Metric {
             Metric::SeqRes => "seqres",
             Metric::SeqReo => "seqreo",
             Metric::Voc => "voc",
+            Metric::Loss => "loss",
         }
     }
 
@@ -41,6 +49,7 @@ impl Metric {
             "seqres" => Metric::SeqRes,
             "seqreo" => Metric::SeqReo,
             "voc" => Metric::Voc,
+            "loss" => Metric::Loss,
             _ => bail!("unknown difficulty metric '{s}'"),
         })
     }
@@ -110,6 +119,35 @@ impl ClConfig {
     pub fn new(metric: Metric, d_start: Bound, d_end: Bound, total_steps: u64) -> Self {
         let pacing = if metric.value_based() { Pacing::Linear } else { Pacing::Sqrt };
         ClConfig { metric, pacing, d_start, d_end, total_steps }
+    }
+}
+
+/// Progressive data dropout (arXiv 2505.22342) as a sampler-level policy:
+/// a growing fraction of the dataset is *dropped* across `stages` equal
+/// stages — membership is a pure PCG32-keyed hash of `(seed, sample id)`
+/// against the paced fraction, so the kept set is a deterministic function
+/// of `(seed, stage)` and shrinks monotonically (a sample once dropped
+/// stays dropped). Dropped rows stay in the planned batch (static shapes)
+/// but are loss-masked out at materialization and excluded from
+/// `data_tokens`, which keeps plan/materialize split and byte-identity
+/// across pipeline/replica/resume.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PddConfig {
+    /// Dropped fraction at step 0 (0.0 ..< 1.0).
+    pub f_start: f64,
+    /// Dropped fraction once the schedule completes (f_start ..< 1.0).
+    pub f_end: f64,
+    /// Number of staircase stages the fraction steps through.
+    pub stages: u32,
+    /// Steps until the schedule reaches `f_end`.
+    pub total_steps: u64,
+}
+
+impl PddConfig {
+    /// A progressive-dropout schedule from `f_start` to `f_end` dropped
+    /// fraction over `total_steps`, in `stages` equal stages.
+    pub fn new(f_start: f64, f_end: f64, stages: u32, total_steps: u64) -> Self {
+        PddConfig { f_start, f_end, stages, total_steps }
     }
 }
 
@@ -327,6 +365,8 @@ pub struct RunConfig {
     pub total_steps: u64,
     /// Curriculum schedules (empty = uniform baseline sampling).
     pub curriculum: Vec<ClConfig>,
+    /// Progressive data dropout schedule (None = keep every sample).
+    pub pdd: Option<PddConfig>,
     /// Token-routing technique (random-LTD / TokenBypass / none).
     pub routing: Routing,
     /// Learning-rate schedule.
@@ -385,6 +425,7 @@ impl RunConfig {
             seed: 1234,
             total_steps,
             curriculum: Vec::new(),
+            pdd: None,
             routing: Routing::None,
             lr: LrConfig::token_linear(peak_lr, 0.0, 0.0),
             eval_every: 0,
@@ -433,6 +474,28 @@ impl RunConfig {
                 );
             }
         }
+        if self.family == "vit"
+            && self.curriculum.iter().any(|c| matches!(c.metric, Metric::Loss))
+        {
+            bail!("the loss-signal curriculum is a language-model policy (gpt | bert | moe)");
+        }
+        if let Some(p) = &self.pdd {
+            if !(0.0..1.0).contains(&p.f_start) || !(0.0..1.0).contains(&p.f_end) {
+                bail!("pdd fractions must lie in [0, 1)");
+            }
+            if p.f_start > p.f_end {
+                bail!("pdd f_start > f_end");
+            }
+            if p.stages == 0 {
+                bail!("pdd stages must be > 0");
+            }
+            if p.total_steps == 0 {
+                bail!("pdd total_steps must be > 0");
+            }
+            if self.family == "vit" {
+                bail!("pdd is a language-model sampler policy (gpt | bert | moe)");
+            }
+        }
         if let Routing::RandomLtd(l) = &self.routing {
             if l.r_start == 0 {
                 bail!("ltd r_start must be > 0");
@@ -459,6 +522,9 @@ impl RunConfig {
             Routing::RandomLtd(_) => parts.push("random-LTD".to_string()),
             Routing::TokenBypass(_) => parts.push("TokenBypass".to_string()),
             Routing::None => {}
+        }
+        if self.pdd.is_some() {
+            parts.push("pdd".to_string());
         }
         let base = if parts.is_empty() {
             "baseline".to_string()
@@ -533,7 +599,7 @@ impl RunConfig {
                 ("n_special", (b.n_special as usize).into()),
             ]),
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("family", self.family.as_str().into()),
             ("label", self.label.as_str().into()),
             ("case", self.case_name().into()),
@@ -576,7 +642,19 @@ impl RunConfig {
                     ),
                 ]),
             ),
-        ])
+        ];
+        if let Some(p) = &self.pdd {
+            fields.push((
+                "pdd",
+                Json::obj(vec![
+                    ("f_start", p.f_start.into()),
+                    ("f_end", p.f_end.into()),
+                    ("stages", (p.stages as usize).into()),
+                    ("total_steps", (p.total_steps as usize).into()),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -632,6 +710,15 @@ pub fn run_config_from_json(v: &Json, default_family: &str) -> Result<RunConfig>
                 steps,
             ));
         }
+    }
+    let pdd = v.get("pdd");
+    if pdd.as_obj().is_some() {
+        cfg.pdd = Some(PddConfig {
+            f_start: pdd.get("f_start").as_f64().unwrap_or(0.0),
+            f_end: pdd.get("f_end").as_f64().unwrap_or(0.0),
+            stages: pdd.get("stages").as_usize().unwrap_or(1) as u32,
+            total_steps: pdd.get("total_steps").as_usize().unwrap_or(0) as u64,
+        });
     }
     let routing = v.get("routing");
     match routing.get("kind").as_str() {
@@ -708,10 +795,56 @@ mod tests {
 
     #[test]
     fn metric_names_roundtrip() {
-        for m in [Metric::SeqTru, Metric::SeqRes, Metric::SeqReo, Metric::Voc] {
+        for m in [Metric::SeqTru, Metric::SeqRes, Metric::SeqReo, Metric::Voc, Metric::Loss] {
             assert_eq!(Metric::from_name(m.name()).unwrap(), m);
         }
         assert!(Metric::from_name("bogus").is_err());
+        assert!(!Metric::Loss.value_based(), "loss difficulty is percentile-paced");
+    }
+
+    #[test]
+    fn pdd_roundtrips_validates_and_tags_case_name() {
+        let mut c = RunConfig::baseline("gpt", 100, 1e-3);
+        assert!(c.pdd.is_none(), "no dropout by default");
+        c.pdd = Some(PddConfig::new(0.0, 0.5, 4, 80));
+        c.validate().unwrap();
+        assert_eq!(c.case_name(), "pdd");
+        c.routing = Routing::RandomLtd(LtdConfig::mslg(16, 70));
+        assert_eq!(c.case_name(), "random-LTD+pdd");
+        let j = c.to_json();
+        let c2 = run_config_from_json(&j, "gpt").unwrap();
+        assert_eq!(c2.pdd, c.pdd);
+        // configs without the key keep every sample
+        let j = Json::parse(r#"{"total_steps": 5}"#).unwrap();
+        assert!(run_config_from_json(&j, "gpt").unwrap().pdd.is_none());
+        // bounds: fractions in [0, 1), ordered; stages/steps positive
+        c.pdd = Some(PddConfig::new(0.5, 0.1, 4, 80));
+        assert!(c.validate().is_err(), "f_start > f_end");
+        c.pdd = Some(PddConfig::new(0.0, 1.0, 4, 80));
+        assert!(c.validate().is_err(), "f_end must stay below 1");
+        c.pdd = Some(PddConfig::new(0.0, 0.5, 0, 80));
+        assert!(c.validate().is_err(), "stages must be positive");
+        c.pdd = Some(PddConfig::new(0.0, 0.5, 4, 80));
+        c.family = "vit".into();
+        assert!(c.validate().is_err(), "pdd is an LM-family policy");
+    }
+
+    #[test]
+    fn loss_metric_uses_percentile_bounds() {
+        let mut c = RunConfig::baseline("gpt", 100, 1e-3);
+        c.curriculum.push(ClConfig::new(
+            Metric::Loss,
+            Bound::Percentile(0.3),
+            Bound::Percentile(1.0),
+            60,
+        ));
+        c.validate().unwrap();
+        assert_eq!(c.case_name(), "CL_loss");
+        let j = c.to_json();
+        let c2 = run_config_from_json(&j, "gpt").unwrap();
+        assert_eq!(c2.curriculum[0].metric, Metric::Loss);
+        c.curriculum[0] = ClConfig::new(Metric::Loss, Bound::Value(8.0), Bound::Value(64.0), 60);
+        assert!(c.validate().is_err(), "loss metric requires percentile bounds");
     }
 
     #[test]

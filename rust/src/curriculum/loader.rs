@@ -51,7 +51,12 @@ pub struct LmBatch {
     pub loss_mask: Vec<f32>,
     /// BERT only.
     pub pad_mask: Option<Vec<f32>>,
-    /// Data tokens consumed by this batch (CL accounting input).
+    /// Rows dropped by progressive data dropout, sorted ascending (empty
+    /// when PDD is off). Dropped rows stay in the batch for static shapes
+    /// but have all-zero `loss_mask` and are excluded from `data_tokens`.
+    pub dropped_rows: Vec<u32>,
+    /// Data tokens consumed by this batch (CL accounting input; kept rows
+    /// only under PDD).
     pub data_tokens: u64,
 }
 
@@ -107,6 +112,8 @@ pub struct LmPlan {
     pub ids: Vec<u32>,
     /// Per-batch MLM masking seed (BERT); `None` for GPT/MoE.
     pub mask_seed: Option<u64>,
+    /// Row indices dropped by progressive data dropout, sorted ascending.
+    pub dropped: Vec<u32>,
 }
 
 /// The planning-stage output of the ViT loader (a cursor position).
@@ -295,6 +302,13 @@ impl ShardPlan {
         debug_assert_eq!(b.rows, self.rows, "shard plan built for a different batch");
         let r = self.range(rank);
         let (s, e) = (r.start * b.seq, r.end * b.seq);
+        let dropped_rows: Vec<u32> = b
+            .dropped_rows
+            .iter()
+            .filter(|&&d| r.contains(&(d as usize)))
+            .map(|&d| d - r.start as u32)
+            .collect();
+        let kept = (r.end - r.start) - dropped_rows.len();
         LmBatch {
             rows: r.end - r.start,
             seq: b.seq,
@@ -302,7 +316,8 @@ impl ShardPlan {
             targets: b.targets[s..e].to_vec(),
             loss_mask: b.loss_mask[s..e].to_vec(),
             pad_mask: b.pad_mask.as_ref().map(|p| p[s..e].to_vec()),
-            data_tokens: ((r.end - r.start) * b.seq) as u64,
+            dropped_rows,
+            data_tokens: (kept * b.seq) as u64,
         }
     }
 
@@ -329,12 +344,25 @@ pub struct GptLoader {
     ds: Arc<GptDataset>,
     sampler: Box<dyn Sampler>,
     batch: usize,
+    pdd_seed: u64,
 }
 
 impl GptLoader {
     /// New loader drawing `batch` samples per step from `sampler`.
     pub fn new(ds: Arc<GptDataset>, sampler: Box<dyn Sampler>, batch: usize) -> GptLoader {
-        GptLoader { ds, sampler, batch }
+        GptLoader { ds, sampler, batch, pdd_seed: 0 }
+    }
+
+    /// Set the PDD membership seed (only consulted when the scheduled
+    /// `pdd_frac` is non-zero).
+    pub fn with_pdd_seed(mut self, seed: u64) -> GptLoader {
+        self.pdd_seed = seed;
+        self
+    }
+
+    /// Republish loss-signal scores to the sampler (epoch boundary).
+    pub fn set_epoch_scores(&mut self, scores: &[f64]) {
+        self.sampler.set_scores(scores);
     }
 
     /// The shareable materialization half (cloned into pipeline workers).
@@ -358,8 +386,13 @@ impl GptLoader {
             }
             _ => self.batch,
         };
-        let ids = (0..n_ids).map(|_| self.sampler.next(prefix)).collect();
-        LmPlan { seq, transform: state.transform, ids, mask_seed: None }
+        let ids: Vec<u32> = (0..n_ids).map(|_| self.sampler.next(prefix)).collect();
+        let segs = match state.transform {
+            SeqTransform::Reshape => (self.ds.max_seq / seq).max(1),
+            _ => 1,
+        };
+        let dropped = pdd_dropped_rows(&ids, segs, self.batch, state.pdd_frac, self.pdd_seed);
+        LmPlan { seq, transform: state.transform, ids, mask_seed: None, dropped }
     }
 
     /// Assemble the next batch (plan + materialize in one call).
@@ -369,6 +402,39 @@ impl GptLoader {
         materialize_gpt(&self.ds, self.batch, &plan, &mut out);
         out
     }
+}
+
+/// Row indices dropped by PDD, sorted ascending. Row `r` realizes sample
+/// `ids[r / segs]` (`segs == 1` except under seqres reshape, where one
+/// sampled sequence fills `segs` consecutive rows — dropping a sample
+/// drops all its rows). Pure in `(ids, frac, seed)`, so the plan and any
+/// replanning worker agree byte-for-byte.
+fn pdd_dropped_rows(ids: &[u32], segs: usize, rows: usize, frac: f64, seed: u64) -> Vec<u32> {
+    if frac <= 0.0 {
+        return Vec::new();
+    }
+    (0..rows)
+        .filter(|&r| {
+            let id = ids[(r / segs).min(ids.len() - 1)];
+            crate::curriculum::pdd::is_dropped(seed, id as u64, frac)
+        })
+        .map(|r| r as u32)
+        .collect()
+}
+
+/// Apply the plan's PDD drops to a materialized batch: zero the dropped
+/// rows' loss weights and deduct them from `data_tokens`.
+fn apply_pdd(out: &mut LmBatch, dropped: &[u32]) {
+    if dropped.is_empty() {
+        return;
+    }
+    out.dropped_rows.extend_from_slice(dropped);
+    let seq = out.seq;
+    for &r in dropped {
+        let s = r as usize * seq;
+        out.loss_mask[s..s + seq].iter_mut().for_each(|m| *m = 0.0);
+    }
+    out.data_tokens = ((out.rows - dropped.len()) * seq) as u64;
 }
 
 fn materialize_gpt(ds: &GptDataset, batch: usize, plan: &LmPlan, out: &mut LmBatch) {
@@ -403,6 +469,7 @@ fn materialize_gpt(ds: &GptDataset, batch: usize, plan: &LmPlan, out: &mut LmBat
         }
     }
     debug_assert_eq!(out.tokens.len(), batch * seq);
+    apply_pdd(out, &plan.dropped);
 }
 
 // ---------------------------------------------------------------------------
@@ -421,6 +488,7 @@ pub struct BertLoader {
     mask_prob: f32,
     seed: u64,
     planned: u64,
+    pdd_seed: u64,
 }
 
 impl BertLoader {
@@ -440,7 +508,20 @@ impl BertLoader {
             mask_prob: 0.15,
             seed,
             planned: 0,
+            pdd_seed: 0,
         }
+    }
+
+    /// Set the PDD membership seed (only consulted when the scheduled
+    /// `pdd_frac` is non-zero).
+    pub fn with_pdd_seed(mut self, seed: u64) -> BertLoader {
+        self.pdd_seed = seed;
+        self
+    }
+
+    /// Republish loss-signal scores to the sampler (epoch boundary).
+    pub fn set_epoch_scores(&mut self, scores: &[f64]) {
+        self.sampler.set_scores(scores);
     }
 
     /// The shareable materialization half (cloned into pipeline workers).
@@ -458,12 +539,13 @@ impl BertLoader {
     pub fn plan_batch(&mut self, seq: usize, state: &ClState) -> LmPlan {
         let n = self.sampler.n_samples();
         let prefix = pool_prefix(n, state.pool_pct);
-        let ids = (0..self.batch).map(|_| self.sampler.next(prefix)).collect();
+        let ids: Vec<u32> = (0..self.batch).map(|_| self.sampler.next(prefix)).collect();
         let mask_seed = self
             .seed
             .wrapping_add(self.planned.wrapping_mul(0x9e37_79b9_7f4a_7c15));
         self.planned += 1;
-        LmPlan { seq, transform: state.transform, ids, mask_seed: Some(mask_seed) }
+        let dropped = pdd_dropped_rows(&ids, 1, self.batch, state.pdd_frac, self.pdd_seed);
+        LmPlan { seq, transform: state.transform, ids, mask_seed: Some(mask_seed), dropped }
     }
 
     /// Assemble the next batch (plan + materialize in one call).
@@ -519,6 +601,7 @@ fn materialize_bert(
             out.tokens[row0 + j] = MASK as i32;
         }
     }
+    apply_pdd(out, &plan.dropped);
 }
 
 // ---------------------------------------------------------------------------
@@ -606,6 +689,7 @@ fn reset_lm(out: &mut LmBatch, batch: usize, seq: usize, loss_fill: f32, pad: bo
     } else {
         out.pad_mask = None;
     }
+    out.dropped_rows.clear();
     out.data_tokens = n as u64;
 }
 
@@ -632,7 +716,11 @@ mod tests {
     }
 
     fn st(transform: SeqTransform, seq: usize) -> ClState {
-        ClState { seq, transform, pool_pct: 1.0 }
+        ClState { seq, transform, pool_pct: 1.0, pdd_frac: 0.0 }
+    }
+
+    fn st_pdd(transform: SeqTransform, seq: usize, frac: f64) -> ClState {
+        ClState { seq, transform, pool_pct: 1.0, pdd_frac: frac }
     }
 
     #[test]
@@ -765,6 +853,98 @@ mod tests {
         let m0 = core.materialize(&BatchPlan::Lm(p0), None);
         assert_eq!(AnyBatch::Lm(b0), m0);
         assert_eq!(AnyBatch::Lm(b1), m1);
+    }
+
+    #[test]
+    fn pdd_zeroes_dropped_rows_and_deducts_tokens() {
+        let (ds, _) = gpt_setup();
+        let n = ds.n_samples();
+        let mk = |frac: f64| {
+            let mut l = GptLoader::new(ds.clone(), Box::new(UniformSampler::new(n, 6)), 8)
+                .with_pdd_seed(crate::curriculum::pdd::pdd_seed(4242));
+            l.next_batch(64, &st_pdd(SeqTransform::None, 64, frac))
+        };
+        let base = mk(0.0);
+        assert!(base.dropped_rows.is_empty());
+        assert_eq!(base.data_tokens, 8 * 64);
+        let b = mk(0.6);
+        assert!(!b.dropped_rows.is_empty(), "frac 0.6 over 8 rows should drop some");
+        assert!(b.dropped_rows.windows(2).all(|w| w[0] < w[1]), "sorted ascending");
+        // same draws → same tokens; only masks and accounting differ
+        assert_eq!(b.tokens, base.tokens);
+        assert_eq!(b.rows, 8, "dropped rows stay in the batch (static shapes)");
+        assert_eq!(b.data_tokens, (8 - b.dropped_rows.len() as u64) * 64);
+        for r in 0..8u32 {
+            let row = &b.loss_mask[r as usize * 64..(r as usize + 1) * 64];
+            if b.dropped_rows.contains(&r) {
+                assert!(row.iter().all(|&m| m == 0.0), "dropped row {r} must not train");
+            } else {
+                assert!(row.iter().all(|&m| m == 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn pdd_reshape_drops_whole_samples() {
+        let (ds, _) = gpt_setup();
+        let n = ds.n_samples();
+        let mut l = GptLoader::new(ds.clone(), Box::new(UniformSampler::new(n, 6)), 8)
+            .with_pdd_seed(crate::curriculum::pdd::pdd_seed(7));
+        // seq 16 of max 64 → segs = 4: rows r..r+4 share a sample.
+        let b = l.next_batch(16, &st_pdd(SeqTransform::Reshape, 16, 0.5));
+        for chunk_start in (0..8).step_by(4) {
+            let in_chunk: Vec<bool> = (chunk_start..chunk_start + 4)
+                .map(|r| b.dropped_rows.contains(&(r as u32)))
+                .collect();
+            assert!(
+                in_chunk.iter().all(|&d| d == in_chunk[0]),
+                "reshape must drop a sample's rows together: {in_chunk:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn pdd_shard_accounting_sums_to_global() {
+        let (ds, _) = gpt_setup();
+        let n = ds.n_samples();
+        let mut l = GptLoader::new(ds.clone(), Box::new(UniformSampler::new(n, 8)), 8)
+            .with_pdd_seed(crate::curriculum::pdd::pdd_seed(4242));
+        let b = l.next_batch(64, &st_pdd(SeqTransform::None, 64, 0.6));
+        assert!(!b.dropped_rows.is_empty());
+        let plan = ShardPlan::new(b.rows, 4);
+        let mut dt = 0;
+        let mut n_dropped = 0;
+        for rank in 0..4 {
+            let s = plan.shard_lm(&b, rank);
+            assert_eq!(
+                s.data_tokens,
+                (s.rows - s.dropped_rows.len()) as u64 * s.seq as u64
+            );
+            for &d in &s.dropped_rows {
+                assert!((d as usize) < s.rows, "shard-local row index");
+                let row = &s.loss_mask[d as usize * s.seq..(d as usize + 1) * s.seq];
+                assert!(row.iter().all(|&m| m == 0.0));
+            }
+            dt += s.data_tokens;
+            n_dropped += s.dropped_rows.len();
+        }
+        assert_eq!(dt, b.data_tokens, "shard data tokens sum to global");
+        assert_eq!(n_dropped, b.dropped_rows.len());
+    }
+
+    #[test]
+    fn pdd_recycled_batch_drops_are_reset() {
+        let (ds, _) = gpt_setup();
+        let n = ds.n_samples();
+        let mut l = GptLoader::new(ds.clone(), Box::new(UniformSampler::new(n, 9)), 8)
+            .with_pdd_seed(crate::curriculum::pdd::pdd_seed(1));
+        let core = l.core();
+        let p_dropping = BatchPlan::Lm(l.plan_batch(64, &st_pdd(SeqTransform::None, 64, 0.9)));
+        let p_clean = BatchPlan::Lm(l.plan_batch(64, &st(SeqTransform::None, 64)));
+        let fresh_clean = core.materialize(&p_clean, None);
+        let recycled = core.materialize(&p_dropping, None);
+        let reused_clean = core.materialize(&p_clean, Some(recycled));
+        assert_eq!(fresh_clean, reused_clean, "recycling a dropping batch must not leak");
     }
 
     #[test]

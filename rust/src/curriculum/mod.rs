@@ -1,9 +1,11 @@
 //! The general curriculum-learning library (§3.1): pacing functions, the
-//! difficulty scheduler, the difficulty-bounded sampler and the batch
-//! loaders implementing the paper's length transforms.
+//! difficulty scheduler, the difficulty-bounded sampler, progressive data
+//! dropout and the batch loaders implementing the paper's length
+//! transforms.
 
 pub mod loader;
 pub mod pacing;
+pub mod pdd;
 pub mod sampler;
 pub mod scheduler;
 
@@ -11,5 +13,5 @@ pub use loader::{
     AnyBatch, BatchPlan, BertLoader, GptLoader, LmBatch, LmPlan, LoaderCore, ShardPlan,
     VitBatch, VitLoader, VitPlan,
 };
-pub use sampler::{PoolSampler, Sampler, UniformSampler};
+pub use sampler::{LossSignalSampler, PoolSampler, Sampler, SampleTokens, UniformSampler};
 pub use scheduler::{ClScheduler, ClState, SeqTransform};

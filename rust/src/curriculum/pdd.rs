@@ -1,0 +1,76 @@
+//! Progressive data dropout (PDD): a sampler-level policy that drops a
+//! growing fraction of the dataset across stages.
+//!
+//! Membership is a *pure hash*: each sample id gets a fixed value in
+//! `[0, 1)` keyed by `(pdd_seed, id)`, and a sample is dropped at a step
+//! iff its value falls below the step's scheduled fraction
+//! ([`crate::curriculum::ClState::pdd_frac`]). Because the value is
+//! constant and the fraction is a monotone staircase, the kept set only
+//! ever shrinks (once dropped, stays dropped), there is no stream state
+//! to checkpoint, and plan/materialize stay split: the plan records the
+//! fraction, the worker recomputes membership byte-identically.
+
+use crate::Pcg32;
+
+/// PDD's id-hash stream constant (distinct from every sampler stream).
+const PDD_STREAM: u64 = 0x9dd;
+
+/// Derive the PDD membership seed from the run seed.
+pub fn pdd_seed(run_seed: u64) -> u64 {
+    run_seed ^ 0x9dd
+}
+
+/// The fixed membership value of `id` under `seed`, uniform in `[0, 1)`.
+pub fn membership_value(seed: u64, id: u64) -> f64 {
+    Pcg32::new(seed ^ id.wrapping_mul(0x9e37_79b9_7f4a_7c15), PDD_STREAM).next_f64()
+}
+
+/// Whether `id` is dropped when the scheduled dropout fraction is `frac`.
+pub fn is_dropped(seed: u64, id: u64, frac: f64) -> bool {
+    frac > 0.0 && membership_value(seed, id) < frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn membership_is_deterministic_and_uniform() {
+        let seed = pdd_seed(4242);
+        for id in 0..64 {
+            let v = membership_value(seed, id);
+            assert_eq!(v, membership_value(seed, id));
+            assert!((0.0..1.0).contains(&v));
+        }
+        // A coarse uniformity check: at frac 0.5 roughly half drop.
+        let dropped = (0..1000).filter(|&i| is_dropped(seed, i, 0.5)).count();
+        assert!((350..650).contains(&dropped), "dropped {dropped}/1000 at frac 0.5");
+    }
+
+    #[test]
+    fn kept_set_shrinks_monotonically() {
+        let seed = pdd_seed(7);
+        for id in 0..256 {
+            let mut was_dropped = false;
+            for stage in 0..=10 {
+                let d = is_dropped(seed, id, stage as f64 / 10.0);
+                assert!(d || !was_dropped, "id {id} came back at stage {stage}");
+                was_dropped = d;
+            }
+        }
+    }
+
+    #[test]
+    fn zero_fraction_keeps_everything() {
+        let seed = pdd_seed(99);
+        assert!((0..512).all(|i| !is_dropped(seed, i, 0.0)));
+    }
+
+    #[test]
+    fn seeds_decorrelate_membership() {
+        let a = pdd_seed(1);
+        let b = pdd_seed(2);
+        let differs = (0..256).any(|i| is_dropped(a, i, 0.5) != is_dropped(b, i, 0.5));
+        assert!(differs, "different run seeds must give different kept sets");
+    }
+}

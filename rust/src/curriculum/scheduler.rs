@@ -6,7 +6,7 @@
 //! schedule (voc or seqreo — an ordering constraint on the sample pool),
 //! mirroring the paper's composed metrics (seqtru_voc etc.).
 
-use crate::config::schema::{Bound, ClConfig, Metric};
+use crate::config::schema::{Bound, ClConfig, Metric, Pacing, PddConfig};
 use crate::curriculum::pacing::pace;
 
 /// How the loader must transform sampled sequences this step.
@@ -29,12 +29,16 @@ pub struct ClState {
     pub transform: SeqTransform,
     /// Fraction of the difficulty-ordered pool available (1.0 = all).
     pub pool_pct: f64,
+    /// Progressive-data-dropout fraction this step (0.0 = keep all): the
+    /// loader drops every sample whose membership hash falls below it.
+    pub pdd_frac: f64,
 }
 
 /// Resolves the per-step [`ClState`] from the configured CL schedules.
 pub struct ClScheduler {
     length: Option<ClConfig>,
     pool: Option<ClConfig>,
+    pdd: Option<PddConfig>,
     max_seq: usize,
 }
 
@@ -42,6 +46,17 @@ impl ClScheduler {
     /// `schedules` may hold 0, 1 or 2 entries; a length-metric and a
     /// pool-metric may be combined (the paper's composed metrics).
     pub fn new(schedules: &[ClConfig], max_seq: usize) -> crate::Result<ClScheduler> {
+        Self::with_pdd(schedules, max_seq, None)
+    }
+
+    /// [`ClScheduler::new`] plus a progressive-data-dropout schedule: the
+    /// dropped fraction rides the per-step state as [`ClState::pdd_frac`],
+    /// paced as a `stages`-step staircase from `f_start` to `f_end`.
+    pub fn with_pdd(
+        schedules: &[ClConfig],
+        max_seq: usize,
+        pdd: Option<PddConfig>,
+    ) -> crate::Result<ClScheduler> {
         let mut length = None;
         let mut pool = None;
         for s in schedules {
@@ -57,7 +72,7 @@ impl ClScheduler {
                 pool = Some(s.clone());
             }
         }
-        Ok(ClScheduler { length, pool, max_seq })
+        Ok(ClScheduler { length, pool, pdd, max_seq })
     }
 
     /// Whether any CL schedule is configured.
@@ -103,7 +118,18 @@ impl ClScheduler {
                 pace(c.pacing, ds, de, step, c.total_steps).clamp(0.0, 1.0)
             }
         };
-        ClState { seq, transform, pool_pct }
+        let pdd_frac = match &self.pdd {
+            None => 0.0,
+            Some(p) => pace(
+                Pacing::Step(p.stages),
+                p.f_start,
+                p.f_end,
+                step,
+                p.total_steps,
+            )
+            .clamp(0.0, 1.0),
+        };
+        ClState { seq, transform, pool_pct, pdd_frac }
     }
 }
 
@@ -125,7 +151,32 @@ mod tests {
         let s = ClScheduler::new(&[], 64).unwrap();
         assert!(!s.has_curriculum());
         let st = s.state_at(0);
-        assert_eq!(st, ClState { seq: 64, transform: SeqTransform::None, pool_pct: 1.0 });
+        assert_eq!(
+            st,
+            ClState { seq: 64, transform: SeqTransform::None, pool_pct: 1.0, pdd_frac: 0.0 }
+        );
+    }
+
+    #[test]
+    fn pdd_schedule_is_a_monotone_staircase() {
+        let pdd = crate::config::schema::PddConfig::new(0.1, 0.5, 4, 100);
+        let s = ClScheduler::with_pdd(&[seqtru(100)], 64, Some(pdd)).unwrap();
+        assert_eq!(s.state_at(0).pdd_frac, 0.1);
+        // Step pacing: 4 equal stages from 0.1 to 0.5, then held at f_end.
+        assert!((s.state_at(20).pdd_frac - 0.2).abs() < 1e-12);
+        assert!((s.state_at(60).pdd_frac - 0.4).abs() < 1e-12);
+        assert_eq!(s.state_at(100).pdd_frac, 0.5);
+        assert_eq!(s.state_at(10_000).pdd_frac, 0.5);
+        let mut prev = 0.0;
+        for step in 0..200 {
+            let f = s.state_at(step).pdd_frac;
+            assert!(f >= prev, "pdd_frac must be monotone in step");
+            assert!((0.0..=1.0).contains(&f));
+            prev = f;
+        }
+        // Without a pdd schedule the fraction is identically zero.
+        let s = ClScheduler::new(&[seqtru(100)], 64).unwrap();
+        assert_eq!(s.state_at(50).pdd_frac, 0.0);
     }
 
     #[test]

@@ -249,6 +249,13 @@ impl<S, T> ReorderQueue<S, T> {
     pub fn build_secs(&self) -> f64 {
         self.lock().build_secs
     }
+
+    /// Consume the queue and hand back its sequential planning state (the
+    /// loader). Only sound once every producer has exited — the epoch-
+    /// boundary recovery path of the segmented loss-signal pipeline.
+    pub fn into_state(self) -> S {
+        self.inner.into_inner().unwrap_or_else(|e| e.into_inner()).state
+    }
 }
 
 #[cfg(test)]

@@ -40,8 +40,21 @@ fn voc(d_s: f64, t_c: u64) -> ClConfig {
     ClConfig::new(Metric::Voc, Bound::Percentile(d_s), Bound::Percentile(1.0), t_c.max(1))
 }
 
+/// Loss-signal curriculum schedule: percentile-paced over difficulty
+/// computed from the run's own per-sample loss statistics.
+pub fn loss_signal(t_c: u64) -> ClConfig {
+    ClConfig::new(Metric::Loss, Bound::Percentile(0.25), Bound::Percentile(1.0), t_c.max(1))
+}
+
 fn gpt_case(label: &str, steps: u64, fraction: f64, seed: u64) -> RunConfig {
     let mut c = RunConfig::baseline("gpt", steps, peak_lr_for_fraction(fraction));
+    c.label = label.to_string();
+    c.seed = seed;
+    c
+}
+
+fn moe_case(label: &str, steps: u64, fraction: f64, seed: u64) -> RunConfig {
+    let mut c = RunConfig::baseline("moe", steps, peak_lr_for_fraction(fraction));
     c.label = label.to_string();
     c.seed = seed;
     c
@@ -253,6 +266,73 @@ pub fn exact_dispatch_cases(steps: u64, max_seq: usize, seed: u64) -> Vec<RunCon
     vec![mk("exact-composed", 0), mk("exact-composed-dp3", 3)]
 }
 
+/// PDD quality-vs-tokens pairs (the `pdd_quality` bench): at each dropout
+/// endpoint, a fixed-schedule baseline and the same run with progressive
+/// data dropout ramping 0 → `f_end` over 80% of the run. The pareto row
+/// compares trained data tokens at comparable final quality.
+pub fn pdd_quality_pairs(
+    steps: u64,
+    seed: u64,
+    f_ends: &[f64],
+) -> Vec<(f64, RunConfig, RunConfig)> {
+    f_ends
+        .iter()
+        .map(|&f_end| {
+            let base = gpt_case(&format!("fixed@pdd{:.0}%", f_end * 100.0), steps, 1.0, seed);
+            let mut pdd = gpt_case(&format!("pdd@{:.0}%", f_end * 100.0), steps, 1.0, seed);
+            pdd.pdd = Some(PddConfig::new(
+                0.0,
+                f_end,
+                4,
+                ((steps as f64 * 0.8) as u64).max(1),
+            ));
+            (f_end, base, pdd)
+        })
+        .collect()
+}
+
+/// MoE pareto sweep, mirroring [`fig2_pairs`] on the moe family: the MoE
+/// rows of the quality-vs-tokens grid (baseline vs the composed schedule
+/// at each data-budget fraction).
+pub fn moe_pareto_pairs(
+    full_steps: u64,
+    max_seq: usize,
+    seed: u64,
+    fractions: &[f64],
+) -> Vec<(f64, RunConfig, RunConfig)> {
+    fractions
+        .iter()
+        .map(|&f| {
+            let steps = ((full_steps as f64 * f).round() as u64).max(4);
+            let base = moe_case(&format!("moe-baseline@{:.0}%", f * 100.0), steps, f, seed);
+            let comp = {
+                let mut c = moe_case(&format!("moe-composed@{:.0}%", f * 100.0), steps, f, seed);
+                let t_c = (steps as f64 * 0.40) as u64;
+                c.curriculum.push(seqtru(max_seq, t_c));
+                c.curriculum.push(voc(0.01, t_c));
+                c.routing = Routing::RandomLtd(LtdConfig::mslg(
+                    max_seq / 4,
+                    (steps as f64 * 0.70) as u64,
+                ));
+                c
+            };
+            (f, base, comp)
+        })
+        .collect()
+}
+
+/// The MoE off-grid specialization case (`exact` dispatch), mirroring the
+/// GPT rows of [`exact_dispatch_cases`] so the exact-dispatch suite covers
+/// the moe grad/apply variants too.
+pub fn moe_exact_case(steps: u64, max_seq: usize, seed: u64) -> RunConfig {
+    let t_c = (steps as f64 * 0.40) as u64;
+    let mut c = moe_case("moe-exact-composed", steps, 1.0, seed);
+    c.curriculum.push(seqtru(max_seq, t_c));
+    c.routing = Routing::RandomLtd(LtdConfig::mslg(max_seq / 4, (steps as f64 * 0.70) as u64));
+    c.dispatch = DispatchPolicy::Exact;
+    c
+}
+
 /// Fig. 2 sweep: (fraction, baseline cfg, composed cfg) per budget point.
 pub fn fig2_pairs(full_steps: u64, max_seq: usize, seed: u64, fractions: &[f64]) -> Vec<(f64, RunConfig, RunConfig)> {
     fractions
@@ -346,6 +426,60 @@ mod tests {
         assert_eq!(cases[0].n_replicas, 0);
         assert_eq!(cases[1].n_replicas, 3, "off-grid replica width");
         assert!(cases[1].case_name().ends_with("@dp3@exact"));
+    }
+
+    #[test]
+    fn pdd_quality_pairs_structure() {
+        let pairs = pdd_quality_pairs(100, 7, &[0.25, 0.5]);
+        assert_eq!(pairs.len(), 2);
+        for (f_end, base, pdd) in &pairs {
+            base.validate().unwrap();
+            pdd.validate().unwrap();
+            assert!(base.pdd.is_none());
+            let p = pdd.pdd.expect("pdd arm carries the schedule");
+            assert_eq!(p.f_end, *f_end);
+            assert_eq!(p.total_steps, 80, "ramp covers 80% of the run");
+            assert_eq!(base.total_steps, pdd.total_steps, "equal step budgets");
+            assert_eq!(base.seed, pdd.seed, "same data stream");
+            assert!(pdd.case_name().contains("pdd"));
+        }
+    }
+
+    #[test]
+    fn moe_pareto_pairs_structure() {
+        let pairs = moe_pareto_pairs(300, 64, 1, &[0.5, 1.0]);
+        assert_eq!(pairs.len(), 2);
+        for (_, base, comp) in &pairs {
+            base.validate().unwrap();
+            comp.validate().unwrap();
+            assert_eq!(base.family, "moe");
+            assert_eq!(comp.family, "moe");
+            assert_eq!(comp.curriculum.len(), 2);
+            assert!(matches!(comp.routing, Routing::RandomLtd(_)));
+        }
+        assert_eq!(pairs[1].1.total_steps, 300);
+    }
+
+    #[test]
+    fn moe_exact_case_structure() {
+        let c = moe_exact_case(100, 64, 3);
+        c.validate().unwrap();
+        assert_eq!(c.family, "moe");
+        assert_eq!(c.dispatch, DispatchPolicy::Exact);
+        assert!(c.case_name().ends_with("@exact"));
+    }
+
+    #[test]
+    fn loss_signal_schedule_is_percentile_paced() {
+        let cl = loss_signal(40);
+        assert_eq!(cl.metric, Metric::Loss);
+        assert!(matches!(cl.d_start, Bound::Percentile(_)));
+        let mut c = RunConfig::baseline("gpt", 100, BASE_PEAK_LR);
+        c.curriculum.push(loss_signal(40));
+        c.validate().unwrap();
+        let mut v = RunConfig::baseline("vit", 100, BASE_PEAK_LR);
+        v.curriculum.push(loss_signal(40));
+        assert!(v.validate().is_err(), "loss metric is LM-only");
     }
 
     #[test]

@@ -20,10 +20,13 @@
 pub struct TokenAccountant {
     /// Training steps recorded so far.
     pub steps: u64,
-    /// Data tokens the pipeline consumed so far.
+    /// Data tokens the pipeline consumed so far (physical: includes rows
+    /// PDD later masked out — the conservation invariant is stated on it).
     pub data_tokens: u64,
     layer_tokens: u64,
     n_layers: u64,
+    /// Data tokens masked out by progressive data dropout.
+    pdd_dropped: u64,
 }
 
 impl TokenAccountant {
@@ -32,20 +35,22 @@ impl TokenAccountant {
         TokenAccountant { n_layers: n_layers as u64, ..Default::default() }
     }
 
-    /// The raw counters `[steps, data_tokens, layer_tokens, n_layers]` —
-    /// the checkpoint serialization of the accountant.
-    pub fn raw(&self) -> [u64; 4] {
-        [self.steps, self.data_tokens, self.layer_tokens, self.n_layers]
+    /// The raw counters
+    /// `[steps, data_tokens, layer_tokens, n_layers, pdd_dropped]` — the
+    /// checkpoint serialization of the accountant.
+    pub fn raw(&self) -> [u64; 5] {
+        [self.steps, self.data_tokens, self.layer_tokens, self.n_layers, self.pdd_dropped]
     }
 
     /// Rebuild an accountant from [`TokenAccountant::raw`] output,
     /// resuming token-based LR positioning exactly where it was captured.
-    pub fn from_raw(raw: [u64; 4]) -> TokenAccountant {
+    pub fn from_raw(raw: [u64; 5]) -> TokenAccountant {
         TokenAccountant {
             steps: raw[0],
             data_tokens: raw[1],
             layer_tokens: raw[2],
             n_layers: raw[3],
+            pdd_dropped: raw[4],
         }
     }
 
@@ -59,6 +64,27 @@ impl TokenAccountant {
         self.data_tokens += rows * seq as u64;
         self.layer_tokens +=
             rows * (seq as u64 * full_layers + kept as u64 * n_drop_layers as u64);
+    }
+
+    /// Record data tokens masked out of a step by progressive data dropout
+    /// (rows stay in the batch for static shapes but train nothing).
+    pub fn record_pdd_dropped(&mut self, tokens: u64) {
+        self.pdd_dropped += tokens;
+        debug_assert!(
+            self.pdd_dropped <= self.data_tokens,
+            "cannot drop more data tokens than were consumed"
+        );
+    }
+
+    /// Data tokens masked out by progressive data dropout so far.
+    pub fn pdd_dropped_tokens(&self) -> u64 {
+        self.pdd_dropped
+    }
+
+    /// Data tokens that actually trained: physical consumption minus PDD
+    /// drops — the paper's "Data (billion tokens)" quantity under PDD.
+    pub fn trained_data_tokens(&self) -> u64 {
+        self.data_tokens - self.pdd_dropped
     }
 
     /// Layer-tokens actually processed (kept) across all layers so far.
@@ -138,6 +164,25 @@ mod tests {
         b.record(8, 64, 64, 2);
         assert_eq!(b.raw(), a.raw());
         assert_eq!(b.saving_ratio(), a.saving_ratio());
+    }
+
+    #[test]
+    fn pdd_drops_reduce_trained_not_physical_tokens() {
+        let mut a = TokenAccountant::new(4);
+        a.record(8, 64, 64, 0);
+        a.record_pdd_dropped(3 * 64); // 3 of 8 rows masked out
+        assert_eq!(a.data_tokens, 512, "physical consumption unchanged");
+        assert_eq!(a.pdd_dropped_tokens(), 192);
+        assert_eq!(a.trained_data_tokens(), 320);
+        // conservation stays stated on physical data tokens
+        assert_eq!(
+            a.kept_layer_tokens() + a.dropped_layer_tokens(),
+            4 * a.data_tokens
+        );
+        // roundtrip carries the dropout counter
+        let b = TokenAccountant::from_raw(a.raw());
+        assert_eq!(b.trained_data_tokens(), a.trained_data_tokens());
+        assert_eq!(b.raw(), a.raw());
     }
 
     #[test]

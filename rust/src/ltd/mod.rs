@@ -10,4 +10,4 @@ pub mod token_bypass;
 pub use accounting::TokenAccountant;
 pub use dropper::RandomDropper;
 pub use schedule::{kept_len, mslg_steps_for_saving, token_saving_ratio};
-pub use token_bypass::ImportanceTracker;
+pub use token_bypass::{ImportanceTracker, LossSignalTracker};

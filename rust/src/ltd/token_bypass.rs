@@ -131,6 +131,107 @@ impl ImportanceTracker {
     }
 }
 
+/// Per-token-id loss statistics driving the loss-signal curriculum
+/// (difficulty from the run's *own* losses instead of a static metric).
+///
+/// The tracker keeps two copies of its accumulators: the *current* copy
+/// updated every step, and a *boundary* copy frozen at the last epoch
+/// boundary by [`LossSignalTracker::publish`]. The sampler only ever sees
+/// boundary scores, so mid-epoch updates cannot perturb the batch stream —
+/// the invariant that keeps async == sync and makes resume-replay exact
+/// (both accumulator copies ride the checkpoint, FORMAT_VERSION ≥ 2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LossSignalTracker {
+    /// Loss mass attributed to each id since the run started.
+    cum_loss: Vec<f64>,
+    /// Occurrences seen during training.
+    seen: Vec<u64>,
+    /// `cum_loss` frozen at the last published epoch boundary.
+    bnd_cum: Vec<f64>,
+    /// `seen` frozen at the last published epoch boundary.
+    bnd_seen: Vec<u64>,
+}
+
+impl LossSignalTracker {
+    /// New all-zero tracker over `n_ids` token ids (scores start at 0, so
+    /// the first epoch's difficulty order is the identity).
+    pub fn new(n_ids: usize) -> LossSignalTracker {
+        LossSignalTracker {
+            cum_loss: vec![0.0; n_ids],
+            seen: vec![0; n_ids],
+            bnd_cum: vec![0.0; n_ids],
+            bnd_seen: vec![0; n_ids],
+        }
+    }
+
+    /// Token ids the tracker covers.
+    pub fn n_ids(&self) -> usize {
+        self.cum_loss.len()
+    }
+
+    /// Attribute a step's mean loss to the token ids it contained (same
+    /// accumulation structure as [`ImportanceTracker::update`]).
+    pub fn update(&mut self, tokens: &[i32], step_loss: f64) {
+        for &t in tokens {
+            let t = t as usize;
+            if t < self.cum_loss.len() {
+                self.cum_loss[t] += step_loss;
+                self.seen[t] += 1;
+            }
+        }
+    }
+
+    /// Freeze the current accumulators as the new boundary copy (called at
+    /// epoch boundaries, before the next segment's planning starts).
+    pub fn publish(&mut self) {
+        self.bnd_cum.clone_from(&self.cum_loss);
+        self.bnd_seen.clone_from(&self.seen);
+    }
+
+    /// Per-id difficulty scores from the *boundary* copy: running mean
+    /// loss, 0 for ids never seen.
+    pub fn scores(&self) -> Vec<f64> {
+        self.bnd_cum
+            .iter()
+            .zip(&self.bnd_seen)
+            .map(|(&c, &s)| if s == 0 { 0.0 } else { c / s as f64 })
+            .collect()
+    }
+
+    /// The full learned state `(cum_loss, seen, bnd_cum, bnd_seen)` — the
+    /// checkpoint serialization of the tracker.
+    pub fn snapshot(&self) -> (Vec<f64>, Vec<u64>, Vec<f64>, Vec<u64>) {
+        (
+            self.cum_loss.clone(),
+            self.seen.clone(),
+            self.bnd_cum.clone(),
+            self.bnd_seen.clone(),
+        )
+    }
+
+    /// Restore the state captured by [`LossSignalTracker::snapshot`].
+    pub fn restore(
+        &mut self,
+        cum_loss: Vec<f64>,
+        seen: Vec<u64>,
+        bnd_cum: Vec<f64>,
+        bnd_seen: Vec<u64>,
+    ) -> crate::Result<()> {
+        let n = self.cum_loss.len();
+        if cum_loss.len() != n || seen.len() != n || bnd_cum.len() != n || bnd_seen.len() != n {
+            bail!(
+                "loss-signal restore: snapshot covers {} ids, tracker has {n}",
+                cum_loss.len()
+            );
+        }
+        self.cum_loss = cum_loss;
+        self.seen = seen;
+        self.bnd_cum = bnd_cum;
+        self.bnd_seen = bnd_seen;
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,5 +312,38 @@ mod tests {
         let mut out = Vec::new();
         tr.select_positions(&tokens, rows, seq, 1, &mut out);
         assert_eq!(out, vec![3]);
+    }
+
+    #[test]
+    fn loss_signal_scores_come_from_the_boundary_copy() {
+        let mut tr = LossSignalTracker::new(8);
+        assert!(tr.scores().iter().all(|&s| s == 0.0), "identity order at start");
+        tr.update(&[3, 3, 5], 2.0);
+        // not yet published: sampler-visible scores unchanged
+        assert!(tr.scores().iter().all(|&s| s == 0.0));
+        tr.publish();
+        let s = tr.scores();
+        assert_eq!(s[3], 2.0);
+        assert_eq!(s[5], 2.0);
+        assert_eq!(s[0], 0.0);
+        // further updates stay invisible until the next publish
+        tr.update(&[5], 10.0);
+        assert_eq!(tr.scores()[5], 2.0);
+        tr.publish();
+        assert_eq!(tr.scores()[5], 6.0); // (2 + 10) / 2
+    }
+
+    #[test]
+    fn loss_signal_snapshot_restores_both_copies() {
+        let mut tr = LossSignalTracker::new(8);
+        tr.update(&[1, 2], 1.0);
+        tr.publish();
+        tr.update(&[2], 4.0); // mid-epoch divergence between the copies
+        let (c, s, bc, bs) = tr.snapshot();
+        let mut fresh = LossSignalTracker::new(8);
+        fresh.restore(c, s, bc, bs).unwrap();
+        assert_eq!(fresh, tr);
+        assert_eq!(fresh.scores(), tr.scores());
+        assert!(fresh.restore(vec![0.0; 3], vec![0; 3], vec![0.0; 3], vec![0; 3]).is_err());
     }
 }

@@ -9,13 +9,20 @@
 //!                                   mmap index under runs/
 //! dsde train [--preset P] [--family F] [--steps N] [--lr X] [--seed S]
 //!            [--config FILE] [--eval-every K] [--replicas N]
-//!            [--dispatch bucket|exact] [--no-prewarm]
+//!            [--dispatch bucket|exact] [--no-prewarm] [--pdd SPEC]
 //!            [--save-every N] [--delta-every K] [--save-dir DIR] [--resume PATH]
 //!                                   run one training; prints the curve
 //!                                   (--replicas N: data-parallel replica
 //!                                   engine; 0 = fused single step;
 //!                                   --dispatch exact: JIT-specialize the
 //!                                   requested shapes verbatim;
+//!                                   --pdd F_START:F_END[:STAGES[:STEPS]]:
+//!                                   progressive data dropout — drop a
+//!                                   fraction growing F_START → F_END of
+//!                                   the dataset in STAGES stages over
+//!                                   STEPS steps (defaults 4 stages, 80%
+//!                                   of the run); `--preset P@pdd` layers
+//!                                   the default 0:0.5 schedule;
 //!                                   --save-every N: atomic checkpoint
 //!                                   every N steps into --save-dir;
 //!                                   --delta-every K: every K-th publish is
@@ -85,7 +92,7 @@ fn main() {
 const VALUE_KEYS: &[&str] = &[
     "docs", "workers", "metric", "preset", "family", "steps", "lr", "seed",
     "config", "eval-every", "out", "prefetch-depth", "loader-workers",
-    "replicas", "dispatch", "save-every", "delta-every", "save-dir", "resume", "label",
+    "replicas", "dispatch", "pdd", "save-every", "delta-every", "save-dir", "resume", "label",
     "addr", "jobs", "slice", "priority", "share", "job", "default-slice",
     "conn-threads", "queue-cap", "conn-backlog", "max-request-bytes",
 ];
@@ -262,7 +269,31 @@ fn run_config_from_args(args: &Args) -> dsde::Result<RunConfig> {
     if let Some(l) = args.get("label") {
         cfg.label = l.to_string();
     }
+    if let Some(spec) = args.get("pdd") {
+        cfg.pdd = Some(parse_pdd(spec, cfg.total_steps)?);
+    }
+    cfg.validate()?;
     Ok(cfg)
+}
+
+/// Parse `--pdd F_START:F_END[:STAGES[:STEPS]]` (defaults: 4 stages over
+/// 80% of the run).
+fn parse_pdd(spec: &str, total_steps: u64) -> dsde::Result<dsde::config::schema::PddConfig> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    if !(2..=4).contains(&parts.len()) {
+        bail!("--pdd expects F_START:F_END[:STAGES[:STEPS]], got '{spec}'");
+    }
+    let f_start: f64 = parts[0].parse().map_err(|_| anyhow!("bad pdd f_start '{}'", parts[0]))?;
+    let f_end: f64 = parts[1].parse().map_err(|_| anyhow!("bad pdd f_end '{}'", parts[1]))?;
+    let stages: u32 = match parts.get(2) {
+        Some(s) => s.parse().map_err(|_| anyhow!("bad pdd stages '{s}'"))?,
+        None => 4,
+    };
+    let steps: u64 = match parts.get(3) {
+        Some(s) => s.parse().map_err(|_| anyhow!("bad pdd steps '{s}'"))?,
+        None => ((total_steps as f64 * 0.80) as u64).max(1),
+    };
+    Ok(dsde::config::schema::PddConfig::new(f_start, f_end, stages, steps))
 }
 
 fn train(args: &Args) -> dsde::Result<()> {

@@ -232,7 +232,7 @@ impl FamilyInfo {
 pub struct Registry {
     /// The built-in family table.
     pub families: BTreeMap<String, FamilyInfo>,
-    /// The legacy variant grid (172 points), kept for bucket-policy
+    /// The legacy variant grid (182 points), kept for bucket-policy
     /// membership checks and `manifest.json` emission.
     pub grid: BTreeMap<String, ArtifactInfo>,
     /// The shared artifact-name intern table (hot-path `KeyId` handles).
@@ -492,7 +492,7 @@ mod tests {
             assert!(fam.n_layers >= 3);
             assert!(fam.n_params > 10);
         }
-        assert_eq!(r.grid.len(), 172);
+        assert_eq!(r.grid.len(), 182);
     }
 
     #[test]

@@ -37,7 +37,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// Default specialization-cache capacity. Far above any single run's
-/// working set (the full legacy grid is 172 programs), so eviction only
+/// working set (the full legacy grid is 182 programs), so eviction only
 /// matters for long-lived multi-experiment processes — or tests, which
 /// shrink it via [`Runtime::with_cache_capacity`].
 pub const DEFAULT_CACHE_CAPACITY: usize = 512;

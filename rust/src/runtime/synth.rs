@@ -92,8 +92,8 @@ pub fn builtin_families() -> BTreeMap<String, FamilyInfo> {
             &[(32, &[16]), (64, &[16, 32])]),
         family("bert", 512, true, true, 64, 0, 0, 0, &[8, 16, 32, 64], &[32, 64],
             &[(32, &[16]), (64, &[16, 32])]),
-        family("moe", 512, false, true, 64, 0, 0, 4, &[8, 16, 32, 64], &[64],
-            &[(64, &[16, 32])]),
+        family("moe", 512, false, true, 64, 0, 0, 4, &[8, 16, 32, 64], &[32, 64],
+            &[(32, &[16]), (64, &[16, 32])]),
         family("vit", 0, false, false, 17, 10, 48, 0, &[17], &[17],
             &[(17, &[5, 9, 13])]),
     ] {
@@ -521,15 +521,39 @@ mod tests {
     use super::*;
 
     #[test]
-    fn legacy_grid_has_the_172_points() {
+    fn legacy_grid_has_the_182_points() {
         let families = builtin_families();
         let grid = legacy_grid(&families).unwrap();
-        assert_eq!(grid.len(), 172);
+        assert_eq!(grid.len(), 182);
         let per_family = |fam: &str| grid.iter().filter(|a| a.family == fam).count();
         assert_eq!(per_family("gpt"), 53);
         assert_eq!(per_family("bert"), 53);
-        assert_eq!(per_family("moe"), 43);
+        assert_eq!(per_family("moe"), 53);
         assert_eq!(per_family("vit"), 23);
+    }
+
+    #[test]
+    fn moe_grid_matches_the_lm_families() {
+        // moe is first-class: its ltd/bypass variant grid (train + every
+        // shard-width grad) must mirror gpt's so dp and exact-dispatch
+        // suites can run the same cases on it.
+        let families = builtin_families();
+        let grid = legacy_grid(&families).unwrap();
+        let names = |fam: &str| -> Vec<String> {
+            grid.iter()
+                .filter(|a| a.family == fam)
+                .map(|a| a.name[fam.len()..].to_string())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(names("moe"), names("gpt"));
+        for tag in ["_train_s32_ltd16", "_train_s32_bypass16", "_grad_s32_ltd16_r2",
+            "_grad_s32_bypass16_r1"]
+        {
+            assert!(
+                grid.iter().any(|a| a.name == format!("moe{tag}")),
+                "moe{tag} missing from the legacy grid"
+            );
+        }
     }
 
     #[test]

@@ -16,6 +16,9 @@
 //! * **dropper RNG** — the random-LTD keep-index stream (raw PCG32 state);
 //! * **importance tracker** — TokenBypass's accumulated per-id loss/seen
 //!   arrays (its corpus prior is rebuilt deterministically from the data);
+//! * **loss-signal tracker** — the loss-signal curriculum's per-id
+//!   accumulators, both the live epoch and the published boundary copy,
+//!   so a resumed run orders samples exactly as the uninterrupted one;
 //! * **step losses + eval curve** so far, so the resumed run reports the
 //!   full-run observables;
 //! * a **schedule fingerprint** over the precomputed (CL, route) plan,
@@ -28,7 +31,7 @@
 //! [`crate::train::Trainer`]. The curriculum pacing position is a pure
 //! function of the step and is re-derived from the plan.
 //!
-//! # File format (version 1)
+//! # File format (version 2)
 //!
 //! ```text
 //! [ 0.. 8)  magic  b"DSDECKPT"
@@ -40,8 +43,10 @@
 //! ```
 //!
 //! Body order: state tensors (f32, dims from the header) · accountant
-//! (4×u64) · dropper RNG (2×u64) · importance arrays (f64/u64, optional) ·
-//! step losses (f32) · curve points (u64 + 2×f64 each). The encoder
+//! (5×u64) · dropper RNG (2×u64) · importance arrays (f64/u64, optional) ·
+//! loss-signal arrays (f64/u64 live copy then f64/u64 boundary copy,
+//! optional) · step losses (f32) · curve points (u64 + 2×f64 each). The
+//! encoder
 //! computes every section's byte offset up front (the preallocation is
 //! exact — encode never reallocates) and fills large bodies from multiple
 //! threads over a fixed chunk tree; the bytes and the trailing checksum
@@ -49,7 +54,7 @@
 //!
 //! # DELTA records (incremental snapshots)
 //!
-//! The same v1 container can carry an **incremental** snapshot: a record
+//! The same container can carry an **incremental** snapshot: a record
 //! whose header adds `kind:"delta"`, `base_step`, `base_fnv` (the trailing
 //! checksum of the base file) and `changed` (state-tensor indices), and
 //! whose body carries **only the tensors whose per-tensor FNV changed**
@@ -62,8 +67,8 @@
 //! corrupt base breaks the chain loudly instead of restoring mixed state.
 //! [`Checkpoint::load_chain`] resolves either record kind to a fully
 //! materialized snapshot; plain [`Checkpoint::decode`] rejects deltas
-//! with a pointer to `load_chain`. Full-snapshot bytes are unchanged
-//! (`tests/goldens/checkpoint_v1.txt` still pins them).
+//! with a pointer to `load_chain`. A byte-stability golden
+//! (`tests/goldens/checkpoint_v2.txt`) pins full-snapshot bytes.
 //!
 //! Writes are atomic
 //! **and durable**: encode to `<path>.tmp`, fsync the file, rename, then
@@ -73,7 +78,7 @@
 //! A failed save removes its own `.tmp` instead of stranding it; `.tmp`
 //! files that survive a hard crash are garbage-collected by the recovery
 //! scanner ([`crate::orch::recover`]). Any format change requires bumping
-//! [`FORMAT_VERSION`] (a byte-stability golden pins version 1).
+//! [`FORMAT_VERSION`] (a byte-stability golden pins the current version).
 //!
 //! For crash-injection testing, `DSDE_CRASH_AFTER_SAVES=N` arms a fault
 //! hook in the save path: the first `N` saves publish normally, then the
@@ -99,8 +104,10 @@ pub const MAGIC: &[u8; 8] = b"DSDECKPT";
 
 /// Current checkpoint format version. Any change to the byte layout —
 /// header keys, section order, widths — must bump this (enforced by the
-/// byte-stability golden in `tests/checkpoint_format.rs`).
-pub const FORMAT_VERSION: u32 = 1;
+/// byte-stability golden in `tests/checkpoint_format.rs`). Version 2
+/// widened the accountant section to 5×u64 (the PDD dropped-token
+/// counter) and added the optional loss-signal tracker section.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// One serialized state tensor: its dims and raw f32 elements.
 #[derive(Clone, Debug, PartialEq)]
@@ -163,15 +170,20 @@ pub struct Checkpoint {
     /// Model parameters + Adam moments, in state-literal order.
     pub state: Vec<TensorSnap>,
     /// Raw [`TokenAccountant`] counters: steps, data tokens, layer
-    /// tokens, layer count.
+    /// tokens, layer count, PDD dropped tokens.
     ///
     /// [`TokenAccountant`]: crate::ltd::TokenAccountant
-    pub accountant: [u64; 4],
+    pub accountant: [u64; 5],
     /// Raw PCG32 (state, inc) of the random-LTD dropper stream.
     pub dropper_rng: (u64, u64),
     /// TokenBypass importance state `(cum_loss, seen)`, when the run
     /// routes with an importance tracker.
     pub importance: Option<(Vec<f64>, Vec<u64>)>,
+    /// Loss-signal curriculum tracker state
+    /// `(cum_loss, seen, bnd_cum, bnd_seen)` — the live epoch
+    /// accumulators plus the published boundary copy — when the run
+    /// schedules a loss-metric curriculum.
+    pub loss_signal: Option<(Vec<f64>, Vec<u64>, Vec<f64>, Vec<u64>)>,
     /// Per-step train losses for steps `0..step`, bit-exact f32.
     pub step_losses: Vec<f32>,
     /// Eval-curve points recorded so far.
@@ -255,7 +267,7 @@ impl Checkpoint {
     /// parallel when large — into an exactly-sized buffer.
     fn encode_image(&self, header: &str, tensor_idx: &[usize]) -> Vec<u8> {
         let rng = [self.dropper_rng.0, self.dropper_rng.1];
-        let mut sections: Vec<Section> = Vec::with_capacity(tensor_idx.len() + 5);
+        let mut sections: Vec<Section> = Vec::with_capacity(tensor_idx.len() + 9);
         for &i in tensor_idx {
             sections.push(Section::F32(&self.state[i].data));
         }
@@ -264,6 +276,12 @@ impl Checkpoint {
         if let Some((cum, seen)) = &self.importance {
             sections.push(Section::F64(cum));
             sections.push(Section::U64(seen));
+        }
+        if let Some((cum, seen, bnd_cum, bnd_seen)) = &self.loss_signal {
+            sections.push(Section::F64(cum));
+            sections.push(Section::U64(seen));
+            sections.push(Section::F64(bnd_cum));
+            sections.push(Section::U64(bnd_seen));
         }
         sections.push(Section::F32(&self.step_losses));
         sections.push(Section::Curve(&self.curve));
@@ -346,6 +364,7 @@ impl Checkpoint {
         let schedule_fp = u64::from_str_radix(h.get("schedule_fp").as_str().unwrap_or(""), 16)
             .map_err(|_| anyhow!("corrupt checkpoint header: bad schedule_fp"))?;
         let importance_len = h.get("importance").as_usize().unwrap_or(0);
+        let loss_signal_len = h.get("loss_signal").as_usize().unwrap_or(0);
         let n_curve = h.get("curve").as_usize().unwrap_or(0);
         let delta = match h.get("kind").as_str() {
             None => None,
@@ -408,9 +427,10 @@ impl Checkpoint {
         // The header fully determines the body size: enforce it before
         // trusting any offset, so truncation reports as truncation.
         let body_len = state_elems * 4
-            + 4 * 8
+            + 5 * 8
             + 2 * 8
             + importance_len * (8 + 8)
+            + loss_signal_len * (8 + 8 + 8 + 8)
             + step as usize * 4
             + n_curve * (8 + 8 + 8);
         let expected = 16 + header_len + body_len + 8;
@@ -436,7 +456,7 @@ impl Checkpoint {
             }
             state.push(TensorSnap { dims, data });
         }
-        let accountant = [c.u64()?, c.u64()?, c.u64()?, c.u64()?];
+        let accountant = [c.u64()?, c.u64()?, c.u64()?, c.u64()?, c.u64()?];
         let dropper_rng = (c.u64()?, c.u64()?);
         let importance = if importance_len > 0 {
             let mut cum = Vec::with_capacity(importance_len);
@@ -448,6 +468,24 @@ impl Checkpoint {
                 seen.push(c.u64()?);
             }
             Some((cum, seen))
+        } else {
+            None
+        };
+        let loss_signal = if loss_signal_len > 0 {
+            let mut arrs = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            for _ in 0..loss_signal_len {
+                arrs.0.push(c.f64()?);
+            }
+            for _ in 0..loss_signal_len {
+                arrs.1.push(c.u64()?);
+            }
+            for _ in 0..loss_signal_len {
+                arrs.2.push(c.f64()?);
+            }
+            for _ in 0..loss_signal_len {
+                arrs.3.push(c.u64()?);
+            }
+            Some(arrs)
         } else {
             None
         };
@@ -476,6 +514,7 @@ impl Checkpoint {
                 accountant,
                 dropper_rng,
                 importance,
+                loss_signal,
                 step_losses,
                 curve,
             },
@@ -577,6 +616,7 @@ impl Checkpoint {
         schedule_fp: u64,
         n_state: usize,
         importance_ids: Option<usize>,
+        loss_signal_ids: Option<usize>,
     ) -> Result<()> {
         if self.family != run.family {
             bail!("checkpoint is for family '{}', run is '{}'", self.family, run.family);
@@ -639,6 +679,22 @@ impl Checkpoint {
                  importance state"
             ),
         }
+        match (self.loss_signal.as_ref(), loss_signal_ids) {
+            (None, None) => {}
+            (Some((cum, ..)), Some(n)) if cum.len() == n => {}
+            (Some((cum, ..)), Some(n)) => bail!(
+                "checkpoint loss-signal state covers {} token ids, run expects {n}",
+                cum.len()
+            ),
+            (Some(_), None) => bail!(
+                "checkpoint carries loss-signal curriculum state but the run \
+                 schedules no loss-metric curriculum"
+            ),
+            (None, Some(_)) => bail!(
+                "run schedules a loss-metric curriculum but the checkpoint \
+                 has no loss-signal state"
+            ),
+        }
         Ok(())
     }
 
@@ -653,6 +709,7 @@ impl Checkpoint {
             ("engine", self.engine.name().into()),
             ("family", self.family.as_str().into()),
             ("importance", self.importance.as_ref().map(|(c, _)| c.len()).unwrap_or(0).into()),
+            ("loss_signal", self.loss_signal.as_ref().map(|(c, ..)| c.len()).unwrap_or(0).into()),
             ("n_replicas", self.n_replicas.into()),
             ("schedule_fp", format!("{:016x}", self.schedule_fp).into()),
             ("step", (self.step as usize).into()),
@@ -680,6 +737,7 @@ impl Checkpoint {
             ("family", self.family.as_str().into()),
             ("importance", self.importance.as_ref().map(|(c, _)| c.len()).unwrap_or(0).into()),
             ("kind", "delta".into()),
+            ("loss_signal", self.loss_signal.as_ref().map(|(c, ..)| c.len()).unwrap_or(0).into()),
             ("n_replicas", self.n_replicas.into()),
             ("schedule_fp", format!("{:016x}", self.schedule_fp).into()),
             ("step", (self.step as usize).into()),
@@ -691,9 +749,10 @@ impl Checkpoint {
     fn body_len(&self) -> usize {
         let elems: usize = self.state.iter().map(|t| t.data.len()).sum();
         elems * 4
-            + 4 * 8
+            + 5 * 8
             + 2 * 8
             + self.importance.as_ref().map(|(c, _)| c.len() * 16).unwrap_or(0)
+            + self.loss_signal.as_ref().map(|(c, ..)| c.len() * 32).unwrap_or(0)
             + self.step_losses.len() * 4
             + self.curve.len() * 24
     }
@@ -1000,6 +1059,7 @@ pub fn schedule_fingerprint(run: &RunConfig, schedule: &[StepRoute]) -> u64 {
             SeqTransform::Reshape => 2,
         });
         buf.extend_from_slice(&sr.cl.pool_pct.to_bits().to_le_bytes());
+        buf.extend_from_slice(&sr.cl.pdd_frac.to_bits().to_le_bytes());
         buf.extend_from_slice(sr.route.artifact.as_bytes());
         buf.push(0xff);
         buf.extend_from_slice(&(sr.route.seq as u64).to_le_bytes());
@@ -1113,9 +1173,10 @@ mod tests {
                 TensorSnap { dims: vec![2, 2], data: vec![1.0, -2.5, 0.0, 3.25] },
                 TensorSnap { dims: vec![3], data: vec![0.5, 0.25, -0.125] },
             ],
-            accountant: [3, 1536, 6144, 4],
+            accountant: [3, 1536, 6144, 4, 128],
             dropper_rng: (0xdead_beef_0000_0001, 0x0000_0000_0000_02ff),
             importance: Some((vec![0.5, 1.5], vec![7, 9])),
+            loss_signal: None,
             step_losses: vec![5.5, 5.25, 5.0],
             curve: vec![CurvePoint { step: 2, compute_tokens: 1024.0, eval_loss: 5.125 }],
         }
@@ -1129,6 +1190,7 @@ mod tests {
                     seq: 64,
                     transform: SeqTransform::None,
                     pool_pct: 1.0,
+                    pdd_frac: 0.0,
                 },
                 route: Route {
                     artifact: "gpt_train_s64_full".into(),
@@ -1158,6 +1220,21 @@ mod tests {
         ck.n_replicas = 0;
         let back = Checkpoint::decode(&ck.encode()).unwrap();
         assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn roundtrip_with_loss_signal_state() {
+        let mut ck = sample();
+        ck.loss_signal =
+            Some((vec![0.25, 0.0, 2.5], vec![3, 0, 11], vec![0.125, 0.0, 1.75], vec![2, 0, 9]));
+        let bytes = ck.encode();
+        assert_eq!(Checkpoint::decode(&bytes).unwrap(), ck);
+        // 32 bytes per tracked id: f64 + u64 live copy, f64 + u64 boundary
+        assert_eq!(ck.body_len(), {
+            let mut plain = ck.clone();
+            plain.loss_signal = None;
+            plain.body_len() + 3 * 32
+        });
     }
 
     #[test]
@@ -1359,6 +1436,18 @@ mod tests {
     }
 
     #[test]
+    fn fingerprint_sensitive_to_pdd_schedule() {
+        let (run, mut schedule) = plan();
+        let fp = schedule_fingerprint(&run, &schedule);
+        schedule[1].cl.pdd_frac = 0.25;
+        assert_ne!(
+            fp,
+            schedule_fingerprint(&run, &schedule),
+            "a different dropout staircase is a different plan"
+        );
+    }
+
+    #[test]
     fn fingerprint_ignores_replica_count_and_pipeline() {
         let (mut run, schedule) = plan();
         let fp = schedule_fingerprint(&run, &schedule);
@@ -1376,24 +1465,49 @@ mod tests {
         run.total_steps = 10;
         let n_state = ck.state.len();
         // wrong fingerprint
-        let err = ck.validate_for(&run, 1, n_state, Some(2)).unwrap_err();
+        let err = ck.validate_for(&run, 1, n_state, Some(2), None).unwrap_err();
         assert!(format!("{err}").contains("different run plan"), "{err}");
         // fused run against a replica checkpoint
         run.n_replicas = 0;
         let err = ck
-            .validate_for(&run, ck.schedule_fp, n_state, Some(2))
+            .validate_for(&run, ck.schedule_fp, n_state, Some(2), None)
             .unwrap_err();
         assert!(format!("{err}").contains("fused"), "{err}");
         // elastic count change within the replica engine is fine
         run.n_replicas = 8;
-        ck.validate_for(&run, ck.schedule_fp, n_state, Some(2)).unwrap();
+        ck.validate_for(&run, ck.schedule_fp, n_state, Some(2), None).unwrap();
         // importance shape mismatch
         let err = ck
-            .validate_for(&run, ck.schedule_fp, n_state, Some(5))
+            .validate_for(&run, ck.schedule_fp, n_state, Some(5), None)
             .unwrap_err();
         assert!(format!("{err}").contains("token ids"), "{err}");
-        let err = ck.validate_for(&run, ck.schedule_fp, n_state, None).unwrap_err();
+        let err = ck.validate_for(&run, ck.schedule_fp, n_state, None, None).unwrap_err();
         assert!(format!("{err}").contains("TokenBypass"), "{err}");
+    }
+
+    #[test]
+    fn validate_checks_loss_signal_shape() {
+        let (mut run, _) = plan();
+        run.n_replicas = 2;
+        run.total_steps = 10;
+        let mut ck = sample();
+        let n_state = ck.state.len();
+        // run expects loss-signal state the checkpoint lacks
+        let err = ck
+            .validate_for(&run, ck.schedule_fp, n_state, Some(2), Some(3))
+            .unwrap_err();
+        assert!(format!("{err}").contains("no loss-signal state"), "{err}");
+        ck.loss_signal = Some((vec![0.0; 3], vec![0; 3], vec![0.0; 3], vec![0; 3]));
+        ck.validate_for(&run, ck.schedule_fp, n_state, Some(2), Some(3)).unwrap();
+        // shape mismatch and orphaned state both reject
+        let err = ck
+            .validate_for(&run, ck.schedule_fp, n_state, Some(2), Some(7))
+            .unwrap_err();
+        assert!(format!("{err}").contains("3 token ids"), "{err}");
+        let err = ck
+            .validate_for(&run, ck.schedule_fp, n_state, Some(2), None)
+            .unwrap_err();
+        assert!(format!("{err}").contains("no loss-metric curriculum"), "{err}");
     }
 
     #[test]

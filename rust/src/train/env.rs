@@ -9,14 +9,17 @@
 use crate::analysis::analyzer::AnalyzerConfig;
 use crate::analysis::metrics;
 use crate::config::schema::{Metric, Routing, RunConfig};
-use crate::curriculum::sampler::{PoolSampler, Sampler, UniformSampler};
+use crate::curriculum::pdd::pdd_seed;
+use crate::curriculum::sampler::{
+    LossSignalSampler, PoolSampler, Sampler, SampleTokens, UniformSampler,
+};
 use crate::curriculum::scheduler::{ClState, SeqTransform};
 use crate::curriculum::{BertLoader, GptLoader, LmBatch, VitBatch, VitLoader};
 use crate::data::corpus::{Corpus, CorpusConfig};
 use crate::data::dataset::{BertDataset, GptDataset, VitDataset};
 use crate::data::index::DifficultyIndex;
 use crate::data::tokenizer::{Tokenizer, N_SPECIAL};
-use crate::ltd::ImportanceTracker;
+use crate::ltd::{ImportanceTracker, LossSignalTracker};
 use crate::runtime::Runtime;
 use crate::train::trainer::{EvalSet, LoaderKind, RunResult, Trainer};
 use crate::Result;
@@ -121,6 +124,16 @@ impl TrainEnv {
             ("bert", Some(Metric::SeqReo)) => {
                 Box::new(PoolSampler::new(self.bert_seqreo.clone(), seed))
             }
+            // Loss-signal: difficulty comes from the run's own per-step
+            // losses, published back into the sampler at epoch boundaries.
+            ("gpt" | "moe", Some(Metric::Loss)) => Box::new(LossSignalSampler::new(
+                SampleTokens::Gpt(self.gpt_train.clone()),
+                seed,
+            )),
+            ("bert", Some(Metric::Loss)) => Box::new(LossSignalSampler::new(
+                SampleTokens::Bert(self.bert_train.clone()),
+                seed,
+            )),
             (f, Some(m)) => bail!("metric {} unsupported for family {f}", m.name()),
         })
     }
@@ -132,20 +145,25 @@ impl TrainEnv {
             "gpt" | "moe" => {
                 let n = self.gpt_train.n_samples();
                 let sampler = self.sampler_for(&cfg, n)?;
-                let loader =
-                    LoaderKind::Gpt(GptLoader::new(self.gpt_train.clone(), sampler, fam.batch));
+                let loader = LoaderKind::Gpt(
+                    GptLoader::new(self.gpt_train.clone(), sampler, fam.batch)
+                        .with_pdd_seed(pdd_seed(cfg.seed)),
+                );
                 (loader, EvalSet::Lm(self.gpt_eval_batches(&fam)))
             }
             "bert" => {
                 let n = self.bert_train.n_samples();
                 let sampler = self.sampler_for(&cfg, n)?;
-                let loader = LoaderKind::Bert(BertLoader::new(
-                    self.bert_train.clone(),
-                    sampler,
-                    fam.batch,
-                    self.tokenizer.vocab_size,
-                    cfg.seed ^ 0xb0b,
-                ));
+                let loader = LoaderKind::Bert(
+                    BertLoader::new(
+                        self.bert_train.clone(),
+                        sampler,
+                        fam.batch,
+                        self.tokenizer.vocab_size,
+                        cfg.seed ^ 0xb0b,
+                    )
+                    .with_pdd_seed(pdd_seed(cfg.seed)),
+                );
                 (loader, EvalSet::Lm(self.bert_eval_batches(&fam, cfg.seed)))
             }
             "vit" => {
@@ -160,7 +178,15 @@ impl TrainEnv {
             }
             _ => None,
         };
-        Trainer::new(&self.rt, cfg, loader, eval_set, importance)
+        // The loss-signal curriculum's difficulty source: per-token-id loss
+        // accumulators sized to the tokenizer (validate() guarantees the
+        // loss metric only appears on LM families).
+        let loss_signal = cfg
+            .curriculum
+            .iter()
+            .any(|c| matches!(c.metric, Metric::Loss))
+            .then(|| LossSignalTracker::new(self.tokenizer.vocab_size));
+        Trainer::new(&self.rt, cfg, loader, eval_set, importance, loss_signal)
     }
 
     /// Convenience: build + run.
@@ -175,7 +201,8 @@ impl TrainEnv {
             Box::new(UniformSampler::new(n, 0x0e7a1)),
             fam.batch,
         );
-        let st = ClState { seq: fam.max_seq, transform: SeqTransform::None, pool_pct: 1.0 };
+        let st =
+            ClState { seq: fam.max_seq, transform: SeqTransform::None, pool_pct: 1.0, pdd_frac: 0.0 };
         (0..self.eval_batches)
             .map(|_| loader.next_batch(fam.max_seq, &st))
             .collect()
@@ -191,7 +218,8 @@ impl TrainEnv {
             self.tokenizer.vocab_size,
             0x0e7a3,
         );
-        let st = ClState { seq: fam.max_seq, transform: SeqTransform::None, pool_pct: 1.0 };
+        let st =
+            ClState { seq: fam.max_seq, transform: SeqTransform::None, pool_pct: 1.0, pdd_frac: 0.0 };
         (0..self.eval_batches)
             .map(|_| loader.next_batch(fam.max_seq, &st))
             .collect()

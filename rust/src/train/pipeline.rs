@@ -193,6 +193,27 @@ impl BatchPipeline {
     pub fn pool_stats(&self) -> (u64, u64) {
         self.pool.stats()
     }
+
+    /// Tear the pipeline down and recover the loader, with its sequential
+    /// planning state exactly where the delivered stream left it. Used at
+    /// loss-signal epoch boundaries: the trainer drains one segment's
+    /// batches, recovers the loader, republishes scores, and spawns the
+    /// next segment's pipeline. Grab [`BatchPipeline::stats`] first — the
+    /// consumer-side counters die with the pipeline.
+    pub fn into_loader(mut self) -> crate::Result<LoaderKind> {
+        self.q.stop();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Keep one reference past Drop (which re-stops the queue and joins
+        // the now-empty worker list), then unwrap sole ownership.
+        let q = self.q.clone();
+        drop(self);
+        match Arc::try_unwrap(q) {
+            Ok(q) => Ok(q.into_state()),
+            Err(_) => anyhow::bail!("pipeline queue still shared after worker join"),
+        }
+    }
 }
 
 impl Drop for BatchPipeline {

@@ -339,6 +339,7 @@ mod tests {
             targets: (0..n as i32).map(|i| 6 + (i + 3) % 400).collect(),
             loss_mask: vec![1.0; n],
             pad_mask: None,
+            dropped_rows: Vec::new(),
             data_tokens: n as u64,
         })
     }

@@ -23,13 +23,13 @@
 //! re-seeds the prewarm queue from the remaining schedule, and continues
 //! bit-identically to the uninterrupted run (`tests/checkpoint_resume.rs`).
 
-use crate::config::schema::{DispatchPolicy, LrBasis, PipelineConfig, Routing, RunConfig};
+use crate::config::schema::{DispatchPolicy, LrBasis, Metric, PipelineConfig, Routing, RunConfig};
 use crate::curriculum::loader::{AnyBatch, LmBatch, ShardPlan, VitBatch};
 use crate::curriculum::scheduler::{ClScheduler, ClState};
 use crate::curriculum::{BertLoader, GptLoader, VitLoader};
 use crate::lr::LrSchedule;
 use crate::ltd::schedule::kept_len;
-use crate::ltd::{ImportanceTracker, RandomDropper, TokenAccountant};
+use crate::ltd::{ImportanceTracker, LossSignalTracker, RandomDropper, TokenAccountant};
 use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_u32, KeyId, Mode, Route, Runtime};
 use crate::train::checkpoint::{self, Checkpoint};
 use crate::train::pipeline::{BatchPipeline, PipelineStats, StepSpec};
@@ -65,8 +65,13 @@ pub struct RunResult {
     pub steps: u64,
     /// Wall-clock seconds (the resumed segment only, when resuming).
     pub wall_secs: f64,
-    /// Data tokens consumed by the pipeline.
+    /// Data tokens that actually trained (physical pipeline consumption
+    /// minus tokens masked out by progressive data dropout) — the paper's
+    /// "Data (billion tokens)" column.
     pub data_tokens: u64,
+    /// Data tokens masked out by progressive data dropout (0 without PDD;
+    /// `data_tokens + pdd_dropped_tokens` is the physical consumption).
+    pub pdd_dropped_tokens: u64,
     /// Data-token-equivalent compute consumed (LR-decay basis).
     pub compute_tokens: f64,
     /// Fraction of compute saved vs processing every token everywhere.
@@ -167,6 +172,16 @@ impl LoaderKind {
             LoaderKind::Gpt(l) => l.core(),
             LoaderKind::Bert(l) => l.core(),
             LoaderKind::Vit(l) => l.core(),
+        }
+    }
+
+    /// Hand freshly published loss-signal difficulty scores to the
+    /// sampler (a no-op for samplers that ignore them, and for ViT).
+    pub fn set_epoch_scores(&mut self, scores: &[f64]) {
+        match self {
+            LoaderKind::Gpt(l) => l.set_epoch_scores(scores),
+            LoaderKind::Bert(l) => l.set_epoch_scores(scores),
+            LoaderKind::Vit(_) => {}
         }
     }
 }
@@ -271,6 +286,16 @@ impl BatchSource {
             BatchSource::Async(p) => p.stats(),
         }
     }
+
+    /// Tear the source down and recover the loader with its sequential
+    /// planning state exactly where the delivered stream left it (the
+    /// loss-signal epoch boundary: grab [`BatchSource::stats`] first).
+    fn into_loader(self) -> Result<LoaderKind> {
+        match self {
+            BatchSource::Sync { loader, .. } => Ok(loader),
+            BatchSource::Async(p) => p.into_loader(),
+        }
+    }
 }
 
 /// The step orchestrator: owns one run's full training state and drives
@@ -285,6 +310,7 @@ pub struct Trainer<'rt> {
     accountant: TokenAccountant,
     dropper: RandomDropper,
     importance: Option<ImportanceTracker>,
+    loss_signal: Option<LossSignalTracker>,
     state: Vec<xla::Literal>,
     n_state: usize,
     /// Fingerprint of the resolved plan, stamped into every snapshot.
@@ -308,8 +334,27 @@ impl<'rt> Trainer<'rt> {
         loader: LoaderKind,
         eval_set: EvalSet,
         mut importance: Option<ImportanceTracker>,
+        mut loss_signal: Option<LossSignalTracker>,
     ) -> Result<Trainer<'rt>> {
         run.validate()?;
+        // The loss-signal curriculum and its tracker come as a pair: the
+        // scheduler's difficulty source is the tracker, and an orphaned
+        // tracker would snapshot dead state into every checkpoint.
+        let wants_loss_signal = run.curriculum.iter().any(|c| matches!(c.metric, Metric::Loss));
+        if wants_loss_signal && loss_signal.is_none() {
+            bail!(
+                "{}: a loss-metric curriculum needs a LossSignalTracker \
+                 (TrainEnv wires one for LM families)",
+                run.label
+            );
+        }
+        if !wants_loss_signal && loss_signal.is_some() {
+            bail!(
+                "{}: a LossSignalTracker was provided but no schedule uses \
+                 the loss metric",
+                run.label
+            );
+        }
         let fam = rt.registry.family(&run.family)?.clone();
         let (schedule, budget, planned) = plan_schedule(rt, &run)?;
         // Paper §A.1(5): LR decays over exactly the total training token
@@ -342,6 +387,7 @@ impl<'rt> Trainer<'rt> {
                     schedule_fp,
                     n_state,
                     importance.as_ref().map(|t| t.n_ids()),
+                    loss_signal.as_ref().map(|t| t.n_ids()),
                 )
                 .with_context(|| format!("resuming from {path}"))?;
                 Some(ck)
@@ -432,6 +478,12 @@ impl<'rt> Trainer<'rt> {
                         .ok_or_else(|| anyhow!("validated: importance tracker present"))?
                         .restore(cum, seen)?;
                 }
+                if let Some((cum, seen, bnd_cum, bnd_seen)) = ck.loss_signal {
+                    loss_signal
+                        .as_mut()
+                        .ok_or_else(|| anyhow!("validated: loss-signal tracker present"))?
+                        .restore(cum, seen, bnd_cum, bnd_seen)?;
+                }
                 (
                     checkpoint::state_from_tensors(&ck.state)?,
                     TokenAccountant::from_raw(ck.accountant),
@@ -453,6 +505,7 @@ impl<'rt> Trainer<'rt> {
             accountant,
             dropper,
             importance,
+            loss_signal,
             state,
             n_state,
             run,
@@ -501,17 +554,36 @@ impl<'rt> Trainer<'rt> {
         let mut checkpoints_written = 0u64;
 
         let mut loader = self.loader.take().expect("trainer runs once");
+        // Loss-signal epoch length: > 0 splits the run into segments, each
+        // sampled under the scores published at its opening boundary.
+        let epoch = loss_epoch_len(&self.run);
+        if let (Some(tr), true) = (self.loss_signal.as_mut(), start > 0) {
+            // Resuming exactly on an epoch boundary: the interrupted run
+            // published at the *top* of this step (after the snapshot was
+            // cut), so fold the live accumulators into the boundary copy
+            // first. Mid-epoch, the restored boundary copy already holds
+            // the scores the segment samples under.
+            if epoch > 0 && start as u64 % epoch == 0 {
+                tr.publish();
+            }
+            loader.set_epoch_scores(&tr.scores());
+        }
         // Fast-forward the already-executed prefix: replay only the cheap,
         // sequential *planning* stage (sampler draws, mask-seed counters,
         // the ViT cursor) so every loader RNG stream sits exactly where
         // the interrupted run left it — no batch is materialized and no
-        // step re-executed. The dispatch histogram is re-derived from the
-        // plan so full-run observables stay comparable.
+        // step re-executed. (The sampler's RNG consumption depends only on
+        // the prefix bound sequence, never on sample order, so replaying
+        // under the final scores is exact.) The dispatch histogram is
+        // re-derived from the plan so full-run observables stay comparable.
         for sr in &self.schedule[..start] {
             *dispatch.entry(sr.route.key).or_default() += 1;
             let _ = loader.plan_next(sr.route.seq, &sr.cl);
         }
-        let mut source = BatchSource::new(loader, &self.schedule[start..], &self.run.pipeline);
+        let mut seg_end = segment_end(start as u64, epoch, self.run.total_steps);
+        let mut source =
+            BatchSource::new(loader, &self.schedule[start..seg_end as usize], &self.run.pipeline);
+        let mut loader_stats = PipelineStats::default();
 
         // Data-parallel replica engine (None = fused single-instance path).
         let mut engine = if self.run.n_replicas > 0 {
@@ -537,6 +609,25 @@ impl<'rt> Trainer<'rt> {
         let mut delta = DeltaTrack { base: None, since_full: 0 };
 
         for step in start as u64..self.run.total_steps {
+            if step == seg_end {
+                // Loss-signal epoch boundary: drain the finished segment,
+                // recover the loader with its planning state intact,
+                // publish the freshly accumulated difficulty scores and
+                // spawn the next segment's source under the new ordering.
+                let s = source.stats();
+                loader_stats.stall_secs += s.stall_secs;
+                loader_stats.build_secs += s.build_secs;
+                let mut loader = source.into_loader()?;
+                let tr = self.loss_signal.as_mut().expect("segments imply a tracker");
+                tr.publish();
+                loader.set_epoch_scores(&tr.scores());
+                seg_end = segment_end(step, epoch, self.run.total_steps);
+                source = BatchSource::new(
+                    loader,
+                    &self.schedule[step as usize..seg_end as usize],
+                    &self.run.pipeline,
+                );
+            }
             let sr = &self.schedule[step as usize];
             let route = &sr.route;
             *dispatch.entry(route.key).or_default() += 1;
@@ -552,17 +643,18 @@ impl<'rt> Trainer<'rt> {
                 .at_state(self.accountant.compute_tokens(), step);
 
             let batch = source.next(sr)?;
-            let (rows, tokens_for_importance) = match &batch {
+            let (rows, tokens_for_trackers) = match &batch {
                 AnyBatch::Lm(b) => {
-                    let toks = self
-                        .importance
-                        .is_some()
+                    let toks = (self.importance.is_some() || self.loss_signal.is_some())
                         .then(|| (b.tokens.clone(), b.rows));
                     (b.rows, toks)
                 }
                 AnyBatch::Vit(b) => (b.rows, None),
             };
-            debug_assert_eq!(batch.data_tokens(), (rows * route.seq) as u64);
+            // PDD masks rows out in place, so a batch may train fewer data
+            // tokens than it physically carries — never more.
+            let batch_data_tokens = batch.data_tokens();
+            debug_assert!(batch_data_tokens <= (rows * route.seq) as u64);
 
             // The step's keep-index literal — one shared set per step,
             // identical on every rank (the dropper stream and the
@@ -580,7 +672,7 @@ impl<'rt> Trainer<'rt> {
                             .importance
                             .as_ref()
                             .ok_or_else(|| anyhow!("TokenBypass needs an ImportanceTracker"))?;
-                        let (toks, rows) = tokens_for_importance
+                        let (toks, rows) = tokens_for_trackers
                             .as_ref()
                             .ok_or_else(|| anyhow!("TokenBypass needs token batches"))?;
                         let mut out = Vec::new();
@@ -679,8 +771,17 @@ impl<'rt> Trainer<'rt> {
                 route.keep,
                 if dropping { n_mid } else { 0 },
             );
+            let pdd_masked = (rows * route.seq) as u64 - batch_data_tokens;
+            if pdd_masked > 0 {
+                self.accountant.record_pdd_dropped(pdd_masked);
+            }
             if let (Some(tr), Some((toks, _))) =
-                (self.importance.as_mut(), tokens_for_importance.as_ref())
+                (self.importance.as_mut(), tokens_for_trackers.as_ref())
+            {
+                tr.update(toks, loss);
+            }
+            if let (Some(tr), Some((toks, _))) =
+                (self.loss_signal.as_mut(), tokens_for_trackers.as_ref())
             {
                 tr.update(toks, loss);
             }
@@ -736,7 +837,9 @@ impl<'rt> Trainer<'rt> {
                 });
             }
         }
-        let loader_stats = source.stats();
+        let s = source.stats();
+        loader_stats.stall_secs += s.stall_secs;
+        loader_stats.build_secs += s.build_secs;
         drop(source);
         let (allreduce_secs, rank_imbalance) = engine
             .as_ref()
@@ -768,7 +871,8 @@ impl<'rt> Trainer<'rt> {
             family: self.run.family.clone(),
             steps: self.run.total_steps,
             wall_secs: wall0.elapsed().as_secs_f64(),
-            data_tokens: self.accountant.data_tokens,
+            data_tokens: self.accountant.trained_data_tokens(),
+            pdd_dropped_tokens: self.accountant.pdd_dropped_tokens(),
             compute_tokens: self.accountant.compute_tokens(),
             saving_ratio: self.accountant.saving_ratio(),
             final_eval_loss,
@@ -855,6 +959,7 @@ impl<'rt> Trainer<'rt> {
             accountant: self.accountant.raw(),
             dropper_rng: self.dropper.rng_raw(),
             importance: self.importance.as_ref().map(|t| t.snapshot()),
+            loss_signal: self.loss_signal.as_ref().map(|t| t.snapshot()),
             step_losses: step_losses.to_vec(),
             curve: curve.to_vec(),
         })
@@ -932,6 +1037,28 @@ pub(crate) fn push_vit_batch(
     Ok(())
 }
 
+/// Epoch length (in steps) of the loss-signal curriculum: the loss-metric
+/// schedule republishes difficulty scores every quarter of its pacing
+/// budget. 0 = no loss-metric curriculum, no segmentation.
+fn loss_epoch_len(run: &RunConfig) -> u64 {
+    run.curriculum
+        .iter()
+        .find(|c| matches!(c.metric, Metric::Loss))
+        .map(|c| c.total_steps.div_ceil(4).max(1))
+        .unwrap_or(0)
+}
+
+/// End (exclusive) of the loss-signal segment containing `step`: the next
+/// absolute multiple of `epoch` capped at `total` (so boundaries stay
+/// fixed under resume and time-slicing), or `total` when `epoch == 0`.
+fn segment_end(step: u64, epoch: u64, total: u64) -> u64 {
+    if epoch == 0 {
+        total
+    } else {
+        total.min((step / epoch + 1) * epoch)
+    }
+}
+
 fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         0.0
@@ -970,7 +1097,7 @@ pub fn plan_schedule(
     run: &RunConfig,
 ) -> Result<(Vec<StepRoute>, f64, std::collections::BTreeSet<String>)> {
     let fam = rt.registry.family(&run.family)?.clone();
-    let scheduler = ClScheduler::new(&run.curriculum, fam.max_seq)?;
+    let scheduler = ClScheduler::with_pdd(&run.curriculum, fam.max_seq, run.pdd)?;
     let mut acct = TokenAccountant::new(fam.n_layers);
     let mut planned = std::collections::BTreeSet::new();
     let mut schedule = Vec::with_capacity(run.total_steps as usize);
@@ -1042,6 +1169,21 @@ mod tests {
         let h = r(2.0, 0.5).loader_hidden_fraction();
         assert!((h - 0.75).abs() < 1e-12);
         assert!((0.0..=1.0).contains(&h));
+    }
+
+    #[test]
+    fn segment_boundaries_are_absolute_multiples_of_the_epoch() {
+        // no loss-metric curriculum: one segment covering the whole run
+        assert_eq!(segment_end(0, 0, 10), 10);
+        assert_eq!(segment_end(7, 0, 10), 10);
+        // epoch 4: boundaries at 4, 8, capped at total — and a mid-epoch
+        // resume lands in the segment its step belongs to, not a shifted one
+        assert_eq!(segment_end(0, 4, 10), 4);
+        assert_eq!(segment_end(3, 4, 10), 4);
+        assert_eq!(segment_end(4, 4, 10), 8);
+        assert_eq!(segment_end(5, 4, 10), 8);
+        assert_eq!(segment_end(8, 4, 10), 10);
+        assert_eq!(segment_end(9, 4, 10), 10);
     }
 
     #[test]

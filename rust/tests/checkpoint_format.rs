@@ -1,7 +1,7 @@
 //! Byte-stability net for the checkpoint format (ISSUE 4 satellite).
 //!
 //! A fixed fixture snapshot must encode to the exact bytes pinned in
-//! `tests/goldens/checkpoint_v1.txt`. Any layout change — header keys,
+//! `tests/goldens/checkpoint_v2.txt`. Any layout change — header keys,
 //! section order, field widths — moves the fingerprint, and the only
 //! legitimate response is bumping `FORMAT_VERSION` (old files must not be
 //! misread as the new layout) and regenerating deliberately with
@@ -23,7 +23,10 @@ use dsde::train::checkpoint::{fnv1a, Checkpoint, Engine, TensorSnap, FORMAT_VERS
 use dsde::train::CurvePoint;
 use std::path::PathBuf;
 
-/// The frozen v1 fixture. Do not edit casually: it IS the format witness.
+/// The frozen v2 fixture. Do not edit casually: it IS the format witness.
+/// It exercises every optional section: importance (TokenBypass) and the
+/// loss-signal curriculum tracker added in version 2, alongside the
+/// widened 5-counter accountant.
 fn fixture() -> Checkpoint {
     Checkpoint {
         family: "gpt".into(),
@@ -36,19 +39,20 @@ fn fixture() -> Checkpoint {
             TensorSnap { dims: vec![2, 2], data: vec![1.0, -2.5, 0.0, 3.25] },
             TensorSnap { dims: vec![3], data: vec![0.5, 0.25, -0.125] },
         ],
-        accountant: [3, 1536, 6144, 4],
+        accountant: [3, 1536, 6144, 4, 128],
         dropper_rng: (0xdead_beef_0000_0001, 0x0000_0000_0000_02ff),
         importance: Some((vec![0.5, 1.5], vec![7, 9])),
+        loss_signal: Some((vec![0.25, 2.5], vec![3, 11], vec![0.125, 1.75], vec![2, 9])),
         step_losses: vec![5.5, 5.25, 5.0],
         curve: vec![CurvePoint { step: 2, compute_tokens: 1024.0, eval_loss: 5.125 }],
     }
 }
 
 fn golden_path() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens/checkpoint_v1.txt")
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/goldens/checkpoint_v2.txt")
 }
 
-const HEADER: &str = "# dsde checkpoint wire-format golden (format version 1)\n\
+const HEADER: &str = "# dsde checkpoint wire-format golden (format version 2)\n\
 # Byte length and FNV-1a of the fixed fixture snapshot in\n\
 # tests/checkpoint_format.rs. If these move, the on-disk layout changed:\n\
 # bump train::checkpoint::FORMAT_VERSION and regenerate with\n\
@@ -56,7 +60,7 @@ const HEADER: &str = "# dsde checkpoint wire-format golden (format version 1)\n\
 
 #[test]
 fn encoded_bytes_match_golden() {
-    assert_eq!(FORMAT_VERSION, 1, "golden below pins version 1 — regenerate for a new version");
+    assert_eq!(FORMAT_VERSION, 2, "golden below pins version 2 — regenerate for a new version");
     let bytes = fixture().encode();
     let rendered = format!("{HEADER}len {}\nfnv {:016x}\n", bytes.len(), fnv1a(&bytes));
 
@@ -65,7 +69,7 @@ fn encoded_bytes_match_golden() {
     if update || !path.exists() {
         assert!(
             update || std::env::var_os("GITHUB_ACTIONS").is_none(),
-            "tests/goldens/checkpoint_v1.txt missing on CI — bootstrap locally and commit it"
+            "tests/goldens/checkpoint_v2.txt missing on CI — bootstrap locally and commit it"
         );
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(&path, &rendered).unwrap();

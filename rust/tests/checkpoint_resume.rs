@@ -65,6 +65,14 @@ fn voc() -> ClConfig {
     ClConfig::new(Metric::Voc, Bound::Percentile(0.05), Bound::Percentile(1.0), STEPS)
 }
 
+fn loss_signal() -> ClConfig {
+    ClConfig::new(Metric::Loss, Bound::Percentile(0.25), Bound::Percentile(1.0), STEPS)
+}
+
+fn pdd() -> Option<PddConfig> {
+    Some(PddConfig::new(0.0, 0.5, 4, (STEPS as f64 * 0.8) as u64))
+}
+
 fn ltd(r_start: usize) -> Routing {
     Routing::RandomLtd(LtdConfig::mslg(r_start, STEPS))
 }
@@ -120,6 +128,7 @@ fn assert_bit_identical(label: &str, reference: &RunResult, r: &RunResult) {
         "{label}: final eval"
     );
     assert_eq!(reference.data_tokens, r.data_tokens, "{label}: data tokens");
+    assert_eq!(reference.pdd_dropped_tokens, r.pdd_dropped_tokens, "{label}: pdd accounting");
     assert_eq!(reference.compute_tokens, r.compute_tokens, "{label}: compute tokens");
     assert_eq!(reference.dispatch, r.dispatch, "{label}: dispatch histogram");
     assert_eq!(reference.final_accuracy, r.final_accuracy, "{label}: accuracy");
@@ -209,6 +218,86 @@ fn bert_seqtru_ltd() {
 fn bert_voc_bypass() {
     let env = env();
     check_case(&env, case("bert", "bert-voc+bypass", vec![voc()], bypass(32)), &[true], &[0, 2]);
+}
+
+// ---- MoE (first-class family: CL × LTD/bypass) ---------------------------
+
+#[test]
+fn moe_seqtru_ltd() {
+    let env = env();
+    check_case(
+        &env,
+        case("moe", "moe-seqtru+ltd", vec![seqtru(64)], ltd(16)),
+        &[true, false],
+        &[0, 2],
+    );
+}
+
+#[test]
+fn moe_voc_bypass() {
+    let env = env();
+    check_case(&env, case("moe", "moe-voc+bypass", vec![voc()], bypass(32)), &[true], &[0, 2]);
+}
+
+// ---- New sampler policies: PDD and the loss-signal curriculum ------------
+
+#[test]
+fn gpt_pdd_ltd() {
+    let env = env();
+    let mut c = case("gpt", "gpt-pdd+seqtru+ltd", vec![seqtru(64)], ltd(16));
+    c.pdd = pdd();
+    check_case(&env, c, &[true, false], &[0, 2]);
+}
+
+#[test]
+fn moe_loss_signal_pdd() {
+    let env = env();
+    let mut c = case("moe", "moe-loss-signal+pdd", vec![loss_signal()], Routing::None);
+    c.pdd = pdd();
+    check_case(&env, c, &[true], &[0, 2]);
+}
+
+#[test]
+fn bert_loss_signal() {
+    // SAVE_AT = 5 lands mid-segment (the loss-signal epoch here is
+    // ceil(10/4) = 3): resume must replay the live accumulators through
+    // steps 3..5 on top of the restored boundary copy.
+    let env = env();
+    check_case(
+        &env,
+        case("bert", "bert-loss-signal", vec![loss_signal()], Routing::None),
+        &[true],
+        &[0, 2],
+    );
+}
+
+#[test]
+fn loss_signal_resume_exactly_at_an_epoch_boundary() {
+    // Epoch R = ceil(10/4) = 3: snapshots at steps 3/6/9 sit exactly on
+    // publish boundaries. The boundary publish happens at the TOP of the
+    // next step — after the snapshot was cut — so the resumed run must
+    // re-publish before replaying. Resume from each boundary snapshot.
+    let env = env();
+    let base = case("gpt", "gpt-loss-signal-boundary", vec![loss_signal()], Routing::None);
+    let reference = env.run(with_knobs(&base, 0, true)).expect("reference");
+
+    let dir = temp_dir("ls-boundary");
+    let mut saving = with_knobs(&base, 0, true);
+    saving.save_every = 3;
+    saving.save_dir = dir.to_string_lossy().into_owned();
+    let saved = env.run(saving).expect("saving run");
+    assert_bit_identical("loss-signal boundary [saving run]", &reference, &saved);
+
+    for at in [3u64, 6, 9] {
+        let mut resuming = with_knobs(&base, 0, true);
+        resuming.resume = Some(
+            dir.join(format!("step{at:06}.ckpt")).to_string_lossy().into_owned(),
+        );
+        let resumed = env.run(resuming).unwrap_or_else(|e| panic!("resume @{at}: {e:#}"));
+        assert_eq!(resumed.resumed_at, at);
+        assert_bit_identical(&format!("loss-signal resume @{at}"), &reference, &resumed);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 // ---- ViT (random-LTD only, as in the paper) ------------------------------

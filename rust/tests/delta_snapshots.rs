@@ -108,8 +108,34 @@ fn assert_bit_identical(label: &str, reference: &RunResult, r: &RunResult) {
         "{label}: final eval"
     );
     assert_eq!(reference.data_tokens, r.data_tokens, "{label}: data tokens");
+    assert_eq!(reference.pdd_dropped_tokens, r.pdd_dropped_tokens, "{label}: pdd accounting");
     assert_eq!(reference.compute_tokens, r.compute_tokens, "{label}: compute tokens");
     assert_eq!(reference.dispatch, r.dispatch, "{label}: dispatch histogram");
+}
+
+/// One full+delta save→resume round for an arbitrary case: the resumed
+/// runs (from a mid-chain DELTA and from its full base) must match the
+/// uninterrupted reference bit for bit.
+fn check_delta_chain(env: &TrainEnv, cfg: RunConfig, tag: &str) {
+    let reference = env.run(cfg.clone()).expect("reference");
+    let dir = temp_dir(tag);
+    let mut saving = cfg.clone();
+    saving.save_every = SAVE_EVERY;
+    saving.delta_every = DELTA_EVERY;
+    saving.save_dir = dir.to_string_lossy().into_owned();
+    let saved = env.run(saving).expect("saving run");
+    assert_bit_identical(&format!("{tag} [saving run]"), &reference, &saved);
+
+    for (step, resumed_kind) in [(10u64, "delta"), (8, "full")] {
+        let mut resuming = cfg.clone();
+        resuming.resume = Some(ckpt(&dir, step).to_string_lossy().into_owned());
+        let resumed = env
+            .run(resuming)
+            .unwrap_or_else(|e| panic!("{tag}: resume from {resumed_kind} @{step}: {e:#}"));
+        assert_eq!(resumed.resumed_at, step);
+        assert_bit_identical(&format!("{tag} [resumed from {resumed_kind} @{step}]"), &reference, &resumed);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Flip one byte in the middle of a snapshot so its FNV re-hash fails.
@@ -155,6 +181,46 @@ fn resume_from_delta_chain_is_bit_identical() {
     assert_eq!(resumed.resumed_at, 8);
     assert_bit_identical("resumed from full @8", &reference, &resumed);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- 1b. the new policy matrix through the same chain oracle -------------
+
+#[test]
+fn moe_delta_chain_is_bit_identical() {
+    // moe as a first-class family: CL seqtru + random-LTD under the
+    // full+delta cadence, on the fused path and at dp2.
+    let env = env();
+    let mut cfg = base_case();
+    cfg.family = "moe".into();
+    cfg.label = "moe-delta-chain".into();
+    check_delta_chain(&env, cfg.clone(), "moe");
+    cfg.n_replicas = 2;
+    check_delta_chain(&env, cfg, "moe-dp2");
+}
+
+#[test]
+fn pdd_delta_chain_is_bit_identical() {
+    let env = env();
+    let mut cfg = base_case();
+    cfg.label = "pdd-delta-chain".into();
+    cfg.pdd = Some(PddConfig::new(0.0, 0.5, 4, (STEPS as f64 * 0.8) as u64));
+    check_delta_chain(&env, cfg, "pdd");
+}
+
+#[test]
+fn loss_signal_delta_chain_is_bit_identical() {
+    // The loss-signal tracker arrays ride in the always-complete
+    // non-tensor sections of every DELTA record; a resume from a delta
+    // must restore them exactly (epoch ceil(12/4) = 3: the step-10
+    // resume point sits one step past the step-9 publish boundary).
+    let env = env();
+    let mut cfg = base_case();
+    cfg.family = "moe".into();
+    cfg.label = "moe-loss-signal-delta".into();
+    cfg.curriculum =
+        vec![ClConfig::new(Metric::Loss, Bound::Percentile(0.25), Bound::Percentile(1.0), STEPS)];
+    cfg.routing = Routing::None;
+    check_delta_chain(&env, cfg, "moe-loss-signal");
 }
 
 // ---- 2. broken base demotes the chain ------------------------------------

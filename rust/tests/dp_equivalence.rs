@@ -51,6 +51,14 @@ fn voc() -> ClConfig {
     ClConfig::new(Metric::Voc, Bound::Percentile(0.05), Bound::Percentile(1.0), STEPS)
 }
 
+fn loss_signal() -> ClConfig {
+    ClConfig::new(Metric::Loss, Bound::Percentile(0.25), Bound::Percentile(1.0), STEPS)
+}
+
+fn pdd() -> Option<PddConfig> {
+    Some(PddConfig::new(0.0, 0.5, 4, (STEPS as f64 * 0.8) as u64))
+}
+
 fn ltd(r_start: usize) -> Routing {
     Routing::RandomLtd(LtdConfig::mslg(r_start, STEPS))
 }
@@ -112,6 +120,7 @@ fn assert_rank_equivalent(label: &str, reference: &RunResult, r: &RunResult) {
     }
     assert_eq!(reference.final_eval_loss.to_bits(), r.final_eval_loss.to_bits(), "{label}");
     assert_eq!(reference.data_tokens, r.data_tokens, "{label}");
+    assert_eq!(reference.pdd_dropped_tokens, r.pdd_dropped_tokens, "{label}: pdd accounting");
     assert_eq!(reference.compute_tokens, r.compute_tokens, "{label}");
     assert_eq!(reference.dispatch, r.dispatch, "{label}: dispatch histogram");
     assert_eq!(reference.final_accuracy, r.final_accuracy, "{label}");
@@ -195,6 +204,62 @@ fn bert_seqreo_ltd() {
 fn bert_voc_bypass() {
     let env = env();
     check_case(&env, case("bert", "bert-voc+bypass", vec![voc()], bypass(32)), &[true]);
+}
+
+// ---- MoE: first-class family — CL × LTD/bypass, same oracle -------------
+
+#[test]
+fn moe_baseline_plain() {
+    let env = env();
+    check_case(&env, case("moe", "moe-baseline", vec![], Routing::None), &[true, false]);
+}
+
+#[test]
+fn moe_seqtru_ltd() {
+    let env = env();
+    check_case(&env, case("moe", "moe-seqtru+ltd", vec![seqtru(64)], ltd(16)), &[true, false]);
+}
+
+#[test]
+fn moe_voc_bypass() {
+    let env = env();
+    check_case(&env, case("moe", "moe-voc+bypass", vec![voc()], bypass(32)), &[true]);
+}
+
+// ---- new sampler policies: PDD and the loss-signal curriculum -----------
+
+#[test]
+fn gpt_pdd_composed_ltd() {
+    let env = env();
+    let mut c = case("gpt", "gpt-pdd+seqtru+ltd", vec![seqtru(64)], ltd(16));
+    c.pdd = pdd();
+    check_case(&env, c, &[true, false]);
+}
+
+#[test]
+fn moe_pdd_dropout() {
+    let env = env();
+    let mut c = case("moe", "moe-pdd", vec![], Routing::None);
+    c.pdd = pdd();
+    check_case(&env, c, &[true]);
+}
+
+#[test]
+fn gpt_loss_signal_curriculum() {
+    let env = env();
+    check_case(&env, case("gpt", "gpt-loss-signal", vec![loss_signal()], Routing::None), &[
+        true, false,
+    ]);
+}
+
+#[test]
+fn moe_loss_signal_pdd_composed() {
+    // the full composition: loss-signal difficulty + progressive dropout
+    // + random-LTD on the expert family
+    let env = env();
+    let mut c = case("moe", "moe-loss-signal+pdd+ltd", vec![loss_signal()], ltd(16));
+    c.pdd = pdd();
+    check_case(&env, c, &[true]);
 }
 
 // ---- ViT: random-LTD only (no curriculum in the paper's ViT runs) -------

@@ -4,7 +4,7 @@
 //! replica count (`n_replicas = 3` → uneven 3/3/2 shards).
 
 use dsde::config::schema::DispatchPolicy;
-use dsde::exp::cases::exact_dispatch_cases;
+use dsde::exp::cases::{exact_dispatch_cases, moe_exact_case};
 use dsde::runtime::Registry;
 use dsde::train::TrainEnv;
 
@@ -39,6 +39,36 @@ fn exact_dispatch_runs_off_grid_sequences_end_to_end() {
         r.dispatch.keys().collect::<Vec<_>>()
     );
     // and they were synthesized/compiled by the JIT cache, not pre-listed
+    assert!(r.cache_misses + r.prewarmed_compiles > 0);
+}
+
+#[test]
+fn moe_exact_dispatch_runs_off_grid_sequences_end_to_end() {
+    // The moe mirror of the gpt off-grid case: the seqtru walk visits
+    // sequence lengths no moe bucket carries, so verbatim dispatch must
+    // synthesize moe grad/apply specializations on the fly — the test-gap
+    // the family promotion closes (moe variants used to be absent from
+    // the JIT path entirely).
+    let env = env();
+    let r = env.run(moe_exact_case(40, 64, 7)).expect("moe exact run completes");
+    assert_eq!(r.steps, 40);
+    assert!(r.final_eval_loss.is_finite());
+    assert!(r.step_losses.iter().all(|l| l.is_finite()));
+    let off_grid: Vec<&String> = r
+        .dispatch
+        .keys()
+        .filter(|name| !on_legacy_grid(&env.rt.registry, name))
+        .collect();
+    assert!(
+        !off_grid.is_empty(),
+        "expected off-grid moe specializations, dispatch was {:?}",
+        r.dispatch.keys().collect::<Vec<_>>()
+    );
+    // every specialization names the moe family, none fell back to gpt
+    assert!(
+        off_grid.iter().all(|name| name.contains("moe")),
+        "off-grid artifacts crossed families: {off_grid:?}"
+    );
     assert!(r.cache_misses + r.prewarmed_compiles > 0);
 }
 

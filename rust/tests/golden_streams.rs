@@ -20,7 +20,11 @@ use dsde::analysis::metrics;
 use dsde::config::schema::*;
 use dsde::curriculum::loader::{AnyBatch, BatchPlan};
 use dsde::curriculum::scheduler::ClScheduler;
-use dsde::curriculum::{BertLoader, GptLoader, PoolSampler, Sampler, UniformSampler, VitLoader};
+use dsde::curriculum::pdd::pdd_seed;
+use dsde::curriculum::{
+    BertLoader, GptLoader, LossSignalSampler, PoolSampler, Sampler, SampleTokens, UniformSampler,
+    VitLoader,
+};
 use dsde::data::corpus::{Corpus, CorpusConfig};
 use dsde::data::dataset::{BertDataset, GptDataset, VitDataset};
 use dsde::data::tokenizer::Tokenizer;
@@ -97,8 +101,13 @@ fn hash_batch(h: &mut Fnv, b: &AnyBatch) {
 
 /// Drain N_STEPS plan+materialize rounds; return (sampler ids in draw
 /// order, id-stream hash, batch-content hash).
-fn fingerprint(mut loader: LoaderKind, schedules: &[ClConfig], max_seq: usize) -> (Vec<u64>, u64, u64) {
-    let sched = ClScheduler::new(schedules, max_seq).unwrap();
+fn fingerprint(
+    mut loader: LoaderKind,
+    schedules: &[ClConfig],
+    max_seq: usize,
+    pdd: Option<PddConfig>,
+) -> (Vec<u64>, u64, u64) {
+    let sched = ClScheduler::with_pdd(schedules, max_seq, pdd).unwrap();
     let core = loader.core();
     let mut ids: Vec<u64> = Vec::new();
     let mut id_hash = Fnv::new();
@@ -114,6 +123,11 @@ fn fingerprint(mut loader: LoaderKind, schedules: &[ClConfig], max_seq: usize) -
                 }
                 if let Some(ms) = p.mask_seed {
                     id_hash.u64v(ms);
+                }
+                // PDD row verdicts ride the id stream too (empty — and
+                // hash-neutral — whenever no dropout schedule is set).
+                for &d in &p.dropped {
+                    id_hash.u32(d);
                 }
             }
             BatchPlan::Vit(p) => {
@@ -160,48 +174,109 @@ fn golden_lines() -> Vec<String> {
     let uni = |seed: u64, n: usize| -> Box<dyn Sampler> { Box::new(UniformSampler::new(n, seed)) };
 
     let mut lines = Vec::new();
-    let mut push = |name: &str, loader: LoaderKind, schedules: &[ClConfig]| {
-        let (ids, ih, bh) = fingerprint(loader, schedules, max_seq);
+    let mut push = |name: &str, loader: LoaderKind, schedules: &[ClConfig], pdd: Option<PddConfig>| {
+        let (ids, ih, bh) = fingerprint(loader, schedules, max_seq, pdd);
         lines.push(render_line(name, &ids, ih, bh));
     };
 
     // GPT: plain + every applicable transform (seqtru, seqres, voc, composed)
-    push("gpt/plain", LoaderKind::Gpt(GptLoader::new(gpt.clone(), uni(9, n_gpt), 8)), &[]);
+    push("gpt/plain", LoaderKind::Gpt(GptLoader::new(gpt.clone(), uni(9, n_gpt), 8)), &[], None);
     push(
         "gpt/seqtru",
         LoaderKind::Gpt(GptLoader::new(gpt.clone(), uni(9, n_gpt), 8)),
         std::slice::from_ref(&seqtru),
+        None,
     );
     push(
         "gpt/seqres",
         LoaderKind::Gpt(GptLoader::new(gpt.clone(), uni(9, n_gpt), 8)),
         std::slice::from_ref(&seqres),
+        None,
     );
     push(
         "gpt/voc",
         LoaderKind::Gpt(GptLoader::new(gpt.clone(), Box::new(PoolSampler::new(gpt_voc.clone(), 9)), 8)),
         std::slice::from_ref(&voc),
+        None,
     );
     push(
         "gpt/seqtru+voc",
         LoaderKind::Gpt(GptLoader::new(gpt.clone(), Box::new(PoolSampler::new(gpt_voc, 9)), 8)),
         &[seqtru.clone(), voc.clone()],
+        None,
     );
 
     // BERT: plain, seqtru, seqreo, voc
     let mk_bert = |s: Box<dyn Sampler>| LoaderKind::Bert(BertLoader::new(bert.clone(), s, 8, tok.vocab_size, 33));
-    push("bert/plain", mk_bert(uni(21, n_bert)), &[]);
-    push("bert/seqtru", mk_bert(uni(21, n_bert)), std::slice::from_ref(&seqtru));
+    push("bert/plain", mk_bert(uni(21, n_bert)), &[], None);
+    push("bert/seqtru", mk_bert(uni(21, n_bert)), std::slice::from_ref(&seqtru), None);
     push(
         "bert/seqreo",
         mk_bert(Box::new(PoolSampler::new(bert_reo, 21))),
         std::slice::from_ref(&seqreo),
+        None,
     );
-    push("bert/voc", mk_bert(Box::new(PoolSampler::new(bert_voc, 21))), std::slice::from_ref(&voc));
+    push(
+        "bert/voc",
+        mk_bert(Box::new(PoolSampler::new(bert_voc, 21))),
+        std::slice::from_ref(&voc),
+        None,
+    );
 
     // ViT (cursor stream)
     let vit = Arc::new(VitDataset::new(16, 48, 10, 0.4, 3));
-    push("vit/plain", LoaderKind::Vit(VitLoader::new(vit, 8, 0)), &[]);
+    push("vit/plain", LoaderKind::Vit(VitLoader::new(vit, 8, 0)), &[], None);
+
+    // Progressive data dropout: the id stream is unchanged (membership is
+    // a pure hash, not a draw), but dropped-row verdicts and the zeroed
+    // batch rows are fingerprinted — a PDD keying/pacing drift moves both
+    // hashes here. Staircase reaches 50% dropped by step 16 of 24.
+    let pdd = Some(PddConfig::new(0.0, 0.5, 4, 16));
+    push(
+        "gpt/pdd",
+        LoaderKind::Gpt(GptLoader::new(gpt.clone(), uni(9, n_gpt), 8).with_pdd_seed(pdd_seed(9))),
+        &[],
+        pdd,
+    );
+    push(
+        "bert/pdd",
+        LoaderKind::Bert(
+            BertLoader::new(bert.clone(), uni(21, n_bert), 8, tok.vocab_size, 33)
+                .with_pdd_seed(pdd_seed(21)),
+        ),
+        &[],
+        pdd,
+    );
+
+    // Loss-signal curriculum: difficulty-ordered sampling from published
+    // per-token scores. A fixed dyadic score table stands in for the
+    // epoch-boundary publish, so the drawn id stream pins both the
+    // difficulty ordering and the pool-prefix pacing.
+    let loss = ClConfig::new(Metric::Loss, Bound::Percentile(0.25), Bound::Percentile(1.0), 16);
+    let scores: Vec<f64> =
+        (0..tok.vocab_size).map(|t| ((t * 7 + 3) % 11) as f64 / 8.0).collect();
+    let mut ls_loader = GptLoader::new(
+        gpt.clone(),
+        Box::new(LossSignalSampler::new(SampleTokens::Gpt(gpt.clone()), 9)),
+        8,
+    );
+    ls_loader.set_epoch_scores(&scores);
+    push("gpt/loss-signal", LoaderKind::Gpt(ls_loader), std::slice::from_ref(&loss), None);
+
+    // And the full composition the headline suites exercise.
+    let mut comp = GptLoader::new(
+        gpt.clone(),
+        Box::new(LossSignalSampler::new(SampleTokens::Gpt(gpt.clone()), 9)),
+        8,
+    )
+    .with_pdd_seed(pdd_seed(9));
+    comp.set_epoch_scores(&scores);
+    push(
+        "gpt/loss-signal+pdd",
+        LoaderKind::Gpt(comp),
+        std::slice::from_ref(&loss),
+        pdd,
+    );
 
     lines
 }
@@ -211,11 +286,12 @@ fn golden_path() -> PathBuf {
 }
 
 const HEADER: &str = "# dsde golden sampler/batch streams v1\n\
-# One line per (family × CL transform) loader: first 8 sampler ids, total\n\
-# drawn ids over 24 planned batches, FNV-1a hash of the full id stream\n\
-# (incl. BERT mask seeds), and FNV-1a hash of every materialized batch's\n\
-# bytes. Regenerate deliberately with DSDE_UPDATE_GOLDENS=1 and explain\n\
-# the stream movement in the commit message.\n";
+# One line per (family × sampler policy × CL transform) loader: first 8\n\
+# sampler ids, total drawn ids over 24 planned batches, FNV-1a hash of\n\
+# the full id stream (incl. BERT mask seeds and PDD dropped-row\n\
+# verdicts), and FNV-1a hash of every materialized batch's bytes.\n\
+# Regenerate deliberately with DSDE_UPDATE_GOLDENS=1 and explain the\n\
+# stream movement in the commit message.\n";
 
 #[test]
 fn sampler_and_batch_streams_match_goldens() {

@@ -170,6 +170,7 @@ fn prop_loader_batches_always_well_formed() {
                 seq,
                 transform,
                 pool_pct: rng.next_f64() * 0.99 + 0.01,
+                pdd_frac: 0.0,
             };
             let b = loader.next_batch(seq, &st);
             if b.tokens.len() != 8 * seq || b.targets.len() != 8 * seq {

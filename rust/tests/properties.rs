@@ -129,7 +129,7 @@ fn prop_seqres_preserves_and_seqtru_reduces_tokens() {
 
         // --- seqres: every sampled sequence is used in full (reshaped into
         // segs rows), so tokens used == sampled sequences × max_seq.
-        let st = ClState { seq, transform: SeqTransform::Reshape, pool_pct: 1.0 };
+        let st = ClState { seq, transform: SeqTransform::Reshape, pool_pct: 1.0, pdd_frac: 0.0 };
         let plan = loader.plan_batch(seq, &st);
         let segs = 64 / seq;
         let expect_ids = batch.div_ceil(segs);
@@ -153,7 +153,7 @@ fn prop_seqres_preserves_and_seqtru_reduces_tokens() {
 
         // --- seqtru: one sequence per row, truncated — strictly fewer
         // tokens used than sampled whenever seq < max_seq.
-        let st = ClState { seq, transform: SeqTransform::Truncate, pool_pct: 1.0 };
+        let st = ClState { seq, transform: SeqTransform::Truncate, pool_pct: 1.0, pdd_frac: 0.0 };
         let plan = loader.plan_batch(seq, &st);
         if plan.ids.len() != batch {
             return Err(format!("seqtru draws one id per row, got {}", plan.ids.len()));
@@ -259,7 +259,7 @@ fn prop_shard_slices_reassemble_global_batch() {
             8,
         );
         let seq = [8usize, 16, 32, 64][rng.gen_range(4) as usize];
-        let st = ClState { seq, transform: SeqTransform::Truncate, pool_pct: 1.0 };
+        let st = ClState { seq, transform: SeqTransform::Truncate, pool_pct: 1.0, pdd_frac: 0.0 };
         let b = loader.next_batch(seq, &st);
         let n_ranks = [1usize, 2, 3, 4, 5, 8][rng.gen_range(6) as usize];
         let plan = ShardPlan::new(b.rows, n_ranks);
@@ -389,6 +389,236 @@ fn prop_json_unrepresentable_integers_rejected_not_truncated() {
         let parsed = Json::parse(&format!("{edge}.0")).map_err(|e| format!("{e:#}"))?;
         if parsed.as_u64() != Some(edge) {
             return Err(format!("2^53 (exact in f64) was rejected: {parsed:?}"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Progressive data dropout + loss-signal curriculum (ISSUE 9): the new
+// sampler policies' algebra — the staircase fraction, the pure-hash kept
+// set, batch-level token conservation, and order-independent scoring.
+
+#[test]
+fn prop_pdd_fraction_monotone_and_clamped() {
+    property("pdd fraction monotone + clamped", 24, |rng| {
+        let f_start = rng.next_f64() * 0.5;
+        let f_end = f_start + rng.next_f64() * (0.99 - f_start);
+        let stages = 1 + rng.gen_range(9);
+        let total = 1 + rng.gen_range(150) as u64;
+        let sched = ClScheduler::with_pdd(
+            &[],
+            64,
+            Some(PddConfig::new(f_start, f_end, stages, total)),
+        )
+        .map_err(|e| format!("{e:#}"))?;
+        let mut prev = f64::MIN;
+        for step in 0..=(total + total / 2 + 2) {
+            let f = sched.state_at(step).pdd_frac;
+            if !(0.0..=1.0).contains(&f) || f < f_start - 1e-9 || f > f_end + 1e-9 {
+                return Err(format!(
+                    "pdd_frac {f} outside [{f_start}, {f_end}] at step {step}"
+                ));
+            }
+            if f < prev - 1e-12 {
+                return Err(format!("pdd_frac not monotone at step {step}: {f} < {prev}"));
+            }
+            prev = f;
+        }
+        // and holds at f_end once the schedule is exhausted
+        let f = sched.state_at(total.saturating_mul(10)).pdd_frac;
+        if (f - f_end).abs() > 1e-9 {
+            return Err(format!("pdd_frac {f} != f_end {f_end} past total_steps"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pdd_kept_set_deterministic_and_shrinks() {
+    use dsde::curriculum::pdd::{is_dropped, membership_value, pdd_seed};
+    property("pdd kept set deterministic + shrinking", 24, |rng| {
+        let seed = pdd_seed(rng.next_u64());
+        let n = 64 + rng.gen_range(192) as u64;
+        // a random monotone fraction ladder starting at 0 (nothing dropped)
+        let mut fracs = vec![0.0f64];
+        let mut f = 0.0;
+        for _ in 0..6 {
+            f = (f + rng.next_f64() * 0.2).min(1.0);
+            fracs.push(f);
+        }
+        let mut prev_kept: Vec<u64> = (0..n).collect();
+        for &frac in &fracs {
+            // membership is a pure function of (seed, id)
+            for id in 0..n {
+                if membership_value(seed, id) != membership_value(seed, id) {
+                    return Err(format!("membership_value({seed:#x}, {id}) not stable"));
+                }
+            }
+            let kept: Vec<u64> = (0..n).filter(|&id| !is_dropped(seed, id, frac)).collect();
+            let again: Vec<u64> = (0..n).filter(|&id| !is_dropped(seed, id, frac)).collect();
+            if kept != again {
+                return Err(format!("kept set not deterministic at frac {frac}"));
+            }
+            // once dropped, stays dropped: kept ⊆ previous kept
+            if !kept.iter().all(|id| prev_kept.binary_search(id).is_ok()) {
+                return Err(format!("a dropped id came back at frac {frac}"));
+            }
+            prev_kept = kept;
+        }
+        if fracs[fracs.len() - 1] > 0.3 {
+            // a different run seed must decorrelate the kept set
+            let other = pdd_seed(rng.next_u64());
+            if other != seed {
+                let f = fracs[fracs.len() - 1];
+                let differs = (0..n).any(|id| is_dropped(seed, id, f) != is_dropped(other, id, f));
+                if !differs {
+                    return Err("distinct seeds produced identical kept sets".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pdd_token_conservation_under_ltd() {
+    use dsde::curriculum::pdd::is_dropped;
+    let c = Corpus::generate(CorpusConfig { n_docs: 250, seed: 47, ..Default::default() });
+    let t = Tokenizer::from_corpus(&c);
+    let ds = Arc::new(GptDataset::build(&c, &t, 64));
+    let n = ds.n_samples();
+    property("pdd token conservation (+LTD)", 12, |rng| {
+        let batch = 8usize;
+        let seq = [16usize, 32, 64][rng.gen_range(3) as usize];
+        let pdd_seed = rng.next_u64();
+        let frac = rng.next_f64() * 0.9;
+        let mut loader = GptLoader::new(
+            ds.clone(),
+            Box::new(UniformSampler::new(n, rng.next_u64())),
+            batch,
+        )
+        .with_pdd_seed(pdd_seed);
+        let core: LoaderCore = loader.core();
+        let transform = if seq < 64 { SeqTransform::Truncate } else { SeqTransform::None };
+        let st = ClState { seq, transform, pool_pct: 1.0, pdd_frac: frac };
+
+        let ltd = LtdConfig::mslg(1 + rng.gen_range(48) as usize, 40);
+        let mut acct = TokenAccountant::new(4);
+        let mut expect_physical = 0u64;
+        let mut expect_pdd = 0u64;
+        for step in 0..6u64 {
+            let plan = loader.plan_batch(seq, &st);
+            // the plan's dropped rows are exactly the pure-hash membership
+            // verdicts on the drawn ids (one id per row here)
+            for (r, &id) in plan.ids.iter().enumerate() {
+                let planned = plan.dropped.binary_search(&(r as u32)).is_ok();
+                if planned != is_dropped(pdd_seed, id as u64, frac) {
+                    return Err(format!("row {r} (id {id}) disagrees with is_dropped"));
+                }
+            }
+            let b = match core.materialize(&BatchPlan::Lm(plan.clone()), None) {
+                dsde::curriculum::AnyBatch::Lm(b) => b,
+                _ => return Err("wrong batch kind".into()),
+            };
+            if b.dropped_rows != plan.dropped {
+                return Err("materialized dropped_rows differ from the plan".into());
+            }
+            // conservation: trained + dropped == physical, exactly
+            let physical = (b.rows * b.seq) as u64;
+            let dropped = (b.dropped_rows.len() * b.seq) as u64;
+            if b.data_tokens + dropped != physical {
+                return Err(format!(
+                    "data_tokens {} + dropped {dropped} != physical {physical}",
+                    b.data_tokens
+                ));
+            }
+            // dropped rows carry an all-zero loss mask; kept rows don't
+            for r in 0..b.rows {
+                let row = &b.loss_mask[r * b.seq..(r + 1) * b.seq];
+                let zeroed = row.iter().all(|&m| m == 0.0);
+                let is_dropped_row = b.dropped_rows.binary_search(&(r as u32)).is_ok();
+                if is_dropped_row != zeroed {
+                    return Err(format!(
+                        "row {r}: dropped={is_dropped_row} but mask zeroed={zeroed}"
+                    ));
+                }
+            }
+            // and the accountant keeps the same books when LTD composes in
+            let kept = kept_len(&ltd, step, seq);
+            acct.record(b.rows, b.seq, kept, 2);
+            acct.record_pdd_dropped(dropped);
+            expect_physical += physical;
+            expect_pdd += dropped;
+        }
+        if acct.trained_data_tokens() + acct.pdd_dropped_tokens() != expect_physical {
+            return Err(format!(
+                "accountant: trained {} + pdd-dropped {} != physical {expect_physical}",
+                acct.trained_data_tokens(),
+                acct.pdd_dropped_tokens()
+            ));
+        }
+        if acct.pdd_dropped_tokens() != expect_pdd {
+            return Err(format!(
+                "accountant pdd-dropped {} != per-batch sum {expect_pdd}",
+                acct.pdd_dropped_tokens()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_loss_signal_scores_permutation_stable() {
+    use dsde::ltd::LossSignalTracker;
+    property("loss-signal scores permutation-stable", 16, |rng| {
+        let n_ids = 8 + rng.gen_range(24) as usize;
+        // Dyadic losses (k/8) make every f64 sum exact, so reordering the
+        // update stream must reproduce bit-identical scores — the property
+        // the difficulty ordering's determinism rests on.
+        let updates: Vec<(Vec<i32>, f64)> = (0..20)
+            .map(|_| {
+                let toks: Vec<i32> = (0..4 + rng.gen_range(8) as usize)
+                    .map(|_| rng.gen_range(n_ids as u32 + 4) as i32) // some out of range
+                    .collect();
+                (toks, rng.gen_range(64) as f64 / 8.0)
+            })
+            .collect();
+        let mut order: Vec<usize> = (0..updates.len()).collect();
+        // Fisher–Yates off the property rng
+        for i in (1..order.len()).rev() {
+            order.swap(i, rng.gen_range(i as u32 + 1) as usize);
+        }
+        let mut a = LossSignalTracker::new(n_ids);
+        for (toks, loss) in &updates {
+            a.update(toks, *loss);
+        }
+        a.publish();
+        let mut b = LossSignalTracker::new(n_ids);
+        for &i in &order {
+            let (toks, loss) = &updates[i];
+            b.update(toks, *loss);
+        }
+        b.publish();
+        let (sa, sb) = (a.scores(), b.scores());
+        if sa.len() != n_ids || sb.len() != n_ids {
+            return Err("scores() length != n_ids".into());
+        }
+        for (i, (x, y)) in sa.iter().zip(&sb).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("score[{i}] depends on update order: {x} vs {y}"));
+            }
+        }
+        // unseen ids score 0 (never NaN), seen ids are the exact mean
+        for (i, s) in sa.iter().enumerate() {
+            if !s.is_finite() {
+                return Err(format!("score[{i}] = {s} is not finite"));
+            }
+        }
+        // publish() is a boundary cut: further updates don't move scores
+        a.update(&[0, 1, 2], 7.5);
+        if a.scores() != sa {
+            return Err("scores moved before the next publish()".into());
         }
         Ok(())
     });

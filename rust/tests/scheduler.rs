@@ -65,6 +65,14 @@ fn voc() -> ClConfig {
     ClConfig::new(Metric::Voc, Bound::Percentile(0.05), Bound::Percentile(1.0), STEPS)
 }
 
+fn loss_signal() -> ClConfig {
+    ClConfig::new(Metric::Loss, Bound::Percentile(0.25), Bound::Percentile(1.0), STEPS)
+}
+
+fn pdd() -> Option<PddConfig> {
+    Some(PddConfig::new(0.0, 0.5, 4, (STEPS as f64 * 0.8) as u64))
+}
+
 fn ltd(r_start: usize) -> Routing {
     Routing::RandomLtd(LtdConfig::mslg(r_start, STEPS))
 }
@@ -120,6 +128,7 @@ fn assert_bit_identical(label: &str, reference: &RunResult, r: &RunResult) {
         "{label}: final eval"
     );
     assert_eq!(reference.data_tokens, r.data_tokens, "{label}: data tokens");
+    assert_eq!(reference.pdd_dropped_tokens, r.pdd_dropped_tokens, "{label}: pdd accounting");
     assert_eq!(reference.compute_tokens, r.compute_tokens, "{label}: compute tokens");
     assert_eq!(reference.dispatch, r.dispatch, "{label}: dispatch histogram");
     assert_eq!(reference.final_accuracy, r.final_accuracy, "{label}: accuracy");
@@ -207,6 +216,42 @@ fn bert_seqtru_ltd_sliced() {
         &[true, false],
         &[0, 2],
     );
+}
+
+#[test]
+fn moe_seqtru_ltd_sliced() {
+    let env = env();
+    check_case(
+        &env,
+        case("moe", "moe-seqtru+ltd", vec![seqtru(64)], ltd(16)),
+        &[true, false],
+        &[0, 2],
+    );
+}
+
+#[test]
+fn moe_voc_bypass_sliced() {
+    let env = env();
+    check_case(&env, case("moe", "moe-voc+bypass", vec![voc()], bypass(32)), &[true], &[0, 2]);
+}
+
+#[test]
+fn gpt_pdd_ltd_sliced() {
+    let env = env();
+    let mut c = case("gpt", "gpt-pdd+seqtru+ltd", vec![seqtru(64)], ltd(16));
+    c.pdd = pdd();
+    check_case(&env, c, &[true, false], &[0, 2]);
+}
+
+#[test]
+fn moe_loss_signal_pdd_sliced() {
+    // SLICE = 3 makes every preemption boundary coincide with a
+    // loss-signal publish boundary (epoch ceil(10/4) = 3) — the hardest
+    // alignment for the restore-then-republish resume rule.
+    let env = env();
+    let mut c = case("moe", "moe-loss-signal+pdd", vec![loss_signal()], Routing::None);
+    c.pdd = pdd();
+    check_case(&env, c, &[true], &[0, 2]);
 }
 
 #[test]

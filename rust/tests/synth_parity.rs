@@ -1,7 +1,7 @@
 //! Cross-language grid parity: the in-process synthesis
 //! (`runtime::synth`) must agree byte for byte with the independent
 //! Python reference generator (`python/compile/gen_stub_artifacts.py`)
-//! on the full 172-point legacy grid and on `manifest.json`.
+//! on the full 182-point legacy grid and on `manifest.json`.
 //!
 //! History: before the committed `.hlo` grid was deleted, this test
 //! byte-compared the Rust synthesis against every on-disk artifact (see
@@ -27,7 +27,21 @@ fn manifest_emission_is_byte_identical_to_committed() {
 #[test]
 fn grid_enumeration_is_stable() {
     let registry = Registry::builtin().unwrap();
-    assert_eq!(registry.grid.len(), 172);
+    assert_eq!(registry.grid.len(), 182);
+    // moe is a first-class family: its ltd/bypass train + grad variant set
+    // must mirror gpt's (same seq/keep/shard-width points) so the dp and
+    // exact-dispatch suites can run identical cases on both.
+    let suffixes = |fam: &str| {
+        let mut v: Vec<String> = registry
+            .grid
+            .keys()
+            .filter(|n| n.starts_with(&format!("{fam}_")))
+            .map(|n| n[fam.len()..].to_string())
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(suffixes("moe"), suffixes("gpt"), "moe grid must mirror gpt");
     for (name, info) in &registry.grid {
         assert_eq!(name, &info.name);
         // every grid point synthesizes and round-trips through the name parser
