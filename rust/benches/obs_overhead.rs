@@ -1,0 +1,146 @@
+//! obs_overhead — the observability gate (ISSUE 10 tentpole).
+//!
+//! Two enforcing checks on the span recorder:
+//!
+//! 1. **Overhead**: steps/sec on a tiny-step composed GPT config with
+//!    tracing off vs tracing on (default ring). The recorder must cost
+//!    under 3% of throughput (best-of-trials on both sides to shave
+//!    scheduler noise).
+//! 2. **Bit-identity**: tracing must be a pure timing side-channel —
+//!    `state_hash`, per-step f32 losses and the dispatch histogram must
+//!    be byte-identical with tracing off, on at the default ring, and on
+//!    at a tiny 64-event ring (constant overflow → drop-oldest churn).
+//!
+//! Any overhead blow-past or oracle drift exits non-zero so the CI
+//! bench-smoke job goes red. Results land in `BENCH_HISTORY.json` under
+//! `obs_overhead` when `DSDE_BENCH_HISTORY=1`; `DSDE_BENCH_QUICK=1`
+//! shrinks everything for the smoke job.
+
+use dsde::bench::{history_append, scaled, Table};
+use dsde::config::json::Json;
+use dsde::config::schema::*;
+use dsde::train::{RunResult, TrainEnv};
+
+const MAX_OVERHEAD: f64 = 0.03;
+
+fn tiny_case(steps: u64) -> RunConfig {
+    let mut c = RunConfig::baseline("gpt", steps, 3e-3);
+    c.label = "obs-overhead".into();
+    c.seed = 4242;
+    c.eval_every = steps; // keep the loop hot: evaluate only at the end
+    c.curriculum = vec![ClConfig::new(
+        Metric::SeqTru,
+        Bound::Value(8.0),
+        Bound::Value(64.0),
+        (steps as f64 * 0.6) as u64,
+    )];
+    c.routing = Routing::RandomLtd(LtdConfig::mslg(16, steps));
+    c.pipeline = PipelineConfig { prefetch_depth: 3, n_loader_workers: 2 };
+    c
+}
+
+/// Run the case `trials` times under the current recorder mode, keeping
+/// the fastest wall clock (the result is bit-identical across trials, so
+/// any of them can stand in for the oracle comparison).
+fn best_of(env: &TrainEnv, steps: u64, trials: usize) -> dsde::Result<(RunResult, f64)> {
+    let mut best: Option<(RunResult, f64)> = None;
+    for _ in 0..trials {
+        dsde::obs::reset();
+        let r = env.run(tiny_case(steps))?;
+        let wall = r.wall_secs;
+        if best.as_ref().map(|(_, w)| wall < *w).unwrap_or(true) {
+            best = Some((r, wall));
+        }
+    }
+    Ok(best.expect("at least one trial"))
+}
+
+fn identical(a: &RunResult, b: &RunResult) -> bool {
+    a.state_hash == b.state_hash && a.step_losses == b.step_losses && a.dispatch == b.dispatch
+}
+
+fn main() -> dsde::Result<()> {
+    let steps = scaled(200, 12);
+    let docs = scaled(400, 200) as usize;
+    let trials = scaled(3, 2) as usize;
+    eprintln!("== obs_overhead: recorder cost + tracing bit-identity ==");
+    let env = TrainEnv::new(docs, 7)?;
+
+    // ---- tracing off: the reference -------------------------------------
+    dsde::obs::set_enabled(false);
+    dsde::obs::set_ring_capacity(dsde::obs::DEFAULT_RING_CAP);
+    let (r_off, wall_off) = best_of(&env, steps, trials)?;
+
+    // ---- tracing on, default ring ---------------------------------------
+    dsde::obs::set_enabled(true);
+    let (r_on, wall_on) = best_of(&env, steps, trials)?;
+
+    // ---- tracing on, tiny ring (constant drop-oldest churn) -------------
+    dsde::obs::set_ring_capacity(64);
+    let (r_small, wall_small) = best_of(&env, steps, trials)?;
+    let dropped = dsde::obs::dropped_events();
+
+    dsde::obs::set_enabled(false);
+    dsde::obs::reset();
+    dsde::obs::set_ring_capacity(dsde::obs::DEFAULT_RING_CAP);
+
+    let off_sps = steps as f64 / wall_off.max(1e-9);
+    let on_sps = steps as f64 / wall_on.max(1e-9);
+    let small_sps = steps as f64 / wall_small.max(1e-9);
+    let overhead = (off_sps - on_sps) / off_sps.max(1e-9);
+
+    let mut t = Table::new(&["mode", "steps", "wall s", "steps/s"]);
+    for (name, wall, sps) in [
+        ("tracing off", wall_off, off_sps),
+        ("tracing on", wall_on, on_sps),
+        ("tracing on, ring 64", wall_small, small_sps),
+    ] {
+        t.row(vec![
+            name.into(),
+            steps.to_string(),
+            format!("{wall:.3}"),
+            format!("{sps:.1}"),
+        ]);
+    }
+    println!("\nrecorder overhead (composed GPT, {steps} tiny steps, best of {trials}):");
+    t.print();
+    t.save_csv("obs_overhead")?;
+    println!(
+        "overhead: {:.2}% (gate {:.0}%); ring-64 run dropped {dropped} event(s)",
+        overhead * 100.0,
+        MAX_OVERHEAD * 100.0
+    );
+
+    let overhead_ok = overhead < MAX_OVERHEAD;
+    let identity_ok = identical(&r_off, &r_on) && identical(&r_off, &r_small);
+    let drop_ok = dropped > 0; // a 64-event ring MUST overflow on this run
+
+    history_append(
+        "obs_overhead",
+        &Json::obj(vec![
+            ("steps", (steps as usize).into()),
+            ("off_steps_per_s", off_sps.into()),
+            ("on_steps_per_s", on_sps.into()),
+            ("small_ring_steps_per_s", small_sps.into()),
+            ("overhead_frac", overhead.into()),
+            ("dropped_small_ring", (dropped as usize).into()),
+            ("bit_identical", identity_ok.into()),
+        ]),
+    )?;
+
+    println!(
+        "\nshape check:\n  [{}] recorder overhead under {:.0}% of steps/sec\n  \
+         [{}] tracing off/on/ring-64 bit-identical (state hash, losses, dispatch)\n  \
+         [{}] tiny ring actually overflowed (drop-oldest path exercised)",
+        if overhead_ok { "PASS" } else { "FAIL" },
+        MAX_OVERHEAD * 100.0,
+        if identity_ok { "PASS" } else { "FAIL" },
+        if drop_ok { "PASS" } else { "FAIL" }
+    );
+    if !(overhead_ok && identity_ok && drop_ok) {
+        // Enforcing, not advisory: tracing must stay a free-when-off,
+        // cheap-when-on pure side-channel.
+        std::process::exit(1);
+    }
+    Ok(())
+}

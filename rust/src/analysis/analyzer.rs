@@ -11,6 +11,7 @@
 //! (40 CPU threads index the GPT-3 Pile metric in 3 hours).
 
 use crate::data::index::DifficultyIndex;
+use crate::obs::LogHist;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
@@ -42,6 +43,11 @@ pub struct AnalyzerReport {
     pub map_secs: f64,
     /// Reduce-phase (merge) seconds.
     pub reduce_secs: f64,
+    /// Median per-shard map duration, µs (log₂-bucket upper bound — a
+    /// conservative over-estimate of at most 2x; see [`LogHist`]).
+    pub shard_p50_us: u64,
+    /// p99 per-shard map duration, µs (same upper-bound convention).
+    pub shard_p99_us: u64,
 }
 
 impl AnalyzerReport {
@@ -71,6 +77,8 @@ where
     let t0 = Instant::now();
     let mut values = vec![0.0f32; n];
     let next_shard = AtomicUsize::new(0);
+    // Per-shard map durations, shared across workers (atomic buckets).
+    let shard_hist = LogHist::new();
     let mut runs: Vec<Vec<u32>>;
     {
         // Hand each worker a disjoint &mut view of `values` per shard via
@@ -79,6 +87,7 @@ where
         let values_ptr = SendPtr(values.as_mut_ptr());
         let f = &f;
         let next = &next_shard;
+        let hist = &shard_hist;
         runs = std::thread::scope(|scope| {
             let mut handles = Vec::new();
             for _ in 0..n_workers {
@@ -90,6 +99,7 @@ where
                         if shard >= n_shards {
                             break;
                         }
+                        let t_shard = crate::obs::now_us();
                         let start = shard * shard_size;
                         let end = (start + shard_size).min(n);
                         for i in start..end {
@@ -98,6 +108,7 @@ where
                             unsafe { *values_ptr.0.add(i) = v };
                             my_ids.push(i as u32);
                         }
+                        hist.record(crate::obs::now_us().saturating_sub(t_shard));
                     }
                     my_ids
                 }));
@@ -126,6 +137,8 @@ where
         n_shards,
         map_secs,
         reduce_secs,
+        shard_p50_us: shard_hist.quantile(0.50),
+        shard_p99_us: shard_hist.quantile(0.99),
     };
     (
         DifficultyIndex::Owned { values, order, metric: metric.to_string() },
@@ -252,6 +265,7 @@ mod tests {
             n_shards: 1,
             map_secs: map,
             reduce_secs: red,
+            ..Default::default()
         };
         assert_eq!(r(0, 0.0, 0.0).samples_per_sec(), 0.0);
         assert_eq!(r(1000, 0.0, 0.0).samples_per_sec(), 0.0);

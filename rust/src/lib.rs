@@ -54,6 +54,7 @@ pub mod data;
 pub mod exp;
 pub mod lr;
 pub mod ltd;
+pub mod obs;
 pub mod orch;
 pub mod runtime;
 pub mod sim;

@@ -11,8 +11,15 @@
 //!            [--config FILE] [--eval-every K] [--replicas N]
 //!            [--dispatch bucket|exact] [--no-prewarm] [--pdd SPEC]
 //!            [--save-every N] [--delta-every K] [--save-dir DIR] [--resume PATH]
+//!            [--trace-out FILE] [--trace-ring N]
 //!                                   run one training; prints the curve
-//!                                   (--replicas N: data-parallel replica
+//!                                   (--trace-out FILE: record spans and
+//!                                   write a Chrome-trace JSON loadable in
+//!                                   Perfetto; --trace-ring N: per-thread
+//!                                   event-ring capacity, drop-oldest —
+//!                                   tracing is a pure timing side-channel,
+//!                                   results stay bit-identical;
+//!                                   --replicas N: data-parallel replica
 //!                                   engine; 0 = fused single step;
 //!                                   --dispatch exact: JIT-specialize the
 //!                                   requested shapes verbatim;
@@ -40,6 +47,7 @@
 //! dsde serve [--addr A] [--docs N] [--jobs J] [--default-slice S]
 //!            [--conn-threads T] [--queue-cap Q] [--conn-backlog B]
 //!            [--max-request-bytes M] [--save-dir DIR] [--recover]
+//!            [--trace-dir DIR]
 //!                                   host the multi-tenant scheduler's TCP
 //!                                   control plane (J-wide executor pool,
 //!                                   S-step time slices, T-wide connection
@@ -52,7 +60,9 @@
 //!                                   preempted jobs resume bit-identically
 //!                                   from their last boundary snapshot,
 //!                                   queued jobs requeue in submission
-//!                                   order)
+//!                                   order; --trace-dir DIR: record spans
+//!                                   and write one Chrome-trace timeline
+//!                                   per drain into DIR)
 //! dsde submit [--addr A] [train flags] [--priority P] [--share W] [--slice S]
 //!                                   submit a run to a control plane
 //!                                   (--resume PATH: post-mortem restart
@@ -62,8 +72,11 @@
 //! dsde cancel --job N [--addr A]    cancel a job (its last boundary
 //!                                   snapshot is kept and stays resumable)
 //! dsde drain [--addr A]             stop admission, exit when all jobs end
-//! dsde metrics [--addr A]           serving gauges: queue depth, rejects,
+//! dsde metrics [--addr A] [--prom]  serving gauges: queue depth, rejects,
 //!                                   p50/p99 command latency, slice counters
+//!                                   (--prom: print the Prometheus text
+//!                                   exposition instead — dsde_* gauges
+//!                                   plus the request-latency histogram)
 //! ```
 
 use anyhow::{anyhow, bail};
@@ -95,6 +108,7 @@ const VALUE_KEYS: &[&str] = &[
     "replicas", "dispatch", "pdd", "save-every", "delta-every", "save-dir", "resume", "label",
     "addr", "jobs", "slice", "priority", "share", "job", "default-slice",
     "conn-threads", "queue-cap", "conn-backlog", "max-request-bytes",
+    "trace-out", "trace-ring", "trace-dir",
 ];
 
 fn run(argv: &[String]) -> dsde::Result<()> {
@@ -214,6 +228,10 @@ fn analyze(args: &Args) -> dsde::Result<()> {
         report.reduce_secs,
         report.samples_per_sec()
     );
+    println!(
+        "shard map latency: p50 {}us p99 {}us",
+        report.shard_p50_us, report.shard_p99_us
+    );
     let out = std::path::PathBuf::from(args.get_str("out", "runs/index.bin"));
     if let Some(parent) = out.parent() {
         std::fs::create_dir_all(parent)?;
@@ -298,6 +316,13 @@ fn parse_pdd(spec: &str, total_steps: u64) -> dsde::Result<dsde::config::schema:
 
 fn train(args: &Args) -> dsde::Result<()> {
     let cfg = run_config_from_args(args)?;
+    let trace_out = args.get("trace-out");
+    if let Some(path) = trace_out {
+        let ring = args.get_u64("trace-ring", dsde::obs::DEFAULT_RING_CAP as u64)? as usize;
+        dsde::obs::set_ring_capacity(ring);
+        dsde::obs::set_enabled(true);
+        println!("tracing -> {path} (ring {ring} events/thread, drop-oldest)");
+    }
     if let Some(p) = &cfg.resume {
         println!("resuming from {p}");
     }
@@ -356,6 +381,17 @@ fn train(args: &Args) -> dsde::Result<()> {
         r.prewarmed_compiles,
         r.compile_stall_secs * 1e3
     );
+    println!("\nphase              count    p50_us    p99_us  total_ms");
+    for p in &r.phase_stats {
+        println!(
+            "{:<18} {:>5} {:>9} {:>9} {:>9.1}",
+            p.phase,
+            p.count,
+            p.p50_us,
+            p.p99_us,
+            p.total_us as f64 / 1e3
+        );
+    }
     if r.n_replicas > 0 {
         println!(
             "replicas: {} ranks, all-reduce {:.1}ms total, rank imbalance {:.0}%",
@@ -381,6 +417,14 @@ fn train(args: &Args) -> dsde::Result<()> {
     }
     println!("state hash: {:016x}", r.state_hash);
     println!("dispatch: {:?}", r.dispatch);
+    if let Some(path) = trace_out {
+        dsde::obs::write_chrome_trace(std::path::Path::new(path))?;
+        println!(
+            "trace: {path} (load in Perfetto / chrome://tracing; {} event(s) \
+             dropped at the ring bound)",
+            dsde::obs::dropped_events()
+        );
+    }
     Ok(())
 }
 
@@ -473,6 +517,7 @@ fn serve(args: &Args) -> dsde::Result<()> {
             as usize,
         save_dir: args.get_str("save-dir", "").to_string(),
         recover: args.flag("recover"),
+        trace_dir: args.get_str("trace-dir", "").to_string(),
         ..defaults
     };
     if opts.recover && opts.save_dir.is_empty() {
@@ -492,6 +537,9 @@ fn serve(args: &Args) -> dsde::Result<()> {
             opts.save_dir,
             if opts.recover { " (recovering)" } else { "" }
         );
+    }
+    if !opts.trace_dir.is_empty() {
+        println!("tracing: one Chrome-trace timeline per drain -> {}/", opts.trace_dir);
     }
     println!("building shared environment ({} docs)...", args.get_u64("docs", 1000)?);
     let env = TrainEnv::new(args.get_u64("docs", 1000)? as usize, 7)?;
@@ -614,6 +662,19 @@ fn cancel(args: &Args) -> dsde::Result<()> {
 /// command latency, scheduler slice counters and the shared cache.
 fn metrics(args: &Args) -> dsde::Result<()> {
     let addr = args.get_str("addr", DEFAULT_ADDR);
+    if args.flag("prom") {
+        let m = request(
+            addr,
+            &Json::obj(vec![("cmd", "METRICS".into()), ("format", "prom".into())]),
+        )?;
+        expect_ok(&m)?;
+        let text = m
+            .get("prom")
+            .as_str()
+            .ok_or_else(|| anyhow!("control plane returned no 'prom' text"))?;
+        print!("{text}");
+        return Ok(());
+    }
     let m = request(addr, &Json::obj(vec![("cmd", "METRICS".into())]))?;
     expect_ok(&m)?;
     let u = |path: &str| m.path(path).as_u64().unwrap_or(0);

@@ -1,0 +1,733 @@
+//! Lock-light span/event recorder, shared log2 histograms and Chrome
+//! trace-event export — the crate's timing side-channel.
+//!
+//! Every layer (trainer step phases, `BatchPipeline` workers, the replica
+//! engine, the JIT cache, the scheduler) reports *where time goes* through
+//! this module instead of scattering ad-hoc `Instant::now()` calls (a CI
+//! hygiene check pins the pre-existing call sites via
+//! `rust/instant_allowlist.txt`).
+//!
+//! Design:
+//!
+//! * **Per-thread bounded rings.** Each recording thread owns an
+//!   [`Arc`]'d ring registered in a global list on first use. The ring's
+//!   mutex is only ever contended by the (cold) exporter, so the hot path
+//!   is an uncontended lock plus a `VecDeque` push — steady-state
+//!   allocation-free once the ring reaches capacity. Overflow drops the
+//!   *oldest* event and bumps a global dropped-event counter
+//!   ([`dropped_events`]); a drop can orphan a span's `B`/`E` half, which
+//!   is why the counter is surfaced in the exported trace.
+//! * **Interned names.** Span and argument-key names are interned to dense
+//!   `u32` ids (the [`crate::runtime::artifacts::KeyInterner`] idiom), so
+//!   an event is 40 bytes of plain data; strings are rebuilt only at
+//!   export. Id 0 is reserved as "no argument".
+//! * **Monotonic clock.** [`now_us`] is microseconds since a process-wide
+//!   epoch, monotone per thread. It works whether or not recording is
+//!   enabled, so always-on aggregates (per-phase histograms, scheduler
+//!   timelines) and gated ring events share one timebase.
+//! * **Pure side-channel.** Nothing here feeds back into training:
+//!   state hashes, step losses, goldens and schedule fingerprints are
+//!   byte-identical with tracing on, off, and at any ring size
+//!   (`tests/obs.rs`, `benches/obs_overhead.rs`).
+//!
+//! The exporter ([`export_chrome_trace`]) emits Chrome trace-event JSON
+//! (`{"traceEvents":[...]}` with `B`/`E` duration events, `i` instants and
+//! `M` thread-name metadata) loadable directly in Perfetto / `chrome://tracing`.
+//!
+//! [`LogHist`] is the shared log2-bucket histogram used by the control
+//! plane's request-latency percentiles and the trainer's per-phase stats;
+//! quantiles report the bucket's conservative *upper* bound. [`prom`]
+//! renders gauges and histograms in Prometheus text exposition format.
+
+pub mod prom;
+
+use crate::config::json::Json;
+use crate::Result;
+use std::cell::OnceCell;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Instant;
+
+/// Default per-thread ring capacity, in events.
+pub const DEFAULT_RING_CAP: usize = 65_536;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+static RING_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAP);
+
+// ---------------------------------------------------------------------------
+// Clock
+
+fn epoch() -> &'static Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now)
+}
+
+/// Microseconds since the process-wide monotonic epoch. Always available;
+/// enabling/disabling recording never shifts the timebase.
+#[inline]
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Recording switch + ring sizing
+
+/// Turn event recording on or off. Off (the default) reduces every
+/// `begin`/`end`/`instant` call to one relaxed atomic load.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether ring-event recording is currently enabled.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Set the per-thread ring capacity (events). Applies to new rings and
+/// retroactively bounds existing ones (excess *oldest* events drop).
+pub fn set_ring_capacity(cap: usize) {
+    let cap = cap.max(2);
+    RING_CAP.store(cap, Ordering::Relaxed);
+    for ring in registry().lock().unwrap().iter() {
+        let mut buf = ring.buf.lock().unwrap();
+        buf.cap = cap;
+        while buf.events.len() > cap {
+            buf.events.pop_front();
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// The current per-thread ring capacity (events).
+pub fn ring_capacity() -> usize {
+    RING_CAP.load(Ordering::Relaxed)
+}
+
+/// Events dropped to ring overflow since the last [`reset`].
+pub fn dropped_events() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Clear every thread's ring and the dropped-event counter (thread
+/// registrations, tids and interned names persist). Call between runs
+/// that export separate traces.
+pub fn reset() {
+    for ring in registry().lock().unwrap().iter() {
+        ring.buf.lock().unwrap().events.clear();
+    }
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Name interning (KeyInterner idiom; id 0 reserved = "no argument")
+
+#[derive(Default)]
+struct NameIntern {
+    ids: HashMap<String, u32>,
+    names: Vec<String>,
+}
+
+fn table() -> &'static RwLock<NameIntern> {
+    static T: OnceLock<RwLock<NameIntern>> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut t = NameIntern::default();
+        t.names.push(String::new());
+        t.ids.insert(String::new(), 0);
+        RwLock::new(t)
+    })
+}
+
+/// Intern `name`, returning its dense id (stable for the process
+/// lifetime). Ids are allocated in first-sight order; id 0 is the
+/// reserved empty name.
+pub fn intern(name: &str) -> u32 {
+    if let Some(&id) = table().read().unwrap().ids.get(name) {
+        return id;
+    }
+    let mut w = table().write().unwrap();
+    if let Some(&id) = w.ids.get(name) {
+        return id;
+    }
+    let id = u32::try_from(w.names.len()).expect("obs intern table overflow");
+    w.names.push(name.to_string());
+    w.ids.insert(name.to_string(), id);
+    id
+}
+
+fn name_of(id: u32) -> String {
+    table().read().unwrap().names[id as usize].clone()
+}
+
+/// Pre-interned well-known span and argument-key names, so hot paths
+/// never touch the intern table.
+pub struct Names {
+    /// Trainer phase: schedule lookup + route bookkeeping.
+    pub plan: u32,
+    /// Trainer phase: batch materialization (or pipeline wait).
+    pub materialize: u32,
+    /// Trainer phase: artifact key resolution + JIT-cache dispatch.
+    pub dispatch: u32,
+    /// Trainer phase: device execution (fused step or replica grad+apply).
+    pub execute: u32,
+    /// Trainer phase / replica engine: fixed-order tree all-reduce.
+    pub all_reduce: u32,
+    /// Trainer phase: accounting, trackers, eval, loss capture.
+    pub bookkeeping: u32,
+    /// Trainer phase: checkpoint serialization (full or delta).
+    pub checkpoint_encode: u32,
+    /// Trainer phase: atomic write + fsync of a snapshot.
+    pub checkpoint_fsync: u32,
+    /// `BatchPipeline` worker: materializing one planned batch.
+    pub loader_materialize: u32,
+    /// Replica worker: one rank's gradient computation.
+    pub rank_grad: u32,
+    /// JIT cache: dispatch served from cache (instant).
+    pub jit_hit: u32,
+    /// JIT cache: inline synthesize + compile on miss (span).
+    pub jit_compile: u32,
+    /// JIT cache: background prewarm compile (span).
+    pub jit_prewarm: u32,
+    /// JIT cache: prewarmed executables adopted into the cache (instant).
+    pub jit_adopt: u32,
+    /// Scheduler: one executed job slice (span; job/priority/deficit args).
+    pub sched_slice: u32,
+    /// Scheduler: a job lifecycle transition (instant; job/state args).
+    pub job_state: u32,
+    /// Argument key: step index.
+    pub k_step: u32,
+    /// Argument key: interned artifact key id.
+    pub k_key: u32,
+    /// Argument key: job id.
+    pub k_job: u32,
+    /// Argument key: steps executed.
+    pub k_steps: u32,
+    /// Argument key: job priority.
+    pub k_priority: u32,
+    /// Argument key: DRR deficit after the slice.
+    pub k_deficit: u32,
+    /// Argument key: job state ordinal.
+    pub k_state: u32,
+    /// Argument key: replica rank.
+    pub k_rank: u32,
+    /// Argument key: generic count.
+    pub k_count: u32,
+}
+
+/// The process-wide pre-interned name set.
+pub fn names() -> &'static Names {
+    static N: OnceLock<Names> = OnceLock::new();
+    N.get_or_init(|| Names {
+        plan: intern("plan"),
+        materialize: intern("materialize"),
+        dispatch: intern("dispatch"),
+        execute: intern("execute"),
+        all_reduce: intern("all_reduce"),
+        bookkeeping: intern("bookkeeping"),
+        checkpoint_encode: intern("checkpoint_encode"),
+        checkpoint_fsync: intern("checkpoint_fsync"),
+        loader_materialize: intern("loader_materialize"),
+        rank_grad: intern("rank_grad"),
+        jit_hit: intern("jit_hit"),
+        jit_compile: intern("jit_compile"),
+        jit_prewarm: intern("jit_prewarm"),
+        jit_adopt: intern("jit_adopt"),
+        sched_slice: intern("sched_slice"),
+        job_state: intern("job_state"),
+        k_step: intern("step"),
+        k_key: intern("key"),
+        k_job: intern("job"),
+        k_steps: intern("steps"),
+        k_priority: intern("priority"),
+        k_deficit: intern("deficit"),
+        k_state: intern("state"),
+        k_rank: intern("rank"),
+        k_count: intern("count"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Events + per-thread rings
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Begin,
+    End,
+    Inst,
+}
+
+#[derive(Clone, Copy)]
+struct Event {
+    ts_us: u64,
+    name: u32,
+    kind: Kind,
+    k1: u32,
+    v1: i64,
+    k2: u32,
+    v2: i64,
+}
+
+struct RingBuf {
+    cap: usize,
+    events: VecDeque<Event>,
+}
+
+struct Ring {
+    tid: u32,
+    thread_name: String,
+    buf: Mutex<RingBuf>,
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static R: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL_RING: OnceCell<Arc<Ring>> = const { OnceCell::new() };
+}
+
+fn local_ring() -> Arc<Ring> {
+    LOCAL_RING.with(|cell| {
+        cell.get_or_init(|| {
+            let thread_name =
+                std::thread::current().name().unwrap_or("unnamed").to_string();
+            let cap = RING_CAP.load(Ordering::Relaxed).max(2);
+            let mut reg = registry().lock().unwrap();
+            let ring = Arc::new(Ring {
+                tid: reg.len() as u32 + 1,
+                thread_name,
+                buf: Mutex::new(RingBuf {
+                    cap,
+                    events: VecDeque::with_capacity(cap.min(1024)),
+                }),
+            });
+            reg.push(ring.clone());
+            ring.clone()
+        })
+        .clone()
+    })
+}
+
+#[inline]
+fn push(ev: Event) {
+    let ring = local_ring();
+    let mut buf = ring.buf.lock().unwrap();
+    if buf.events.len() >= buf.cap {
+        buf.events.pop_front();
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+    }
+    buf.events.push_back(ev);
+}
+
+#[inline]
+fn event(name: u32, kind: Kind, k1: u32, v1: i64, k2: u32, v2: i64) -> Event {
+    Event { ts_us: now_us(), name, kind, k1, v1, k2, v2 }
+}
+
+/// Open a span (`B` event) on the calling thread. No-op when disabled.
+#[inline]
+pub fn begin(name: u32) {
+    if enabled() {
+        push(event(name, Kind::Begin, 0, 0, 0, 0));
+    }
+}
+
+/// Open a span with one `key=value` annotation.
+#[inline]
+pub fn begin_kv(name: u32, k1: u32, v1: i64) {
+    if enabled() {
+        push(event(name, Kind::Begin, k1, v1, 0, 0));
+    }
+}
+
+/// Open a span with two `key=value` annotations.
+#[inline]
+pub fn begin_kv2(name: u32, k1: u32, v1: i64, k2: u32, v2: i64) {
+    if enabled() {
+        push(event(name, Kind::Begin, k1, v1, k2, v2));
+    }
+}
+
+/// Close the most recent span of `name` on the calling thread (`E`
+/// event). No-op when disabled.
+#[inline]
+pub fn end(name: u32) {
+    if enabled() {
+        push(event(name, Kind::End, 0, 0, 0, 0));
+    }
+}
+
+/// Close a span, attaching two `key=value` annotations to the `E` half.
+#[inline]
+pub fn end_kv2(name: u32, k1: u32, v1: i64, k2: u32, v2: i64) {
+    if enabled() {
+        push(event(name, Kind::End, k1, v1, k2, v2));
+    }
+}
+
+/// Record a thread-scoped instant event. No-op when disabled.
+#[inline]
+pub fn instant(name: u32) {
+    if enabled() {
+        push(event(name, Kind::Inst, 0, 0, 0, 0));
+    }
+}
+
+/// Record an instant event with one `key=value` annotation.
+#[inline]
+pub fn instant_kv(name: u32, k1: u32, v1: i64) {
+    if enabled() {
+        push(event(name, Kind::Inst, k1, v1, 0, 0));
+    }
+}
+
+/// RAII span: records `B` at construction (if enabled) and the matching
+/// `E` on drop. The `E` half is emitted iff the `B` half was, so spans
+/// stay balanced even if recording is toggled mid-span.
+pub struct SpanGuard {
+    name: u32,
+    armed: bool,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            push(event(self.name, Kind::End, 0, 0, 0, 0));
+        }
+    }
+}
+
+/// Open an RAII span.
+#[inline]
+pub fn span(name: u32) -> SpanGuard {
+    let armed = enabled();
+    if armed {
+        push(event(name, Kind::Begin, 0, 0, 0, 0));
+    }
+    SpanGuard { name, armed }
+}
+
+/// Open an RAII span with one `key=value` annotation on the `B` half.
+#[inline]
+pub fn span_kv(name: u32, k1: u32, v1: i64) -> SpanGuard {
+    let armed = enabled();
+    if armed {
+        push(event(name, Kind::Begin, k1, v1, 0, 0));
+    }
+    SpanGuard { name, armed }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export
+
+fn ph(kind: Kind) -> &'static str {
+    match kind {
+        Kind::Begin => "B",
+        Kind::End => "E",
+        Kind::Inst => "i",
+    }
+}
+
+/// Serialize every registered ring as Chrome trace-event JSON
+/// (`{"traceEvents":[...],"droppedEvents":N}`), loadable in Perfetto.
+/// Each thread contributes one `thread_name` metadata event plus its
+/// events in recording order (timestamps monotone per tid).
+pub fn export_chrome_trace() -> String {
+    let rings: Vec<Arc<Ring>> = registry().lock().unwrap().clone();
+    let mut out: Vec<Json> = Vec::new();
+    for ring in &rings {
+        let events: Vec<Event> = {
+            let buf = ring.buf.lock().unwrap();
+            buf.events.iter().copied().collect()
+        };
+        let mut meta = BTreeMap::new();
+        meta.insert("name".to_string(), Json::Str("thread_name".to_string()));
+        meta.insert("ph".to_string(), Json::Str("M".to_string()));
+        meta.insert("pid".to_string(), Json::Int(1));
+        meta.insert("tid".to_string(), Json::Int(ring.tid as i64));
+        meta.insert(
+            "args".to_string(),
+            Json::obj(vec![("name", Json::Str(ring.thread_name.clone()))]),
+        );
+        out.push(Json::Obj(meta));
+        for ev in events {
+            let mut m = BTreeMap::new();
+            m.insert("name".to_string(), Json::Str(name_of(ev.name)));
+            m.insert("ph".to_string(), Json::Str(ph(ev.kind).to_string()));
+            m.insert("pid".to_string(), Json::Int(1));
+            m.insert("tid".to_string(), Json::Int(ring.tid as i64));
+            m.insert("ts".to_string(), Json::from(ev.ts_us));
+            if ev.kind == Kind::Inst {
+                m.insert("s".to_string(), Json::Str("t".to_string()));
+            }
+            if ev.k1 != 0 || ev.k2 != 0 {
+                let mut args = BTreeMap::new();
+                if ev.k1 != 0 {
+                    args.insert(name_of(ev.k1), Json::Int(ev.v1));
+                }
+                if ev.k2 != 0 {
+                    args.insert(name_of(ev.k2), Json::Int(ev.v2));
+                }
+                m.insert("args".to_string(), Json::Obj(args));
+            }
+            out.push(Json::Obj(m));
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("droppedEvents", Json::from(dropped_events())),
+    ])
+    .to_string_compact()
+}
+
+/// Write [`export_chrome_trace`] to `path`, creating parent directories.
+pub fn write_chrome_trace(path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, export_chrome_trace())?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Shared log2-bucket histogram
+
+/// Number of log2 buckets in a [`LogHist`] (bucket *i* holds values in
+/// `[2^i, 2^(i+1))`; the last bucket absorbs everything larger).
+pub const HIST_BUCKETS: usize = 40;
+
+/// Lock-free log2-bucket histogram for microsecond-scale durations,
+/// shared by the control plane's request-latency percentiles and the
+/// trainer's per-phase stats.
+///
+/// Quantiles report the bucket's conservative **upper** bound — a p99
+/// read from a log2 histogram is at most 2x the true value, never an
+/// under-statement (pinned at bucket boundaries by unit test).
+pub struct LogHist {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for LogHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHist {
+    /// An empty histogram.
+    pub fn new() -> LogHist {
+        LogHist { buckets: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0) }
+    }
+
+    /// Record one value (0 counts into the first bucket).
+    pub fn record(&self, v: u64) {
+        let idx = (63 - v.max(1).leading_zeros() as usize).min(HIST_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total recorded samples.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of recorded values (exact, not bucketed).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// A snapshot of the per-bucket counts.
+    pub fn counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// Inclusive upper bound of bucket `idx`: `2^(idx+1) - 1`.
+    pub fn upper_bound(idx: usize) -> u64 {
+        (1u64 << (idx + 1)) - 1
+    }
+
+    /// Quantile `q` in [0, 1], reported as the holding bucket's upper
+    /// bound (conservative: at most 2x the true value, never below it).
+    /// 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let counts = self.counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::upper_bound(i);
+            }
+        }
+        Self::upper_bound(HIST_BUCKETS - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Recorder tests mutate process-global state (enabled flag, rings);
+    // serialize them so cargo's parallel test threads don't interleave.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static M: Mutex<()> = Mutex::new(());
+        M.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn hist_quantile_upper_bound_at_bucket_boundaries() {
+        for k in 0..HIST_BUCKETS as u32 {
+            let h = LogHist::new();
+            let v = 1u64 << k; // lowest value of bucket k
+            h.record(v);
+            let q = h.quantile(0.99);
+            assert_eq!(q, LogHist::upper_bound(k as usize), "v=2^{k}");
+            assert!(q >= v, "quantile must never under-state (v={v}, q={q})");
+            assert!(q < v.saturating_mul(2), "upper bound stays < 2x (v={v}, q={q})");
+        }
+        // Top of a bucket is reported exactly.
+        for k in 1..20u32 {
+            let h = LogHist::new();
+            let v = (1u64 << k) - 1;
+            h.record(v);
+            assert_eq!(h.quantile(0.5), v);
+        }
+    }
+
+    #[test]
+    fn hist_empty_zero_and_sum_count() {
+        let h = LogHist::new();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0);
+        h.record(0); // clamps into the first bucket
+        h.record(1);
+        h.record(100);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.sum(), 101);
+        assert_eq!(h.quantile(0.0), 1); // rank clamps to 1
+        assert_eq!(h.quantile(1.0), 127); // 100 lives in [64, 128)
+    }
+
+    #[test]
+    fn hist_quantile_ordering() {
+        let h = LogHist::new();
+        for v in [1u64, 1, 1, 1, 1, 1, 1, 1, 1, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.5), 1);
+        assert_eq!(h.quantile(0.99), 1023);
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn recorder_disabled_records_nothing() {
+        let _g = lock();
+        set_enabled(false);
+        reset();
+        begin(names().plan);
+        end(names().plan);
+        instant(names().jit_hit);
+        let trace = export_chrome_trace();
+        let v = Json::parse(&trace).unwrap();
+        let evs = v.get("traceEvents").as_arr().unwrap();
+        assert!(evs.iter().all(|e| e.get("ph").as_str() == Some("M")));
+    }
+
+    #[test]
+    fn recorder_spans_balanced_and_monotone() {
+        let _g = lock();
+        set_enabled(true);
+        reset();
+        set_ring_capacity(DEFAULT_RING_CAP);
+        let n = names();
+        for step in 0..5i64 {
+            begin_kv(n.plan, n.k_step, step);
+            {
+                let _s = span(n.execute);
+                instant_kv(n.jit_hit, n.k_key, 7);
+            }
+            end(n.plan);
+        }
+        let trace = export_chrome_trace();
+        set_enabled(false);
+        let v = Json::parse(&trace).unwrap();
+        let mut depth = 0i64;
+        let mut last_ts = 0u64;
+        let mut names_seen = Vec::new();
+        for e in v.get("traceEvents").as_arr().unwrap() {
+            match e.get("ph").as_str().unwrap() {
+                "B" => {
+                    depth += 1;
+                    names_seen.push(e.get("name").as_str().unwrap().to_string());
+                }
+                "E" => depth -= 1,
+                _ => {}
+            }
+            if let Some(ts) = e.get("ts").as_u64() {
+                assert!(ts >= last_ts, "timestamps monotone per thread");
+                last_ts = ts;
+            }
+            assert!(depth >= 0, "E without matching B");
+        }
+        assert_eq!(depth, 0, "every B has a matching E");
+        assert!(names_seen.contains(&"plan".to_string()));
+        assert!(names_seen.contains(&"execute".to_string()));
+        assert_eq!(v.get("droppedEvents").as_u64(), Some(0));
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let _g = lock();
+        set_enabled(true);
+        reset();
+        set_ring_capacity(4);
+        let n = names();
+        for i in 0..10i64 {
+            instant_kv(n.jit_hit, n.k_key, i);
+        }
+        set_enabled(false);
+        assert!(dropped_events() >= 6, "dropped {}", dropped_events());
+        let v = Json::parse(&export_chrome_trace()).unwrap();
+        // The survivors are the *newest* events (drop-oldest).
+        let kept: Vec<i64> = v
+            .get("traceEvents")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("name").as_str() == Some("jit_hit"))
+            .map(|e| e.path("args.key").as_i64().unwrap())
+            .collect();
+        assert_eq!(kept, vec![6, 7, 8, 9]);
+        set_ring_capacity(DEFAULT_RING_CAP);
+        reset();
+    }
+
+    #[test]
+    fn intern_is_stable_and_dense() {
+        let a = intern("obs-test-name-a");
+        let b = intern("obs-test-name-b");
+        assert_eq!(a, intern("obs-test-name-a"));
+        assert_ne!(a, b);
+        assert_ne!(a, 0, "id 0 is reserved");
+        assert_eq!(name_of(a), "obs-test-name-a");
+    }
+
+    #[test]
+    fn now_us_is_monotone() {
+        let a = now_us();
+        let b = now_us();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,96 @@
+//! Prometheus text exposition rendering (version 0.0.4) for the gauges
+//! and [`LogHist`] histograms surfaced by the `METRICS` wire command and
+//! `dsde metrics --prom`.
+//!
+//! Name mapping: every metric is prefixed `dsde_`, gauges keep their wire
+//! name (e.g. `requests` → `dsde_requests`), and a histogram `NAME`
+//! renders as cumulative `NAME_bucket{le="..."}` lines over the log2
+//! bucket upper bounds plus `{le="+Inf"}`, `NAME_sum` and `NAME_count` —
+//! the standard Prometheus histogram triplet, directly usable with
+//! `histogram_quantile()`.
+
+use super::LogHist;
+use std::fmt::Write;
+
+/// Append one gauge sample with its `# HELP` / `# TYPE` header.
+pub fn gauge(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+/// Append a histogram as cumulative `_bucket{le=...}` lines (log2 bucket
+/// upper bounds, then `+Inf`) plus `_sum` and `_count`.
+pub fn histogram(out: &mut String, name: &str, help: &str, h: &LogHist) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let mut cum = 0u64;
+    for (i, c) in h.counts().iter().enumerate() {
+        cum += c;
+        let le = LogHist::upper_bound(i);
+        let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+    let _ = writeln!(out, "{name}_sum {}", h.sum());
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gauge_exposition_golden() {
+        let mut out = String::new();
+        gauge(&mut out, "dsde_requests", "Requests received", 42);
+        assert_eq!(
+            out,
+            "# HELP dsde_requests Requests received\n\
+             # TYPE dsde_requests gauge\n\
+             dsde_requests 42\n"
+        );
+    }
+
+    // Full-exposition golden: values 1, 3, 100 land in buckets 0, 1, 6
+    // (upper bounds 1, 3, 127); every `le` line is the cumulative count.
+    #[test]
+    fn histogram_exposition_golden() {
+        let h = LogHist::new();
+        h.record(1);
+        h.record(3);
+        h.record(100);
+        let mut out = String::new();
+        histogram(&mut out, "dsde_lat_us", "Request latency (us)", &h);
+        let mut expected = String::from(
+            "# HELP dsde_lat_us Request latency (us)\n# TYPE dsde_lat_us histogram\n",
+        );
+        let cums = [
+            1u64, 2, 2, 2, 2, 2, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3,
+            3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3, 3,
+        ];
+        for (i, cum) in cums.iter().enumerate() {
+            let le = (1u64 << (i + 1)) - 1;
+            expected.push_str(&format!("dsde_lat_us_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+        expected.push_str("dsde_lat_us_bucket{le=\"+Inf\"} 3\n");
+        expected.push_str("dsde_lat_us_sum 104\n");
+        expected.push_str("dsde_lat_us_count 3\n");
+        assert_eq!(out, expected);
+    }
+
+    #[test]
+    fn histogram_bucket_lines_are_cumulative_and_complete() {
+        let h = LogHist::new();
+        for v in [1u64, 2, 4, 8, 1 << 20] {
+            h.record(v);
+        }
+        let mut out = String::new();
+        histogram(&mut out, "m", "h", &h);
+        let lines: Vec<&str> = out.lines().collect();
+        // 2 headers + 40 buckets + Inf + sum + count
+        assert_eq!(lines.len(), 2 + super::super::HIST_BUCKETS + 3);
+        assert!(lines[lines.len() - 3].starts_with("m_bucket{le=\"+Inf\"} 5"));
+        assert_eq!(lines[lines.len() - 2], format!("m_sum {}", 15 + (1u64 << 20)));
+        assert_eq!(lines[lines.len() - 1], "m_count 5");
+    }
+}

@@ -229,6 +229,16 @@ pub struct Job {
     pub preemptions: u64,
     /// Deficit-round-robin credit, in steps (see `orch::scheduler`).
     pub(crate) deficit: i64,
+    /// Recorder timestamp ([`crate::obs::now_us`]) of the last state
+    /// transition — the accrual anchor of the per-state timers below.
+    pub(crate) state_since_us: u64,
+    /// Microseconds spent in `Queued` (completed stints only; the wire
+    /// form adds the in-progress stint at read time).
+    pub(crate) queued_us: u64,
+    /// Microseconds spent in `Running` (completed stints only).
+    pub(crate) run_us: u64,
+    /// Microseconds spent in `Preempted` (completed stints only).
+    pub(crate) preempted_us: u64,
     /// Latest boundary snapshot (what a resume restores from).
     pub checkpoint: Option<PathBuf>,
     /// The finished run, once `Done`.
@@ -247,6 +257,10 @@ impl Job {
             slices: 0,
             preemptions: 0,
             deficit: 0,
+            state_since_us: crate::obs::now_us(),
+            queued_us: 0,
+            run_us: 0,
+            preempted_us: 0,
             checkpoint: None,
             result: None,
             error: None,
@@ -274,8 +288,40 @@ impl Job {
                 to.name()
             );
         }
+        let names = crate::obs::names();
+        crate::obs::instant_kv(names.job_state, names.k_job, self.id as i64);
+        self.close_stint();
         self.state = to;
         Ok(())
+    }
+
+    /// Fold the elapsed time of the current state stint into its per-state
+    /// timer and restart the accrual anchor. Also used by the recovery
+    /// paths that set `state` directly (bypassing [`Job::set_state`]).
+    pub(crate) fn close_stint(&mut self) {
+        let now = crate::obs::now_us();
+        let elapsed = now.saturating_sub(self.state_since_us);
+        match self.state {
+            JobState::Queued => self.queued_us += elapsed,
+            JobState::Running => self.run_us += elapsed,
+            JobState::Preempted => self.preempted_us += elapsed,
+            _ => {}
+        }
+        self.state_since_us = now;
+    }
+
+    /// Per-state totals in microseconds, *including* the in-progress
+    /// stint: `(queued, running, preempted)`.
+    pub fn state_times_us(&self) -> (u64, u64, u64) {
+        let live = crate::obs::now_us().saturating_sub(self.state_since_us);
+        let mut t = (self.queued_us, self.run_us, self.preempted_us);
+        match self.state {
+            JobState::Queued => t.0 += live,
+            JobState::Running => t.1 += live,
+            JobState::Preempted => t.2 += live,
+            _ => {}
+        }
+        t
     }
 
     /// Control-plane view of the job (`STATUS` wire form).
@@ -292,7 +338,14 @@ impl Job {
             ("total_steps", (self.spec.config.total_steps as usize).into()),
             ("slices", (self.slices as usize).into()),
             ("preemptions", (self.preemptions as usize).into()),
+            ("slice_count", Json::from(self.slices)),
         ];
+        // Recorder-sourced lifecycle telemetry: whole seconds as lossless
+        // wire integers (the in-progress stint is included at read time).
+        let (queued_us, run_us, preempted_us) = self.state_times_us();
+        pairs.push(("queued_secs", Json::from(queued_us / 1_000_000)));
+        pairs.push(("run_secs", Json::from(run_us / 1_000_000)));
+        pairs.push(("preempted_secs", Json::from(preempted_us / 1_000_000)));
         if let Some(ck) = &self.checkpoint {
             pairs.push(("checkpoint", ck.to_string_lossy().into_owned().into()));
         }

@@ -36,5 +36,5 @@ pub mod server;
 
 pub use job::{Job, JobSpec, JobState};
 pub use recover::{recover, scan_namespace, Journal, NamespaceScan, RecoveryReport};
-pub use scheduler::{SchedStats, Scheduler, SchedulerConfig};
+pub use scheduler::{SchedStats, Scheduler, SchedulerConfig, SliceSpan};
 pub use server::{request, serve_with, ServeOptions, DEFAULT_SERVE_SLICE, MAX_SUBMIT_BATCH};

@@ -49,8 +49,34 @@ use crate::train::{checkpoint, SliceOutcome, TrainEnv};
 use crate::Result;
 use anyhow::bail;
 use std::cmp::Reverse;
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, VecDeque};
 use std::path::{Path, PathBuf};
+
+/// Bound on the retained slice timeline: the `TRACE` wire command returns
+/// at most this many recent slices (drop-oldest beyond it).
+const TIMELINE_CAP: usize = 256;
+
+/// One executed slice on the scheduler timeline: what ran, when (recorder
+/// microseconds, see [`crate::obs::now_us`]), for how many steps, and the
+/// DRR annotations (`priority`, post-debit `deficit`) explaining *why* it
+/// ran. Served verbatim by the `TRACE` wire command.
+#[derive(Clone, Debug)]
+pub struct SliceSpan {
+    /// Job id the slice executed.
+    pub job: u64,
+    /// Slice start, µs on the recorder clock.
+    pub start_us: u64,
+    /// Slice end, µs on the recorder clock.
+    pub end_us: u64,
+    /// Steps the slice actually executed (0 for a failing slice).
+    pub steps: u64,
+    /// The job's priority class at execution time.
+    pub priority: u32,
+    /// The job's DRR deficit *after* this slice's debit.
+    pub deficit: i64,
+    /// `"finished"`, `"preempted"` or `"failed"`.
+    pub outcome: &'static str,
+}
 
 /// Scheduler policy knobs.
 #[derive(Clone, Debug)]
@@ -112,6 +138,9 @@ pub struct Scheduler {
     /// `(job id, steps executed)` per slice, in execution order — the
     /// interleaving witness used by tests and the sched_throughput bench.
     slice_log: Vec<(u64, u64)>,
+    /// Recent executed slices with timing + DRR annotations, bounded at
+    /// [`TIMELINE_CAP`] (drop-oldest). The `TRACE` wire command's source.
+    timeline: VecDeque<SliceSpan>,
     /// Incremental admission index: exactly the runnable jobs, ordered by
     /// `(priority desc, arrival asc)` — the same order the admission sort
     /// used to produce, maintained in O(log n) at each state transition so
@@ -135,6 +164,7 @@ impl Scheduler {
             stats: SchedStats::default(),
             cursor: 0,
             slice_log: Vec::new(),
+            timeline: VecDeque::new(),
             runnable: BTreeSet::new(),
             journal: None,
         }
@@ -206,6 +236,11 @@ impl Scheduler {
     /// The per-slice `(job id, steps)` execution log.
     pub fn slice_log(&self) -> &[(u64, u64)] {
         &self.slice_log
+    }
+
+    /// The recent executed-slice timeline (bounded, oldest first).
+    pub fn timeline(&self) -> &VecDeque<SliceSpan> {
+        &self.timeline
     }
 
     /// Whether every job has reached a terminal state.
@@ -362,10 +397,20 @@ impl Scheduler {
             _ => self.cursor = id,
         }
         let idx = self.index_of(id)?;
+        let names = crate::obs::names();
+        let priority = self.jobs[idx].spec.priority;
+        let start_us = crate::obs::now_us();
+        crate::obs::begin_kv2(
+            names.sched_slice,
+            names.k_job,
+            id as i64,
+            names.k_priority,
+            i64::from(priority),
+        );
         self.mark(idx, JobState::Running)?;
         let outcome = env.trainer(cfg).and_then(|t| t.run_slice(slice));
         self.stats.slices += 1;
-        match outcome {
+        let (steps, outcome) = match outcome {
             Ok(SliceOutcome::Finished(r)) => {
                 let steps = r.steps;
                 // Debit only what this invocation executed: a job submitted
@@ -388,6 +433,7 @@ impl Scheduler {
                     self.jobs[idx].checkpoint = None;
                 }
                 self.journal_terminal(idx)?;
+                (executed, "finished")
             }
             Ok(SliceOutcome::Preempted { checkpoint, completed, resumed_at }) => {
                 let executed = completed.saturating_sub(resumed_at.max(before));
@@ -400,6 +446,7 @@ impl Scheduler {
                 self.mark(idx, JobState::Preempted)?;
                 self.stats.preemptions += 1;
                 self.slice_log.push((id, executed));
+                (executed, "preempted")
             }
             Err(e) => {
                 let job = &mut self.jobs[idx];
@@ -413,7 +460,28 @@ impl Scheduler {
                 self.stats.failed += 1;
                 self.slice_log.push((id, 0));
                 self.journal_terminal(idx)?;
+                (0, "failed")
             }
+        };
+        let deficit = self.jobs[idx].deficit;
+        crate::obs::end_kv2(
+            names.sched_slice,
+            names.k_steps,
+            steps.min(i64::MAX as u64) as i64,
+            names.k_deficit,
+            deficit,
+        );
+        self.timeline.push_back(SliceSpan {
+            job: id,
+            start_us,
+            end_us: crate::obs::now_us(),
+            steps,
+            priority,
+            deficit,
+            outcome,
+        });
+        if self.timeline.len() > TIMELINE_CAP {
+            self.timeline.pop_front();
         }
         Ok(())
     }
@@ -566,7 +634,10 @@ impl Scheduler {
         job.checkpoint = Some(checkpoint);
         job.completed_steps = step;
         // Queued and Preempted are both runnable: the admission index
-        // needs no update for this restore-only transition.
+        // needs no update for this restore-only transition. The stint
+        // timer does need closing — state-time accrual must switch from
+        // the queued to the preempted bucket here.
+        job.close_stint();
         job.state = JobState::Preempted;
         Ok(())
     }
@@ -595,6 +666,7 @@ impl Scheduler {
         }
         self.runnable.remove(&(Reverse(self.jobs[idx].spec.priority), idx));
         let job = &mut self.jobs[idx];
+        job.close_stint();
         job.state = state;
         job.completed_steps = completed_steps;
         job.checkpoint = checkpoint;

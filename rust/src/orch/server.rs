@@ -20,6 +20,11 @@
 //! {"cmd":"STATS"}                    → {"ok":true,"slices":...,"cache":{...}}
 //! {"cmd":"METRICS"}                  → {"ok":true,"queue_depth":...,
 //!                                       "latency_us":{"p50":...,"p99":...},...}
+//! {"cmd":"METRICS","format":"prom"}  → {"ok":true,"prom":"# HELP dsde_..."}
+//! {"cmd":"TRACE"}                    → {"ok":true,"timeline":[{"job":1,
+//!                                       "start_us":...,"end_us":...,"steps":...,
+//!                                       "priority":...,"deficit":...,
+//!                                       "outcome":"preempted"}, ...]}
 //! ```
 //!
 //! Batched `SUBMIT` (the `jobs` array form) traverses the command queue as
@@ -59,6 +64,7 @@
 //! [`LazyScan`]: crate::config::json::LazyScan
 
 use crate::config::json::{Json, LazyScan};
+use crate::obs::LogHist;
 use crate::orch::job::JobSpec;
 use crate::orch::scheduler::{SchedStats, Scheduler, SchedulerConfig};
 use crate::train::TrainEnv;
@@ -119,6 +125,10 @@ pub struct ServeOptions {
     /// this window means the client stopped reading — treated as a
     /// disconnect.
     pub write_timeout_ms: u64,
+    /// Non-empty: enable the span recorder for the serve run and write a
+    /// Chrome-trace timeline (`trace-{unix_secs}.json`) into this
+    /// directory when the drain completes.
+    pub trace_dir: String,
 }
 
 impl Default for ServeOptions {
@@ -133,6 +143,7 @@ impl Default for ServeOptions {
             save_dir: String::new(),
             recover: false,
             write_timeout_ms: 1000,
+            trace_dir: String::new(),
         }
     }
 }
@@ -162,7 +173,10 @@ struct Gauges {
     sched_cancelled: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
-    lat: LatHist,
+    /// Request latency (µs), log₂-bucketed. The shared [`LogHist`]
+    /// reports quantiles as the bucket's *upper* bound — a conservative
+    /// over-estimate of at most 2x, never an under-report.
+    lat: LogHist,
 }
 
 impl Gauges {
@@ -188,49 +202,8 @@ impl Gauges {
             sched_cancelled: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
-            lat: LatHist::new(),
+            lat: LogHist::new(),
         }
-    }
-}
-
-/// Lock-free log₂-bucketed latency histogram over microseconds. Quantiles
-/// report the bucket's upper bound — at most 2x the true value, which is
-/// plenty for p50/p99 monitoring gauges.
-struct LatHist {
-    buckets: [AtomicU64; 40],
-}
-
-impl LatHist {
-    fn new() -> LatHist {
-        LatHist { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
-    }
-
-    fn record(&self, us: u64) {
-        let v = us.max(1);
-        let idx = (63 - v.leading_zeros() as usize).min(self.buckets.len() - 1);
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-    }
-
-    fn count(&self) -> u64 {
-        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
-    }
-
-    /// The q-quantile in microseconds (0 when empty).
-    fn quantile(&self, q: f64) -> u64 {
-        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
-        let mut cum = 0u64;
-        for (i, c) in counts.iter().enumerate() {
-            cum += c;
-            if cum >= rank {
-                return (1u64 << (i + 1)) - 1;
-            }
-        }
-        u64::MAX
     }
 }
 
@@ -245,8 +218,14 @@ enum Request {
     Cancel(u64),
     Drain,
     Stats,
-    /// Served connection-side from [`Gauges`]; never forwarded.
-    Metrics,
+    /// Served connection-side from [`Gauges`]; never forwarded. `prom`
+    /// selects Prometheus text exposition over the JSON gauge object.
+    Metrics {
+        /// `{"format":"prom"}` was requested.
+        prom: bool,
+    },
+    /// Recent scheduler slice timeline (executor-side, like STATUS).
+    Trace,
 }
 
 type Cmd = (Request, std::sync::mpsc::Sender<String>);
@@ -269,6 +248,9 @@ struct WorkerCtx {
 /// scheduler counters.
 pub fn serve_with(env: &TrainEnv, listener: TcpListener, opts: ServeOptions) -> Result<SchedStats> {
     let addr = listener.local_addr()?;
+    if !opts.trace_dir.is_empty() {
+        crate::obs::set_enabled(true);
+    }
     let mut sched_cfg = opts.sched.clone();
     if sched_cfg.default_slice == 0 {
         // Liveness: a served scheduler must preempt (see DEFAULT_SERVE_SLICE).
@@ -395,6 +377,19 @@ pub fn serve_with(env: &TrainEnv, listener: TcpListener, opts: ServeOptions) -> 
     };
 
     // -- shutdown ------------------------------------------------------------
+    // One Chrome-trace timeline per drain: executor slice spans, trainer
+    // phases and worker spans for everything this serve run executed.
+    if !opts.trace_dir.is_empty() {
+        let secs = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let path = std::path::Path::new(&opts.trace_dir).join(format!("trace-{secs}.json"));
+        match crate::obs::write_chrome_trace(&path) {
+            Ok(()) => eprintln!("wrote trace to {}", path.display()),
+            Err(e) => eprintln!("failed to write trace to {}: {e:#}", path.display()),
+        }
+    }
     // Answer anything still queued, then drop the receiver so late sends
     // fail fast (workers self-reply "server shutting down").
     while let Ok((_, reply)) = cmd_rx.try_recv() {
@@ -522,7 +517,7 @@ fn serve_line(line: &str, ctx: &WorkerCtx) -> String {
         }
         // METRICS never touches the executor: it must answer even (and
         // especially) while the command queue is rejecting.
-        Ok(Request::Metrics) => metrics_reply(ctx),
+        Ok(Request::Metrics { prom }) => metrics_reply(ctx, prom),
         Ok(req) => {
             ctx.gauges.inflight.fetch_add(1, Ordering::SeqCst);
             let (rtx, rrx) = channel::<String>();
@@ -568,7 +563,9 @@ fn write_reply(stream: &mut TcpStream, reply: String, ctx: &WorkerCtx) -> bool {
 // -- request parsing (worker side) -------------------------------------------
 
 fn unknown_cmd(cmd: &str) -> String {
-    format!("unknown command '{cmd}' (SUBMIT | STATUS | CANCEL | DRAIN | STATS | METRICS)")
+    format!(
+        "unknown command '{cmd}' (SUBMIT | STATUS | CANCEL | DRAIN | STATS | METRICS | TRACE)"
+    )
 }
 
 /// Parse one request line into a [`Request`], `Err` being the error-reply
@@ -628,7 +625,8 @@ fn request_from_scan(
         },
         "DRAIN" => Ok(Request::Drain),
         "STATS" => Ok(Request::Stats),
-        "METRICS" => Ok(Request::Metrics),
+        "METRICS" => Ok(Request::Metrics { prom: scan.field_str("format") == Some("prom") }),
+        "TRACE" => Ok(Request::Trace),
         other => Err(unknown_cmd(other)),
     }
 }
@@ -670,7 +668,10 @@ fn request_from_tree(
         },
         "DRAIN" => Ok(Request::Drain),
         "STATS" => Ok(Request::Stats),
-        "METRICS" => Ok(Request::Metrics),
+        "METRICS" => {
+            Ok(Request::Metrics { prom: v.get("format").as_str() == Some("prom") })
+        }
+        "TRACE" => Ok(Request::Trace),
         other => Err(unknown_cmd(other)),
     }
 }
@@ -692,7 +693,10 @@ fn ok_line(mut pairs: Vec<(&str, Json)>) -> String {
     Json::obj(pairs).to_string_compact()
 }
 
-fn metrics_reply(ctx: &WorkerCtx) -> String {
+fn metrics_reply(ctx: &WorkerCtx, prom: bool) -> String {
+    if prom {
+        return ok_line(vec![("prom", metrics_prom(ctx).into())]);
+    }
     let g = &ctx.gauges;
     let ld = |a: &AtomicU64| Json::from(a.load(Ordering::Relaxed));
     ok_line(vec![
@@ -738,6 +742,50 @@ fn metrics_reply(ctx: &WorkerCtx) -> String {
             Json::obj(vec![("hits", ld(&g.cache_hits)), ("misses", ld(&g.cache_misses))]),
         ),
     ])
+}
+
+/// Prometheus text exposition of the same gauges `metrics_reply` serves
+/// as JSON (name mapping documented in [`crate::obs::prom`]): every
+/// counter as a `dsde_*` gauge plus the request-latency histogram as the
+/// standard `_bucket`/`_sum`/`_count` triplet.
+fn metrics_prom(ctx: &WorkerCtx) -> String {
+    use crate::obs::prom;
+    let g = &ctx.gauges;
+    let ld = |a: &AtomicU64| a.load(Ordering::Relaxed);
+    let samples = [
+        ("dsde_queue_depth", "Pending commands in the executor queue", ld(&g.queue_depth)),
+        ("dsde_queue_cap", "Executor command queue capacity", ctx.queue_cap as u64),
+        ("dsde_inflight", "Forwarded commands awaiting a reply write", ld(&g.inflight)),
+        ("dsde_executor_busy", "1 while the executor runs a slice", ld(&g.executor_busy)),
+        ("dsde_conns_active", "Connections currently served", ld(&g.conns_active)),
+        ("dsde_conns_total", "Connections accepted since start", ld(&g.conns_total)),
+        ("dsde_requests", "Request lines received", ld(&g.requests)),
+        ("dsde_submitted", "Jobs accepted by SUBMIT", ld(&g.submitted)),
+        ("dsde_rejects_queue", "Commands rejected on a full queue", ld(&g.rejects_queue)),
+        ("dsde_rejects_conns", "Connections rejected at a full backlog", ld(&g.rejects_conn)),
+        ("dsde_rejects_oversize", "Requests over the line limit", ld(&g.rejects_oversize)),
+        ("dsde_parse_errors", "Unparseable request lines", ld(&g.parse_errors)),
+        ("dsde_write_errors", "Failed or timed-out reply writes", ld(&g.write_errors)),
+        ("dsde_sched_jobs", "Jobs known to the scheduler", ld(&g.sched_jobs)),
+        ("dsde_sched_slices", "Executor slices run", ld(&g.sched_slices)),
+        ("dsde_sched_preemptions", "Slice-boundary preemptions", ld(&g.sched_preemptions)),
+        ("dsde_sched_completed", "Jobs finished successfully", ld(&g.sched_completed)),
+        ("dsde_sched_failed", "Jobs that errored", ld(&g.sched_failed)),
+        ("dsde_sched_cancelled", "Jobs cancelled by the operator", ld(&g.sched_cancelled)),
+        ("dsde_cache_hits", "JIT specialization cache hits", ld(&g.cache_hits)),
+        ("dsde_cache_misses", "JIT specialization cache misses", ld(&g.cache_misses)),
+    ];
+    let mut out = String::new();
+    for (name, help, v) in samples {
+        prom::gauge(&mut out, name, help, v);
+    }
+    prom::histogram(
+        &mut out,
+        "dsde_request_latency_us",
+        "Control-plane request latency in microseconds",
+        &g.lat,
+    );
+    out
 }
 
 // -- executor side -----------------------------------------------------------
@@ -847,7 +895,25 @@ fn apply(
                 ),
             ])
         }
+        Request::Trace => {
+            let timeline: Vec<Json> = sched
+                .timeline()
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("job", Json::from(s.job)),
+                        ("start_us", Json::from(s.start_us)),
+                        ("end_us", Json::from(s.end_us)),
+                        ("steps", Json::from(s.steps)),
+                        ("priority", Json::from(s.priority)),
+                        ("deficit", Json::from(s.deficit)),
+                        ("outcome", s.outcome.into()),
+                    ])
+                })
+                .collect();
+            ok_line(vec![("timeline", Json::Arr(timeline))])
+        }
         // Served connection-side; a forwarded METRICS is a worker bug.
-        Request::Metrics => err_line("METRICS is served connection-side"),
+        Request::Metrics { .. } => err_line("METRICS is served connection-side"),
     }
 }

@@ -166,6 +166,8 @@ impl Prewarmer {
                     if generation != worker_gen.load(Ordering::Relaxed) {
                         continue; // canceled by clear_cache or teardown
                     }
+                    let names = crate::obs::names();
+                    let _span = crate::obs::span_kv(names.jit_prewarm, names.k_key, key.0 as i64);
                     match Step::from_text(&client, &text, info) {
                         // A failed prewarm is not an error: the same point
                         // will compile inline (and report properly) if the
@@ -259,11 +261,14 @@ impl Runtime {
     /// then serve from the cache, JIT-specializing (synthesize + compile)
     /// on miss. The cache lookup hashes a `u32`, not an artifact name.
     pub fn step_by_key(&self, key: KeyId) -> Result<Rc<Step>> {
+        let names = crate::obs::names();
         self.adopt_prewarmed();
         if let Some(s) = self.cache.borrow_mut().get(key) {
             self.stats.borrow_mut().hits += 1;
+            crate::obs::instant_kv(names.jit_hit, names.k_key, key.0 as i64);
             return Ok(s);
         }
+        let _span = crate::obs::span_kv(names.jit_compile, names.k_key, key.0 as i64);
         let info = self.registry.keys.with_name(key, |name| self.registry.artifact(name))?;
         let text = self.registry.module_text(&info)?;
         let step = Rc::new(Step::from_text(&self.client, &text, info)?);
@@ -321,6 +326,8 @@ impl Runtime {
             st.prewarmed += 1;
             st.prewarm_compile_secs += step.compile_secs;
             st.evictions += cache.insert(key, Rc::new(step));
+            let names = crate::obs::names();
+            crate::obs::instant_kv(names.jit_adopt, names.k_key, key.0 as i64);
         }
     }
 

@@ -16,6 +16,6 @@ pub use env::TrainEnv;
 pub use pipeline::{BatchPipeline, PipelineStats, Prefetcher, StepSpec};
 pub use replica::{ReducedStep, ReplicaEngine};
 pub use trainer::{
-    plan_schedule, state_fingerprint, CurvePoint, EvalSet, LoaderKind, RunResult, SliceOutcome,
-    StepRoute, Trainer,
+    plan_schedule, state_fingerprint, CurvePoint, EvalSet, LoaderKind, PhaseStats, RunResult,
+    SliceOutcome, StepRoute, Trainer,
 };

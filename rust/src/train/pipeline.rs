@@ -159,8 +159,15 @@ impl BatchPipeline {
                             loader.plan_next(spec.seq, &spec.cl)
                         }) {
                             let t0 = Instant::now();
+                            let names = crate::obs::names();
+                            let span = crate::obs::span_kv(
+                                names.loader_materialize,
+                                names.k_step,
+                                idx as i64,
+                            );
                             let recycled = pool.take();
                             let batch = core.materialize(&plan, recycled);
+                            drop(span);
                             q.complete(idx, batch, t0.elapsed().as_secs_f64());
                         }
                     })

@@ -218,6 +218,7 @@ impl ReplicaEngine {
             per_rank[done.rank] = Some(out);
         }
         let t0 = Instant::now();
+        let _span = crate::obs::span(crate::obs::names().all_reduce);
         let outs: Vec<Vec<xla::Literal>> = per_rank
             .into_iter()
             .map(|o| o.expect("every rank reported"))
@@ -282,7 +283,10 @@ fn worker_loop(
     let mut cache: HashMap<KeyId, Step> = HashMap::new();
     while let Ok(job) = rx.recv() {
         let t0 = Instant::now();
+        let names = crate::obs::names();
+        let span = crate::obs::span_kv(names.rank_grad, names.k_rank, rank as i64);
         let out = run_job(&client, &mut cache, catalog, fam, &job);
+        drop(span);
         let busy_secs = t0.elapsed().as_secs_f64();
         if done_tx.send(RankDone { seq: job.seq, rank, out, busy_secs }).is_err() {
             return; // engine dropped

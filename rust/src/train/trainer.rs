@@ -30,6 +30,8 @@ use crate::curriculum::{BertLoader, GptLoader, VitLoader};
 use crate::lr::LrSchedule;
 use crate::ltd::schedule::kept_len;
 use crate::ltd::{ImportanceTracker, LossSignalTracker, RandomDropper, TokenAccountant};
+use crate::obs;
+use crate::obs::LogHist;
 use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_u32, KeyId, Mode, Route, Runtime};
 use crate::train::checkpoint::{self, Checkpoint};
 use crate::train::pipeline::{BatchPipeline, PipelineStats, StepSpec};
@@ -121,6 +123,81 @@ pub struct RunResult {
     pub resumed_at: u64,
     /// Checkpoint snapshots this run wrote (`save_every` cadence).
     pub checkpoints_written: u64,
+    /// Per-phase step-loop timing summary, one entry per phase in fixed
+    /// order (plan, materialize, dispatch, execute, all_reduce,
+    /// bookkeeping, checkpoint_encode, checkpoint_fsync). Always
+    /// populated — the histograms are an always-on timing side-channel,
+    /// independent of the ring recorder's enabled flag.
+    pub phase_stats: Vec<PhaseStats>,
+}
+
+/// p50/p99 timing summary of one step phase. Quantiles come from a log2
+/// histogram ([`crate::obs::LogHist`]) and report conservative bucket
+/// *upper* bounds (at most 2x the true value, never below it).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PhaseStats {
+    /// Phase name (`plan`, `materialize`, ... `checkpoint_fsync`).
+    pub phase: String,
+    /// Samples recorded (steps; snapshot writes for checkpoint phases).
+    pub count: u64,
+    /// Median duration in microseconds (bucket upper bound).
+    pub p50_us: u64,
+    /// 99th-percentile duration in microseconds (bucket upper bound).
+    pub p99_us: u64,
+    /// Total microseconds across the run (exact sum, not bucketed).
+    pub total_us: u64,
+}
+
+/// Always-on per-phase log2 histograms for one run. Ring events are gated
+/// on [`obs::enabled`]; these are not — a few relaxed atomic adds per
+/// step — so [`RunResult::phase_stats`] has the same shape whether or not
+/// a trace is being recorded.
+struct PhaseTimes {
+    plan: LogHist,
+    materialize: LogHist,
+    dispatch: LogHist,
+    execute: LogHist,
+    all_reduce: LogHist,
+    bookkeeping: LogHist,
+    checkpoint_encode: LogHist,
+    checkpoint_fsync: LogHist,
+}
+
+impl PhaseTimes {
+    fn new() -> PhaseTimes {
+        PhaseTimes {
+            plan: LogHist::new(),
+            materialize: LogHist::new(),
+            dispatch: LogHist::new(),
+            execute: LogHist::new(),
+            all_reduce: LogHist::new(),
+            bookkeeping: LogHist::new(),
+            checkpoint_encode: LogHist::new(),
+            checkpoint_fsync: LogHist::new(),
+        }
+    }
+
+    fn stats(&self) -> Vec<PhaseStats> {
+        [
+            ("plan", &self.plan),
+            ("materialize", &self.materialize),
+            ("dispatch", &self.dispatch),
+            ("execute", &self.execute),
+            ("all_reduce", &self.all_reduce),
+            ("bookkeeping", &self.bookkeeping),
+            ("checkpoint_encode", &self.checkpoint_encode),
+            ("checkpoint_fsync", &self.checkpoint_fsync),
+        ]
+        .iter()
+        .map(|(name, h)| PhaseStats {
+            phase: name.to_string(),
+            count: h.count(),
+            p50_us: h.quantile(0.5),
+            p99_us: h.quantile(0.99),
+            total_us: h.sum(),
+        })
+        .collect()
+    }
 }
 
 impl RunResult {
@@ -552,6 +629,11 @@ impl<'rt> Trainer<'rt> {
         let cache0 = self.rt.cache_stats();
         let wall0 = Instant::now();
         let mut checkpoints_written = 0u64;
+        // Timing side-channel only: nothing below feeds back into
+        // training, so every observable is bit-identical with the
+        // recorder on, off, or at any ring size (benches/obs_overhead.rs).
+        let names = obs::names();
+        let phases = PhaseTimes::new();
 
         let mut loader = self.loader.take().expect("trainer runs once");
         // Loss-signal epoch length: > 0 splits the run into segments, each
@@ -628,11 +710,20 @@ impl<'rt> Trainer<'rt> {
                     &self.run.pipeline,
                 );
             }
+            let t_plan = obs::now_us();
+            obs::begin_kv(names.plan, names.k_step, step as i64);
             let sr = &self.schedule[step as usize];
             let route = &sr.route;
             *dispatch.entry(route.key).or_default() += 1;
+            obs::end(names.plan);
+            phases.plan.record(obs::now_us().saturating_sub(t_plan));
             let exe = if engine.is_none() {
-                Some(self.rt.step_by_key(route.key)?)
+                let t_disp = obs::now_us();
+                let disp_span = obs::span_kv(names.dispatch, names.k_key, route.key.0 as i64);
+                let exe = self.rt.step_by_key(route.key);
+                drop(disp_span);
+                phases.dispatch.record(obs::now_us().saturating_sub(t_disp));
+                Some(exe?)
             } else {
                 None
             };
@@ -642,7 +733,12 @@ impl<'rt> Trainer<'rt> {
                 .lr
                 .at_state(self.accountant.compute_tokens(), step);
 
-            let batch = source.next(sr)?;
+            let t_mat = obs::now_us();
+            let mat_span = obs::span(names.materialize);
+            let batch = source.next(sr);
+            drop(mat_span);
+            phases.materialize.record(obs::now_us().saturating_sub(t_mat));
+            let batch = batch?;
             let (rows, tokens_for_trackers) = match &batch {
                 AnyBatch::Lm(b) => {
                     let toks = (self.importance.is_some() || self.loss_signal.is_some())
@@ -685,10 +781,15 @@ impl<'rt> Trainer<'rt> {
                 None
             };
 
+            let t_exec = obs::now_us();
+            let exec_span = obs::span_kv(names.execute, names.k_step, step as i64);
+            let allreduce0 = engine.as_ref().map(|e| e.allreduce_secs);
             let loss = if let Some(engine) = engine.as_mut() {
                 // ---- data-parallel: shard → grad → all-reduce → apply
                 let np = fam.n_params;
                 let plan = ShardPlan::new(rows, engine.n_ranks());
+                let t_disp = obs::now_us();
+                let disp_span = obs::span_kv(names.dispatch, names.k_key, route.key.0 as i64);
                 let rank_keys = match grad_keys.entry((route.key, rows)) {
                     std::collections::hash_map::Entry::Occupied(e) => e.get().clone(),
                     std::collections::hash_map::Entry::Vacant(e) => {
@@ -705,6 +806,8 @@ impl<'rt> Trainer<'rt> {
                         e.insert(Arc::new(ks)).clone()
                     }
                 };
+                drop(disp_span);
+                phases.dispatch.record(obs::now_us().saturating_sub(t_disp));
                 // One params snapshot per step, shared by every rank via
                 // Arc (the copy itself is unavoidable while state literals
                 // are owned: apply produces fresh literals each step; at
@@ -759,12 +862,19 @@ impl<'rt> Trainer<'rt> {
                 self.state.extend(out.into_iter().take(self.n_state));
                 loss
             };
+            drop(exec_span);
+            phases.execute.record(obs::now_us().saturating_sub(t_exec));
+            if let (Some(a0), Some(e)) = (allreduce0, engine.as_ref()) {
+                phases.all_reduce.record(((e.allreduce_secs - a0).max(0.0) * 1e6) as u64);
+            }
             if !loss.is_finite() {
                 bail!("{}: non-finite loss at step {step}", self.run.label);
             }
             step_secs_total += t0.elapsed().as_secs_f64();
 
             // ---- bookkeeping
+            let t_book = obs::now_us();
+            let book_span = obs::span(names.bookkeeping);
             self.accountant.record(
                 rows,
                 route.seq,
@@ -794,13 +904,15 @@ impl<'rt> Trainer<'rt> {
                     eval_loss: el,
                 });
             }
+            drop(book_span);
+            phases.bookkeeping.record(obs::now_us().saturating_sub(t_book));
             // Periodic durable snapshot: atomic write-rename, so an
             // interruption at any point leaves a resumable file set. On the
             // delta cadence, publishes between full snapshots carry only
             // the tensors that changed since the last full one.
             let mut saved_this_step = false;
             if self.run.save_every > 0 && (step + 1) % self.run.save_every == 0 {
-                self.save_snapshot(step + 1, &step_losses, &curve, &mut delta)
+                self.save_snapshot(step + 1, &step_losses, &curve, &mut delta, &phases)
                     .with_context(|| {
                         format!("{}: saving checkpoint at step {}", self.run.label, step + 1)
                     })?;
@@ -822,7 +934,7 @@ impl<'rt> Trainer<'rt> {
                 let path =
                     Path::new(&self.run.save_dir).join(format!("step{completed:06}.ckpt"));
                 if !saved_this_step {
-                    self.save_snapshot(completed, &step_losses, &curve, &mut delta)
+                    self.save_snapshot(completed, &step_losses, &curve, &mut delta, &phases)
                         .with_context(|| {
                             format!(
                                 "{}: saving boundary snapshot at step {completed}",
@@ -894,6 +1006,7 @@ impl<'rt> Trainer<'rt> {
             prewarmed_compiles: cache.prewarmed,
             resumed_at: self.start_step,
             checkpoints_written,
+            phase_stats: phases.stats(),
         })))
     }
 
@@ -910,27 +1023,42 @@ impl<'rt> Trainer<'rt> {
         step_losses: &[f32],
         curve: &[CurvePoint],
         delta: &mut DeltaTrack,
+        phases: &PhaseTimes,
     ) -> Result<std::path::PathBuf> {
+        let names = obs::names();
         let ck = self.snapshot(completed, step_losses, curve)?;
         let path = Path::new(&self.run.save_dir).join(format!("step{completed:06}.ckpt"));
         let as_delta = self.run.delta_every > 0
             && delta.base.is_some()
             && delta.since_full < self.run.delta_every - 1;
-        if as_delta {
+        let t_enc = obs::now_us();
+        let enc_span = obs::span_kv(names.checkpoint_encode, names.k_step, completed as i64);
+        // `full_meta` carries the full-snapshot bookkeeping (delta base
+        // update) past the shared encode/write path below.
+        let (bytes, full_meta) = if as_delta {
             let base = delta.base.as_ref().expect("checked above");
             let (bytes, _n_changed) = ck.encode_delta(base)?;
-            checkpoint::write_snapshot(&path, &bytes)?;
-            delta.since_full += 1;
+            (bytes, None)
         } else {
             let bytes = ck.encode();
             let file_fnv = checkpoint::image_checksum(&bytes)?;
-            checkpoint::write_snapshot(&path, &bytes)?;
-            delta.base = Some(checkpoint::DeltaBase {
-                step: completed,
-                file_fnv,
-                tensor_fnvs: ck.tensor_fnvs(),
-            });
-            delta.since_full = 0;
+            let tensor_fnvs = ck.tensor_fnvs();
+            (bytes, Some((file_fnv, tensor_fnvs)))
+        };
+        drop(enc_span);
+        phases.checkpoint_encode.record(obs::now_us().saturating_sub(t_enc));
+        let t_fs = obs::now_us();
+        let fsync_span = obs::span_kv(names.checkpoint_fsync, names.k_step, completed as i64);
+        checkpoint::write_snapshot(&path, &bytes)?;
+        drop(fsync_span);
+        phases.checkpoint_fsync.record(obs::now_us().saturating_sub(t_fs));
+        match full_meta {
+            Some((file_fnv, tensor_fnvs)) => {
+                delta.base =
+                    Some(checkpoint::DeltaBase { step: completed, file_fnv, tensor_fnvs });
+                delta.since_full = 0;
+            }
+            None => delta.since_full += 1,
         }
         Ok(path)
     }

@@ -476,3 +476,106 @@ fn job_ids_above_2_pow_53_round_trip_exactly() {
     server.join().expect("server thread");
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+// ---- ISSUE 10: per-job telemetry, TRACE timeline, Prometheus METRICS --------
+
+/// Three tenants interleave under a 5-step slice, then:
+/// * `STATUS` carries recorder-sourced per-job telemetry — `queued_secs`,
+///   `run_secs`, `preempted_secs`, `slice_count` — as lossless wire ints;
+/// * `TRACE` returns the recent scheduler timeline with start/end
+///   microseconds and DRR annotations, consistent with the slice counters;
+/// * `METRICS` with `format:"prom"` answers the Prometheus text
+///   exposition (gauges plus the latency histogram triplet).
+#[test]
+fn status_telemetry_trace_timeline_and_prom_metrics() {
+    let dir = temp_dir("telemetry");
+    let (addr, server) = spawn_server(ServeOptions {
+        sched: sched(2, 5),
+        ..ServeOptions::default()
+    });
+    let save = dir.to_string_lossy().into_owned();
+
+    let mut ids = Vec::new();
+    for label in ["tel-a", "tel-b", "tel-c"] {
+        let resp = request(
+            &addr,
+            &cmd(vec![("cmd", "SUBMIT".into()), ("config", cfg(label, 12, &save).to_json())]),
+        )
+        .expect("SUBMIT");
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+        ids.push(resp.get("job").as_u64().expect("job id"));
+    }
+
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let st = request(&addr, &cmd(vec![("cmd", "STATUS".into())])).expect("STATUS");
+        let all_done = st
+            .get("jobs")
+            .as_arr()
+            .map(|a| a.iter().all(|j| j.get("state").as_str() == Some("done")))
+            .unwrap_or(false);
+        if all_done {
+            break;
+        }
+        assert!(Instant::now() < deadline, "jobs never finished: {st:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // STATUS telemetry: present on every job, integer-typed, consistent.
+    let st = request(&addr, &cmd(vec![("cmd", "STATUS".into())])).expect("STATUS");
+    for j in st.get("jobs").as_arr().expect("jobs array") {
+        for field in ["queued_secs", "run_secs", "preempted_secs", "slice_count"] {
+            assert!(j.get(field).as_u64().is_some(), "missing {field}: {j:?}");
+        }
+        assert!(j.get("slice_count").as_u64().unwrap() >= 1, "{j:?}");
+        assert_eq!(j.get("slice_count").as_u64(), j.get("slices").as_u64(), "{j:?}");
+    }
+
+    // TRACE: a non-empty annotated timeline consistent with the run.
+    let tr = request(&addr, &cmd(vec![("cmd", "TRACE".into())])).expect("TRACE");
+    assert_eq!(tr.get("ok").as_bool(), Some(true), "{tr:?}");
+    let timeline = tr.get("timeline").as_arr().expect("timeline array");
+    assert!(!timeline.is_empty(), "{tr:?}");
+    for s in timeline {
+        let job = s.get("job").as_u64().expect("job");
+        assert!(ids.contains(&job), "{s:?}");
+        let start = s.get("start_us").as_u64().expect("start_us");
+        let end = s.get("end_us").as_u64().expect("end_us");
+        assert!(end >= start, "{s:?}");
+        assert!(s.get("steps").as_u64().is_some(), "{s:?}");
+        assert!(s.get("priority").as_u64().is_some(), "{s:?}");
+        assert!(s.get("deficit").as_i64().is_some(), "{s:?}");
+        assert!(
+            matches!(s.get("outcome").as_str(), Some("finished" | "preempted" | "failed")),
+            "{s:?}"
+        );
+    }
+    // 12 steps at slice 5: every job is preempted twice then finishes once.
+    let finished =
+        timeline.iter().filter(|s| s.get("outcome").as_str() == Some("finished")).count();
+    assert_eq!(finished, 3, "{tr:?}");
+    assert!(
+        timeline.iter().any(|s| s.get("outcome").as_str() == Some("preempted")),
+        "{tr:?}"
+    );
+
+    // METRICS prom: the text exposition travels as one JSON string field.
+    let m = request(
+        &addr,
+        &cmd(vec![("cmd", "METRICS".into()), ("format", "prom".into())]),
+    )
+    .expect("METRICS prom");
+    assert_eq!(m.get("ok").as_bool(), Some(true), "{m:?}");
+    let text = m.get("prom").as_str().expect("prom text").to_string();
+    assert!(text.contains("# TYPE dsde_requests gauge"), "{text}");
+    assert!(text.contains("# TYPE dsde_request_latency_us histogram"), "{text}");
+    assert!(text.contains("dsde_request_latency_us_bucket{le=\"+Inf\"}"), "{text}");
+    assert!(text.contains("dsde_sched_slices "), "{text}");
+
+    let dr = request(&addr, &cmd(vec![("cmd", "DRAIN".into())])).expect("DRAIN");
+    assert_eq!(dr.get("ok").as_bool(), Some(true), "{dr:?}");
+    let stats = server.join().expect("server thread");
+    assert_eq!(stats.completed, 3);
+    assert!(stats.preemptions > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,223 @@
+//! End-to-end tracing suite (ISSUE 10 tentpole).
+//!
+//! * **Trace format**: a traced run (replica engine + pipeline +
+//!   checkpoints) exports Chrome-trace JSON that parses with the repo's
+//!   own `config/json`, every `B` has a matching same-thread `E`,
+//!   per-thread timestamps are monotone, and all eight trainer phases
+//!   appear as named spans. A 3-tenant scheduler drain adds `sched_slice`
+//!   spans, one per executed slice.
+//! * **Bit-identity**: tracing is a pure timing side-channel — for
+//!   gpt+pdd, bert+ltd, vit and moe cases, `state_hash`, per-step f32
+//!   losses and the dispatch histogram are identical with tracing off,
+//!   on at the default ring, and on at a tiny always-overflowing ring.
+//!
+//! The recorder is process-global, so every test serializes on one mutex
+//! and restores the default recorder state before releasing it.
+
+use dsde::config::json::Json;
+use dsde::config::schema::*;
+use dsde::obs;
+use dsde::orch::{JobSpec, Scheduler, SchedulerConfig};
+use dsde::train::{RunResult, TrainEnv};
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restore the default recorder state (runs even if a test panicked
+/// while holding the lock — the next `lock()` recovers the poison).
+fn reset_obs() {
+    obs::set_enabled(false);
+    obs::reset();
+    obs::set_ring_capacity(obs::DEFAULT_RING_CAP);
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("dsde-obs-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+// ---- trace format -----------------------------------------------------------
+
+const PHASES: [&str; 8] = [
+    "plan",
+    "materialize",
+    "dispatch",
+    "execute",
+    "all_reduce",
+    "bookkeeping",
+    "checkpoint_encode",
+    "checkpoint_fsync",
+];
+
+/// Validate B/E balance and timestamp monotonicity per thread; return the
+/// set of span names that opened at least once.
+fn validate_trace(trace: &Json) -> Vec<String> {
+    let events = trace.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(!events.is_empty(), "empty trace");
+    let mut stacks: HashMap<u64, Vec<String>> = HashMap::new();
+    let mut last_ts: HashMap<u64, u64> = HashMap::new();
+    let mut names: Vec<String> = Vec::new();
+    for e in events {
+        let ph = e.get("ph").as_str().expect("ph");
+        let tid = e.get("tid").as_u64().expect("tid");
+        if ph == "M" {
+            assert_eq!(e.get("name").as_str(), Some("thread_name"), "{e:?}");
+            continue;
+        }
+        let name = e.get("name").as_str().expect("name").to_string();
+        let ts = e.get("ts").as_u64().expect("ts");
+        let prev = last_ts.entry(tid).or_insert(0);
+        assert!(ts >= *prev, "tid {tid}: ts went backwards ({ts} < {prev})");
+        *prev = ts;
+        match ph {
+            "B" => {
+                if !names.contains(&name) {
+                    names.push(name.clone());
+                }
+                stacks.entry(tid).or_default().push(name);
+            }
+            "E" => {
+                let top = stacks
+                    .entry(tid)
+                    .or_default()
+                    .pop()
+                    .unwrap_or_else(|| panic!("tid {tid}: E '{name}' with empty stack"));
+                assert_eq!(top, name, "tid {tid}: unbalanced span nesting");
+            }
+            "i" => assert_eq!(e.get("s").as_str(), Some("t"), "{e:?}"),
+            other => panic!("unexpected phase {other:?}: {e:?}"),
+        }
+    }
+    for (tid, stack) in &stacks {
+        assert!(stack.is_empty(), "tid {tid}: unclosed spans {stack:?}");
+    }
+    names
+}
+
+#[test]
+fn traced_run_exports_balanced_monotone_chrome_trace() {
+    let _g = lock();
+    reset_obs();
+    let dir = temp_dir("trace");
+    obs::set_enabled(true);
+
+    let env = TrainEnv::new(160, 13).expect("env");
+    let mut c = RunConfig::baseline("gpt", 40, 3e-3);
+    c.label = "trace".into();
+    c.n_replicas = 2;
+    c.save_every = 20;
+    c.save_dir = dir.to_string_lossy().into_owned();
+    env.run(c).expect("traced run");
+
+    let text = obs::export_chrome_trace();
+    let trace = Json::parse(&text).expect("exported trace parses with config/json");
+    assert_eq!(trace.get("droppedEvents").as_u64(), Some(0), "default ring overflowed");
+    let names = validate_trace(&trace);
+    for phase in PHASES {
+        assert!(names.contains(&phase.to_string()), "phase '{phase}' missing: {names:?}");
+    }
+    // worker-side spans: pipeline loaders and per-rank grad jobs
+    assert!(names.contains(&"loader_materialize".to_string()), "{names:?}");
+    assert!(names.contains(&"rank_grad".to_string()), "{names:?}");
+
+    reset_obs();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scheduler_drain_emits_one_slice_span_per_slice() {
+    let _g = lock();
+    reset_obs();
+    let dir = temp_dir("sched-trace");
+    obs::set_enabled(true);
+
+    let env = TrainEnv::new(160, 13).expect("env");
+    let mut sched = Scheduler::new(SchedulerConfig {
+        max_active: 3,
+        default_slice: 5,
+        quantum: 5,
+        cleanup_done: false,
+    });
+    for label in ["t-a", "t-b", "t-c"] {
+        let mut c = RunConfig::baseline("gpt", 12, 3e-3);
+        c.label = label.to_string();
+        c.save_dir = dir.to_string_lossy().into_owned();
+        sched.submit(JobSpec::new(c)).expect("submit");
+    }
+    sched.drain(&env).expect("drain");
+    let slices = sched.stats().slices;
+    assert!(slices >= 6, "3 tenants at 12 steps / slice 5 must interleave: {slices}");
+    assert_eq!(sched.timeline().len(), slices as usize, "one timeline entry per slice");
+
+    let trace = Json::parse(&obs::export_chrome_trace()).expect("trace parses");
+    let names = validate_trace(&trace);
+    assert!(names.contains(&"sched_slice".to_string()), "{names:?}");
+    let n_slice_spans = trace
+        .get("traceEvents")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| {
+            e.get("ph").as_str() == Some("B") && e.get("name").as_str() == Some("sched_slice")
+        })
+        .count();
+    assert_eq!(n_slice_spans, slices as usize, "one sched_slice span per executed slice");
+
+    reset_obs();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---- bit-identity -----------------------------------------------------------
+
+fn cases() -> Vec<RunConfig> {
+    let steps = 30;
+    let mut gpt = RunConfig::baseline("gpt", steps, 3e-3);
+    gpt.label = "gpt-pdd".into();
+    gpt.pdd = Some(PddConfig::new(0.0, 0.5, 2, 24));
+    let mut bert = RunConfig::baseline("bert", steps, 3e-3);
+    bert.label = "bert-ltd".into();
+    bert.routing = Routing::RandomLtd(LtdConfig::mslg(16, steps));
+    let mut vit = RunConfig::baseline("vit", steps, 1e-3);
+    vit.label = "vit".into();
+    let mut moe = RunConfig::baseline("moe", steps, 3e-3);
+    moe.label = "moe".into();
+    vec![gpt, bert, vit, moe]
+}
+
+fn oracle(r: &RunResult) -> (u64, &[f32], &BTreeMap<String, u64>) {
+    (r.state_hash, &r.step_losses, &r.dispatch)
+}
+
+#[test]
+fn tracing_on_off_and_ring_size_are_bit_identical() {
+    let _g = lock();
+    reset_obs();
+    let env = TrainEnv::new(160, 13).expect("env");
+    for cfg in cases() {
+        let label = cfg.label.clone();
+
+        obs::set_enabled(false);
+        obs::reset();
+        let off = env.run(cfg.clone()).expect("tracing off");
+
+        obs::set_enabled(true);
+        obs::set_ring_capacity(obs::DEFAULT_RING_CAP);
+        obs::reset();
+        let on = env.run(cfg.clone()).expect("tracing on");
+
+        obs::set_ring_capacity(64); // every thread's ring constantly overflows
+        obs::reset();
+        let small = env.run(cfg).expect("tracing on, tiny ring");
+
+        assert_eq!(oracle(&off), oracle(&on), "{label}: tracing on drifted");
+        assert_eq!(oracle(&off), oracle(&small), "{label}: tiny ring drifted");
+        reset_obs();
+    }
+}
